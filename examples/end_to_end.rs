@@ -1,0 +1,143 @@
+//! END-TO-END DRIVER — all layers composed on a real workload.
+//!
+//! * Workload: two Ethereum-sim world-state snapshots (the §7.3 scenario, DESIGN.md §4).
+//! * Layer 1+2: the AOT-compiled Pallas/JAX dense-block artifacts (`make artifacts`),
+//!   loaded and executed from rust via PJRT — used here to accelerate sketch encoding per
+//!   universe partition, cross-checked against the sparse path.
+//! * Layer 3: the rust coordinator — Alice and Bob as real TCP peers exchanging the wire
+//!   protocol, with measured socket bytes; plus the PBS-style partitioned parallel path.
+//!
+//! Reports the paper's headline metric (communication cost vs the IBLT baseline and the
+//! SetR bound) plus wall-clock and throughput. Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --offline --example end_to_end`
+
+use commonsense::baselines::iblt::{iblt_setx, IbltParams};
+use commonsense::bounds;
+use commonsense::coordinator::{connect_initiator, parallel, serve_responder};
+use commonsense::data::ethereum::{diff_stats, EthSim};
+use commonsense::protocol::bidi::BidiOptions;
+use commonsense::protocol::CsParams;
+use commonsense::runtime::Runtime;
+use commonsense::sketch::Sketch;
+use std::net::TcpListener;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let n_accounts: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+
+    println!("=== CommonSense end-to-end driver ===\n");
+    println!("[1/4] workload: Ethereum-sim, {n_accounts} accounts, 1 day of staleness");
+    let t0 = Instant::now();
+    let mut sim = EthSim::genesis(n_accounts, 0xe2e);
+    let b = sim.snapshot_ids(); // Bob: yesterday's snapshot
+    sim.advance_day();
+    let a = sim.snapshot_ids(); // Alice: fresh snapshot
+    let st = diff_stats(&b, &a);
+    println!(
+        "      |A| = {}, |B| = {}, |B\\A| = {}, |A\\B| = {}, built in {:?}\n",
+        a.len(),
+        b.len(),
+        st.s_minus_a,
+        st.a_minus_s,
+        t0.elapsed()
+    );
+
+    // ---------------------------------------------------------------- L1/L2 via PJRT ---
+    println!("[2/4] PJRT artifacts (L1 Pallas + L2 JAX, AOT):");
+    match Runtime::load_default() {
+        Ok(rt) => {
+            let shapes = rt.shapes;
+            println!(
+                "      platform = {}, block = {}x{} (steps {})",
+                rt.platform(),
+                shapes.l,
+                shapes.nb,
+                shapes.steps
+            );
+            // Accelerated partition encode, cross-checked against the sparse path.
+            let matrix = commonsense::matrix::CsMatrix::new(shapes.l as u32, 5, 0xacce1);
+            let part: Vec<u64> = a.iter().copied().take(4 * shapes.nb).collect();
+            let t = Instant::now();
+            let accel = rt.encode_set(matrix, &part)?;
+            let t_accel = t.elapsed();
+            let t = Instant::now();
+            let sparse = Sketch::encode(matrix, &part);
+            let t_sparse = t.elapsed();
+            assert_eq!(accel, sparse.counts, "PJRT and sparse encodes agree");
+            println!(
+                "      encode {} ids: PJRT dense-block {:?} vs sparse scatter {:?} — identical counts ✓\n",
+                part.len(),
+                t_accel,
+                t_sparse
+            );
+        }
+        Err(e) => println!("      SKIPPED ({e:#}) — run `make artifacts`\n"),
+    }
+
+    // ------------------------------------------------------------------ L3 over TCP ---
+    println!("[3/4] TCP session (Bob initiates: his unique count is the smaller):");
+    let params = CsParams::tuned_bidi(a.len().max(b.len()), st.s_minus_a, st.a_minus_s);
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let a2 = a.clone();
+    let alice_thread =
+        std::thread::spawn(move || serve_responder(&listener, &a2, BidiOptions::default()));
+    let t = Instant::now();
+    let bob_report = connect_initiator(addr, &b, &params, BidiOptions::default())?;
+    let alice_report = alice_thread.join().expect("alice thread")?;
+    let wall = t.elapsed();
+    let total_bytes = bob_report.bytes_sent + alice_report.bytes_sent;
+    assert!(bob_report.converged && alice_report.converged);
+    assert_eq!(bob_report.unique.len(), st.s_minus_a);
+    assert_eq!(alice_report.unique.len(), st.a_minus_s);
+    println!(
+        "      exact ✓  bytes on wire = {} ({} msgs), wall = {:?}, throughput = {:.0} elems/s",
+        total_bytes,
+        bob_report.msgs_sent + alice_report.msgs_sent,
+        wall,
+        (a.len() + b.len()) as f64 / wall.as_secs_f64()
+    );
+
+    // Baselines for the headline comparison.
+    let t = Instant::now();
+    let (amb, bma, iblt_bytes, _) = iblt_setx(&a, &b, st.sym_diff, IbltParams::paper_ethereum());
+    let iblt_wall = t.elapsed();
+    assert_eq!((amb.len(), bma.len()), (st.a_minus_s, st.s_minus_a));
+    let setr_bound = bounds::setr_lower_bound_bits(256, st.sym_diff as u64) / 8.0;
+    println!(
+        "      vs IBLT: {} bytes ({:.1}x more; decode wall {:?}); vs SetR lower bound: {:.0} bytes ({:.1}x)\n",
+        iblt_bytes,
+        iblt_bytes as f64 / total_bytes as f64,
+        iblt_wall,
+        setr_bound,
+        setr_bound / total_bytes as f64
+    );
+
+    // ------------------------------------------------------- partitioned scale-out ---
+    println!("[4/4] PBS-style partitioned parallel SetX (8 partitions):");
+    let t = Instant::now();
+    let par = parallel::setx(
+        &a,
+        &b,
+        st.a_minus_s,
+        st.s_minus_a,
+        8,
+        8,
+        BidiOptions::default(),
+    );
+    assert!(par.converged);
+    assert_eq!(par.a_minus_b.len(), st.a_minus_s);
+    println!(
+        "      exact ✓  bytes = {} ({:.2}x single-session), wall = {:?} (8 threads)",
+        par.total_bytes,
+        par.total_bytes as f64 / total_bytes as f64,
+        t.elapsed()
+    );
+
+    println!("\n=== all layers composed; see EXPERIMENTS.md §E2E ===");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! §2.2 — LossRadar-style packet-loss detection with streaming CommonSense digests.
+//!
+//! Two switches on a path each maintain a tiny data-plane digest (O(m) per packet); the
+//! control plane decodes the digest difference against the feasible packet superset and
+//! pinpoints *exactly which* packets were lost. Compare memory against an IBLT sized for
+//! the same loss count.
+//!
+//! Run: `cargo run --release --offline --example packet_loss`
+
+use commonsense::baselines::iblt::IbltParams;
+use commonsense::hash::{hash_u64, Xoshiro256};
+use commonsense::streaming::{digest_params, lossradar};
+
+fn main() {
+    // 200 flows × ≤ 250 packets each; 0.5% loss rate on the hop.
+    let flows = 200u64;
+    let pkts_per_flow = 250u64;
+    let loss_rate = 0.005;
+    let mut rng = Xoshiro256::seed_from_u64(0x10ad);
+
+    // The packet superset B′: every (flow, packet-id) signature the control plane can
+    // enumerate (flow IDs from FlowRadar + conservative per-flow id ranges, per §2.2).
+    let superset: Vec<u64> = (0..flows)
+        .flat_map(|f| (0..pkts_per_flow).map(move |p| hash_u64(f << 32 | p, 0xf10e)))
+        .collect();
+
+    let expected_losses = (superset.len() as f64 * loss_rate * 1.6) as usize;
+    let params = digest_params(superset.len(), expected_losses);
+    let mut upstream = lossradar::Meter::new(&params);
+    let mut downstream = lossradar::Meter::new(&params);
+
+    let mut lost = Vec::new();
+    for &sig in &superset {
+        upstream.observe(sig);
+        if rng.gen_f64() < loss_rate {
+            lost.push(sig); // dropped on the wire
+        } else {
+            downstream.observe(sig);
+        }
+    }
+    lost.sort_unstable();
+
+    let detected = lossradar::detect_losses(&upstream, &downstream, &superset)
+        .expect("digest decode");
+    assert_eq!(detected, lost, "exact loss set recovered");
+
+    // Both structures provisioned for the same expected loss count. The CS digest's cells
+    // are small counters (≤ |packets|·m/l ≈ 60 here), so 8-bit data-plane cells suffice —
+    // that is the apples-to-apples memory figure against the IBLT's 104-bit cells.
+    let iblt_bytes = IbltParams::paper_synthetic().size_bytes(
+        IbltParams::paper_synthetic().cells_for(expected_losses),
+    );
+    println!("packets on path : {}", superset.len());
+    println!("packets lost    : {} ({}%)", lost.len(), 100.0 * loss_rate);
+    println!("detected        : {} (exact ✓)", detected.len());
+    println!(
+        "digest memory   : {} bytes per switch (8-bit cells; {} as i32)",
+        params.l,
+        upstream.digest.memory_bytes()
+    );
+    println!("IBLT same prov. : {} bytes per switch", iblt_bytes);
+    println!(
+        "per-packet work : {} row updates (O(m))",
+        params.m
+    );
+}

@@ -1,0 +1,36 @@
+//! Quickstart: compute an exact set intersection with CommonSense in a dozen lines.
+//!
+//! Run: `cargo run --release --offline --example quickstart`
+
+use commonsense::data::synth;
+use commonsense::protocol::bidi::{self, BidiOptions};
+use commonsense::protocol::{uni, CsParams};
+
+fn main() {
+    // --- Unidirectional (A ⊆ B): one message, Bob learns B \ A exactly. -----------------
+    let (a, b) = synth::subset_pair(100_000, 1_000, 42);
+    let params = CsParams::tuned_uni(b.len(), 1_000);
+    let out = uni::run(&a, &b, &params).expect("decode");
+    println!("— unidirectional SetX (A ⊆ B) —");
+    println!("|A| = {}, |B| = {}, d = 1000", a.len(), b.len());
+    println!("recovered |B\\A| = {}", out.b_minus_a.len());
+    println!("communication: {} bytes in {} message(s)", out.comm.total_bytes(), out.comm.rounds());
+    assert_eq!(out.b_minus_a, synth::difference(&b, &a));
+
+    // --- Bidirectional (general case): ping-pong decoding. ------------------------------
+    let (a, b) = synth::overlap_pair(100_000, 500, 1_500, 43);
+    let params = CsParams::tuned_bidi(102_000, 500, 1_500);
+    let out = bidi::run(&a, &b, &params, BidiOptions::default());
+    println!("\n— bidirectional SetX —");
+    println!("|A∩B| = 100000, |A\\B| = 500, |B\\A| = 1500");
+    println!(
+        "converged = {}, rounds = {}, communication = {} bytes",
+        out.converged,
+        out.rounds,
+        out.comm.total_bytes()
+    );
+    assert!(out.converged);
+    assert_eq!(out.a_minus_b, synth::difference(&a, &b));
+    assert_eq!(out.b_minus_a, synth::difference(&b, &a));
+    println!("exact intersection of {} elements ✓", out.intersection.len());
+}

@@ -1,0 +1,93 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts for the rust PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md and the ``load_hlo`` reference.
+
+Usage (normally via ``make artifacts``):
+    python -m compile.aot --out-dir ../artifacts [--l 1024] [--nb 2048] [--steps 32]
+
+Emits:
+    encode_<l>x<nb>.hlo.txt       — y = M_block @ x
+    correlate_<l>x<nb>.hlo.txt    — δ = M_blockᵀ r / m
+    decode_<l>x<nb>_s<K>.hlo.txt  — K MP iterations (lax.scan)
+    manifest.txt                  — shapes, one artifact per line
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--l", type=int, default=1024, help="sketch rows per partition block")
+    ap.add_argument("--nb", type=int, default=2048, help="candidate columns per block")
+    ap.add_argument("--steps", type=int, default=32, help="MP iterations per decode call")
+    args = ap.parse_args()
+
+    l, nb, steps = args.l, args.nb, args.steps
+    assert l % 128 == 0 and nb % 512 == 0, "shapes must respect kernel tiling"
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    mb = jax.ShapeDtypeStruct((l, nb), jnp.float32)
+    vx = jax.ShapeDtypeStruct((nb,), jnp.float32)
+    vr = jax.ShapeDtypeStruct((l,), jnp.float32)
+    sm = jax.ShapeDtypeStruct((), jnp.float32)
+
+    manifest = []
+
+    def emit(name: str, fn, *specs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(name)
+        print(f"wrote {name}: {len(text)} chars")
+
+    emit(
+        f"encode_{l}x{nb}.hlo.txt",
+        lambda m, x: (model.encode_block(m, x),),
+        mb,
+        vx,
+    )
+    emit(
+        f"correlate_{l}x{nb}.hlo.txt",
+        lambda m, r, mo: (model.correlate_block(m, r, mo),),
+        mb,
+        vr,
+        sm,
+    )
+    emit(
+        f"decode_{l}x{nb}_s{steps}.hlo.txt",
+        lambda m, r, x, mo: model.decode_steps(m, r, x, mo, steps=steps),
+        mb,
+        vr,
+        vx,
+        sm,
+    )
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(f"l={l} nb={nb} steps={steps}\n")
+        for name in manifest:
+            f.write(name + "\n")
+    print(f"manifest: {len(manifest)} artifacts (l={l}, nb={nb}, steps={steps})")
+
+
+if __name__ == "__main__":
+    main()

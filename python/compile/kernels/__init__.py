@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the paper's compute hot-spots + their pure-jnp oracles.
+from . import matvec, ref  # noqa: F401

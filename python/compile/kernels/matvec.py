@@ -1,0 +1,92 @@
+"""Layer-1 Pallas kernels: the CS dense-block compute hot-spots.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CPU hot-spots are sparse
+scatter/gather updates (each element touches m random sketch rows). A systolic MXU wants
+dense tiles, so the TPU-shaped formulation partitions the universe (as the paper itself
+suggests for parallelism, §7.3) and materializes per-partition dense 0/1 column blocks:
+
+* ``encode``:    y = M_block @ x          — batched sketch encoding (M·1_S per partition);
+* ``correlate``: δ = M_blockᵀ @ r / m     — the MP matching stage's scores for *all*
+                                            candidates of the block at once (eq. B.1).
+
+Both are tiled matmuls whose BlockSpecs express the HBM↔VMEM schedule; on a real TPU the
+(TL×TN)·(TN×1) tiles hit the MXU. Here they are lowered with ``interpret=True`` (CPU PJRT
+cannot run Mosaic custom-calls) — numerics are identical, and the VMEM/MXU estimates live
+in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: multiples of the (8, 128) f32 TPU tiling; 128×512 f32 tiles keep
+# (128·512 + 512 + 128)·4 B ≈ 265 KiB in VMEM per instance — comfortably under 16 MiB.
+TILE_L = 128
+TILE_N = 512
+
+
+def _matvec_kernel(m_ref, x_ref, o_ref):
+    """One (i, j) grid step: accumulate M[i·TL:(i+1)·TL, j·TN:(j+1)·TN] @ x[j·TN:(j+1)·TN]."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += m_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def encode(m_block: jax.Array, x: jax.Array) -> jax.Array:
+    """y = M_block @ x for an l×nb dense 0/1 block and an nb-vector.
+
+    l and nb must be multiples of the tile sizes (the AOT wrapper pads).
+    """
+    l, nb = m_block.shape
+    assert l % TILE_L == 0 and nb % TILE_N == 0, (l, nb)
+    x2 = x.reshape(nb, 1)
+    grid = (l // TILE_L, nb // TILE_N)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_L, TILE_N), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_N, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_L, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, 1), jnp.float32),
+        interpret=True,
+    )(m_block, x2)
+    return out.reshape(l)
+
+
+def _correlate_kernel(m_ref, r_ref, o_ref):
+    """One (j, i) grid step of δ = Mᵀ r: accumulate M_tileᵀ @ r_tile."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += m_ref[...].T @ r_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def correlate(m_block: jax.Array, r: jax.Array, m_ones: float) -> jax.Array:
+    """δ = M_blockᵀ @ r / m — the optimal L2 pursuit step for every block candidate."""
+    l, nb = m_block.shape
+    assert l % TILE_L == 0 and nb % TILE_N == 0, (l, nb)
+    r2 = r.reshape(l, 1)
+    grid = (nb // TILE_N, l // TILE_L)
+    out = pl.pallas_call(
+        _correlate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_L, TILE_N), lambda j, i: (i, j)),
+            pl.BlockSpec((TILE_L, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, 1), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        interpret=True,
+    )(m_block, r2)
+    return out.reshape(nb) / m_ones

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness ground truth.
+
+Every kernel in this package must match its oracle to float32 tolerance across the
+hypothesis shape sweeps in ``python/tests/``; that is the CORE correctness signal of the
+compile path (the rust runtime then loads the very HLO these functions lower into).
+"""
+
+import jax.numpy as jnp
+
+
+def encode_ref(m_block, x):
+    """y = M x."""
+    return m_block @ x
+
+
+def correlate_ref(m_block, r, m_ones):
+    """δ = Mᵀ r / m (eq. B.1)."""
+    return (m_block.T @ r) / m_ones
+
+
+def decode_step_ref(m_block, r, x, m_ones):
+    """One binary-MP iteration (Procedure 1 + Modification 9) on a dense block.
+
+    Greedy: compute every candidate's gain (in units of m), flip the argmax if its gain is
+    positive, update the residue. Mirrors rust ``MpDecoder::run`` restricted to one step.
+    """
+    delta = correlate_ref(m_block, r, m_ones)
+    # Gain/m: setting needs delta > 1/2 (rule 2), unsetting needs delta < -1/2 (rule 1).
+    gains = jnp.where(x < 0.5, 2.0 * delta - 1.0, -2.0 * delta - 1.0)
+    j = jnp.argmax(gains)
+    best = gains[j]
+    do = best > 0.0
+    setting = x[j] < 0.5
+    sign = jnp.where(setting, 1.0, -1.0)  # set => r -= col, unset => r += col
+    col = m_block[:, j]
+    r_new = jnp.where(do, r - sign * col, r)
+    x_new = x.at[j].set(jnp.where(do, 1.0 - x[j], x[j]))
+    return r_new, x_new
+
+
+def decode_steps_ref(m_block, r, x, m_ones, steps):
+    for _ in range(steps):
+        r, x = decode_step_ref(m_block, r, x, m_ones)
+    return r, x

@@ -1,0 +1,62 @@
+"""Layer-2 JAX graphs: the CS encode and dense-block MP-decode computations.
+
+These are the fixed-shape compute graphs AOT-lowered (``aot.py``) to HLO text that the rust
+runtime (``rust/src/runtime``) loads and executes via PJRT — Python never runs at request
+time. Both call the Layer-1 Pallas kernels in ``kernels/matvec.py`` so they lower into the
+same HLO module.
+
+Shapes are static: ``l × nb`` dense 0/1 column blocks (a universe partition, DESIGN.md
+§Hardware-Adaptation); the coordinator pads the last block with zero columns.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matvec
+
+
+def encode_block(m_block: jax.Array, x: jax.Array) -> jax.Array:
+    """Sketch contribution of one dense block: y = M_block @ x (Pallas L1 kernel)."""
+    return matvec.encode(m_block, x)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def decode_steps(
+    m_block: jax.Array,
+    r: jax.Array,
+    x: jax.Array,
+    m_ones: jax.Array,
+    steps: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """``steps`` greedy binary-MP iterations (Procedure 1 + Modification 9) on one block.
+
+    Each iteration: δ = Mᵀr/m via the Pallas correlate kernel (the matching stage over all
+    candidates at once), then the best positive-gain flip is applied. A no-op iteration
+    (best gain ≤ 0) leaves the carry unchanged, so calling with surplus steps is safe —
+    the rust coordinator loops until the residue stops improving.
+    """
+    l, nb = m_block.shape
+
+    def step(carry, _):
+        r, x = carry
+        delta = matvec.correlate(m_block, r, 1.0) / m_ones
+        gains = jnp.where(x < 0.5, 2.0 * delta - 1.0, -2.0 * delta - 1.0)
+        j = jnp.argmax(gains)
+        best = gains[j]
+        do = best > 0.0
+        setting = x[j] < 0.5
+        sign = jnp.where(setting, 1.0, -1.0)
+        col = jax.lax.dynamic_slice(m_block, (0, j), (l, 1)).reshape(l)
+        r_new = jnp.where(do, r - sign * col, r)
+        x_new = x.at[j].set(jnp.where(do, 1.0 - x[j], x[j]))
+        return (r_new, x_new), None
+
+    (r, x), _ = jax.lax.scan(step, (r, x), None, length=steps)
+    return r, x
+
+
+def correlate_block(m_block: jax.Array, r: jax.Array, m_ones: jax.Array) -> jax.Array:
+    """Standalone matching-stage scores δ = Mᵀr/m for one block (Pallas L1 kernel)."""
+    return matvec.correlate(m_block, r, 1.0) / m_ones

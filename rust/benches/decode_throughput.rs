@@ -1,0 +1,106 @@
+//! Bench D1 — decode-time comparison backing the §1.1/§7.3 running-time claims:
+//! the MP decoder should sit within a small factor of IBLT peeling (the paper: "a couple
+//! of times slower than D.Digest") while PinSketch's BCH decode is orders slower at large d.
+//! Also covers the SSMP (L1) and BMP ablations and the PJRT dense-block decode path.
+//!
+//! Run: `cargo bench --offline --bench decode_throughput`
+
+use commonsense::baselines::iblt::{Iblt, IbltParams};
+use commonsense::baselines::pinsketch::PinSketch;
+use commonsense::data::synth;
+use commonsense::decoder::{DecoderConfig, MpDecoder, Side};
+use commonsense::matrix::CsMatrix;
+use commonsense::metrics::Bench;
+use commonsense::protocol::CsParams;
+use commonsense::sketch::Sketch;
+
+fn main() {
+    let n = 100_000usize;
+    for d in [100usize, 1_000, 5_000] {
+        let params = CsParams::tuned_uni(n, d);
+        let mat = params.matrix();
+        let (a, b) = synth::subset_pair(n - d, d, 7);
+        let want = synth::difference(&b, &a);
+        let residue: Vec<i32> = Sketch::encode(mat, &want).counts;
+
+        // Decoder construction (CSR + reverse lookup) is a one-time per-session cost;
+        // bench it separately from the pursuit loop.
+        Bench::new(&format!("mp_build n={n} d={d}"))
+            .with_times(200, 1200)
+            .run(|| MpDecoder::new(&mat, &b, Side::Positive).num_candidates());
+
+        let mut dec = MpDecoder::new(&mat, &b, Side::Positive);
+        dec.set_config(DecoderConfig::commonsense());
+        Bench::new(&format!("mp_decode(L2) n={n} d={d}"))
+            .with_times(200, 1500)
+            .run(|| {
+                dec.reset_signal();
+                dec.load_residue(&residue);
+                let stats = dec.run();
+                assert!(stats.converged);
+                stats.iterations
+            });
+
+        let mut ssmp = MpDecoder::new(&mat, &b, Side::Positive);
+        ssmp.set_config(DecoderConfig::ssmp());
+        Bench::new(&format!("ssmp_decode(L1) n={n} d={d}"))
+            .with_times(200, 1500)
+            .run(|| {
+                ssmp.reset_signal();
+                ssmp.load_residue(&residue);
+                ssmp.run().iterations
+            });
+
+        // IBLT peel at the same d (the D.Digest decode step).
+        let iparams = IbltParams::paper_synthetic();
+        let mut ia = Iblt::for_difference(d, iparams);
+        ia.insert_all(&a);
+        let mut ib = Iblt::for_difference(d, iparams);
+        ib.insert_all(&b);
+        let diff = ia.sub(&ib);
+        Bench::new(&format!("iblt_peel d={d}"))
+            .with_times(200, 1200)
+            .run(|| {
+                let (p, ng) = diff.clone().peel().expect("peel");
+                p.len() + ng.len()
+            });
+    }
+
+    // PinSketch (BCH) decode: O(d²) BM + Chien — the reason the paper only *estimates*
+    // ECC costs. Position space 2^14 per partition, d errors.
+    for d in [50usize, 200, 800] {
+        let ps = PinSketch::new(14, d + 8);
+        let positions: Vec<u32> = (0..d as u32).map(|i| i * 17 + 3).collect();
+        let mine = ps.sketch(positions.iter().copied());
+        let theirs = ps.sketch(std::iter::empty());
+        Bench::new(&format!("pinsketch_decode d={d}"))
+            .with_times(200, 1200)
+            .run(|| ps.diff(&mine, &theirs).expect("decode").len());
+    }
+
+    // PJRT dense-block decode (the L1/L2 artifact), if built.
+    if let Ok(rt) = commonsense::runtime::Runtime::load_default() {
+        let shapes = rt.shapes;
+        let mat = CsMatrix::new(shapes.l as u32, 5, 3);
+        let ids: Vec<u64> = (0..shapes.nb as u64).collect();
+        let block = mat.dense_block_rowmajor(&ids, shapes.nb);
+        let planted: Vec<u64> = (0..24u64).map(|i| i * 83 + 1).collect();
+        let r0: Vec<f32> = Sketch::encode(mat, &planted)
+            .counts
+            .iter()
+            .map(|&c| c as f32)
+            .collect();
+        let x0 = vec![0.0f32; shapes.nb];
+        Bench::new(&format!(
+            "pjrt_decode_block {}x{} steps={}",
+            shapes.l, shapes.nb, shapes.steps
+        ))
+        .with_times(300, 1500)
+        .run(|| {
+            let (r, _x) = rt.decode_block(&block, &r0, &x0, 5.0).unwrap();
+            r.len()
+        });
+    } else {
+        println!("(pjrt decode bench skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,93 @@
+//! Bench D2 — encode/update/codec throughput backing Theorem 2's complexity claims:
+//! O(m) per streaming update, O(m·|S|) one-shot encode, plus the rANS and truncation
+//! codec costs and the PJRT dense-block encode path.
+//!
+//! Run: `cargo bench --offline --bench encode_throughput`
+
+use commonsense::data::synth;
+use commonsense::entropy::{
+    compress_residue, compress_sketch, decompress_residue, recover_sketch, SketchCodecParams,
+};
+use commonsense::matrix::CsMatrix;
+use commonsense::metrics::Bench;
+use commonsense::protocol::CsParams;
+use commonsense::sketch::Sketch;
+use commonsense::streaming::StreamDigest;
+
+fn main() {
+    let n = 200_000usize;
+    let d = 2_000usize;
+    let params = CsParams::tuned_uni(n, d);
+    let mat = params.matrix();
+    let (_, b) = synth::subset_pair(n - d, d, 5);
+
+    // One-shot encode: O(m)/element (Theorem 2's encoding complexity).
+    let r = Bench::new(&format!("sketch_encode |S|={n} m={}", params.m))
+        .with_times(300, 2000)
+        .run(|| Sketch::encode(mat, &b).counts.len());
+    let per_elem = r.mean.as_nanos() as f64 / n as f64;
+    println!("  → {per_elem:.1} ns/element");
+
+    // Streaming update: the §4 data-plane operation.
+    let mut digest = StreamDigest::new(mat);
+    let mut i = 0usize;
+    let r = Bench::new("stream_update (add+remove)")
+        .with_times(300, 1500)
+        .run(|| {
+            let id = b[i % b.len()];
+            digest.add(id);
+            digest.remove(id);
+            i += 1;
+        });
+    println!("  → {:.1} ns per add+remove pair", r.mean.as_nanos());
+
+    // Residue codec.
+    let sk = Sketch::encode(mat, &synth::difference(&b, &b[..n - d]));
+    let residue: Vec<i32> = sk.counts.clone();
+    let bytes = compress_residue(&residue);
+    println!(
+        "residue codec: {} coords → {} bytes ({:.2} bits/coord)",
+        residue.len(),
+        bytes.len(),
+        8.0 * bytes.len() as f64 / residue.len() as f64
+    );
+    Bench::new(&format!("rans_compress l={}", residue.len()))
+        .with_times(200, 1200)
+        .run(|| compress_residue(&residue).len());
+    Bench::new(&format!("rans_decompress l={}", residue.len()))
+        .with_times(200, 1200)
+        .run(|| decompress_residue(&bytes, residue.len()).unwrap().len());
+
+    // Truncation codec (Alice's sketch → wire and back).
+    let full = Sketch::encode(mat, &b);
+    let codec = SketchCodecParams::derive(d, 0, params.l, params.m);
+    let msg = compress_sketch(&full.counts, &codec);
+    println!(
+        "truncation codec: raw {} bytes → {} bytes",
+        4 * full.counts.len(),
+        msg.size_bytes()
+    );
+    Bench::new("truncate_compress")
+        .with_times(200, 1200)
+        .run(|| compress_sketch(&full.counts, &codec).size_bytes());
+    let y = full.counts.clone();
+    Bench::new("truncate_recover")
+        .with_times(200, 1200)
+        .run(|| recover_sketch(&msg, &y, &codec).unwrap().0.len());
+
+    // PJRT dense-block encode (L1 Pallas kernel through XLA), if built.
+    if let Ok(rt) = commonsense::runtime::Runtime::load_default() {
+        let shapes = rt.shapes;
+        let pmat = CsMatrix::new(shapes.l as u32, 5, 9);
+        let ids: Vec<u64> = (0..shapes.nb as u64).collect();
+        let r = Bench::new(&format!("pjrt_encode_block {}x{}", shapes.l, shapes.nb))
+            .with_times(300, 1500)
+            .run(|| rt.encode_set(pmat, &ids).unwrap().len());
+        println!(
+            "  → {:.1} ns/element (incl. block materialization)",
+            r.mean.as_nanos() as f64 / shapes.nb as f64
+        );
+    } else {
+        println!("(pjrt encode bench skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench F2a — regenerates Figure 2a (unidirectional comm-cost sweep: CommonSense vs
+//! Graphene vs bounds) and times the end-to-end unidirectional pipeline.
+//!
+//! Run: `cargo bench --offline --bench fig2a_unidirectional [-- --scale N --instances K]`
+
+use commonsense::data::synth;
+use commonsense::experiments;
+use commonsense::metrics::Bench;
+use commonsense::protocol::{uni, CsParams};
+
+fn flag(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let scale = flag("--scale", 20_000);
+    let instances = flag("--instances", 3);
+    println!("== Figure 2a regeneration (scale {scale}, {instances} instances/point) ==");
+    let rows = experiments::fig2a(
+        scale,
+        &[0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5],
+        instances,
+        true,
+    );
+    // Paper shape checks (who wins, where the crossover goes).
+    let first = &rows[0];
+    println!(
+        "\nshape: CS/Graphene gap at d=1%: {:.1}x (paper: 7.4x); CS vs SetR-bound: {:.1}x under",
+        first.graphene_bytes / first.commonsense_bytes,
+        first.setr_bound_bytes / first.commonsense_bytes
+    );
+
+    println!("\n== end-to-end unidirectional timing ==");
+    for d in [200usize, 1_000] {
+        let (a, b) = synth::subset_pair(scale, d, 0xbe);
+        let params = CsParams::tuned_uni(b.len(), d);
+        Bench::new(&format!("uni_run n={scale} d={d}"))
+            .with_times(200, 1500)
+            .run(|| uni::run(&a, &b, &params).unwrap().comm.total_bytes());
+    }
+}

@@ -1,0 +1,53 @@
+//! Bench F2b — regenerates Figure 2b (bidirectional comm-cost sweep: CommonSense vs IBLT
+//! vs ECC bound) and times the ping-pong pipeline, plus the O10 rounds observation.
+//!
+//! Run: `cargo bench --offline --bench fig2b_bidirectional [-- --scale N --instances K]`
+
+use commonsense::data::synth;
+use commonsense::experiments;
+use commonsense::metrics::Bench;
+use commonsense::protocol::bidi::{self, BidiOptions};
+use commonsense::protocol::CsParams;
+
+fn flag(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let scale = flag("--scale", 20_000);
+    let instances = flag("--instances", 3);
+    let a_unique = scale / 100;
+    let bu: Vec<usize> = [0.0001f64, 0.0003, 0.001, 0.003, 0.01, 0.1, 0.3]
+        .iter()
+        .map(|f| ((scale as f64 * f) as usize).max(2))
+        .collect();
+    println!("== Figure 2b regeneration (|A∩B| = {scale}, |A\\B| = {a_unique}) ==");
+    let rows = experiments::fig2b(scale, a_unique, &bu, instances, true);
+    let (lo, hi) = (&rows[0], rows.last().unwrap());
+    println!(
+        "\nshape: IBLT/CS {:.1}x → {:.1}x across the sweep (paper: 7.8x → 14.8x); \
+         rounds avg {:.1}–{:.1} (paper: 7.0–8.6, cap 10)",
+        lo.iblt_bytes / lo.commonsense_bytes,
+        hi.iblt_bytes / hi.commonsense_bytes,
+        lo.commonsense_rounds,
+        hi.commonsense_rounds
+    );
+
+    println!("\n== end-to-end bidirectional timing ==");
+    for (au, bu) in [(100usize, 200usize), (500, 500)] {
+        let (a, b) = synth::overlap_pair(scale, au, bu, 0xbf);
+        let params = CsParams::tuned_bidi(scale + au + bu, au, bu);
+        Bench::new(&format!("bidi_run n={scale} au={au} bu={bu}"))
+            .with_times(200, 1500)
+            .run(|| {
+                let out = bidi::run(&a, &b, &params, BidiOptions::default());
+                assert!(out.converged);
+                out.comm.total_bytes()
+            });
+    }
+}

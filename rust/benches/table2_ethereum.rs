@@ -1,0 +1,63 @@
+//! Bench T2 — regenerates Tables 1 & 2 (Ethereum-sim SetX: CommonSense vs IBLT) and times
+//! the full Ethereum-workload session including the partitioned parallel variant (§7.3).
+//!
+//! Run: `cargo bench --offline --bench table2_ethereum [-- --accounts N]`
+
+use commonsense::coordinator::parallel;
+use commonsense::data::ethereum::{diff_stats, EthSim};
+use commonsense::experiments;
+use commonsense::metrics::Bench;
+use commonsense::protocol::bidi::{self, BidiOptions};
+use commonsense::protocol::CsParams;
+
+fn flag(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let accounts = flag("--accounts", 150_000);
+    println!("== Tables 1+2 regeneration (Ethereum-sim, {accounts} accounts) ==");
+    let (_t1, t2) = experiments::ethereum(accounts, true);
+    println!(
+        "\nshape: IBLT/CS = {:.1}x and {:.1}x (paper: 8.3x, 10.1x); CS rounds {} and {} (paper: 5)",
+        t2[0].3 / t2[0].1,
+        t2[1].3 / t2[1].1,
+        t2[0].2,
+        t2[1].2
+    );
+
+    println!("\n== session timing (1-day staleness pair) ==");
+    let mut sim = EthSim::genesis(accounts / 3, 0xbeac);
+    let b = sim.snapshot_ids();
+    sim.advance_day();
+    let a = sim.snapshot_ids();
+    let st = diff_stats(&b, &a);
+    let params = CsParams::tuned_bidi(a.len().max(b.len()), st.s_minus_a, st.a_minus_s);
+    Bench::new(&format!("eth_bidi n={} d={}", a.len(), st.sym_diff))
+        .with_times(300, 2000)
+        .run(|| {
+            let out = bidi::run(&b, &a, &params, BidiOptions::default());
+            assert!(out.converged);
+            out.comm.total_bytes()
+        });
+    Bench::new("eth_parallel_8x")
+        .with_times(300, 2000)
+        .run(|| {
+            let out = parallel::setx(
+                &a,
+                &b,
+                st.a_minus_s,
+                st.s_minus_a,
+                8,
+                8,
+                BidiOptions::default(),
+            );
+            assert!(out.converged);
+            out.total_bytes
+        });
+}

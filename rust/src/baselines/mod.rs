@@ -1,0 +1,5 @@
+//! Baseline protocols (§7.1, §8): IBLT, Graphene, CBF approximate SetX, PinSketch.
+pub mod iblt;
+pub mod graphene;
+pub mod cbf_setx;
+pub mod pinsketch;

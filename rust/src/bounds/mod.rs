@@ -1,0 +1,122 @@
+//! Information-theoretic lower bounds (§6 and the SetR bound of Minsky et al. [1]).
+//!
+//! * SetX (eq. 6): `log2 C(|A|, |A\B|) + log2 C(|B|, |B\A|)` — the entropy reduction needed
+//!   for both sides to learn the partition of their own set into shared/unique.
+//! * SetR [1]: `d · log2(e·|U|/d)` bits — what any reconciliation protocol must move.
+//!
+//! The paper's headline: the SetX bound scales with `log(|set|/d)` while SetR's scales with
+//! `log(|U|/d)`, a gap of `d·log2(|U|/|B|)` bits (a factor 24.8 on the Ethereum example).
+
+/// `log2(n choose k)` via the log-gamma function (Lanczos), exact enough for bound
+/// reporting at any scale.
+pub fn log2_binomial(n: f64, k: f64) -> f64 {
+    if k <= 0.0 || k >= n {
+        return 0.0;
+    }
+    (ln_gamma(n + 1.0) - ln_gamma(k + 1.0) - ln_gamma(n - k + 1.0)) / std::f64::consts::LN_2
+}
+
+/// Lanczos approximation of ln Γ(x), |err| < 2e-10 for x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// SetX lower bound (eq. 6), in **bits**.
+pub fn setx_lower_bound_bits(a: u64, b: u64, a_unique: u64, b_unique: u64) -> f64 {
+    log2_binomial(a as f64, a_unique as f64) + log2_binomial(b as f64, b_unique as f64)
+}
+
+/// The closed-form approximation the paper quotes: `d·log2(e|A|/d)` bits.
+pub fn setx_lower_bound_approx_bits(a: u64, d: u64) -> f64 {
+    if d == 0 {
+        return 0.0;
+    }
+    d as f64 * (std::f64::consts::E * a as f64 / d as f64).log2()
+}
+
+/// SetR lower bound of [1]: `d·log2(e|U|/d)` bits, with the universe given as `u = log2|U|`.
+pub fn setr_lower_bound_bits(universe_bits: u32, d: u64) -> f64 {
+    if d == 0 {
+        return 0.0;
+    }
+    let log2_u = universe_bits as f64;
+    d as f64 * (std::f64::consts::E.log2() + log2_u - (d as f64).log2())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        let mut fact = 1.0f64;
+        for n in 1..15u32 {
+            fact *= n as f64;
+            assert!(
+                (ln_gamma(n as f64 + 1.0) - fact.ln()).abs() < 1e-8,
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn binomial_small_exact() {
+        assert!((log2_binomial(10.0, 3.0) - (120.0f64).log2()).abs() < 1e-8);
+        assert_eq!(log2_binomial(10.0, 0.0), 0.0);
+        assert_eq!(log2_binomial(10.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn example3_numbers() {
+        // §3.1 Example 3: |A|=10^6, |B|=1.01·10^6, d=10^4, |U|=2^64:
+        // SetR bound ≈ 65.2 KB, SetX bound ≈ 10.1 KB.
+        let setr_kb = setr_lower_bound_bits(64, 10_000) / 8.0 / 1000.0;
+        assert!((setr_kb - 65.2).abs() < 1.5, "SetR bound {setr_kb} KB");
+        let setx_kb = setx_lower_bound_bits(1_000_000, 1_010_000, 0, 10_000) / 8.0 / 1000.0;
+        assert!((setx_kb - 10.1).abs() < 1.5, "SetX bound {setx_kb} KB");
+    }
+
+    #[test]
+    fn example11_numbers() {
+        // §5 Example 11: |A|=|B|=1.01·10^6, d=2·10^4 split evenly, |U|=2^256:
+        // SetR ≈ 610.4 KB, SetX ≈ 20.3 KB.
+        let setr_kb = setr_lower_bound_bits(256, 20_000) / 8.0 / 1000.0;
+        assert!((setr_kb - 610.4).abs() < 8.0, "SetR bound {setr_kb} KB");
+        let setx_kb =
+            setx_lower_bound_bits(1_010_000, 1_010_000, 10_000, 10_000) / 8.0 / 1000.0;
+        assert!((setx_kb - 20.3).abs() < 1.5, "SetX bound {setx_kb} KB");
+    }
+
+    #[test]
+    fn ethereum_gap_factor() {
+        // §1.1: |U|=2^256, |A| ≈ 2.8·10^8, d = 10^6 ⇒ gap ≈ 24.8× (1.2 MB vs 29.7 MB).
+        let setr = setr_lower_bound_bits(256, 1_000_000);
+        let setx = setx_lower_bound_approx_bits(280_000_000, 1_000_000);
+        let ratio = setr / setx;
+        assert!((ratio - 24.8).abs() < 1.5, "ratio {ratio}");
+        assert!((setr / 8.0 / 1e6 - 29.7).abs() < 1.5, "{}", setr / 8e6);
+        assert!((setx / 8.0 / 1e6 - 1.2).abs() < 0.2, "{}", setx / 8e6);
+    }
+}

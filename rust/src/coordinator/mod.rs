@@ -1,0 +1,15 @@
+//! The distributed runtime: CommonSense over real sockets, plus partitioned parallel SetX.
+//!
+//! * [`tcp`] — Alice/Bob nodes speaking the wire protocol of [`crate::protocol::wire`] over
+//!   TCP (threaded; the image's crate set has no tokio — see DESIGN.md §4). The *initiator*
+//!   connects and sends `Hello` + `Sketch`; the *responder* serves. Byte counts are taken
+//!   from actual socket writes/reads, so the E2E driver's reported costs are real.
+//! * [`parallel`] — the §7.3 scale-out: hash-partition the universe (as PBS does), run an
+//!   independent bidirectional session per partition across OS threads, aggregate. This is
+//!   also what makes the PJRT dense-block artifacts applicable: each partition's matrix has
+//!   exactly the artifact row count.
+
+pub mod parallel;
+pub mod tcp;
+
+pub use tcp::{connect_initiator, serve_responder, SessionReport};

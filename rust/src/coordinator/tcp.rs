@@ -1,0 +1,232 @@
+//! TCP transport for the bidirectional protocol (threaded, dependency-free).
+
+use crate::decoder::Side;
+use crate::protocol::bidi::{
+    initiator_sketch, responder_residue, seed_round, BidiOptions, Peer,
+};
+use crate::protocol::{wire::Msg, CsParams};
+use anyhow::{anyhow, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+
+/// Outcome of one host's side of a TCP session.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    /// This host's unique elements (what the protocol recovered for us).
+    pub unique: Vec<u64>,
+    /// Bytes written to / read from the socket (payload frames only).
+    pub bytes_sent: usize,
+    pub bytes_received: usize,
+    /// Messages this host sent (sketch/hello count for the initiator).
+    pub msgs_sent: usize,
+    pub converged: bool,
+}
+
+fn write_msg(stream: &mut TcpStream, msg: &Msg) -> Result<usize> {
+    let bytes = msg.to_bytes();
+    stream.write_all(&bytes)?;
+    Ok(bytes.len())
+}
+
+/// Read exactly one frame: type byte + varint length + body.
+fn read_msg(stream: &mut TcpStream) -> Result<(Msg, usize)> {
+    let mut header = vec![0u8; 1];
+    stream.read_exact(&mut header).context("reading frame type")?;
+    // Varint length, byte by byte.
+    let mut len = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let mut b = [0u8; 1];
+        stream.read_exact(&mut b)?;
+        header.push(b[0]);
+        len |= ((b[0] & 0x7f) as u64) << shift;
+        if b[0] & 0x80 == 0 {
+            break;
+        }
+        shift += 7;
+        if shift >= 64 {
+            return Err(anyhow!("varint overflow"));
+        }
+    }
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body)?;
+    let mut frame = header;
+    frame.extend_from_slice(&body);
+    let total = frame.len();
+    let (msg, used) = Msg::from_bytes(&frame).ok_or_else(|| anyhow!("malformed frame"))?;
+    debug_assert_eq!(used, total);
+    Ok((msg, total))
+}
+
+/// Run the initiator (the side with the smaller unique-count estimate): connect, send
+/// `Hello` + `Sketch`, then ping-pong as the negative-signed decoder until completion.
+pub fn connect_initiator(
+    addr: impl ToSocketAddrs,
+    set: &[u64],
+    params: &CsParams,
+    opts: BidiOptions,
+) -> Result<SessionReport> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut sent = 0usize;
+    let mut received = 0usize;
+    let mut msgs = 0usize;
+
+    let hello = Msg::Hello {
+        l: params.l,
+        m: params.m,
+        seed: params.seed,
+        universe_bits: params.universe_bits,
+        // Initiator-relative estimates (the responder mirrors them back).
+        est_initiator_unique: params.est_a_unique as u64,
+        est_responder_unique: params.est_b_unique as u64,
+        set_len: set.len() as u64,
+    };
+    sent += write_msg(&mut stream, &hello)?;
+    msgs += 1;
+    sent += write_msg(&mut stream, &initiator_sketch(params, set, true))?;
+    msgs += 1;
+
+    let mut peer = Peer::new(params, set, Side::Negative, opts);
+    loop {
+        let msg = match read_msg(&mut stream) {
+            Ok((msg, n)) => {
+                received += n;
+                msg
+            }
+            Err(_) => break, // peer closed: session over
+        };
+        match peer.step(&msg) {
+            Some(reply) => {
+                sent += write_msg(&mut stream, &reply)?;
+                msgs += 1;
+            }
+            None => break,
+        }
+    }
+    Ok(SessionReport {
+        unique: peer.result(),
+        bytes_sent: sent,
+        bytes_received: received,
+        msgs_sent: msgs,
+        converged: peer.settled,
+    })
+}
+
+/// Serve one responder session on an already-bound listener. Returns when the session
+/// completes. The responder derives every parameter from the initiator's `Hello`.
+pub fn serve_responder(
+    listener: &TcpListener,
+    set: &[u64],
+    opts: BidiOptions,
+) -> Result<SessionReport> {
+    let (mut stream, _addr) = listener.accept()?;
+    stream.set_nodelay(true).ok();
+    let mut sent = 0usize;
+    let mut received = 0usize;
+    let mut msgs = 0usize;
+
+    let (hello, n) = read_msg(&mut stream)?;
+    received += n;
+    let Msg::Hello { l, m, seed, universe_bits, est_initiator_unique, est_responder_unique, .. } =
+        hello
+    else {
+        return Err(anyhow!("expected Hello"));
+    };
+    // Reconstruct the shared parameter view. From the responder's perspective, "a" is the
+    // initiator (`initiator_is_alice = true` keeps codec orientation consistent).
+    let params = CsParams {
+        l,
+        m,
+        seed,
+        universe_bits,
+        est_a_unique: est_initiator_unique as usize,
+        est_b_unique: est_responder_unique as usize,
+    };
+
+    let (sketch, n) = read_msg(&mut stream)?;
+    received += n;
+    let Msg::Sketch(ref sm) = sketch else {
+        return Err(anyhow!("expected Sketch"));
+    };
+    let residue0 =
+        responder_residue(&params, set, sm, true).ok_or_else(|| anyhow!("sketch recovery failed"))?;
+
+    let mut peer = Peer::new(&params, set, Side::Positive, opts);
+    let mut in_flight = Some(seed_round(&residue0));
+    loop {
+        let msg = match in_flight.take() {
+            Some(msg) => msg,
+            None => match read_msg(&mut stream) {
+                Ok((msg, n)) => {
+                    received += n;
+                    msg
+                }
+                Err(_) => break,
+            },
+        };
+        match peer.step(&msg) {
+            Some(reply) => {
+                sent += write_msg(&mut stream, &reply)?;
+                msgs += 1;
+            }
+            None => break,
+        }
+    }
+    Ok(SessionReport {
+        unique: peer.result(),
+        bytes_sent: sent,
+        bytes_received: received,
+        msgs_sent: msgs,
+        converged: peer.settled,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn tcp_session_matches_in_memory_protocol() {
+        let (a, b) = synth::overlap_pair(4_000, 40, 80, 77);
+        let params = CsParams::tuned_bidi(4_120, 40, 80);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let b2 = b.clone();
+        let bob = std::thread::spawn(move || {
+            serve_responder(&listener, &b2, BidiOptions::default()).unwrap()
+        });
+        let alice = connect_initiator(addr, &a, &params, BidiOptions::default()).unwrap();
+        let bob = bob.join().unwrap();
+
+        assert!(alice.converged && bob.converged);
+        assert_eq!(alice.unique, synth::difference(&a, &b));
+        assert_eq!(bob.unique, synth::difference(&b, &a));
+        // Conservation: what one sends the other receives.
+        assert_eq!(alice.bytes_sent, bob.bytes_received);
+        assert_eq!(bob.bytes_sent, alice.bytes_received);
+        assert!(alice.bytes_sent + bob.bytes_sent > 0);
+    }
+
+    #[test]
+    fn tcp_session_uni_shaped_workload() {
+        // A ⊆ B over TCP: initiator has no uniques.
+        let (a, b) = synth::subset_pair(3_000, 50, 9);
+        let params = CsParams {
+            est_a_unique: 0,
+            est_b_unique: 50,
+            ..CsParams::tuned_bidi(3_050, 0, 50)
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let b2 = b.clone();
+        let bob = std::thread::spawn(move || {
+            serve_responder(&listener, &b2, BidiOptions::default()).unwrap()
+        });
+        let alice = connect_initiator(addr, &a, &params, BidiOptions::default()).unwrap();
+        let bob = bob.join().unwrap();
+        assert!(alice.unique.is_empty());
+        assert_eq!(bob.unique, synth::difference(&b, &a));
+    }
+}

@@ -1,0 +1,216 @@
+//! Ethereum world-state snapshot simulator (the §7.3 dataset substitute).
+//!
+//! The paper downloads three snapshots (A: May 03 2025, B: May 02, C: March 11) of the
+//! ~292 M-account world state and hashes each account's (address, balance, nonce) 3-tuple
+//! into a 256-bit SHA-256 signature. We cannot download PublicNode snapshots here, so we
+//! simulate the *churn process* between snapshots, calibrated to reproduce Table 1's ratios:
+//!
+//! * daily account creation ≈ 0.0787% of the ledger (|A|−|B| = 229,836 on 292 M);
+//! * daily distinct-account mutation ≈ 0.1165% (|B\A| = 340,292);
+//! * mutation is concentrated: a "hot" ~1.5% of accounts receives ~92% of mutations, which
+//!   is what makes the 53-day diff (|C\A| = 5.64 M) much smaller than 53× the daily diff —
+//!   the same hot accounts mutate over and over.
+//!
+//! The protocol under test only ever sees the set of signatures and the diff geometry, so
+//! this preserves exactly what Table 2 exercises (see DESIGN.md §4).
+
+use crate::hash::{Sha256, Xoshiro256};
+
+/// One account's state; the signature is SHA-256 of the packed 3-tuple.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Account {
+    pub addr: u64,
+    pub balance: u64,
+    pub nonce: u64,
+}
+
+impl Account {
+    /// 256-bit signature of the account state (we keep the first 64 bits as the internal
+    /// id; communication accounting still charges the nominal 256-bit universe).
+    pub fn signature(&self) -> [u8; 32] {
+        let mut h = Sha256::new();
+        h.update(&self.addr.to_le_bytes());
+        h.update(&self.balance.to_le_bytes());
+        h.update(&self.nonce.to_le_bytes());
+        h.finalize()
+    }
+
+    pub fn id(&self) -> u64 {
+        u64::from_le_bytes(self.signature()[..8].try_into().unwrap())
+    }
+}
+
+/// Churn-process parameters (fractions per simulated day).
+#[derive(Clone, Copy, Debug)]
+pub struct EthParams {
+    pub daily_new: f64,
+    pub daily_mutations: f64,
+    pub hot_fraction: f64,
+    pub hot_share: f64,
+}
+
+impl Default for EthParams {
+    fn default() -> Self {
+        EthParams {
+            daily_new: 0.000787,
+            daily_mutations: 0.001165,
+            hot_fraction: 0.015,
+            hot_share: 0.92,
+        }
+    }
+}
+
+/// The evolving ledger.
+pub struct EthSim {
+    pub accounts: Vec<Account>,
+    params: EthParams,
+    rng: Xoshiro256,
+    next_addr: u64,
+}
+
+impl EthSim {
+    /// A fresh ledger of `n` accounts. (The paper's scale is 2.9·10⁸; default experiments
+    /// run a 2²¹-scale replica — ratios, not absolutes, are what Table 2's shape needs.)
+    pub fn genesis(n: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let accounts = (0..n as u64)
+            .map(|i| Account {
+                addr: i,
+                balance: rng.next_u64() >> 20,
+                nonce: rng.gen_range(100),
+            })
+            .collect();
+        EthSim { accounts, params: EthParams::default(), rng, next_addr: n as u64 }
+    }
+
+    pub fn with_params(mut self, params: EthParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.accounts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accounts.is_empty()
+    }
+
+    /// Advance the ledger by one day: mutate hot/cold accounts, create new ones.
+    pub fn advance_day(&mut self) {
+        let n = self.accounts.len();
+        let n_mut = (self.params.daily_mutations * n as f64).round() as usize;
+        let hot_cut = ((self.params.hot_fraction * n as f64) as usize).max(1);
+        for _ in 0..n_mut {
+            let idx = if self.rng.gen_f64() < self.params.hot_share {
+                // Hot accounts live at low indices (the oldest accounts — exchanges, etc.).
+                self.rng.gen_range(hot_cut as u64) as usize
+            } else {
+                self.rng.gen_range(n as u64) as usize
+            };
+            let acct = &mut self.accounts[idx];
+            acct.nonce += 1;
+            acct.balance = acct.balance.wrapping_add(self.rng.next_u64() >> 40);
+        }
+        let n_new = (self.params.daily_new * n as f64).round() as usize;
+        for _ in 0..n_new {
+            let acct = Account {
+                addr: self.next_addr,
+                balance: self.rng.next_u64() >> 24,
+                nonce: 0,
+            };
+            self.next_addr += 1;
+            self.accounts.push(acct);
+        }
+    }
+
+    pub fn advance_days(&mut self, days: usize) {
+        for _ in 0..days {
+            self.advance_day();
+        }
+    }
+
+    /// The snapshot as a set of 64-bit signature ids (the SetX input).
+    pub fn snapshot_ids(&self) -> Vec<u64> {
+        self.accounts.iter().map(|a| a.id()).collect()
+    }
+}
+
+/// Cardinality statistics between two snapshots (a Table 1 row).
+#[derive(Clone, Copy, Debug)]
+pub struct DiffStats {
+    pub s_len: usize,
+    pub s_minus_a: usize,
+    pub a_minus_s: usize,
+    pub sym_diff: usize,
+}
+
+/// Compute Table 1-style stats of snapshot `s` against the reference snapshot `a`.
+pub fn diff_stats(s: &[u64], a: &[u64]) -> DiffStats {
+    use std::collections::HashSet;
+    let sa: HashSet<u64> = s.iter().copied().collect();
+    let aa: HashSet<u64> = a.iter().copied().collect();
+    let s_minus_a = sa.difference(&aa).count();
+    let a_minus_s = aa.difference(&sa).count();
+    DiffStats { s_len: sa.len(), s_minus_a, a_minus_s, sym_diff: s_minus_a + a_minus_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signatures_change_with_state() {
+        let a = Account { addr: 1, balance: 100, nonce: 0 };
+        let mut b = a;
+        b.nonce = 1;
+        assert_ne!(a.signature(), b.signature());
+        assert_ne!(a.id(), b.id());
+        assert_eq!(a.signature(), a.signature());
+    }
+
+    #[test]
+    fn one_day_churn_matches_table1_ratios() {
+        // Scaled Table 1, B→A row: on 292 M accounts one day produced
+        // |B\A|/|B| ≈ 0.1166% and (|A|−|B|)/|B| ≈ 0.0787%.
+        let n = 200_000;
+        let mut sim = EthSim::genesis(n, 42);
+        let b = sim.snapshot_ids();
+        sim.advance_day();
+        let a = sim.snapshot_ids();
+        let stats = diff_stats(&b, &a);
+        let churn = stats.s_minus_a as f64 / n as f64;
+        assert!((churn - 0.001165).abs() < 0.0004, "daily churn {churn}");
+        let growth = (a.len() - b.len()) as f64 / n as f64;
+        assert!((growth - 0.000787).abs() < 0.0002, "daily growth {growth}");
+    }
+
+    #[test]
+    fn long_horizon_sublinear_due_to_hot_accounts() {
+        // 50 days of churn must yield a distinct-changed count far below 50× the daily
+        // count (Table 1: 5.64 M vs 53 × 0.34 M ≈ 18 M).
+        let n = 120_000;
+        let mut sim = EthSim::genesis(n, 7);
+        let c = sim.snapshot_ids();
+        sim.advance_day();
+        let daily = diff_stats(&c, &sim.snapshot_ids()).s_minus_a.max(1);
+        let mut sim2 = EthSim::genesis(n, 7);
+        let c2 = sim2.snapshot_ids();
+        sim2.advance_days(50);
+        let fifty = diff_stats(&c2, &sim2.snapshot_ids()).s_minus_a;
+        assert!(
+            (fifty as f64) < 0.65 * 50.0 * daily as f64,
+            "50-day distinct churn {fifty} vs daily {daily}"
+        );
+        assert!(fifty > 5 * daily, "must still grow substantially: {fifty} vs {daily}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut s1 = EthSim::genesis(10_000, 9);
+        let mut s2 = EthSim::genesis(10_000, 9);
+        s1.advance_days(3);
+        s2.advance_days(3);
+        assert_eq!(s1.snapshot_ids(), s2.snapshot_ids());
+    }
+}

@@ -1,0 +1,7 @@
+//! Workload generation: seeded synthetic sets (§7.2) and the Ethereum snapshot simulator
+//! (§7.3 substitute — see DESIGN.md §4).
+
+pub mod ethereum;
+pub mod synth;
+
+pub use ethereum::{EthParams, EthSim};

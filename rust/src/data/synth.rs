@@ -1,0 +1,100 @@
+//! Synthetic set-pair generation with exactly controlled cardinalities (§7.2 workloads).
+//!
+//! Every element id is a fresh 64-bit value from a seeded PRNG (the "hash identifier"
+//! regime of assumption (1): the universe is astronomically larger than the sets, so random
+//! ids never collide in practice — we still deduplicate defensively).
+
+use crate::hash::Xoshiro256;
+use std::collections::HashSet;
+
+/// Draw `n` distinct random u64 ids.
+pub fn distinct_ids(n: usize, rng: &mut Xoshiro256) -> Vec<u64> {
+    let mut seen = HashSet::with_capacity(n * 2);
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let id = rng.next_u64();
+        if seen.insert(id) {
+            out.push(id);
+        }
+    }
+    out
+}
+
+/// A ⊆ B: `|A| = n_a`, `|B| = n_a + b_unique` (the unidirectional SetX workload).
+pub fn subset_pair(n_a: usize, b_unique: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let ids = distinct_ids(n_a + b_unique, &mut rng);
+    let a = ids[..n_a].to_vec();
+    let b = ids;
+    (a, b)
+}
+
+/// General overlap: `|A∩B| = n_common`, plus disjoint unique parts (bidirectional workload).
+pub fn overlap_pair(
+    n_common: usize,
+    a_unique: usize,
+    b_unique: usize,
+    seed: u64,
+) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let ids = distinct_ids(n_common + a_unique + b_unique, &mut rng);
+    let common = &ids[..n_common];
+    let a_only = &ids[n_common..n_common + a_unique];
+    let b_only = &ids[n_common + a_unique..];
+    let mut a = common.to_vec();
+    a.extend_from_slice(a_only);
+    let mut b = common.to_vec();
+    b.extend_from_slice(b_only);
+    (a, b)
+}
+
+/// Exact intersection of two id slices (reference answer for correctness checks).
+pub fn intersect(a: &[u64], b: &[u64]) -> Vec<u64> {
+    let bs: HashSet<u64> = b.iter().copied().collect();
+    let mut out: Vec<u64> = a.iter().copied().filter(|x| bs.contains(x)).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Exact difference `a \ b`.
+pub fn difference(a: &[u64], b: &[u64]) -> Vec<u64> {
+    let bs: HashSet<u64> = b.iter().copied().collect();
+    let mut out: Vec<u64> = a.iter().copied().filter(|x| !bs.contains(x)).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_pair_cardinalities() {
+        let (a, b) = subset_pair(1000, 37, 1);
+        assert_eq!(a.len(), 1000);
+        assert_eq!(b.len(), 1037);
+        assert_eq!(intersect(&a, &b).len(), 1000);
+        assert_eq!(difference(&b, &a).len(), 37);
+        assert_eq!(difference(&a, &b).len(), 0);
+    }
+
+    #[test]
+    fn overlap_pair_cardinalities() {
+        let (a, b) = overlap_pair(500, 20, 60, 2);
+        assert_eq!(a.len(), 520);
+        assert_eq!(b.len(), 560);
+        assert_eq!(intersect(&a, &b).len(), 500);
+        assert_eq!(difference(&a, &b).len(), 20);
+        assert_eq!(difference(&b, &a).len(), 60);
+    }
+
+    #[test]
+    fn seeds_reproduce_and_differ() {
+        let (a1, b1) = overlap_pair(100, 5, 5, 7);
+        let (a2, b2) = overlap_pair(100, 5, 5, 7);
+        let (a3, _) = overlap_pair(100, 5, 5, 8);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        assert_ne!(a1, a3);
+    }
+}

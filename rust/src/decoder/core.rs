@@ -1,0 +1,675 @@
+//! Decoder internals: CSR column cache, reverse lookup, lazy priority queue, pursuit loop.
+
+use super::{DecoderConfig, Pursuit};
+use crate::matrix::ColumnOracle;
+use std::collections::BinaryHeap;
+
+/// Which side of the protocol this decoder runs on. The canonical residue orientation is
+/// `r = M(1_{B\A} − 1_{B̂\A}) − M(1_{A\B} − 1_{Â\B})` (Fact 12): Bob's signal appears with a
+/// `+` sign and Alice's with a `−` sign, so Alice decodes the negated residue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// Decodes coordinates of the positively-signed component (Bob in the paper).
+    Positive,
+    /// Decodes coordinates of the negatively-signed component (Alice).
+    Negative,
+}
+
+impl Side {
+    #[inline]
+    fn sign(self) -> i32 {
+        match self {
+            Side::Positive => 1,
+            Side::Negative => -1,
+        }
+    }
+}
+
+/// Outcome of one `run` call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecodeStats {
+    pub iterations: usize,
+    pub sets: usize,
+    pub unsets: usize,
+    /// Residue (restricted to this decoder's view) reached exactly zero.
+    pub converged: bool,
+    /// No positive-gain move remained but the residue is nonzero.
+    pub stalled: bool,
+}
+
+/// CSR over `u32` indices.
+struct Csr {
+    offsets: Vec<u32>,
+    items: Vec<u32>,
+}
+
+impl Csr {
+    #[inline]
+    fn row(&self, i: usize) -> &[u32] {
+        &self.items[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+}
+
+#[derive(PartialEq, Eq)]
+struct HeapEntry {
+    gain: i32,
+    j: u32,
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.gain.cmp(&other.gain).then(other.j.cmp(&self.j))
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The matching-pursuit decoder over a fixed candidate set.
+///
+/// Construction caches every candidate's column (CSR) and builds the row→candidates reverse
+/// lookup table of Appendix B; afterwards the decoder never consults the matrix again, and
+/// each pursuit costs `O(m · avg_row_load · log n)` as analyzed in Theorem 14.
+pub struct MpDecoder {
+    /// Number of rows `l`.
+    l: u32,
+    /// Candidate ids (signal coordinates this side may decode; Theorem 9 restricts to its own set).
+    ids: Vec<u64>,
+    /// Candidate columns, CSR (j → rows).
+    cols: Csr,
+    /// Reverse lookup, CSR (row → candidate indices).
+    rev: Csr,
+    /// Current signal estimate bit per candidate.
+    x: Vec<bool>,
+    /// Current dot products `rᵀ m_j` in *own* orientation.
+    dot: Vec<i32>,
+    /// SMF-gated candidates (collision avoidance, §5.2): never auto-pursued.
+    banned: Vec<bool>,
+    /// Residue in own orientation (`sign · canonical`).
+    res: Vec<i32>,
+    l2_sq: i64,
+    side: Side,
+    config: DecoderConfig,
+    heap: BinaryHeap<HeapEntry>,
+    estimate_count: usize,
+    /// Epoch-stamped visited marks for sparse candidate enumeration (avoids O(n) clears).
+    seen: Vec<u32>,
+    epoch: u32,
+    /// Reusable (candidate, dot-before) buffer for `flip`.
+    scratch: Vec<(u32, i32)>,
+}
+
+impl MpDecoder {
+    /// Build a decoder for `candidates` (deduplicated ids) against matrix `oracle`.
+    pub fn new<C: ColumnOracle>(oracle: &C, candidates: &[u64], side: Side) -> Self {
+        let l = oracle.l();
+        let m = oracle.m() as usize;
+        let n = candidates.len();
+        let mut buf = vec![0u32; m.max(1)];
+
+        // Column CSR + row loads in one pass.
+        let mut col_offsets = Vec::with_capacity(n + 1);
+        let mut col_items = Vec::with_capacity(n * m);
+        let mut row_load = vec![0u32; l as usize + 1];
+        col_offsets.push(0u32);
+        for &id in candidates {
+            for &r in oracle.column_into(id, &mut buf) {
+                col_items.push(r);
+                row_load[r as usize + 1] += 1;
+            }
+            col_offsets.push(col_items.len() as u32);
+        }
+
+        // Reverse CSR via counting sort.
+        for i in 1..row_load.len() {
+            row_load[i] += row_load[i - 1];
+        }
+        let rev_offsets = row_load.clone();
+        let mut cursor = row_load;
+        let mut rev_items = vec![0u32; col_items.len()];
+        for j in 0..n {
+            let start = col_offsets[j] as usize;
+            let end = col_offsets[j + 1] as usize;
+            for &r in &col_items[start..end] {
+                rev_items[cursor[r as usize] as usize] = j as u32;
+                cursor[r as usize] += 1;
+            }
+        }
+
+        MpDecoder {
+            l,
+            ids: candidates.to_vec(),
+            cols: Csr { offsets: col_offsets, items: col_items },
+            rev: Csr { offsets: rev_offsets, items: rev_items },
+            x: vec![false; n],
+            dot: vec![0; n],
+            banned: vec![false; n],
+            res: vec![0; l as usize],
+            l2_sq: 0,
+            side,
+            config: DecoderConfig::default(),
+            heap: BinaryHeap::new(),
+            estimate_count: 0,
+            seen: vec![0; n],
+            epoch: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn set_config(&mut self, config: DecoderConfig) {
+        self.config = config;
+    }
+
+    pub fn num_candidates(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn candidate_ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// Mark candidates banned from automatic pursuit (SMF collision avoidance). The predicate
+    /// sees candidate ids. Passing `|_| false` clears all bans.
+    pub fn set_banned(&mut self, test: impl Fn(u64) -> bool) {
+        for (j, &id) in self.ids.iter().enumerate() {
+            self.banned[j] = test(id);
+        }
+        // Newly-banned candidates die lazily at pop time (their stored gain no longer
+        // matches); newly-unbanned ones must be (re)enqueued.
+        self.rebuild_heap();
+    }
+
+    /// Load a residue given in *canonical* orientation; recomputes dots and rebuilds the
+    /// queue (the per-round `O(|B| log |B|)` repopulation of Appendix B).
+    pub fn load_residue(&mut self, canonical: &[i32]) {
+        assert_eq!(canonical.len(), self.l as usize);
+        let s = self.side.sign();
+        self.l2_sq = 0;
+        for (dst, &v) in self.res.iter_mut().zip(canonical) {
+            *dst = s * v;
+            self.l2_sq += (*dst as i64) * (*dst as i64);
+        }
+        // Sparsity-aware dot refresh (§Perf-L3): late ping-pong rounds carry near-empty
+        // residues, so accumulating through the reverse table over nonzero rows only makes
+        // reloads near-free. Dense initial residues (support ≳ l/8) keep the cache-friendly
+        // forward scan — the hybrid beat either pure strategy in the bench log.
+        let support = self.res.iter().filter(|&&v| v != 0).count();
+        if support * 8 >= self.res.len() {
+            for j in 0..self.ids.len() {
+                let mut d = 0i32;
+                for &r in self.cols.row(j) {
+                    d += self.res[r as usize];
+                }
+                self.dot[j] = d;
+            }
+            self.rebuild_heap();
+            return;
+        }
+        self.dot.iter_mut().for_each(|d| *d = 0);
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.seen.iter_mut().for_each(|e| *e = 0);
+            self.epoch = 1;
+        }
+        self.heap.clear();
+        let mut touched: Vec<u32> = Vec::new();
+        for r in 0..self.res.len() {
+            let v = self.res[r];
+            if v == 0 {
+                continue;
+            }
+            for &j in self.rev.row(r) {
+                self.dot[j as usize] += v;
+                if self.seen[j as usize] != self.epoch {
+                    self.seen[j as usize] = self.epoch;
+                    touched.push(j);
+                }
+            }
+        }
+        let mut entries: Vec<HeapEntry> = Vec::with_capacity(touched.len());
+        for &j in &touched {
+            let g = self.gain(j as usize);
+            if g > 0 {
+                entries.push(HeapEntry { gain: g, j });
+            }
+        }
+        // Set coordinates whose rows all went quiet still need gain re-evaluation after
+        // reverts; the x-scan is a cheap O(n) bool pass.
+        for j in 0..self.ids.len() {
+            if self.x[j] && self.seen[j] != self.epoch {
+                let g = self.gain(j);
+                if g > 0 {
+                    entries.push(HeapEntry { gain: g, j: j as u32 });
+                }
+            }
+        }
+        self.heap = BinaryHeap::from(entries);
+    }
+
+    /// Export the current residue in canonical orientation.
+    pub fn export_residue(&self) -> Vec<i32> {
+        let s = self.side.sign();
+        self.res.iter().map(|&v| s * v).collect()
+    }
+
+    #[inline]
+    pub fn residue_is_zero(&self) -> bool {
+        self.l2_sq == 0
+    }
+
+    pub fn residue_l2_sq(&self) -> i64 {
+        self.l2_sq
+    }
+
+    /// Length of the residue vector (= l).
+    pub fn residue_len(&self) -> usize {
+        self.res.len()
+    }
+
+    pub fn residue_l1(&self) -> i64 {
+        self.res.iter().map(|&v| v.unsigned_abs() as i64).sum()
+    }
+
+    /// Current estimate set (ids with x = 1).
+    pub fn estimate(&self) -> Vec<u64> {
+        self.ids
+            .iter()
+            .zip(&self.x)
+            .filter(|(_, &on)| on)
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    pub fn estimate_len(&self) -> usize {
+        self.estimate_count
+    }
+
+    #[inline]
+    pub fn is_set_idx(&self, j: usize) -> bool {
+        self.x[j]
+    }
+
+    /// Gain of the (unique) legal move on candidate `j` under the configured pursuit norm:
+    /// the decrease of the residue norm if we flip `x_j`. Non-positive means "don't".
+    #[inline]
+    fn gain(&self, j: usize) -> i32 {
+        if self.banned[j] && !self.x[j] {
+            // SMF collision avoidance (§5.2) gates only *setting*; corrective unsets of an
+            // already-set coordinate must stay possible.
+            return i32::MIN;
+        }
+        self.gain_ungated(j)
+    }
+
+    /// `gain` evaluated against the decoder's current fields (used by `flip` with a
+    /// temporarily restored dot to obtain the pre-update gain).
+    #[inline]
+    fn gain_snapshot(&self, j: usize) -> i32 {
+        self.gain(j)
+    }
+
+    /// Gain ignoring the SMF gate (used by collision resolution to find tentative updates).
+    #[inline]
+    fn gain_ungated(&self, j: usize) -> i32 {
+        let mj = (self.cols.offsets[j + 1] - self.cols.offsets[j]) as i32;
+        if !self.x[j] {
+            // Setting x_j: r ← r − m_j. Modification 9 rule 2 (δ > 1/2 ⟺ 2·dot > m).
+            match self.config.pursuit {
+                Pursuit::L2 => 2 * self.dot[j] - mj,
+                Pursuit::L1 => self
+                    .cols
+                    .row(j)
+                    .iter()
+                    .map(|&r| if self.res[r as usize] >= 1 { 1 } else { -1 })
+                    .sum(),
+            }
+        } else {
+            // Unsetting x_j: r ← r + m_j. Modification 9 rule 1 (δ < −1/2).
+            if !self.config.allow_unset {
+                return i32::MIN;
+            }
+            match self.config.pursuit {
+                Pursuit::L2 => -2 * self.dot[j] - mj,
+                Pursuit::L1 => self
+                    .cols
+                    .row(j)
+                    .iter()
+                    .map(|&r| if self.res[r as usize] <= -1 { 1 } else { -1 })
+                    .sum(),
+            }
+        }
+    }
+
+    fn rebuild_heap(&mut self) {
+        self.heap.clear();
+        let mut entries = Vec::new();
+        for j in 0..self.ids.len() {
+            let g = self.gain(j);
+            if g > 0 {
+                entries.push(HeapEntry { gain: g, j: j as u32 });
+            }
+        }
+        self.heap = BinaryHeap::from(entries);
+    }
+
+    /// Flip candidate `j` (set if currently 0, unset if 1), updating residue, dots, norms,
+    /// and the queue. This is the "update" stage of Procedure 1 under Modification 9.
+    fn flip(&mut self, j: usize) {
+        let setting = !self.x[j];
+        let delta: i32 = if setting { -1 } else { 1 }; // residue change per touched row
+        self.x[j] = setting;
+        if setting {
+            self.estimate_count += 1;
+        } else {
+            self.estimate_count -= 1;
+        }
+
+        let start = self.cols.offsets[j] as usize;
+        let end = self.cols.offsets[j + 1] as usize;
+        // First pass: update residue rows and dots, collecting each affected candidate
+        // once (epoch stamps) together with its pre-update dot.
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.seen.iter_mut().for_each(|e| *e = 0);
+            self.epoch = 1;
+        }
+        self.scratch.clear();
+        for idx in start..end {
+            let r = self.cols.items[idx] as usize;
+            let old = self.res[r];
+            let new = old + delta;
+            self.res[r] = new;
+            self.l2_sq += (new as i64) * (new as i64) - (old as i64) * (old as i64);
+            // Reverse lookup: every candidate whose column touches row r sees its dot move.
+            for &jj in self.rev.row(r) {
+                let ju = jj as usize;
+                if self.seen[ju] != self.epoch {
+                    self.seen[ju] = self.epoch;
+                    self.scratch.push((jj, self.dot[ju]));
+                }
+                self.dot[ju] += delta;
+            }
+        }
+        // Second pass: re-enqueue only candidates whose gain *increased* (or turned
+        // positive). Decreased gains die lazily: a stale higher-priority entry already
+        // sits in the heap and is corrected at pop time, so skipping those pushes is
+        // safe — and they are the overwhelming majority as the residue drains (§Perf-L3).
+        let scratch = std::mem::take(&mut self.scratch);
+        for &(jj, dot_before) in &scratch {
+            let ju = jj as usize;
+            let g = self.gain(ju);
+            if g <= 0 {
+                continue;
+            }
+            let increased = match self.config.pursuit {
+                Pursuit::L2 => {
+                    // g_old under the pre-update dot (x state of jj is unchanged by this
+                    // flip unless jj == j, which run() re-pops anyway).
+                    let saved = self.dot[ju];
+                    self.dot[ju] = dot_before;
+                    let g_old = self.gain_snapshot(ju);
+                    self.dot[ju] = saved;
+                    g > g_old
+                }
+                // L1 gains are not linear in the dot; push conservatively.
+                Pursuit::L1 => true,
+            };
+            if increased {
+                self.heap.push(HeapEntry { gain: g, j: jj });
+            }
+        }
+        self.scratch = scratch;
+        // Bound heap growth (lazy deletion can balloon under adversarial churn).
+        if self.heap.len() > 64 + 16 * self.ids.len() {
+            self.rebuild_heap();
+        }
+    }
+
+    /// Force-set or force-unset a candidate regardless of gain or ban (used by the
+    /// collision-resolution step of §5.2 and by tests). No-op if already in that state.
+    pub fn force(&mut self, id: u64, set: bool) -> bool {
+        if let Some(j) = self.ids.iter().position(|&x| x == id) {
+            if self.x[j] != set {
+                self.flip(j);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Run the pursuit loop until the residue is zero, no positive-gain move remains, or the
+    /// iteration cap is hit.
+    pub fn run(&mut self) -> DecodeStats {
+        let mut stats = DecodeStats::default();
+        let cap = if self.config.max_iters == 0 {
+            8 * self.ids.len() + 64
+        } else {
+            self.config.max_iters
+        };
+        while stats.iterations < cap {
+            if self.l2_sq == 0 {
+                stats.converged = true;
+                return stats;
+            }
+            let Some(top) = self.heap.pop() else {
+                stats.stalled = true;
+                return stats;
+            };
+            let j = top.j as usize;
+            let g = self.gain(j);
+            if g != top.gain {
+                // Stale entry: re-enqueue the fresh gain if still profitable.
+                if g > 0 {
+                    self.heap.push(HeapEntry { gain: g, j: top.j });
+                }
+                continue;
+            }
+            if g <= 0 {
+                continue;
+            }
+            self.flip(j);
+            stats.iterations += 1;
+            if self.x[j] {
+                stats.sets += 1;
+            } else {
+                stats.unsets += 1;
+            }
+        }
+        stats.converged = self.l2_sq == 0;
+        stats.stalled = !stats.converged;
+        stats
+    }
+
+    /// Switch pursuit norm mid-decode (the Appendix C.2 fallback flips to L1 pursuit when the
+    /// L2 loop stalls on ECC-damaged residues). Rebuilds the queue.
+    pub fn switch_pursuit(&mut self, pursuit: Pursuit) {
+        self.config.pursuit = pursuit;
+        self.rebuild_heap();
+    }
+
+    /// Clear the signal estimate (x := 0) without touching the loaded residue state.
+    /// Callers then `load_residue` to start a fresh decode on the same candidate set —
+    /// the pattern benches and multi-session reuse rely on (construction is the expensive
+    /// part: CSR + reverse lookup).
+    pub fn reset_signal(&mut self) {
+        self.x.iter_mut().for_each(|b| *b = false);
+        self.estimate_count = 0;
+    }
+
+    /// Escape hatch for pairwise local minima: when two candidates' columns overlap in
+    /// m-2 rows, swapping them is invisible to single-move greedy pursuit (both moves have
+    /// gain -1). Kicking out the set coordinate with the most negative dot lets the next
+    /// `run` complete the swap (the true coordinate then has the top gain). Returns the
+    /// kicked id, or None if no set coordinate has negative evidence.
+    pub fn kick_worst(&mut self) -> Option<u64> {
+        let mut worst: Option<(i32, usize)> = None;
+        for j in 0..self.ids.len() {
+            if self.x[j] && self.dot[j] < 0 && worst.map_or(true, |(d, _)| self.dot[j] < d) {
+                worst = Some((self.dot[j], j));
+            }
+        }
+        let (_, j) = worst?;
+        self.flip(j);
+        Some(self.ids[j])
+    }
+
+    /// Banned (SMF-positive) candidates that currently *want* pursuit — i.e. would be set
+    /// were they not gated. These are exactly the coordinates the §5.2 collision-resolution
+    /// step tentatively updates and verifies via the "last inquiry".
+    pub fn banned_positive_gain(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for j in 0..self.ids.len() {
+            if self.banned[j] && !self.x[j] && self.gain_ungated(j) > 0 {
+                out.push(self.ids[j]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::CsMatrix;
+    use crate::sketch::Sketch;
+
+    /// Plant B\A of size d among n candidates; check exact recovery (unidirectional core).
+    fn planted_recovery(n: u64, d: usize, l: u32, m: u32, seed: u64) -> bool {
+        let mat = CsMatrix::new(l, m, seed);
+        let candidates: Vec<u64> = (0..n).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15) ^ seed).collect();
+        let planted: Vec<u64> = candidates.iter().step_by((n as usize / d).max(1)).copied().take(d).collect();
+        let measurement = Sketch::encode(mat, &planted);
+        let mut dec = MpDecoder::new(&mat, &candidates, Side::Positive);
+        dec.set_config(DecoderConfig::commonsense());
+        let canonical: Vec<i32> = measurement.counts.clone();
+        dec.load_residue(&canonical);
+        let stats = dec.run();
+        if !stats.converged {
+            return false;
+        }
+        let mut got = dec.estimate();
+        got.sort_unstable();
+        let mut want = planted;
+        want.sort_unstable();
+        got == want
+    }
+
+    #[test]
+    fn recovers_planted_signal_l2() {
+        for seed in 0..5 {
+            assert!(planted_recovery(20_000, 100, 1600, 7, seed), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn recovers_larger_d() {
+        assert!(planted_recovery(50_000, 1000, 12_000, 7, 3));
+    }
+
+    #[test]
+    fn ssmp_also_recovers() {
+        let mat = CsMatrix::new(1600, 7, 11);
+        let candidates: Vec<u64> = (0..20_000u64).collect();
+        let planted: Vec<u64> = (0..100u64).map(|i| i * 199).collect();
+        let measurement = Sketch::encode(mat, &planted);
+        let mut dec = MpDecoder::new(&mat, &candidates, Side::Positive);
+        dec.set_config(DecoderConfig::ssmp());
+        dec.load_residue(&measurement.counts);
+        let stats = dec.run();
+        assert!(stats.converged);
+        let mut got = dec.estimate();
+        got.sort_unstable();
+        let mut want = planted;
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn negative_side_decodes_negated_signal() {
+        // Canonical residue −M·1_S: Alice (Side::Negative) must recover S.
+        let mat = CsMatrix::new(1000, 5, 21);
+        let candidates: Vec<u64> = (0..10_000u64).collect();
+        let planted: Vec<u64> = (0..60u64).map(|i| i * 151 + 3).collect();
+        let sk = Sketch::encode(mat, &planted);
+        let canonical: Vec<i32> = sk.counts.iter().map(|&c| -c).collect();
+        let mut dec = MpDecoder::new(&mat, &candidates, Side::Negative);
+        dec.load_residue(&canonical);
+        let stats = dec.run();
+        assert!(stats.converged);
+        assert_eq!(dec.estimate().len(), 60);
+        // Exported residue must be canonical-zero.
+        assert!(dec.export_residue().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn banned_candidates_are_skipped_until_unbanned() {
+        let mat = CsMatrix::new(400, 5, 31);
+        let candidates: Vec<u64> = (0..5_000u64).collect();
+        let planted: Vec<u64> = vec![10, 20, 30, 40];
+        let sk = Sketch::encode(mat, &planted);
+        let mut dec = MpDecoder::new(&mat, &candidates, Side::Positive);
+        dec.load_residue(&sk.counts);
+        dec.set_banned(|id| id == 10);
+        dec.run();
+        assert!(!dec.estimate().contains(&10));
+        // Unban and the decoder finishes the job.
+        dec.set_banned(|_| false);
+        dec.load_residue(&dec.export_residue());
+        let stats = dec.run();
+        assert!(stats.converged);
+        let mut got = dec.estimate();
+        got.sort_unstable();
+        assert_eq!(got, planted);
+    }
+
+    #[test]
+    fn force_roundtrip_restores_residue() {
+        let mat = CsMatrix::new(300, 5, 41);
+        let candidates: Vec<u64> = (0..1000u64).collect();
+        let sk = Sketch::encode(mat, &[7, 8]);
+        let mut dec = MpDecoder::new(&mat, &candidates, Side::Positive);
+        dec.load_residue(&sk.counts);
+        let before = dec.residue_l2_sq();
+        assert!(dec.force(500, true));
+        assert!(dec.residue_l2_sq() != before);
+        assert!(dec.force(500, false));
+        assert_eq!(dec.residue_l2_sq(), before);
+        assert!(!dec.force(500, false)); // already unset → no-op
+    }
+
+    #[test]
+    fn bmp_cannot_correct_its_own_errors_but_full_mp_can() {
+        // Statistical statement: at a marginal l, full MP (with unsets) should succeed at
+        // least as often as BMP, and strictly more over enough seeds.
+        let mut bmp_ok = 0;
+        let mut mp_ok = 0;
+        for seed in 0..30u64 {
+            let mat = CsMatrix::new(700, 5, seed);
+            let candidates: Vec<u64> = (0..4_000u64).collect();
+            let planted: Vec<u64> = (0..50u64).map(|i| i * 79 + seed).collect();
+            let sk = Sketch::encode(mat, &planted);
+            for bmp in [false, true] {
+                let mut dec = MpDecoder::new(&mat, &candidates, Side::Positive);
+                dec.set_config(if bmp { DecoderConfig::bmp() } else { DecoderConfig::commonsense() });
+                dec.load_residue(&sk.counts);
+                let stats = dec.run();
+                let mut got = dec.estimate();
+                got.sort_unstable();
+                let mut want = planted.clone();
+                want.sort_unstable();
+                if stats.converged && got == want {
+                    if bmp {
+                        bmp_ok += 1;
+                    } else {
+                        mp_ok += 1;
+                    }
+                }
+            }
+        }
+        assert!(mp_ok >= bmp_ok, "mp {mp_ok} < bmp {bmp_ok}");
+        assert!(mp_ok >= 25, "full MP too weak at this l: {mp_ok}/30");
+    }
+}

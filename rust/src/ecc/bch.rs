@@ -1,0 +1,273 @@
+//! BCH syndrome computation and decoding (Berlekamp–Massey + Chien search).
+//!
+//! A `BchSyndrome` summarizes a GF(2) vector (given by the *positions* of its ones) into the
+//! odd power sums `S_k = Σ_{i∈ones} (α^i)^k`, k = 1, 3, …, 2t−1. XORing two parties'
+//! syndromes yields the syndrome of the XOR of their vectors (linearity), whose support can
+//! be decoded exactly as long as it has weight ≤ t — this is PinSketch, and also how the
+//! Appendix C.2 parity patch travels.
+
+use super::gf::GF2m;
+use std::sync::Arc;
+
+/// Decoding failure modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyndromeDecodeError {
+    /// The error-locator polynomial degree exceeded the capacity t.
+    TooManyErrors,
+    /// Chien search found fewer roots than the locator degree (≥ t+1 actual errors).
+    RootCountMismatch,
+}
+
+impl std::fmt::Display for SyndromeDecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::TooManyErrors => write!(f, "error weight exceeds BCH capacity"),
+            Self::RootCountMismatch => write!(f, "error locator has non-field roots"),
+        }
+    }
+}
+
+impl std::error::Error for SyndromeDecodeError {}
+
+/// Syndromes of a GF(2) vector with correction capacity `t` over GF(2^m).
+#[derive(Clone)]
+pub struct BchSyndrome {
+    pub gf: Arc<GF2m>,
+    pub t: usize,
+    /// Odd syndromes S_1, S_3, …, S_{2t−1}.
+    pub odd: Vec<u32>,
+}
+
+impl BchSyndrome {
+    /// Compute syndromes of the vector with ones at `positions` (each < 2^m − 1).
+    pub fn compute(gf: Arc<GF2m>, t: usize, positions: impl IntoIterator<Item = u32>) -> Self {
+        let mut odd = vec![0u32; t];
+        for pos in positions {
+            debug_assert!(pos < gf.n, "position {pos} out of field range {}", gf.n);
+            let x = gf.alpha_pow(pos as u64); // α^pos
+            let x2 = gf.sq(x);
+            let mut xp = x; // x^(2j+1), starting at j=0
+            for s in odd.iter_mut() {
+                *s ^= xp;
+                xp = gf.mul(xp, x2);
+            }
+        }
+        BchSyndrome { gf, t, odd }
+    }
+
+    /// Communication size in bits: t syndromes of m bits each.
+    pub fn size_bits(&self) -> usize {
+        self.t * self.gf.m as usize
+    }
+
+    /// Cellwise XOR — the syndrome of the XOR (symmetric difference) of the two vectors.
+    pub fn xor(&self, other: &BchSyndrome) -> BchSyndrome {
+        assert_eq!(self.t, other.t);
+        assert_eq!(self.gf.m, other.gf.m);
+        BchSyndrome {
+            gf: self.gf.clone(),
+            t: self.t,
+            odd: self.odd.iter().zip(&other.odd).map(|(a, b)| a ^ b).collect(),
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.odd.iter().all(|&s| s == 0)
+    }
+
+    /// Serialize to packed bytes (t·m bits, little-endian bit order).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let m = self.gf.m as usize;
+        let nbits = self.t * m;
+        let mut out = vec![0u8; nbits.div_ceil(8)];
+        for (i, &s) in self.odd.iter().enumerate() {
+            for b in 0..m {
+                if s >> b & 1 == 1 {
+                    let bit = i * m + b;
+                    out[bit / 8] |= 1 << (bit % 8);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(gf: Arc<GF2m>, t: usize, data: &[u8]) -> Option<Self> {
+        let m = gf.m as usize;
+        let nbits = t * m;
+        if data.len() < nbits.div_ceil(8) {
+            return None;
+        }
+        let mut odd = vec![0u32; t];
+        for (i, s) in odd.iter_mut().enumerate() {
+            for b in 0..m {
+                let bit = i * m + b;
+                if data[bit / 8] >> (bit % 8) & 1 == 1 {
+                    *s |= 1 << b;
+                }
+            }
+        }
+        Some(BchSyndrome { gf, t, odd })
+    }
+
+    /// Decode the support of the underlying vector, assuming its weight is ≤ t.
+    /// `search_limit` restricts the Chien search to positions `< search_limit`
+    /// (positions at or beyond the limit count as missing roots → error).
+    pub fn decode(&self, search_limit: u32) -> Result<Vec<u32>, SyndromeDecodeError> {
+        let gf = &self.gf;
+        if self.is_zero() {
+            return Ok(Vec::new());
+        }
+        // Expand to the full syndrome sequence S_1..S_2t using S_{2k} = S_k².
+        let two_t = 2 * self.t;
+        let mut s = vec![0u32; two_t + 1]; // 1-indexed
+        for (j, &v) in self.odd.iter().enumerate() {
+            s[2 * j + 1] = v;
+        }
+        for k in 1..=self.t {
+            s[2 * k] = gf.sq(s[k]);
+        }
+
+        // Berlekamp–Massey: find the minimal LFSR Λ(x) generating S_1..S_2t.
+        let mut lambda = vec![0u32; two_t + 1];
+        let mut b = vec![0u32; two_t + 1];
+        lambda[0] = 1;
+        b[0] = 1;
+        let mut deg_l = 0usize;
+        let mut mm = 1usize; // steps since last update
+        let mut bb = 1u32; // last nonzero discrepancy
+        for n in 0..two_t {
+            // Discrepancy d = S_{n+1} + Σ_{i=1..deg_l} Λ_i · S_{n+1−i}
+            let mut d = s[n + 1];
+            for i in 1..=deg_l {
+                d ^= gf.mul(lambda[i], s[n + 1 - i]);
+            }
+            if d == 0 {
+                mm += 1;
+            } else if 2 * deg_l <= n {
+                let t_poly = lambda.clone();
+                let coef = gf.div(d, bb);
+                for i in 0..=two_t - mm {
+                    lambda[i + mm] ^= gf.mul(coef, b[i]);
+                }
+                deg_l = n + 1 - deg_l;
+                b = t_poly;
+                bb = d;
+                mm = 1;
+            } else {
+                let coef = gf.div(d, bb);
+                for i in 0..=two_t - mm {
+                    lambda[i + mm] ^= gf.mul(coef, b[i]);
+                }
+                mm += 1;
+            }
+        }
+        if deg_l > self.t {
+            return Err(SyndromeDecodeError::TooManyErrors);
+        }
+        lambda.truncate(deg_l + 1);
+
+        // Chien search: position i is an error iff Λ(α^{−i}) = 0.
+        let mut roots = Vec::with_capacity(deg_l);
+        for i in 0..search_limit.min(gf.n) {
+            let x = gf.alpha_pow((gf.n - i % gf.n) as u64 % gf.n as u64); // α^{−i}
+            if gf.poly_eval(&lambda, x) == 0 {
+                roots.push(i);
+                if roots.len() == deg_l {
+                    break;
+                }
+            }
+        }
+        if roots.len() != deg_l {
+            return Err(SyndromeDecodeError::RootCountMismatch);
+        }
+        Ok(roots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Xoshiro256;
+
+    fn gf13() -> Arc<GF2m> {
+        Arc::new(GF2m::new(13))
+    }
+
+    #[test]
+    fn zero_vector_decodes_empty() {
+        let s = BchSyndrome::compute(gf13(), 8, std::iter::empty());
+        assert!(s.is_zero());
+        assert_eq!(s.decode(8000).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn single_error_roundtrip() {
+        for pos in [0u32, 1, 100, 8000] {
+            let s = BchSyndrome::compute(gf13(), 4, [pos]);
+            assert_eq!(s.decode(8191).unwrap(), vec![pos], "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn random_supports_roundtrip_up_to_t() {
+        let gf = gf13();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for t in [4usize, 16, 40] {
+            for trial in 0..5 {
+                let w = (t as u64).min(1 + rng.gen_range(t as u64));
+                let mut positions: Vec<u32> = Vec::new();
+                while positions.len() < w as usize {
+                    let p = rng.gen_range(8000) as u32;
+                    if !positions.contains(&p) {
+                        positions.push(p);
+                    }
+                }
+                let s = BchSyndrome::compute(gf.clone(), t, positions.iter().copied());
+                let mut got = s.decode(8191).expect("decode");
+                got.sort_unstable();
+                positions.sort_unstable();
+                assert_eq!(got, positions, "t={t} trial={trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_gives_symmetric_difference() {
+        let gf = gf13();
+        let alice = [5u32, 77, 1000, 4000];
+        let bob = [77u32, 1000, 2222];
+        let sa = BchSyndrome::compute(gf.clone(), 6, alice.iter().copied());
+        let sb = BchSyndrome::compute(gf.clone(), 6, bob.iter().copied());
+        let mut diff = sa.xor(&sb).decode(8191).unwrap();
+        diff.sort_unstable();
+        assert_eq!(diff, vec![5, 2222, 4000]);
+    }
+
+    #[test]
+    fn overload_detected() {
+        let gf = gf13();
+        let t = 4;
+        // Weight 12 ≫ t=4: must error out, not silently return wrong positions.
+        let positions: Vec<u32> = (0..12).map(|i| i * 321 + 7).collect();
+        let s = BchSyndrome::compute(gf, t, positions);
+        assert!(s.decode(8191).is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let gf = gf13();
+        let s = BchSyndrome::compute(gf.clone(), 5, [3u32, 999, 7777]);
+        let bytes = s.to_bytes();
+        assert_eq!(bytes.len(), (5 * 13usize).div_ceil(8));
+        let back = BchSyndrome::from_bytes(gf, 5, &bytes).unwrap();
+        assert_eq!(back.odd, s.odd);
+    }
+
+    #[test]
+    fn search_limit_respected() {
+        let gf = gf13();
+        let s = BchSyndrome::compute(gf, 2, [6000u32]);
+        // Limit below the error position → root not found → error, not a wrong answer.
+        assert!(s.decode(100).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! GF(2^m) via log/antilog tables, m ∈ [3, 16].
+
+/// Primitive polynomials (low bits; bit m implied) — the standard table used by the Linux
+/// kernel BCH module, among others.
+fn primitive_poly(m: u32) -> u32 {
+    match m {
+        3 => 0b1011,
+        4 => 0b10011,
+        5 => 0b100101,
+        6 => 0b1000011,
+        7 => 0b10001001,
+        8 => 0x11D,
+        9 => 0x211,
+        10 => 0x409,
+        11 => 0x805,
+        12 => 0x1053,
+        13 => 0x201B,
+        14 => 0x4443,
+        15 => 0x8003,
+        16 => 0x1100B,
+        _ => panic!("unsupported GF(2^{m})"),
+    }
+}
+
+/// The field GF(2^m). Elements are `u32` in `[0, 2^m)`; `0` is the additive identity,
+/// `alpha = 2` (the polynomial `x`) is a primitive element.
+#[derive(Clone)]
+pub struct GF2m {
+    pub m: u32,
+    /// Field size minus one (the multiplicative group order).
+    pub n: u32,
+    exp: Vec<u32>, // exp[i] = alpha^i, doubled to avoid a mod in mul
+    log: Vec<u32>, // log[x] = discrete log of x (log[0] unused)
+}
+
+impl GF2m {
+    pub fn new(m: u32) -> Self {
+        assert!((3..=16).contains(&m));
+        let poly = primitive_poly(m);
+        let n = (1u32 << m) - 1;
+        let mut exp = vec![0u32; 2 * n as usize];
+        let mut log = vec![0u32; (n + 1) as usize];
+        let mut x = 1u32;
+        for i in 0..n {
+            exp[i as usize] = x;
+            log[x as usize] = i;
+            x <<= 1;
+            if x & (1 << m) != 0 {
+                x ^= poly;
+            }
+        }
+        for i in 0..n {
+            exp[(n + i) as usize] = exp[i as usize];
+        }
+        GF2m { m, n, exp, log }
+    }
+
+    /// alpha^i (i may be ≥ n; reduced mod n).
+    #[inline]
+    pub fn alpha_pow(&self, i: u64) -> u32 {
+        self.exp[(i % self.n as u64) as usize]
+    }
+
+    #[inline]
+    pub fn mul(&self, a: u32, b: u32) -> u32 {
+        if a == 0 || b == 0 {
+            0
+        } else {
+            self.exp[(self.log[a as usize] + self.log[b as usize]) as usize]
+        }
+    }
+
+    #[inline]
+    pub fn sq(&self, a: u32) -> u32 {
+        self.mul(a, a)
+    }
+
+    #[inline]
+    pub fn inv(&self, a: u32) -> u32 {
+        assert!(a != 0, "inverse of zero");
+        self.exp[(self.n - self.log[a as usize]) as usize]
+    }
+
+    #[inline]
+    pub fn div(&self, a: u32, b: u32) -> u32 {
+        if a == 0 {
+            0
+        } else {
+            self.exp[(self.log[a as usize] + self.n - self.log[b as usize]) as usize]
+        }
+    }
+
+    /// Discrete log (a ≠ 0).
+    #[inline]
+    pub fn dlog(&self, a: u32) -> u32 {
+        debug_assert!(a != 0);
+        self.log[a as usize]
+    }
+
+    /// Evaluate polynomial `coeffs[0] + coeffs[1]·x + …` at `x`.
+    pub fn poly_eval(&self, coeffs: &[u32], x: u32) -> u32 {
+        let mut acc = 0u32;
+        for &c in coeffs.iter().rev() {
+            acc = self.mul(acc, x) ^ c;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplicative_group_is_cyclic_of_full_order() {
+        for m in [3u32, 8, 13] {
+            let gf = GF2m::new(m);
+            // alpha generates all n distinct nonzero elements.
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..gf.n as u64 {
+                assert!(seen.insert(gf.alpha_pow(i)), "m={m} repeat at {i}");
+            }
+            assert_eq!(gf.alpha_pow(gf.n as u64), 1);
+        }
+    }
+
+    #[test]
+    fn field_axioms_spot_checks() {
+        let gf = GF2m::new(10);
+        let n = gf.n;
+        for a in [1u32, 2, 3, 57, n - 1, n] {
+            let a = a.min(n);
+            assert_eq!(gf.mul(a, gf.inv(a)), 1, "a={a}");
+            assert_eq!(gf.mul(a, 1), a);
+            assert_eq!(gf.mul(a, 0), 0);
+            for b in [1u32, 5, 1000.min(n)] {
+                assert_eq!(gf.mul(a, b), gf.mul(b, a));
+                assert_eq!(gf.div(gf.mul(a, b), b), a);
+            }
+        }
+    }
+
+    #[test]
+    fn frobenius_squaring_is_linear() {
+        // (a + b)^2 = a^2 + b^2 in characteristic 2.
+        let gf = GF2m::new(12);
+        for (a, b) in [(3u32, 77u32), (100, 200), (4095, 1)] {
+            assert_eq!(gf.sq(a ^ b), gf.sq(a) ^ gf.sq(b));
+        }
+    }
+
+    #[test]
+    fn poly_eval_matches_manual() {
+        let gf = GF2m::new(8);
+        // p(x) = 1 + 3x + 7x^2 at x = 5: 1 ^ mul(3,5) ^ mul(7, mul(5,5))
+        let manual = 1 ^ gf.mul(3, 5) ^ gf.mul(7, gf.mul(5, 5));
+        assert_eq!(gf.poly_eval(&[1, 3, 7], 5), manual);
+    }
+}

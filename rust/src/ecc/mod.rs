@@ -1,0 +1,19 @@
+//! Error-correction substrate: GF(2^m) arithmetic and BCH *syndrome* codes.
+//!
+//! Two consumers in this repo:
+//! * **Appendix C.2** — the quotient-parity patch of the statistical-truncation codec:
+//!   Alice sends BCH syndromes of her parity bit-vector; Bob XORs them with his own
+//!   syndromes, decodes the (sparse) difference via Berlekamp–Massey + Chien search, and
+//!   repairs the mismatching sketch coordinates.
+//! * **PinSketch** (§8.2) — the classic ECC-based SetR baseline: syndromes of a set's
+//!   characteristic vector; the symmetric difference is the decoded error-location set.
+//!
+//! Syndromes are linear over GF(2), and in characteristic 2 `S_{2k} = S_k²`, so only the odd
+//! syndromes `S_1, S_3, …, S_{2t−1}` need to be communicated — `t·m` bits for capacity `t`
+//! (exactly PinSketch's communication cost).
+
+mod bch;
+mod gf;
+
+pub use bch::{BchSyndrome, SyndromeDecodeError};
+pub use gf::GF2m;

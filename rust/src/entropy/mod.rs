@@ -1,0 +1,112 @@
+//! Entropy coding (Appendix C): rANS, Skellam symbol models, statistical truncation.
+//!
+//! Almost every CommonSense message is a vector of small integers whose per-coordinate
+//! distribution both sides can (approximately) agree on:
+//!
+//! * residues `r⃗_(t)` are coordinatewise ≈ Skellam(μ₁, μ₂) with parameters estimated by the
+//!   *sender* via the method of moments (μ̂₁ = (S²+X̄)/2, μ̂₂ = (S²−X̄)/2) and shipped in the
+//!   header — 8 bytes buy both sides the same model ([`residue`]);
+//! * Alice's sketch `M·1_A` is huge per-coordinate (Poisson(|A|m/l)) but *shares almost all
+//!   its information with Bob's* `M·1_B`; the statistical-truncation codec ([`truncate`])
+//!   transmits only `X mod W` plus a BCH parity patch (Appendix C.2).
+//!
+//! The coder is rANS (range asymmetric numeral systems) with 12-bit quantized frequencies —
+//! the paper's choice [12, 66] — implemented from scratch in [`rans`].
+
+pub mod rans;
+pub mod residue;
+pub mod skellam;
+pub mod truncate;
+
+pub use rans::{RansDecoder, RansEncoder, SymbolModel};
+pub use residue::{compress_residue, decompress_residue};
+pub use skellam::{skellam_pmf, skellam_range, SkellamParams};
+pub use truncate::{compress_sketch, recover_sketch, SketchCodecParams, SketchMsg};
+
+/// Shannon entropy (bits/symbol) of a pmf — used in analysis and EXPERIMENTS.md tables.
+pub fn entropy_bits(pmf: &[f64]) -> f64 {
+    pmf.iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.log2())
+        .sum()
+}
+
+/// Zigzag-encode a signed integer into an unsigned one (small |v| → small code).
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// LEB128 varint append.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// LEB128 varint read; returns (value, bytes consumed) or None on truncation.
+pub fn get_varint(data: &[u8]) -> Option<(u64, usize)> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    for (i, &b) in data.iter().enumerate() {
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+        shift += 7;
+        if shift >= 64 {
+            return None;
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [-1i64, 0, 1, -100, 100, i64::MIN / 2, i64::MAX / 2] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let values = [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX];
+        for &v in &values {
+            put_varint(&mut buf, v);
+        }
+        let mut off = 0;
+        for &v in &values {
+            let (got, used) = get_varint(&buf[off..]).unwrap();
+            assert_eq!(got, v);
+            off += used;
+        }
+        assert_eq!(off, buf.len());
+        assert!(get_varint(&[0x80]).is_none(), "truncated varint must fail");
+    }
+
+    #[test]
+    fn entropy_of_uniform() {
+        let pmf = vec![0.25; 4];
+        assert!((entropy_bits(&pmf) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,331 @@
+//! rANS — range asymmetric numeral systems [Duda 2015], 32-bit state, byte renormalization.
+//!
+//! The paper's implementation uses rANS [66] "requiring only one integer multiplication per
+//! symbol"; ours follows the same classic layout (Fabian Giesen's `rans_byte` construction):
+//! encoding runs over the symbols in reverse, the byte stream is then reversed so the
+//! decoder streams forward.
+
+/// Frequency scale: all models quantize to 2^12 total.
+pub const SCALE_BITS: u32 = 12;
+const TOT: u32 = 1 << SCALE_BITS;
+const RANS_L: u32 = 1 << 23; // normalized interval lower bound
+
+/// A quantized symbol distribution usable by both encoder and decoder.
+#[derive(Clone, Debug)]
+pub struct SymbolModel {
+    freqs: Vec<u32>,
+    cum: Vec<u32>,        // cum[s] = Σ_{s'<s} freqs[s'], len = alphabet+1, cum[last] = TOT
+    slot2sym: Vec<u16>,   // TOT entries
+}
+
+impl SymbolModel {
+    /// Quantize a pmf to 12-bit frequencies (every symbol gets ≥ 1 so it stays encodable).
+    pub fn from_pmf(pmf: &[f64]) -> Self {
+        assert!(!pmf.is_empty() && pmf.len() <= TOT as usize, "alphabet size {}", pmf.len());
+        let sum: f64 = pmf.iter().map(|p| p.max(0.0)).sum();
+        let sum = if sum > 0.0 { sum } else { 1.0 };
+        let n = pmf.len();
+        let mut freqs: Vec<u32> = pmf
+            .iter()
+            .map(|&p| ((p.max(0.0) / sum) * TOT as f64).round().max(1.0) as u32)
+            .collect();
+        // Fix the total to exactly TOT by nudging the largest entries.
+        loop {
+            let total: i64 = freqs.iter().map(|&f| f as i64).sum();
+            match total.cmp(&(TOT as i64)) {
+                std::cmp::Ordering::Equal => break,
+                std::cmp::Ordering::Greater => {
+                    // Shave from the largest entry that stays ≥ 1.
+                    let excess = (total - TOT as i64) as u32;
+                    let (idx, _) = freqs
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, &f)| f)
+                        .unwrap();
+                    let take = excess.min(freqs[idx] - 1).max(1);
+                    freqs[idx] -= take.min(freqs[idx] - 1);
+                    if freqs[idx] == 1 && excess > 0 && n == 1 {
+                        panic!("cannot quantize: alphabet of 1 needs TOT");
+                    }
+                }
+                std::cmp::Ordering::Less => {
+                    let deficit = (TOT as i64 - total) as u32;
+                    let (idx, _) = freqs
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, &f)| f)
+                        .unwrap();
+                    freqs[idx] += deficit;
+                }
+            }
+        }
+        Self::from_freqs(freqs)
+    }
+
+    /// Build from already-quantized frequencies summing to 2^12.
+    pub fn from_freqs(freqs: Vec<u32>) -> Self {
+        let total: u32 = freqs.iter().sum();
+        assert_eq!(total, TOT, "frequencies must sum to {TOT}");
+        let mut cum = Vec::with_capacity(freqs.len() + 1);
+        cum.push(0u32);
+        for &f in &freqs {
+            cum.push(cum.last().unwrap() + f);
+        }
+        let mut slot2sym = vec![0u16; TOT as usize];
+        for (s, w) in freqs.iter().enumerate() {
+            for slot in cum[s]..cum[s] + w {
+                slot2sym[slot as usize] = s as u16;
+            }
+        }
+        SymbolModel { freqs, cum, slot2sym }
+    }
+
+    /// Build from an empirical histogram (smoothed so every symbol stays encodable).
+    pub fn from_histogram(counts: &[u64]) -> Self {
+        let pmf: Vec<f64> = counts.iter().map(|&c| c as f64 + 0.2).collect();
+        Self::from_pmf(&pmf)
+    }
+
+    pub fn alphabet_size(&self) -> usize {
+        self.freqs.len()
+    }
+
+    /// Serialize the quantized table (2 bytes/symbol) — what a histogram-mode message ships.
+    pub fn table_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 * self.freqs.len());
+        for &f in &self.freqs {
+            out.extend_from_slice(&(f as u16).to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_table_bytes(data: &[u8], alphabet: usize) -> Option<Self> {
+        if data.len() < 2 * alphabet {
+            return None;
+        }
+        let mut freqs = Vec::with_capacity(alphabet);
+        for i in 0..alphabet {
+            let f = u16::from_le_bytes([data[2 * i], data[2 * i + 1]]) as u32;
+            if f == 0 {
+                return None;
+            }
+            freqs.push(f);
+        }
+        if freqs.iter().sum::<u32>() != TOT {
+            return None;
+        }
+        Some(Self::from_freqs(freqs))
+    }
+
+    /// Ideal compressed size of `symbols` under this model, in bits (for diagnostics).
+    pub fn ideal_bits(&self, symbols: &[u16]) -> f64 {
+        symbols
+            .iter()
+            .map(|&s| (TOT as f64 / self.freqs[s as usize] as f64).log2())
+            .sum()
+    }
+}
+
+/// Streaming rANS encoder. Feed symbols in *forward* order via [`encode_all`](Self::encode_all)
+/// (it reverses internally), or push reversed yourself with [`put`](Self::put).
+pub struct RansEncoder {
+    state: u32,
+    bytes: Vec<u8>, // renormalization bytes, in emission order (will be reversed)
+}
+
+impl Default for RansEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RansEncoder {
+    pub fn new() -> Self {
+        RansEncoder { state: RANS_L, bytes: Vec::new() }
+    }
+
+    /// Push one symbol (callers must push in REVERSE symbol order).
+    #[inline]
+    pub fn put(&mut self, model: &SymbolModel, sym: u16) {
+        let f = model.freqs[sym as usize];
+        let c = model.cum[sym as usize];
+        let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
+        let mut x = self.state;
+        while x >= x_max {
+            self.bytes.push((x & 0xff) as u8);
+            x >>= 8;
+        }
+        self.state = ((x / f) << SCALE_BITS) + (x % f) + c;
+    }
+
+    /// Finish: returns the byte stream the decoder consumes front-to-back.
+    pub fn finish(mut self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.bytes.len() + 4);
+        out.extend_from_slice(&self.state.to_le_bytes());
+        self.bytes.reverse();
+        out.append(&mut self.bytes);
+        out
+    }
+
+    /// One-shot: encode `symbols` (forward order) under `model`.
+    pub fn encode_all(model: &SymbolModel, symbols: &[u16]) -> Vec<u8> {
+        let mut enc = RansEncoder::new();
+        for &s in symbols.iter().rev() {
+            enc.put(model, s);
+        }
+        enc.finish()
+    }
+}
+
+/// Streaming rANS decoder over a byte slice produced by [`RansEncoder::finish`].
+pub struct RansDecoder<'a> {
+    state: u32,
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RansDecoder<'a> {
+    pub fn new(data: &'a [u8]) -> Option<Self> {
+        if data.len() < 4 {
+            return None;
+        }
+        let state = u32::from_le_bytes(data[0..4].try_into().ok()?);
+        Some(RansDecoder { state, data, pos: 4 })
+    }
+
+    /// Decode the next symbol.
+    #[inline]
+    pub fn get(&mut self, model: &SymbolModel) -> u16 {
+        let slot = self.state & (TOT - 1);
+        let sym = model.slot2sym[slot as usize];
+        let f = model.freqs[sym as usize];
+        let c = model.cum[sym as usize];
+        self.state = f * (self.state >> SCALE_BITS) + slot - c;
+        while self.state < RANS_L {
+            let byte = if self.pos < self.data.len() {
+                let b = self.data[self.pos];
+                self.pos += 1;
+                b
+            } else {
+                0 // stream exhausted: robust decode of a corrupted stream yields garbage, not UB
+            };
+            self.state = (self.state << 8) | byte as u32;
+        }
+        sym
+    }
+
+    /// One-shot: decode `n` symbols.
+    pub fn decode_all(model: &SymbolModel, data: &[u8], n: usize) -> Option<Vec<u16>> {
+        let mut dec = RansDecoder::new(data)?;
+        Some((0..n).map(|_| dec.get(model)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Xoshiro256;
+
+    #[test]
+    fn roundtrip_uniform() {
+        let model = SymbolModel::from_pmf(&[0.25; 4]);
+        let syms: Vec<u16> = (0..1000).map(|i| (i % 4) as u16).collect();
+        let bytes = RansEncoder::encode_all(&model, &syms);
+        let back = RansDecoder::decode_all(&model, &bytes, syms.len()).unwrap();
+        assert_eq!(back, syms);
+        // Uniform over 4 symbols ≈ 2 bits each ⇒ ~250 bytes + 4-byte state.
+        assert!(bytes.len() < 270, "size {}", bytes.len());
+    }
+
+    #[test]
+    fn roundtrip_skewed_compresses() {
+        let model = SymbolModel::from_pmf(&[0.9, 0.05, 0.03, 0.02]);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let syms: Vec<u16> = (0..10_000)
+            .map(|_| {
+                let r = rng.gen_f64();
+                if r < 0.9 {
+                    0
+                } else if r < 0.95 {
+                    1
+                } else if r < 0.98 {
+                    2
+                } else {
+                    3
+                }
+            })
+            .collect();
+        let bytes = RansEncoder::encode_all(&model, &syms);
+        let back = RansDecoder::decode_all(&model, &bytes, syms.len()).unwrap();
+        assert_eq!(back, syms);
+        // Entropy ≈ 0.67 bits/sym ⇒ ~840 bytes; allow slack.
+        assert!(bytes.len() < 1000, "size {}", bytes.len());
+    }
+
+    #[test]
+    fn roundtrip_random_over_large_alphabet() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let alphabet = 300usize;
+        let pmf: Vec<f64> = (0..alphabet).map(|_| rng.gen_f64() + 0.01).collect();
+        let model = SymbolModel::from_pmf(&pmf);
+        let syms: Vec<u16> = (0..5000)
+            .map(|_| rng.gen_range(alphabet as u64) as u16)
+            .collect();
+        let bytes = RansEncoder::encode_all(&model, &syms);
+        let back = RansDecoder::decode_all(&model, &bytes, syms.len()).unwrap();
+        assert_eq!(back, syms);
+    }
+
+    #[test]
+    fn empty_sequence() {
+        let model = SymbolModel::from_pmf(&[0.5, 0.5]);
+        let bytes = RansEncoder::encode_all(&model, &[]);
+        assert_eq!(bytes.len(), 4);
+        let back = RansDecoder::decode_all(&model, &bytes, 0).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn model_table_roundtrip() {
+        let model = SymbolModel::from_histogram(&[100, 5, 0, 42, 1]);
+        let bytes = model.table_bytes();
+        let back = SymbolModel::from_table_bytes(&bytes, 5).unwrap();
+        assert_eq!(back.freqs, model.freqs);
+        assert!(SymbolModel::from_table_bytes(&bytes[..4], 5).is_none());
+    }
+
+    #[test]
+    fn quantization_keeps_all_symbols_alive() {
+        // Extremely skewed pmf: tiny symbols still get freq ≥ 1 and remain decodable.
+        let mut pmf = vec![1e-9; 100];
+        pmf[0] = 1.0;
+        let model = SymbolModel::from_pmf(&pmf);
+        let syms: Vec<u16> = (0..100).map(|i| i as u16).collect();
+        let bytes = RansEncoder::encode_all(&model, &syms);
+        let back = RansDecoder::decode_all(&model, &bytes, 100).unwrap();
+        assert_eq!(back, syms);
+    }
+
+    #[test]
+    fn compressed_size_near_ideal() {
+        let model = SymbolModel::from_pmf(&[0.7, 0.2, 0.1]);
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let syms: Vec<u16> = (0..20_000)
+            .map(|_| {
+                let r = rng.gen_f64();
+                if r < 0.7 {
+                    0
+                } else if r < 0.9 {
+                    1
+                } else {
+                    2
+                }
+            })
+            .collect();
+        let bytes = RansEncoder::encode_all(&model, &syms);
+        let ideal_bits = model.ideal_bits(&syms);
+        let actual_bits = 8.0 * bytes.len() as f64;
+        // rANS should be within ~1% of the model-ideal size (plus 32-bit state).
+        assert!(actual_bits < ideal_bits * 1.01 + 64.0, "{actual_bits} vs {ideal_bits}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Skellam distribution — the per-coordinate law of residue vectors (Appendix C.1).
+//!
+//! A residue coordinate is a difference of two (approximately independent) Poisson counts:
+//! `r_k ~ Poisson(μ₁) − Poisson(μ₂)` with `μ₁ = |P|·m/l`, `μ₂ = |N|·m/l` (P/N the positive/
+//! negative signal components). We compute pmfs by numeric convolution of truncated Poisson
+//! pmfs (exact to machine precision at these small μ) rather than via Bessel functions.
+
+/// Skellam parameters. Also carries the method-of-moments estimator of Appendix C.1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SkellamParams {
+    pub mu1: f64,
+    pub mu2: f64,
+}
+
+impl SkellamParams {
+    pub fn new(mu1: f64, mu2: f64) -> Self {
+        SkellamParams { mu1: mu1.max(1e-9), mu2: mu2.max(1e-9) }
+    }
+
+    /// Method-of-moments estimate from a sample mean and variance:
+    /// `μ̂₁ = (S² + X̄)/2`, `μ̂₂ = (S² − X̄)/2` (mean = μ₁−μ₂, var = μ₁+μ₂).
+    pub fn estimate(mean: f64, var: f64) -> Self {
+        let var = var.max(mean.abs()); // a Skellam's variance is ≥ |mean|
+        SkellamParams::new((var + mean) / 2.0, (var - mean) / 2.0)
+    }
+
+    /// The expected parameters for a residue encoding `n_pos` positive and `n_neg` negative
+    /// signal elements through an (l, m) matrix.
+    pub fn for_signal(n_pos: usize, n_neg: usize, l: u32, m: u32) -> Self {
+        let scale = m as f64 / l as f64;
+        SkellamParams::new(n_pos as f64 * scale, n_neg as f64 * scale)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mu1 - self.mu2
+    }
+
+    pub fn var(&self) -> f64 {
+        self.mu1 + self.mu2
+    }
+}
+
+/// Truncated Poisson pmf `[P(0), …, P(kmax)]` (renormalization-free; the tail is tiny by
+/// construction of `kmax`).
+fn poisson_pmf(mu: f64, kmax: usize) -> Vec<f64> {
+    let mut pmf = Vec::with_capacity(kmax + 1);
+    // Work in log space for large mu to avoid underflow of e^{-mu}.
+    if mu < 500.0 {
+        let mut p = (-mu).exp();
+        for k in 0..=kmax {
+            pmf.push(p);
+            p *= mu / (k as f64 + 1.0);
+        }
+    } else {
+        let lmu = mu.ln();
+        let mut lp = -mu; // log P(0)
+        for k in 0..=kmax {
+            pmf.push(lp.exp());
+            lp += lmu - ((k + 1) as f64).ln();
+        }
+    }
+    pmf
+}
+
+fn kmax_for(mu: f64) -> usize {
+    (mu + 12.0 * mu.sqrt() + 30.0).ceil() as usize
+}
+
+/// Skellam pmf over the integer range `[lo, hi]` inclusive.
+pub fn skellam_pmf(params: SkellamParams, lo: i32, hi: i32) -> Vec<f64> {
+    assert!(lo <= hi);
+    let p1 = poisson_pmf(params.mu1, kmax_for(params.mu1).max(hi.max(0) as usize + 8));
+    let p2 = poisson_pmf(params.mu2, kmax_for(params.mu2).max((-lo).max(0) as usize + 8));
+    let mut out = vec![0.0f64; (hi - lo + 1) as usize];
+    for (j, &q) in p2.iter().enumerate() {
+        if q < 1e-300 {
+            continue;
+        }
+        for k in lo..=hi {
+            let idx = k as i64 + j as i64;
+            if idx >= 0 && (idx as usize) < p1.len() {
+                out[(k - lo) as usize] += p1[idx as usize] * q;
+            }
+        }
+    }
+    out
+}
+
+/// Smallest symmetric-tail range `[v, w]` such that the probability outside is < `eps` on
+/// each side. This is the truncation range of Appendix C.2.
+pub fn skellam_range(params: SkellamParams, eps: f64) -> (i32, i32) {
+    // Generous candidate range: mean ± (10σ + 10).
+    let sigma = params.var().sqrt();
+    let lo = (params.mean() - 10.0 * sigma - 10.0).floor() as i32;
+    let hi = (params.mean() + 10.0 * sigma + 10.0).ceil() as i32;
+    let pmf = skellam_pmf(params, lo, hi);
+    // Walk inward from each end until the cumulative tail would exceed eps.
+    let mut v_idx = 0usize;
+    let mut acc = 0.0;
+    while v_idx + 1 < pmf.len() && acc + pmf[v_idx] < eps {
+        acc += pmf[v_idx];
+        v_idx += 1;
+    }
+    let mut w_idx = pmf.len() - 1;
+    let mut acc = 0.0;
+    while w_idx > v_idx && acc + pmf[w_idx] < eps {
+        acc += pmf[w_idx];
+        w_idx -= 1;
+    }
+    (lo + v_idx as i32, lo + w_idx as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        for (mu1, mu2) in [(0.5, 0.1), (3.0, 3.0), (0.01, 7.0)] {
+            let p = SkellamParams::new(mu1, mu2);
+            let lo = -200;
+            let hi = 200;
+            let pmf = skellam_pmf(p, lo, hi);
+            let total: f64 = pmf.iter().sum();
+            assert!((total - 1.0).abs() < 1e-9, "μ=({mu1},{mu2}) total={total}");
+        }
+    }
+
+    #[test]
+    fn pmf_mean_and_var_match() {
+        let p = SkellamParams::new(2.5, 1.0);
+        let pmf = skellam_pmf(p, -100, 100);
+        let mean: f64 = pmf.iter().enumerate().map(|(i, &q)| (i as f64 - 100.0) * q).sum();
+        let var: f64 = pmf
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| {
+                let d = i as f64 - 100.0 - mean;
+                d * d * q
+            })
+            .sum();
+        assert!((mean - 1.5).abs() < 1e-6, "mean {mean}");
+        assert!((var - 3.5).abs() < 1e-5, "var {var}");
+    }
+
+    #[test]
+    fn pure_poisson_degenerate_case() {
+        // μ₂ → 0: Skellam reduces to Poisson(μ₁).
+        let p = SkellamParams::new(1.0, 0.0);
+        let pmf = skellam_pmf(p, 0, 10);
+        let e = (-1.0f64).exp();
+        assert!((pmf[0] - e).abs() < 1e-6);
+        assert!((pmf[1] - e).abs() < 1e-6);
+        assert!((pmf[2] - e / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn estimate_inverts_moments() {
+        let p = SkellamParams::new(3.0, 1.25);
+        let est = SkellamParams::estimate(p.mean(), p.var());
+        assert!((est.mu1 - 3.0).abs() < 1e-9);
+        assert!((est.mu2 - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn range_covers_mass() {
+        let p = SkellamParams::new(2.0, 0.5);
+        let (v, w) = skellam_range(p, 1e-3);
+        assert!(v < 0 || v <= 1); // mean 1.5, some left spread
+        assert!(w >= 4);
+        let pmf = skellam_pmf(p, v, w);
+        let inside: f64 = pmf.iter().sum();
+        assert!(inside > 1.0 - 3e-3, "inside {inside}");
+        // Tighter eps ⇒ wider range.
+        let (v2, w2) = skellam_range(p, 1e-6);
+        assert!(v2 <= v && w2 >= w);
+    }
+
+    #[test]
+    fn large_mu_log_space_path() {
+        let pmf = poisson_pmf(800.0, 1200);
+        let total: f64 = pmf.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "total {total}");
+        // Mode near mu.
+        let argmax = pmf
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((799..=801).contains(&argmax), "argmax {argmax}");
+    }
+}

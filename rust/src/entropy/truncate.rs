@@ -1,0 +1,328 @@
+//! Statistical truncation of Alice's sketch `M·1_A` (Appendix C.2).
+//!
+//! A coordinate `X` of Alice's sketch is Poisson(|A|·m/l) — many bits of entropy — but Bob
+//! holds the strongly correlated `Y` (his own sketch coordinate), and `Y − X` is
+//! Skellam(μ₁, μ₂) with tiny parameters (μᵢ = |unique|·m/l). Statistical truncation exploits
+//! the mutual information [70]:
+//!
+//! 1. both sides agree on a high-coverage range `[v, w]` for `Y − X` (from the d-estimate
+//!    handshake), `W = w − v + 1`;
+//! 2. Alice sends `X̃ = X mod W`, entropy-coded (≈ log₂W ≪ H(X) bits/coordinate);
+//! 3. Bob recovers `X̂`: the unique value congruent to `X̃` mod `W` with `Y − X̂ ∈ [v, w]` —
+//!    correct exactly when `Y − X ∈ [v, w]`;
+//! 4. the rare out-of-range coordinates flip the parity of the quotient `⌊X/W⌋`; Alice ships
+//!    BCH syndromes of her quotient-parity bit-vector, Bob locates the mismatches against
+//!    his own parities (Berlekamp–Massey) and repairs `X̂ → X̂ ± W` by Skellam likelihood.
+//!
+//! Residual errors (even shifts, or BCH overload) are tolerated downstream: the MP decoder
+//! treats them as noise and the protocol can fall back to L1 pursuit, exactly as §App. C.2
+//! prescribes.
+
+use super::rans::{RansDecoder, RansEncoder, SymbolModel};
+use super::skellam::{skellam_pmf, skellam_range, SkellamParams};
+use super::{get_varint, put_varint};
+use crate::ecc::{BchSyndrome, GF2m};
+use std::sync::Arc;
+
+/// Field extension degree for parity syndromes; the parity vector is split into blocks of
+/// `2^14 − 1` positions so any sketch length is supported with one table.
+const PARITY_GF_M: u32 = 14;
+const PARITY_BLOCK: usize = (1 << PARITY_GF_M) - 1;
+
+/// Codec parameters both sides must agree on (derived from the d-estimate handshake).
+#[derive(Clone, Copy, Debug)]
+pub struct SketchCodecParams {
+    /// Expected Skellam parameters of `Y − X`: μ₁ = |B\A|·m/l, μ₂ = |A\B|·m/l.
+    pub diff: SkellamParams,
+    /// Per-coordinate tail mass outside `[v, w]` (each side).
+    pub tail_eps: f64,
+    /// BCH correction capacity per parity block.
+    pub bch_t: usize,
+}
+
+impl SketchCodecParams {
+    /// Paper-faithful defaults: 10⁻³ tails, t sized ≈ 4× the expected out-of-range count.
+    pub fn derive(est_b_unique: usize, est_a_unique: usize, l: u32, m: u32) -> Self {
+        let diff = SkellamParams::for_signal(est_b_unique, est_a_unique, l, m);
+        let tail_eps = 1e-3;
+        let blocks = (l as usize).div_ceil(PARITY_BLOCK);
+        let expected_oor = 2.0 * tail_eps * l as f64 / blocks as f64;
+        let bch_t = ((4.0 * expected_oor).ceil() as usize).clamp(8, 256);
+        SketchCodecParams { diff, tail_eps, bch_t }
+    }
+
+    /// Truncation range `[v, w]` and width `W`.
+    pub fn range(&self) -> (i32, i32, u32) {
+        let (v, w) = skellam_range(self.diff, self.tail_eps);
+        (v, w, (w - v + 1) as u32)
+    }
+}
+
+/// The wire message for a truncated sketch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SketchMsg {
+    /// Sketch length l (coordinates).
+    pub n: usize,
+    /// Quantized rANS table for the X̃ alphabet (W symbols).
+    pub table: Vec<u8>,
+    /// rANS payload of the X̃ sequence.
+    pub payload: Vec<u8>,
+    /// Concatenated per-block parity syndromes.
+    pub syndromes: Vec<u8>,
+}
+
+impl SketchMsg {
+    /// Total wire size in bytes (what the experiments account).
+    pub fn size_bytes(&self) -> usize {
+        // n and small framing are already charged by the protocol envelope.
+        self.table.len() + self.payload.len() + self.syndromes.len()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_varint(&mut out, self.n as u64);
+        put_varint(&mut out, self.table.len() as u64);
+        out.extend_from_slice(&self.table);
+        put_varint(&mut out, self.payload.len() as u64);
+        out.extend_from_slice(&self.payload);
+        put_varint(&mut out, self.syndromes.len() as u64);
+        out.extend_from_slice(&self.syndromes);
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Option<Self> {
+        let mut off = 0usize;
+        let (n, used) = get_varint(&data[off..])?;
+        off += used;
+        let (tl, used) = get_varint(&data[off..])?;
+        off += used;
+        let table = data.get(off..off + tl as usize)?.to_vec();
+        off += tl as usize;
+        let (pl, used) = get_varint(&data[off..])?;
+        off += used;
+        let payload = data.get(off..off + pl as usize)?.to_vec();
+        off += pl as usize;
+        let (sl, used) = get_varint(&data[off..])?;
+        off += used;
+        let syndromes = data.get(off..off + sl as usize)?.to_vec();
+        Some(SketchMsg { n: n as usize, table, payload, syndromes })
+    }
+}
+
+fn parity_field() -> Arc<GF2m> {
+    Arc::new(GF2m::new(PARITY_GF_M))
+}
+
+fn parity_syndromes(parities: &[bool], t: usize, gf: &Arc<GF2m>) -> Vec<u8> {
+    let mut out = Vec::new();
+    for block in parities.chunks(PARITY_BLOCK) {
+        let positions = block
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p)
+            .map(|(i, _)| i as u32);
+        out.extend_from_slice(&BchSyndrome::compute(gf.clone(), t, positions).to_bytes());
+    }
+    out
+}
+
+/// Alice: compress her sketch counts (non-negative) under shared `params`.
+pub fn compress_sketch(x: &[i32], params: &SketchCodecParams) -> SketchMsg {
+    let (_v, _w, width) = params.range();
+    let w = width as i32;
+    let mut symbols = Vec::with_capacity(x.len());
+    let mut parities = Vec::with_capacity(x.len());
+    let mut histogram = vec![0u64; width as usize];
+    for &xi in x {
+        debug_assert!(xi >= 0, "sketch counts are non-negative");
+        let xt = (xi % w) as u16;
+        symbols.push(xt);
+        histogram[xt as usize] += 1;
+        parities.push((xi / w) & 1 == 1);
+    }
+    let model = SymbolModel::from_histogram(&histogram);
+    let payload = RansEncoder::encode_all(&model, &symbols);
+    let gf = parity_field();
+    let syndromes = parity_syndromes(&parities, params.bch_t, &gf);
+    SketchMsg { n: x.len(), table: model.table_bytes(), payload, syndromes }
+}
+
+/// Bob: recover Alice's sketch `X̂` given his own sketch `y` and the shared params.
+/// Returns `(x_hat, repaired, unresolved_blocks)`: `repaired` counts parity-patched
+/// coordinates, `unresolved_blocks` counts BCH blocks whose patch failed (their residual
+/// errors are left for the MP decoder to absorb as noise).
+pub fn recover_sketch(
+    msg: &SketchMsg,
+    y: &[i32],
+    params: &SketchCodecParams,
+) -> Option<(Vec<i32>, usize, usize)> {
+    assert_eq!(msg.n, y.len(), "sketch lengths disagree");
+    let (v, wq, width) = params.range();
+    let w = width as i32;
+    let model = SymbolModel::from_table_bytes(&msg.table, width as usize)?;
+    let symbols = RansDecoder::decode_all(&model, &msg.payload, msg.n)?;
+
+    // Step 3: congruence + range recovery.
+    let mut x_hat = Vec::with_capacity(msg.n);
+    for (i, &yi) in y.iter().enumerate() {
+        let xt = symbols[i] as i32;
+        let t = (yi - xt - v).rem_euclid(w);
+        let mut xi = yi - v - t; // Y − X̂ = v + t ∈ [v, w]
+        if xi < 0 {
+            // True X is non-negative; take the smallest non-negative congruent value.
+            xi = xt;
+        }
+        x_hat.push(xi);
+    }
+
+    // Step 4: parity patch.
+    let gf = parity_field();
+    let syn_bytes_per_block = (params.bch_t * PARITY_GF_M as usize).div_ceil(8);
+    let nblocks = msg.n.div_ceil(PARITY_BLOCK);
+    if msg.syndromes.len() < nblocks * syn_bytes_per_block {
+        return None;
+    }
+    // Likelihood table for choosing the repair direction.
+    let pmf_lo = skellam_pmf(params.diff, v - w, v - 1); // below-range region
+    let pmf_hi = skellam_pmf(params.diff, wq + 1, wq + w); // above-range region
+    let mut repaired = 0usize;
+    let mut unresolved = 0usize;
+    for b in 0..nblocks {
+        let start = b * PARITY_BLOCK;
+        let end = (start + PARITY_BLOCK).min(msg.n);
+        let my_positions = (start..end)
+            .filter(|&i| ((x_hat[i] - symbols[i] as i32) / w) & 1 == 1)
+            .map(|i| (i - start) as u32);
+        let mine = BchSyndrome::compute(gf.clone(), params.bch_t, my_positions);
+        let theirs = BchSyndrome::from_bytes(
+            gf.clone(),
+            params.bch_t,
+            &msg.syndromes[b * syn_bytes_per_block..(b + 1) * syn_bytes_per_block],
+        )?;
+        let diff = mine.xor(&theirs);
+        match diff.decode((end - start) as u32) {
+            Ok(errs) => {
+                for e in errs {
+                    let i = start + e as usize;
+                    // The true X is an odd number of W-steps away; ±1 step is overwhelmingly
+                    // likely. Choose by Skellam likelihood of the implied Y − X.
+                    let yx = y[i] - x_hat[i]; // in [v, w]
+                    let up = x_hat[i] + w; // implies Y − X = yx − w < v
+                    let down = x_hat[i] - w; // implies Y − X = yx + w > w
+                    let p_up = pmf_lo.get((yx - w - (v - w)) as usize).copied().unwrap_or(0.0);
+                    let p_down = pmf_hi.get((yx + w - (wq + 1)) as usize).copied().unwrap_or(0.0);
+                    x_hat[i] = if down < 0 || p_up >= p_down { up } else { down };
+                    repaired += 1;
+                }
+            }
+            Err(_) => unresolved += 1,
+        }
+    }
+    Some((x_hat, repaired, unresolved))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Xoshiro256;
+    use crate::matrix::CsMatrix;
+    use crate::sketch::Sketch;
+
+    /// End-to-end: Alice's real sketch vs Bob's real sketch on overlapping sets.
+    fn roundtrip_case(
+        n_common: usize,
+        n_a_only: usize,
+        n_b_only: usize,
+        l: u32,
+        m: u32,
+        seed: u64,
+    ) -> (Vec<i32>, Vec<i32>, usize, usize) {
+        let mat = CsMatrix::new(l, m, seed);
+        let common: Vec<u64> = (0..n_common as u64).map(|i| i * 3 + 1_000_000).collect();
+        let a_only: Vec<u64> = (0..n_a_only as u64).map(|i| i * 7 + 5_000_000).collect();
+        let b_only: Vec<u64> = (0..n_b_only as u64).map(|i| i * 11 + 9_000_000).collect();
+        let a: Vec<u64> = common.iter().chain(&a_only).copied().collect();
+        let b: Vec<u64> = common.iter().chain(&b_only).copied().collect();
+        let ska = Sketch::encode(mat, &a);
+        let skb = Sketch::encode(mat, &b);
+        let params = SketchCodecParams::derive(n_b_only, n_a_only, l, m);
+        let msg = compress_sketch(&ska.counts, &params);
+        let (x_hat, repaired, unresolved) =
+            recover_sketch(&msg, &skb.counts, &params).expect("recover");
+        (ska.counts.clone(), x_hat, repaired, unresolved)
+    }
+
+    #[test]
+    fn exact_recovery_typical() {
+        let (x, x_hat, _rep, unresolved) = roundtrip_case(20_000, 50, 120, 2400, 7, 3);
+        assert_eq!(unresolved, 0);
+        let errors = x.iter().zip(&x_hat).filter(|(a, b)| a != b).count();
+        assert_eq!(errors, 0, "all coordinates recovered exactly");
+    }
+
+    #[test]
+    fn exact_recovery_uni_case() {
+        // A ⊆ B: μ₂ = 0, range is one-sided.
+        let (x, x_hat, _rep, unresolved) = roundtrip_case(10_000, 0, 200, 3000, 7, 5);
+        assert_eq!(unresolved, 0);
+        assert_eq!(x, x_hat);
+    }
+
+    #[test]
+    fn message_is_small() {
+        let l = 2400u32;
+        let mat = CsMatrix::new(l, 7, 3);
+        let a: Vec<u64> = (0..20_000u64).collect();
+        let ska = Sketch::encode(mat, &a);
+        let params = SketchCodecParams::derive(150, 50, l, 7);
+        let msg = compress_sketch(&ska.counts, &params);
+        // Raw sketch would be 4·l = 9600 bytes; truncation should cut it by ≥ 2×
+        // (each coordinate carries ≈ log2(W) < 5 bits + tables + syndromes).
+        assert!(
+            msg.size_bytes() < 4800,
+            "truncated sketch too big: {} bytes",
+            msg.size_bytes()
+        );
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let params = SketchCodecParams::derive(100, 10, 500, 5);
+        let mat = CsMatrix::new(500, 5, 1);
+        let sk = Sketch::encode(mat, &(0..3000u64).collect::<Vec<_>>());
+        let msg = compress_sketch(&sk.counts, &params);
+        let bytes = msg.to_bytes();
+        let back = SketchMsg::from_bytes(&bytes).unwrap();
+        assert_eq!(back.n, msg.n);
+        assert_eq!(back.table, msg.table);
+        assert_eq!(back.payload, msg.payload);
+        assert_eq!(back.syndromes, msg.syndromes);
+        assert!(SketchMsg::from_bytes(&bytes[..bytes.len() - 2]).is_none());
+    }
+
+    #[test]
+    fn parity_patch_fixes_synthetic_out_of_range() {
+        // Force out-of-range coordinates by handing Bob a shifted Y at a few positions.
+        let l = 1000u32;
+        let mat = CsMatrix::new(l, 5, 9);
+        let a: Vec<u64> = (0..8000u64).collect();
+        let ska = Sketch::encode(mat, &a);
+        let params = SketchCodecParams::derive(60, 20, l, 5);
+        let (_v, w, width) = params.range();
+        let msg = compress_sketch(&ska.counts, &params);
+        // Bob's Y = X + noise; craft noise beyond w at 3 coordinates (single W-step).
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let mut y = ska.counts.clone();
+        for i in 0..y.len() {
+            y[i] += rng.gen_range(2) as i32; // in-range noise
+        }
+        for &i in &[10usize, 500, 900] {
+            y[i] = ska.counts[i] + w + 1; // just outside the range
+        }
+        let (x_hat, repaired, unresolved) = recover_sketch(&msg, &y, &params).unwrap();
+        assert_eq!(unresolved, 0);
+        assert!(repaired >= 3, "repaired {repaired}");
+        let errors = ska.counts.iter().zip(&x_hat).filter(|(a, b)| a != b).count();
+        assert_eq!(errors, 0, "width {width}");
+    }
+}

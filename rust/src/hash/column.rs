@@ -1,0 +1,113 @@
+//! The `g∘h` implicit column construction of Definition 6.
+//!
+//! Column `i` of the CS matrix `M` is a length-`l` 0/1 vector with exactly `m` ones at
+//! pseudo-random distinct rows, derived deterministically from `(seed, i)`. The paper requires
+//! O(m) evaluation time for the encoding complexity of Theorem 2 to hold; we use Floyd's
+//! subset-sampling algorithm, which draws exactly `m` distinct values in `m` PRNG steps.
+
+use super::prng::{split_mix64, Xoshiro256};
+
+/// Deterministic sampler of m distinct rows in `[0, l)` per element id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ColumnSampler {
+    /// Number of rows of the CS matrix.
+    pub l: u32,
+    /// Ones per column (right-degree of the bipartite expander).
+    pub m: u32,
+    /// Shared seed; Alice and Bob must agree on it.
+    pub seed: u64,
+}
+
+impl ColumnSampler {
+    pub fn new(l: u32, m: u32, seed: u64) -> Self {
+        assert!(m >= 1 && (m as u64) <= l as u64, "need 1 <= m <= l (m={m}, l={l})");
+        ColumnSampler { l, m, seed }
+    }
+
+    /// Write the m distinct row indices of column `id` into `out` (must have length >= m).
+    /// Returns the filled slice. Rows are *not* sorted (callers that need order sort once).
+    ///
+    /// Floyd's algorithm: for j = l-m .. l-1, draw t ∈ [0, j]; insert t unless already
+    /// present, else insert j. Membership over ≤ m=O(log) items is a linear scan — faster
+    /// than any set structure at this size.
+    #[inline]
+    pub fn rows_into<'a>(&self, id: u64, out: &'a mut [u32]) -> &'a [u32] {
+        debug_assert!(out.len() >= self.m as usize);
+        let mut rng = Xoshiro256::seed_from_u64(split_mix64(self.seed) ^ split_mix64(id));
+        let mut count = 0usize;
+        let start = self.l - self.m;
+        for j in start..self.l {
+            let t = rng.gen_range(j as u64 + 1) as u32;
+            let pick = if out[..count].contains(&t) { j } else { t };
+            out[count] = pick;
+            count += 1;
+        }
+        &out[..self.m as usize]
+    }
+
+    /// Allocate-and-return variant of [`rows_into`](Self::rows_into).
+    pub fn rows(&self, id: u64) -> Vec<u32> {
+        let mut out = vec![0u32; self.m as usize];
+        self.rows_into(id, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_distinct_and_in_range() {
+        let s = ColumnSampler::new(1000, 7, 42);
+        for id in 0..2000u64 {
+            let rows = s.rows(id);
+            assert_eq!(rows.len(), 7);
+            let mut sorted = rows.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 7, "duplicate rows for id {id}");
+            assert!(rows.iter().all(|&r| r < 1000));
+        }
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let s1 = ColumnSampler::new(512, 5, 7);
+        let s2 = ColumnSampler::new(512, 5, 7);
+        for id in [0u64, 1, u64::MAX, 123456789] {
+            assert_eq!(s1.rows(id), s2.rows(id));
+        }
+    }
+
+    #[test]
+    fn seed_changes_columns() {
+        let s1 = ColumnSampler::new(512, 5, 1);
+        let s2 = ColumnSampler::new(512, 5, 2);
+        let differs = (0..100u64).any(|id| s1.rows(id) != s2.rows(id));
+        assert!(differs);
+    }
+
+    #[test]
+    fn m_equals_l_is_all_rows() {
+        let s = ColumnSampler::new(5, 5, 3);
+        let mut rows = s.rows(99);
+        rows.sort_unstable();
+        assert_eq!(rows, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rows_roughly_uniform_over_l() {
+        let s = ColumnSampler::new(128, 4, 11);
+        let mut counts = vec![0u32; 128];
+        for id in 0..20_000u64 {
+            for &r in &s.rows(id) {
+                counts[r as usize] += 1;
+            }
+        }
+        // 80_000 placements over 128 rows: mean 625.
+        for (r, &c) in counts.iter().enumerate() {
+            assert!((450..800).contains(&c), "row {r} count {c}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Hashing and pseudo-randomness substrate.
+//!
+//! CommonSense's CS matrix is *implicit* (Definition 6 of the paper): column `i` of `M` is
+//! `g(h(i))` where `h` maps ids to uniform integers and `g` enumerates m-subsets of the l
+//! rows. We realize `g∘h` with a per-element seeded PRNG and Floyd's subset sampling, which
+//! costs O(m) per column — matching the complexity the paper's Theorem 2 relies on.
+//!
+//! Everything here is deterministic given seeds, so Alice and Bob derive identical matrices
+//! from a shared `(seed, l, m)` triple, and experiments are exactly reproducible.
+
+mod column;
+mod prng;
+mod sha256;
+mod siphash;
+
+pub use column::ColumnSampler;
+pub use prng::{split_mix64, Xoshiro256};
+pub use sha256::{sha256, Sha256};
+pub use siphash::SipHash13;
+
+/// A 64-bit mixing finalizer (Murmur3/SplitMix style). Used wherever a cheap, well-mixed
+/// keyed hash of a 64-bit id is needed (Bloom filters, IBLT cells, partitioning).
+#[inline]
+pub fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Keyed 64-bit hash of an id: `mix64` over id xor a seed-derived constant.
+///
+/// This is *not* cryptographic; it is the workhorse for index derivation in filters and
+/// sketches, where only uniformity matters.
+#[inline]
+pub fn hash_u64(id: u64, seed: u64) -> u64 {
+    mix64(id ^ split_mix64(seed))
+}
+
+/// Derive `k` hash values for an id from two base hashes (Kirsch–Mitzenmacher double
+/// hashing), the standard trick Bloom-family filters use to avoid k independent hashes.
+#[inline]
+pub fn double_hash(id: u64, seed: u64, k: u32, modulus: u64) -> impl Iterator<Item = u64> {
+    let h1 = hash_u64(id, seed);
+    let h2 = hash_u64(id, seed ^ 0x9e37_79b9_7f4a_7c15) | 1; // odd ⇒ full period
+    (0..k as u64).map(move |i| {
+        let h = h1.wrapping_add(i.wrapping_mul(h2));
+        // Lemire's multiply-shift range reduction: unbiased enough for filters, branch-free.
+        ((h as u128 * modulus as u128) >> 64) as u64
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_is_bijective_on_samples() {
+        // Spot-check injectivity and avalanche on a few thousand inputs.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(mix64(i)));
+        }
+    }
+
+    #[test]
+    fn hash_u64_depends_on_seed() {
+        assert_ne!(hash_u64(42, 1), hash_u64(42, 2));
+    }
+
+    #[test]
+    fn double_hash_in_range_and_spread() {
+        let modulus = 997;
+        let mut counts = vec![0u32; modulus as usize];
+        for id in 0..10_000u64 {
+            for h in double_hash(id, 7, 4, modulus) {
+                assert!(h < modulus);
+                counts[h as usize] += 1;
+            }
+        }
+        // 40_000 draws over 997 buckets: mean ≈ 40.1. No bucket should be empty or wildly hot.
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(*min > 10, "min bucket {min}");
+        assert!(*max < 120, "max bucket {max}");
+    }
+}

@@ -1,0 +1,61 @@
+//! # CommonSense — Efficient Set Intersection (SetX) Protocol Based on Compressed Sensing
+//!
+//! A full reproduction of the CS.DC 2025 paper *"CommonSense: Efficient Set Intersection
+//! (SetX) Protocol Based on Compressed Sensing"* (Meng, Yang, Xu).
+//!
+//! Two network-connected hosts, Alice (holding set `A`) and Bob (holding set `B`),
+//! collaboratively compute the **exact** intersection `A ∩ B` using communication close to the
+//! SetX information-theoretic lower bound `d·log2(e·|A|/d)` — far below the SetR lower bound.
+//!
+//! The library is organized in layers:
+//!
+//! * **Substrates** — [`hash`] (PRNGs, SipHash, SHA-256, the `g∘h` column sampler),
+//!   [`matrix`] (the implicit sparse binary RIP-1 CS matrix), [`sketch`] (CS linear sketches),
+//!   [`smf`] (Bloom-family set-membership filters), [`entropy`] (rANS + Skellam models +
+//!   statistical truncation), [`ecc`] (GF(2^m)/BCH syndrome decoding).
+//! * **Core algorithm** — [`decoder`]: the binary-adapted matching-pursuit (MP) decoder with
+//!   the priority-queue + reverse-lookup data structures of Appendix B, plus SSMP and BMP.
+//! * **Protocols** — [`protocol`]: unidirectional (§3) and bidirectional ping-pong (§5)
+//!   CommonSense, with exact wire-format communication accounting.
+//! * **Baselines** — [`baselines`]: IBLT/Difference Digest, Graphene, CBF approximate SetX,
+//!   PinSketch, and the information-theoretic [`bounds`].
+//! * **Systems layer** — [`streaming`] (§4 digests), [`data`] (synthetic + Ethereum-sim
+//!   workloads), [`runtime`] (PJRT/XLA AOT artifact execution), [`coordinator`] (tokio
+//!   Alice/Bob nodes, partitioned parallel SetX).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use commonsense::protocol::{uni, CsParams};
+//! use commonsense::data::synth;
+//!
+//! // A ⊆ B with 100 elements unique to Bob.
+//! let (a, b) = synth::subset_pair(10_000, 100, 42);
+//! let params = CsParams::tuned_uni(b.len(), 100);
+//! let outcome = uni::run(&a, &b, &params).expect("decode");
+//! assert_eq!(outcome.intersection.len(), a.len());
+//! ```
+
+pub mod baselines;
+pub mod bounds;
+pub mod coordinator;
+pub mod data;
+pub mod decoder;
+pub mod ecc;
+pub mod entropy;
+pub mod experiments;
+pub mod hash;
+pub mod matrix;
+pub mod metrics;
+pub mod protocol;
+pub mod runtime;
+pub mod sketch;
+pub mod smf;
+pub mod streaming;
+
+/// Element identifiers. Objects are identified by (hashes of) their content; internally we
+/// operate on 64-bit ids. When the nominal universe is larger (e.g. `2^256` for Ethereum
+/// signatures), communication accounting is parameterized by the nominal universe bit-width
+/// `u` while dedup/equality uses the 64-bit internal id (collision probability is negligible
+/// at the cardinalities we run; see DESIGN.md §4).
+pub type Id = u64;

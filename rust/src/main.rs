@@ -1,0 +1,162 @@
+//! The `commonsense` CLI: experiment drivers, the l-tuner, and TCP serve/connect roles.
+//!
+//! (Arg parsing is hand-rolled: the image's offline crate set has no clap — DESIGN.md §4.)
+
+use commonsense::coordinator::{connect_initiator, serve_responder};
+use commonsense::data::synth;
+use commonsense::experiments;
+use commonsense::protocol::bidi::BidiOptions;
+use commonsense::protocol::CsParams;
+use std::net::TcpListener;
+
+fn usage() -> ! {
+    eprintln!(
+        "commonsense — CS.DC'25 CommonSense SetX reproduction
+
+USAGE:
+  commonsense exp <fig2a|fig2b|table2|examples|ablations|all> [--scale N] [--instances K] [--eth-accounts N]
+  commonsense tune [--n N] [--d D] [--bidi] [--trials K]
+  commonsense serve --listen ADDR            (responder; set = synthetic demo workload)
+  commonsense connect --addr ADDR            (initiator; set = synthetic demo workload)
+  commonsense selftest                       (quick end-to-end sanity run)
+
+Defaults: --scale 50000, --instances 5, --eth-accounts 300000, --n 100000, --d 1000."
+    );
+    std::process::exit(2)
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(arg) = it.next() {
+        if let Some(name) = arg.strip_prefix("--") {
+            let value = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), value);
+        } else {
+            positional.push(arg);
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn get(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --{name}")))
+            .unwrap_or(default)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = parse_args();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "exp" => {
+            let what = args.positional.get(1).map(String::as_str).unwrap_or("all");
+            let scale = args.get("scale", 50_000);
+            let instances = args.get("instances", 5);
+            let eth = args.get("eth-accounts", 300_000);
+            let fr = [0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5];
+            let bu: Vec<usize> = [0.0001, 0.0003, 0.001, 0.003, 0.01, 0.1, 0.3]
+                .iter()
+                .map(|f| ((scale as f64 * f) as usize).max(2))
+                .collect();
+            match what {
+                "fig2a" => {
+                    experiments::fig2a(scale, &fr, instances, true);
+                }
+                "fig2b" => {
+                    experiments::fig2b(scale, scale / 100, &bu, instances, true);
+                }
+                "table2" | "ethereum" => {
+                    experiments::ethereum(eth, true);
+                }
+                "examples" => experiments::examples(scale, true),
+                "ablations" => experiments::ablations(scale.min(20_000), true),
+                "all" => {
+                    experiments::fig2a(scale, &fr, instances, true);
+                    experiments::fig2b(scale, scale / 100, &bu, instances, true);
+                    experiments::ethereum(eth, true);
+                    experiments::examples(scale, true);
+                    experiments::ablations(scale.min(20_000), true);
+                }
+                _ => usage(),
+            }
+        }
+        "tune" => {
+            let n = args.get("n", 100_000);
+            let d = args.get("d", 1_000);
+            let trials = args.get("trials", 20);
+            experiments::tune_l(n, d, args.has("bidi"), trials, true);
+        }
+        "serve" => {
+            let addr = args.flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:7700".into());
+            let (_, b) = synth::overlap_pair(args.get("common", 20_000), 100, 200, 42);
+            let listener = TcpListener::bind(&addr)?;
+            println!("responder listening on {addr} (|B| = {})", b.len());
+            let report = serve_responder(&listener, &b, BidiOptions::default())?;
+            println!(
+                "session done: |B\\A| = {}, sent {} B, received {} B, converged = {}",
+                report.unique.len(),
+                report.bytes_sent,
+                report.bytes_received,
+                report.converged
+            );
+        }
+        "connect" => {
+            let addr = args.flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7700".into());
+            let common = args.get("common", 20_000);
+            let (a, _) = synth::overlap_pair(common, 100, 200, 42);
+            let params = CsParams::tuned_bidi(common + 300, 100, 200);
+            println!("initiator connecting to {addr} (|A| = {})", a.len());
+            let report = connect_initiator(&addr, &a, &params, BidiOptions::default())?;
+            println!(
+                "session done: |A\\B| = {}, sent {} B, received {} B, converged = {}",
+                report.unique.len(),
+                report.bytes_sent,
+                report.bytes_received,
+                report.converged
+            );
+        }
+        "selftest" => {
+            let (a, b) = synth::overlap_pair(10_000, 100, 150, 7);
+            let params = CsParams::tuned_bidi(10_250, 100, 150);
+            let out = commonsense::protocol::bidi::run(&a, &b, &params, BidiOptions::default());
+            println!(
+                "bidi selftest: converged={} rounds={} bytes={} (exact={})",
+                out.converged,
+                out.rounds,
+                out.comm.total_bytes(),
+                out.a_minus_b == synth::difference(&a, &b)
+                    && out.b_minus_a == synth::difference(&b, &a)
+            );
+            match commonsense::runtime::Runtime::load_default() {
+                Ok(rt) => println!(
+                    "runtime selftest: platform={} artifacts l={} nb={} steps={}",
+                    rt.platform(),
+                    rt.shapes.l,
+                    rt.shapes.nb,
+                    rt.shapes.steps
+                ),
+                Err(e) => println!("runtime selftest skipped: {e:#}"),
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

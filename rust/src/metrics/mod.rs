@@ -1,0 +1,192 @@
+//! Communication accounting, experiment statistics, and a tiny benchmark harness.
+//!
+//! The paper's primary metric is the *total number of bytes transmitted in all rounds*
+//! (§7.1). Every protocol implementation in this repo routes its messages through a
+//! [`CommLog`], so reported costs are actual framed bytes — not analytic estimates.
+
+use std::time::{Duration, Instant};
+
+/// Per-session communication log: every message's direction, label, and size.
+#[derive(Clone, Debug, Default)]
+pub struct CommLog {
+    pub entries: Vec<CommEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CommEntry {
+    /// `true` when Alice → Bob.
+    pub from_alice: bool,
+    /// What the message carries (e.g. "sketch", "residue+smf", "last-inquiry").
+    pub label: &'static str,
+    pub bytes: usize,
+}
+
+impl CommLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, from_alice: bool, label: &'static str, bytes: usize) {
+        self.entries.push(CommEntry { from_alice, label, bytes });
+    }
+
+    /// Total bytes in both directions — the paper's communication cost.
+    pub fn total_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Number of messages (the paper counts "rounds of communication" as messages sent,
+    /// e.g. IBLT's bidirectional protocol is "two rounds").
+    pub fn rounds(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn bytes_by_label(&self, label: &str) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.label == label)
+            .map(|e| e.bytes)
+            .sum()
+    }
+}
+
+/// Streaming mean/min/max/stddev accumulator for experiment tables.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    sum: f64,
+    sum_sq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        ((self.sum_sq / self.n as f64 - mean * mean).max(0.0)).sqrt()
+    }
+}
+
+/// Minimal criterion-style micro-benchmark: warmup, then timed iterations with
+/// mean/min reporting. (The image has no criterion crate; `cargo bench` targets use this.
+/// See DESIGN.md §4 substitutions.)
+pub struct Bench {
+    pub name: String,
+    warmup: Duration,
+    measure: Duration,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+        }
+    }
+
+    pub fn with_times(mut self, warmup_ms: u64, measure_ms: u64) -> Self {
+        self.warmup = Duration::from_millis(warmup_ms);
+        self.measure = Duration::from_millis(measure_ms);
+        self
+    }
+
+    /// Run `f` repeatedly; returns (mean, min, iters) and prints a criterion-like line.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure || times.len() < 5 {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+            if times.len() > 100_000 {
+                break;
+            }
+        }
+        let total: Duration = times.iter().sum();
+        let mean = total / times.len() as u32;
+        let min = *times.iter().min().unwrap();
+        let result = BenchResult { name: self.name.clone(), mean, min, iters: times.len() as u64 };
+        println!(
+            "bench {:<48} mean {:>12?} min {:>12?} iters {} (warmup {})",
+            result.name, result.mean, result.min, result.iters, warm_iters
+        );
+        result
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean: Duration,
+    pub min: Duration,
+    pub iters: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_log_accounting() {
+        let mut log = CommLog::new();
+        log.record(true, "sketch", 100);
+        log.record(false, "residue", 50);
+        log.record(true, "inquiry", 10);
+        assert_eq!(log.total_bytes(), 160);
+        assert_eq!(log.rounds(), 3);
+        assert_eq!(log.bytes_by_label("sketch"), 100);
+        assert_eq!(log.bytes_by_label("nope"), 0);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = Stats::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.push(v);
+        }
+        assert_eq!(s.n, 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.stddev() - (1.25f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_quickly_in_tests() {
+        let b = Bench::new("noop").with_times(1, 5);
+        let r = b.run(|| 1 + 1);
+        assert!(r.iters >= 5);
+    }
+}

@@ -1,0 +1,392 @@
+//! Bidirectional CommonSense (§5): ping-pong decoding with SMF hallucination control.
+//!
+//! Roles: the **initiator** is the side with the *smaller* estimated unique count (§5.1 —
+//! its signal is the weaker noise for the peer's first decode). The initiator sends its
+//! truncated sketch; from then on a single canonical residue
+//! `r = M(1_{R\I} − 1_{R̂\I}) − M(1_{I\R} − 1_{Î\R})` (Fact 12) alternates between the
+//! hosts, each decoding its own signal component (responder = positive side), each message
+//! carrying:
+//!
+//! * the entropy-compressed residue,
+//! * an SMF (Bloom filter) of the sender's current estimate set — the receiver's decoder
+//!   refuses to *set* SMF-positive coordinates (collision avoidance, §5.2),
+//! * a "last inquiry": signatures of SMF-positive coordinates the sender tentatively set
+//!   anyway (collision resolution, after it has become confident),
+//! * answers to the peer's previous inquiry (`true` = common hallucination → both revert).
+//!
+//! The session ends when the residue is zero and nothing is outstanding; zero residue plus
+//! the disjointness invariant implies both sides' recoveries are exact (§5.1).
+
+use crate::decoder::{DecoderConfig, MpDecoder, Pursuit, Side};
+use crate::entropy::{compress_residue, compress_sketch, decompress_residue, recover_sketch, SketchCodecParams};
+use crate::hash::hash_u64;
+use crate::metrics::CommLog;
+use crate::protocol::{wire::Msg, CsParams};
+use crate::sketch::Sketch;
+use crate::smf::BloomFilter;
+use std::collections::HashMap;
+
+/// Tunables of the ping-pong loop.
+#[derive(Clone, Copy, Debug)]
+pub struct BidiOptions {
+    /// Hard cap on ping-pong messages (the paper observes ≤ 10 rounds; Observation 10).
+    pub max_rounds: usize,
+    /// Round index from which a stalled decoder tentatively sets SMF-positive coordinates
+    /// and verifies them via the last inquiry ("when confident", §5.2 option 2).
+    pub confident_round: usize,
+    /// Target false-positive rate of each per-message SMF.
+    pub smf_fpr: f64,
+    /// Switch to L1 pursuit (SSMP) when the L2 loop stalls.
+    pub ssmp_fallback: bool,
+    /// Seed for inquiry signatures.
+    pub sig_seed: u64,
+}
+
+impl Default for BidiOptions {
+    fn default() -> Self {
+        BidiOptions {
+            max_rounds: 24,
+            confident_round: 3,
+            smf_fpr: 0.01,
+            ssmp_fallback: true,
+            sig_seed: 0x5167_5eed_0f_c0de,
+        }
+    }
+}
+
+/// Result of a bidirectional run.
+#[derive(Clone, Debug)]
+pub struct BidiOutcome {
+    /// `A \ B` as computed by Alice (sorted).
+    pub a_minus_b: Vec<u64>,
+    /// `B \ A` as computed by Bob (sorted).
+    pub b_minus_a: Vec<u64>,
+    /// `A ∩ B` from Alice's perspective (sorted). (Bob's view is `B \ (B\A)`.)
+    pub intersection: Vec<u64>,
+    pub comm: CommLog,
+    /// Ping-pong messages exchanged (incl. the sketch, matching the paper's round counting).
+    pub rounds: usize,
+    /// The residue reached zero and all inquiries resolved within the round budget.
+    pub converged: bool,
+}
+
+/// One host's protocol engine, generic over which side it decodes.
+pub struct Peer {
+    pub decoder: MpDecoder,
+    side: Side,
+    opts: BidiOptions,
+    round: usize,
+    /// Tentatively-set ids, in inquiry order, awaiting the peer's answers.
+    tentative: Vec<u64>,
+    /// sig → id for our current estimate (rebuilt lazily when answering inquiries).
+    pub settled: bool,
+}
+
+impl Peer {
+    pub fn new(params: &CsParams, set: &[u64], side: Side, opts: BidiOptions) -> Self {
+        let matrix = params.matrix();
+        let mut decoder = MpDecoder::new(&matrix, set, side);
+        decoder.set_config(DecoderConfig::commonsense());
+        Peer { decoder, side, opts, round: 0, tentative: Vec::new(), settled: false }
+    }
+
+    fn sig(&self, id: u64) -> u64 {
+        hash_u64(id, self.opts.sig_seed)
+    }
+
+    /// Process an incoming round message and produce the reply (or `None` when the session
+    /// is complete and the peer needs nothing further).
+    pub fn step(&mut self, incoming: &Msg) -> Option<Msg> {
+        let Msg::Round { residue, smf, inquiry, answers, done } = incoming else {
+            panic!("Peer::step expects Round messages");
+        };
+        self.round += 1;
+
+        // 1. Adopt the authoritative residue.
+        let res = decompress_residue(residue, self.decoder_len()).expect("residue decode");
+        self.decoder.load_residue(&res);
+
+        // 2. Resolve our previous tentative updates from the peer's answers.
+        //    `true` = common hallucination: the peer also held the element and has already
+        //    reverted its copy; we revert ours, leaving the element in the intersection.
+        debug_assert!(answers.len() == self.tentative.len() || answers.is_empty());
+        for (i, &conflict) in answers.iter().enumerate() {
+            if conflict {
+                let id = self.tentative[i];
+                self.decoder.force(id, false);
+            }
+        }
+        self.tentative.clear();
+
+        // 3. Answer the peer's inquiry; conflicts are our own hallucinations — revert them.
+        let mut my_answers = Vec::with_capacity(inquiry.len());
+        if !inquiry.is_empty() {
+            let mine: HashMap<u64, u64> =
+                self.decoder.estimate().iter().map(|&id| (self.sig(id), id)).collect();
+            for q in inquiry {
+                match mine.get(q) {
+                    Some(&id) => {
+                        self.decoder.force(id, false);
+                        my_answers.push(true);
+                    }
+                    None => my_answers.push(false),
+                }
+            }
+        }
+
+        // 4. Collision avoidance: refuse to set coordinates in the peer's estimate filter.
+        if let Some(bytes) = smf {
+            let bloom = BloomFilter::from_bytes(bytes).expect("smf decode");
+            self.decoder.set_banned(move |id| bloom.contains(id));
+        }
+
+        // 5. Decode.
+        let mut stats = self.decoder.run();
+        if stats.stalled && self.opts.ssmp_fallback {
+            self.decoder.switch_pursuit(Pursuit::L1);
+            self.decoder.run();
+            self.decoder.switch_pursuit(Pursuit::L2);
+            stats = self.decoder.run();
+        }
+        // Pairwise-local-minimum escape: kick out the most contradicted set coordinate and
+        // re-run (bounded; a wrong kick is just noise the next rounds re-correct).
+        let mut kicks = 0;
+        while stats.stalled && kicks < 4 {
+            if self.decoder.kick_worst().is_none() {
+                break;
+            }
+            kicks += 1;
+            stats = self.decoder.run();
+        }
+
+        // 6. Collision resolution: once confident, tentatively set gated coordinates and
+        //    put their signatures up for verification.
+        let mut my_inquiry = Vec::new();
+        if !stats.converged && self.round >= self.opts.confident_round {
+            for id in self.decoder.banned_positive_gain() {
+                self.decoder.force(id, true);
+                self.tentative.push(id);
+                my_inquiry.push(self.sig(id));
+            }
+        }
+
+        // 7. Termination bookkeeping.
+        self.settled =
+            self.decoder.residue_is_zero() && self.tentative.is_empty();
+        if *done && self.settled && my_answers.is_empty() && my_inquiry.is_empty() {
+            // Peer already declared completion and we owe nothing: end without replying.
+            return None;
+        }
+
+        // 8. Reply: residue + SMF of our estimate (skipped when we're declaring done with
+        //    nothing outstanding — the peer only needs the zero residue and our answers).
+        let smf_out = if self.settled && my_inquiry.is_empty() {
+            None
+        } else {
+            let est = self.decoder.estimate();
+            let mut bloom = BloomFilter::with_fpr(est.len().max(8), self.opts.smf_fpr, self.opts.sig_seed ^ 0xb100_f11e);
+            for id in &est {
+                bloom.insert(*id);
+            }
+            Some(bloom.to_bytes())
+        };
+        Some(Msg::Round {
+            residue: compress_residue(&self.decoder.export_residue()),
+            smf: smf_out,
+            inquiry: my_inquiry,
+            answers: my_answers,
+            done: self.settled,
+        })
+    }
+
+    fn decoder_len(&self) -> usize {
+        self.decoder.residue_len()
+    }
+
+    /// Final estimate (our unique elements), sorted.
+    pub fn result(&self) -> Vec<u64> {
+        let mut est = self.decoder.estimate();
+        est.sort_unstable();
+        est
+    }
+}
+
+/// The truncation-codec parameters as seen from the responder (whose unique count is the
+/// positive Skellam component).
+pub fn codec_params(params: &CsParams, initiator_is_alice: bool) -> SketchCodecParams {
+    let (r_unique, i_unique) = if initiator_is_alice {
+        (params.est_b_unique, params.est_a_unique)
+    } else {
+        (params.est_a_unique, params.est_b_unique)
+    };
+    SketchCodecParams::derive(r_unique, i_unique, params.l, params.m)
+}
+
+/// Initiator helper: the compressed sketch message for `set`.
+pub fn initiator_sketch(params: &CsParams, set: &[u64], initiator_is_alice: bool) -> Msg {
+    let sketch = Sketch::encode(params.matrix(), set);
+    Msg::Sketch(compress_sketch(&sketch.counts, &codec_params(params, initiator_is_alice)))
+}
+
+/// Responder helper: recover the initiator's sketch and form the initial canonical
+/// residue `r⃗_(1) = M·1_R − M̂·1_I` (responder-positive).
+pub fn responder_residue(
+    params: &CsParams,
+    set: &[u64],
+    sketch: &crate::entropy::SketchMsg,
+    initiator_is_alice: bool,
+) -> Option<Vec<i32>> {
+    let my_sketch = Sketch::encode(params.matrix(), set);
+    let (x_hat, _, _) =
+        recover_sketch(sketch, &my_sketch.counts, &codec_params(params, initiator_is_alice))?;
+    Some(my_sketch.counts.iter().zip(&x_hat).map(|(y, x)| y - x).collect())
+}
+
+/// The synthetic first Round message that seeds the responder's ping-pong loop.
+pub fn seed_round(residue0: &[i32]) -> Msg {
+    Msg::Round {
+        residue: compress_residue(residue0),
+        smf: None,
+        inquiry: Vec::new(),
+        answers: Vec::new(),
+        done: false,
+    }
+}
+
+/// In-memory end-to-end bidirectional run with exact byte accounting.
+///
+/// `a`/`b` are Alice's and Bob's sets; the initiator is chosen per §5.1.
+pub fn run(a: &[u64], b: &[u64], params: &CsParams, opts: BidiOptions) -> BidiOutcome {
+    let mut comm = CommLog::new();
+    let alice_initiates = params.est_a_unique <= params.est_b_unique;
+    // Initiator I sends the sketch; responder R decodes the positive component.
+    let (i_set, r_set) = if alice_initiates { (a, b) } else { (b, a) };
+
+    // Message 1: I's truncated sketch (plus the tiny Hello header).
+    let hello = Msg::Hello {
+        l: params.l,
+        m: params.m,
+        seed: params.seed,
+        universe_bits: params.universe_bits,
+        est_initiator_unique: if alice_initiates { params.est_a_unique } else { params.est_b_unique } as u64,
+        est_responder_unique: if alice_initiates { params.est_b_unique } else { params.est_a_unique } as u64,
+        set_len: i_set.len() as u64,
+    };
+    comm.record(alice_initiates, "hello", hello.to_bytes().len());
+
+    let sketch_msg = initiator_sketch(params, i_set, alice_initiates);
+    comm.record(alice_initiates, "sketch", sketch_msg.to_bytes().len());
+
+    // Responder reconstructs the sketch and forms the canonical residue.
+    let Msg::Sketch(ref sm) = sketch_msg else { unreachable!() };
+    let residue0 = responder_residue(params, r_set, sm, alice_initiates).expect("sketch recovery");
+
+    let mut responder = Peer::new(params, r_set, Side::Positive, opts);
+    let mut initiator = Peer::new(params, i_set, Side::Negative, opts);
+
+    // Seed the ping-pong: hand the responder the initial residue as a synthetic round.
+    let mut in_flight = Some(seed_round(&residue0));
+    let mut responder_turn = true;
+    let mut rounds = 1usize; // the sketch message
+    let mut converged = false;
+
+    while let Some(msg) = in_flight.take() {
+        if rounds > opts.max_rounds {
+            break;
+        }
+        let (peer, from_alice) = if responder_turn {
+            (&mut responder, !alice_initiates)
+        } else {
+            (&mut initiator, alice_initiates)
+        };
+        let reply = peer.step(&msg);
+        match reply {
+            Some(reply) => {
+                comm.record(from_alice, "round", reply.to_bytes().len());
+                rounds += 1;
+                in_flight = Some(reply);
+            }
+            None => {
+                converged = true;
+            }
+        }
+        responder_turn = !responder_turn;
+    }
+    if !converged {
+        // Round budget exhausted: report the current state (callers treat as failure).
+        converged = responder.settled && initiator.settled;
+    }
+
+    let (a_minus_b, b_minus_a) = if alice_initiates {
+        (initiator.result(), responder.result())
+    } else {
+        (responder.result(), initiator.result())
+    };
+    let exclude: std::collections::HashSet<u64> = a_minus_b.iter().copied().collect();
+    let mut intersection: Vec<u64> = a.iter().copied().filter(|x| !exclude.contains(x)).collect();
+    intersection.sort_unstable();
+
+    BidiOutcome { a_minus_b, b_minus_a, intersection, comm, rounds, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn check_exact(n_common: usize, a_u: usize, b_u: usize, seed: u64) -> BidiOutcome {
+        let (a, b) = synth::overlap_pair(n_common, a_u, b_u, seed);
+        let params = CsParams::tuned_bidi(n_common + a_u + b_u, a_u, b_u);
+        let out = run(&a, &b, &params, BidiOptions::default());
+        assert!(out.converged, "did not converge (seed {seed}, {a_u}/{b_u})");
+        assert_eq!(out.a_minus_b, synth::difference(&a, &b), "A\\B wrong (seed {seed})");
+        assert_eq!(out.b_minus_a, synth::difference(&b, &a), "B\\A wrong (seed {seed})");
+        assert_eq!(out.intersection, synth::intersect(&a, &b), "A∩B wrong (seed {seed})");
+        out
+    }
+
+    #[test]
+    fn exact_balanced() {
+        let out = check_exact(10_000, 100, 100, 1);
+        assert!(out.rounds <= 12, "rounds {}", out.rounds);
+    }
+
+    #[test]
+    fn exact_skewed_bob_heavy() {
+        check_exact(10_000, 50, 400, 2);
+    }
+
+    #[test]
+    fn exact_skewed_alice_heavy() {
+        // |A\B| > |B\A| ⇒ Bob initiates.
+        check_exact(10_000, 400, 50, 3);
+    }
+
+    #[test]
+    fn exact_many_seeds() {
+        for seed in 10..20 {
+            check_exact(5_000, 60, 60, seed);
+        }
+    }
+
+    #[test]
+    fn uni_degenerate_case_still_works() {
+        // A ⊂ B handled by the bidirectional machinery too.
+        check_exact(5_000, 0, 120, 4);
+    }
+
+    #[test]
+    fn comm_cost_roughly_double_unidirectional() {
+        // Observation 10: bidi ≈ 2× uni at the same d.
+        let d = 200usize;
+        let (a, b) = synth::overlap_pair(20_000, d / 2, d / 2, 5);
+        let params = CsParams::tuned_bidi(20_000 + d, d / 2, d / 2);
+        let out = run(&a, &b, &params, BidiOptions::default());
+        assert!(out.converged);
+        let (a2, b2) = synth::subset_pair(20_000, d, 6);
+        let p2 = CsParams::tuned_uni(b2.len(), d);
+        let uni = crate::protocol::uni::run(&a2, &b2, &p2).unwrap();
+        let ratio = out.comm.total_bytes() as f64 / uni.comm.total_bytes() as f64;
+        assert!(ratio < 6.0, "bidi/uni cost ratio {ratio}");
+    }
+}

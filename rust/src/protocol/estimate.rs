@@ -1,0 +1,184 @@
+//! The d-estimation handshake (§7.1): "the SDC d is known to all protocols, because it
+//! can be handily estimated using min-wise hashing [47], Strata [48], … by sending a few
+//! hundred bytes during a handshake step."
+//!
+//! We implement both referenced estimators so sessions can bootstrap without ground truth:
+//!
+//! * **Strata estimator** (Eppstein et al. / Flajolet–Martin stratification): 32 strata of
+//!   tiny IBLTs; stratum k receives elements whose hash has exactly k leading zero bits.
+//!   Decode strata from the deepest down; when a stratum's difference IBLT peels, its
+//!   count scales by 2^(k+1). A few KB buys a constant-factor estimate of d = |AΔB|.
+//! * **Min-wise (MinHash) estimator**: k bottom hashes estimate the Jaccard similarity J;
+//!   d ≈ (1−J)/(1+J) · (|A|+|B|). A few hundred bytes; best when d/|A∪B| is not tiny.
+
+use crate::baselines::iblt::{Iblt, IbltParams};
+use crate::hash::hash_u64;
+
+/// Strata estimator: `strata` levels × a `cells`-cell IBLT each.
+pub struct StrataEstimator {
+    pub strata: Vec<Iblt>,
+    seed: u64,
+}
+
+impl StrataEstimator {
+    /// Paper-typical sizing: 32 strata × 80 cells ≈ a few KB.
+    pub fn new(seed: u64) -> Self {
+        Self::with_shape(32, 80, seed)
+    }
+
+    pub fn with_shape(n_strata: usize, cells: usize, seed: u64) -> Self {
+        let params = IbltParams { seed: seed ^ 0x57a7a, ..IbltParams::paper_synthetic() };
+        StrataEstimator {
+            strata: (0..n_strata).map(|_| Iblt::new(cells, params)).collect(),
+            seed,
+        }
+    }
+
+    fn stratum_of(&self, id: u64) -> usize {
+        let h = hash_u64(id, self.seed ^ 0x1e7e1);
+        (h.trailing_zeros() as usize).min(self.strata.len() - 1)
+    }
+
+    pub fn insert_all(&mut self, ids: &[u64]) {
+        for &id in ids {
+            let s = self.stratum_of(id);
+            self.strata[s].insert(id);
+        }
+    }
+
+    /// Wire size (the handshake cost).
+    pub fn size_bytes(&self) -> usize {
+        self.strata.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Estimate `d = |A Δ B|` from our strata vs the peer's.
+    ///
+    /// Walk from the deepest stratum down, summing decoded differences; the first stratum
+    /// that fails to peel caps the exactly-counted range, and the accumulated count scales
+    /// by `2^(k+1)` where `k` is the last decoded level (standard Strata estimation).
+    pub fn estimate(&self, theirs: &StrataEstimator) -> usize {
+        assert_eq!(self.strata.len(), theirs.strata.len());
+        let mut count = 0usize;
+        for k in (0..self.strata.len()).rev() {
+            match self.strata[k].sub(&theirs.strata[k]).peel() {
+                Some((pos, neg)) => count += pos.len() + neg.len(),
+                None => {
+                    // Everything below level k is unobserved: scale up.
+                    return (count << (k + 1)).max(1);
+                }
+            }
+        }
+        count.max(1)
+    }
+}
+
+/// MinHash (bottom-k) estimator of the symmetric difference cardinality.
+pub struct MinHashEstimator {
+    mins: Vec<u64>,
+    pub set_len: usize,
+}
+
+impl MinHashEstimator {
+    pub fn build(ids: &[u64], k: usize, seed: u64) -> Self {
+        // Bottom-k of one hash function (equivalent to k-mins in accuracy class, cheaper).
+        let mut hashes: Vec<u64> = ids.iter().map(|&id| hash_u64(id, seed)).collect();
+        hashes.sort_unstable();
+        hashes.truncate(k);
+        MinHashEstimator { mins: hashes, set_len: ids.len() }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        8 * self.mins.len() + 8
+    }
+
+    /// Jaccard estimate from two bottom-k signatures.
+    pub fn jaccard(&self, other: &MinHashEstimator) -> f64 {
+        let k = self.mins.len().min(other.mins.len());
+        if k == 0 {
+            return 1.0;
+        }
+        // Bottom-k of the union = merge of the two bottom-k lists.
+        let mut union: Vec<u64> = self
+            .mins
+            .iter()
+            .chain(&other.mins)
+            .copied()
+            .collect();
+        union.sort_unstable();
+        union.dedup();
+        union.truncate(k);
+        let mine: std::collections::HashSet<u64> = self.mins.iter().copied().collect();
+        let theirs: std::collections::HashSet<u64> = other.mins.iter().copied().collect();
+        let shared = union
+            .iter()
+            .filter(|h| mine.contains(h) && theirs.contains(h))
+            .count();
+        shared as f64 / k as f64
+    }
+
+    /// `d̂ = (1−J)/(1+J)·(|A|+|B|)` (from J = |A∩B|/|A∪B| and |A|+|B| = |A∪B|+|A∩B|).
+    pub fn estimate_d(&self, other: &MinHashEstimator) -> usize {
+        let j = self.jaccard(other).clamp(0.0, 1.0);
+        let total = (self.set_len + other.set_len) as f64;
+        ((1.0 - j) / (1.0 + j) * total).round().max(0.0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn strata_estimates_within_factor_two() {
+        for (d, seed) in [(100usize, 1u64), (1_000, 2), (10_000, 3)] {
+            let (a, b) = synth::overlap_pair(50_000, d / 2, d - d / 2, seed);
+            let mut ea = StrataEstimator::new(7);
+            ea.insert_all(&a);
+            let mut eb = StrataEstimator::new(7);
+            eb.insert_all(&b);
+            let est = ea.estimate(&eb);
+            assert!(
+                est >= d / 3 && est <= d * 3,
+                "d={d}: estimate {est} off by more than 3x"
+            );
+        }
+    }
+
+    #[test]
+    fn strata_handshake_is_few_kb() {
+        let e = StrataEstimator::new(1);
+        assert!(e.size_bytes() < 40_000, "{}", e.size_bytes());
+    }
+
+    #[test]
+    fn strata_identical_sets_estimate_small() {
+        let (a, _) = synth::subset_pair(20_000, 0, 4);
+        let mut ea = StrataEstimator::new(7);
+        ea.insert_all(&a);
+        let mut eb = StrataEstimator::new(7);
+        eb.insert_all(&a);
+        assert!(ea.estimate(&eb) <= 2);
+    }
+
+    #[test]
+    fn minhash_estimates_large_differences() {
+        // MinHash shines when d is a sizable fraction of the union.
+        let (a, b) = synth::overlap_pair(20_000, 5_000, 5_000, 5);
+        let ma = MinHashEstimator::build(&a, 512, 9);
+        let mb = MinHashEstimator::build(&b, 512, 9);
+        let est = ma.estimate_d(&mb);
+        assert!(ma.size_bytes() < 5_000);
+        assert!(
+            (5_000..20_000).contains(&est),
+            "true d=10000, estimate {est}"
+        );
+    }
+
+    #[test]
+    fn minhash_jaccard_of_identical_sets_is_one() {
+        let (a, _) = synth::subset_pair(5_000, 0, 6);
+        let ma = MinHashEstimator::build(&a, 128, 9);
+        assert!((ma.jaccard(&ma) - 1.0).abs() < 1e-12);
+    }
+}

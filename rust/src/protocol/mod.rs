@@ -1,0 +1,116 @@
+//! The CommonSense SetX protocols: unidirectional (§3) and bidirectional ping-pong (§5).
+//!
+//! Both are implemented as *pure message-passing state machines*: every byte that would
+//! cross the network is actually framed (see [`wire`]) and charged to a
+//! [`crate::metrics::CommLog`], so the communication costs reported by the experiment
+//! harnesses are measured, not estimated. The [`crate::coordinator`] module runs the same
+//! state machines over real TCP sockets.
+
+pub mod bidi;
+pub mod estimate;
+pub mod uni;
+pub mod wire;
+
+pub use bidi::{BidiOptions, BidiOutcome};
+pub use uni::UniOutcome;
+
+use crate::matrix::CsMatrix;
+
+/// Shared CS parameters of a session. Alice and Bob must agree on all fields (in the wire
+/// protocol they travel in the handshake header).
+#[derive(Clone, Copy, Debug)]
+pub struct CsParams {
+    /// Sketch length (rows of M).
+    pub l: u32,
+    /// Ones per column (7 for unidirectional, 5 for bidirectional — §7.1).
+    pub m: u32,
+    /// Shared matrix seed.
+    pub seed: u64,
+    /// Nominal universe bit-width `u` (64 for §7.2-uni, 256 for §7.2-bidi/§7.3); used by
+    /// accounting (signature widths) — internal ids are always 64-bit.
+    pub universe_bits: u32,
+    /// d-estimate handshake outputs (the paper assumes the SDC is known to all protocols).
+    pub est_a_unique: usize,
+    pub est_b_unique: usize,
+}
+
+impl CsParams {
+    pub fn matrix(&self) -> CsMatrix {
+        CsMatrix::new(self.l, self.m, self.seed)
+    }
+
+    /// Empirically calibrated sketch length for reliable lossless MP decode:
+    /// `l ≈ d·m·(6 + log2(n/d))/7`, the shape `O(d·log(n/d))` of Theorem 8 with constants
+    /// fit by the tuner (`commonsense tune`); `safety` multiplies on top (1.0 = calibrated
+    /// minimum that always decoded in our runs).
+    pub fn l_for(d: usize, n: usize, m: u32, safety: f64) -> u32 {
+        let d = d.max(1) as f64;
+        let n = (n.max(2) as f64).max(d * 2.0);
+        let l = d * m as f64 * (6.0 + (n / d).log2()) / 7.0 * safety;
+        (l.ceil() as u32).max(128)
+    }
+
+    /// d-dependent safety factor: the empirical minimal factor (tuner, 20-trial perfect
+    /// decode) *decreases* with d — MP error-correction strengthens with more signal:
+    /// measured minima 1.05 / 0.80 / 0.60 at d = 200 / 1k / 5k (n = 100k). We keep a
+    /// ≈ 20% margin on top (§Perf log in EXPERIMENTS.md).
+    fn uni_safety(d: usize) -> f64 {
+        (1.2 - 0.32 * ((d.max(1) as f64) / 200.0).log10()).clamp(0.72, 1.3)
+    }
+
+    /// Bidirectional needs more rows (the opposite-signed component is decode noise):
+    /// measured minima 1.50 / 1.20 at d = 200 / 1k.
+    fn bidi_safety(d: usize) -> f64 {
+        (1.85 - 0.5 * ((d.max(1) as f64) / 200.0).log10()).clamp(1.15, 2.0)
+    }
+
+    /// Defaults for unidirectional SetX over `|B| = n` with `d = |B\A|`.
+    pub fn tuned_uni(n: usize, d: usize) -> Self {
+        let m = 7;
+        CsParams {
+            l: Self::l_for(d, n, m, Self::uni_safety(d)),
+            m,
+            seed: 0xC0FFEE,
+            universe_bits: 64,
+            est_a_unique: 0,
+            est_b_unique: d,
+        }
+    }
+
+    /// Defaults for bidirectional SetX over `n = |A∪B|` with the given unique counts.
+    pub fn tuned_bidi(n: usize, a_unique: usize, b_unique: usize) -> Self {
+        let m = 5;
+        let d = a_unique + b_unique;
+        CsParams {
+            // Bidirectional decoding fights the opposite-signed component as noise; the
+            // calibrated constant is larger than the unidirectional one.
+            l: Self::l_for(d, n, m, Self::bidi_safety(d)),
+            m,
+            seed: 0xC0FFEE,
+            universe_bits: 256,
+            est_a_unique: a_unique,
+            est_b_unique: b_unique,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l_scales_like_d_log_n_over_d() {
+        let l1 = CsParams::l_for(100, 100_000, 7, 1.0);
+        let l2 = CsParams::l_for(200, 100_000, 7, 1.0);
+        let l3 = CsParams::l_for(100, 1_000_000, 7, 1.0);
+        assert!(l2 > l1 && (l2 as f64) < 2.2 * l1 as f64);
+        assert!(l3 > l1, "larger universe ⇒ more rows");
+        assert!((l3 as f64) < 1.4 * l1 as f64, "only logarithmically more");
+    }
+
+    #[test]
+    fn tuned_params_match_paper_m() {
+        assert_eq!(CsParams::tuned_uni(10_000, 100).m, 7);
+        assert_eq!(CsParams::tuned_bidi(10_000, 50, 50).m, 5);
+    }
+}

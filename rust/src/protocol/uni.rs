@@ -1,0 +1,136 @@
+//! Unidirectional CommonSense (§3): one message, exact `A ∩ B` when `A ⊆ B`.
+//!
+//! 1. Alice encodes `A` into the CS sketch `M·1_A`, truncation-compresses it (Appendix C.2),
+//!    and sends it — the single round of communication.
+//! 2. Bob recovers `M·1_A`, forms `r = M·1_B − M·1_A = M·1_{B\A}`, and losslessly
+//!    reconstructs `1_{B\A}` with the binary MP decoder (falling back to L1 pursuit /
+//!    SSMP if the L2 loop stalls). Then `A ∩ B = B \ (B\A)`.
+
+use crate::decoder::{DecoderConfig, MpDecoder, Pursuit, Side};
+use crate::entropy::{compress_sketch, recover_sketch, SketchCodecParams};
+use crate::metrics::CommLog;
+use crate::protocol::{wire::Msg, CsParams};
+use crate::sketch::Sketch;
+
+/// Result of a unidirectional run.
+#[derive(Clone, Debug)]
+pub struct UniOutcome {
+    /// Bob's recovered `B \ A` (sorted).
+    pub b_minus_a: Vec<u64>,
+    /// `A ∩ B` (sorted) — equal to `A` when the protocol succeeds and `A ⊆ B`.
+    pub intersection: Vec<u64>,
+    /// Full message accounting.
+    pub comm: CommLog,
+    /// Decoder fell back to L1 pursuit.
+    pub used_fallback: bool,
+}
+
+/// Alice's half: produce the (framed) sketch message.
+pub fn alice_encode(a: &[u64], params: &CsParams) -> (Msg, usize) {
+    let sketch = Sketch::encode(params.matrix(), a);
+    let codec = SketchCodecParams::derive(params.est_b_unique, params.est_a_unique, params.l, params.m);
+    let msg = Msg::Sketch(compress_sketch(&sketch.counts, &codec));
+    let size = msg.to_bytes().len();
+    (msg, size)
+}
+
+/// Bob's half: decode `B \ A` from the received sketch message.
+pub fn bob_decode(msg: &Msg, b: &[u64], params: &CsParams) -> Option<(Vec<u64>, bool)> {
+    let Msg::Sketch(sketch_msg) = msg else {
+        return None;
+    };
+    let matrix = params.matrix();
+    let my_sketch = Sketch::encode(matrix, b);
+    let codec = SketchCodecParams::derive(params.est_b_unique, params.est_a_unique, params.l, params.m);
+    let (x_hat, _repaired, _unresolved) = recover_sketch(sketch_msg, &my_sketch.counts, &codec)?;
+    // r = M·1_B − M̂·1_A, canonical orientation (Bob-positive).
+    let residue: Vec<i32> = my_sketch
+        .counts
+        .iter()
+        .zip(&x_hat)
+        .map(|(y, x)| y - x)
+        .collect();
+
+    let mut dec = MpDecoder::new(&matrix, b, Side::Positive);
+    dec.set_config(DecoderConfig::commonsense());
+    dec.load_residue(&residue);
+    let stats = dec.run();
+    let mut used_fallback = false;
+    if !stats.converged {
+        // §3.4: fall back to the RIP-1-safe L1 pursuit (SSMP) when vanilla MP stalls.
+        used_fallback = true;
+        dec.switch_pursuit(Pursuit::L1);
+        dec.run();
+        dec.switch_pursuit(Pursuit::L2);
+        dec.run();
+    }
+    let mut b_minus_a = dec.estimate();
+    b_minus_a.sort_unstable();
+    Some((b_minus_a, used_fallback))
+}
+
+/// End-to-end in-memory run with exact byte accounting.
+pub fn run(a: &[u64], b: &[u64], params: &CsParams) -> Option<UniOutcome> {
+    let mut comm = CommLog::new();
+    let (msg, size) = alice_encode(a, params);
+    comm.record(true, "sketch", size);
+    // Serialize/deserialize through the real wire format (what TCP would carry).
+    let bytes = msg.to_bytes();
+    let (received, _) = Msg::from_bytes(&bytes)?;
+    let (b_minus_a, used_fallback) = bob_decode(&received, b, params)?;
+    let exclude: std::collections::HashSet<u64> = b_minus_a.iter().copied().collect();
+    let mut intersection: Vec<u64> = b.iter().copied().filter(|x| !exclude.contains(x)).collect();
+    intersection.sort_unstable();
+    Some(UniOutcome { b_minus_a, intersection, comm, used_fallback })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn exact_intersection_small() {
+        let (a, b) = synth::subset_pair(5_000, 50, 1);
+        let params = CsParams::tuned_uni(b.len(), 50);
+        let out = run(&a, &b, &params).unwrap();
+        let mut want = a.clone();
+        want.sort_unstable();
+        assert_eq!(out.intersection, want);
+        assert_eq!(out.b_minus_a, synth::difference(&b, &a));
+        assert_eq!(out.comm.rounds(), 1, "unidirectional = one message");
+    }
+
+    #[test]
+    fn exact_intersection_many_seeds() {
+        for seed in 0..10 {
+            let (a, b) = synth::subset_pair(20_000, 200, seed);
+            let params = CsParams::tuned_uni(b.len(), 200);
+            let out = run(&a, &b, &params).unwrap();
+            assert_eq!(out.b_minus_a, synth::difference(&b, &a), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn comm_cost_beats_raw_sketch_and_scales_with_d() {
+        let (a1, b1) = synth::subset_pair(30_000, 100, 3);
+        let p1 = CsParams::tuned_uni(b1.len(), 100);
+        let c1 = run(&a1, &b1, &p1).unwrap().comm.total_bytes();
+        let (a2, b2) = synth::subset_pair(30_000, 800, 3);
+        let p2 = CsParams::tuned_uni(b2.len(), 800);
+        let c2 = run(&a2, &b2, &p2).unwrap().comm.total_bytes();
+        assert!(c1 < 4 * p1.l as usize, "compression must beat raw i32 sketch");
+        assert!(c2 > c1, "cost grows with d");
+        assert!(c2 < 12 * c1, "roughly linear in d (log factor slack)");
+    }
+
+    #[test]
+    fn empty_difference_degenerate() {
+        // A == B: d-estimate of 0 still has to work (l floors at 128).
+        let (a, _) = synth::subset_pair(2_000, 0, 9);
+        let params = CsParams::tuned_uni(a.len(), 1);
+        let out = run(&a, &a, &params).unwrap();
+        assert!(out.b_minus_a.is_empty());
+        assert_eq!(out.intersection.len(), 2_000);
+    }
+}

@@ -1,0 +1,259 @@
+//! Wire format — hand-rolled, dependency-free, byte-exact.
+//!
+//! Frame layout: `type:u8 | body_len:varint | body`. Every field that crosses the wire is
+//! serialized here so the experiment harnesses charge real sizes. (The image's crate set
+//! has no serde; this module doubles as the protocol's stable interchange format for the
+//! TCP coordinator.)
+
+use crate::entropy::{get_varint, put_varint, SketchMsg};
+
+/// A protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Session handshake: CS parameters + role metadata.
+    Hello {
+        l: u32,
+        m: u32,
+        seed: u64,
+        universe_bits: u32,
+        est_initiator_unique: u64,
+        est_responder_unique: u64,
+        set_len: u64,
+    },
+    /// The initiator's compressed, truncation-coded sketch (message 1).
+    Sketch(SketchMsg),
+    /// One ping-pong round (§5.1–5.2).
+    Round {
+        /// Entropy-compressed canonical residue.
+        residue: Vec<u8>,
+        /// Serialized Bloom filter of the sender's current estimate set (absent on the
+        /// final confirmation).
+        smf: Option<Vec<u8>>,
+        /// "Last inquiry": signatures of tentatively-updated SMF-positive coordinates.
+        inquiry: Vec<u64>,
+        /// Answers to the peer's previous inquiry (true = conflict, i.e. the peer's
+        /// tentative element is in our estimate — a common hallucination).
+        answers: Vec<bool>,
+        /// Sender believes the session is complete (residue zero, nothing outstanding).
+        done: bool,
+    },
+}
+
+const TYPE_HELLO: u8 = 1;
+const TYPE_SKETCH: u8 = 2;
+const TYPE_ROUND: u8 = 3;
+
+impl Msg {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        let ty = match self {
+            Msg::Hello {
+                l,
+                m,
+                seed,
+                universe_bits,
+                est_initiator_unique,
+                est_responder_unique,
+                set_len,
+            } => {
+                put_varint(&mut body, *l as u64);
+                put_varint(&mut body, *m as u64);
+                body.extend_from_slice(&seed.to_le_bytes());
+                put_varint(&mut body, *universe_bits as u64);
+                put_varint(&mut body, *est_initiator_unique);
+                put_varint(&mut body, *est_responder_unique);
+                put_varint(&mut body, *set_len);
+                TYPE_HELLO
+            }
+            Msg::Sketch(sk) => {
+                body = sk.to_bytes();
+                TYPE_SKETCH
+            }
+            Msg::Round { residue, smf, inquiry, answers, done } => {
+                put_varint(&mut body, residue.len() as u64);
+                body.extend_from_slice(residue);
+                match smf {
+                    Some(bytes) => {
+                        body.push(1);
+                        put_varint(&mut body, bytes.len() as u64);
+                        body.extend_from_slice(bytes);
+                    }
+                    None => body.push(0),
+                }
+                put_varint(&mut body, inquiry.len() as u64);
+                for sig in inquiry {
+                    body.extend_from_slice(&sig.to_le_bytes());
+                }
+                put_varint(&mut body, answers.len() as u64);
+                // Bit-packed answers.
+                let mut packed = vec![0u8; answers.len().div_ceil(8)];
+                for (i, &a) in answers.iter().enumerate() {
+                    if a {
+                        packed[i / 8] |= 1 << (i % 8);
+                    }
+                }
+                body.extend_from_slice(&packed);
+                body.push(*done as u8);
+                TYPE_ROUND
+            }
+        };
+        let mut out = Vec::with_capacity(body.len() + 6);
+        out.push(ty);
+        put_varint(&mut out, body.len() as u64);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse one frame; returns `(msg, bytes_consumed)`.
+    pub fn from_bytes(data: &[u8]) -> Option<(Msg, usize)> {
+        let ty = *data.first()?;
+        let (body_len, used) = get_varint(&data[1..])?;
+        let start = 1 + used;
+        let body = data.get(start..start + body_len as usize)?;
+        let total = start + body_len as usize;
+        let msg = match ty {
+            TYPE_HELLO => {
+                let mut off = 0usize;
+                let (l, u) = get_varint(&body[off..])?;
+                off += u;
+                let (m, u) = get_varint(&body[off..])?;
+                off += u;
+                let seed = u64::from_le_bytes(body.get(off..off + 8)?.try_into().ok()?);
+                off += 8;
+                let (ub, u) = get_varint(&body[off..])?;
+                off += u;
+                let (ei, u) = get_varint(&body[off..])?;
+                off += u;
+                let (er, u) = get_varint(&body[off..])?;
+                off += u;
+                let (sl, _) = get_varint(&body[off..])?;
+                Msg::Hello {
+                    l: l as u32,
+                    m: m as u32,
+                    seed,
+                    universe_bits: ub as u32,
+                    est_initiator_unique: ei,
+                    est_responder_unique: er,
+                    set_len: sl,
+                }
+            }
+            TYPE_SKETCH => Msg::Sketch(SketchMsg::from_bytes(body)?),
+            TYPE_ROUND => {
+                let mut off = 0usize;
+                let (rl, u) = get_varint(&body[off..])?;
+                off += u;
+                let residue = body.get(off..off + rl as usize)?.to_vec();
+                off += rl as usize;
+                let has_smf = *body.get(off)? == 1;
+                off += 1;
+                let smf = if has_smf {
+                    let (sl, u) = get_varint(&body[off..])?;
+                    off += u;
+                    let bytes = body.get(off..off + sl as usize)?.to_vec();
+                    off += sl as usize;
+                    Some(bytes)
+                } else {
+                    None
+                };
+                let (nq, u) = get_varint(&body[off..])?;
+                off += u;
+                let mut inquiry = Vec::with_capacity(nq as usize);
+                for _ in 0..nq {
+                    inquiry.push(u64::from_le_bytes(body.get(off..off + 8)?.try_into().ok()?));
+                    off += 8;
+                }
+                let (na, u) = get_varint(&body[off..])?;
+                off += u;
+                let packed = body.get(off..off + (na as usize).div_ceil(8))?;
+                off += (na as usize).div_ceil(8);
+                let answers = (0..na as usize)
+                    .map(|i| packed[i / 8] >> (i % 8) & 1 == 1)
+                    .collect();
+                let done = *body.get(off)? == 1;
+                Msg::Round { residue, smf, inquiry, answers, done }
+            }
+            _ => return None,
+        };
+        Some((msg, total))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::compress_residue;
+
+    #[test]
+    fn hello_roundtrip() {
+        let msg = Msg::Hello {
+            l: 1234,
+            m: 7,
+            seed: 0xdead_beef,
+            universe_bits: 256,
+            est_initiator_unique: 10,
+            est_responder_unique: 999,
+            set_len: 1_000_000,
+        };
+        let bytes = msg.to_bytes();
+        let (back, used) = Msg::from_bytes(&bytes).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn round_roundtrip_full_fields() {
+        let msg = Msg::Round {
+            residue: compress_residue(&[0, 1, -1, 0, 2]),
+            smf: Some(vec![1, 2, 3, 4, 5]),
+            inquiry: vec![0xAAAA, 0xBBBB],
+            answers: vec![true, false, true, true, false, false, false, true, true],
+            done: false,
+        };
+        let bytes = msg.to_bytes();
+        let (back, used) = Msg::from_bytes(&bytes).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn round_roundtrip_minimal() {
+        let msg = Msg::Round {
+            residue: vec![],
+            smf: None,
+            inquiry: vec![],
+            answers: vec![],
+            done: true,
+        };
+        let bytes = msg.to_bytes();
+        let (back, _) = Msg::from_bytes(&bytes).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn truncated_frames_rejected() {
+        let msg = Msg::Round {
+            residue: vec![9; 40],
+            smf: Some(vec![7; 10]),
+            inquiry: vec![1],
+            answers: vec![true],
+            done: false,
+        };
+        let bytes = msg.to_bytes();
+        for cut in [0usize, 1, 5, bytes.len() - 1] {
+            assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn frames_concatenate() {
+        let m1 = Msg::Round { residue: vec![1], smf: None, inquiry: vec![], answers: vec![], done: false };
+        let m2 = Msg::Round { residue: vec![2, 3], smf: None, inquiry: vec![], answers: vec![], done: true };
+        let mut stream = m1.to_bytes();
+        stream.extend(m2.to_bytes());
+        let (b1, used1) = Msg::from_bytes(&stream).unwrap();
+        let (b2, used2) = Msg::from_bytes(&stream[used1..]).unwrap();
+        assert_eq!(b1, m1);
+        assert_eq!(b2, m2);
+        assert_eq!(used1 + used2, stream.len());
+    }
+}

@@ -1,0 +1,240 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and run them from rust.
+//!
+//! `make artifacts` lowers the Layer-2 JAX graphs (which call the Layer-1 Pallas kernels)
+//! to HLO text; this module compiles them once on the PJRT CPU client and exposes typed
+//! entry points. Python never runs at request time — the rust binary is self-contained
+//! once `artifacts/` exists.
+//!
+//! The accelerated path operates on *dense universe-partition blocks* (DESIGN.md
+//! §Hardware-Adaptation): `l × nb` 0/1 column blocks in row-major f32, matching the JAX
+//! array layout.
+
+use crate::matrix::CsMatrix;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shapes baked into the artifacts (from `artifacts/manifest.txt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockShapes {
+    pub l: usize,
+    pub nb: usize,
+    pub steps: usize,
+}
+
+/// A compiled-artifact registry bound to a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub shapes: BlockShapes,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Default artifact directory (repo-relative), overridable via `COMMONSENSE_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("COMMONSENSE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load every artifact listed in `manifest.txt` and compile it on the CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let mut lines = manifest.lines();
+        let header = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        let mut l = 0usize;
+        let mut nb = 0usize;
+        let mut steps = 0usize;
+        for kv in header.split_whitespace() {
+            let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("bad manifest header"))?;
+            let v: usize = v.parse()?;
+            match k {
+                "l" => l = v,
+                "nb" => nb = v,
+                "steps" => steps = v,
+                _ => {}
+            }
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut execs = HashMap::new();
+        for name in lines {
+            let name = name.trim();
+            if name.is_empty() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(dir.join(name))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let key = name
+                .split_once('_')
+                .map(|(k, _)| k.to_string())
+                .unwrap_or_else(|| name.to_string());
+            execs.insert(key, exe);
+        }
+        if l == 0 || nb == 0 {
+            return Err(anyhow!("manifest missing shapes"));
+        }
+        Ok(Runtime { client, execs, shapes: BlockShapes { l, nb, steps }, dir })
+    }
+
+    /// Convenience: load from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(Self::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn exec(&self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.execs
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact `{key}` not in manifest at {}", self.dir.display()))
+    }
+
+    /// y = M_block @ x. `m_block` is row-major `l × nb` f32; `x` has length `nb`.
+    pub fn encode_block(&self, m_block: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let BlockShapes { l, nb, .. } = self.shapes;
+        assert_eq!(m_block.len(), l * nb);
+        assert_eq!(x.len(), nb);
+        let m = xla::Literal::vec1(m_block).reshape(&[l as i64, nb as i64])?;
+        let xv = xla::Literal::vec1(x);
+        let result = self.exec("encode")?.execute::<xla::Literal>(&[m, xv])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// δ = M_blockᵀ r / m.
+    pub fn correlate_block(&self, m_block: &[f32], r: &[f32], m_ones: f32) -> Result<Vec<f32>> {
+        let BlockShapes { l, nb, .. } = self.shapes;
+        assert_eq!(m_block.len(), l * nb);
+        assert_eq!(r.len(), l);
+        let m = xla::Literal::vec1(m_block).reshape(&[l as i64, nb as i64])?;
+        let rv = xla::Literal::vec1(r);
+        let mo = xla::Literal::vec1(&[m_ones]).reshape(&[])?;
+        let result = self.exec("correlate")?.execute::<xla::Literal>(&[m, rv, mo])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Run `steps` MP iterations on a block: returns `(r, x)` after the scan.
+    pub fn decode_block(
+        &self,
+        m_block: &[f32],
+        r: &[f32],
+        x: &[f32],
+        m_ones: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let BlockShapes { l, nb, .. } = self.shapes;
+        assert_eq!(m_block.len(), l * nb);
+        assert_eq!(r.len(), l);
+        assert_eq!(x.len(), nb);
+        let m = xla::Literal::vec1(m_block).reshape(&[l as i64, nb as i64])?;
+        let rv = xla::Literal::vec1(r);
+        let xv = xla::Literal::vec1(x);
+        let mo = xla::Literal::vec1(&[m_ones]).reshape(&[])?;
+        let result = self.exec("decode")?.execute::<xla::Literal>(&[m, rv, xv, mo])?[0][0]
+            .to_literal_sync()?;
+        let (r_out, x_out) = result.to_tuple2()?;
+        Ok((r_out.to_vec::<f32>()?, x_out.to_vec::<f32>()?))
+    }
+
+    /// Accelerated set encoding for a partition whose matrix has exactly `shapes.l` rows:
+    /// chunks ids into `nb`-column dense blocks (zero-padded) and accumulates `M·1_S`
+    /// through the AOT encode executable.
+    pub fn encode_set(&self, matrix: CsMatrix, ids: &[u64]) -> Result<Vec<i32>> {
+        let BlockShapes { l, nb, .. } = self.shapes;
+        assert_eq!(matrix.l() as usize, l, "partition matrix must match artifact l");
+        let mut acc = vec![0i64; l];
+        let ones = vec![1.0f32; nb];
+        for chunk in ids.chunks(nb) {
+            let block = matrix.dense_block_rowmajor(chunk, nb);
+            let y = self.encode_block(&block, &ones)?;
+            for (a, v) in acc.iter_mut().zip(&y) {
+                *a += *v as i64;
+            }
+        }
+        Ok(acc.into_iter().map(|v| v as i32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::Sketch;
+
+    fn runtime() -> Option<Runtime> {
+        // Skip (not fail) when artifacts haven't been built in this checkout.
+        Runtime::load_default().ok()
+    }
+
+    #[test]
+    fn artifacts_load_and_report_platform() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        assert!(rt.shapes.l >= 128 && rt.shapes.nb >= 512);
+    }
+
+    #[test]
+    fn encode_block_matches_sparse_sketch() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let BlockShapes { l, nb, .. } = rt.shapes;
+        let matrix = CsMatrix::new(l as u32, 5, 99);
+        let ids: Vec<u64> = (0..nb as u64 / 2).map(|i| i * 31 + 7).collect();
+        let accel = rt.encode_set(matrix, &ids).unwrap();
+        let sparse = Sketch::encode(matrix, &ids);
+        assert_eq!(accel, sparse.counts);
+    }
+
+    #[test]
+    fn decode_block_recovers_planted_signal() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let BlockShapes { l, nb, steps } = rt.shapes;
+        let matrix = CsMatrix::new(l as u32, 5, 123);
+        let ids: Vec<u64> = (0..nb as u64).collect();
+        let block = matrix.dense_block_rowmajor(&ids, nb);
+        // Plant 10 elements.
+        let planted: Vec<u64> = (0..10u64).map(|i| i * 101 + 3).collect();
+        let sk = Sketch::encode(matrix, &planted);
+        let r0: Vec<f32> = sk.counts.iter().map(|&c| c as f32).collect();
+        let x0 = vec![0.0f32; nb];
+        let mut r = r0;
+        let mut x = x0;
+        for _ in 0..(20usize).div_ceil(steps).max(1) {
+            let (r2, x2) = rt.decode_block(&block, &r, &x, 5.0).unwrap();
+            r = r2;
+            x = x2;
+            if r.iter().all(|&v| v == 0.0) {
+                break;
+            }
+        }
+        assert!(r.iter().all(|&v| v == 0.0), "residue not cleared");
+        let got: Vec<u64> = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > 0.5)
+            .map(|(i, _)| ids[i])
+            .collect();
+        let mut want = planted;
+        want.sort_unstable();
+        let mut got = got;
+        got.sort_unstable();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,225 @@
+//! CS linear sketches: `sk(S) = M·1_S` as an integer-valued l-vector.
+//!
+//! Because `M` is binary and sparse, the sketch of a set is exactly a counting-Bloom-filter-
+//! shaped vector (a coincidence the paper notes in §3.3), every coordinate is a small
+//! non-negative integer, and both one-shot encoding (O(m) per element) and streaming ±1-sparse
+//! updates (O(m) per update, §4) are cheap.
+//!
+//! Coordinates are `i32`: residues (differences of sketches) are signed, and counts beyond
+//! ±2^31 would require |S| ≫ 10^9·l/m, far outside any regime we run.
+
+use crate::matrix::CsMatrix;
+
+/// An integer CS sketch `M·x` for an integer-valued signal `x` (usually 0/1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Sketch {
+    pub matrix: CsMatrix,
+    pub counts: Vec<i32>,
+}
+
+impl Sketch {
+    /// Zero sketch.
+    pub fn zero(matrix: CsMatrix) -> Self {
+        Sketch { matrix, counts: vec![0; matrix.l() as usize] }
+    }
+
+    /// One-shot encode of a set: `M·1_S`. O(m·|S|).
+    pub fn encode(matrix: CsMatrix, ids: &[u64]) -> Self {
+        let mut sk = Self::zero(matrix);
+        let mut buf = vec![0u32; matrix.m() as usize];
+        for &id in ids {
+            for &r in matrix.column_into(id, &mut buf) {
+                sk.counts[r as usize] += 1;
+            }
+        }
+        sk
+    }
+
+    /// Streaming 1-sparse update: add `delta` (±1 for insert/delete) times column `id`.
+    /// This is the §4 data-streaming operation; O(m).
+    #[inline]
+    pub fn update(&mut self, id: u64, delta: i32) {
+        let mut buf = [0u32; 64];
+        let m = self.matrix.m() as usize;
+        debug_assert!(m <= 64, "m > 64 unsupported by the stack buffer");
+        for &r in self.matrix.column_into(id, &mut buf[..m]) {
+            self.counts[r as usize] += delta;
+        }
+    }
+
+    /// `self - other`, e.g. Bob computes `M·1_B − M·1_A` = the measurement of `1_{B\A} − 1_{A\B}`.
+    pub fn sub(&self, other: &Sketch) -> Residue {
+        assert_eq!(self.matrix, other.matrix, "sketches from different matrices");
+        Residue {
+            matrix: self.matrix,
+            values: self
+                .counts
+                .iter()
+                .zip(&other.counts)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// L1 norm of the sketch (= m·|S| for a set sketch; used in sanity checks).
+    pub fn l1(&self) -> u64 {
+        self.counts.iter().map(|&c| c.unsigned_abs() as u64).sum()
+    }
+}
+
+/// A signed residue vector — the measurement a decoder works on. Identical storage to a
+/// sketch but semantically a *difference* of sketches that the MP decoder drives to zero.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Residue {
+    pub matrix: CsMatrix,
+    pub values: Vec<i32>,
+}
+
+impl Residue {
+    pub fn from_values(matrix: CsMatrix, values: Vec<i32>) -> Self {
+        assert_eq!(values.len(), matrix.l() as usize);
+        Residue { matrix, values }
+    }
+
+    pub fn zero(matrix: CsMatrix) -> Self {
+        Residue { matrix, values: vec![0; matrix.l() as usize] }
+    }
+
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.values.iter().all(|&v| v == 0)
+    }
+
+    /// Squared L2 norm (fits u64: values are small).
+    pub fn l2_sq(&self) -> u64 {
+        self.values.iter().map(|&v| (v as i64 * v as i64) as u64).sum()
+    }
+
+    pub fn l1(&self) -> u64 {
+        self.values.iter().map(|&v| v.unsigned_abs() as u64).sum()
+    }
+
+    /// Add `delta`·column(id). Used by decoders when (un)pursuing a coordinate.
+    #[inline]
+    pub fn add_column(&mut self, id: u64, delta: i32) {
+        let mut buf = [0u32; 64];
+        let m = self.matrix.m() as usize;
+        for &r in self.matrix.column_into(id, &mut buf[..m]) {
+            self.values[r as usize] += delta;
+        }
+    }
+
+    /// Negate in place (used when the decoding side's signal has the opposite sign).
+    pub fn negate(&mut self) {
+        for v in &mut self.values {
+            *v = -*v;
+        }
+    }
+
+    /// Dot product of the residue with column `id` — `m·δ_i` in the paper's notation
+    /// (eq. B.1: the optimal L2 pursuit step is `δ_i = rᵀm_i / m`).
+    #[inline]
+    pub fn dot_column(&self, id: u64) -> i32 {
+        let mut buf = [0u32; 64];
+        let m = self.matrix.m() as usize;
+        let mut dot = 0i32;
+        for &r in self.matrix.column_into(id, &mut buf[..m]) {
+            dot += self.values[r as usize];
+        }
+        dot
+    }
+
+    /// Sample mean and (population) variance of coordinates — the method-of-moments inputs
+    /// for the Skellam entropy model (Appendix C.1).
+    pub fn moments(&self) -> (f64, f64) {
+        let n = self.values.len() as f64;
+        let mean = self.values.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = self
+            .values
+            .iter()
+            .map(|&v| {
+                let d = v as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n;
+        (mean, var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat() -> CsMatrix {
+        CsMatrix::new(256, 5, 7)
+    }
+
+    #[test]
+    fn encode_linear_in_elements() {
+        let m = mat();
+        let a = Sketch::encode(m, &[1, 2, 3]);
+        let b = Sketch::encode(m, &[3, 4]);
+        let union_with_multiplicity = Sketch::encode(m, &[1, 2, 3, 3, 4]);
+        let sum: Vec<i32> = a.counts.iter().zip(&b.counts).map(|(x, y)| x + y).collect();
+        assert_eq!(sum, union_with_multiplicity.counts);
+    }
+
+    #[test]
+    fn sketch_l1_is_m_times_cardinality() {
+        let m = mat();
+        let sk = Sketch::encode(m, &(0..100u64).collect::<Vec<_>>());
+        assert_eq!(sk.l1(), 5 * 100);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let m = mat();
+        let ids: Vec<u64> = (0..50).map(|i| i * 977).collect();
+        let oneshot = Sketch::encode(m, &ids);
+        let mut streaming = Sketch::zero(m);
+        for &id in &ids {
+            streaming.update(id, 1);
+        }
+        assert_eq!(oneshot, streaming);
+        // Deleting everything returns to zero.
+        for &id in &ids {
+            streaming.update(id, -1);
+        }
+        assert_eq!(streaming, Sketch::zero(m));
+    }
+
+    #[test]
+    fn subtraction_cancels_intersection() {
+        let m = mat();
+        // A = {common} ∪ {10}, B = {common} ∪ {20, 30}
+        let common: Vec<u64> = (100..200).collect();
+        let mut a = common.clone();
+        a.push(10);
+        let mut b = common.clone();
+        b.extend([20, 30]);
+        let r = Sketch::encode(m, &b).sub(&Sketch::encode(m, &a));
+        // r = M(1_{B\A} - 1_{A\B}) — only 3 columns' worth of mass.
+        assert_eq!(r.l1() <= 3 * 5, true);
+        let mut expect = Residue::zero(m);
+        expect.add_column(20, 1);
+        expect.add_column(30, 1);
+        expect.add_column(10, -1);
+        assert_eq!(r, expect);
+    }
+
+    #[test]
+    fn dot_column_equals_manual() {
+        let m = mat();
+        let mut r = Residue::zero(m);
+        r.add_column(42, 1);
+        assert_eq!(r.dot_column(42), 5); // full self-overlap
+        assert_eq!(r.l2_sq(), 5);
+    }
+
+    #[test]
+    fn moments_of_zero_residue() {
+        let r = Residue::zero(mat());
+        assert_eq!(r.moments(), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,259 @@
+//! Set-membership filters (§8.1): Bloom filter, counting Bloom filter, compressed Bloom.
+//!
+//! Used three ways in this repo:
+//! * the bidirectional protocol attaches a Bloom filter of the sender's current estimate set
+//!   to each residue message to prevent *common hallucinations* (§5.2);
+//! * Graphene (the unidirectional baseline) couples a Bloom filter with an IBLT;
+//! * the CBF approximate-SetX baseline [Guo & Li 2013] is a counting Bloom filter protocol.
+
+use crate::hash::double_hash;
+
+/// Classic Bloom filter over 64-bit ids.
+#[derive(Clone, Debug)]
+pub struct BloomFilter {
+    bits: Vec<u64>,
+    nbits: u64,
+    k: u32,
+    seed: u64,
+}
+
+impl BloomFilter {
+    /// Filter with `nbits` bits and `k` hash functions.
+    pub fn new(nbits: u64, k: u32, seed: u64) -> Self {
+        let nbits = nbits.max(8);
+        BloomFilter {
+            bits: vec![0u64; nbits.div_ceil(64) as usize],
+            nbits,
+            k: k.max(1),
+            seed,
+        }
+    }
+
+    /// Size a filter for `n` items at false-positive rate `fpr` (standard formulas:
+    /// bits = −n·ln(fpr)/ln²2, k = (bits/n)·ln2).
+    pub fn with_fpr(n: usize, fpr: f64, seed: u64) -> Self {
+        let n = n.max(1) as f64;
+        let fpr = fpr.clamp(1e-9, 0.5);
+        let nbits = (-n * fpr.ln() / (std::f64::consts::LN_2 * std::f64::consts::LN_2)).ceil();
+        let k = ((nbits / n) * std::f64::consts::LN_2).round().max(1.0);
+        BloomFilter::new(nbits as u64, k as u32, seed)
+    }
+
+    #[inline]
+    pub fn insert(&mut self, id: u64) {
+        for h in double_hash(id, self.seed, self.k, self.nbits) {
+            self.bits[(h / 64) as usize] |= 1u64 << (h % 64);
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u64) -> bool {
+        double_hash(id, self.seed, self.k, self.nbits)
+            .all(|h| self.bits[(h / 64) as usize] & (1u64 << (h % 64)) != 0)
+    }
+
+    /// Number of bits (the communication cost of sending this filter uncompressed).
+    pub fn nbits(&self) -> u64 {
+        self.nbits
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.nbits.div_ceil(8) as usize
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Serialize: header (nbits, k, seed) + bit array.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + self.bits.len() * 8);
+        out.extend_from_slice(&self.nbits.to_le_bytes());
+        out.extend_from_slice(&self.k.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        let nbytes = self.nbits.div_ceil(8) as usize;
+        let mut bytes = vec![0u8; self.bits.len() * 8];
+        for (i, w) in self.bits.iter().enumerate() {
+            bytes[8 * i..8 * i + 8].copy_from_slice(&w.to_le_bytes());
+        }
+        bytes.truncate(nbytes);
+        out.extend_from_slice(&bytes);
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Option<Self> {
+        if data.len() < 20 {
+            return None;
+        }
+        let nbits = u64::from_le_bytes(data[0..8].try_into().ok()?);
+        let k = u32::from_le_bytes(data[8..12].try_into().ok()?);
+        let seed = u64::from_le_bytes(data[12..20].try_into().ok()?);
+        let nbytes = nbits.div_ceil(8) as usize;
+        if data.len() < 20 + nbytes {
+            return None;
+        }
+        let mut bits = vec![0u64; nbits.div_ceil(64) as usize];
+        for (i, b) in data[20..20 + nbytes].iter().enumerate() {
+            bits[i / 8] |= (*b as u64) << (8 * (i % 8));
+        }
+        Some(BloomFilter { bits, nbits, k, seed })
+    }
+
+    /// Fraction of set bits (used to estimate the realized FPR: fpr ≈ fill^k).
+    pub fn fill_ratio(&self) -> f64 {
+        let ones: u64 = self.bits.iter().map(|w| w.count_ones() as u64).sum();
+        ones as f64 / self.nbits as f64
+    }
+}
+
+/// Counting Bloom filter (§8.1): counters instead of bits; supports deletion and
+/// subtraction — the substrate of the approximate-SetX baseline of [Guo & Li 2013].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CountingBloomFilter {
+    pub counts: Vec<i32>,
+    k: u32,
+    seed: u64,
+}
+
+impl CountingBloomFilter {
+    pub fn new(ncells: u64, k: u32, seed: u64) -> Self {
+        CountingBloomFilter { counts: vec![0; ncells.max(8) as usize], k: k.max(1), seed }
+    }
+
+    #[inline]
+    fn cells(&self, id: u64) -> impl Iterator<Item = u64> + '_ {
+        double_hash(id, self.seed, self.k, self.counts.len() as u64)
+    }
+
+    pub fn insert(&mut self, id: u64) {
+        let idx: Vec<u64> = self.cells(id).collect();
+        for h in idx {
+            self.counts[h as usize] += 1;
+        }
+    }
+
+    pub fn remove(&mut self, id: u64) {
+        let idx: Vec<u64> = self.cells(id).collect();
+        for h in idx {
+            self.counts[h as usize] -= 1;
+        }
+    }
+
+    /// Membership test treating nonzero counters as set bits.
+    pub fn contains(&self, id: u64) -> bool {
+        self.cells(id).all(|h| self.counts[h as usize] != 0)
+    }
+
+    /// Cell-wise difference (`CBF(B) − CBF(A)` in the [Guo & Li] protocol).
+    pub fn sub(&self, other: &CountingBloomFilter) -> CountingBloomFilter {
+        assert_eq!(self.counts.len(), other.counts.len());
+        assert_eq!((self.k, self.seed), (other.k, other.seed));
+        CountingBloomFilter {
+            counts: self
+                .counts
+                .iter()
+                .zip(&other.counts)
+                .map(|(a, b)| a - b)
+                .collect(),
+            k: self.k,
+            seed: self.seed,
+        }
+    }
+
+    /// "Positive" membership test in a *difference* CBF: all cells strictly positive.
+    /// This is how [Guo & Li] approximates `B \ A` from `CBF(B) − CBF(A)`.
+    pub fn contains_positive(&self, id: u64) -> bool {
+        self.cells(id).all(|h| self.counts[h as usize] > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bloom_no_false_negatives() {
+        let mut bf = BloomFilter::with_fpr(1000, 0.01, 5);
+        for id in 0..1000u64 {
+            bf.insert(id * 3);
+        }
+        for id in 0..1000u64 {
+            assert!(bf.contains(id * 3));
+        }
+    }
+
+    #[test]
+    fn bloom_fpr_near_target() {
+        let mut bf = BloomFilter::with_fpr(10_000, 0.01, 6);
+        for id in 0..10_000u64 {
+            bf.insert(id);
+        }
+        let fps = (10_000..110_000u64).filter(|&id| bf.contains(id)).count();
+        let fpr = fps as f64 / 100_000.0;
+        assert!(fpr < 0.02, "fpr {fpr}");
+        assert!(fpr > 0.002, "fpr suspiciously low {fpr}");
+    }
+
+    #[test]
+    fn bloom_roundtrip_bytes() {
+        let mut bf = BloomFilter::new(1001, 3, 9);
+        for id in [5u64, 17, 255, 1 << 40] {
+            bf.insert(id);
+        }
+        let bytes = bf.to_bytes();
+        let back = BloomFilter::from_bytes(&bytes).unwrap();
+        assert_eq!(back.nbits, bf.nbits);
+        assert_eq!(back.k, bf.k);
+        for id in 0..2000u64 {
+            assert_eq!(bf.contains(id), back.contains(id), "id {id}");
+        }
+    }
+
+    #[test]
+    fn bloom_from_bytes_rejects_short() {
+        assert!(BloomFilter::from_bytes(&[1, 2, 3]).is_none());
+        let bf = BloomFilter::new(128, 2, 1);
+        let mut bytes = bf.to_bytes();
+        bytes.truncate(bytes.len() - 1);
+        assert!(BloomFilter::from_bytes(&bytes).is_none());
+    }
+
+    #[test]
+    fn cbf_insert_remove_roundtrip() {
+        let mut cbf = CountingBloomFilter::new(4096, 4, 3);
+        for id in 0..100u64 {
+            cbf.insert(id);
+        }
+        assert!(cbf.contains(50));
+        for id in 0..100u64 {
+            cbf.remove(id);
+        }
+        assert_eq!(cbf, CountingBloomFilter::new(4096, 4, 3));
+    }
+
+    #[test]
+    fn cbf_difference_identifies_unique_mostly() {
+        let mut a = CountingBloomFilter::new(1 << 14, 4, 3);
+        let mut b = CountingBloomFilter::new(1 << 14, 4, 3);
+        let common: Vec<u64> = (0..500).collect();
+        for &id in &common {
+            a.insert(id);
+            b.insert(id);
+        }
+        for id in 1000..1050u64 {
+            b.insert(id); // unique to B
+        }
+        let diff = b.sub(&a);
+        // All truly-unique elements pass the positive test (no false negatives on B\A when
+        // counts don't collide destructively; with this load factor collisions are rare).
+        let hits = (1000..1050u64).filter(|&id| diff.contains_positive(id)).count();
+        assert!(hits >= 48, "hits {hits}");
+        // Most common elements do NOT pass.
+        let false_hits = common.iter().filter(|&&id| diff.contains_positive(id)).count();
+        assert!(false_hits <= 5, "false hits {false_hits}");
+    }
+}

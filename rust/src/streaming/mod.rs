@@ -1,0 +1,223 @@
+//! Streaming CommonSense (§4) and its two motivating applications (§2.2, §2.3).
+//!
+//! The streaming digest keeps only the `l`-dimensional measurement in memory, applies every
+//! stream event as a 1-sparse update in O(m), and decodes offline against a predetermined
+//! superset `B′` (the decoder's candidate set). This is the drop-in replacement for the
+//! IBLTs in LossRadar [23] (packet-loss detection) and straggler identification [25].
+
+use crate::decoder::{DecoderConfig, MpDecoder, Pursuit, Side};
+use crate::matrix::CsMatrix;
+use crate::protocol::CsParams;
+use crate::sketch::Sketch;
+
+/// A streaming digest: the in-memory state is exactly `l` counters (`4l` bytes).
+#[derive(Clone, Debug)]
+pub struct StreamDigest {
+    sketch: Sketch,
+}
+
+impl StreamDigest {
+    pub fn new(matrix: CsMatrix) -> Self {
+        StreamDigest { sketch: Sketch::zero(matrix) }
+    }
+
+    /// Element arrival (borrow, packet at upstream meter, …). O(m).
+    #[inline]
+    pub fn add(&mut self, id: u64) {
+        self.sketch.update(id, 1);
+    }
+
+    /// Element departure (return, packet seen downstream, …). O(m).
+    #[inline]
+    pub fn remove(&mut self, id: u64) {
+        self.sketch.update(id, -1);
+    }
+
+    /// Memory footprint (the paper's key metric for the data-plane digest).
+    pub fn memory_bytes(&self) -> usize {
+        self.sketch.counts.len() * std::mem::size_of::<i32>()
+    }
+
+    pub fn matrix(&self) -> CsMatrix {
+        self.sketch.matrix
+    }
+
+    pub fn counts(&self) -> &[i32] {
+        &self.sketch.counts
+    }
+
+    /// Difference digest `self − other` (e.g. upstream − downstream meters in LossRadar).
+    pub fn diff(&self, other: &StreamDigest) -> Vec<i32> {
+        self.sketch.sub(&other.sketch).values
+    }
+
+    /// Offline decode of the digest state against the superset `b_prime`: returns the set
+    /// the digest currently encodes (positives only — e.g. outstanding books/lost packets).
+    pub fn decode(&self, b_prime: &[u64]) -> Option<Vec<u64>> {
+        decode_measurement(self.matrix(), &self.sketch.counts, b_prime)
+    }
+}
+
+/// Decode a raw measurement vector against candidate superset `b_prime` (used both by
+/// `StreamDigest::decode` and by LossRadar-style digest differences).
+pub fn decode_measurement(matrix: CsMatrix, counts: &[i32], b_prime: &[u64]) -> Option<Vec<u64>> {
+    let mut dec = MpDecoder::new(&matrix, b_prime, Side::Positive);
+    dec.set_config(DecoderConfig::commonsense());
+    dec.load_residue(counts);
+    let stats = dec.run();
+    if !stats.converged {
+        dec.switch_pursuit(Pursuit::L1);
+        dec.run();
+        dec.switch_pursuit(Pursuit::L2);
+        let stats = dec.run();
+        if !stats.converged {
+            return None;
+        }
+    }
+    let mut out = dec.estimate();
+    out.sort_unstable();
+    Some(out)
+}
+
+/// Sizing helper: the digest for an expected difference `d` against a superset of size `n`.
+pub fn digest_params(n: usize, d: usize) -> CsParams {
+    CsParams::tuned_uni(n, d)
+}
+
+/// §2.2 — LossRadar-style packet-loss detection between an upstream and a downstream meter.
+pub mod lossradar {
+    use super::*;
+
+    /// The per-switch data-plane state.
+    pub struct Meter {
+        pub digest: StreamDigest,
+    }
+
+    impl Meter {
+        pub fn new(params: &CsParams) -> Self {
+            Meter { digest: StreamDigest::new(params.matrix()) }
+        }
+
+        /// A packet (identified by its 5-tuple+packet-id signature) traverses this meter.
+        #[inline]
+        pub fn observe(&mut self, packet_sig: u64) {
+            self.digest.add(packet_sig);
+        }
+    }
+
+    /// Control-plane loss detection: decode `upstream − downstream` against the packet
+    /// superset `b_prime` (flow IDs × conservatively-estimated packet-id ranges, per §2.2).
+    pub fn detect_losses(
+        upstream: &Meter,
+        downstream: &Meter,
+        b_prime: &[u64],
+    ) -> Option<Vec<u64>> {
+        let diff = upstream.digest.diff(&downstream.digest);
+        decode_measurement(upstream.digest.matrix(), &diff, b_prime)
+    }
+}
+
+/// §2.3 — straggler identification (the library example: borrowed-but-not-returned books).
+pub mod straggler {
+    use super::*;
+
+    /// The bounded-memory tracker the librarian's computer keeps.
+    pub struct Tracker {
+        pub digest: StreamDigest,
+    }
+
+    impl Tracker {
+        pub fn new(params: &CsParams) -> Self {
+            Tracker { digest: StreamDigest::new(params.matrix()) }
+        }
+
+        pub fn borrow(&mut self, book: u64) {
+            self.digest.add(book);
+        }
+
+        pub fn return_book(&mut self, book: u64) {
+            self.digest.remove(book);
+        }
+
+        /// End-of-day decode against the full catalog.
+        pub fn stragglers(&self, catalog: &[u64]) -> Option<Vec<u64>> {
+            self.digest.decode(catalog)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::hash::Xoshiro256;
+
+    #[test]
+    fn stragglers_recovered_exactly() {
+        let catalog: Vec<u64> = (0..30_000u64).map(|i| i * 97 + 5).collect();
+        let params = digest_params(catalog.len(), 64);
+        let mut tracker = straggler::Tracker::new(&params);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        // 5000 borrow events; 40 books never returned.
+        let mut outstanding = std::collections::HashSet::new();
+        for i in 0..5000usize {
+            let book = catalog[rng.gen_range(catalog.len() as u64) as usize];
+            if outstanding.contains(&book) {
+                continue; // already out — can't borrow again
+            }
+            tracker.borrow(book);
+            if i % 125 == 0 && outstanding.len() < 40 {
+                outstanding.insert(book); // straggler: never returned
+            } else {
+                tracker.return_book(book);
+            }
+        }
+        let mut want: Vec<u64> = outstanding.into_iter().collect();
+        want.sort_unstable();
+        let got = tracker.stragglers(&catalog).expect("decode");
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn lossradar_detects_dropped_packets() {
+        // 20k packets traverse upstream; 150 are dropped before downstream.
+        let (lost, all_packets) = synth::subset_pair(150, 19_850, 8);
+        let params = digest_params(all_packets.len(), 150);
+        let mut up = lossradar::Meter::new(&params);
+        let mut down = lossradar::Meter::new(&params);
+        let lost_set: std::collections::HashSet<u64> = lost.iter().copied().collect();
+        for &p in &all_packets {
+            up.observe(p);
+            if !lost_set.contains(&p) {
+                down.observe(p);
+            }
+        }
+        let got = lossradar::detect_losses(&up, &down, &all_packets).expect("decode");
+        let mut want = lost.clone();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        // The headline: digest memory ≪ tracking all packets (8B id each).
+        assert!(up.digest.memory_bytes() < 8 * all_packets.len() / 4);
+    }
+
+    #[test]
+    fn digest_memory_is_4l() {
+        let params = digest_params(100_000, 100);
+        let d = StreamDigest::new(params.matrix());
+        assert_eq!(d.memory_bytes(), 4 * params.l as usize);
+    }
+
+    #[test]
+    fn add_remove_cancels() {
+        let params = digest_params(1000, 10);
+        let mut d = StreamDigest::new(params.matrix());
+        for i in 0..500u64 {
+            d.add(i);
+        }
+        for i in 0..500u64 {
+            d.remove(i);
+        }
+        assert!(d.counts().iter().all(|&c| c == 0));
+        assert_eq!(d.decode(&(0..1000u64).collect::<Vec<_>>()).unwrap(), vec![]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Property-style randomized tests of the codec/substrate invariants.
+
+use commonsense::ecc::{BchSyndrome, GF2m};
+use commonsense::entropy::{
+    compress_residue, compress_sketch, decompress_residue, recover_sketch, SketchCodecParams,
+};
+use commonsense::hash::Xoshiro256;
+use commonsense::matrix::CsMatrix;
+use commonsense::protocol::wire::Msg;
+use commonsense::sketch::Sketch;
+use std::sync::Arc;
+
+/// rANS residue codec roundtrips arbitrary small-integer vectors, including adversarially
+/// spiky ones.
+#[test]
+fn prop_residue_codec_roundtrip() {
+    let mut rng = Xoshiro256::seed_from_u64(0xc0dec);
+    for case in 0..40 {
+        let n = rng.gen_range(3_000) as usize;
+        let spread = 1 + rng.gen_range(30) as i64;
+        let values: Vec<i32> = (0..n)
+            .map(|_| {
+                let v = (rng.gen_range(2 * spread as u64 + 1) as i64 - spread) as i32;
+                if rng.gen_f64() < 0.002 {
+                    v.saturating_mul(100_001) // rare outlier → escape path
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let bytes = compress_residue(&values);
+        let back = decompress_residue(&bytes, n).expect("decode");
+        assert_eq!(back, values, "case {case} n={n} spread={spread}");
+    }
+}
+
+/// Statistical truncation + parity patch: exact recovery across random set geometries.
+#[test]
+fn prop_truncation_roundtrip_random_geometries() {
+    let mut rng = Xoshiro256::seed_from_u64(0x7204);
+    for case in 0..12 {
+        let l = 512 + 128 * rng.gen_range(12) as u32;
+        let m = 5 + 2 * rng.gen_range(2) as u32;
+        let n_common = 2_000 + rng.gen_range(10_000) as usize;
+        let a_only = rng.gen_range(80) as usize;
+        let b_only = rng.gen_range(200) as usize;
+        let mat = CsMatrix::new(l, m, rng.next_u64());
+        let common: Vec<u64> = (0..n_common as u64).map(|i| i * 3 + 1).collect();
+        let mut a: Vec<u64> = common.clone();
+        a.extend((0..a_only as u64).map(|i| 1_000_000_000 + i));
+        let mut b = common;
+        b.extend((0..b_only as u64).map(|i| 2_000_000_000 + i));
+        let ska = Sketch::encode(mat, &a);
+        let skb = Sketch::encode(mat, &b);
+        let params = SketchCodecParams::derive(b_only, a_only, l, m);
+        let msg = compress_sketch(&ska.counts, &params);
+        let (x_hat, _, unresolved) = recover_sketch(&msg, &skb.counts, &params).expect("recover");
+        assert_eq!(unresolved, 0, "case {case}");
+        assert_eq!(x_hat, ska.counts, "case {case}: l={l} m={m}");
+    }
+}
+
+/// BCH syndrome decoding: exact for weights ≤ t, detected for weights in (t, 3t].
+#[test]
+fn prop_bch_capacity_boundary() {
+    let gf = Arc::new(GF2m::new(13));
+    let mut rng = Xoshiro256::seed_from_u64(0xbc4);
+    for case in 0..30 {
+        let t = 2 + rng.gen_range(30) as usize;
+        let w = 1 + rng.gen_range(3 * t as u64) as usize;
+        let mut positions: Vec<u32> = Vec::new();
+        while positions.len() < w {
+            let p = rng.gen_range(8000) as u32;
+            if !positions.contains(&p) {
+                positions.push(p);
+            }
+        }
+        let s = BchSyndrome::compute(gf.clone(), t, positions.iter().copied());
+        match s.decode(8191) {
+            Ok(mut got) => {
+                if w <= t {
+                    // Within capacity: decoding must be exact.
+                    got.sort_unstable();
+                    positions.sort_unstable();
+                    assert_eq!(got, positions, "case {case}");
+                } else {
+                    // Beyond capacity BCH may *miscorrect* (return a different small-weight
+                    // vector with the same syndromes) — a classic property, tolerated by
+                    // both consumers (the truncation codec treats it as decoder noise and
+                    // PinSketch is provisioned with t ≥ d). It must at least be small.
+                    assert!(got.len() <= t, "case {case}: miscorrection weight {} > t", got.len());
+                }
+            }
+            Err(_) => {
+                assert!(w > t, "case {case}: failed within capacity (w={w}, t={t})");
+            }
+        }
+    }
+}
+
+/// Wire parser never panics on truncated/corrupted frames (fuzz-style).
+#[test]
+fn prop_wire_fuzz_no_panic() {
+    let mut rng = Xoshiro256::seed_from_u64(0xf022);
+    // Seed corpus: real frames, then mutate.
+    let real = Msg::Round {
+        residue: compress_residue(&[1, -2, 0, 3]),
+        smf: Some(vec![9; 33]),
+        inquiry: vec![42, 43],
+        answers: vec![true, false, true],
+        done: false,
+    }
+    .to_bytes();
+    for _ in 0..2_000 {
+        let mut frame = real.clone();
+        let cut = rng.gen_range(frame.len() as u64 + 1) as usize;
+        frame.truncate(cut);
+        for _ in 0..rng.gen_range(8) {
+            if frame.is_empty() {
+                break;
+            }
+            let pos = rng.gen_range(frame.len() as u64) as usize;
+            frame[pos] ^= rng.next_u64() as u8;
+        }
+        let _ = Msg::from_bytes(&frame); // must not panic
+    }
+    // Pure garbage too.
+    for _ in 0..2_000 {
+        let n = rng.gen_range(64) as usize;
+        let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let _ = Msg::from_bytes(&junk);
+    }
+}
+
+/// Sketch linearity (the property every protocol step leans on):
+/// sk(A) + sk(B) = sk(A ⊎ B) and sk(B) − sk(A) depends only on the symmetric difference.
+#[test]
+fn prop_sketch_linearity() {
+    let mut rng = Xoshiro256::seed_from_u64(0x11ea);
+    for _ in 0..20 {
+        let mat = CsMatrix::new(256 + 64 * rng.gen_range(8) as u32, 5, rng.next_u64());
+        let common: Vec<u64> = (0..rng.gen_range(2_000)).map(|_| rng.next_u64()).collect();
+        let ua: Vec<u64> = (0..rng.gen_range(50)).map(|_| rng.next_u64()).collect();
+        let ub: Vec<u64> = (0..rng.gen_range(50)).map(|_| rng.next_u64()).collect();
+        let mut a = common.clone();
+        a.extend(&ua);
+        let mut b = common.clone();
+        b.extend(&ub);
+        let diff_full = Sketch::encode(mat, &b).sub(&Sketch::encode(mat, &a));
+        let diff_uniques = Sketch::encode(mat, &ub).sub(&Sketch::encode(mat, &ua));
+        assert_eq!(diff_full, diff_uniques);
+    }
+}

@@ -1,0 +1,131 @@
+//! Cross-layer integration: TCP sessions on realistic workloads, the PJRT runtime against
+//! the rust sparse path, streaming apps over the full pipeline, partitioned scale-out.
+
+use commonsense::coordinator::{connect_initiator, parallel, serve_responder};
+use commonsense::data::ethereum::{diff_stats, EthSim};
+use commonsense::data::synth;
+use commonsense::matrix::CsMatrix;
+use commonsense::protocol::bidi::BidiOptions;
+use commonsense::protocol::CsParams;
+use commonsense::runtime::Runtime;
+use commonsense::sketch::Sketch;
+use std::net::TcpListener;
+
+#[test]
+fn tcp_ethereum_session_end_to_end() {
+    let mut sim = EthSim::genesis(30_000, 0x517e);
+    let b = sim.snapshot_ids();
+    sim.advance_days(3);
+    let a = sim.snapshot_ids();
+    let st = diff_stats(&b, &a);
+
+    let params = CsParams::tuned_bidi(a.len().max(b.len()), st.s_minus_a, st.a_minus_s);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let a2 = a.clone();
+    let alice = std::thread::spawn(move || {
+        serve_responder(&listener, &a2, BidiOptions::default()).unwrap()
+    });
+    let bob = connect_initiator(addr, &b, &params, BidiOptions::default()).unwrap();
+    let alice = alice.join().unwrap();
+
+    assert!(bob.converged && alice.converged);
+    assert_eq!(bob.unique, synth::difference(&b, &a));
+    assert_eq!(alice.unique, synth::difference(&a, &b));
+    // The headline at integration scale: on-wire bytes ≪ shipping either snapshot.
+    let wire = bob.bytes_sent + alice.bytes_sent;
+    assert!(wire < 8 * b.len() / 4, "wire bytes {wire}");
+}
+
+#[test]
+fn runtime_agrees_with_sparse_and_decodes() {
+    let Ok(rt) = Runtime::load_default() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let shapes = rt.shapes;
+    let matrix = CsMatrix::new(shapes.l as u32, 5, 0x90);
+    // Encode agreement on a multi-chunk set.
+    let ids: Vec<u64> = (0..(2 * shapes.nb + 37) as u64).map(|i| i * 13 + 5).collect();
+    let accel = rt.encode_set(matrix, &ids).unwrap();
+    assert_eq!(accel, Sketch::encode(matrix, &ids).counts);
+
+    // Correlate agreement with a hand-computed dot.
+    let block_ids: Vec<u64> = ids.iter().copied().take(shapes.nb).collect();
+    let block = matrix.dense_block_rowmajor(&block_ids, shapes.nb);
+    let sk = Sketch::encode(matrix, &block_ids[..40]);
+    let r: Vec<f32> = sk.counts.iter().map(|&c| c as f32).collect();
+    let delta = rt.correlate_block(&block, &r, 5.0).unwrap();
+    for (j, &id) in block_ids.iter().enumerate().take(60) {
+        let mut dot = 0i32;
+        for row in matrix.column(id) {
+            dot += sk.counts[row as usize];
+        }
+        let want = dot as f32 / 5.0;
+        assert!((delta[j] - want).abs() < 1e-4, "j={j}: {} vs {want}", delta[j]);
+    }
+}
+
+#[test]
+fn partitioned_parallel_on_ethereum_workload() {
+    let mut sim = EthSim::genesis(40_000, 0x9a2);
+    let b = sim.snapshot_ids();
+    sim.advance_days(2);
+    let a = sim.snapshot_ids();
+    let st = diff_stats(&b, &a);
+    let out = parallel::setx(
+        &a,
+        &b,
+        st.a_minus_s,
+        st.s_minus_a,
+        4,
+        4,
+        BidiOptions::default(),
+    );
+    assert!(out.converged);
+    assert_eq!(out.a_minus_b, synth::difference(&a, &b));
+    assert_eq!(out.b_minus_a, synth::difference(&b, &a));
+}
+
+#[test]
+fn streaming_digest_composes_with_protocol_params() {
+    use commonsense::streaming::{digest_params, StreamDigest};
+    // Digest built from protocol-tuned params decodes a realistic churn stream.
+    let catalog: Vec<u64> = (0..20_000u64).map(|i| i * 7 + 3).collect();
+    let params = digest_params(catalog.len(), 100);
+    let mut digest = StreamDigest::new(params.matrix());
+    for &id in catalog.iter().take(5_000) {
+        digest.add(id);
+    }
+    for &id in catalog.iter().take(5_000).skip(80) {
+        digest.remove(id);
+    }
+    let got = digest.decode(&catalog).expect("decode");
+    assert_eq!(got, catalog[..80].to_vec());
+}
+
+#[test]
+fn concurrent_tcp_sessions_are_independent() {
+    // Two sessions on different ports, different workloads, run concurrently.
+    let mk = |seed: u64| synth::overlap_pair(3_000, 30, 60, seed);
+    let mut joins = Vec::new();
+    for seed in [1u64, 2] {
+        joins.push(std::thread::spawn(move || {
+            let (a, b) = mk(seed);
+            let params = CsParams::tuned_bidi(3_090, 30, 60);
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let b2 = b.clone();
+            let srv = std::thread::spawn(move || {
+                serve_responder(&listener, &b2, BidiOptions::default()).unwrap()
+            });
+            let cli = connect_initiator(addr, &a, &params, BidiOptions::default()).unwrap();
+            let srv = srv.join().unwrap();
+            assert_eq!(cli.unique, synth::difference(&a, &b), "seed {seed}");
+            assert_eq!(srv.unique, synth::difference(&b, &a), "seed {seed}");
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}
