@@ -1,13 +1,18 @@
 //! The distributed runtime: CommonSense over real sockets, plus partitioned parallel SetX.
 //!
+//! Both frontends are thin adapters over the sans-io [`crate::protocol::session::Session`]
+//! engine — no protocol logic lives here.
+//!
 //! * [`tcp`] — Alice/Bob nodes speaking the wire protocol of [`crate::protocol::wire`] over
-//!   TCP (threaded; the image's crate set has no tokio — see DESIGN.md §4). The *initiator*
-//!   connects and sends `Hello` + `Sketch`; the *responder* serves. Byte counts are taken
-//!   from actual socket writes/reads, so the E2E driver's reported costs are real.
+//!   TCP (threaded, dependency-free; the image's crate set has no tokio — see DESIGN.md
+//!   §4). The *initiator* connects and sends `Hello` + `Sketch`; the *responder* serves.
+//!   Framing is hardened against adversarial length fields, and byte counts come from the
+//!   session's own accounting, so TCP and in-memory runs report identical costs.
 //! * [`parallel`] — the §7.3 scale-out: hash-partition the universe (as PBS does), run an
-//!   independent bidirectional session per partition across OS threads, aggregate. This is
-//!   also what makes the PJRT dense-block artifacts applicable: each partition's matrix has
-//!   exactly the artifact row count.
+//!   independent bidirectional session per partition on a **bounded worker pool** that
+//!   honors its `threads` cap (tested via a live-worker high-water mark), aggregate. This
+//!   is also what makes the PJRT dense-block artifacts applicable: each partition's matrix
+//!   has exactly the artifact row count.
 
 pub mod parallel;
 pub mod tcp;

@@ -1,15 +1,24 @@
 //! Partitioned parallel SetX (§7.3's scale-out remark, PBS-style).
 //!
 //! Hash-partition the universe with a shared seed; each partition is an independent
-//! bidirectional SetX instance, so partitions run on separate OS threads with no data
+//! bidirectional SetX instance (the same sans-io [`crate::protocol::session`] engine the
+//! TCP and in-memory frontends drive), so partitions run concurrently with no data
 //! dependency. The communication overhead of partitioning is tiny (per-partition headers),
 //! and the per-partition matrices have a fixed row count — which is exactly what lets the
 //! AOT-compiled dense-block artifacts accelerate encoding (see [`crate::runtime`]).
+//!
+//! Concurrency model: a **bounded worker pool**. Exactly `min(threads, parts)` OS threads
+//! are spawned; each pulls the next unclaimed partition index from a shared atomic counter
+//! until none remain, so big-partition stragglers never serialize the tail the way fixed
+//! chunking would. The pool instruments a live-worker high-water mark
+//! ([`ParallelOutcome::peak_workers`]) so the `threads` cap is a *tested* invariant, not a
+//! comment.
 
 use crate::hash::hash_u64;
 use crate::metrics::Stats;
 use crate::protocol::bidi::{self, BidiOptions};
 use crate::protocol::CsParams;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Aggregated outcome across partitions.
 #[derive(Clone, Debug)]
@@ -22,18 +31,25 @@ pub struct ParallelOutcome {
     pub converged: bool,
     /// Per-partition byte statistics (for the ablation table).
     pub bytes_stats: Stats,
+    /// High-water mark of concurrently-live partition workers — always ≤ the `threads`
+    /// argument of [`setx`] (the regression guard for the bounded pool).
+    pub peak_workers: usize,
 }
 
-/// Partition a set by `hash(id) % parts`.
+/// Partition a set by `hash(id) % parts`. `parts == 0` is clamped to a single partition
+/// (degenerate but well-defined: everything lands in partition 0, no `hash % 0` panic).
 pub fn partition(ids: &[u64], parts: usize, seed: u64) -> Vec<Vec<u64>> {
-    let mut out = vec![Vec::with_capacity(ids.len() / parts.max(1) + 1); parts];
+    let parts = parts.max(1);
+    let mut out = vec![Vec::with_capacity(ids.len() / parts + 1); parts];
     for &id in ids {
         out[(hash_u64(id, seed) % parts as u64) as usize].push(id);
     }
     out
 }
 
-/// Run bidirectional SetX over `parts` hash partitions using up to `threads` OS threads.
+/// Run bidirectional SetX over `parts` hash partitions on a worker pool of at most
+/// `threads` OS threads (both arguments are clamped to ≥ 1; `threads` is additionally
+/// clamped to `parts` — idle workers would be pointless).
 pub fn setx(
     a: &[u64],
     b: &[u64],
@@ -43,6 +59,8 @@ pub fn setx(
     threads: usize,
     opts: BidiOptions,
 ) -> ParallelOutcome {
+    let parts = parts.max(1);
+    let threads = threads.clamp(1, parts);
     let part_seed = 0x9a27_11;
     let a_parts = partition(a, parts, part_seed);
     let b_parts = partition(b, parts, part_seed);
@@ -56,23 +74,30 @@ pub fn setx(
     let da = pad(est_a_unique);
     let db = pad(est_b_unique);
 
-    let results: Vec<(bidi::BidiOutcome, usize)> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for (p, (ap, bp)) in a_parts.iter().zip(&b_parts).enumerate() {
-            // Cap live threads: spawn in waves.
-            handles.push(scope.spawn(move || {
+    // Bounded pool: `threads` workers race on `next` for partition indices; `active`
+    // and `peak` instrument how many are ever live at once.
+    let next = AtomicUsize::new(0);
+    let active = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let results: Vec<bidi::BidiOutcome> = std::thread::scope(|scope| {
+        let worker = || {
+            let mut local = Vec::new();
+            let mut p = next.fetch_add(1, Ordering::Relaxed);
+            while p < parts {
+                let live = active.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(live, Ordering::SeqCst);
+                let (ap, bp) = (&a_parts[p], &b_parts[p]);
                 let n = ap.len().max(bp.len());
                 let mut params = CsParams::tuned_bidi(n.max(64), da, db);
                 params.seed ^= p as u64; // independent matrices per partition
-                let out = bidi::run(ap, bp, &params, opts);
-                (out, p)
-            }));
-            if handles.len() >= threads {
-                // Simple wave barrier keeps ≤ `threads` workers alive.
-                // (join consumes; collect results as we go)
+                local.push(bidi::run(ap, bp, &params, opts));
+                active.fetch_sub(1, Ordering::SeqCst);
+                p = next.fetch_add(1, Ordering::Relaxed);
             }
-        }
-        handles.into_iter().map(|h| h.join().expect("partition worker")).collect()
+            local
+        };
+        let handles: Vec<_> = (0..threads).map(|_| scope.spawn(worker)).collect();
+        handles.into_iter().flat_map(|h| h.join().expect("partition worker")).collect()
     });
 
     let mut a_minus_b = Vec::new();
@@ -81,7 +106,7 @@ pub fn setx(
     let mut total_msgs = 0usize;
     let mut converged = true;
     let mut bytes_stats = Stats::new();
-    for (out, _p) in results {
+    for out in results {
         a_minus_b.extend(out.a_minus_b);
         b_minus_a.extend(out.b_minus_a);
         total_bytes += out.comm.total_bytes();
@@ -99,6 +124,7 @@ pub fn setx(
         partitions: parts,
         converged,
         bytes_stats,
+        peak_workers: peak.into_inner(),
     }
 }
 
@@ -121,6 +147,22 @@ mod tests {
     }
 
     #[test]
+    fn partition_zero_parts_clamps_to_one() {
+        let ids: Vec<u64> = (0..100u64).collect();
+        let parts = partition(&ids, 0, 7);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].len(), 100);
+        // And the full pipeline tolerates parts = 0 / threads = 0 end-to-end.
+        let (a, b) = synth::overlap_pair(1_000, 20, 20, 8);
+        let out = setx(&a, &b, 20, 20, 0, 0, BidiOptions::default());
+        assert!(out.converged);
+        assert_eq!(out.partitions, 1);
+        assert_eq!(out.peak_workers, 1);
+        assert_eq!(out.a_minus_b, synth::difference(&a, &b));
+        assert_eq!(out.b_minus_a, synth::difference(&b, &a));
+    }
+
+    #[test]
     fn parallel_setx_exact() {
         let (a, b) = synth::overlap_pair(12_000, 120, 150, 3);
         let out = setx(&a, &b, 120, 150, 8, 4, BidiOptions::default());
@@ -128,6 +170,22 @@ mod tests {
         assert_eq!(out.a_minus_b, synth::difference(&a, &b));
         assert_eq!(out.b_minus_a, synth::difference(&b, &a));
         assert_eq!(out.partitions, 8);
+    }
+
+    #[test]
+    fn worker_pool_honors_thread_cap() {
+        // Regression for the seed's unbounded spawn: with 64 partitions and a cap of 4,
+        // the live-worker high-water mark must never exceed 4.
+        let (a, b) = synth::overlap_pair(6_000, 120, 120, 13);
+        let out = setx(&a, &b, 120, 120, 64, 4, BidiOptions::default());
+        assert!(out.converged);
+        assert_eq!(out.a_minus_b, synth::difference(&a, &b));
+        assert_eq!(out.b_minus_a, synth::difference(&b, &a));
+        assert!(
+            (1..=4).contains(&out.peak_workers),
+            "thread cap violated: peak {} workers",
+            out.peak_workers
+        );
     }
 
     #[test]

@@ -1,10 +1,15 @@
-//! TCP transport for the bidirectional protocol (threaded, dependency-free).
+//! TCP transport for the bidirectional protocol — **socket framing only** (threaded,
+//! dependency-free; the image's crate set has no tokio, see DESIGN.md §4).
+//!
+//! All protocol logic lives in the sans-io [`Session`] engine
+//! ([`crate::protocol::session`]); this module's entire job is moving its frames across a
+//! socket: length-prefixed reads hardened against adversarial length fields, writes, and
+//! teardown on `Done` or peer disconnect. Byte/message accounting comes from the session
+//! itself, so TCP runs report costs identical to the in-memory driver's.
 
-use crate::decoder::Side;
-use crate::protocol::bidi::{
-    initiator_sketch, responder_residue, seed_round, BidiOptions, Peer,
-};
-use crate::protocol::{wire::Msg, CsParams};
+use crate::protocol::bidi::BidiOptions;
+use crate::protocol::session::{Session, SessionEvent};
+use crate::protocol::{wire, wire::Msg, CsParams};
 use anyhow::{anyhow, Context, Result};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -17,49 +22,91 @@ pub struct SessionReport {
     /// Bytes written to / read from the socket (payload frames only).
     pub bytes_sent: usize,
     pub bytes_received: usize,
-    /// Messages this host sent (sketch/hello count for the initiator).
+    /// Messages this host sent (hello/sketch count for the initiator).
     pub msgs_sent: usize,
     pub converged: bool,
 }
 
-fn write_msg(stream: &mut TcpStream, msg: &Msg) -> Result<usize> {
-    let bytes = msg.to_bytes();
-    stream.write_all(&bytes)?;
-    Ok(bytes.len())
+fn write_msg(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
+    stream.write_all(&msg.to_bytes())?;
+    Ok(())
 }
 
-/// Read exactly one frame: type byte + varint length + body.
-fn read_msg(stream: &mut TcpStream) -> Result<(Msg, usize)> {
-    let mut header = vec![0u8; 1];
-    stream.read_exact(&mut header).context("reading frame type")?;
-    // Varint length, byte by byte.
+/// Read exactly one frame: type byte + varint length + body. Returns `Ok(None)` on a
+/// clean end-of-stream at a frame boundary (the peer tore down after `Done`); anything
+/// else — EOF mid-frame, a malformed frame, an adversarial length field — is an error.
+/// The advertised body length is validated against [`wire::MAX_FRAME_BYTES`] *before*
+/// any buffer is sized by it, so a hostile peer cannot drive a huge allocation with a
+/// 10-byte header.
+fn read_msg(stream: &mut TcpStream) -> Result<Option<Msg>> {
+    let mut byte = [0u8; 1];
+    match stream.read_exact(&mut byte) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("reading frame type"),
+    }
+    let mut frame = vec![byte[0]];
+    // Varint body length, byte by byte.
     let mut len = 0u64;
     let mut shift = 0u32;
-    loop {
-        let mut b = [0u8; 1];
-        stream.read_exact(&mut b)?;
-        header.push(b[0]);
-        len |= ((b[0] & 0x7f) as u64) << shift;
-        if b[0] & 0x80 == 0 {
-            break;
-        }
-        shift += 7;
-        if shift >= 64 {
-            return Err(anyhow!("varint overflow"));
+    let mut more = true;
+    while more {
+        stream.read_exact(&mut byte).context("reading frame length")?;
+        frame.push(byte[0]);
+        len |= ((byte[0] & 0x7f) as u64) << shift;
+        more = byte[0] & 0x80 != 0;
+        if more {
+            shift += 7;
+            if shift >= 64 {
+                return Err(anyhow!("frame length varint overflow"));
+            }
         }
     }
-    let mut body = vec![0u8; len as usize];
-    stream.read_exact(&mut body)?;
-    let mut frame = header;
+    let len = usize::try_from(len).map_err(|_| anyhow!("frame length exceeds address space"))?;
+    if len > wire::MAX_FRAME_BYTES {
+        return Err(anyhow!("frame length {len} exceeds cap {}", wire::MAX_FRAME_BYTES));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).context("reading frame body")?;
     frame.extend_from_slice(&body);
     let total = frame.len();
     let (msg, used) = Msg::from_bytes(&frame).ok_or_else(|| anyhow!("malformed frame"))?;
-    debug_assert_eq!(used, total);
-    Ok((msg, total))
+    if used != total {
+        return Err(anyhow!("frame parser consumed {used} of {total} bytes"));
+    }
+    Ok(Some(msg))
+}
+
+/// Pump one session over a connected socket until it completes or the peer hangs up.
+/// A clean disconnect at a frame boundary ends the session (its own state says whether
+/// that was a converged finish); transport corruption surfaces as an error.
+fn pump(stream: &mut TcpStream, session: &mut Session) -> Result<()> {
+    let mut open = true;
+    while open {
+        let Some(msg) = read_msg(stream)? else {
+            break;
+        };
+        match session.on_msg(&msg)? {
+            SessionEvent::Reply(reply) => write_msg(stream, &reply)?,
+            SessionEvent::Continue => {}
+            SessionEvent::Done(_) => open = false,
+        }
+    }
+    Ok(())
+}
+
+fn report(session: &Session) -> SessionReport {
+    SessionReport {
+        unique: session.outcome().unique,
+        bytes_sent: session.bytes_sent(),
+        bytes_received: session.bytes_received(),
+        msgs_sent: session.msgs_sent(),
+        converged: session.is_settled(),
+    }
 }
 
 /// Run the initiator (the side with the smaller unique-count estimate): connect, send
-/// `Hello` + `Sketch`, then ping-pong as the negative-signed decoder until completion.
+/// `Hello` + `Sketch`, then ping-pong (via the shared [`Session`] engine) to completion.
 pub fn connect_initiator(
     addr: impl ToSocketAddrs,
     set: &[u64],
@@ -68,49 +115,13 @@ pub fn connect_initiator(
 ) -> Result<SessionReport> {
     let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true).ok();
-    let mut sent = 0usize;
-    let mut received = 0usize;
-    let mut msgs = 0usize;
-
-    let hello = Msg::Hello {
-        l: params.l,
-        m: params.m,
-        seed: params.seed,
-        universe_bits: params.universe_bits,
-        // Initiator-relative estimates (the responder mirrors them back).
-        est_initiator_unique: params.est_a_unique as u64,
-        est_responder_unique: params.est_b_unique as u64,
-        set_len: set.len() as u64,
-    };
-    sent += write_msg(&mut stream, &hello)?;
-    msgs += 1;
-    sent += write_msg(&mut stream, &initiator_sketch(params, set, true))?;
-    msgs += 1;
-
-    let mut peer = Peer::new(params, set, Side::Negative, opts);
-    loop {
-        let msg = match read_msg(&mut stream) {
-            Ok((msg, n)) => {
-                received += n;
-                msg
-            }
-            Err(_) => break, // peer closed: session over
-        };
-        match peer.step(&msg) {
-            Some(reply) => {
-                sent += write_msg(&mut stream, &reply)?;
-                msgs += 1;
-            }
-            None => break,
-        }
+    // The initiator occupies the "a" slot of the parameter block; the responder mirrors it.
+    let (mut session, opening) = Session::initiator(params, set, opts, true);
+    for msg in &opening {
+        write_msg(&mut stream, msg)?;
     }
-    Ok(SessionReport {
-        unique: peer.result(),
-        bytes_sent: sent,
-        bytes_received: received,
-        msgs_sent: msgs,
-        converged: peer.settled,
-    })
+    pump(&mut stream, &mut session)?;
+    Ok(report(&session))
 }
 
 /// Serve one responder session on an already-bound listener. Returns when the session
@@ -122,70 +133,16 @@ pub fn serve_responder(
 ) -> Result<SessionReport> {
     let (mut stream, _addr) = listener.accept()?;
     stream.set_nodelay(true).ok();
-    let mut sent = 0usize;
-    let mut received = 0usize;
-    let mut msgs = 0usize;
-
-    let (hello, n) = read_msg(&mut stream)?;
-    received += n;
-    let Msg::Hello { l, m, seed, universe_bits, est_initiator_unique, est_responder_unique, .. } =
-        hello
-    else {
-        return Err(anyhow!("expected Hello"));
-    };
-    // Reconstruct the shared parameter view. From the responder's perspective, "a" is the
-    // initiator (`initiator_is_alice = true` keeps codec orientation consistent).
-    let params = CsParams {
-        l,
-        m,
-        seed,
-        universe_bits,
-        est_a_unique: est_initiator_unique as usize,
-        est_b_unique: est_responder_unique as usize,
-    };
-
-    let (sketch, n) = read_msg(&mut stream)?;
-    received += n;
-    let Msg::Sketch(ref sm) = sketch else {
-        return Err(anyhow!("expected Sketch"));
-    };
-    let residue0 =
-        responder_residue(&params, set, sm, true).ok_or_else(|| anyhow!("sketch recovery failed"))?;
-
-    let mut peer = Peer::new(&params, set, Side::Positive, opts);
-    let mut in_flight = Some(seed_round(&residue0));
-    loop {
-        let msg = match in_flight.take() {
-            Some(msg) => msg,
-            None => match read_msg(&mut stream) {
-                Ok((msg, n)) => {
-                    received += n;
-                    msg
-                }
-                Err(_) => break,
-            },
-        };
-        match peer.step(&msg) {
-            Some(reply) => {
-                sent += write_msg(&mut stream, &reply)?;
-                msgs += 1;
-            }
-            None => break,
-        }
-    }
-    Ok(SessionReport {
-        unique: peer.result(),
-        bytes_sent: sent,
-        bytes_received: received,
-        msgs_sent: msgs,
-        converged: peer.settled,
-    })
+    let mut session = Session::responder(set, opts, false);
+    pump(&mut stream, &mut session)?;
+    Ok(report(&session))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::entropy::put_varint;
 
     #[test]
     fn tcp_session_matches_in_memory_protocol() {
@@ -228,5 +185,64 @@ mod tests {
         let bob = bob.join().unwrap();
         assert!(alice.unique.is_empty());
         assert_eq!(bob.unique, synth::difference(&b, &a));
+    }
+
+    #[test]
+    fn read_msg_rejects_adversarial_length_before_allocating() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // A Round frame claiming a 2^62-byte body; the socket then stays open, so a
+            // reader that trusted the length would hang allocating/reading forever.
+            let mut frame = vec![3u8];
+            put_varint(&mut frame, 1u64 << 62);
+            s.write_all(&frame).unwrap();
+            s
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        assert!(read_msg(&mut stream).is_err());
+        drop(writer.join().unwrap());
+    }
+
+    #[test]
+    fn read_msg_rejects_truncated_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // Claims 16 body bytes, delivers 3, then closes.
+            let mut frame = vec![3u8];
+            put_varint(&mut frame, 16);
+            frame.extend_from_slice(&[1, 2, 3]);
+            s.write_all(&frame).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        assert!(read_msg(&mut stream).is_err());
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn responder_rejects_out_of_order_stream() {
+        // A client that skips the handshake and opens with a Round frame must get a
+        // protocol error, not a hang or a panic.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let rogue = Msg::Round {
+                residue: vec![],
+                smf: None,
+                inquiry: vec![],
+                answers: vec![],
+                done: false,
+            };
+            s.write_all(&rogue.to_bytes()).unwrap();
+            s
+        });
+        let set: Vec<u64> = (0..100).collect();
+        let err = serve_responder(&listener, &set, BidiOptions::default());
+        assert!(err.is_err(), "out-of-order stream must fail the session");
+        drop(writer.join().unwrap());
     }
 }

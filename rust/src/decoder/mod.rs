@@ -16,7 +16,7 @@
 mod core;
 mod example13;
 
-pub use core::{DecodeStats, MpDecoder, Side};
+pub use self::core::{DecodeStats, MpDecoder, Side};
 
 /// Which residue norm the matching stage greedily minimizes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,6 +42,38 @@ impl Default for DecoderConfig {
     fn default() -> Self {
         DecoderConfig { pursuit: Pursuit::L2, allow_unset: true, max_iters: 0 }
     }
+}
+
+/// Run the pursuit loop with the §3.4 escalation ladder shared by every protocol
+/// frontend: vanilla L2 pursuit; on a stall, one L1 (SSMP) pass followed by an L2
+/// polish; then up to `max_kicks` pairwise-local-minimum kicks
+/// (see [`MpDecoder::kick_worst`]). Returns the final stats and whether the L1
+/// fallback fired.
+pub fn run_with_fallback(
+    dec: &mut MpDecoder,
+    ssmp_fallback: bool,
+    max_kicks: usize,
+) -> (DecodeStats, bool) {
+    let mut stats = dec.run();
+    let mut fell_back = false;
+    if stats.stalled && ssmp_fallback {
+        fell_back = true;
+        dec.switch_pursuit(Pursuit::L1);
+        dec.run();
+        dec.switch_pursuit(Pursuit::L2);
+        stats = dec.run();
+    }
+    // Escape pairwise local minima: kick out the most contradicted set coordinate and
+    // re-run (bounded; a wrong kick is just noise that later rounds re-correct).
+    let mut kicks = 0;
+    while stats.stalled && kicks < max_kicks {
+        if dec.kick_worst().is_none() {
+            break;
+        }
+        kicks += 1;
+        stats = dec.run();
+    }
+    (stats, fell_back)
 }
 
 impl DecoderConfig {

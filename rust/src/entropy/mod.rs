@@ -56,6 +56,23 @@ pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
     }
 }
 
+/// Checked cursor-style take for frame parsers: `len` bytes at `*off`, advancing the
+/// cursor. `None` on truncation *or* offset overflow — adversarial length fields must
+/// never panic, not even via debug-build overflow checks.
+pub(crate) fn take<'a>(data: &'a [u8], off: &mut usize, len: usize) -> Option<&'a [u8]> {
+    let end = off.checked_add(len)?;
+    let out = data.get(*off..end)?;
+    *off = end;
+    Some(out)
+}
+
+/// Checked cursor-style varint read (see [`take`]).
+pub(crate) fn take_varint(data: &[u8], off: &mut usize) -> Option<u64> {
+    let (v, used) = get_varint(data.get(*off..)?)?;
+    *off += used;
+    Some(v)
+}
+
 /// LEB128 varint read; returns (value, bytes consumed) or None on truncation.
 pub fn get_varint(data: &[u8]) -> Option<(u64, usize)> {
     let mut v = 0u64;

@@ -79,6 +79,11 @@ pub fn decompress_residue(data: &[u8], n: usize) -> Option<Vec<i32>> {
     let mut off = 8;
     let (n_esc, used) = get_varint(&data[off..])?;
     off += used;
+    // Each escape costs ≥ 1 byte of the remaining stream; an inflated count from an
+    // adversarial frame must not reach `Vec::with_capacity`.
+    if n_esc > (data.len() - off) as u64 {
+        return None;
+    }
     let mut escapes = Vec::with_capacity(n_esc as usize);
     for _ in 0..n_esc {
         let (z, used) = get_varint(&data[off..])?;

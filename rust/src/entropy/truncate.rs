@@ -20,7 +20,7 @@
 
 use super::rans::{RansDecoder, RansEncoder, SymbolModel};
 use super::skellam::{skellam_pmf, skellam_range, SkellamParams};
-use super::{get_varint, put_varint};
+use super::{put_varint, take, take_varint};
 use crate::ecc::{BchSyndrome, GF2m};
 use std::sync::Arc;
 
@@ -90,21 +90,27 @@ impl SketchMsg {
         out
     }
 
+    /// Parse; adversarial-frame hardened: offsets are checked and the claimed coordinate
+    /// count is capped so a hostile header cannot drive the receiver's decode-buffer
+    /// allocation (`recover_sketch` reserves `n` slots up front).
     pub fn from_bytes(data: &[u8]) -> Option<Self> {
+        /// No real sketch comes close (l is a few-×-d rows); 2^24 coordinates would
+        /// already be a 64 MiB decode buffer.
+        const MAX_COORDS: u64 = 1 << 24;
         let mut off = 0usize;
-        let (n, used) = get_varint(&data[off..])?;
-        off += used;
-        let (tl, used) = get_varint(&data[off..])?;
-        off += used;
-        let table = data.get(off..off + tl as usize)?.to_vec();
-        off += tl as usize;
-        let (pl, used) = get_varint(&data[off..])?;
-        off += used;
-        let payload = data.get(off..off + pl as usize)?.to_vec();
-        off += pl as usize;
-        let (sl, used) = get_varint(&data[off..])?;
-        off += used;
-        let syndromes = data.get(off..off + sl as usize)?.to_vec();
+        let n = take_varint(data, &mut off)?;
+        if n > MAX_COORDS {
+            return None;
+        }
+        let tl = usize::try_from(take_varint(data, &mut off)?).ok()?;
+        let table = take(data, &mut off, tl)?.to_vec();
+        let pl = usize::try_from(take_varint(data, &mut off)?).ok()?;
+        let payload = take(data, &mut off, pl)?.to_vec();
+        let sl = usize::try_from(take_varint(data, &mut off)?).ok()?;
+        let syndromes = take(data, &mut off, sl)?.to_vec();
+        if off != data.len() {
+            return None; // trailing garbage — same strictness as the frame envelope
+        }
         Some(SketchMsg { n: n as usize, table, payload, syndromes })
     }
 }

@@ -20,8 +20,32 @@
 //! * **Baselines** — [`baselines`]: IBLT/Difference Digest, Graphene, CBF approximate SetX,
 //!   PinSketch, and the information-theoretic [`bounds`].
 //! * **Systems layer** — [`streaming`] (§4 digests), [`data`] (synthetic + Ethereum-sim
-//!   workloads), [`runtime`] (PJRT/XLA AOT artifact execution), [`coordinator`] (tokio
-//!   Alice/Bob nodes, partitioned parallel SetX).
+//!   workloads), [`runtime`] (PJRT/XLA AOT artifact execution), [`coordinator`] (threaded,
+//!   dependency-free TCP Alice/Bob nodes and the bounded-pool partitioned parallel SetX;
+//!   no tokio — the offline image's crate set doesn't carry it, see DESIGN.md §4).
+//!
+//! ## Architecture: the sans-io `Session` engine
+//!
+//! The bidirectional protocol is implemented exactly once, as the sans-io state machine
+//! [`protocol::session::Session`]: frames ([`protocol::wire::Msg`]) go in via
+//! `Session::on_msg`, and a [`protocol::session::SessionEvent`] comes out — `Reply(Msg)`
+//! to transmit, `Continue` while the handshake is still feeding, or `Done(outcome)` at
+//! termination. The engine owns the handshake, the sketch exchange, the ping-pong
+//! decoder ([`protocol::session::Peer`]), and per-frame byte accounting. Every transport
+//! is a thin adapter: [`protocol::bidi::run`] hands frames across in memory
+//! ([`protocol::session::drive`] is the one ping-pong loop in the codebase),
+//! [`coordinator::tcp`] does socket framing only, and [`coordinator::parallel`] fans
+//! sessions over a bounded worker pool. New transports (async, sharded, multi-tenant)
+//! need only move bytes.
+//!
+//! ## Workspace layout
+//!
+//! The Cargo workspace maps the repo's split source tree explicitly: the library lives at
+//! `rust/src/lib.rs`, the `commonsense` CLI at `rust/src/main.rs`, integration tests in
+//! `rust/tests/`, self-harnessed bench targets (`harness = false`, run with
+//! `cargo bench`) in `rust/benches/`, and runnable examples in `examples/` at the repo
+//! root (auto-discovered; run with `cargo run --release --example <name>`). The sibling
+//! `python/` tree (AOT kernel compilation) is not part of the Cargo build.
 //!
 //! ## Quickstart
 //!

@@ -2,7 +2,7 @@
 //!
 //! (Arg parsing is hand-rolled: the image's offline crate set has no clap — DESIGN.md §4.)
 
-use commonsense::coordinator::{connect_initiator, serve_responder};
+use commonsense::coordinator::{connect_initiator, parallel, serve_responder};
 use commonsense::data::synth;
 use commonsense::experiments;
 use commonsense::protocol::bidi::BidiOptions;
@@ -18,6 +18,8 @@ USAGE:
   commonsense tune [--n N] [--d D] [--bidi] [--trials K]
   commonsense serve --listen ADDR            (responder; set = synthetic demo workload)
   commonsense connect --addr ADDR            (initiator; set = synthetic demo workload)
+  commonsense parallel [--common N] [--a-unique X] [--b-unique Y] [--parts P] [--threads T]
+                                             (partitioned SetX on the bounded worker pool)
   commonsense selftest                       (quick end-to-end sanity run)
 
 Defaults: --scale 50000, --instances 5, --eth-accounts 300000, --n 100000, --d 1000."
@@ -131,6 +133,31 @@ fn main() -> anyhow::Result<()> {
                 report.bytes_sent,
                 report.bytes_received,
                 report.converged
+            );
+        }
+        "parallel" => {
+            let common = args.get("common", 50_000);
+            let au = args.get("a-unique", 200);
+            let bu = args.get("b-unique", 200);
+            let parts = args.get("parts", 16);
+            let threads = args.get("threads", 4);
+            let (a, b) = synth::overlap_pair(common, au, bu, 42);
+            println!(
+                "parallel setx: |A| = {}, |B| = {}, {parts} partitions on ≤ {threads} workers",
+                a.len(),
+                b.len()
+            );
+            let t0 = std::time::Instant::now();
+            let out = parallel::setx(&a, &b, au, bu, parts, threads, BidiOptions::default());
+            println!(
+                "done in {:?}: |A\\B| = {}, |B\\A| = {}, {} B in {} msgs, peak workers {}, converged = {}",
+                t0.elapsed(),
+                out.a_minus_b.len(),
+                out.b_minus_a.len(),
+                out.total_bytes,
+                out.total_msgs,
+                out.peak_workers,
+                out.converged
             );
         }
         "selftest" => {

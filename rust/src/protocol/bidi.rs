@@ -16,17 +16,22 @@
 //!
 //! The session ends when the residue is zero and nothing is outstanding; zero residue plus
 //! the disjointness invariant implies both sides' recoveries are exact (§5.1).
+//!
+//! All of the above lives in the sans-io engine of [`crate::protocol::session`]; this
+//! module is the *in-memory frontend*: [`run`] wires an initiator [`Session`] to a
+//! responder [`Session`] through [`session::drive`] and packages the outcome. The TCP and
+//! partitioned-parallel frontends ([`crate::coordinator`]) consume the identical engine.
 
-use crate::decoder::{DecoderConfig, MpDecoder, Pursuit, Side};
-use crate::entropy::{compress_residue, compress_sketch, decompress_residue, recover_sketch, SketchCodecParams};
-use crate::hash::hash_u64;
 use crate::metrics::CommLog;
-use crate::protocol::{wire::Msg, CsParams};
-use crate::sketch::Sketch;
-use crate::smf::BloomFilter;
-use std::collections::HashMap;
+use crate::protocol::session::{self, Session};
+use crate::protocol::CsParams;
 
-/// Tunables of the ping-pong loop.
+// Re-exported so existing callers of the pre-`Session` API keep working.
+pub use crate::protocol::session::{
+    codec_params, initiator_sketch, responder_residue, seed_round, Peer,
+};
+
+/// Tunables of the ping-pong engine.
 #[derive(Clone, Copy, Debug)]
 pub struct BidiOptions {
     /// Hard cap on ping-pong messages (the paper observes ≤ 10 rounds; Observation 10).
@@ -36,7 +41,7 @@ pub struct BidiOptions {
     pub confident_round: usize,
     /// Target false-positive rate of each per-message SMF.
     pub smf_fpr: f64,
-    /// Switch to L1 pursuit (SSMP) when the L2 loop stalls.
+    /// Switch to L1 pursuit (SSMP) when the L2 pursuit stalls.
     pub ssmp_fallback: bool,
     /// Seed for inquiry signatures.
     pub sig_seed: u64,
@@ -70,257 +75,30 @@ pub struct BidiOutcome {
     pub converged: bool,
 }
 
-/// One host's protocol engine, generic over which side it decodes.
-pub struct Peer {
-    pub decoder: MpDecoder,
-    side: Side,
-    opts: BidiOptions,
-    round: usize,
-    /// Tentatively-set ids, in inquiry order, awaiting the peer's answers.
-    tentative: Vec<u64>,
-    /// sig → id for our current estimate (rebuilt lazily when answering inquiries).
-    pub settled: bool,
-}
-
-impl Peer {
-    pub fn new(params: &CsParams, set: &[u64], side: Side, opts: BidiOptions) -> Self {
-        let matrix = params.matrix();
-        let mut decoder = MpDecoder::new(&matrix, set, side);
-        decoder.set_config(DecoderConfig::commonsense());
-        Peer { decoder, side, opts, round: 0, tentative: Vec::new(), settled: false }
-    }
-
-    fn sig(&self, id: u64) -> u64 {
-        hash_u64(id, self.opts.sig_seed)
-    }
-
-    /// Process an incoming round message and produce the reply (or `None` when the session
-    /// is complete and the peer needs nothing further).
-    pub fn step(&mut self, incoming: &Msg) -> Option<Msg> {
-        let Msg::Round { residue, smf, inquiry, answers, done } = incoming else {
-            panic!("Peer::step expects Round messages");
-        };
-        self.round += 1;
-
-        // 1. Adopt the authoritative residue.
-        let res = decompress_residue(residue, self.decoder_len()).expect("residue decode");
-        self.decoder.load_residue(&res);
-
-        // 2. Resolve our previous tentative updates from the peer's answers.
-        //    `true` = common hallucination: the peer also held the element and has already
-        //    reverted its copy; we revert ours, leaving the element in the intersection.
-        debug_assert!(answers.len() == self.tentative.len() || answers.is_empty());
-        for (i, &conflict) in answers.iter().enumerate() {
-            if conflict {
-                let id = self.tentative[i];
-                self.decoder.force(id, false);
-            }
-        }
-        self.tentative.clear();
-
-        // 3. Answer the peer's inquiry; conflicts are our own hallucinations — revert them.
-        let mut my_answers = Vec::with_capacity(inquiry.len());
-        if !inquiry.is_empty() {
-            let mine: HashMap<u64, u64> =
-                self.decoder.estimate().iter().map(|&id| (self.sig(id), id)).collect();
-            for q in inquiry {
-                match mine.get(q) {
-                    Some(&id) => {
-                        self.decoder.force(id, false);
-                        my_answers.push(true);
-                    }
-                    None => my_answers.push(false),
-                }
-            }
-        }
-
-        // 4. Collision avoidance: refuse to set coordinates in the peer's estimate filter.
-        if let Some(bytes) = smf {
-            let bloom = BloomFilter::from_bytes(bytes).expect("smf decode");
-            self.decoder.set_banned(move |id| bloom.contains(id));
-        }
-
-        // 5. Decode.
-        let mut stats = self.decoder.run();
-        if stats.stalled && self.opts.ssmp_fallback {
-            self.decoder.switch_pursuit(Pursuit::L1);
-            self.decoder.run();
-            self.decoder.switch_pursuit(Pursuit::L2);
-            stats = self.decoder.run();
-        }
-        // Pairwise-local-minimum escape: kick out the most contradicted set coordinate and
-        // re-run (bounded; a wrong kick is just noise the next rounds re-correct).
-        let mut kicks = 0;
-        while stats.stalled && kicks < 4 {
-            if self.decoder.kick_worst().is_none() {
-                break;
-            }
-            kicks += 1;
-            stats = self.decoder.run();
-        }
-
-        // 6. Collision resolution: once confident, tentatively set gated coordinates and
-        //    put their signatures up for verification.
-        let mut my_inquiry = Vec::new();
-        if !stats.converged && self.round >= self.opts.confident_round {
-            for id in self.decoder.banned_positive_gain() {
-                self.decoder.force(id, true);
-                self.tentative.push(id);
-                my_inquiry.push(self.sig(id));
-            }
-        }
-
-        // 7. Termination bookkeeping.
-        self.settled =
-            self.decoder.residue_is_zero() && self.tentative.is_empty();
-        if *done && self.settled && my_answers.is_empty() && my_inquiry.is_empty() {
-            // Peer already declared completion and we owe nothing: end without replying.
-            return None;
-        }
-
-        // 8. Reply: residue + SMF of our estimate (skipped when we're declaring done with
-        //    nothing outstanding — the peer only needs the zero residue and our answers).
-        let smf_out = if self.settled && my_inquiry.is_empty() {
-            None
-        } else {
-            let est = self.decoder.estimate();
-            let mut bloom = BloomFilter::with_fpr(est.len().max(8), self.opts.smf_fpr, self.opts.sig_seed ^ 0xb100_f11e);
-            for id in &est {
-                bloom.insert(*id);
-            }
-            Some(bloom.to_bytes())
-        };
-        Some(Msg::Round {
-            residue: compress_residue(&self.decoder.export_residue()),
-            smf: smf_out,
-            inquiry: my_inquiry,
-            answers: my_answers,
-            done: self.settled,
-        })
-    }
-
-    fn decoder_len(&self) -> usize {
-        self.decoder.residue_len()
-    }
-
-    /// Final estimate (our unique elements), sorted.
-    pub fn result(&self) -> Vec<u64> {
-        let mut est = self.decoder.estimate();
-        est.sort_unstable();
-        est
-    }
-}
-
-/// The truncation-codec parameters as seen from the responder (whose unique count is the
-/// positive Skellam component).
-pub fn codec_params(params: &CsParams, initiator_is_alice: bool) -> SketchCodecParams {
-    let (r_unique, i_unique) = if initiator_is_alice {
-        (params.est_b_unique, params.est_a_unique)
-    } else {
-        (params.est_a_unique, params.est_b_unique)
-    };
-    SketchCodecParams::derive(r_unique, i_unique, params.l, params.m)
-}
-
-/// Initiator helper: the compressed sketch message for `set`.
-pub fn initiator_sketch(params: &CsParams, set: &[u64], initiator_is_alice: bool) -> Msg {
-    let sketch = Sketch::encode(params.matrix(), set);
-    Msg::Sketch(compress_sketch(&sketch.counts, &codec_params(params, initiator_is_alice)))
-}
-
-/// Responder helper: recover the initiator's sketch and form the initial canonical
-/// residue `r⃗_(1) = M·1_R − M̂·1_I` (responder-positive).
-pub fn responder_residue(
-    params: &CsParams,
-    set: &[u64],
-    sketch: &crate::entropy::SketchMsg,
-    initiator_is_alice: bool,
-) -> Option<Vec<i32>> {
-    let my_sketch = Sketch::encode(params.matrix(), set);
-    let (x_hat, _, _) =
-        recover_sketch(sketch, &my_sketch.counts, &codec_params(params, initiator_is_alice))?;
-    Some(my_sketch.counts.iter().zip(&x_hat).map(|(y, x)| y - x).collect())
-}
-
-/// The synthetic first Round message that seeds the responder's ping-pong loop.
-pub fn seed_round(residue0: &[i32]) -> Msg {
-    Msg::Round {
-        residue: compress_residue(residue0),
-        smf: None,
-        inquiry: Vec::new(),
-        answers: Vec::new(),
-        done: false,
-    }
-}
-
 /// In-memory end-to-end bidirectional run with exact byte accounting.
 ///
-/// `a`/`b` are Alice's and Bob's sets; the initiator is chosen per §5.1.
+/// `a`/`b` are Alice's and Bob's sets; the initiator is chosen per §5.1. This is a thin
+/// adapter: both endpoints are [`Session`]s and [`session::drive`] is the ping-pong.
 pub fn run(a: &[u64], b: &[u64], params: &CsParams, opts: BidiOptions) -> BidiOutcome {
-    let mut comm = CommLog::new();
     let alice_initiates = params.est_a_unique <= params.est_b_unique;
-    // Initiator I sends the sketch; responder R decodes the positive component.
     let (i_set, r_set) = if alice_initiates { (a, b) } else { (b, a) };
 
-    // Message 1: I's truncated sketch (plus the tiny Hello header).
-    let hello = Msg::Hello {
-        l: params.l,
-        m: params.m,
-        seed: params.seed,
-        universe_bits: params.universe_bits,
-        est_initiator_unique: if alice_initiates { params.est_a_unique } else { params.est_b_unique } as u64,
-        est_responder_unique: if alice_initiates { params.est_b_unique } else { params.est_a_unique } as u64,
-        set_len: i_set.len() as u64,
-    };
-    comm.record(alice_initiates, "hello", hello.to_bytes().len());
+    let (mut initiator, opening) = Session::initiator(params, i_set, opts, alice_initiates);
+    let mut responder = Session::responder(r_set, opts, !alice_initiates);
+    // A recovery failure (e.g. an undersized sketch) surfaces as a non-converged outcome.
+    let converged = session::drive(&mut initiator, &mut responder, opening).unwrap_or(false);
 
-    let sketch_msg = initiator_sketch(params, i_set, alice_initiates);
-    comm.record(alice_initiates, "sketch", sketch_msg.to_bytes().len());
-
-    // Responder reconstructs the sketch and forms the canonical residue.
-    let Msg::Sketch(ref sm) = sketch_msg else { unreachable!() };
-    let residue0 = responder_residue(params, r_set, sm, alice_initiates).expect("sketch recovery");
-
-    let mut responder = Peer::new(params, r_set, Side::Positive, opts);
-    let mut initiator = Peer::new(params, i_set, Side::Negative, opts);
-
-    // Seed the ping-pong: hand the responder the initial residue as a synthetic round.
-    let mut in_flight = Some(seed_round(&residue0));
-    let mut responder_turn = true;
-    let mut rounds = 1usize; // the sketch message
-    let mut converged = false;
-
-    while let Some(msg) = in_flight.take() {
-        if rounds > opts.max_rounds {
-            break;
-        }
-        let (peer, from_alice) = if responder_turn {
-            (&mut responder, !alice_initiates)
-        } else {
-            (&mut initiator, alice_initiates)
-        };
-        let reply = peer.step(&msg);
-        match reply {
-            Some(reply) => {
-                comm.record(from_alice, "round", reply.to_bytes().len());
-                rounds += 1;
-                in_flight = Some(reply);
-            }
-            None => {
-                converged = true;
-            }
-        }
-        responder_turn = !responder_turn;
-    }
-    if !converged {
-        // Round budget exhausted: report the current state (callers treat as failure).
-        converged = responder.settled && initiator.settled;
-    }
+    let i_out = initiator.outcome();
+    let r_out = responder.outcome();
+    // Either endpoint's transcript is the full conversation; keep the initiator's.
+    let comm = initiator.comm().clone();
+    // Paper round counting: every protocol message incl. the sketch, excl. the Hello header.
+    let rounds = comm.rounds().saturating_sub(1);
 
     let (a_minus_b, b_minus_a) = if alice_initiates {
-        (initiator.result(), responder.result())
+        (i_out.unique, r_out.unique)
     } else {
-        (responder.result(), initiator.result())
+        (r_out.unique, i_out.unique)
     };
     let exclude: std::collections::HashSet<u64> = a_minus_b.iter().copied().collect();
     let mut intersection: Vec<u64> = a.iter().copied().filter(|x| !exclude.contains(x)).collect();

@@ -5,7 +5,9 @@
 //! We implement both referenced estimators so sessions can bootstrap without ground truth:
 //!
 //! * **Strata estimator** (Eppstein et al. / Flajolet–Martin stratification): 32 strata of
-//!   tiny IBLTs; stratum k receives elements whose hash has exactly k leading zero bits.
+//!   tiny IBLTs; stratum k receives elements whose hash has exactly k *trailing* zero bits
+//!   (`stratum_of` uses `trailing_zeros`; the deepest stratum absorbs everything beyond
+//!   the stratum count — the geometric law is identical to the leading-zeros convention).
 //!   Decode strata from the deepest down; when a stratum's difference IBLT peels, its
 //!   count scales by 2^(k+1). A few KB buys a constant-factor estimate of d = |AΔB|.
 //! * **Min-wise (MinHash) estimator**: k bottom hashes estimate the Jaccard similarity J;

@@ -3,15 +3,22 @@
 //! Both are implemented as *pure message-passing state machines*: every byte that would
 //! cross the network is actually framed (see [`wire`]) and charged to a
 //! [`crate::metrics::CommLog`], so the communication costs reported by the experiment
-//! harnesses are measured, not estimated. The [`crate::coordinator`] module runs the same
-//! state machines over real TCP sockets.
+//! harnesses are measured, not estimated.
+//!
+//! The bidirectional protocol's single source of truth is the sans-io [`session::Session`]
+//! engine: handshake, sketch exchange, and ping-pong decode as one `Msg`-in/`Msg`-out
+//! state machine. [`bidi::run`] (in-memory), [`crate::coordinator::tcp`] (socket framing),
+//! and [`crate::coordinator::parallel`] (bounded-pool partitioned scale-out) are thin
+//! transport adapters over that one engine.
 
 pub mod bidi;
 pub mod estimate;
+pub mod session;
 pub mod uni;
 pub mod wire;
 
 pub use bidi::{BidiOptions, BidiOutcome};
+pub use session::{Role, Session, SessionError, SessionEvent, SessionOutcome};
 pub use uni::UniOutcome;
 
 use crate::matrix::CsMatrix;

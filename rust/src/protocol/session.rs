@@ -1,0 +1,600 @@
+//! The sans-io protocol engine: one `Session` state machine drives every transport.
+//!
+//! [`Session`] owns a complete bidirectional CommonSense endpoint — the `Hello` handshake,
+//! the sketch exchange, and the §5 ping-pong decode ([`Peer`]) — as a pure
+//! message-in/message-out state machine with built-in byte accounting. Transports stay
+//! "sans io": they move opaque [`Msg`] frames and never touch protocol state. Three
+//! frontends consume the same core:
+//!
+//! * [`crate::protocol::bidi::run`] — the in-memory driver ([`drive`] below is the single
+//!   ping-pong drive loop in the codebase);
+//! * [`crate::coordinator::tcp`] — socket framing only;
+//! * [`crate::coordinator::parallel`] — a bounded worker pool of in-memory drives.
+//!
+//! ```text
+//! initiator                                    responder
+//! Session::initiator() ── Hello, Sketch ────▶  Session::responder()
+//!           ◀────────────── Round ──────────── on_msg → Reply
+//! on_msg → Reply ─────────── Round ──────────▶ …
+//!           …                                  on_msg → Done(outcome)
+//! ```
+//!
+//! Every frame the session emits or absorbs is charged to its [`CommLog`] at its exact
+//! wire size, so all frontends report identical communication costs by construction.
+
+use crate::decoder::{run_with_fallback, DecoderConfig, MpDecoder, Side};
+use crate::entropy::{
+    compress_residue, compress_sketch, decompress_residue, recover_sketch, SketchCodecParams,
+};
+use crate::hash::hash_u64;
+use crate::metrics::CommLog;
+use crate::protocol::bidi::BidiOptions;
+use crate::protocol::{wire::Msg, CsParams};
+use crate::sketch::Sketch;
+use crate::smf::BloomFilter;
+use std::collections::HashMap;
+
+/// Terminal protocol faults. Any error closes the session: the frame stream is not
+/// trustworthy past the first malformed or out-of-phase message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionError {
+    /// A frame arrived that the current phase cannot accept.
+    UnexpectedMessage { phase: &'static str, got: &'static str },
+    /// The initiator's truncated sketch failed recovery against our counts.
+    SketchRecovery,
+    /// A round frame carried an undecodable field.
+    Corrupt(&'static str),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::UnexpectedMessage { phase, got } => {
+                write!(f, "unexpected {got} frame in {phase} phase")
+            }
+            SessionError::SketchRecovery => write!(f, "sketch recovery failed"),
+            SessionError::Corrupt(what) => write!(f, "corrupt {what} field in round frame"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// Which end of the handshake this endpoint plays (§5.1: the initiator is the side with
+/// the smaller estimated unique count).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Initiator,
+    Responder,
+}
+
+/// What the state machine wants the transport to do after absorbing a frame.
+#[derive(Clone, Debug)]
+pub enum SessionEvent {
+    /// Transmit this frame, then feed the peer's next frame back in.
+    Reply(Msg),
+    /// Nothing owed yet; feed the peer's next frame (handshake phases).
+    Continue,
+    /// Protocol complete — transmit nothing further and tear down the transport.
+    Done(SessionOutcome),
+}
+
+/// Final (or, on disconnect, current) state of one endpoint.
+#[derive(Clone, Debug)]
+pub struct SessionOutcome {
+    /// This host's recovered unique elements, sorted.
+    pub unique: Vec<u64>,
+    /// The residue reached zero with nothing outstanding.
+    pub converged: bool,
+}
+
+enum Phase {
+    /// Responder: waiting for the initiator's `Hello`.
+    AwaitHello,
+    /// Responder: parameters agreed, waiting for the initiator's sketch.
+    AwaitSketch(CsParams),
+    /// Both roles: the §5 ping-pong decode.
+    PingPong(Peer),
+    /// Terminal (only reached through an error).
+    Closed,
+}
+
+fn phase_name(phase: &Phase) -> &'static str {
+    match phase {
+        Phase::AwaitHello => "await-hello",
+        Phase::AwaitSketch(_) => "await-sketch",
+        Phase::PingPong(_) => "ping-pong",
+        Phase::Closed => "closed",
+    }
+}
+
+fn label(msg: &Msg) -> &'static str {
+    match msg {
+        Msg::Hello { .. } => "hello",
+        Msg::Sketch(_) => "sketch",
+        Msg::Round { .. } => "round",
+    }
+}
+
+/// A sans-io bidirectional CommonSense endpoint.
+pub struct Session {
+    role: Role,
+    opts: BidiOptions,
+    /// Whether this endpoint is "Alice" for [`CommLog`] direction labeling.
+    is_alice: bool,
+    /// The responder holds its set until the `Hello` fixes the shared parameters.
+    set: Vec<u64>,
+    phase: Phase,
+    comm: CommLog,
+}
+
+impl Session {
+    /// Open a session as the initiator. Returns the engine plus the opening frames
+    /// (`Hello` then `Sketch`) the transport must deliver before the first `on_msg`.
+    pub fn initiator(
+        params: &CsParams,
+        set: &[u64],
+        opts: BidiOptions,
+        is_alice: bool,
+    ) -> (Session, Vec<Msg>) {
+        let (est_i, est_r) = if is_alice {
+            (params.est_a_unique, params.est_b_unique)
+        } else {
+            (params.est_b_unique, params.est_a_unique)
+        };
+        let hello = Msg::Hello {
+            l: params.l,
+            m: params.m,
+            seed: params.seed,
+            universe_bits: params.universe_bits,
+            est_initiator_unique: est_i as u64,
+            est_responder_unique: est_r as u64,
+            set_len: set.len() as u64,
+        };
+        let sketch = initiator_sketch(params, set, is_alice);
+        let peer = Peer::new(params, set, Side::Negative, opts);
+        let mut session = Session {
+            role: Role::Initiator,
+            opts,
+            is_alice,
+            set: Vec::new(),
+            phase: Phase::PingPong(peer),
+            comm: CommLog::new(),
+        };
+        session.record_sent(&hello);
+        session.record_sent(&sketch);
+        (session, vec![hello, sketch])
+    }
+
+    /// Open a session as the responder. Every protocol parameter is learned from the
+    /// initiator's `Hello`; only the local set and options are needed up front.
+    pub fn responder(set: &[u64], opts: BidiOptions, is_alice: bool) -> Session {
+        Session {
+            role: Role::Responder,
+            opts,
+            is_alice,
+            set: set.to_vec(),
+            phase: Phase::AwaitHello,
+            comm: CommLog::new(),
+        }
+    }
+
+    /// Absorb one incoming frame and report what the transport should do next.
+    ///
+    /// Errors are terminal: the session moves to a closed phase and rejects all further
+    /// frames (malformed peers don't get retries).
+    pub fn on_msg(&mut self, incoming: &Msg) -> Result<SessionEvent, SessionError> {
+        self.record_received(incoming);
+        match (std::mem::replace(&mut self.phase, Phase::Closed), incoming) {
+            (Phase::AwaitHello, Msg::Hello { l, m, seed, universe_bits, est_initiator_unique, est_responder_unique, .. }) => {
+                // Reconstruct the shared parameter view with the initiator in the "a"
+                // slot (`initiator_is_alice = true` keeps the codec orientation fixed
+                // regardless of which real host initiated).
+                let params = CsParams {
+                    l: *l,
+                    m: *m,
+                    seed: *seed,
+                    universe_bits: *universe_bits,
+                    est_a_unique: *est_initiator_unique as usize,
+                    est_b_unique: *est_responder_unique as usize,
+                };
+                self.phase = Phase::AwaitSketch(params);
+                Ok(SessionEvent::Continue)
+            }
+            (Phase::AwaitSketch(params), Msg::Sketch(sm)) => {
+                // The decoder copies the candidate ids; release our buffer with it.
+                let set = std::mem::take(&mut self.set);
+                let residue0 = responder_residue(&params, &set, sm, true)
+                    .ok_or(SessionError::SketchRecovery)?;
+                let mut peer = Peer::new(&params, &set, Side::Positive, self.opts);
+                // The initial canonical residue enters the engine as a synthetic round:
+                // it is not a transmitted frame, so it is not charged to the comm log.
+                let reply = peer.step(&seed_round(&residue0))?;
+                self.phase = Phase::PingPong(peer);
+                Ok(self.dispatch(reply))
+            }
+            (Phase::PingPong(mut peer), Msg::Round { .. }) => {
+                if self.non_hello_msgs() > self.opts.max_rounds {
+                    // Round budget exhausted (Observation 10 says ≤ 10 in practice):
+                    // stop replying; both sides report their current state.
+                    self.phase = Phase::PingPong(peer);
+                    return Ok(SessionEvent::Done(self.outcome()));
+                }
+                let reply = peer.step(incoming)?;
+                self.phase = Phase::PingPong(peer);
+                Ok(self.dispatch(reply))
+            }
+            (phase, _) => Err(SessionError::UnexpectedMessage {
+                phase: phase_name(&phase),
+                got: label(incoming),
+            }),
+        }
+    }
+
+    fn dispatch(&mut self, reply: Option<Msg>) -> SessionEvent {
+        match reply {
+            Some(msg) => {
+                self.record_sent(&msg);
+                SessionEvent::Reply(msg)
+            }
+            None => SessionEvent::Done(self.outcome()),
+        }
+    }
+
+    fn record_sent(&mut self, msg: &Msg) {
+        self.comm.record(self.is_alice, label(msg), msg.wire_len());
+    }
+
+    fn record_received(&mut self, msg: &Msg) {
+        self.comm.record(!self.is_alice, label(msg), msg.wire_len());
+    }
+
+    /// Messages seen so far that count against the round budget (everything but `Hello`).
+    fn non_hello_msgs(&self) -> usize {
+        self.comm.entries.iter().filter(|e| e.label != "hello").count()
+    }
+
+    pub fn role(&self) -> Role {
+        self.role
+    }
+
+    /// Full session transcript: every frame sent *and* received, at exact wire sizes.
+    /// Both endpoints of a session record identical totals.
+    pub fn comm(&self) -> &CommLog {
+        &self.comm
+    }
+
+    pub fn bytes_sent(&self) -> usize {
+        self.direction_bytes(true)
+    }
+
+    pub fn bytes_received(&self) -> usize {
+        self.direction_bytes(false)
+    }
+
+    fn direction_bytes(&self, sent: bool) -> usize {
+        self.comm
+            .entries
+            .iter()
+            .filter(|e| (e.from_alice == self.is_alice) == sent)
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    pub fn msgs_sent(&self) -> usize {
+        self.comm.entries.iter().filter(|e| e.from_alice == self.is_alice).count()
+    }
+
+    /// Residue at zero with no outstanding inquiries (the §5.1 termination condition).
+    pub fn is_settled(&self) -> bool {
+        matches!(&self.phase, Phase::PingPong(peer) if peer.settled)
+    }
+
+    /// Snapshot of this endpoint's result — also valid mid-session (a transport calls
+    /// this after a peer disconnect to report whatever state was reached).
+    pub fn outcome(&self) -> SessionOutcome {
+        match &self.phase {
+            Phase::PingPong(peer) => {
+                SessionOutcome { unique: peer.result(), converged: peer.settled }
+            }
+            _ => SessionOutcome { unique: Vec::new(), converged: false },
+        }
+    }
+}
+
+/// Drive an initiator/responder pair in memory to completion — **the** ping-pong drive
+/// loop every frontend shares (TCP swaps the in-memory hand-off for socket reads/writes;
+/// the parallel coordinator runs many of these on a bounded pool). Returns whether both
+/// endpoints settled.
+pub fn drive(
+    initiator: &mut Session,
+    responder: &mut Session,
+    opening: Vec<Msg>,
+) -> Result<bool, SessionError> {
+    // Deliver the opening frames (`Hello`, `Sketch`); the responder's first decode seeds
+    // the ping-pong.
+    let mut in_flight: Option<(Msg, bool)> = None;
+    for msg in &opening {
+        match responder.on_msg(msg)? {
+            SessionEvent::Continue => {}
+            SessionEvent::Reply(reply) => in_flight = Some((reply, false)),
+            SessionEvent::Done(_) => {}
+        }
+    }
+    // Alternate until a side completes (`Done`) or the round budget trips.
+    while let Some((msg, to_responder)) = in_flight.take() {
+        let dst: &mut Session = if to_responder { &mut *responder } else { &mut *initiator };
+        match dst.on_msg(&msg)? {
+            SessionEvent::Reply(reply) => in_flight = Some((reply, !to_responder)),
+            SessionEvent::Continue => {}
+            SessionEvent::Done(_) => {}
+        }
+    }
+    Ok(initiator.is_settled() && responder.is_settled())
+}
+
+/// One host's ping-pong engine, generic over which side it decodes.
+///
+/// `Peer` is the pure §5 round logic (decode, SMF gating, inquiries, answers); `Session`
+/// wraps it with the handshake phases and accounting. It is exposed for tests and for
+/// building custom drivers, but transports should consume [`Session`].
+pub struct Peer {
+    pub decoder: MpDecoder,
+    opts: BidiOptions,
+    round: usize,
+    /// Tentatively-set ids, in inquiry order, awaiting the peer's answers.
+    tentative: Vec<u64>,
+    /// Residue at zero and nothing outstanding.
+    pub settled: bool,
+}
+
+impl Peer {
+    pub fn new(params: &CsParams, set: &[u64], side: Side, opts: BidiOptions) -> Self {
+        let matrix = params.matrix();
+        let mut decoder = MpDecoder::new(&matrix, set, side);
+        decoder.set_config(DecoderConfig::commonsense());
+        Peer { decoder, opts, round: 0, tentative: Vec::new(), settled: false }
+    }
+
+    fn sig(&self, id: u64) -> u64 {
+        hash_u64(id, self.opts.sig_seed)
+    }
+
+    /// Process an incoming round message and produce the reply (or `None` when the
+    /// session is complete and the peer needs nothing further).
+    pub fn step(&mut self, incoming: &Msg) -> Result<Option<Msg>, SessionError> {
+        let Msg::Round { residue, smf, inquiry, answers, done } = incoming else {
+            return Err(SessionError::UnexpectedMessage {
+                phase: "ping-pong",
+                got: label(incoming),
+            });
+        };
+        self.round += 1;
+
+        // 1. Adopt the authoritative residue.
+        let res = decompress_residue(residue, self.decoder.residue_len())
+            .ok_or(SessionError::Corrupt("residue"))?;
+        self.decoder.load_residue(&res);
+
+        // 2. Resolve our previous tentative updates from the peer's answers.
+        //    `true` = common hallucination: the peer also held the element and has
+        //    already reverted its copy; we revert ours, leaving the element in the
+        //    intersection. (Zip: excess answers from a malformed peer are ignored.)
+        for (&conflict, &id) in answers.iter().zip(&self.tentative) {
+            if conflict {
+                self.decoder.force(id, false);
+            }
+        }
+        self.tentative.clear();
+
+        // 3. Answer the peer's inquiry; conflicts are our own hallucinations — revert.
+        let mut my_answers = Vec::with_capacity(inquiry.len());
+        if !inquiry.is_empty() {
+            let mine: HashMap<u64, u64> =
+                self.decoder.estimate().iter().map(|&id| (self.sig(id), id)).collect();
+            for q in inquiry {
+                match mine.get(q) {
+                    Some(&id) => {
+                        self.decoder.force(id, false);
+                        my_answers.push(true);
+                    }
+                    None => my_answers.push(false),
+                }
+            }
+        }
+
+        // 4. Collision avoidance: refuse to set coordinates in the peer's estimate SMF.
+        if let Some(bytes) = smf {
+            let bloom =
+                BloomFilter::from_bytes(bytes).ok_or(SessionError::Corrupt("smf"))?;
+            self.decoder.set_banned(move |id| bloom.contains(id));
+        }
+
+        // 5. Decode, with the shared §3.4 escalation ladder (L1 fallback + local-minimum
+        //    kicks; a wrong kick is just noise the next rounds re-correct).
+        let (stats, _) = run_with_fallback(&mut self.decoder, self.opts.ssmp_fallback, 4);
+
+        // 6. Collision resolution: once confident, tentatively set gated coordinates and
+        //    put their signatures up for verification.
+        let mut my_inquiry = Vec::new();
+        if !stats.converged && self.round >= self.opts.confident_round {
+            for id in self.decoder.banned_positive_gain() {
+                self.decoder.force(id, true);
+                self.tentative.push(id);
+                my_inquiry.push(self.sig(id));
+            }
+        }
+
+        // 7. Termination bookkeeping.
+        self.settled = self.decoder.residue_is_zero() && self.tentative.is_empty();
+        if *done && self.settled && my_answers.is_empty() && my_inquiry.is_empty() {
+            // Peer already declared completion and we owe nothing: end without replying.
+            return Ok(None);
+        }
+
+        // 8. Reply: residue + SMF of our estimate (skipped when we're declaring done with
+        //    nothing outstanding — the peer only needs the zero residue and our answers).
+        let smf_out = if self.settled && my_inquiry.is_empty() {
+            None
+        } else {
+            let est = self.decoder.estimate();
+            let mut bloom = BloomFilter::with_fpr(
+                est.len().max(8),
+                self.opts.smf_fpr,
+                self.opts.sig_seed ^ 0xb100_f11e,
+            );
+            for id in &est {
+                bloom.insert(*id);
+            }
+            Some(bloom.to_bytes())
+        };
+        Ok(Some(Msg::Round {
+            residue: compress_residue(&self.decoder.export_residue()),
+            smf: smf_out,
+            inquiry: my_inquiry,
+            answers: my_answers,
+            done: self.settled,
+        }))
+    }
+
+    /// Final estimate (our unique elements), sorted.
+    pub fn result(&self) -> Vec<u64> {
+        let mut est = self.decoder.estimate();
+        est.sort_unstable();
+        est
+    }
+}
+
+/// The truncation-codec parameters as seen from the responder (whose unique count is the
+/// positive Skellam component).
+pub fn codec_params(params: &CsParams, initiator_is_alice: bool) -> SketchCodecParams {
+    let (r_unique, i_unique) = if initiator_is_alice {
+        (params.est_b_unique, params.est_a_unique)
+    } else {
+        (params.est_a_unique, params.est_b_unique)
+    };
+    SketchCodecParams::derive(r_unique, i_unique, params.l, params.m)
+}
+
+/// Initiator helper: the compressed sketch message for `set`.
+pub fn initiator_sketch(params: &CsParams, set: &[u64], initiator_is_alice: bool) -> Msg {
+    let sketch = Sketch::encode(params.matrix(), set);
+    Msg::Sketch(compress_sketch(&sketch.counts, &codec_params(params, initiator_is_alice)))
+}
+
+/// Responder helper: recover the initiator's sketch and form the initial canonical
+/// residue `r⃗_(1) = M·1_R − M̂·1_I` (responder-positive).
+pub fn responder_residue(
+    params: &CsParams,
+    set: &[u64],
+    sketch: &crate::entropy::SketchMsg,
+    initiator_is_alice: bool,
+) -> Option<Vec<i32>> {
+    let my_sketch = Sketch::encode(params.matrix(), set);
+    if sketch.n != my_sketch.counts.len() {
+        // Mis-negotiated or adversarial frame: `recover_sketch` asserts on a length
+        // mismatch; refuse here so transports get an error instead of a panic.
+        return None;
+    }
+    let (x_hat, _, _) =
+        recover_sketch(sketch, &my_sketch.counts, &codec_params(params, initiator_is_alice))?;
+    Some(my_sketch.counts.iter().zip(&x_hat).map(|(y, x)| y - x).collect())
+}
+
+/// The synthetic first Round message that seeds the responder's ping-pong engine.
+pub fn seed_round(residue0: &[i32]) -> Msg {
+    Msg::Round {
+        residue: compress_residue(residue0),
+        smf: None,
+        inquiry: Vec::new(),
+        answers: Vec::new(),
+        done: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn session_pair_converges_with_mirror_accounting() {
+        let (a, b) = synth::overlap_pair(5_000, 60, 90, 11);
+        let params = CsParams::tuned_bidi(5_150, 60, 90);
+        let (mut ini, opening) = Session::initiator(&params, &a, BidiOptions::default(), true);
+        let mut res = Session::responder(&b, BidiOptions::default(), false);
+        let converged = drive(&mut ini, &mut res, opening).unwrap();
+        assert!(converged);
+        assert_eq!(ini.outcome().unique, synth::difference(&a, &b));
+        assert_eq!(res.outcome().unique, synth::difference(&b, &a));
+        // Mirror-image accounting: what one endpoint sends the other receives, and both
+        // transcripts total the same.
+        assert_eq!(ini.bytes_sent(), res.bytes_received());
+        assert_eq!(res.bytes_sent(), ini.bytes_received());
+        assert_eq!(ini.comm().total_bytes(), res.comm().total_bytes());
+        assert!(ini.msgs_sent() >= 2, "hello + sketch at minimum");
+    }
+
+    #[test]
+    fn out_of_order_frames_close_the_session() {
+        let set: Vec<u64> = (0..100).collect();
+        let round = seed_round(&[0i32; 128]);
+        let mut res = Session::responder(&set, BidiOptions::default(), false);
+        assert!(matches!(
+            res.on_msg(&round),
+            Err(SessionError::UnexpectedMessage { phase: "await-hello", got: "round" })
+        ));
+        // The session is closed afterwards: even a well-formed Hello is now rejected.
+        let hello = Msg::Hello {
+            l: 128,
+            m: 5,
+            seed: 1,
+            universe_bits: 64,
+            est_initiator_unique: 1,
+            est_responder_unique: 1,
+            set_len: 100,
+        };
+        assert!(matches!(
+            res.on_msg(&hello),
+            Err(SessionError::UnexpectedMessage { phase: "closed", .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_round_fields_error_instead_of_panicking() {
+        let set: Vec<u64> = (0..500).collect();
+        let params = CsParams::tuned_bidi(1_000, 10, 10);
+        // Initiator sessions enter the ping-pong phase immediately.
+        let (mut ini, _opening) = Session::initiator(&params, &set, BidiOptions::default(), true);
+        let garbage_residue =
+            Msg::Round { residue: vec![0xff; 7], smf: None, inquiry: vec![], answers: vec![], done: false };
+        assert!(matches!(ini.on_msg(&garbage_residue), Err(SessionError::Corrupt("residue"))));
+
+        let (mut ini, _opening) = Session::initiator(&params, &set, BidiOptions::default(), true);
+        let zero_residue = vec![0i32; params.l as usize];
+        let garbage_smf = Msg::Round {
+            residue: compress_residue(&zero_residue),
+            smf: Some(vec![1, 2, 3]),
+            inquiry: vec![],
+            answers: vec![],
+            done: false,
+        };
+        assert!(matches!(ini.on_msg(&garbage_smf), Err(SessionError::Corrupt("smf"))));
+    }
+
+    #[test]
+    fn round_budget_terminates_nonconverging_sessions() {
+        let (a, b) = synth::overlap_pair(2_000, 40, 40, 17);
+        let mut params = CsParams::tuned_bidi(2_080, 40, 40);
+        // Starve the sketch so the decode cannot complete, then check the budget trips.
+        params.l = 128;
+        let mut opts = BidiOptions::default();
+        opts.max_rounds = 6;
+        let (mut ini, opening) = Session::initiator(&params, &a, opts, true);
+        let mut res = Session::responder(&b, opts, false);
+        let converged = drive(&mut ini, &mut res, opening).unwrap_or(false);
+        assert!(!converged);
+        // Budget counts non-hello frames on both endpoints identically.
+        assert!(ini.comm().rounds() <= opts.max_rounds + 3);
+    }
+}

@@ -4,9 +4,9 @@
 //!    and sends it — the single round of communication.
 //! 2. Bob recovers `M·1_A`, forms `r = M·1_B − M·1_A = M·1_{B\A}`, and losslessly
 //!    reconstructs `1_{B\A}` with the binary MP decoder (falling back to L1 pursuit /
-//!    SSMP if the L2 loop stalls). Then `A ∩ B = B \ (B\A)`.
+//!    SSMP if the L2 pursuit stalls). Then `A ∩ B = B \ (B\A)`.
 
-use crate::decoder::{DecoderConfig, MpDecoder, Pursuit, Side};
+use crate::decoder::{run_with_fallback, DecoderConfig, MpDecoder, Side};
 use crate::entropy::{compress_sketch, recover_sketch, SketchCodecParams};
 use crate::metrics::CommLog;
 use crate::protocol::{wire::Msg, CsParams};
@@ -54,16 +54,10 @@ pub fn bob_decode(msg: &Msg, b: &[u64], params: &CsParams) -> Option<(Vec<u64>, 
     let mut dec = MpDecoder::new(&matrix, b, Side::Positive);
     dec.set_config(DecoderConfig::commonsense());
     dec.load_residue(&residue);
-    let stats = dec.run();
-    let mut used_fallback = false;
-    if !stats.converged {
-        // §3.4: fall back to the RIP-1-safe L1 pursuit (SSMP) when vanilla MP stalls.
-        used_fallback = true;
-        dec.switch_pursuit(Pursuit::L1);
-        dec.run();
-        dec.switch_pursuit(Pursuit::L2);
-        dec.run();
-    }
+    // §3.4: fall back to the RIP-1-safe L1 pursuit (SSMP) when vanilla MP stalls — the
+    // same escalation ladder the ping-pong session engine uses (without its kicks: a
+    // one-shot decode has no later rounds to absorb a wrong kick).
+    let (_stats, used_fallback) = run_with_fallback(&mut dec, true, 0);
     let mut b_minus_a = dec.estimate();
     b_minus_a.sort_unstable();
     Some((b_minus_a, used_fallback))

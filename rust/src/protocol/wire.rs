@@ -5,7 +5,12 @@
 //! has no serde; this module doubles as the protocol's stable interchange format for the
 //! TCP coordinator.)
 
-use crate::entropy::{get_varint, put_varint, SketchMsg};
+use crate::entropy::{get_varint, put_varint, take, take_varint, SketchMsg};
+
+/// Hard cap on a frame body's advertised length. Adversarial frames can claim up to
+/// `u64::MAX` bytes; every reader — the in-memory parser here and the TCP framer in
+/// [`crate::coordinator::tcp`] — must reject the claim *before* reserving memory for it.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
 /// A protocol message.
 #[derive(Clone, Debug, PartialEq)]
@@ -43,7 +48,58 @@ const TYPE_HELLO: u8 = 1;
 const TYPE_SKETCH: u8 = 2;
 const TYPE_ROUND: u8 = 3;
 
+/// Encoded length of a LEB128 varint.
+fn varint_len(v: u64) -> usize {
+    ((64 - v.leading_zeros()).max(1) as usize).div_ceil(7)
+}
+
 impl Msg {
+    /// Exact wire size of this frame — equals `self.to_bytes().len()` without building
+    /// the buffer. The session engine charges every frame through this, so accounting
+    /// costs no allocation or serialization on the hot path.
+    pub fn wire_len(&self) -> usize {
+        let body = match self {
+            Msg::Hello {
+                l,
+                m,
+                universe_bits,
+                est_initiator_unique,
+                est_responder_unique,
+                set_len,
+                ..
+            } => {
+                varint_len(*l as u64)
+                    + varint_len(*m as u64)
+                    + 8
+                    + varint_len(*universe_bits as u64)
+                    + varint_len(*est_initiator_unique)
+                    + varint_len(*est_responder_unique)
+                    + varint_len(*set_len)
+            }
+            Msg::Sketch(sk) => {
+                varint_len(sk.n as u64)
+                    + varint_len(sk.table.len() as u64)
+                    + sk.table.len()
+                    + varint_len(sk.payload.len() as u64)
+                    + sk.payload.len()
+                    + varint_len(sk.syndromes.len() as u64)
+                    + sk.syndromes.len()
+            }
+            Msg::Round { residue, smf, inquiry, answers, .. } => {
+                varint_len(residue.len() as u64)
+                    + residue.len()
+                    + 1
+                    + smf.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
+                    + varint_len(inquiry.len() as u64)
+                    + 8 * inquiry.len()
+                    + varint_len(answers.len() as u64)
+                    + answers.len().div_ceil(8)
+                    + 1
+            }
+        };
+        1 + varint_len(body as u64) + body
+    }
+
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut body = Vec::new();
         let ty = match self {
@@ -105,28 +161,34 @@ impl Msg {
     }
 
     /// Parse one frame; returns `(msg, bytes_consumed)`.
+    ///
+    /// Adversarial-frame hardened: all offset arithmetic is checked (no debug-build
+    /// overflow panics), every length field is validated against the bytes actually
+    /// present *before* any allocation sized by it, and trailing garbage inside a
+    /// `Hello`/`Round` body is rejected.
     pub fn from_bytes(data: &[u8]) -> Option<(Msg, usize)> {
         let ty = *data.first()?;
-        let (body_len, used) = get_varint(&data[1..])?;
+        let (body_len, used) = get_varint(data.get(1..)?)?;
+        let body_len = usize::try_from(body_len).ok()?;
+        if body_len > MAX_FRAME_BYTES {
+            return None;
+        }
         let start = 1 + used;
-        let body = data.get(start..start + body_len as usize)?;
-        let total = start + body_len as usize;
+        let body = data.get(start..start.checked_add(body_len)?)?;
+        let total = start + body_len;
+        let mut off = 0usize;
         let msg = match ty {
             TYPE_HELLO => {
-                let mut off = 0usize;
-                let (l, u) = get_varint(&body[off..])?;
-                off += u;
-                let (m, u) = get_varint(&body[off..])?;
-                off += u;
-                let seed = u64::from_le_bytes(body.get(off..off + 8)?.try_into().ok()?);
-                off += 8;
-                let (ub, u) = get_varint(&body[off..])?;
-                off += u;
-                let (ei, u) = get_varint(&body[off..])?;
-                off += u;
-                let (er, u) = get_varint(&body[off..])?;
-                off += u;
-                let (sl, _) = get_varint(&body[off..])?;
+                let l = take_varint(body, &mut off)?;
+                let m = take_varint(body, &mut off)?;
+                let seed = u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?);
+                let ub = take_varint(body, &mut off)?;
+                let ei = take_varint(body, &mut off)?;
+                let er = take_varint(body, &mut off)?;
+                let sl = take_varint(body, &mut off)?;
+                if off != body.len() {
+                    return None;
+                }
                 Msg::Hello {
                     l: l as u32,
                     m: m as u32,
@@ -139,37 +201,41 @@ impl Msg {
             }
             TYPE_SKETCH => Msg::Sketch(SketchMsg::from_bytes(body)?),
             TYPE_ROUND => {
-                let mut off = 0usize;
-                let (rl, u) = get_varint(&body[off..])?;
-                off += u;
-                let residue = body.get(off..off + rl as usize)?.to_vec();
-                off += rl as usize;
-                let has_smf = *body.get(off)? == 1;
-                off += 1;
-                let smf = if has_smf {
-                    let (sl, u) = get_varint(&body[off..])?;
-                    off += u;
-                    let bytes = body.get(off..off + sl as usize)?.to_vec();
-                    off += sl as usize;
-                    Some(bytes)
-                } else {
-                    None
+                let rl = usize::try_from(take_varint(body, &mut off)?).ok()?;
+                let residue = take(body, &mut off, rl)?.to_vec();
+                let smf = match take(body, &mut off, 1)?[0] {
+                    0 => None,
+                    1 => {
+                        let sl = usize::try_from(take_varint(body, &mut off)?).ok()?;
+                        Some(take(body, &mut off, sl)?.to_vec())
+                    }
+                    _ => return None,
                 };
-                let (nq, u) = get_varint(&body[off..])?;
-                off += u;
-                let mut inquiry = Vec::with_capacity(nq as usize);
-                for _ in 0..nq {
-                    inquiry.push(u64::from_le_bytes(body.get(off..off + 8)?.try_into().ok()?));
-                    off += 8;
+                let nq = usize::try_from(take_varint(body, &mut off)?).ok()?;
+                // Each inquiry signature occupies 8 of the remaining body bytes; an
+                // inflated count must die before `Vec::with_capacity`.
+                if nq > body.len().saturating_sub(off) / 8 {
+                    return None;
                 }
-                let (na, u) = get_varint(&body[off..])?;
-                off += u;
-                let packed = body.get(off..off + (na as usize).div_ceil(8))?;
-                off += (na as usize).div_ceil(8);
-                let answers = (0..na as usize)
-                    .map(|i| packed[i / 8] >> (i % 8) & 1 == 1)
-                    .collect();
-                let done = *body.get(off)? == 1;
+                let mut inquiry = Vec::with_capacity(nq);
+                for _ in 0..nq {
+                    inquiry.push(u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?));
+                }
+                let na = usize::try_from(take_varint(body, &mut off)?).ok()?;
+                let packed_len = na.div_ceil(8);
+                if packed_len > body.len().saturating_sub(off) {
+                    return None;
+                }
+                let packed = take(body, &mut off, packed_len)?;
+                let answers = (0..na).map(|i| packed[i / 8] >> (i % 8) & 1 == 1).collect();
+                let done = match take(body, &mut off, 1)?[0] {
+                    0 => false,
+                    1 => true,
+                    _ => return None,
+                };
+                if off != body.len() {
+                    return None;
+                }
                 Msg::Round { residue, smf, inquiry, answers, done }
             }
             _ => return None,
@@ -241,6 +307,144 @@ mod tests {
         let bytes = msg.to_bytes();
         for cut in [0usize, 1, 5, bytes.len() - 1] {
             assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut}");
+        }
+    }
+
+    /// Craft a Round frame whose body is built by `build` (for adversarial field tests).
+    fn round_frame_with_body(body: Vec<u8>) -> Vec<u8> {
+        let mut out = vec![TYPE_ROUND];
+        put_varint(&mut out, body.len() as u64);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    #[test]
+    fn truncation_at_every_byte_boundary_rejected() {
+        let msg = Msg::Round {
+            residue: compress_residue(&[5, -5, 7, 0, 0, 1]),
+            smf: Some(vec![3; 21]),
+            inquiry: vec![1, 2, 3],
+            answers: vec![true, false, true],
+            done: true,
+        };
+        let bytes = msg.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut} parsed");
+        }
+        assert!(Msg::from_bytes(&bytes).is_some());
+    }
+
+    #[test]
+    fn oversized_body_length_rejected() {
+        // Frame header claims a body of 2^62 bytes.
+        let mut frame = vec![TYPE_ROUND];
+        put_varint(&mut frame, 1u64 << 62);
+        frame.extend_from_slice(&[0u8; 64]);
+        assert!(Msg::from_bytes(&frame).is_none());
+        // u64::MAX must not overflow the offset arithmetic either (debug or release).
+        let mut frame = vec![TYPE_ROUND];
+        put_varint(&mut frame, u64::MAX);
+        assert!(Msg::from_bytes(&frame).is_none());
+    }
+
+    #[test]
+    fn oversized_residue_length_rejected() {
+        let mut body = Vec::new();
+        put_varint(&mut body, u64::MAX); // residue "length"
+        body.extend_from_slice(&[0u8; 32]);
+        assert!(Msg::from_bytes(&round_frame_with_body(body)).is_none());
+    }
+
+    #[test]
+    fn oversized_smf_length_rejected() {
+        let mut body = Vec::new();
+        put_varint(&mut body, 0); // empty residue
+        body.push(1); // smf present
+        put_varint(&mut body, u64::MAX - 3); // smf "length"
+        body.extend_from_slice(&[0u8; 32]);
+        assert!(Msg::from_bytes(&round_frame_with_body(body)).is_none());
+    }
+
+    #[test]
+    fn inflated_inquiry_count_rejected_before_allocation() {
+        let mut body = Vec::new();
+        put_varint(&mut body, 0); // empty residue
+        body.push(0); // no smf
+        put_varint(&mut body, 1u64 << 61); // inquiry "count" → would be a 2^64-byte alloc
+        body.extend_from_slice(&[0u8; 64]);
+        assert!(Msg::from_bytes(&round_frame_with_body(body)).is_none());
+    }
+
+    #[test]
+    fn inflated_answer_count_rejected_before_allocation() {
+        let mut body = Vec::new();
+        put_varint(&mut body, 0); // empty residue
+        body.push(0); // no smf
+        put_varint(&mut body, 0); // no inquiry
+        put_varint(&mut body, u64::MAX); // answer "count"
+        body.extend_from_slice(&[0u8; 64]);
+        assert!(Msg::from_bytes(&round_frame_with_body(body)).is_none());
+    }
+
+    #[test]
+    fn trailing_garbage_in_body_rejected() {
+        let msg = Msg::Round { residue: vec![9], smf: None, inquiry: vec![], answers: vec![], done: false };
+        let good = msg.to_bytes();
+        // Splice two junk bytes into the body and fix up the length header.
+        let mut body = good[2..].to_vec(); // (1-byte type + 1-byte varint len at this size)
+        body.extend_from_slice(&[0xAA, 0xBB]);
+        assert!(Msg::from_bytes(&round_frame_with_body(body)).is_none());
+    }
+
+    #[test]
+    fn hello_with_trailing_garbage_rejected() {
+        let msg = Msg::Hello {
+            l: 9,
+            m: 5,
+            seed: 3,
+            universe_bits: 64,
+            est_initiator_unique: 1,
+            est_responder_unique: 2,
+            set_len: 3,
+        };
+        let good = msg.to_bytes();
+        let mut body = good[2..].to_vec();
+        body.push(0x7F);
+        let mut frame = vec![TYPE_HELLO];
+        put_varint(&mut frame, body.len() as u64);
+        frame.extend_from_slice(&body);
+        assert!(Msg::from_bytes(&frame).is_none());
+    }
+
+    #[test]
+    fn wire_len_matches_serialized_length() {
+        let msgs = [
+            Msg::Hello {
+                l: 0,
+                m: 127,
+                seed: u64::MAX,
+                universe_bits: 256,
+                est_initiator_unique: 128,
+                est_responder_unique: 1 << 40,
+                set_len: u64::MAX,
+            },
+            Msg::Sketch(crate::entropy::SketchMsg {
+                n: 300,
+                table: vec![1; 40],
+                payload: vec![2; 129],
+                syndromes: vec![3; 7],
+            }),
+            Msg::Round {
+                residue: compress_residue(&[1, -2, 0, 3]),
+                smf: Some(vec![9; 200]),
+                inquiry: vec![1, 2, 3],
+                answers: vec![true; 17],
+                done: true,
+            },
+            Msg::Round { residue: vec![], smf: None, inquiry: vec![], answers: vec![], done: false },
+        ];
+        for msg in &msgs {
+            assert_eq!(msg.wire_len(), msg.to_bytes().len(), "{msg:?}");
         }
     }
 

@@ -1,9 +1,13 @@
-//! PJRT runtime: load the AOT-compiled HLO artifacts and run them from rust.
+//! Artifact runtime: load the AOT-compiled block-kernel artifacts and run them from rust.
 //!
 //! `make artifacts` lowers the Layer-2 JAX graphs (which call the Layer-1 Pallas kernels)
-//! to HLO text; this module compiles them once on the PJRT CPU client and exposes typed
-//! entry points. Python never runs at request time — the rust binary is self-contained
-//! once `artifacts/` exists.
+//! to HLO text plus a `manifest.txt` of shapes. The offline image's crate set carries no
+//! PJRT/XLA bindings (no `xla` crate — see DESIGN.md §4), so this module executes the
+//! artifact graphs with a **bit-faithful native executor**: the three graphs are dense
+//! matvecs and a greedy binary-MP scan, implemented here exactly as in the build-time
+//! oracle `python/compile/kernels/ref.py` (which the Pallas kernels are verified against).
+//! The manifest is still the source of truth for shapes, and the listed HLO files must be
+//! present, so `make artifacts` remains the gate for this path.
 //!
 //! The accelerated path operates on *dense universe-partition blocks* (DESIGN.md
 //! §Hardware-Adaptation): `l × nb` 0/1 column blocks in row-major f32, matching the JAX
@@ -11,7 +15,6 @@
 
 use crate::matrix::CsMatrix;
 use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 /// Shapes baked into the artifacts (from `artifacts/manifest.txt`).
@@ -22,10 +25,10 @@ pub struct BlockShapes {
     pub steps: usize,
 }
 
-/// A compiled-artifact registry bound to a PJRT CPU client.
+/// An artifact registry bound to the native block executor.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Graph names present in the manifest (`encode`, `correlate`, `decode`).
+    graphs: Vec<String>,
     pub shapes: BlockShapes,
     dir: PathBuf,
 }
@@ -38,7 +41,7 @@ impl Runtime {
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
-    /// Load every artifact listed in `manifest.txt` and compile it on the CPU client.
+    /// Load the manifest, validate every listed artifact file, and bind the executor.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
@@ -58,26 +61,26 @@ impl Runtime {
                 _ => {}
             }
         }
-        let client = xla::PjRtClient::cpu()?;
-        let mut execs = HashMap::new();
+        let mut graphs = Vec::new();
         for name in lines {
             let name = name.trim();
             if name.is_empty() {
                 continue;
             }
-            let proto = xla::HloModuleProto::from_text_file(dir.join(name))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
+            let path = dir.join(name);
+            if !path.is_file() {
+                return Err(anyhow!("artifact `{}` listed but missing", path.display()));
+            }
             let key = name
                 .split_once('_')
                 .map(|(k, _)| k.to_string())
                 .unwrap_or_else(|| name.to_string());
-            execs.insert(key, exe);
+            graphs.push(key);
         }
         if l == 0 || nb == 0 {
             return Err(anyhow!("manifest missing shapes"));
         }
-        Ok(Runtime { client, execs, shapes: BlockShapes { l, nb, steps }, dir })
+        Ok(Runtime { graphs, shapes: BlockShapes { l, nb, steps: steps.max(1) }, dir })
     }
 
     /// Convenience: load from the default directory.
@@ -85,18 +88,22 @@ impl Runtime {
         Self::load(Self::default_dir())
     }
 
+    /// Execution platform. The native executor runs on the host CPU (the artifacts are
+    /// CPU-lowered HLO as well, so reported results are comparable).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "cpu".to_string()
     }
 
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }
 
-    fn exec(&self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        self.execs
-            .get(key)
-            .ok_or_else(|| anyhow!("artifact `{key}` not in manifest at {}", self.dir.display()))
+    fn require(&self, key: &str) -> Result<()> {
+        if self.graphs.iter().any(|g| g == key) {
+            Ok(())
+        } else {
+            Err(anyhow!("artifact `{key}` not in manifest at {}", self.dir.display()))
+        }
     }
 
     /// y = M_block @ x. `m_block` is row-major `l × nb` f32; `x` has length `nb`.
@@ -104,27 +111,49 @@ impl Runtime {
         let BlockShapes { l, nb, .. } = self.shapes;
         assert_eq!(m_block.len(), l * nb);
         assert_eq!(x.len(), nb);
-        let m = xla::Literal::vec1(m_block).reshape(&[l as i64, nb as i64])?;
-        let xv = xla::Literal::vec1(x);
-        let result = self.exec("encode")?.execute::<xla::Literal>(&[m, xv])?[0][0]
-            .to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+        self.require("encode")?;
+        let mut y = vec![0.0f32; l];
+        for (row, yr) in y.iter_mut().enumerate() {
+            let base = row * nb;
+            let mut acc = 0.0f32;
+            for (c, &xc) in x.iter().enumerate() {
+                acc += m_block[base + c] * xc;
+            }
+            *yr = acc;
+        }
+        Ok(y)
     }
 
-    /// δ = M_blockᵀ r / m.
+    /// δ = M_blockᵀ r / m (eq. B.1).
     pub fn correlate_block(&self, m_block: &[f32], r: &[f32], m_ones: f32) -> Result<Vec<f32>> {
         let BlockShapes { l, nb, .. } = self.shapes;
         assert_eq!(m_block.len(), l * nb);
         assert_eq!(r.len(), l);
-        let m = xla::Literal::vec1(m_block).reshape(&[l as i64, nb as i64])?;
-        let rv = xla::Literal::vec1(r);
-        let mo = xla::Literal::vec1(&[m_ones]).reshape(&[])?;
-        let result = self.exec("correlate")?.execute::<xla::Literal>(&[m, rv, mo])?[0][0]
-            .to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+        self.require("correlate")?;
+        Ok(Self::correlate_raw(m_block, r, m_ones, nb))
     }
 
-    /// Run `steps` MP iterations on a block: returns `(r, x)` after the scan.
+    fn correlate_raw(m_block: &[f32], r: &[f32], m_ones: f32, nb: usize) -> Vec<f32> {
+        let mut delta = vec![0.0f32; nb];
+        for (row, &rv) in r.iter().enumerate() {
+            if rv == 0.0 {
+                continue;
+            }
+            let base = row * nb;
+            for (c, d) in delta.iter_mut().enumerate() {
+                *d += m_block[base + c] * rv;
+            }
+        }
+        for d in &mut delta {
+            *d /= m_ones;
+        }
+        delta
+    }
+
+    /// Run `shapes.steps` greedy binary-MP iterations on a block (Procedure 1 +
+    /// Modification 9, exactly `decode_steps_ref` in the Python oracle): per step,
+    /// compute every candidate's gain, flip the argmax if positive, update the residue.
+    /// Returns `(r, x)` after the scan.
     pub fn decode_block(
         &self,
         m_block: &[f32],
@@ -132,23 +161,41 @@ impl Runtime {
         x: &[f32],
         m_ones: f32,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let BlockShapes { l, nb, .. } = self.shapes;
+        let BlockShapes { l, nb, steps } = self.shapes;
         assert_eq!(m_block.len(), l * nb);
         assert_eq!(r.len(), l);
         assert_eq!(x.len(), nb);
-        let m = xla::Literal::vec1(m_block).reshape(&[l as i64, nb as i64])?;
-        let rv = xla::Literal::vec1(r);
-        let xv = xla::Literal::vec1(x);
-        let mo = xla::Literal::vec1(&[m_ones]).reshape(&[])?;
-        let result = self.exec("decode")?.execute::<xla::Literal>(&[m, rv, xv, mo])?[0][0]
-            .to_literal_sync()?;
-        let (r_out, x_out) = result.to_tuple2()?;
-        Ok((r_out.to_vec::<f32>()?, x_out.to_vec::<f32>()?))
+        self.require("decode")?;
+        let mut r = r.to_vec();
+        let mut x = x.to_vec();
+        for _ in 0..steps {
+            let delta = Self::correlate_raw(m_block, &r, m_ones, nb);
+            // Gain in units of m: setting needs δ > 1/2 (rule 2), unsetting δ < −1/2.
+            let mut best_j = 0usize;
+            let mut best_gain = f32::NEG_INFINITY;
+            for (j, &d) in delta.iter().enumerate() {
+                let gain = if x[j] < 0.5 { 2.0 * d - 1.0 } else { -2.0 * d - 1.0 };
+                if gain > best_gain {
+                    best_gain = gain;
+                    best_j = j;
+                }
+            }
+            if best_gain <= 0.0 {
+                break; // fixed point: the scan would be a no-op from here on
+            }
+            let setting = x[best_j] < 0.5;
+            let sign = if setting { 1.0 } else { -1.0 };
+            for (row, rv) in r.iter_mut().enumerate() {
+                *rv -= sign * m_block[row * nb + best_j];
+            }
+            x[best_j] = if setting { 1.0 } else { 0.0 };
+        }
+        Ok((r, x))
     }
 
     /// Accelerated set encoding for a partition whose matrix has exactly `shapes.l` rows:
     /// chunks ids into `nb`-column dense blocks (zero-padded) and accumulates `M·1_S`
-    /// through the AOT encode executable.
+    /// through the encode graph.
     pub fn encode_set(&self, matrix: CsMatrix, ids: &[u64]) -> Result<Vec<i32>> {
         let BlockShapes { l, nb, .. } = self.shapes;
         assert_eq!(matrix.l() as usize, l, "partition matrix must match artifact l");
@@ -175,6 +222,15 @@ mod tests {
         Runtime::load_default().ok()
     }
 
+    /// A manifest-free runtime for exercising the executor itself.
+    fn native(l: usize, nb: usize, steps: usize) -> Runtime {
+        Runtime {
+            graphs: vec!["encode".into(), "correlate".into(), "decode".into()],
+            shapes: BlockShapes { l, nb, steps },
+            dir: PathBuf::from("artifacts"),
+        }
+    }
+
     #[test]
     fn artifacts_load_and_report_platform() {
         let Some(rt) = runtime() else {
@@ -187,36 +243,46 @@ mod tests {
 
     #[test]
     fn encode_block_matches_sparse_sketch() {
-        let Some(rt) = runtime() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let BlockShapes { l, nb, .. } = rt.shapes;
-        let matrix = CsMatrix::new(l as u32, 5, 99);
-        let ids: Vec<u64> = (0..nb as u64 / 2).map(|i| i * 31 + 7).collect();
+        let rt = native(256, 512, 8);
+        let matrix = CsMatrix::new(256, 5, 99);
+        let ids: Vec<u64> = (0..700u64).map(|i| i * 31 + 7).collect();
         let accel = rt.encode_set(matrix, &ids).unwrap();
         let sparse = Sketch::encode(matrix, &ids);
         assert_eq!(accel, sparse.counts);
     }
 
     #[test]
+    fn correlate_matches_sparse_dot() {
+        let rt = native(256, 128, 8);
+        let matrix = CsMatrix::new(256, 5, 17);
+        let ids: Vec<u64> = (0..128u64).collect();
+        let block = matrix.dense_block_rowmajor(&ids, 128);
+        let sk = Sketch::encode(matrix, &ids[..40]);
+        let r: Vec<f32> = sk.counts.iter().map(|&c| c as f32).collect();
+        let delta = rt.correlate_block(&block, &r, 5.0).unwrap();
+        for (j, &id) in ids.iter().enumerate() {
+            let mut dot = 0i32;
+            for row in matrix.column(id) {
+                dot += sk.counts[row as usize];
+            }
+            let want = dot as f32 / 5.0;
+            assert!((delta[j] - want).abs() < 1e-4, "j={j}: {} vs {want}", delta[j]);
+        }
+    }
+
+    #[test]
     fn decode_block_recovers_planted_signal() {
-        let Some(rt) = runtime() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let BlockShapes { l, nb, steps } = rt.shapes;
-        let matrix = CsMatrix::new(l as u32, 5, 123);
+        let rt = native(512, 256, 8);
+        let BlockShapes { nb, steps, .. } = rt.shapes;
+        let matrix = CsMatrix::new(512, 5, 123);
         let ids: Vec<u64> = (0..nb as u64).collect();
         let block = matrix.dense_block_rowmajor(&ids, nb);
         // Plant 10 elements.
-        let planted: Vec<u64> = (0..10u64).map(|i| i * 101 + 3).collect();
+        let planted: Vec<u64> = (0..10u64).map(|i| i * 17 + 3).collect();
         let sk = Sketch::encode(matrix, &planted);
-        let r0: Vec<f32> = sk.counts.iter().map(|&c| c as f32).collect();
-        let x0 = vec![0.0f32; nb];
-        let mut r = r0;
-        let mut x = x0;
-        for _ in 0..(20usize).div_ceil(steps).max(1) {
+        let mut r: Vec<f32> = sk.counts.iter().map(|&c| c as f32).collect();
+        let mut x = vec![0.0f32; nb];
+        for _ in 0..(40usize).div_ceil(steps).max(1) {
             let (r2, x2) = rt.decode_block(&block, &r, &x, 5.0).unwrap();
             r = r2;
             x = x2;
@@ -225,7 +291,7 @@ mod tests {
             }
         }
         assert!(r.iter().all(|&v| v == 0.0), "residue not cleared");
-        let got: Vec<u64> = x
+        let mut got: Vec<u64> = x
             .iter()
             .enumerate()
             .filter(|(_, &v)| v > 0.5)
@@ -233,7 +299,6 @@ mod tests {
             .collect();
         let mut want = planted;
         want.sort_unstable();
-        let mut got = got;
         got.sort_unstable();
         assert_eq!(got, want);
     }

@@ -91,6 +91,12 @@ impl BloomFilter {
         }
         let nbits = u64::from_le_bytes(data[0..8].try_into().ok()?);
         let k = u32::from_le_bytes(data[8..12].try_into().ok()?);
+        // Sanity bound on the hash count: `with_fpr` yields k = ⌈−log₂ fpr⌉ (≈ 7 at the
+        // protocol's defaults); an adversarial k would turn every `contains` query into
+        // billions of hash evaluations.
+        if k == 0 || k > 64 {
+            return None;
+        }
         let seed = u64::from_le_bytes(data[12..20].try_into().ok()?);
         let nbytes = nbits.div_ceil(8) as usize;
         if data.len() < 20 + nbytes {

@@ -131,6 +131,43 @@ fn prop_smf_prevents_common_hallucinations() {
     assert!(with_smf_ok >= 10, "full protocol too weak at marginal l: {with_smf_ok}/12");
 }
 
+/// Invariant: the sans-io session engine enforces frame order — out-of-phase frames are
+/// errors (never panics, never silent acceptance), and an errored session stays closed.
+#[test]
+fn prop_session_frame_order_is_enforced() {
+    use commonsense::entropy::SketchMsg;
+    use commonsense::protocol::session::{Session, SessionError, SessionEvent};
+    use commonsense::protocol::wire::Msg;
+
+    let set: Vec<u64> = (0..100).collect();
+    let round =
+        Msg::Round { residue: vec![], smf: None, inquiry: vec![], answers: vec![], done: false };
+    let sketch = Msg::Sketch(SketchMsg { n: 4, table: vec![], payload: vec![], syndromes: vec![] });
+    let hello = Msg::Hello {
+        l: 256,
+        m: 5,
+        seed: 9,
+        universe_bits: 64,
+        est_initiator_unique: 4,
+        est_responder_unique: 4,
+        set_len: 100,
+    };
+
+    // Round or Sketch before Hello: rejected.
+    for premature in [&round, &sketch] {
+        let mut s = Session::responder(&set, BidiOptions::default(), false);
+        assert!(matches!(s.on_msg(premature), Err(SessionError::UnexpectedMessage { .. })));
+    }
+    // Hello is accepted exactly once; a second Hello is out of phase.
+    let mut s = Session::responder(&set, BidiOptions::default(), false);
+    assert!(matches!(s.on_msg(&hello), Ok(SessionEvent::Continue)));
+    assert!(matches!(s.on_msg(&hello), Err(SessionError::UnexpectedMessage { .. })));
+    // And the failed session is closed for good.
+    assert!(s.on_msg(&round).is_err());
+    assert!(!s.is_settled());
+    assert!(s.outcome().unique.is_empty());
+}
+
 /// Invariant: protocol outcome is a pure function of (sets, params, options).
 #[test]
 fn prop_deterministic_replay() {

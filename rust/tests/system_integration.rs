@@ -105,6 +105,42 @@ fn streaming_digest_composes_with_protocol_params() {
 }
 
 #[test]
+fn tcp_and_in_memory_frontends_account_identical_bytes() {
+    // One sans-io Session engine behind every transport ⇒ the transport cannot change
+    // the conversation: a TCP run and an in-memory run of the same workload must
+    // exchange byte-identical traffic and reach identical results.
+    let (a, b) = synth::overlap_pair(3_000, 40, 60, 21);
+    let params = CsParams::tuned_bidi(3_100, 40, 60);
+    let mem = commonsense::protocol::bidi::run(&a, &b, &params, BidiOptions::default());
+    assert!(mem.converged);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let b2 = b.clone();
+    let bob = std::thread::spawn(move || {
+        serve_responder(&listener, &b2, BidiOptions::default()).unwrap()
+    });
+    let alice = connect_initiator(addr, &a, &params, BidiOptions::default()).unwrap();
+    let bob = bob.join().unwrap();
+    assert!(alice.converged && bob.converged);
+    assert_eq!(alice.unique, mem.a_minus_b);
+    assert_eq!(bob.unique, mem.b_minus_a);
+    assert_eq!(alice.bytes_sent + bob.bytes_sent, mem.comm.total_bytes());
+}
+
+#[test]
+fn parallel_pool_is_bounded_at_integration_scale() {
+    // The §7.3 scale-out on a big partition fan-out: exactness plus the thread cap.
+    let (a, b) = synth::overlap_pair(20_000, 160, 160, 0x77);
+    let out = parallel::setx(&a, &b, 160, 160, 64, 4, BidiOptions::default());
+    assert!(out.converged);
+    assert_eq!(out.a_minus_b, synth::difference(&a, &b));
+    assert_eq!(out.b_minus_a, synth::difference(&b, &a));
+    assert_eq!(out.partitions, 64);
+    assert!(out.peak_workers <= 4, "thread cap violated: {}", out.peak_workers);
+}
+
+#[test]
 fn concurrent_tcp_sessions_are_independent() {
     // Two sessions on different ports, different workloads, run concurrently.
     let mk = |seed: u64| synth::overlap_pair(3_000, 30, 60, seed);
