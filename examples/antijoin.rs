@@ -2,13 +2,13 @@
 //!
 //! Alice holds `R1(order_id, …)`, Bob holds `R2(order_id, …)`; Alice needs the tuples of
 //! `R1` whose key never appears in `R2` — exactly her side (`A \ B`) of bidirectional SetX
-//! over the key columns.
+//! over the key columns. Neither side knows (or estimates by hand) how many keys differ:
+//! the builder's default `DiffSize::Estimated` handshake takes care of it.
 //!
 //! Run: `cargo run --release --offline --example antijoin`
 
 use commonsense::hash::{SipHash13, Xoshiro256};
-use commonsense::protocol::bidi::{self, BidiOptions};
-use commonsense::protocol::CsParams;
+use commonsense::setx::Setx;
 use std::collections::HashMap;
 
 #[derive(Clone, Debug)]
@@ -36,23 +36,27 @@ fn main() {
     let b_ids: Vec<u64> = r2_keys.iter().map(|&k| key_id(k)).collect();
     let back: HashMap<u64, u64> = r1.iter().map(|r| (key_id(r.order_id), r.order_id)).collect();
 
-    let params = CsParams::tuned_bidi(81_000, 600, 1_200);
-    let out = bidi::run(&a_ids, &b_ids, &params, BidiOptions::default());
-    assert!(out.converged);
+    let alice = Setx::builder(&a_ids).build().expect("config");
+    let bob = Setx::builder(&b_ids).build().expect("config");
+    let (ra, _rb) = alice.run_pair(&bob).expect("setx");
 
     // R1 ▷ R2 = rows of R1 whose key is in A \ B.
-    let anti: Vec<u64> = out.a_minus_b.iter().map(|id| back[id]).collect();
+    let anti: Vec<u64> = ra.local_unique.iter().map(|id| back[id]).collect();
     println!("|R1| = {}, |R2| = {}", r1.len(), r2_keys.len());
     println!("R1 ▷ R2 = {} unshipped orders (exact)", anti.len());
     assert_eq!(anti.len(), 600);
     println!(
-        "communication: {} bytes over {} rounds",
-        out.comm.total_bytes(),
-        out.rounds
+        "communication: {} bytes over {} rounds in {} attempt(s) ({})",
+        ra.total_bytes(),
+        ra.rounds,
+        ra.attempts,
+        ra.breakdown()
     );
     println!(
         "shipping the full key column instead: {} bytes — {:.1}x more",
         8 * r2_keys.len(),
-        8.0 * r2_keys.len() as f64 / out.comm.total_bytes() as f64
+        8.0 * r2_keys.len() as f64 / ra.total_bytes() as f64
     );
+    // Keep the sample row type honest (amounts ride along in the real join).
+    let _ = r1.first().map(|r| r.amount);
 }

@@ -4,6 +4,11 @@
 //! (Bob's) mempool (`A ⊆ B`, thanks to aggressive tx relay). Bob reconstructs the full
 //! block content from one CommonSense sketch, vs Graphene's BF+IBLT.
 //!
+//! **Advanced: manual tuning.** This is the one example that constructs [`CsParams`] by
+//! hand instead of going through `Setx::builder`: a head-to-head against Graphene wants
+//! the engine-layer protocol with an exact, caller-known `d` and zero handshake bytes
+//! (block relay already knows the mempool sizes). Every other example uses the builder.
+//!
 //! Run: `cargo run --release --offline --example block_propagation`
 
 use commonsense::baselines::graphene::graphene_setx;
@@ -24,6 +29,7 @@ fn main() {
         let hasher = SipHash13::from_seed(7);
         let _txid_example = hasher.hash(b"raw transaction bytes...");
 
+        // Manual engine-layer tuning (see the module docs): exact d, no handshake.
         let params = CsParams::tuned_uni(mempool.len(), d);
         let out = uni::run(&block, &mempool, &params).expect("decode");
         assert_eq!(out.intersection.len(), block_txs, "Bob reconstructs the block");

@@ -3,12 +3,14 @@
 //! A client (Alice) edited files; the server (Bob) holds the previous version. Files are
 //! content-defined-chunked; each side's chunk-checksum set feeds bidirectional SetX:
 //! Alice learns `A \ B` (chunks to upload), Bob learns `B \ A` (obsolete chunks to patch).
+//! The sync service *knows* an upper bound on the difference (edits are journaled), so
+//! this example uses `DiffSize::Explicit` — the builder's escape hatch for workloads with
+//! domain knowledge, skipping the estimator handshake entirely.
 //!
 //! Run: `cargo run --release --offline --example delta_sync`
 
 use commonsense::hash::{SipHash13, Xoshiro256};
-use commonsense::protocol::bidi::{self, BidiOptions};
-use commonsense::protocol::CsParams;
+use commonsense::setx::{DiffSize, Setx};
 
 /// Content-defined chunking with a Gear rolling hash: `h = (h << 1) + GEAR[byte]`, cut when
 /// the top `log2(avg)` bits are all ones. Old bytes shift out of `h`, so boundaries depend
@@ -66,28 +68,36 @@ fn main() {
         edits
     );
 
-    // Each edit touches 1–2 chunks (CDC locality) ⇒ d ≈ 2 × 25 per side.
-    let est = 4 * edits;
-    let params = CsParams::tuned_bidi(server_chunks.len() + est, est, est);
-    let out = bidi::run(&client_chunks, &server_chunks, &params, BidiOptions::default());
-    assert!(out.converged);
+    // Each edit touches 1–2 chunks (CDC locality) ⇒ d ≲ 4 × edits in total, journaled by
+    // the sync service — caller-supplied, so the handshake carries no estimators.
+    let d_bound = 8 * edits;
+    let build = |chunks: &[u64]| {
+        Setx::builder(chunks)
+            .diff_size(DiffSize::Explicit(d_bound))
+            .build()
+            .expect("config")
+    };
+    let client = build(&client_chunks);
+    let server = build(&server_chunks);
+    let (rc, rs) = client.run_pair(&server).expect("setx");
 
-    let upload_bytes: usize = out.a_minus_b.len() * 1024; // chunks the client pushes
+    let upload_bytes: usize = rc.local_unique.len() * 1024; // chunks the client pushes
     println!(
-        "matching stage : {} bytes over {} rounds (CommonSense)",
-        out.comm.total_bytes(),
-        out.rounds
+        "matching stage : {} bytes over {} rounds (CommonSense, {})",
+        rc.total_bytes(),
+        rc.rounds,
+        rc.breakdown()
     );
     println!(
         "deltas found   : client-unique {} chunks, server-obsolete {} chunks",
-        out.a_minus_b.len(),
-        out.b_minus_a.len()
+        rc.local_unique.len(),
+        rs.local_unique.len()
     );
     println!("delta upload   : ≈ {} bytes (vs {} full file)", upload_bytes, client_data.len());
     // Naive matching ships every checksum: |B|·8 bytes.
     println!(
         "naive matching : {} bytes (all checksums) — CommonSense saves {:.1}x",
         8 * server_chunks.len(),
-        8.0 * server_chunks.len() as f64 / out.comm.total_bytes() as f64
+        8.0 * server_chunks.len() as f64 / rc.total_bytes() as f64
     );
 }

@@ -1,24 +1,25 @@
-//! END-TO-END DRIVER — all layers composed on a real workload.
+//! END-TO-END DRIVER — all layers composed on a real workload, through the one front door.
 //!
 //! * Workload: two Ethereum-sim world-state snapshots (the §7.3 scenario, DESIGN.md §4).
 //! * Layer 1+2: the AOT-compiled Pallas/JAX dense-block artifacts (`make artifacts`),
 //!   loaded and executed from rust via PJRT — used here to accelerate sketch encoding per
 //!   universe partition, cross-checked against the sparse path.
-//! * Layer 3: the rust coordinator — Alice and Bob as real TCP peers exchanging the wire
-//!   protocol, with measured socket bytes; plus the PBS-style partitioned parallel path.
+//! * Layer 3: the `Setx` builder API end to end — Alice and Bob as real TCP peers
+//!   (difference size *estimated in the handshake*, no ground truth supplied), plus the
+//!   PBS-style partitioned parallel driver behind the identical builder config.
 //!
 //! Reports the paper's headline metric (communication cost vs the IBLT baseline and the
 //! SetR bound) plus wall-clock and throughput. Results are recorded in EXPERIMENTS.md §E2E.
 //!
-//! Run: `make artifacts && cargo run --release --offline --example end_to_end`
+//! Run: `make artifacts && cargo run --release --offline --example end_to_end [accounts]`
 
 use commonsense::baselines::iblt::{iblt_setx, IbltParams};
 use commonsense::bounds;
-use commonsense::coordinator::{connect_initiator, parallel, serve_responder};
+use commonsense::coordinator::{connect, serve};
 use commonsense::data::ethereum::{diff_stats, EthSim};
-use commonsense::protocol::bidi::BidiOptions;
-use commonsense::protocol::CsParams;
+use commonsense::metrics::Phase;
 use commonsense::runtime::Runtime;
+use commonsense::setx::{parallel, Setx};
 use commonsense::sketch::Sketch;
 use std::net::TcpListener;
 use std::time::Instant;
@@ -79,28 +80,32 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ------------------------------------------------------------------ L3 over TCP ---
-    println!("[3/4] TCP session (Bob initiates: his unique count is the smaller):");
-    let params = CsParams::tuned_bidi(a.len().max(b.len()), st.s_minus_a, st.a_minus_s);
+    println!("[3/4] TCP session (builder API; d estimated in the handshake):");
+    // One declarative config on both hosts — nobody supplies d or CsParams.
+    let alice = Setx::builder(&a).universe_bits(256).build().expect("config");
+    let bob = Setx::builder(&b).universe_bits(256).build().expect("config");
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
-    let a2 = a.clone();
-    let alice_thread =
-        std::thread::spawn(move || serve_responder(&listener, &a2, BidiOptions::default()));
+    let alice2 = alice.clone();
+    let alice_thread = std::thread::spawn(move || serve(&listener, &alice2));
     let t = Instant::now();
-    let bob_report = connect_initiator(addr, &b, &params, BidiOptions::default())?;
+    let bob_report = connect(addr, &bob)?;
     let alice_report = alice_thread.join().expect("alice thread")?;
     let wall = t.elapsed();
-    let total_bytes = bob_report.bytes_sent + alice_report.bytes_sent;
+    let total_bytes = bob_report.total_bytes();
     assert!(bob_report.converged && alice_report.converged);
-    assert_eq!(bob_report.unique.len(), st.s_minus_a);
-    assert_eq!(alice_report.unique.len(), st.a_minus_s);
+    assert_eq!(bob_report.local_unique.len(), st.s_minus_a);
+    assert_eq!(alice_report.local_unique.len(), st.a_minus_s);
+    let payload_bytes = total_bytes - bob_report.phase_total(Phase::Handshake);
     println!(
-        "      exact ✓  bytes on wire = {} ({} msgs), wall = {:?}, throughput = {:.0} elems/s",
+        "      exact ✓  bytes on wire = {} ({} handshake + {} protocol), wall = {:?}, throughput = {:.0} elems/s",
         total_bytes,
-        bob_report.msgs_sent + alice_report.msgs_sent,
+        bob_report.phase_total(Phase::Handshake),
+        payload_bytes,
         wall,
         (a.len() + b.len()) as f64 / wall.as_secs_f64()
     );
+    println!("      breakdown: {}", bob_report.breakdown());
 
     // Baselines for the headline comparison.
     let t = Instant::now();
@@ -118,24 +123,18 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ------------------------------------------------------- partitioned scale-out ---
-    println!("[4/4] PBS-style partitioned parallel SetX (8 partitions):");
+    println!("[4/4] PBS-style partitioned parallel SetX (8 partitions, same builder config):");
     let t = Instant::now();
-    let par = parallel::setx(
-        &a,
-        &b,
-        st.a_minus_s,
-        st.s_minus_a,
-        8,
-        8,
-        BidiOptions::default(),
-    );
-    assert!(par.converged);
-    assert_eq!(par.a_minus_b.len(), st.a_minus_s);
+    let par = parallel::run_partitioned(&alice, &bob, 8, 8)?;
+    assert!(par.client.converged && par.server.converged);
+    assert_eq!(par.client.local_unique.len(), st.a_minus_s);
+    assert_eq!(par.client.intersection, alice_report.intersection);
     println!(
-        "      exact ✓  bytes = {} ({:.2}x single-session), wall = {:?} (8 threads)",
-        par.total_bytes,
-        par.total_bytes as f64 / total_bytes as f64,
-        t.elapsed()
+        "      exact ✓  bytes = {} ({:.2}x single-session), wall = {:?} (8 threads, peak {} workers)",
+        par.client.total_bytes(),
+        par.client.total_bytes() as f64 / total_bytes as f64,
+        t.elapsed(),
+        par.peak_workers
     );
 
     println!("\n=== all layers composed; see EXPERIMENTS.md §E2E ===");

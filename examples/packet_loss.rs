@@ -3,12 +3,15 @@
 //! Two switches on a path each maintain a tiny data-plane digest (O(m) per packet); the
 //! control plane decodes the digest difference against the feasible packet superset and
 //! pinpoints *exactly which* packets were lost. Compare memory against an IBLT sized for
-//! the same loss count.
+//! the same loss count. A builder-API cross-check then recomputes the loss set with a
+//! full `Setx` conversation between the two observation sets (downstream ⊆ upstream —
+//! `Mode::Auto` detects the subset shape and runs the one-message protocol).
 //!
 //! Run: `cargo run --release --offline --example packet_loss`
 
 use commonsense::baselines::iblt::IbltParams;
 use commonsense::hash::{hash_u64, Xoshiro256};
+use commonsense::setx::{ProtocolKind, Setx};
 use commonsense::streaming::{digest_params, lossradar};
 
 fn main() {
@@ -62,5 +65,26 @@ fn main() {
     println!(
         "per-packet work : {} row updates (O(m))",
         params.m
+    );
+
+    // Cross-check with the front-door API: the downstream switch's observations are a
+    // subset of the upstream's, so Auto + in-handshake estimation reproduces the same
+    // loss set as the streaming digests — with zero parameters supplied.
+    let upstream_seen: Vec<u64> = superset.clone();
+    let downstream_seen: Vec<u64> = {
+        let lost_set: std::collections::HashSet<u64> = lost.iter().copied().collect();
+        superset.iter().copied().filter(|sig| !lost_set.contains(sig)).collect()
+    };
+    let up = Setx::builder(&upstream_seen).build().expect("config");
+    let down = Setx::builder(&downstream_seen).build().expect("config");
+    let (r_up, r_down) = up.run_pair(&down).expect("setx");
+    assert_eq!(r_up.local_unique, lost, "facade agrees with the digest decode");
+    assert_eq!(r_down.kind, ProtocolKind::Uni, "Auto detects the subset shape");
+    println!(
+        "setx cross-check: {:?} protocol, {} bytes ({}) — same {} losses ✓",
+        r_up.kind,
+        r_up.total_bytes(),
+        r_up.breakdown(),
+        r_up.local_unique.len()
     );
 }

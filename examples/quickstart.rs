@@ -1,36 +1,49 @@
 //! Quickstart: compute an exact set intersection with CommonSense in a dozen lines.
 //!
+//! The front door is `Setx::builder`: declare your set, run against the peer. Nobody
+//! supplies `d = |AΔB|` — the endpoints estimate it in the handshake (Strata + MinHash)
+//! — and `Mode::Auto` picks the one-message unidirectional protocol when the workload
+//! allows it.
+//!
 //! Run: `cargo run --release --offline --example quickstart`
 
 use commonsense::data::synth;
-use commonsense::protocol::bidi::{self, BidiOptions};
-use commonsense::protocol::{uni, CsParams};
+use commonsense::setx::{ProtocolKind, Setx};
 
 fn main() {
-    // --- Unidirectional (A ⊆ B): one message, Bob learns B \ A exactly. -----------------
+    // --- Subset workload (A ⊆ B): Auto detects it and runs one-message SetX. ------------
     let (a, b) = synth::subset_pair(100_000, 1_000, 42);
-    let params = CsParams::tuned_uni(b.len(), 1_000);
-    let out = uni::run(&a, &b, &params).expect("decode");
-    println!("— unidirectional SetX (A ⊆ B) —");
-    println!("|A| = {}, |B| = {}, d = 1000", a.len(), b.len());
-    println!("recovered |B\\A| = {}", out.b_minus_a.len());
-    println!("communication: {} bytes in {} message(s)", out.comm.total_bytes(), out.comm.rounds());
-    assert_eq!(out.b_minus_a, synth::difference(&b, &a));
+    let alice = Setx::builder(&a).build().expect("config");
+    let bob = Setx::builder(&b).build().expect("config");
+    let (ra, rb) = alice.run_pair(&bob).expect("setx");
+    println!("— subset workload (A ⊆ B, d estimated in-handshake) —");
+    println!("|A| = {}, |B| = {}, true d = 1000", a.len(), b.len());
+    println!(
+        "protocol = {:?}, recovered |B\\A| = {}, attempts = {}",
+        rb.kind,
+        rb.local_unique.len(),
+        rb.attempts
+    );
+    println!("communication: {} bytes ({})", ra.total_bytes(), ra.breakdown());
+    assert_eq!(rb.local_unique, synth::difference(&b, &a));
+    assert_eq!(ra.intersection, rb.intersection);
+    assert_eq!(rb.kind, ProtocolKind::Uni, "Auto must detect the subset shape");
 
-    // --- Bidirectional (general case): ping-pong decoding. ------------------------------
+    // --- General workload: two-sided difference, ping-pong decoding. --------------------
     let (a, b) = synth::overlap_pair(100_000, 500, 1_500, 43);
-    let params = CsParams::tuned_bidi(102_000, 500, 1_500);
-    let out = bidi::run(&a, &b, &params, BidiOptions::default());
-    println!("\n— bidirectional SetX —");
+    let alice = Setx::builder(&a).build().expect("config");
+    let bob = Setx::builder(&b).build().expect("config");
+    let (ra, rb) = alice.run_pair(&bob).expect("setx");
+    println!("\n— general bidirectional workload —");
     println!("|A∩B| = 100000, |A\\B| = 500, |B\\A| = 1500");
     println!(
-        "converged = {}, rounds = {}, communication = {} bytes",
-        out.converged,
-        out.rounds,
-        out.comm.total_bytes()
+        "protocol = {:?}, rounds = {}, communication = {} bytes",
+        ra.kind,
+        ra.rounds,
+        ra.total_bytes()
     );
-    assert!(out.converged);
-    assert_eq!(out.a_minus_b, synth::difference(&a, &b));
-    assert_eq!(out.b_minus_a, synth::difference(&b, &a));
-    println!("exact intersection of {} elements ✓", out.intersection.len());
+    assert_eq!(ra.local_unique, synth::difference(&a, &b));
+    assert_eq!(rb.local_unique, synth::difference(&b, &a));
+    assert_eq!(ra.intersection, synth::intersect(&a, &b));
+    println!("exact intersection of {} elements ✓", ra.intersection.len());
 }

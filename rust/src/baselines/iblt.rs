@@ -8,6 +8,7 @@
 //! Communication accounting is parameterized by the *nominal* field widths (the paper's
 //! `1.5u` bits per cell remark) while the in-memory representation uses native integers.
 
+use crate::entropy::{put_varint, take, take_varint, unzigzag, zigzag};
 use crate::hash::hash_u64;
 
 /// Accounting + structural parameters.
@@ -128,6 +129,44 @@ impl Iblt {
         for &k in keys {
             self.insert(k);
         }
+    }
+
+    /// Serialize the cell array: cell count, then per cell `key_xor` (8 B LE), `fp_xor`
+    /// (varint) and zigzag-varint `count`. Structural parameters (`IbltParams`) are *not*
+    /// included — both sides of an exchange must already agree on them (they are part of
+    /// the protocol config, like the CS matrix seed).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + self.cells.len() * 12);
+        put_varint(&mut out, self.cells.len() as u64);
+        for c in &self.cells {
+            out.extend_from_slice(&c.key_xor.to_le_bytes());
+            put_varint(&mut out, c.fp_xor);
+            put_varint(&mut out, zigzag(c.count));
+        }
+        out
+    }
+
+    /// Parse cells written by [`Iblt::to_bytes`] from `data[*off..]`, advancing the
+    /// cursor. Adversarial-input hardened: the claimed cell count is validated against
+    /// the bytes actually present *before* any allocation is sized by it.
+    pub fn from_bytes(data: &[u8], off: &mut usize, params: IbltParams) -> Option<Iblt> {
+        let n = usize::try_from(take_varint(data, off)?).ok()?;
+        // Every cell occupies ≥ 10 bytes on the wire.
+        if n == 0 || n > data.len().saturating_sub(*off) / 10 {
+            return None;
+        }
+        let k = params.n_hashes.max(1) as usize;
+        if n % k != 0 {
+            return None; // `Iblt::new` always produces a multiple of `n_hashes` cells
+        }
+        let mut cells = Vec::with_capacity(n);
+        for _ in 0..n {
+            let key_xor = u64::from_le_bytes(take(data, off, 8)?.try_into().ok()?);
+            let fp_xor = take_varint(data, off)?;
+            let count = unzigzag(take_varint(data, off)?);
+            cells.push(Cell { key_xor, fp_xor, count });
+        }
+        Some(Iblt { params, cells })
     }
 
     /// Cellwise difference `self − other` (both must share params & size).
@@ -274,6 +313,43 @@ mod tests {
         assert!(rounds >= 2);
         // ~1.36·250 cells × 13 bytes ≈ 4.4 KB.
         assert!(bytes > 3000 && bytes < 20_000, "bytes {bytes}");
+    }
+
+    #[test]
+    fn serialization_roundtrips_and_peels() {
+        let params = IbltParams::paper_synthetic();
+        let mut t = Iblt::new(64, params);
+        for k in 0..30u64 {
+            t.insert(k * 13 + 7);
+        }
+        let bytes = t.to_bytes();
+        let mut off = 0;
+        let back = Iblt::from_bytes(&bytes, &mut off, params).unwrap();
+        assert_eq!(off, bytes.len());
+        assert_eq!(back.num_cells(), t.num_cells());
+        // Semantics survive the roundtrip: subtracting the original leaves nothing.
+        let (pos, neg) = back.sub(&t).peel().unwrap();
+        assert!(pos.is_empty() && neg.is_empty());
+    }
+
+    #[test]
+    fn from_bytes_rejects_inflated_cell_count() {
+        let mut data = Vec::new();
+        put_varint(&mut data, u64::MAX);
+        data.extend_from_slice(&[0u8; 64]);
+        let mut off = 0;
+        assert!(Iblt::from_bytes(&data, &mut off, IbltParams::paper_synthetic()).is_none());
+        // Truncated cell payloads are rejected too.
+        let t = Iblt::new(16, IbltParams::paper_synthetic());
+        let bytes = t.to_bytes();
+        for cut in [1usize, 5, bytes.len() - 1] {
+            let mut off = 0;
+            assert!(
+                Iblt::from_bytes(&bytes[..cut], &mut off, IbltParams::paper_synthetic())
+                    .is_none(),
+                "cut {cut}"
+            );
+        }
     }
 
     #[test]

@@ -1,20 +1,18 @@
-//! The distributed runtime: CommonSense over real sockets, plus partitioned parallel SetX.
+//! Distributed-runtime helpers: TCP rendezvous and the legacy-shaped partitioned entry.
 //!
-//! Both frontends are thin adapters over the sans-io [`crate::protocol::session::Session`]
-//! engine — no protocol logic lives here.
+//! Both are thin adapters over the facade — no protocol logic lives here.
 //!
-//! * [`tcp`] — Alice/Bob nodes speaking the wire protocol of [`crate::protocol::wire`] over
-//!   TCP (threaded, dependency-free; the image's crate set has no tokio — see DESIGN.md
-//!   §4). The *initiator* connects and sends `Hello` + `Sketch`; the *responder* serves.
-//!   Framing is hardened against adversarial length fields, and byte counts come from the
-//!   session's own accounting, so TCP and in-memory runs report identical costs.
-//! * [`parallel`] — the §7.3 scale-out: hash-partition the universe (as PBS does), run an
-//!   independent bidirectional session per partition on a **bounded worker pool** that
-//!   honors its `threads` cap (tested via a live-worker high-water mark), aggregate. This
-//!   is also what makes the PJRT dense-block artifacts applicable: each partition's matrix
-//!   has exactly the artifact row count.
+//! * [`tcp`] — `serve`/`connect` pair a [`crate::setx::Setx`] endpoint with the facade's
+//!   hardened [`crate::setx::transport::TcpTransport`] (threaded, dependency-free; the
+//!   image's crate set has no tokio — see DESIGN.md §4). Byte counts come from the
+//!   endpoint's own accounting, so TCP runs report costs identical to in-memory runs.
+//! * [`parallel`] — the §7.3 scale-out in its experiment-harness shape; the partitioning,
+//!   bounded worker pool (thread cap tested via a live-worker high-water mark), and
+//!   per-partition sessions live in [`crate::setx::parallel`]. The per-partition matrices
+//!   have a fixed row count — which is exactly what lets the AOT-compiled dense-block
+//!   artifacts accelerate encoding (see [`crate::runtime`]).
 
 pub mod parallel;
 pub mod tcp;
 
-pub use tcp::{connect_initiator, serve_responder, SessionReport};
+pub use tcp::{connect, serve};

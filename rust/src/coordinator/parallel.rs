@@ -1,26 +1,20 @@
-//! Partitioned parallel SetX (§7.3's scale-out remark, PBS-style).
+//! Legacy-shaped entry point for partitioned parallel SetX (§7.3, PBS-style).
 //!
-//! Hash-partition the universe with a shared seed; each partition is an independent
-//! bidirectional SetX instance (the same sans-io [`crate::protocol::session`] engine the
-//! TCP and in-memory frontends drive), so partitions run concurrently with no data
-//! dependency. The communication overhead of partitioning is tiny (per-partition headers),
-//! and the per-partition matrices have a fixed row count — which is exactly what lets the
-//! AOT-compiled dense-block artifacts accelerate encoding (see [`crate::runtime`]).
-//!
-//! Concurrency model: a **bounded worker pool**. Exactly `min(threads, parts)` OS threads
-//! are spawned; each pulls the next unclaimed partition index from a shared atomic counter
-//! until none remain, so big-partition stragglers never serialize the tail the way fixed
-//! chunking would. The pool instruments a live-worker high-water mark
-//! ([`ParallelOutcome::peak_workers`]) so the `threads` cap is a *tested* invariant, not a
-//! comment.
+//! The partitioning, the bounded worker pool, and the per-partition protocol all live in
+//! [`crate::setx::parallel`] now — every partition is a pair of facade endpoints driven
+//! by the same pump as the in-memory and TCP paths. This module keeps the
+//! experiment-harness-shaped signature (`(a, b, est_a, est_b, parts, threads, opts)` →
+//! flat [`ParallelOutcome`]) as a thin adapter; new code should build two
+//! [`crate::setx::Setx`] endpoints and call [`crate::setx::parallel::run_partitioned`]
+//! directly.
 
-use crate::hash::hash_u64;
+pub use crate::setx::parallel::partition;
+
 use crate::metrics::Stats;
-use crate::protocol::bidi::{self, BidiOptions};
-use crate::protocol::CsParams;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::protocol::bidi::BidiOptions;
+use crate::setx::{parallel, DiffSize, Mode, Setx};
 
-/// Aggregated outcome across partitions.
+/// Aggregated outcome across partitions (legacy shape for the experiment harnesses).
 #[derive(Clone, Debug)]
 pub struct ParallelOutcome {
     pub a_minus_b: Vec<u64>,
@@ -32,24 +26,14 @@ pub struct ParallelOutcome {
     /// Per-partition byte statistics (for the ablation table).
     pub bytes_stats: Stats,
     /// High-water mark of concurrently-live partition workers — always ≤ the `threads`
-    /// argument of [`setx`] (the regression guard for the bounded pool).
+    /// argument (the regression guard for the bounded pool).
     pub peak_workers: usize,
 }
 
-/// Partition a set by `hash(id) % parts`. `parts == 0` is clamped to a single partition
-/// (degenerate but well-defined: everything lands in partition 0, no `hash % 0` panic).
-pub fn partition(ids: &[u64], parts: usize, seed: u64) -> Vec<Vec<u64>> {
-    let parts = parts.max(1);
-    let mut out = vec![Vec::with_capacity(ids.len() / parts + 1); parts];
-    for &id in ids {
-        out[(hash_u64(id, seed) % parts as u64) as usize].push(id);
-    }
-    out
-}
-
 /// Run bidirectional SetX over `parts` hash partitions on a worker pool of at most
-/// `threads` OS threads (both arguments are clamped to ≥ 1; `threads` is additionally
-/// clamped to `parts` — idle workers would be pointless).
+/// `threads` OS threads. A decode failure (the facade would climb its ladder; this
+/// legacy shape runs a single attempt for cost parity with the old harnesses) reports
+/// `converged: false` instead of an error.
 pub fn setx(
     a: &[u64],
     b: &[u64],
@@ -59,72 +43,39 @@ pub fn setx(
     threads: usize,
     opts: BidiOptions,
 ) -> ParallelOutcome {
-    let parts = parts.max(1);
-    let threads = threads.clamp(1, parts);
-    let part_seed = 0x9a27_11;
-    let a_parts = partition(a, parts, part_seed);
-    let b_parts = partition(b, parts, part_seed);
-
-    // Per-partition d estimate: uniques split evenly; pad for Poisson spread
-    // (mean + 3σ + 4), exactly how PBS provisions sub-sketches.
-    let pad = |d: usize| -> usize {
-        let mu = d as f64 / parts as f64;
-        (mu + 3.0 * mu.sqrt() + 4.0).ceil() as usize
+    let build = |set: &[u64]| {
+        Setx::builder(set)
+            .mode(Mode::Bidi)
+            .diff_size(DiffSize::Explicit(est_a_unique + est_b_unique))
+            .universe_bits(256)
+            .max_attempts(1)
+            .engine_options(opts)
+            .build()
+            .expect("legacy parallel config is always valid")
     };
-    let da = pad(est_a_unique);
-    let db = pad(est_b_unique);
-
-    // Bounded pool: `threads` workers race on `next` for partition indices; `active`
-    // and `peak` instrument how many are ever live at once.
-    let next = AtomicUsize::new(0);
-    let active = AtomicUsize::new(0);
-    let peak = AtomicUsize::new(0);
-    let results: Vec<bidi::BidiOutcome> = std::thread::scope(|scope| {
-        let worker = || {
-            let mut local = Vec::new();
-            let mut p = next.fetch_add(1, Ordering::Relaxed);
-            while p < parts {
-                let live = active.fetch_add(1, Ordering::SeqCst) + 1;
-                peak.fetch_max(live, Ordering::SeqCst);
-                let (ap, bp) = (&a_parts[p], &b_parts[p]);
-                let n = ap.len().max(bp.len());
-                let mut params = CsParams::tuned_bidi(n.max(64), da, db);
-                params.seed ^= p as u64; // independent matrices per partition
-                local.push(bidi::run(ap, bp, &params, opts));
-                active.fetch_sub(1, Ordering::SeqCst);
-                p = next.fetch_add(1, Ordering::Relaxed);
-            }
-            local
-        };
-        let handles: Vec<_> = (0..threads).map(|_| scope.spawn(worker)).collect();
-        handles.into_iter().flat_map(|h| h.join().expect("partition worker")).collect()
-    });
-
-    let mut a_minus_b = Vec::new();
-    let mut b_minus_a = Vec::new();
-    let mut total_bytes = 0usize;
-    let mut total_msgs = 0usize;
-    let mut converged = true;
-    let mut bytes_stats = Stats::new();
-    for out in results {
-        a_minus_b.extend(out.a_minus_b);
-        b_minus_a.extend(out.b_minus_a);
-        total_bytes += out.comm.total_bytes();
-        total_msgs += out.comm.rounds();
-        converged &= out.converged;
-        bytes_stats.push(out.comm.total_bytes() as f64);
-    }
-    a_minus_b.sort_unstable();
-    b_minus_a.sort_unstable();
-    ParallelOutcome {
-        a_minus_b,
-        b_minus_a,
-        total_bytes,
-        total_msgs,
-        partitions: parts,
-        converged,
-        bytes_stats,
-        peak_workers: peak.into_inner(),
+    let alice = build(a);
+    let bob = build(b);
+    match parallel::run_partitioned(&alice, &bob, parts, threads) {
+        Ok(out) => ParallelOutcome {
+            a_minus_b: out.client.local_unique,
+            b_minus_a: out.server.local_unique,
+            total_bytes: out.client.total_bytes(),
+            total_msgs: out.client.comm.rounds(),
+            partitions: out.partitions,
+            converged: out.client.converged && out.server.converged,
+            bytes_stats: out.bytes_stats,
+            peak_workers: out.peak_workers,
+        },
+        Err(_) => ParallelOutcome {
+            a_minus_b: Vec::new(),
+            b_minus_a: Vec::new(),
+            total_bytes: 0,
+            total_msgs: 0,
+            partitions: parts.max(1),
+            converged: false,
+            bytes_stats: Stats::new(),
+            peak_workers: 0,
+        },
     }
 }
 
@@ -132,35 +83,6 @@ pub fn setx(
 mod tests {
     use super::*;
     use crate::data::synth;
-
-    #[test]
-    fn partition_is_disjoint_cover() {
-        let ids: Vec<u64> = (0..10_000u64).collect();
-        let parts = partition(&ids, 8, 1);
-        assert_eq!(parts.len(), 8);
-        let total: usize = parts.iter().map(|p| p.len()).sum();
-        assert_eq!(total, 10_000);
-        // Roughly balanced.
-        for p in &parts {
-            assert!((1_000..1_550).contains(&p.len()), "part size {}", p.len());
-        }
-    }
-
-    #[test]
-    fn partition_zero_parts_clamps_to_one() {
-        let ids: Vec<u64> = (0..100u64).collect();
-        let parts = partition(&ids, 0, 7);
-        assert_eq!(parts.len(), 1);
-        assert_eq!(parts[0].len(), 100);
-        // And the full pipeline tolerates parts = 0 / threads = 0 end-to-end.
-        let (a, b) = synth::overlap_pair(1_000, 20, 20, 8);
-        let out = setx(&a, &b, 20, 20, 0, 0, BidiOptions::default());
-        assert!(out.converged);
-        assert_eq!(out.partitions, 1);
-        assert_eq!(out.peak_workers, 1);
-        assert_eq!(out.a_minus_b, synth::difference(&a, &b));
-        assert_eq!(out.b_minus_a, synth::difference(&b, &a));
-    }
 
     #[test]
     fn parallel_setx_exact() {

@@ -1,235 +1,96 @@
-//! TCP transport for the bidirectional protocol — **socket framing only** (threaded,
-//! dependency-free; the image's crate set has no tokio, see DESIGN.md §4).
+//! TCP serve/connect helpers — thin wrappers that pair a [`Setx`] endpoint with a
+//! [`TcpTransport`].
 //!
-//! All protocol logic lives in the sans-io [`Session`] engine
-//! ([`crate::protocol::session`]); this module's entire job is moving its frames across a
-//! socket: length-prefixed reads hardened against adversarial length fields, writes, and
-//! teardown on `Done` or peer disconnect. Byte/message accounting comes from the session
-//! itself, so TCP runs report costs identical to the in-memory driver's.
+//! All protocol logic lives in the facade's endpoint state machine
+//! ([`crate::setx`]); all framing lives in [`crate::setx::transport`] (length-prefixed
+//! reads hardened against adversarial length fields). This module only does the socket
+//! rendezvous: `connect` dials out (becoming the client/tie-break end), `serve` accepts
+//! one session on an already-bound listener. Both return the same [`SetxReport`] every
+//! other transport returns, with byte accounting identical to an in-memory run of the
+//! same workload *by construction*.
 
-use crate::protocol::bidi::BidiOptions;
-use crate::protocol::session::{Session, SessionEvent};
-use crate::protocol::{wire, wire::Msg, CsParams};
-use anyhow::{anyhow, Context, Result};
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use crate::setx::transport::TcpTransport;
+use crate::setx::{Setx, SetxError, SetxReport};
+use std::net::{TcpListener, ToSocketAddrs};
 
-/// Outcome of one host's side of a TCP session.
-#[derive(Clone, Debug)]
-pub struct SessionReport {
-    /// This host's unique elements (what the protocol recovered for us).
-    pub unique: Vec<u64>,
-    /// Bytes written to / read from the socket (payload frames only).
-    pub bytes_sent: usize,
-    pub bytes_received: usize,
-    /// Messages this host sent (hello/sketch count for the initiator).
-    pub msgs_sent: usize,
-    pub converged: bool,
+/// Dial a listening peer and run the endpoint to completion (this end is the client).
+pub fn connect(addr: impl ToSocketAddrs, setx: &Setx) -> Result<SetxReport, SetxError> {
+    let mut transport = TcpTransport::connect(addr)?;
+    setx.run(&mut transport)
 }
 
-fn write_msg(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
-    stream.write_all(&msg.to_bytes())?;
-    Ok(())
-}
-
-/// Read exactly one frame: type byte + varint length + body. Returns `Ok(None)` on a
-/// clean end-of-stream at a frame boundary (the peer tore down after `Done`); anything
-/// else — EOF mid-frame, a malformed frame, an adversarial length field — is an error.
-/// The advertised body length is validated against [`wire::MAX_FRAME_BYTES`] *before*
-/// any buffer is sized by it, so a hostile peer cannot drive a huge allocation with a
-/// 10-byte header.
-fn read_msg(stream: &mut TcpStream) -> Result<Option<Msg>> {
-    let mut byte = [0u8; 1];
-    match stream.read_exact(&mut byte) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e).context("reading frame type"),
-    }
-    let mut frame = vec![byte[0]];
-    // Varint body length, byte by byte.
-    let mut len = 0u64;
-    let mut shift = 0u32;
-    let mut more = true;
-    while more {
-        stream.read_exact(&mut byte).context("reading frame length")?;
-        frame.push(byte[0]);
-        len |= ((byte[0] & 0x7f) as u64) << shift;
-        more = byte[0] & 0x80 != 0;
-        if more {
-            shift += 7;
-            if shift >= 64 {
-                return Err(anyhow!("frame length varint overflow"));
-            }
-        }
-    }
-    let len = usize::try_from(len).map_err(|_| anyhow!("frame length exceeds address space"))?;
-    if len > wire::MAX_FRAME_BYTES {
-        return Err(anyhow!("frame length {len} exceeds cap {}", wire::MAX_FRAME_BYTES));
-    }
-    let mut body = vec![0u8; len];
-    stream.read_exact(&mut body).context("reading frame body")?;
-    frame.extend_from_slice(&body);
-    let total = frame.len();
-    let (msg, used) = Msg::from_bytes(&frame).ok_or_else(|| anyhow!("malformed frame"))?;
-    if used != total {
-        return Err(anyhow!("frame parser consumed {used} of {total} bytes"));
-    }
-    Ok(Some(msg))
-}
-
-/// Pump one session over a connected socket until it completes or the peer hangs up.
-/// A clean disconnect at a frame boundary ends the session (its own state says whether
-/// that was a converged finish); transport corruption surfaces as an error.
-fn pump(stream: &mut TcpStream, session: &mut Session) -> Result<()> {
-    let mut open = true;
-    while open {
-        let Some(msg) = read_msg(stream)? else {
-            break;
-        };
-        match session.on_msg(&msg)? {
-            SessionEvent::Reply(reply) => write_msg(stream, &reply)?,
-            SessionEvent::Continue => {}
-            SessionEvent::Done(_) => open = false,
-        }
-    }
-    Ok(())
-}
-
-fn report(session: &Session) -> SessionReport {
-    SessionReport {
-        unique: session.outcome().unique,
-        bytes_sent: session.bytes_sent(),
-        bytes_received: session.bytes_received(),
-        msgs_sent: session.msgs_sent(),
-        converged: session.is_settled(),
-    }
-}
-
-/// Run the initiator (the side with the smaller unique-count estimate): connect, send
-/// `Hello` + `Sketch`, then ping-pong (via the shared [`Session`] engine) to completion.
-pub fn connect_initiator(
-    addr: impl ToSocketAddrs,
-    set: &[u64],
-    params: &CsParams,
-    opts: BidiOptions,
-) -> Result<SessionReport> {
-    let mut stream = TcpStream::connect(addr)?;
-    stream.set_nodelay(true).ok();
-    // The initiator occupies the "a" slot of the parameter block; the responder mirrors it.
-    let (mut session, opening) = Session::initiator(params, set, opts, true);
-    for msg in &opening {
-        write_msg(&mut stream, msg)?;
-    }
-    pump(&mut stream, &mut session)?;
-    Ok(report(&session))
-}
-
-/// Serve one responder session on an already-bound listener. Returns when the session
-/// completes. The responder derives every parameter from the initiator's `Hello`.
-pub fn serve_responder(
-    listener: &TcpListener,
-    set: &[u64],
-    opts: BidiOptions,
-) -> Result<SessionReport> {
-    let (mut stream, _addr) = listener.accept()?;
-    stream.set_nodelay(true).ok();
-    let mut session = Session::responder(set, opts, false);
-    pump(&mut stream, &mut session)?;
-    Ok(report(&session))
+/// Accept one connection on `listener` and run the endpoint to completion (this end is
+/// the server). The conversation's parameters come from the shared config + handshake;
+/// the server needs nothing beyond its own `Setx`.
+pub fn serve(listener: &TcpListener, setx: &Setx) -> Result<SetxReport, SetxError> {
+    let mut transport = TcpTransport::accept(listener)?;
+    setx.run(&mut transport)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth;
-    use crate::entropy::put_varint;
+    use crate::setx::{DiffSize, Mode};
 
     #[test]
     fn tcp_session_matches_in_memory_protocol() {
         let (a, b) = synth::overlap_pair(4_000, 40, 80, 77);
-        let params = CsParams::tuned_bidi(4_120, 40, 80);
+        let alice = Setx::builder(&a).build().unwrap();
+        let bob = Setx::builder(&b).build().unwrap();
+        let (mem_a, mem_b) = alice.run_pair(&bob).unwrap();
+
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let b2 = b.clone();
-        let bob = std::thread::spawn(move || {
-            serve_responder(&listener, &b2, BidiOptions::default()).unwrap()
-        });
-        let alice = connect_initiator(addr, &a, &params, BidiOptions::default()).unwrap();
-        let bob = bob.join().unwrap();
+        let bob2 = bob.clone();
+        let server = std::thread::spawn(move || serve(&listener, &bob2).unwrap());
+        let tcp_a = connect(addr, &alice).unwrap();
+        let tcp_b = server.join().unwrap();
 
-        assert!(alice.converged && bob.converged);
-        assert_eq!(alice.unique, synth::difference(&a, &b));
-        assert_eq!(bob.unique, synth::difference(&b, &a));
+        assert_eq!(tcp_a.local_unique, synth::difference(&a, &b));
+        assert_eq!(tcp_b.local_unique, synth::difference(&b, &a));
+        assert_eq!(tcp_a.intersection, mem_a.intersection);
+        // One engine behind both transports ⇒ byte-identical conversations.
+        assert_eq!(tcp_a.total_bytes(), mem_a.total_bytes());
+        assert_eq!(tcp_b.total_bytes(), mem_b.total_bytes());
         // Conservation: what one sends the other receives.
-        assert_eq!(alice.bytes_sent, bob.bytes_received);
-        assert_eq!(bob.bytes_sent, alice.bytes_received);
-        assert!(alice.bytes_sent + bob.bytes_sent > 0);
+        assert_eq!(tcp_a.bytes_sent(), tcp_b.bytes_received());
+        assert_eq!(tcp_b.bytes_sent(), tcp_a.bytes_received());
+        assert!(tcp_a.bytes_sent() + tcp_b.bytes_sent() > 0);
     }
 
     #[test]
     fn tcp_session_uni_shaped_workload() {
-        // A ⊆ B over TCP: initiator has no uniques.
+        // A ⊆ B over TCP with an explicit d: Mode::Auto routes to the unidirectional
+        // protocol (the subset side has zero uniques) and the server learns B \ A.
         let (a, b) = synth::subset_pair(3_000, 50, 9);
-        let params = CsParams {
-            est_a_unique: 0,
-            est_b_unique: 50,
-            ..CsParams::tuned_bidi(3_050, 0, 50)
-        };
+        let alice =
+            Setx::builder(&a).mode(Mode::Auto).diff_size(DiffSize::Explicit(50)).build().unwrap();
+        let bob =
+            Setx::builder(&b).mode(Mode::Auto).diff_size(DiffSize::Explicit(50)).build().unwrap();
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let b2 = b.clone();
-        let bob = std::thread::spawn(move || {
-            serve_responder(&listener, &b2, BidiOptions::default()).unwrap()
-        });
-        let alice = connect_initiator(addr, &a, &params, BidiOptions::default()).unwrap();
-        let bob = bob.join().unwrap();
-        assert!(alice.unique.is_empty());
-        assert_eq!(bob.unique, synth::difference(&b, &a));
-    }
-
-    #[test]
-    fn read_msg_rejects_adversarial_length_before_allocating() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let writer = std::thread::spawn(move || {
-            let mut s = TcpStream::connect(addr).unwrap();
-            // A Round frame claiming a 2^62-byte body; the socket then stays open, so a
-            // reader that trusted the length would hang allocating/reading forever.
-            let mut frame = vec![3u8];
-            put_varint(&mut frame, 1u64 << 62);
-            s.write_all(&frame).unwrap();
-            s
-        });
-        let (mut stream, _) = listener.accept().unwrap();
-        assert!(read_msg(&mut stream).is_err());
-        drop(writer.join().unwrap());
-    }
-
-    #[test]
-    fn read_msg_rejects_truncated_body() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let writer = std::thread::spawn(move || {
-            let mut s = TcpStream::connect(addr).unwrap();
-            // Claims 16 body bytes, delivers 3, then closes.
-            let mut frame = vec![3u8];
-            put_varint(&mut frame, 16);
-            frame.extend_from_slice(&[1, 2, 3]);
-            s.write_all(&frame).unwrap();
-        });
-        let (mut stream, _) = listener.accept().unwrap();
-        assert!(read_msg(&mut stream).is_err());
-        writer.join().unwrap();
+        let bob2 = bob.clone();
+        let server = std::thread::spawn(move || serve(&listener, &bob2).unwrap());
+        let alice_report = connect(addr, &alice).unwrap();
+        let bob_report = server.join().unwrap();
+        assert!(alice_report.local_unique.is_empty());
+        assert_eq!(bob_report.local_unique, synth::difference(&b, &a));
+        assert_eq!(alice_report.kind, crate::setx::ProtocolKind::Uni);
+        // Both sides agree on the intersection (= A here).
+        assert_eq!(alice_report.intersection, bob_report.intersection);
     }
 
     #[test]
     fn responder_rejects_out_of_order_stream() {
         // A client that skips the handshake and opens with a Round frame must get a
         // protocol error, not a hang or a panic.
+        use crate::protocol::wire::Msg;
+        use std::io::Write;
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let writer = std::thread::spawn(move || {
-            let mut s = TcpStream::connect(addr).unwrap();
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
             let rogue = Msg::Round {
                 residue: vec![],
                 smf: None,
@@ -241,7 +102,8 @@ mod tests {
             s
         });
         let set: Vec<u64> = (0..100).collect();
-        let err = serve_responder(&listener, &set, BidiOptions::default());
+        let bob = Setx::builder(&set).build().unwrap();
+        let err = serve(&listener, &bob);
         assert!(err.is_err(), "out-of-order stream must fail the session");
         drop(writer.join().unwrap());
     }

@@ -412,12 +412,12 @@ pub fn ablations(scale: usize, verbose: bool) {
         let out = uni::run(&a, &b, &params);
         if verbose {
             match out {
-                Some(o) => println!(
+                Ok(o) => println!(
                     "| {m} | {} | {} |",
                     o.comm.total_bytes(),
                     o.b_minus_a == synth::difference(&b, &a)
                 ),
-                None => println!("| {m} | — | decode failed |"),
+                Err(e) => println!("| {m} | — | {e} |"),
             }
         }
     }

@@ -7,7 +7,34 @@
 //! collaboratively compute the **exact** intersection `A ∩ B` using communication close to the
 //! SetX information-theoretic lower bound `d·log2(e·|A|/d)` — far below the SetR lower bound.
 //!
-//! The library is organized in layers:
+//! ## Quickstart
+//!
+//! The front door is the builder-first [`setx`] facade: declare your set and (optionally)
+//! the mode and difference-size policy — by default the endpoints *estimate* `d = |AΔB|`
+//! in the handshake, so you never supply it — and run over any transport:
+//!
+//! ```
+//! use commonsense::setx::Setx;
+//! use commonsense::data::synth;
+//!
+//! let (a, b) = synth::overlap_pair(2_000, 40, 60, 42);
+//! let alice = Setx::builder(&a).build().unwrap();
+//! let bob = Setx::builder(&b).build().unwrap();
+//! // In-process run (the in-memory transport); `Setx::run(&mut transport)` drives the
+//! // identical endpoint over TCP, and `setx::parallel::run_partitioned` over the
+//! // partitioned worker pool.
+//! let (ra, rb) = alice.run_pair(&bob).unwrap();
+//! assert_eq!(ra.intersection, synth::intersect(&a, &b));
+//! assert_eq!(rb.local_unique, synth::difference(&b, &a));
+//! println!("{} bytes total ({})", ra.total_bytes(), ra.breakdown());
+//! ```
+//!
+//! Every path returns one [`setx::SetxReport`] (intersection, rounds, attempts, and the
+//! per-phase/per-direction byte breakdown) or one typed [`setx::SetxError`]; on a decode
+//! failure the endpoints retry on the same connection with the sketch length escalated
+//! along a calibrated safety ladder before ever surfacing an error.
+//!
+//! ## Layers
 //!
 //! * **Substrates** — [`hash`] (PRNGs, SipHash, SHA-256, the `g∘h` column sampler),
 //!   [`matrix`] (the implicit sparse binary RIP-1 CS matrix), [`sketch`] (CS linear sketches),
@@ -15,28 +42,31 @@
 //!   statistical truncation), [`ecc`] (GF(2^m)/BCH syndrome decoding).
 //! * **Core algorithm** — [`decoder`]: the binary-adapted matching-pursuit (MP) decoder with
 //!   the priority-queue + reverse-lookup data structures of Appendix B, plus SSMP and BMP.
-//! * **Protocols** — [`protocol`]: unidirectional (§3) and bidirectional ping-pong (§5)
-//!   CommonSense, with exact wire-format communication accounting.
+//! * **Engine** — [`protocol`]: unidirectional (§3) and bidirectional ping-pong (§5)
+//!   CommonSense as explicit-parameter state machines with exact wire-format accounting,
+//!   plus the §7.1 difference-size estimators ([`protocol::estimate`]).
+//! * **Front door** — [`setx`]: the builder API, the [`setx::transport::Transport`]
+//!   trait with in-memory and TCP implementations, the partitioned-parallel driver, and
+//!   the escalation ladder. **Start here**; drop to [`protocol`] only for manual tuning.
 //! * **Baselines** — [`baselines`]: IBLT/Difference Digest, Graphene, CBF approximate SetX,
 //!   PinSketch, and the information-theoretic [`bounds`].
 //! * **Systems layer** — [`streaming`] (§4 digests), [`data`] (synthetic + Ethereum-sim
-//!   workloads), [`runtime`] (PJRT/XLA AOT artifact execution), [`coordinator`] (threaded,
-//!   dependency-free TCP Alice/Bob nodes and the bounded-pool partitioned parallel SetX;
-//!   no tokio — the offline image's crate set doesn't carry it, see DESIGN.md §4).
+//!   workloads), [`runtime`] (PJRT/XLA AOT artifact execution), [`coordinator`] (thin
+//!   TCP serve/connect helpers and the legacy-shaped parallel entry point; threaded,
+//!   dependency-free — no tokio in the offline image's crate set, see DESIGN.md §4).
 //!
-//! ## Architecture: the sans-io `Session` engine
+//! ## Architecture: sans-io all the way down
 //!
 //! The bidirectional protocol is implemented exactly once, as the sans-io state machine
 //! [`protocol::session::Session`]: frames ([`protocol::wire::Msg`]) go in via
-//! `Session::on_msg`, and a [`protocol::session::SessionEvent`] comes out — `Reply(Msg)`
-//! to transmit, `Continue` while the handshake is still feeding, or `Done(outcome)` at
-//! termination. The engine owns the handshake, the sketch exchange, the ping-pong
-//! decoder ([`protocol::session::Peer`]), and per-frame byte accounting. Every transport
-//! is a thin adapter: [`protocol::bidi::run`] hands frames across in memory
-//! ([`protocol::session::drive`] is the one ping-pong loop in the codebase),
-//! [`coordinator::tcp`] does socket framing only, and [`coordinator::parallel`] fans
-//! sessions over a bounded worker pool. New transports (async, sharded, multi-tenant)
-//! need only move bytes.
+//! `Session::on_msg`, and a [`protocol::session::SessionEvent`] comes out. The facade
+//! repeats the pattern one level up: a `setx` endpoint wraps the session engine with the
+//! estimator handshake (`EstHello`), per-attempt verdicts (`Confirm`), and the escalation
+//! ladder — still pure message-in/step-out. Transports therefore stay trivial: the
+//! in-memory pair, the TCP framer, and the partitioned pool all just move [`protocol::wire::Msg`]
+//! frames, and byte accounting is identical across them *by construction*. New transports
+//! (async, sharded, multi-tenant) implement `send`/`recv`/`is_client` and inherit the
+//! whole protocol, including parameter estimation and self-healing retries.
 //!
 //! ## Workspace layout
 //!
@@ -46,19 +76,6 @@
 //! `cargo bench`) in `rust/benches/`, and runnable examples in `examples/` at the repo
 //! root (auto-discovered; run with `cargo run --release --example <name>`). The sibling
 //! `python/` tree (AOT kernel compilation) is not part of the Cargo build.
-//!
-//! ## Quickstart
-//!
-//! ```
-//! use commonsense::protocol::{uni, CsParams};
-//! use commonsense::data::synth;
-//!
-//! // A ⊆ B with 100 elements unique to Bob.
-//! let (a, b) = synth::subset_pair(10_000, 100, 42);
-//! let params = CsParams::tuned_uni(b.len(), 100);
-//! let outcome = uni::run(&a, &b, &params).expect("decode");
-//! assert_eq!(outcome.intersection.len(), a.len());
-//! ```
 
 pub mod baselines;
 pub mod bounds;
@@ -73,6 +90,7 @@ pub mod matrix;
 pub mod metrics;
 pub mod protocol;
 pub mod runtime;
+pub mod setx;
 pub mod sketch;
 pub mod smf;
 pub mod streaming;

@@ -1,12 +1,12 @@
-//! The `commonsense` CLI: experiment drivers, the l-tuner, and TCP serve/connect roles.
+//! The `commonsense` CLI: the unified `setx` driver, experiment harnesses, the l-tuner,
+//! and TCP serve/connect roles.
 //!
 //! (Arg parsing is hand-rolled: the image's offline crate set has no clap — DESIGN.md §4.)
 
-use commonsense::coordinator::{connect_initiator, parallel, serve_responder};
+use commonsense::coordinator::{connect, serve};
 use commonsense::data::synth;
 use commonsense::experiments;
-use commonsense::protocol::bidi::BidiOptions;
-use commonsense::protocol::CsParams;
+use commonsense::setx::{parallel, transport, DiffSize, Mode, Setx, SetxReport};
 use std::net::TcpListener;
 
 fn usage() -> ! {
@@ -14,15 +14,20 @@ fn usage() -> ! {
         "commonsense — CS.DC'25 CommonSense SetX reproduction
 
 USAGE:
+  commonsense setx --transport <mem|tcp|parallel> [--common N] [--a-unique X] [--b-unique Y]
+                   [--mode <auto|uni|bidi>] [--explicit-d D] [--parts P] [--threads T]
+                                             (one front door, three transports; d is
+                                              estimated in the handshake unless
+                                              --explicit-d is given)
+  commonsense serve --listen ADDR            (server role; set = synthetic demo workload)
+  commonsense connect --addr ADDR            (client role; set = synthetic demo workload)
   commonsense exp <fig2a|fig2b|table2|examples|ablations|all> [--scale N] [--instances K] [--eth-accounts N]
   commonsense tune [--n N] [--d D] [--bidi] [--trials K]
-  commonsense serve --listen ADDR            (responder; set = synthetic demo workload)
-  commonsense connect --addr ADDR            (initiator; set = synthetic demo workload)
-  commonsense parallel [--common N] [--a-unique X] [--b-unique Y] [--parts P] [--threads T]
-                                             (partitioned SetX on the bounded worker pool)
   commonsense selftest                       (quick end-to-end sanity run)
 
-Defaults: --scale 50000, --instances 5, --eth-accounts 300000, --n 100000, --d 1000."
+Defaults: --transport mem, --common 50000, --a-unique 200, --b-unique 300, --parts 16,
+          --threads 4, --scale 50000, --instances 5, --eth-accounts 300000, --n 100000,
+          --d 1000."
     );
     std::process::exit(2)
 }
@@ -59,15 +64,107 @@ impl Args {
             .unwrap_or(default)
     }
 
+    fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
     fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
+}
+
+fn print_report(who: &str, report: &SetxReport) {
+    println!(
+        "{who}: |unique| = {}, |∩| = {}, {:?} in {} attempt(s), {} rounds, converged = {}",
+        report.local_unique.len(),
+        report.intersection.len(),
+        report.kind,
+        report.attempts,
+        report.rounds,
+        report.converged
+    );
+    println!(
+        "{who}: {} B total (sent {} B / received {} B) — {}",
+        report.total_bytes(),
+        report.bytes_sent(),
+        report.bytes_received(),
+        report.breakdown()
+    );
+}
+
+/// Build the demo endpoint: mode/diff from flags, everything else defaults. Flag and
+/// config mistakes exit through `usage()` like every other CLI error.
+fn demo_setx(set: &[u64], args: &Args) -> Setx {
+    let mut builder = Setx::builder(set);
+    builder = match args.str("mode", "auto").as_str() {
+        "uni" => builder.mode(Mode::Uni),
+        "bidi" => builder.mode(Mode::Bidi),
+        "auto" => builder.mode(Mode::Auto),
+        other => {
+            eprintln!("unknown --mode {other}");
+            usage();
+        }
+    };
+    if args.has("explicit-d") {
+        builder = builder.diff_size(DiffSize::Explicit(args.get("explicit-d", 0)));
+    }
+    builder.build().unwrap_or_else(|e| {
+        eprintln!("invalid config: {e}");
+        usage();
+    })
 }
 
 fn main() -> anyhow::Result<()> {
     let args = parse_args();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("");
     match cmd {
+        "setx" => {
+            let common = args.get("common", 50_000);
+            let au = args.get("a-unique", 200);
+            let bu = args.get("b-unique", 300);
+            let (a, b) = synth::overlap_pair(common, au, bu, 42);
+            let alice = demo_setx(&a, &args);
+            let bob = demo_setx(&b, &args);
+            let transport_kind = args.str("transport", "mem");
+            println!(
+                "setx over {transport_kind}: |A| = {}, |B| = {} (true: |A\\B| = {au}, |B\\A| = {bu})",
+                a.len(),
+                b.len()
+            );
+            let t0 = std::time::Instant::now();
+            match transport_kind.as_str() {
+                "mem" => {
+                    let (ra, rb) = alice.run_pair(&bob)?;
+                    print_report("alice", &ra);
+                    print_report("bob", &rb);
+                }
+                "tcp" => {
+                    // Loopback demo: server thread + client in-process. For two real
+                    // hosts, use `commonsense serve` / `commonsense connect`.
+                    let listener = TcpListener::bind("127.0.0.1:0")?;
+                    let addr = listener.local_addr()?;
+                    let bob2 = bob.clone();
+                    let server = std::thread::spawn(move || serve(&listener, &bob2));
+                    let ra = connect(addr, &alice)?;
+                    let rb = server.join().expect("server thread")?;
+                    print_report("alice", &ra);
+                    print_report("bob", &rb);
+                }
+                "parallel" => {
+                    let parts = args.get("parts", 16);
+                    let threads = args.get("threads", 4);
+                    let out = parallel::run_partitioned(&alice, &bob, parts, threads)?;
+                    println!("{} partitions, peak workers {}", out.partitions, out.peak_workers);
+                    print_report("alice", &out.client);
+                    print_report("bob", &out.server);
+                }
+                other => {
+                    eprintln!("unknown --transport {other}");
+                    usage();
+                }
+            }
+            println!("wall: {:?}", t0.elapsed());
+        }
         "exp" => {
             let what = args.positional.get(1).map(String::as_str).unwrap_or("all");
             let scale = args.get("scale", 50_000);
@@ -107,70 +204,39 @@ fn main() -> anyhow::Result<()> {
             experiments::tune_l(n, d, args.has("bidi"), trials, true);
         }
         "serve" => {
-            let addr = args.flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:7700".into());
+            let addr = args.str("listen", "127.0.0.1:7700");
             let (_, b) = synth::overlap_pair(args.get("common", 20_000), 100, 200, 42);
             let listener = TcpListener::bind(&addr)?;
-            println!("responder listening on {addr} (|B| = {})", b.len());
-            let report = serve_responder(&listener, &b, BidiOptions::default())?;
-            println!(
-                "session done: |B\\A| = {}, sent {} B, received {} B, converged = {}",
-                report.unique.len(),
-                report.bytes_sent,
-                report.bytes_received,
-                report.converged
-            );
+            println!("server listening on {addr} (|B| = {})", b.len());
+            let bob = demo_setx(&b, &args);
+            let report = serve(&listener, &bob)?;
+            print_report("server", &report);
         }
         "connect" => {
-            let addr = args.flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7700".into());
+            let addr = args.str("addr", "127.0.0.1:7700");
             let common = args.get("common", 20_000);
             let (a, _) = synth::overlap_pair(common, 100, 200, 42);
-            let params = CsParams::tuned_bidi(common + 300, 100, 200);
-            println!("initiator connecting to {addr} (|A| = {})", a.len());
-            let report = connect_initiator(&addr, &a, &params, BidiOptions::default())?;
-            println!(
-                "session done: |A\\B| = {}, sent {} B, received {} B, converged = {}",
-                report.unique.len(),
-                report.bytes_sent,
-                report.bytes_received,
-                report.converged
-            );
-        }
-        "parallel" => {
-            let common = args.get("common", 50_000);
-            let au = args.get("a-unique", 200);
-            let bu = args.get("b-unique", 200);
-            let parts = args.get("parts", 16);
-            let threads = args.get("threads", 4);
-            let (a, b) = synth::overlap_pair(common, au, bu, 42);
-            println!(
-                "parallel setx: |A| = {}, |B| = {}, {parts} partitions on ≤ {threads} workers",
-                a.len(),
-                b.len()
-            );
-            let t0 = std::time::Instant::now();
-            let out = parallel::setx(&a, &b, au, bu, parts, threads, BidiOptions::default());
-            println!(
-                "done in {:?}: |A\\B| = {}, |B\\A| = {}, {} B in {} msgs, peak workers {}, converged = {}",
-                t0.elapsed(),
-                out.a_minus_b.len(),
-                out.b_minus_a.len(),
-                out.total_bytes,
-                out.total_msgs,
-                out.peak_workers,
-                out.converged
-            );
+            let alice = demo_setx(&a, &args);
+            println!("client connecting to {addr} (|A| = {})", a.len());
+            let report = connect(&addr, &alice)?;
+            print_report("client", &report);
         }
         "selftest" => {
             let (a, b) = synth::overlap_pair(10_000, 100, 150, 7);
-            let params = CsParams::tuned_bidi(10_250, 100, 150);
-            let out = commonsense::protocol::bidi::run(&a, &b, &params, BidiOptions::default());
+            let alice = Setx::builder(&a).build().expect("config");
+            let bob = Setx::builder(&b).build().expect("config");
+            let (mut ta, mut tb) = transport::mem_pair();
+            let a2 = alice.clone();
+            let join = std::thread::spawn(move || a2.run(&mut ta));
+            let rb = bob.run(&mut tb)?;
+            let ra = join.join().expect("alice thread")?;
             println!(
-                "bidi selftest: converged={} rounds={} bytes={} (exact={})",
-                out.converged,
-                out.rounds,
-                out.comm.total_bytes(),
-                out.a_minus_b == synth::difference(&a, &b)
-                    && out.b_minus_a == synth::difference(&b, &a)
+                "setx selftest: attempts={} rounds={} bytes={} (exact={})",
+                ra.attempts,
+                ra.rounds,
+                ra.total_bytes(),
+                ra.local_unique == synth::difference(&a, &b)
+                    && rb.local_unique == synth::difference(&b, &a)
             );
             match commonsense::runtime::Runtime::load_default() {
                 Ok(rt) => println!(

@@ -6,7 +6,41 @@
 
 use std::time::{Duration, Instant};
 
-/// Per-session communication log: every message's direction, label, and size.
+/// What stage of the protocol a wire frame belongs to. Every frame maps to exactly one
+/// phase, so per-phase byte breakdowns are derived from the log instead of ad-hoc string
+/// matching on labels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Parameter/estimator negotiation: `EstHello` and `Hello` frames.
+    Handshake,
+    /// The initiator's compressed CS sketch.
+    Sketch,
+    /// Ping-pong `Round` frames (residue + SMF + inquiries).
+    Residue,
+    /// End-of-attempt `Confirm` frames (success/failure + escalation bookkeeping).
+    Confirm,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] = [Phase::Handshake, Phase::Sketch, Phase::Residue, Phase::Confirm];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Handshake => "handshake",
+            Phase::Sketch => "sketch",
+            Phase::Residue => "residue",
+            Phase::Confirm => "confirm",
+        }
+    }
+
+    /// Whether frames in this phase carry protocol payload (they count as "rounds" in
+    /// the paper's sense); handshake headers and verdicts do not.
+    pub fn is_payload(self) -> bool {
+        matches!(self, Phase::Sketch | Phase::Residue)
+    }
+}
+
+/// Per-session communication log: every message's direction, phase, and size.
 #[derive(Clone, Debug, Default)]
 pub struct CommLog {
     pub entries: Vec<CommEntry>,
@@ -16,8 +50,8 @@ pub struct CommLog {
 pub struct CommEntry {
     /// `true` when Alice → Bob.
     pub from_alice: bool,
-    /// What the message carries (e.g. "sketch", "residue+smf", "last-inquiry").
-    pub label: &'static str,
+    /// Which protocol stage the frame belongs to.
+    pub phase: Phase,
     pub bytes: usize,
 }
 
@@ -26,8 +60,8 @@ impl CommLog {
         Self::default()
     }
 
-    pub fn record(&mut self, from_alice: bool, label: &'static str, bytes: usize) {
-        self.entries.push(CommEntry { from_alice, label, bytes });
+    pub fn record(&mut self, from_alice: bool, phase: Phase, bytes: usize) {
+        self.entries.push(CommEntry { from_alice, phase, bytes });
     }
 
     /// Total bytes in both directions — the paper's communication cost.
@@ -41,12 +75,29 @@ impl CommLog {
         self.entries.len()
     }
 
-    pub fn bytes_by_label(&self, label: &str) -> usize {
+    /// Bytes of every frame in the given phase, both directions.
+    pub fn bytes_by_phase(&self, phase: Phase) -> usize {
+        self.entries.iter().filter(|e| e.phase == phase).map(|e| e.bytes).sum()
+    }
+
+    /// Bytes in one direction (`from_alice`) of one phase.
+    pub fn direction_phase_bytes(&self, from_alice: bool, phase: Phase) -> usize {
         self.entries
             .iter()
-            .filter(|e| e.label == label)
+            .filter(|e| e.from_alice == from_alice && e.phase == phase)
             .map(|e| e.bytes)
             .sum()
+    }
+
+    /// Append every entry of `other` (partition/attempt aggregation).
+    pub fn extend(&mut self, other: &CommLog) {
+        self.entries.extend(other.entries.iter().cloned());
+    }
+
+    /// Payload frames (sketch + residue phases) — the paper-style round count of the
+    /// conversation this log records.
+    pub fn payload_frames(&self) -> usize {
+        self.entries.iter().filter(|e| e.phase.is_payload()).count()
     }
 }
 
@@ -161,13 +212,22 @@ mod tests {
     #[test]
     fn comm_log_accounting() {
         let mut log = CommLog::new();
-        log.record(true, "sketch", 100);
-        log.record(false, "residue", 50);
-        log.record(true, "inquiry", 10);
+        log.record(true, Phase::Sketch, 100);
+        log.record(false, Phase::Residue, 50);
+        log.record(true, Phase::Residue, 10);
         assert_eq!(log.total_bytes(), 160);
         assert_eq!(log.rounds(), 3);
-        assert_eq!(log.bytes_by_label("sketch"), 100);
-        assert_eq!(log.bytes_by_label("nope"), 0);
+        assert_eq!(log.bytes_by_phase(Phase::Sketch), 100);
+        assert_eq!(log.bytes_by_phase(Phase::Confirm), 0);
+        assert_eq!(log.direction_phase_bytes(true, Phase::Residue), 10);
+        assert_eq!(log.direction_phase_bytes(false, Phase::Residue), 50);
+        // Phase totals partition the log: summing over Phase::ALL recovers the total.
+        let by_phase: usize = Phase::ALL.iter().map(|&p| log.bytes_by_phase(p)).sum();
+        assert_eq!(by_phase, log.total_bytes());
+        let mut merged = CommLog::new();
+        merged.extend(&log);
+        merged.extend(&log);
+        assert_eq!(merged.total_bytes(), 320);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //!   d ≈ (1−J)/(1+J) · (|A|+|B|). A few hundred bytes; best when d/|A∪B| is not tiny.
 
 use crate::baselines::iblt::{Iblt, IbltParams};
+use crate::entropy::{put_varint, take, take_varint};
 use crate::hash::hash_u64;
 
 /// Strata estimator: `strata` levels × a `cells`-cell IBLT each.
@@ -53,6 +54,51 @@ impl StrataEstimator {
         self.strata.iter().map(|t| t.size_bytes()).sum()
     }
 
+    /// Serialize for the `EstHello` handshake frame: stratum count, then each stratum's
+    /// IBLT cells. The shape/seed parameters are *not* carried — both peers derive them
+    /// from the shared protocol seed, and [`StrataEstimator::shape_matches`] guards
+    /// against a peer that sent a different shape anyway.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_varint(&mut out, self.strata.len() as u64);
+        for t in &self.strata {
+            out.extend_from_slice(&t.to_bytes());
+        }
+        out
+    }
+
+    /// Parse a peer's serialized estimator. `seed` must be the same shared seed this
+    /// host built its own estimator with. Hardened: stratum/cell counts are validated
+    /// before any allocation, and trailing garbage is rejected.
+    pub fn from_bytes(data: &[u8], seed: u64) -> Option<StrataEstimator> {
+        let mut off = 0usize;
+        let n = usize::try_from(take_varint(data, &mut off)?).ok()?;
+        if n == 0 || n > 64 {
+            return None;
+        }
+        let params = IbltParams { seed: seed ^ 0x57a7a, ..IbltParams::paper_synthetic() };
+        let mut strata = Vec::with_capacity(n);
+        for _ in 0..n {
+            strata.push(Iblt::from_bytes(data, &mut off, params)?);
+        }
+        if off != data.len() {
+            return None;
+        }
+        Some(StrataEstimator { strata, seed })
+    }
+
+    /// Whether `other` has the same stratum count and per-stratum cell counts — the
+    /// precondition of [`StrataEstimator::estimate`]; callers deserializing a peer's
+    /// estimator must check this instead of letting `estimate` assert.
+    pub fn shape_matches(&self, other: &StrataEstimator) -> bool {
+        self.strata.len() == other.strata.len()
+            && self
+                .strata
+                .iter()
+                .zip(&other.strata)
+                .all(|(a, b)| a.num_cells() == b.num_cells())
+    }
+
     /// Estimate `d = |A Δ B|` from our strata vs the peer's.
     ///
     /// Walk from the deepest stratum down, summing decoded differences; the first stratum
@@ -71,6 +117,27 @@ impl StrataEstimator {
             }
         }
         count.max(1)
+    }
+
+    /// Directional variant of [`StrataEstimator::estimate`]: `(mine_only, theirs_only)`
+    /// estimates of `|A\B|` and `|B\A|` (from `self = A`'s perspective), scaled exactly
+    /// like the symmetric estimate. The zero side is a reliable *subset* signal — when
+    /// `A ⊆ B`, no decoded stratum ever peels an A-only element — which is what lets
+    /// `Mode::Auto` pick the cheaper unidirectional protocol without ground truth.
+    pub fn estimate_directional(&self, theirs: &StrataEstimator) -> (usize, usize) {
+        assert!(self.shape_matches(theirs), "estimator shapes must match");
+        let mut mine = 0usize;
+        let mut other = 0usize;
+        for k in (0..self.strata.len()).rev() {
+            match self.strata[k].sub(&theirs.strata[k]).peel() {
+                Some((pos, neg)) => {
+                    mine += pos.len();
+                    other += neg.len();
+                }
+                None => return (mine << (k + 1), other << (k + 1)),
+            }
+        }
+        (mine, other)
     }
 }
 
@@ -91,6 +158,36 @@ impl MinHashEstimator {
 
     pub fn size_bytes(&self) -> usize {
         8 * self.mins.len() + 8
+    }
+
+    /// Serialize for the `EstHello` handshake frame: set cardinality, k, bottom-k hashes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 * self.mins.len() + 10);
+        put_varint(&mut out, self.set_len as u64);
+        put_varint(&mut out, self.mins.len() as u64);
+        for m in &self.mins {
+            out.extend_from_slice(&m.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse a peer's serialized estimator (count validated before allocation; trailing
+    /// garbage rejected).
+    pub fn from_bytes(data: &[u8]) -> Option<MinHashEstimator> {
+        let mut off = 0usize;
+        let set_len = usize::try_from(take_varint(data, &mut off)?).ok()?;
+        let k = usize::try_from(take_varint(data, &mut off)?).ok()?;
+        if k > data.len().saturating_sub(off) / 8 {
+            return None;
+        }
+        let mut mins = Vec::with_capacity(k);
+        for _ in 0..k {
+            mins.push(u64::from_le_bytes(take(data, &mut off, 8)?.try_into().ok()?));
+        }
+        if off != data.len() {
+            return None;
+        }
+        Some(MinHashEstimator { mins, set_len })
     }
 
     /// Jaccard estimate from two bottom-k signatures.
@@ -182,5 +279,56 @@ mod tests {
         let (a, _) = synth::subset_pair(5_000, 0, 6);
         let ma = MinHashEstimator::build(&a, 128, 9);
         assert!((ma.jaccard(&ma) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strata_serialization_roundtrips_and_still_estimates() {
+        let (a, b) = synth::overlap_pair(10_000, 150, 150, 8);
+        let mut ea = StrataEstimator::with_shape(24, 32, 5);
+        ea.insert_all(&a);
+        let mut eb = StrataEstimator::with_shape(24, 32, 5);
+        eb.insert_all(&b);
+        let want = ea.estimate(&eb);
+        let bytes = eb.to_bytes();
+        let back = StrataEstimator::from_bytes(&bytes, 5).expect("roundtrip");
+        assert!(ea.shape_matches(&back));
+        assert_eq!(ea.estimate(&back), want, "estimate must survive the wire");
+        // Truncated payloads and trailing garbage must be rejected.
+        assert!(StrataEstimator::from_bytes(&bytes[..bytes.len() - 1], 5).is_none());
+        let mut garbage = bytes.clone();
+        garbage.push(0);
+        assert!(StrataEstimator::from_bytes(&garbage, 5).is_none());
+    }
+
+    #[test]
+    fn minhash_serialization_roundtrips() {
+        let (a, b) = synth::overlap_pair(8_000, 2_000, 2_000, 9);
+        let ma = MinHashEstimator::build(&a, 256, 3);
+        let mb = MinHashEstimator::build(&b, 256, 3);
+        let back = MinHashEstimator::from_bytes(&mb.to_bytes()).expect("roundtrip");
+        assert_eq!(back.set_len, mb.set_len);
+        assert_eq!(ma.estimate_d(&back), ma.estimate_d(&mb));
+        assert!(MinHashEstimator::from_bytes(&mb.to_bytes()[..10]).is_none());
+    }
+
+    #[test]
+    fn directional_estimate_detects_subset() {
+        // A ⊆ B: the A-only side must come out exactly zero — the Mode::Auto signal.
+        let (a, b) = synth::subset_pair(20_000, 300, 11);
+        let mut ea = StrataEstimator::with_shape(24, 32, 7);
+        ea.insert_all(&a);
+        let mut eb = StrataEstimator::with_shape(24, 32, 7);
+        eb.insert_all(&b);
+        let (a_only, b_only) = ea.estimate_directional(&eb);
+        assert_eq!(a_only, 0, "subset side must estimate zero uniques");
+        assert!(b_only >= 100 && b_only <= 900, "true 300, got {b_only}");
+        // And a genuinely two-sided difference reports both sides nonzero.
+        let (x, y) = synth::overlap_pair(20_000, 200, 200, 12);
+        let mut ex = StrataEstimator::with_shape(24, 32, 7);
+        ex.insert_all(&x);
+        let mut ey = StrataEstimator::with_shape(24, 32, 7);
+        ey.insert_all(&y);
+        let (x_only, y_only) = ex.estimate_directional(&ey);
+        assert!(x_only > 0 && y_only > 0);
     }
 }

@@ -1,4 +1,5 @@
-//! The CommonSense SetX protocols: unidirectional (§3) and bidirectional ping-pong (§5).
+//! The CommonSense SetX protocol *engine*: unidirectional (§3) and bidirectional
+//! ping-pong (§5), as explicit-parameter state machines.
 //!
 //! Both are implemented as *pure message-passing state machines*: every byte that would
 //! cross the network is actually framed (see [`wire`]) and charged to a
@@ -7,9 +8,14 @@
 //!
 //! The bidirectional protocol's single source of truth is the sans-io [`session::Session`]
 //! engine: handshake, sketch exchange, and ping-pong decode as one `Msg`-in/`Msg`-out
-//! state machine. [`bidi::run`] (in-memory), [`crate::coordinator::tcp`] (socket framing),
-//! and [`crate::coordinator::parallel`] (bounded-pool partitioned scale-out) are thin
-//! transport adapters over that one engine.
+//! state machine; [`bidi::run`] is its in-memory harness. The §7.1 difference-size
+//! estimators live in [`estimate`].
+//!
+//! This layer demands a caller-supplied [`CsParams`] (including the very `d` the
+//! protocol exists to discover) — it is for experiments, calibration, and manual tuning.
+//! **Applications should use the [`crate::setx`] facade**, which estimates `d` in the
+//! handshake, elects roles, escalates failed decodes, and runs the identical engine over
+//! in-memory, TCP, and partitioned-parallel transports.
 
 pub mod bidi;
 pub mod estimate;
@@ -22,6 +28,31 @@ pub use session::{Role, Session, SessionError, SessionEvent, SessionOutcome};
 pub use uni::UniOutcome;
 
 use crate::matrix::CsMatrix;
+
+/// Why a decode attempt failed — the engine-level diagnosis both the unidirectional
+/// one-shot ([`uni`]) and the facade's escalation ladder report, so failures always
+/// carry *which layer* gave out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeFailure {
+    /// The truncated sketch failed recovery/verification against the receiver's counts
+    /// (mis-sized codec or corrupted payload — the verification-mismatch shape).
+    SketchRecovery,
+    /// The MP decoder could not drive the residue to zero (undersized sketch — the
+    /// undecodable-residue shape).
+    ResidueDecode,
+    /// The bidirectional ping-pong exhausted its round budget without settling.
+    NotConverged,
+}
+
+impl DecodeFailure {
+    pub fn name(self) -> &'static str {
+        match self {
+            DecodeFailure::SketchRecovery => "sketch recovery/verification failed",
+            DecodeFailure::ResidueDecode => "residue undecodable",
+            DecodeFailure::NotConverged => "ping-pong did not converge",
+        }
+    }
+}
 
 /// Shared CS parameters of a session. Alice and Bob must agree on all fields (in the wire
 /// protocol they travel in the handshake header).
@@ -73,9 +104,16 @@ impl CsParams {
 
     /// Defaults for unidirectional SetX over `|B| = n` with `d = |B\A|`.
     pub fn tuned_uni(n: usize, d: usize) -> Self {
+        Self::tuned_uni_with_safety(n, d, 1.0)
+    }
+
+    /// [`CsParams::tuned_uni`] with an extra multiplier on the calibrated safety factor —
+    /// the knob the `Setx` facade's escalation ladder turns (each failed attempt retries
+    /// with a larger multiplier instead of failing opaquely).
+    pub fn tuned_uni_with_safety(n: usize, d: usize, extra_safety: f64) -> Self {
         let m = 7;
         CsParams {
-            l: Self::l_for(d, n, m, Self::uni_safety(d)),
+            l: Self::l_for(d, n, m, Self::uni_safety(d) * extra_safety),
             m,
             seed: 0xC0FFEE,
             universe_bits: 64,
@@ -86,12 +124,18 @@ impl CsParams {
 
     /// Defaults for bidirectional SetX over `n = |A∪B|` with the given unique counts.
     pub fn tuned_bidi(n: usize, a_unique: usize, b_unique: usize) -> Self {
+        Self::tuned_bidi_with_safety(n, a_unique, b_unique, 1.0)
+    }
+
+    /// [`CsParams::tuned_bidi`] with an extra safety multiplier (see
+    /// [`CsParams::tuned_uni_with_safety`]).
+    pub fn tuned_bidi_with_safety(n: usize, a_unique: usize, b_unique: usize, extra_safety: f64) -> Self {
         let m = 5;
         let d = a_unique + b_unique;
         CsParams {
             // Bidirectional decoding fights the opposite-signed component as noise; the
             // calibrated constant is larger than the unidirectional one.
-            l: Self::l_for(d, n, m, Self::bidi_safety(d)),
+            l: Self::l_for(d, n, m, Self::bidi_safety(d) * extra_safety),
             m,
             seed: 0xC0FFEE,
             universe_bits: 256,

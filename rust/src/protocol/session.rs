@@ -27,7 +27,7 @@ use crate::entropy::{
     compress_residue, compress_sketch, decompress_residue, recover_sketch, SketchCodecParams,
 };
 use crate::hash::hash_u64;
-use crate::metrics::CommLog;
+use crate::metrics::{CommLog, Phase as CommPhase};
 use crate::protocol::bidi::BidiOptions;
 use crate::protocol::{wire::Msg, CsParams};
 use crate::sketch::Sketch;
@@ -108,11 +108,24 @@ fn phase_name(phase: &Phase) -> &'static str {
     }
 }
 
-fn label(msg: &Msg) -> &'static str {
+pub(crate) fn label(msg: &Msg) -> &'static str {
     match msg {
+        Msg::EstHello { .. } => "est-hello",
         Msg::Hello { .. } => "hello",
         Msg::Sketch(_) => "sketch",
         Msg::Round { .. } => "round",
+        Msg::Confirm { .. } => "confirm",
+    }
+}
+
+/// Which accounting phase each frame belongs to (shared by every transport and the
+/// `Setx` facade, so per-phase breakdowns agree by construction).
+pub fn frame_phase(msg: &Msg) -> CommPhase {
+    match msg {
+        Msg::EstHello { .. } | Msg::Hello { .. } => CommPhase::Handshake,
+        Msg::Sketch(_) => CommPhase::Sketch,
+        Msg::Round { .. } => CommPhase::Residue,
+        Msg::Confirm { .. } => CommPhase::Confirm,
     }
 }
 
@@ -242,16 +255,17 @@ impl Session {
     }
 
     fn record_sent(&mut self, msg: &Msg) {
-        self.comm.record(self.is_alice, label(msg), msg.wire_len());
+        self.comm.record(self.is_alice, frame_phase(msg), msg.wire_len());
     }
 
     fn record_received(&mut self, msg: &Msg) {
-        self.comm.record(!self.is_alice, label(msg), msg.wire_len());
+        self.comm.record(!self.is_alice, frame_phase(msg), msg.wire_len());
     }
 
-    /// Messages seen so far that count against the round budget (everything but `Hello`).
+    /// Messages seen so far that count against the round budget (everything but the
+    /// handshake headers).
     fn non_hello_msgs(&self) -> usize {
-        self.comm.entries.iter().filter(|e| e.label != "hello").count()
+        self.comm.entries.iter().filter(|e| e.phase != CommPhase::Handshake).count()
     }
 
     pub fn role(&self) -> Role {

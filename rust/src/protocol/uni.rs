@@ -5,12 +5,42 @@
 //! 2. Bob recovers `M·1_A`, forms `r = M·1_B − M·1_A = M·1_{B\A}`, and losslessly
 //!    reconstructs `1_{B\A}` with the binary MP decoder (falling back to L1 pursuit /
 //!    SSMP if the L2 pursuit stalls). Then `A ∩ B = B \ (B\A)`.
+//!
+//! This module is the *engine* layer: explicit [`CsParams`], in-memory only. The facade
+//! ([`crate::setx::Setx`]) is the front door — it estimates the difference size, runs the
+//! same code over real transports, and climbs the escalation ladder on the typed
+//! failures reported here. Failures carry *why*:
+//! [`DecodeFailure::SketchRecovery`] (the truncation/verification layer rejected the
+//! sketch) vs [`DecodeFailure::ResidueDecode`] (the MP decoder could not reach a zero
+//! residue — an undersized sketch).
 
 use crate::decoder::{run_with_fallback, DecoderConfig, MpDecoder, Side};
 use crate::entropy::{compress_sketch, recover_sketch, SketchCodecParams};
-use crate::metrics::CommLog;
-use crate::protocol::{wire::Msg, CsParams};
+use crate::metrics::{CommLog, Phase};
+use crate::protocol::{wire::Msg, CsParams, DecodeFailure};
 use crate::sketch::Sketch;
+
+/// Engine-level unidirectional error: either the frame itself was unusable, or the
+/// decode failed with a layer-specific [`DecodeFailure`]. The facade wraps this into its
+/// own [`crate::setx::SetxError`] surface (and climbs the escalation ladder on `Decode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UniError {
+    /// The message was not a (parseable) sketch frame.
+    Frame(&'static str),
+    /// The decode failed; the payload says which layer.
+    Decode(DecodeFailure),
+}
+
+impl std::fmt::Display for UniError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UniError::Frame(what) => write!(f, "bad frame: {what}"),
+            UniError::Decode(failure) => write!(f, "{}", failure.name()),
+        }
+    }
+}
+
+impl std::error::Error for UniError {}
 
 /// Result of a unidirectional run.
 #[derive(Clone, Debug)]
@@ -34,15 +64,27 @@ pub fn alice_encode(a: &[u64], params: &CsParams) -> (Msg, usize) {
     (msg, size)
 }
 
-/// Bob's half: decode `B \ A` from the received sketch message.
-pub fn bob_decode(msg: &Msg, b: &[u64], params: &CsParams) -> Option<(Vec<u64>, bool)> {
+/// Bob's half: decode `B \ A` from the received sketch message. The error pins down the
+/// failing layer: sketch recovery/verification vs residue decode.
+pub fn bob_decode(msg: &Msg, b: &[u64], params: &CsParams) -> Result<(Vec<u64>, bool), UniError> {
     let Msg::Sketch(sketch_msg) = msg else {
-        return None;
+        return Err(UniError::Frame("expected sketch frame"));
     };
     let matrix = params.matrix();
     let my_sketch = Sketch::encode(matrix, b);
+    if sketch_msg.n != my_sketch.counts.len() {
+        // Mis-negotiated geometry: `recover_sketch` asserts on a length mismatch; refuse
+        // here so callers get a typed error instead of a panic.
+        return Err(UniError::Decode(DecodeFailure::SketchRecovery));
+    }
     let codec = SketchCodecParams::derive(params.est_b_unique, params.est_a_unique, params.l, params.m);
-    let (x_hat, _repaired, _unresolved) = recover_sketch(sketch_msg, &my_sketch.counts, &codec)?;
+    let Some((x_hat, _repaired, _unresolved)) =
+        recover_sketch(sketch_msg, &my_sketch.counts, &codec)
+    else {
+        // The truncation/BCH layer could not reconcile the sketch with our counts — the
+        // verification-mismatch failure shape.
+        return Err(UniError::Decode(DecodeFailure::SketchRecovery));
+    };
     // r = M·1_B − M̂·1_A, canonical orientation (Bob-positive).
     let residue: Vec<i32> = my_sketch
         .counts
@@ -57,25 +99,31 @@ pub fn bob_decode(msg: &Msg, b: &[u64], params: &CsParams) -> Option<(Vec<u64>, 
     // §3.4: fall back to the RIP-1-safe L1 pursuit (SSMP) when vanilla MP stalls — the
     // same escalation ladder the ping-pong session engine uses (without its kicks: a
     // one-shot decode has no later rounds to absorb a wrong kick).
-    let (_stats, used_fallback) = run_with_fallback(&mut dec, true, 0);
+    let (stats, used_fallback) = run_with_fallback(&mut dec, true, 0);
+    if !stats.converged {
+        // The sketch verified but the residue would not peel to zero — the
+        // undecodable-residue failure shape (undersized `l` for the true difference).
+        return Err(UniError::Decode(DecodeFailure::ResidueDecode));
+    }
     let mut b_minus_a = dec.estimate();
     b_minus_a.sort_unstable();
-    Some((b_minus_a, used_fallback))
+    Ok((b_minus_a, used_fallback))
 }
 
 /// End-to-end in-memory run with exact byte accounting.
-pub fn run(a: &[u64], b: &[u64], params: &CsParams) -> Option<UniOutcome> {
+pub fn run(a: &[u64], b: &[u64], params: &CsParams) -> Result<UniOutcome, UniError> {
     let mut comm = CommLog::new();
     let (msg, size) = alice_encode(a, params);
-    comm.record(true, "sketch", size);
+    comm.record(true, Phase::Sketch, size);
     // Serialize/deserialize through the real wire format (what TCP would carry).
     let bytes = msg.to_bytes();
-    let (received, _) = Msg::from_bytes(&bytes)?;
+    let (received, _) =
+        Msg::from_bytes(&bytes).ok_or(UniError::Frame("sketch self-roundtrip"))?;
     let (b_minus_a, used_fallback) = bob_decode(&received, b, params)?;
     let exclude: std::collections::HashSet<u64> = b_minus_a.iter().copied().collect();
     let mut intersection: Vec<u64> = b.iter().copied().filter(|x| !exclude.contains(x)).collect();
     intersection.sort_unstable();
-    Some(UniOutcome { b_minus_a, intersection, comm, used_fallback })
+    Ok(UniOutcome { b_minus_a, intersection, comm, used_fallback })
 }
 
 #[cfg(test)]
@@ -126,5 +174,62 @@ mod tests {
         let out = run(&a, &a, &params).unwrap();
         assert!(out.b_minus_a.is_empty());
         assert_eq!(out.intersection.len(), 2_000);
+    }
+
+    #[test]
+    fn undersized_sketch_fails_as_residue_decode() {
+        // Starve l far below the calibrated minimum for the true d: the sketch layer
+        // still reconciles, but MP cannot peel the residue — the undecodable-residue
+        // failure shape, carrying *why* instead of a bare None.
+        let (a, b) = synth::subset_pair(20_000, 500, 4);
+        let mut params = CsParams::tuned_uni(b.len(), 500);
+        params.l = 160;
+        match run(&a, &b, &params) {
+            Err(UniError::Decode(failure)) => {
+                assert!(
+                    matches!(
+                        failure,
+                        DecodeFailure::ResidueDecode | DecodeFailure::SketchRecovery
+                    ),
+                    "unexpected failure shape {failure:?}"
+                );
+            }
+            Ok(out) => panic!("l=160 for d=500 must not decode ({} found)", out.b_minus_a.len()),
+            Err(e) => panic!("wrong error type: {e}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_sketch_fails_as_sketch_recovery() {
+        // Flip payload bytes in the framed sketch: the truncation/verification layer
+        // must reject it (verification mismatch), not hand garbage to the decoder.
+        let (a, b) = synth::subset_pair(10_000, 100, 5);
+        let params = CsParams::tuned_uni(b.len(), 100);
+        let (msg, _) = alice_encode(&a, &params);
+        let Msg::Sketch(mut sk) = msg else { panic!("alice encodes a sketch") };
+        for byte in sk.payload.iter_mut().take(24) {
+            *byte ^= 0xa5;
+        }
+        let corrupt = Msg::Sketch(sk);
+        match bob_decode(&corrupt, &b, &params) {
+            // Either the truncation/verification layer rejects the payload outright, or
+            // it slips through as garbage and the residue decode fails — both must be
+            // typed `Decode` errors, never a panic or a silent wrong answer.
+            Err(UniError::Decode(_)) => {}
+            Ok((got, _)) => {
+                assert_eq!(got, synth::difference(&b, &a), "wrong answer accepted");
+            }
+            Err(e) => panic!("wrong error type: {e}"),
+        }
+        // A geometry mismatch (wrong l) is also a sketch-recovery failure, not a panic.
+        let (msg2, _) = alice_encode(&a, &params);
+        let mut wrong = params;
+        wrong.l += 64;
+        match bob_decode(&msg2, &b, &wrong) {
+            Err(UniError::Decode(failure)) => {
+                assert_eq!(failure, DecodeFailure::SketchRecovery);
+            }
+            other => panic!("geometry mismatch must be SketchRecovery, got {other:?}"),
+        }
     }
 }

@@ -15,6 +15,23 @@ pub const MAX_FRAME_BYTES: usize = 64 << 20;
 /// A protocol message.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
+    /// Pre-session estimator handshake (the `Setx` facade's opening frame, both
+    /// directions): a fingerprint of the declarative config (both endpoints must agree),
+    /// the sender's set cardinality, and — when the diff size is to be *estimated* rather
+    /// than caller-supplied — serialized Strata + MinHash estimators (§7.1's "handily
+    /// estimated … by sending a few hundred bytes during a handshake step").
+    EstHello {
+        /// Hash of the sender's `SetxConfig`; a mismatch aborts before any protocol work.
+        config_fingerprint: u64,
+        /// `|set|` of the sender (role election + d̂ splitting).
+        set_len: u64,
+        /// Caller-supplied `d = |AΔB|` (present iff the config says `DiffSize::Explicit`).
+        explicit_d: Option<u64>,
+        /// Serialized [`crate::protocol::estimate::StrataEstimator`] (iff `Estimated`).
+        strata: Option<Vec<u8>>,
+        /// Serialized [`crate::protocol::estimate::MinHashEstimator`] (iff `Estimated`).
+        minhash: Option<Vec<u8>>,
+    },
     /// Session handshake: CS parameters + role metadata.
     Hello {
         l: u32,
@@ -42,11 +59,34 @@ pub enum Msg {
         /// Sender believes the session is complete (residue zero, nothing outstanding).
         done: bool,
     },
+    /// End-of-attempt verdict (the `Setx` facade). Both endpoints exchange one `Confirm`
+    /// per attempt; a failed attempt (`ok = false`) triggers the l-escalation ladder —
+    /// the initiator re-opens with a larger sketch *on the same connection* — instead of
+    /// an opaque teardown.
+    Confirm {
+        /// The sender's attempt succeeded (decode exact / session settled).
+        ok: bool,
+        /// Why the attempt failed (one of the `REASON_*` constants; `REASON_OK` iff `ok`).
+        reason: u8,
+        /// 0-based index of the attempt being confirmed (both sides must agree).
+        attempt: u32,
+    },
 }
+
+/// `Confirm::reason` values.
+pub const REASON_OK: u8 = 0;
+/// The truncated sketch failed recovery / verification against the receiver's counts.
+pub const REASON_SKETCH_RECOVERY: u8 = 1;
+/// The MP decoder could not drive the residue to zero (one-shot unidirectional decode).
+pub const REASON_RESIDUE_DECODE: u8 = 2;
+/// The bidirectional ping-pong exhausted its round budget without settling.
+pub const REASON_NOT_CONVERGED: u8 = 3;
 
 const TYPE_HELLO: u8 = 1;
 const TYPE_SKETCH: u8 = 2;
 const TYPE_ROUND: u8 = 3;
+const TYPE_EST_HELLO: u8 = 4;
+const TYPE_CONFIRM: u8 = 5;
 
 /// Encoded length of a LEB128 varint.
 fn varint_len(v: u64) -> usize {
@@ -59,6 +99,14 @@ impl Msg {
     /// costs no allocation or serialization on the hot path.
     pub fn wire_len(&self) -> usize {
         let body = match self {
+            Msg::EstHello { set_len, explicit_d, strata, minhash, .. } => {
+                8 + varint_len(*set_len)
+                    + 1
+                    + explicit_d.map_or(0, |d| varint_len(d))
+                    + strata.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
+                    + minhash.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
+            }
+            Msg::Confirm { attempt, .. } => 2 + varint_len(*attempt as u64),
             Msg::Hello {
                 l,
                 m,
@@ -103,6 +151,32 @@ impl Msg {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut body = Vec::new();
         let ty = match self {
+            Msg::EstHello { config_fingerprint, set_len, explicit_d, strata, minhash } => {
+                body.extend_from_slice(&config_fingerprint.to_le_bytes());
+                put_varint(&mut body, *set_len);
+                let flags = (explicit_d.is_some() as u8)
+                    | (strata.is_some() as u8) << 1
+                    | (minhash.is_some() as u8) << 2;
+                body.push(flags);
+                if let Some(d) = explicit_d {
+                    put_varint(&mut body, *d);
+                }
+                if let Some(bytes) = strata {
+                    put_varint(&mut body, bytes.len() as u64);
+                    body.extend_from_slice(bytes);
+                }
+                if let Some(bytes) = minhash {
+                    put_varint(&mut body, bytes.len() as u64);
+                    body.extend_from_slice(bytes);
+                }
+                TYPE_EST_HELLO
+            }
+            Msg::Confirm { ok, reason, attempt } => {
+                body.push(*ok as u8);
+                body.push(*reason);
+                put_varint(&mut body, *attempt as u64);
+                TYPE_CONFIRM
+            }
             Msg::Hello {
                 l,
                 m,
@@ -178,6 +252,48 @@ impl Msg {
         let total = start + body_len;
         let mut off = 0usize;
         let msg = match ty {
+            TYPE_EST_HELLO => {
+                let fp = u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?);
+                let set_len = take_varint(body, &mut off)?;
+                let flags = take(body, &mut off, 1)?[0];
+                if flags & !0b111 != 0 {
+                    return None;
+                }
+                let explicit_d = if flags & 1 != 0 {
+                    Some(take_varint(body, &mut off)?)
+                } else {
+                    None
+                };
+                let mut opt_bytes = |present: bool| -> Option<Option<Vec<u8>>> {
+                    if !present {
+                        return Some(None);
+                    }
+                    let len = usize::try_from(take_varint(body, &mut off)?).ok()?;
+                    Some(Some(take(body, &mut off, len)?.to_vec()))
+                };
+                let strata = opt_bytes(flags & 2 != 0)?;
+                let minhash = opt_bytes(flags & 4 != 0)?;
+                if off != body.len() {
+                    return None;
+                }
+                Msg::EstHello { config_fingerprint: fp, set_len, explicit_d, strata, minhash }
+            }
+            TYPE_CONFIRM => {
+                let ok = match take(body, &mut off, 1)?[0] {
+                    0 => false,
+                    1 => true,
+                    _ => return None,
+                };
+                let reason = take(body, &mut off, 1)?[0];
+                if reason > REASON_NOT_CONVERGED || (ok != (reason == REASON_OK)) {
+                    return None;
+                }
+                let attempt = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                if off != body.len() {
+                    return None;
+                }
+                Msg::Confirm { ok, reason, attempt }
+            }
             TYPE_HELLO => {
                 let l = take_varint(body, &mut off)?;
                 let m = take_varint(body, &mut off)?;
@@ -264,6 +380,91 @@ mod tests {
         let (back, used) = Msg::from_bytes(&bytes).unwrap();
         assert_eq!(back, msg);
         assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn est_hello_roundtrip_all_field_combinations() {
+        let variants = [
+            Msg::EstHello {
+                config_fingerprint: 0x1234_5678_9abc_def0,
+                set_len: 1_000_000,
+                explicit_d: None,
+                strata: Some(vec![7; 300]),
+                minhash: Some(vec![9; 64]),
+            },
+            Msg::EstHello {
+                config_fingerprint: u64::MAX,
+                set_len: 0,
+                explicit_d: Some(12_345),
+                strata: None,
+                minhash: None,
+            },
+            Msg::EstHello {
+                config_fingerprint: 0,
+                set_len: 1,
+                explicit_d: None,
+                strata: None,
+                minhash: None,
+            },
+        ];
+        for msg in &variants {
+            let bytes = msg.to_bytes();
+            let (back, used) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(&back, msg);
+            assert_eq!(used, bytes.len());
+            assert_eq!(msg.wire_len(), bytes.len(), "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn confirm_roundtrip_and_validation() {
+        for msg in [
+            Msg::Confirm { ok: true, reason: REASON_OK, attempt: 0 },
+            Msg::Confirm { ok: false, reason: REASON_NOT_CONVERGED, attempt: 300 },
+            Msg::Confirm { ok: false, reason: REASON_SKETCH_RECOVERY, attempt: 2 },
+        ] {
+            let bytes = msg.to_bytes();
+            let (back, used) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(back, msg);
+            assert_eq!(used, bytes.len());
+            assert_eq!(msg.wire_len(), bytes.len());
+        }
+        // An inconsistent ok/reason pair must not parse (ok = true requires REASON_OK).
+        let bad = Msg::Confirm { ok: true, reason: REASON_RESIDUE_DECODE, attempt: 1 };
+        assert!(Msg::from_bytes(&bad.to_bytes()).is_none());
+        // Unknown reason codes are rejected.
+        let bad = Msg::Confirm { ok: false, reason: 99, attempt: 1 };
+        assert!(Msg::from_bytes(&bad.to_bytes()).is_none());
+    }
+
+    #[test]
+    fn est_hello_truncation_and_garbage_rejected() {
+        let msg = Msg::EstHello {
+            config_fingerprint: 42,
+            set_len: 9_999,
+            explicit_d: None,
+            strata: Some(vec![5; 40]),
+            minhash: Some(vec![6; 24]),
+        };
+        let bytes = msg.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut} parsed");
+        }
+        // Reserved flag bits must be zero.
+        let mut body = bytes[2..].to_vec(); // type byte + 1-byte varint length here
+        let flags_off = 8 + varint_len(9_999);
+        body[flags_off] |= 0b1000;
+        let mut frame = vec![TYPE_EST_HELLO];
+        put_varint(&mut frame, body.len() as u64);
+        frame.extend_from_slice(&body);
+        assert!(Msg::from_bytes(&frame).is_none());
+        // Trailing garbage in the body is rejected.
+        let mut body = bytes[2..].to_vec();
+        body.push(0xEE);
+        let mut frame = vec![TYPE_EST_HELLO];
+        put_varint(&mut frame, body.len() as u64);
+        frame.extend_from_slice(&body);
+        assert!(Msg::from_bytes(&frame).is_none());
     }
 
     #[test]

@@ -1,0 +1,790 @@
+//! The sans-io endpoint state machine behind [`crate::setx::Setx`].
+//!
+//! An [`Endpoint`] wraps the protocol engine ([`Session`]) with everything the facade
+//! promises on top of it:
+//!
+//! 1. **Estimator handshake** — both ends open with an `EstHello` frame (config
+//!    fingerprint, set cardinality, and — for [`DiffSize::Estimated`] — serialized
+//!    Strata + MinHash estimators). From the exchanged data both sides *independently
+//!    and identically* compute the difference estimate `d̂`, the per-side unique-count
+//!    split, the initiator role (smaller estimated unique count; tie → the transport's
+//!    client end), and whether [`Mode::Auto`] starts unidirectional.
+//! 2. **Attempts and the escalation ladder** — each attempt ends with a `Confirm`
+//!    exchange. On failure the initiator re-opens *on the same connection* with the
+//!    sketch length escalated by [`SetxConfig::ladder_factor`]; the ladder bottoming out
+//!    is the only way a decode failure reaches the caller, as a typed
+//!    [`SetxError::Decode`].
+//! 3. **Uniform accounting** — every frame the endpoint itself handles is charged to its
+//!    [`CommLog`]; frames handled by an inner [`Session`] are charged by the session and
+//!    merged when the attempt ends. Both endpoints of a conversation record identical
+//!    totals, whatever the transport.
+//!
+//! Like [`Session`], the endpoint is pure message-in/[`Step`]-out: `Setx::run` pumps it
+//! over a [`crate::setx::transport::Transport`], and [`drive_endpoints`] pumps a pair
+//! in-process (deterministically, no threads) — which is also the per-partition primitive
+//! of the partitioned-parallel driver.
+
+use std::collections::{HashSet, VecDeque};
+
+use super::{DecodeFailure, DiffSize, Mode, ProtocolKind, SetxConfig, SetxError, SetxReport};
+use crate::metrics::CommLog;
+use crate::protocol::estimate::{MinHashEstimator, StrataEstimator};
+use crate::protocol::session::{frame_phase, label, Session, SessionError, SessionEvent};
+use crate::protocol::uni;
+use crate::protocol::wire::{
+    Msg, REASON_NOT_CONVERGED, REASON_OK, REASON_RESIDUE_DECODE, REASON_SKETCH_RECOVERY,
+};
+use crate::protocol::CsParams;
+
+/// Handshake estimator shape: 24 strata × 32 cells ≈ 10 KB plus a 256-hash MinHash
+/// signature (~2 KB) per direction. Charged to the `Handshake` phase of the report.
+pub(crate) const STRATA_LEVELS: usize = 24;
+pub(crate) const STRATA_CELLS: usize = 32;
+pub(crate) const MINHASH_K: usize = 256;
+
+/// Estimator seeds derive from the shared protocol seed so both ends build compatible
+/// structures without extra negotiation.
+pub(crate) fn est_seed(seed: u64) -> u64 {
+    seed ^ 0x0e57_1a7a_5eed_0001
+}
+
+pub(crate) fn mh_seed(seed: u64) -> u64 {
+    seed ^ 0x0e57_4a5b_5eed_0002
+}
+
+/// `|A∪B| = (|A| + |B| + d) / 2` — the sketch-sizing estimate shared by the global
+/// negotiation and the partitioned driver (callers apply their own floors).
+pub(crate) fn union_estimate(len_a: usize, len_b: usize, d: usize) -> usize {
+    (len_a + len_b + d) / 2
+}
+
+/// What the negotiation fixed for the rest of the connection. Both endpoints compute an
+/// equivalent (mirrored) value from the same exchanged data.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Negotiated {
+    /// Agreed estimate of `|AΔB|` (≥ 1; also ≥ the set-length gap, which is exact).
+    pub d_hat: usize,
+    /// Agreed estimate of `|A∪B|` (sketch-length sizing).
+    pub n_union: usize,
+    /// This endpoint's estimated unique count.
+    pub est_local: usize,
+    /// The peer's estimated unique count.
+    pub est_peer: usize,
+    /// Whether this endpoint opens every attempt (fixed for the whole connection).
+    pub initiator: bool,
+    /// Whether attempt 0 runs the unidirectional protocol (Mode::Uni, or Auto with a
+    /// zero-unique initiator — the directional Strata subset signal).
+    pub uni_first: bool,
+}
+
+/// What the pump should do after feeding one frame in.
+pub(crate) enum Step {
+    /// Transmit these frames (in order), then keep receiving.
+    Send(Vec<Msg>),
+    /// Nothing owed; keep receiving.
+    Continue,
+    /// Transmit these frames, then the endpoint is complete with this report.
+    Finish(Vec<Msg>, Box<SetxReport>),
+    /// Transmit these frames best-effort (final Confirm), then fail with this error.
+    Fatal(Vec<Msg>, SetxError),
+}
+
+enum EpPhase {
+    /// Waiting for the peer's `EstHello`.
+    AwaitEstHello,
+    /// Responder/decoder: waiting for the attempt-opening `Hello`.
+    AwaitOpen,
+    /// Unidirectional decoder: `Hello` seen, waiting for the sketch.
+    UniWaitSketch(CsParams),
+    /// Unidirectional sender: sketch sent, waiting for the decoder's verdict.
+    UniWaitConfirm,
+    /// Bidirectional ping-pong in progress.
+    Bidi(Session),
+    /// Our side of the attempt ended and our `Confirm` is out; waiting for the peer's.
+    WaitConfirm { my_ok: bool, my_reason: u8 },
+    /// Terminal (report issued or fatal error).
+    Finished,
+}
+
+fn phase_label(phase: &EpPhase) -> &'static str {
+    match phase {
+        EpPhase::AwaitEstHello => "await-est-hello",
+        EpPhase::AwaitOpen => "await-open",
+        EpPhase::UniWaitSketch(_) => "uni-await-sketch",
+        EpPhase::UniWaitConfirm => "uni-await-confirm",
+        EpPhase::Bidi(_) => "bidi-session",
+        EpPhase::WaitConfirm { .. } => "await-confirm",
+        EpPhase::Finished => "finished",
+    }
+}
+
+fn failure_to_reason(f: DecodeFailure) -> u8 {
+    match f {
+        DecodeFailure::SketchRecovery => REASON_SKETCH_RECOVERY,
+        DecodeFailure::ResidueDecode => REASON_RESIDUE_DECODE,
+        DecodeFailure::NotConverged => REASON_NOT_CONVERGED,
+    }
+}
+
+fn reason_to_failure(r: u8) -> DecodeFailure {
+    match r {
+        REASON_SKETCH_RECOVERY => DecodeFailure::SketchRecovery,
+        REASON_RESIDUE_DECODE => DecodeFailure::ResidueDecode,
+        _ => DecodeFailure::NotConverged,
+    }
+}
+
+/// Build this endpoint's opening `EstHello` (and, for `Estimated`, the estimators it must
+/// keep until the peer's frame arrives).
+pub(crate) fn build_est_hello(
+    cfg: &SetxConfig,
+    set: &[u64],
+) -> (Msg, Option<(StrataEstimator, MinHashEstimator)>) {
+    match cfg.diff {
+        DiffSize::Explicit(d) => (
+            Msg::EstHello {
+                config_fingerprint: cfg.fingerprint(),
+                set_len: set.len() as u64,
+                explicit_d: Some(d as u64),
+                strata: None,
+                minhash: None,
+            },
+            None,
+        ),
+        DiffSize::Estimated => {
+            let mut strata =
+                StrataEstimator::with_shape(STRATA_LEVELS, STRATA_CELLS, est_seed(cfg.seed));
+            strata.insert_all(set);
+            let minhash = MinHashEstimator::build(set, MINHASH_K, mh_seed(cfg.seed));
+            let msg = Msg::EstHello {
+                config_fingerprint: cfg.fingerprint(),
+                set_len: set.len() as u64,
+                explicit_d: None,
+                strata: Some(strata.to_bytes()),
+                minhash: Some(minhash.to_bytes()),
+            };
+            (msg, Some((strata, minhash)))
+        }
+    }
+}
+
+/// Derive the connection-wide negotiation from the peer's `EstHello` payload. Symmetric
+/// by construction: all quantities are computed in canonical client/server order, so both
+/// endpoints reach mirrored [`Negotiated`] values (and exactly one claims `initiator`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn negotiate(
+    cfg: &SetxConfig,
+    client: bool,
+    my_len: usize,
+    my_ests: Option<&(StrataEstimator, MinHashEstimator)>,
+    peer_len: usize,
+    peer_explicit_d: Option<u64>,
+    peer_strata: Option<&[u8]>,
+    peer_minhash: Option<&[u8]>,
+) -> Result<Negotiated, SetxError> {
+    let (client_len, server_len) = if client { (my_len, peer_len) } else { (peer_len, my_len) };
+    let len_gap = my_len.abs_diff(peer_len);
+    let (d_est, dir): (usize, Option<(usize, usize)>) = match cfg.diff {
+        DiffSize::Explicit(d) => {
+            // The fingerprint already pins the value; this guards frame/config skew.
+            match peer_explicit_d {
+                Some(pd) if pd as usize == d => {}
+                _ => return Err(SetxError::MalformedFrame("explicit-d mismatch in EstHello")),
+            }
+            (d, None)
+        }
+        DiffSize::Estimated => {
+            let (my_st, my_mh) =
+                my_ests.ok_or(SetxError::MalformedFrame("local estimators missing"))?;
+            let sb = peer_strata.ok_or(SetxError::MalformedFrame("missing strata estimator"))?;
+            let mb = peer_minhash.ok_or(SetxError::MalformedFrame("missing minhash estimator"))?;
+            let peer_st = StrataEstimator::from_bytes(sb, est_seed(cfg.seed))
+                .ok_or(SetxError::MalformedFrame("strata estimator"))?;
+            let peer_mh = MinHashEstimator::from_bytes(mb)
+                .ok_or(SetxError::MalformedFrame("minhash estimator"))?;
+            if !my_st.shape_matches(&peer_st) {
+                return Err(SetxError::MalformedFrame("strata shape mismatch"));
+            }
+            let d_strata = my_st.estimate(&peer_st);
+            let (mine_only, theirs_only) = my_st.estimate_directional(&peer_st);
+            // Strata is the workhorse (constant-factor error across the range); MinHash
+            // takes over where the per-stratum IBLTs saturate — a large difference shows
+            // up as a low Jaccard estimate.
+            let jaccard = my_mh.jaccard(&peer_mh);
+            let d = if jaccard <= 0.9 {
+                d_strata.max(my_mh.estimate_d(&peer_mh))
+            } else {
+                d_strata
+            };
+            let dir = if client { (mine_only, theirs_only) } else { (theirs_only, mine_only) };
+            // Provisioning margin on the *estimate*: overshooting costs O(d log) bytes,
+            // undershooting costs a whole ladder rung.
+            (d + d / 4, Some(dir))
+        }
+    };
+    // The set-length gap is a hard lower bound on d — and it is exact information.
+    let d_hat = d_est.max(len_gap).max(1);
+    let (est_client, est_server) = match dir {
+        Some((c, s)) if c + s > 0 => {
+            // Split d̂ by the directional Strata ratio.
+            let ec = ((d_hat as f64 * c as f64) / (c + s) as f64).round() as usize;
+            let ec = ec.min(d_hat);
+            (ec, d_hat - ec)
+        }
+        _ => {
+            // Split by set lengths: u_client − u_server = |C| − |S| exactly.
+            let ec = ((d_hat as i64 + client_len as i64 - server_len as i64) / 2)
+                .clamp(0, d_hat as i64) as usize;
+            (ec, d_hat - ec)
+        }
+    };
+    // §5.1: the side with the smaller estimated unique count initiates; the transport's
+    // client end breaks ties (both sides compute this identically).
+    let initiator_is_client = est_client <= est_server;
+    let est_initiator = if initiator_is_client { est_client } else { est_server };
+    let uni_first = match cfg.mode {
+        Mode::Uni => true,
+        Mode::Bidi => false,
+        Mode::Auto => est_initiator == 0,
+    };
+    let n_union = union_estimate(client_len, server_len, d_hat).max(2);
+    let (est_local, est_peer) =
+        if client { (est_client, est_server) } else { (est_server, est_client) };
+    Ok(Negotiated {
+        d_hat,
+        n_union,
+        est_local,
+        est_peer,
+        initiator: client == initiator_is_client,
+        uni_first,
+    })
+}
+
+/// Which protocol family attempt `attempt` runs — deterministic from shared data, so both
+/// endpoints always agree. `Mode::Auto` tries unidirectional once when the subset signal
+/// fired, then falls back to the general bidirectional machinery on any retry.
+pub(crate) fn attempt_kind(cfg: &SetxConfig, nego: &Negotiated, attempt: u32) -> ProtocolKind {
+    match cfg.mode {
+        Mode::Uni => ProtocolKind::Uni,
+        Mode::Bidi => ProtocolKind::Bidi,
+        Mode::Auto => {
+            if attempt == 0 && nego.uni_first {
+                ProtocolKind::Uni
+            } else {
+                ProtocolKind::Bidi
+            }
+        }
+    }
+}
+
+/// One facade endpoint (see the module docs).
+pub(crate) struct Endpoint<'a> {
+    cfg: &'a SetxConfig,
+    set: &'a [u64],
+    /// Client end of the transport; doubles as the "Alice" direction label and the
+    /// initiator tie-break.
+    client: bool,
+    phase: EpPhase,
+    comm: CommLog,
+    /// 0-based index of the current attempt.
+    attempt: u32,
+    nego: Option<Negotiated>,
+    ests: Option<(StrataEstimator, MinHashEstimator)>,
+    unique: Vec<u64>,
+    settled: bool,
+    kind: ProtocolKind,
+}
+
+impl<'a> Endpoint<'a> {
+    pub(crate) fn new(cfg: &'a SetxConfig, set: &'a [u64], client: bool) -> Endpoint<'a> {
+        Endpoint {
+            cfg,
+            set,
+            client,
+            phase: EpPhase::AwaitEstHello,
+            comm: CommLog::new(),
+            attempt: 0,
+            nego: None,
+            ests: None,
+            unique: Vec::new(),
+            settled: false,
+            kind: ProtocolKind::Bidi,
+        }
+    }
+
+    /// An endpoint with the negotiation pre-computed (the partitioned driver negotiates
+    /// once globally, then provisions every partition) — `start` skips the `EstHello`
+    /// exchange and opens the first attempt directly.
+    pub(crate) fn with_negotiated(
+        cfg: &'a SetxConfig,
+        set: &'a [u64],
+        client: bool,
+        nego: Negotiated,
+    ) -> Endpoint<'a> {
+        let mut ep = Endpoint::new(cfg, set, client);
+        ep.nego = Some(nego);
+        ep
+    }
+
+    /// Opening frames the transport must deliver before the first `on_msg`.
+    pub(crate) fn start(&mut self) -> Vec<Msg> {
+        if let Some(nego) = self.nego {
+            // Pre-negotiated: no estimator handshake.
+            if nego.initiator {
+                return self.open_attempt();
+            }
+            self.phase = EpPhase::AwaitOpen;
+            return Vec::new();
+        }
+        let (msg, ests) = build_est_hello(self.cfg, self.set);
+        self.ests = ests;
+        self.record_sent(&msg);
+        self.phase = EpPhase::AwaitEstHello;
+        vec![msg]
+    }
+
+    pub(crate) fn phase_name(&self) -> &'static str {
+        phase_label(&self.phase)
+    }
+
+    /// Absorb one incoming frame and report what the transport should do next.
+    pub(crate) fn on_msg(&mut self, msg: &Msg) -> Step {
+        match (std::mem::replace(&mut self.phase, EpPhase::Finished), msg) {
+            (
+                EpPhase::AwaitEstHello,
+                Msg::EstHello { config_fingerprint, set_len, explicit_d, strata, minhash },
+            ) => {
+                self.record_recv(msg);
+                let ours = self.cfg.fingerprint();
+                if *config_fingerprint != ours {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::ConfigMismatch { ours, theirs: *config_fingerprint },
+                    );
+                }
+                let Ok(peer_len) = usize::try_from(*set_len) else {
+                    return Step::Fatal(Vec::new(), SetxError::MalformedFrame("set_len"));
+                };
+                let my_ests = self.ests.take();
+                let nego = match negotiate(
+                    self.cfg,
+                    self.client,
+                    self.set.len(),
+                    my_ests.as_ref(),
+                    peer_len,
+                    *explicit_d,
+                    strata.as_deref(),
+                    minhash.as_deref(),
+                ) {
+                    Ok(n) => n,
+                    Err(e) => return Step::Fatal(Vec::new(), e),
+                };
+                self.nego = Some(nego);
+                if nego.initiator {
+                    Step::Send(self.open_attempt())
+                } else {
+                    self.phase = EpPhase::AwaitOpen;
+                    Step::Continue
+                }
+            }
+            (EpPhase::AwaitOpen, m @ Msg::Hello { .. }) => self.on_open_hello(m),
+            (EpPhase::UniWaitSketch(params), m @ Msg::Sketch(_)) => self.uni_decode(&params, m),
+            (EpPhase::UniWaitConfirm, Msg::Confirm { ok, reason, attempt }) => {
+                self.record_recv(msg);
+                if *attempt != self.attempt {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("confirm attempt index"),
+                    );
+                }
+                if *ok {
+                    // The decoder verified its recovery; our set is the intersection.
+                    self.settled = true;
+                    self.finish(Vec::new())
+                } else {
+                    self.next_attempt(Vec::new(), reason_to_failure(*reason))
+                }
+            }
+            (
+                EpPhase::Bidi(mut session),
+                m @ (Msg::Hello { .. } | Msg::Sketch(_) | Msg::Round { .. }),
+            ) => match session.on_msg(m) {
+                Ok(SessionEvent::Reply(reply)) => {
+                    self.phase = EpPhase::Bidi(session);
+                    Step::Send(vec![reply])
+                }
+                Ok(SessionEvent::Continue) => {
+                    self.phase = EpPhase::Bidi(session);
+                    Step::Continue
+                }
+                Ok(SessionEvent::Done(_)) => {
+                    // Session over (settled, or round budget exhausted): issue our verdict.
+                    self.absorb_session(&session);
+                    let ok = self.settled;
+                    let reason = if ok { REASON_OK } else { REASON_NOT_CONVERGED };
+                    self.send_confirm_and_wait(ok, reason)
+                }
+                Err(SessionError::SketchRecovery) => {
+                    // Recoverable attempt failure (undersized/corrupt sketch): report it
+                    // and let the ladder escalate instead of tearing the connection down.
+                    self.absorb_session(&session);
+                    self.settled = false;
+                    self.send_confirm_and_wait(false, REASON_SKETCH_RECOVERY)
+                }
+                Err(e) => {
+                    self.absorb_session(&session);
+                    Step::Fatal(Vec::new(), SetxError::Protocol(e))
+                }
+            },
+            (EpPhase::Bidi(session), Msg::Confirm { ok, reason, attempt }) => {
+                // The peer's side of the attempt ended first (it settled on our `done`
+                // flag, or it failed); settle ours from the current session state.
+                self.record_recv(msg);
+                if *attempt != self.attempt {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("confirm attempt index"),
+                    );
+                }
+                self.absorb_session(&session);
+                let my_ok = self.settled;
+                let my_reason = if my_ok { REASON_OK } else { REASON_NOT_CONVERGED };
+                let confirm = Msg::Confirm { ok: my_ok, reason: my_reason, attempt: self.attempt };
+                self.record_sent(&confirm);
+                self.evaluate(vec![confirm], my_ok, my_reason, *ok, *reason)
+            }
+            (EpPhase::WaitConfirm { my_ok, my_reason }, Msg::Confirm { ok, reason, attempt }) => {
+                self.record_recv(msg);
+                if *attempt != self.attempt {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("confirm attempt index"),
+                    );
+                }
+                self.evaluate(Vec::new(), my_ok, my_reason, *ok, *reason)
+            }
+            (ph @ EpPhase::WaitConfirm { .. }, Msg::Round { .. }) => {
+                // A ping-pong frame the peer emitted before it saw our Confirm: charge it
+                // and drain it.
+                self.record_recv(msg);
+                self.phase = ph;
+                Step::Continue
+            }
+            (phase, m) => {
+                self.record_recv(m);
+                Step::Fatal(
+                    Vec::new(),
+                    SetxError::Protocol(SessionError::UnexpectedMessage {
+                        phase: phase_label(&phase),
+                        got: label(m),
+                    }),
+                )
+            }
+        }
+    }
+
+    /// The responder's dispatch of an attempt-opening `Hello`.
+    fn on_open_hello(&mut self, msg: &Msg) -> Step {
+        let nego = self.nego.expect("negotiated before AwaitOpen");
+        let kind = attempt_kind(self.cfg, &nego, self.attempt);
+        self.kind = kind;
+        match kind {
+            ProtocolKind::Bidi => {
+                let mut session = Session::responder(self.set, self.cfg.engine, self.client);
+                match session.on_msg(msg) {
+                    Ok(SessionEvent::Continue) => {
+                        self.phase = EpPhase::Bidi(session);
+                        Step::Continue
+                    }
+                    Ok(_) => Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("unexpected session event on hello"),
+                    ),
+                    Err(e) => Step::Fatal(Vec::new(), SetxError::Protocol(e)),
+                }
+            }
+            ProtocolKind::Uni => {
+                self.record_recv(msg);
+                let Msg::Hello {
+                    l,
+                    m,
+                    seed,
+                    universe_bits,
+                    est_initiator_unique,
+                    est_responder_unique,
+                    ..
+                } = msg
+                else {
+                    return Step::Fatal(Vec::new(), SetxError::MalformedFrame("expected hello"));
+                };
+                // Adversarial `Hello` hardening: an absurd row count would drive a huge
+                // matrix allocation before the decode even starts.
+                if *l > (1 << 28) || *m == 0 || *m > 64 {
+                    return Step::Fatal(Vec::new(), SetxError::MalformedFrame("hello geometry"));
+                }
+                let (Ok(ea), Ok(eb)) = (
+                    usize::try_from(*est_initiator_unique),
+                    usize::try_from(*est_responder_unique),
+                ) else {
+                    return Step::Fatal(Vec::new(), SetxError::MalformedFrame("hello estimates"));
+                };
+                let params = CsParams {
+                    l: *l,
+                    m: *m,
+                    seed: *seed,
+                    universe_bits: *universe_bits,
+                    est_a_unique: ea,
+                    est_b_unique: eb,
+                };
+                self.phase = EpPhase::UniWaitSketch(params);
+                Step::Continue
+            }
+        }
+    }
+
+    /// The unidirectional decoder's half of an attempt.
+    fn uni_decode(&mut self, params: &CsParams, msg: &Msg) -> Step {
+        self.record_recv(msg);
+        match uni::bob_decode(msg, self.set, params) {
+            Ok((unique, _used_fallback)) => {
+                self.unique = unique;
+                self.settled = true;
+                let confirm = Msg::Confirm { ok: true, reason: REASON_OK, attempt: self.attempt };
+                self.record_sent(&confirm);
+                self.finish(vec![confirm])
+            }
+            Err(uni::UniError::Decode(failure)) => {
+                let confirm = Msg::Confirm {
+                    ok: false,
+                    reason: failure_to_reason(failure),
+                    attempt: self.attempt,
+                };
+                self.record_sent(&confirm);
+                self.next_attempt(vec![confirm], failure)
+            }
+            Err(e @ uni::UniError::Frame(_)) => Step::Fatal(Vec::new(), e.into()),
+        }
+    }
+
+    /// Open attempt `self.attempt` (initiator only): `Hello` (+ sketch) per the attempt's
+    /// protocol kind, with the sketch length escalated along the ladder.
+    fn open_attempt(&mut self) -> Vec<Msg> {
+        let nego = self.nego.expect("negotiated before open_attempt");
+        let kind = attempt_kind(self.cfg, &nego, self.attempt);
+        self.kind = kind;
+        let params = self.attempt_params(&nego, kind);
+        match kind {
+            ProtocolKind::Uni => {
+                let hello = Msg::Hello {
+                    l: params.l,
+                    m: params.m,
+                    seed: params.seed,
+                    universe_bits: params.universe_bits,
+                    est_initiator_unique: params.est_a_unique as u64,
+                    est_responder_unique: params.est_b_unique as u64,
+                    set_len: self.set.len() as u64,
+                };
+                let (sketch, _) = uni::alice_encode(self.set, &params);
+                self.record_sent(&hello);
+                self.record_sent(&sketch);
+                self.phase = EpPhase::UniWaitConfirm;
+                vec![hello, sketch]
+            }
+            ProtocolKind::Bidi => {
+                // The session records its own frames; they merge into our log at the end
+                // of the attempt (absorb_session).
+                let (session, opening) =
+                    Session::initiator(&params, self.set, self.cfg.engine, self.client);
+                self.phase = EpPhase::Bidi(session);
+                opening
+            }
+        }
+    }
+
+    /// CS parameters for the current attempt: calibrated tuning × the config safety ×
+    /// the ladder factor, with the shared seed perturbed per attempt so a retry also
+    /// redraws the matrix.
+    fn attempt_params(&self, nego: &Negotiated, kind: ProtocolKind) -> CsParams {
+        let extra = self.cfg.safety * SetxConfig::ladder_factor(self.attempt);
+        let mut params = match kind {
+            ProtocolKind::Uni => {
+                // All difference mass sits on the decoder side under the subset shape.
+                let d = nego.est_peer.max(1);
+                let mut p = CsParams::tuned_uni_with_safety(nego.n_union, d, extra);
+                p.est_a_unique = nego.est_local;
+                p.est_b_unique = d;
+                p
+            }
+            ProtocolKind::Bidi => {
+                let (ea, eb) = if self.client {
+                    (nego.est_local, nego.est_peer)
+                } else {
+                    (nego.est_peer, nego.est_local)
+                };
+                CsParams::tuned_bidi_with_safety(nego.n_union, ea, eb, extra)
+            }
+        };
+        params.seed = self
+            .cfg
+            .seed
+            .wrapping_add((self.attempt as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        params.universe_bits = self.cfg.universe_bits;
+        params
+    }
+
+    /// End our side of a bidirectional attempt: emit the verdict and await the peer's.
+    fn send_confirm_and_wait(&mut self, ok: bool, reason: u8) -> Step {
+        let confirm = Msg::Confirm { ok, reason, attempt: self.attempt };
+        self.record_sent(&confirm);
+        self.phase = EpPhase::WaitConfirm { my_ok: ok, my_reason: reason };
+        Step::Send(vec![confirm])
+    }
+
+    /// Both verdicts are in: finish on double-success, otherwise climb the ladder.
+    fn evaluate(
+        &mut self,
+        out: Vec<Msg>,
+        my_ok: bool,
+        my_reason: u8,
+        peer_ok: bool,
+        peer_reason: u8,
+    ) -> Step {
+        if my_ok && peer_ok {
+            return self.finish(out);
+        }
+        // Keep the most *specific* diagnosis so both endpoints surface the same typed
+        // failure: a concrete layer fault (sketch recovery / residue decode) beats the
+        // generic non-convergence verdict the surviving side reports.
+        let failure = match (my_ok, peer_ok) {
+            (false, true) => reason_to_failure(my_reason),
+            (true, false) => reason_to_failure(peer_reason),
+            _ => {
+                let mine = reason_to_failure(my_reason);
+                if mine == DecodeFailure::NotConverged {
+                    reason_to_failure(peer_reason)
+                } else {
+                    mine
+                }
+            }
+        };
+        self.next_attempt(out, failure)
+    }
+
+    /// Advance the ladder: either re-open (initiator), re-arm for the peer's `Hello`
+    /// (responder), or — when the ladder is exhausted — fail with the typed error.
+    fn next_attempt(&mut self, mut out: Vec<Msg>, failure: DecodeFailure) -> Step {
+        self.attempt += 1;
+        self.unique.clear();
+        self.settled = false;
+        if self.attempt >= self.cfg.max_attempts {
+            self.phase = EpPhase::Finished;
+            return Step::Fatal(out, SetxError::Decode { failure, attempts: self.attempt });
+        }
+        if self.nego.expect("negotiated").initiator {
+            out.extend(self.open_attempt());
+            Step::Send(out)
+        } else {
+            self.phase = EpPhase::AwaitOpen;
+            if out.is_empty() {
+                Step::Continue
+            } else {
+                Step::Send(out)
+            }
+        }
+    }
+
+    fn finish(&mut self, out: Vec<Msg>) -> Step {
+        self.phase = EpPhase::Finished;
+        Step::Finish(out, Box::new(self.report()))
+    }
+
+    /// Merge a finished (or abandoned) session's transcript and result into the endpoint.
+    fn absorb_session(&mut self, session: &Session) {
+        self.comm.extend(session.comm());
+        let outcome = session.outcome();
+        self.unique = outcome.unique;
+        self.settled = outcome.converged;
+    }
+
+    fn report(&self) -> SetxReport {
+        let mut local_unique = self.unique.clone();
+        local_unique.sort_unstable();
+        let exclude: HashSet<u64> = local_unique.iter().copied().collect();
+        let mut intersection: Vec<u64> =
+            self.set.iter().copied().filter(|x| !exclude.contains(x)).collect();
+        intersection.sort_unstable();
+        let rounds = self.comm.payload_frames();
+        SetxReport {
+            intersection,
+            local_unique,
+            kind: self.kind,
+            converged: true,
+            attempts: self.attempt + 1,
+            rounds,
+            comm: self.comm.clone(),
+            local_is_alice: self.client,
+        }
+    }
+
+    fn record_sent(&mut self, msg: &Msg) {
+        self.comm.record(self.client, frame_phase(msg), msg.wire_len());
+    }
+
+    fn record_recv(&mut self, msg: &Msg) {
+        self.comm.record(!self.client, frame_phase(msg), msg.wire_len());
+    }
+}
+
+/// Pump a client/server endpoint pair in-process to completion — deterministic, no
+/// threads, no transport. The in-memory counterpart of two [`crate::setx::Setx::run`]
+/// calls, and the per-partition primitive of the partitioned driver.
+pub(crate) fn drive_endpoints(
+    a: &mut Endpoint<'_>,
+    b: &mut Endpoint<'_>,
+) -> Result<(SetxReport, SetxReport), SetxError> {
+    let mut to_b: VecDeque<Msg> = a.start().into();
+    let mut to_a: VecDeque<Msg> = b.start().into();
+    let mut report_a: Option<SetxReport> = None;
+    let mut report_b: Option<SetxReport> = None;
+    loop {
+        let mut progressed = false;
+        if report_a.is_none() {
+            if let Some(msg) = to_a.pop_front() {
+                progressed = true;
+                match a.on_msg(&msg) {
+                    Step::Send(msgs) => to_b.extend(msgs),
+                    Step::Continue => {}
+                    Step::Finish(msgs, report) => {
+                        to_b.extend(msgs);
+                        report_a = Some(*report);
+                    }
+                    Step::Fatal(_, err) => return Err(err),
+                }
+            }
+        }
+        if report_b.is_none() {
+            if let Some(msg) = to_b.pop_front() {
+                progressed = true;
+                match b.on_msg(&msg) {
+                    Step::Send(msgs) => to_a.extend(msgs),
+                    Step::Continue => {}
+                    Step::Finish(msgs, report) => {
+                        to_a.extend(msgs);
+                        report_b = Some(*report);
+                    }
+                    Step::Fatal(_, err) => return Err(err),
+                }
+            }
+        }
+        if report_a.is_some() && report_b.is_some() {
+            let ra = report_a.take().expect("checked above");
+            let rb = report_b.take().expect("checked above");
+            return Ok((ra, rb));
+        }
+        if !progressed {
+            // Neither side owes nor holds a frame: the conversation wedged (a driver bug,
+            // not peer behavior — surface it as a closed conversation).
+            return Err(SetxError::PeerClosed { during: "in-memory drive (stalled)" });
+        }
+    }
+}

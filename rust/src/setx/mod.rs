@@ -1,0 +1,518 @@
+//! **The front door.** One builder-first endpoint API over every SetX transport.
+//!
+//! The paper's pitch is that SetX should be a drop-in primitive, yet a protocol engine
+//! alone still demands that callers pre-compute [`crate::protocol::CsParams`] — including
+//! the very `d = |AΔB|` the protocol exists to discover — and pick among transport-shaped
+//! entry points with divergent outcome and error types. This module collapses all of that
+//! into one surface:
+//!
+//! ```
+//! use commonsense::setx::Setx;
+//! use commonsense::data::synth;
+//!
+//! let (a, b) = synth::overlap_pair(2_000, 40, 60, 7);
+//! let alice = Setx::builder(&a).build().unwrap();
+//! let bob = Setx::builder(&b).build().unwrap();
+//! // In-process run; `Setx::run` drives the same endpoint over any `Transport`.
+//! let (ra, rb) = alice.run_pair(&bob).unwrap();
+//! assert_eq!(ra.intersection, rb.intersection);
+//! assert_eq!(ra.local_unique, synth::difference(&a, &b));
+//! ```
+//!
+//! * **No caller-supplied `d`** — by default ([`DiffSize::Estimated`]) the endpoints run a
+//!   Strata + MinHash pre-round inside the handshake (`EstHello` frames) and negotiate
+//!   the difference estimate, the initiator role, and (in [`Mode::Auto`]) whether the
+//!   cheap unidirectional protocol applies.
+//! * **One run surface** — `Setx::builder(set)…build()?.run(&mut transport)` works for the
+//!   in-memory channel ([`transport::mem_pair`]), TCP ([`transport::TcpTransport`]), and —
+//!   via the partitioned pool driver ([`parallel::run_partitioned`]) — the §7.3 scale-out.
+//! * **One report, one error** — every path returns a [`SetxReport`] (intersection,
+//!   rounds, attempts, per-phase/per-direction byte breakdown from the
+//!   [`crate::metrics::CommLog`]) or a typed [`SetxError`].
+//! * **Self-healing** — on a residual-decode failure the endpoints exchange a `Confirm`
+//!   verdict and the initiator retries *on the same connection* with the sketch length
+//!   escalated along a calibrated safety ladder ([`SetxConfig::ladder_factor`]), instead
+//!   of failing opaquely.
+
+mod endpoint;
+pub mod parallel;
+pub mod transport;
+
+use crate::hash::hash_u64;
+use crate::metrics::{CommLog, Phase};
+use crate::protocol::bidi::BidiOptions;
+use crate::protocol::session::SessionError;
+use endpoint::{Endpoint, Step};
+use transport::Transport;
+
+/// Which protocol family to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// §3 one-message unidirectional SetX. Requires the initiator's set to be (nearly) a
+    /// subset of the responder's; otherwise the decode fails and the ladder exhausts.
+    Uni,
+    /// §5 bidirectional ping-pong (the general case).
+    Bidi,
+    /// Decide from the handshake estimators: unidirectional when the smaller side shows
+    /// zero uniques (the directional Strata signal), bidirectional otherwise — and fall
+    /// back to bidirectional on any retry.
+    Auto,
+}
+
+/// Where `d = |AΔB|` comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiffSize {
+    /// Caller-supplied symmetric-difference cardinality (both endpoints must configure
+    /// the same value — it is part of the config fingerprint).
+    Explicit(usize),
+    /// Estimate `d` in the handshake via Strata + MinHash (§7.1) — the default; callers
+    /// never supply `d`.
+    Estimated,
+}
+
+/// Which protocol family a run actually used (reported per attempt; `Mode::Auto` resolves
+/// to one of these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtocolKind {
+    Uni,
+    Bidi,
+}
+
+// The engine-level failure diagnosis, re-exported as part of the facade surface (the
+// ladder and [`SetxError::Decode`] speak the same vocabulary as [`crate::protocol::uni`]).
+pub use crate::protocol::DecodeFailure;
+
+/// The one typed error surface of the facade. Absorbs the engine's
+/// [`SessionError`], transport I/O errors, and decode failures (which carry *why*).
+#[derive(Debug)]
+pub enum SetxError {
+    /// Builder validation rejected the declarative config.
+    Config(String),
+    /// The peer's declarative config does not match ours (fingerprints differ).
+    ConfigMismatch { ours: u64, theirs: u64 },
+    /// Transport-level I/O failure.
+    Io(std::io::Error),
+    /// The peer closed the connection before the protocol completed.
+    PeerClosed { during: &'static str },
+    /// A frame failed to parse or carried an invalid/missing field.
+    MalformedFrame(&'static str),
+    /// A structurally valid frame arrived out of phase (terminal, like the engine's).
+    Protocol(SessionError),
+    /// Every attempt of the escalation ladder failed; `failure` is the last attempt's
+    /// reason and `attempts` how many were tried.
+    Decode { failure: DecodeFailure, attempts: u32 },
+}
+
+impl std::fmt::Display for SetxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SetxError::Config(why) => write!(f, "invalid config: {why}"),
+            SetxError::ConfigMismatch { ours, theirs } => {
+                write!(f, "peer config mismatch (ours {ours:#x}, theirs {theirs:#x})")
+            }
+            SetxError::Io(e) => write!(f, "transport i/o: {e}"),
+            SetxError::PeerClosed { during } => write!(f, "peer closed during {during}"),
+            SetxError::MalformedFrame(what) => write!(f, "malformed frame: {what}"),
+            SetxError::Protocol(e) => write!(f, "protocol violation: {e}"),
+            SetxError::Decode { failure, attempts } => {
+                write!(f, "{} after {attempts} attempt(s)", failure.name())
+            }
+        }
+    }
+}
+
+impl std::error::Error for SetxError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SetxError::Io(e) => Some(e),
+            SetxError::Protocol(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SetxError {
+    fn from(e: std::io::Error) -> Self {
+        SetxError::Io(e)
+    }
+}
+
+impl From<SessionError> for SetxError {
+    fn from(e: SessionError) -> Self {
+        SetxError::Protocol(e)
+    }
+}
+
+impl From<crate::protocol::uni::UniError> for SetxError {
+    fn from(e: crate::protocol::uni::UniError) -> Self {
+        use crate::protocol::uni::UniError;
+        match e {
+            UniError::Frame(what) => SetxError::MalformedFrame(what),
+            UniError::Decode(failure) => SetxError::Decode { failure, attempts: 1 },
+        }
+    }
+}
+
+/// The validated declarative config a [`Setx`] endpoint runs under. Both endpoints of a
+/// session must hold identical configs — [`SetxConfig::fingerprint`] travels in the
+/// opening `EstHello` frame and a mismatch aborts before any protocol work.
+#[derive(Clone, Copy, Debug)]
+pub struct SetxConfig {
+    pub mode: Mode,
+    pub diff: DiffSize,
+    /// Extra multiplier on the calibrated sketch-length safety factor (1.0 = calibrated).
+    pub safety: f64,
+    /// Shared seed: CS matrices, handshake estimators, and signatures all derive from it.
+    pub seed: u64,
+    /// Nominal universe bit-width for communication accounting.
+    pub universe_bits: u32,
+    /// Ladder depth: how many decode attempts (with escalating `l`) before giving up.
+    pub max_attempts: u32,
+    /// Engine tunables (round budget, SMF fpr, …) — advanced; defaults match the paper.
+    pub engine: BidiOptions,
+}
+
+impl SetxConfig {
+    /// The escalation ladder: attempt `k` multiplies the calibrated safety factor by
+    /// `1.6^k` (≈ +60% sketch rows per retry; three rungs span a 2.5× misestimate of `d`,
+    /// beyond the Strata estimator's observed error band).
+    pub fn ladder_factor(attempt: u32) -> f64 {
+        1.6f64.powi(attempt.min(8) as i32)
+    }
+
+    /// Order-sensitive hash of every semantic field. Equal configs ⇒ equal fingerprints;
+    /// endpoints exchange this in `EstHello` and refuse mismatched peers.
+    pub fn fingerprint(&self) -> u64 {
+        let diff_tag = match self.diff {
+            DiffSize::Explicit(d) => [1u64, d as u64],
+            DiffSize::Estimated => [2u64, 0],
+        };
+        let fields = [
+            0x5e7c_0de5_0002u64, // fingerprint format version
+            match self.mode {
+                Mode::Uni => 1,
+                Mode::Bidi => 2,
+                Mode::Auto => 3,
+            },
+            diff_tag[0],
+            diff_tag[1],
+            self.safety.to_bits(),
+            self.seed,
+            self.universe_bits as u64,
+            self.max_attempts as u64,
+            self.engine.max_rounds as u64,
+            self.engine.confident_round as u64,
+            self.engine.smf_fpr.to_bits(),
+            self.engine.ssmp_fallback as u64,
+            self.engine.sig_seed,
+        ];
+        let mut h = 0xC033_0A5E_u64;
+        for v in fields {
+            h = hash_u64(h ^ v, 0x5e7c_0de5);
+        }
+        h
+    }
+}
+
+/// Builder for a [`Setx`] endpoint. Obtain via [`Setx::builder`]; every knob has a
+/// paper-calibrated default, so `Setx::builder(&set).build()` is a complete endpoint.
+#[derive(Clone, Debug)]
+pub struct SetxBuilder {
+    set: Vec<u64>,
+    cfg: SetxConfig,
+}
+
+impl SetxBuilder {
+    /// Protocol family ([`Mode::Auto`] by default).
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    /// Where `d = |AΔB|` comes from ([`DiffSize::Estimated`] by default).
+    pub fn diff_size(mut self, diff: DiffSize) -> Self {
+        self.cfg.diff = diff;
+        self
+    }
+
+    /// Extra safety multiplier on the calibrated sketch length (default 1.0). Values
+    /// below 1.0 under-provision the first attempt and lean on the escalation ladder.
+    pub fn safety(mut self, safety: f64) -> Self {
+        self.cfg.safety = safety;
+        self
+    }
+
+    /// Shared protocol seed (matrices, estimators, signatures). Default `0xC0FFEE`.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Nominal universe bit-width for accounting (default 64).
+    pub fn universe_bits(mut self, bits: u32) -> Self {
+        self.cfg.universe_bits = bits;
+        self
+    }
+
+    /// Ladder depth: decode attempts before giving up (default 3).
+    pub fn max_attempts(mut self, attempts: u32) -> Self {
+        self.cfg.max_attempts = attempts;
+        self
+    }
+
+    /// Advanced engine tunables (round budget, SMF fpr, confident round, …).
+    pub fn engine_options(mut self, opts: BidiOptions) -> Self {
+        self.cfg.engine = opts;
+        self
+    }
+
+    /// Validate the config into a runnable endpoint.
+    pub fn build(self) -> Result<Setx, SetxError> {
+        let cfg = &self.cfg;
+        if !(0.2..=8.0).contains(&cfg.safety) || !cfg.safety.is_finite() {
+            return Err(SetxError::Config(format!(
+                "safety {} outside [0.2, 8.0]",
+                cfg.safety
+            )));
+        }
+        if !(1..=8).contains(&cfg.max_attempts) {
+            return Err(SetxError::Config(format!(
+                "max_attempts {} outside [1, 8]",
+                cfg.max_attempts
+            )));
+        }
+        if !(8..=1024).contains(&cfg.universe_bits) {
+            return Err(SetxError::Config(format!(
+                "universe_bits {} outside [8, 1024]",
+                cfg.universe_bits
+            )));
+        }
+        if let DiffSize::Explicit(d) = cfg.diff {
+            if d > 1 << 40 {
+                return Err(SetxError::Config(format!("explicit d {d} implausibly large")));
+            }
+        }
+        if cfg.engine.max_rounds == 0 || cfg.engine.max_rounds > 10_000 {
+            return Err(SetxError::Config(format!(
+                "engine max_rounds {} outside [1, 10000]",
+                cfg.engine.max_rounds
+            )));
+        }
+        if !(cfg.engine.smf_fpr > 0.0 && cfg.engine.smf_fpr <= 1.0) {
+            return Err(SetxError::Config(format!(
+                "engine smf_fpr {} outside (0, 1]",
+                cfg.engine.smf_fpr
+            )));
+        }
+        Ok(Setx { cfg: self.cfg, set: self.set })
+    }
+}
+
+/// A configured SetX endpoint: one local set plus a validated [`SetxConfig`]. Run it over
+/// any [`Transport`]; the peer runs its own `Setx` (same config, its set) over the other
+/// end.
+#[derive(Clone, Debug)]
+pub struct Setx {
+    pub(crate) cfg: SetxConfig,
+    pub(crate) set: Vec<u64>,
+}
+
+impl Setx {
+    /// Start building an endpoint holding `set`.
+    pub fn builder(set: &[u64]) -> SetxBuilder {
+        SetxBuilder {
+            set: set.to_vec(),
+            cfg: SetxConfig {
+                mode: Mode::Auto,
+                diff: DiffSize::Estimated,
+                safety: 1.0,
+                seed: 0xC0FFEE,
+                universe_bits: 64,
+                max_attempts: 3,
+                engine: BidiOptions::default(),
+            },
+        }
+    }
+
+    pub fn config(&self) -> &SetxConfig {
+        &self.cfg
+    }
+
+    pub fn set(&self) -> &[u64] {
+        &self.set
+    }
+
+    /// Run this endpoint over a transport to completion. Blocks on `transport.recv()`;
+    /// returns the unified report, or the first typed error.
+    pub fn run<T: Transport>(&self, transport: &mut T) -> Result<SetxReport, SetxError> {
+        let mut ep = Endpoint::new(&self.cfg, &self.set, transport.is_client());
+        for msg in ep.start() {
+            transport.send(&msg)?;
+        }
+        loop {
+            let Some(msg) = transport.recv()? else {
+                return Err(SetxError::PeerClosed { during: ep.phase_name() });
+            };
+            match ep.on_msg(&msg) {
+                Step::Send(msgs) => {
+                    for m in msgs {
+                        transport.send(&m)?;
+                    }
+                }
+                Step::Continue => {}
+                Step::Finish(msgs, report) => {
+                    for m in msgs {
+                        transport.send(&m)?;
+                    }
+                    return Ok(*report);
+                }
+                Step::Fatal(msgs, err) => {
+                    // Best-effort: let the peer see the final Confirm before we bail.
+                    for m in msgs {
+                        let _ = transport.send(&m);
+                    }
+                    return Err(err);
+                }
+            }
+        }
+    }
+
+    /// Drive this endpoint (as the client/tie-break side) against `peer` in-process,
+    /// deterministically and without threads — the in-memory counterpart of two `run`
+    /// calls over [`transport::mem_pair`], and the per-partition primitive of the
+    /// partitioned driver.
+    pub fn run_pair(&self, peer: &Setx) -> Result<(SetxReport, SetxReport), SetxError> {
+        let ours = self.cfg.fingerprint();
+        let theirs = peer.cfg.fingerprint();
+        if ours != theirs {
+            return Err(SetxError::ConfigMismatch { ours, theirs });
+        }
+        let mut a = Endpoint::new(&self.cfg, &self.set, true);
+        let mut b = Endpoint::new(&peer.cfg, &peer.set, false);
+        endpoint::drive_endpoints(&mut a, &mut b)
+    }
+}
+
+/// The unified outcome of every SetX path: what was computed, how the conversation went,
+/// and where every byte was spent.
+#[derive(Clone, Debug)]
+pub struct SetxReport {
+    /// `set ∩ peer_set`, sorted (each endpoint computes its own copy; they agree).
+    pub intersection: Vec<u64>,
+    /// This endpoint's unique elements `set \ peer_set`, sorted. Empty for the
+    /// unidirectional *sender* (the protocol gives it nothing to learn — its set is the
+    /// intersection).
+    pub local_unique: Vec<u64>,
+    /// Which protocol family the (final, successful) attempt ran.
+    pub kind: ProtocolKind,
+    /// Always true on the `Ok` path; failures surface as [`SetxError::Decode`].
+    pub converged: bool,
+    /// Decode attempts used (1 = first try; > 1 means the escalation ladder fired).
+    pub attempts: u32,
+    /// Payload frames exchanged (sketch + residue phases, all attempts, both directions).
+    pub rounds: usize,
+    /// Full conversation transcript at exact wire sizes — both endpoints of a session
+    /// record identical totals.
+    pub comm: CommLog,
+    /// Whether this endpoint is "Alice" (the client end) in the log's direction labels.
+    pub(crate) local_is_alice: bool,
+}
+
+impl SetxReport {
+    /// Total conversation bytes, both directions — the paper's communication cost.
+    pub fn total_bytes(&self) -> usize {
+        self.comm.total_bytes()
+    }
+
+    pub fn bytes_sent(&self) -> usize {
+        self.direction_bytes(true)
+    }
+
+    pub fn bytes_received(&self) -> usize {
+        self.direction_bytes(false)
+    }
+
+    fn direction_bytes(&self, sent: bool) -> usize {
+        self.comm
+            .entries
+            .iter()
+            .filter(|e| (e.from_alice == self.local_is_alice) == sent)
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    /// Bytes this endpoint sent in one protocol phase.
+    pub fn phase_sent(&self, phase: Phase) -> usize {
+        self.comm.direction_phase_bytes(self.local_is_alice, phase)
+    }
+
+    /// Bytes this endpoint received in one protocol phase.
+    pub fn phase_received(&self, phase: Phase) -> usize {
+        self.comm.direction_phase_bytes(!self.local_is_alice, phase)
+    }
+
+    /// Both directions of one phase.
+    pub fn phase_total(&self, phase: Phase) -> usize {
+        self.comm.bytes_by_phase(phase)
+    }
+
+    /// One-line per-phase breakdown, e.g. for CLI output.
+    pub fn breakdown(&self) -> String {
+        Phase::ALL
+            .iter()
+            .map(|&p| format!("{} {} B", p.name(), self.phase_total(p)))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn builder_validates_config() {
+        let set: Vec<u64> = (0..10).collect();
+        assert!(matches!(
+            Setx::builder(&set).safety(0.0).build(),
+            Err(SetxError::Config(_))
+        ));
+        assert!(matches!(
+            Setx::builder(&set).max_attempts(0).build(),
+            Err(SetxError::Config(_))
+        ));
+        assert!(matches!(
+            Setx::builder(&set).universe_bits(4).build(),
+            Err(SetxError::Config(_))
+        ));
+        assert!(Setx::builder(&set).build().is_ok());
+    }
+
+    #[test]
+    fn fingerprint_separates_configs() {
+        let set: Vec<u64> = (0..10).collect();
+        let base = Setx::builder(&set).build().unwrap().cfg.fingerprint();
+        let seeded = Setx::builder(&set).seed(1).build().unwrap().cfg.fingerprint();
+        let explicit = Setx::builder(&set)
+            .diff_size(DiffSize::Explicit(100))
+            .build()
+            .unwrap()
+            .cfg
+            .fingerprint();
+        let mode = Setx::builder(&set).mode(Mode::Bidi).build().unwrap().cfg.fingerprint();
+        assert_ne!(base, seeded);
+        assert_ne!(base, explicit);
+        assert_ne!(base, mode);
+        // And equality for equal configs (the property the handshake relies on).
+        assert_eq!(base, Setx::builder(&set).build().unwrap().cfg.fingerprint());
+    }
+
+    #[test]
+    fn mismatched_configs_refuse_to_run() {
+        let (a, b) = synth::overlap_pair(500, 10, 10, 1);
+        let alice = Setx::builder(&a).seed(1).build().unwrap();
+        let bob = Setx::builder(&b).seed(2).build().unwrap();
+        assert!(matches!(alice.run_pair(&bob), Err(SetxError::ConfigMismatch { .. })));
+    }
+}

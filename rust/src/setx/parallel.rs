@@ -1,0 +1,247 @@
+//! Partitioned-parallel driver over the facade endpoints (§7.3's scale-out remark,
+//! PBS-style) — the third "transport" of the one front door.
+//!
+//! Hash-partition the universe with a seed derived from the shared protocol seed; each
+//! partition is an independent SetX conversation between two [`Endpoint`]s driven by the
+//! same [`drive_endpoints`] pump the in-memory path uses, scheduled on a **bounded worker
+//! pool** (at most `threads` OS threads race on an atomic partition counter; a live-worker
+//! high-water mark keeps the cap a *tested* invariant).
+//!
+//! Negotiation happens **once, globally** — a single `EstHello` exchange (charged to the
+//! `Handshake` phase of both reports) fixes `d̂` and the per-side split; partitions are
+//! then provisioned with Poisson-padded per-partition estimates, exactly how PBS sizes
+//! its sub-sketches. The aggregate result is the same pair of [`SetxReport`]s every other
+//! path returns, with the per-partition logs merged.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::endpoint::{
+    build_est_hello, drive_endpoints, negotiate, union_estimate, Endpoint, Negotiated,
+};
+use super::{ProtocolKind, Setx, SetxError, SetxReport};
+use crate::hash::hash_u64;
+use crate::metrics::{CommLog, Stats};
+use crate::protocol::session::frame_phase;
+use crate::protocol::wire::Msg;
+
+/// Aggregate outcome of a partitioned run: the two endpoint reports plus pool metadata.
+#[derive(Clone, Debug)]
+pub struct PartitionedReport {
+    /// The client endpoint's aggregated report (intersection, uniques, merged comm log).
+    pub client: SetxReport,
+    /// The server endpoint's aggregated report.
+    pub server: SetxReport,
+    pub partitions: usize,
+    /// High-water mark of concurrently-live partition workers — always ≤ the `threads`
+    /// argument (the regression guard for the bounded pool).
+    pub peak_workers: usize,
+    /// Per-partition total-byte statistics (for the ablation table).
+    pub bytes_stats: Stats,
+}
+
+/// Partition a set by `hash(id) % parts`. `parts == 0` is clamped to a single partition
+/// (degenerate but well-defined: everything lands in partition 0, no `hash % 0` panic).
+pub fn partition(ids: &[u64], parts: usize, seed: u64) -> Vec<Vec<u64>> {
+    let parts = parts.max(1);
+    let mut out = vec![Vec::with_capacity(ids.len() / parts + 1); parts];
+    for &id in ids {
+        out[(hash_u64(id, seed) % parts as u64) as usize].push(id);
+    }
+    out
+}
+
+/// Run one partitioned conversation between `client` and `server` endpoints (both sets in
+/// this process) over `parts` hash partitions on a worker pool of at most `threads` OS
+/// threads (both clamped to ≥ 1; `threads` additionally to `parts`).
+pub fn run_partitioned(
+    client: &Setx,
+    server: &Setx,
+    parts: usize,
+    threads: usize,
+) -> Result<PartitionedReport, SetxError> {
+    let ours = client.cfg.fingerprint();
+    let theirs = server.cfg.fingerprint();
+    if ours != theirs {
+        return Err(SetxError::ConfigMismatch { ours, theirs });
+    }
+    let cfg = &client.cfg;
+    let parts = parts.max(1);
+    let threads = threads.clamp(1, parts);
+
+    // ---- Global negotiation: one EstHello exchange, charged to both transcripts. ----
+    let (msg_c, ests_c) = build_est_hello(cfg, &client.set);
+    let (msg_s, ests_s) = build_est_hello(cfg, &server.set);
+    let Msg::EstHello { set_len: s_len, explicit_d: s_d, strata: s_st, minhash: s_mh, .. } =
+        &msg_s
+    else {
+        unreachable!("build_est_hello always builds an EstHello");
+    };
+    let nego_c = negotiate(
+        cfg,
+        true,
+        client.set.len(),
+        ests_c.as_ref(),
+        *s_len as usize,
+        *s_d,
+        s_st.as_deref(),
+        s_mh.as_deref(),
+    )?;
+    drop(ests_s);
+    let mut comm = CommLog::new();
+    comm.record(true, frame_phase(&msg_c), msg_c.wire_len());
+    comm.record(false, frame_phase(&msg_s), msg_s.wire_len());
+
+    // ---- Partitioning + per-partition provisioning (Poisson-padded, as PBS). ----
+    let part_seed = cfg.seed ^ 0x9a27_11;
+    let c_parts = partition(&client.set, parts, part_seed);
+    let s_parts = partition(&server.set, parts, part_seed);
+    let pad = |d: usize| -> usize {
+        let mu = d as f64 / parts as f64;
+        (mu + 3.0 * mu.sqrt() + 4.0).ceil() as usize
+    };
+    let (dc, ds) = (pad(nego_c.est_local), pad(nego_c.est_peer));
+    // Independent matrices per partition: perturb the shared seed.
+    let cfgs: Vec<super::SetxConfig> = (0..parts)
+        .map(|p| {
+            let mut c = *cfg;
+            c.seed ^= hash_u64(p as u64, 0x9a27_12);
+            c
+        })
+        .collect();
+
+    // ---- Bounded pool: workers race on `next` for partition indices. ----
+    let next = AtomicUsize::new(0);
+    let active = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let results: Vec<Result<(SetxReport, SetxReport), SetxError>> =
+        std::thread::scope(|scope| {
+            let worker = || {
+                let mut local = Vec::new();
+                let mut p = next.fetch_add(1, Ordering::Relaxed);
+                while p < parts {
+                    let live = active.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(live, Ordering::SeqCst);
+                    let (cp, sp) = (&c_parts[p], &s_parts[p]);
+                    let d_hat = (dc + ds).max(1);
+                    let n_union = union_estimate(cp.len(), sp.len(), d_hat).max(64);
+                    let nego_cp = Negotiated {
+                        d_hat,
+                        n_union,
+                        est_local: dc,
+                        est_peer: ds,
+                        ..nego_c
+                    };
+                    let nego_sp = Negotiated {
+                        est_local: ds,
+                        est_peer: dc,
+                        initiator: !nego_cp.initiator,
+                        ..nego_cp
+                    };
+                    let mut ec = Endpoint::with_negotiated(&cfgs[p], cp, true, nego_cp);
+                    let mut es = Endpoint::with_negotiated(&cfgs[p], sp, false, nego_sp);
+                    local.push(drive_endpoints(&mut ec, &mut es));
+                    active.fetch_sub(1, Ordering::SeqCst);
+                    p = next.fetch_add(1, Ordering::Relaxed);
+                }
+                local
+            };
+            let handles: Vec<_> = (0..threads).map(|_| scope.spawn(worker)).collect();
+            handles.into_iter().flat_map(|h| h.join().expect("partition worker")).collect()
+        });
+
+    // ---- Aggregate into the two endpoint reports. ----
+    let mut agg_c = empty_report(comm.clone(), true);
+    let mut agg_s = empty_report(comm, false);
+    let mut bytes_stats = Stats::new();
+    for result in results {
+        let (rc, rs) = result?;
+        bytes_stats.push(rc.total_bytes() as f64);
+        merge_into(&mut agg_c, rc);
+        merge_into(&mut agg_s, rs);
+    }
+    finalize(&mut agg_c);
+    finalize(&mut agg_s);
+    Ok(PartitionedReport {
+        client: agg_c,
+        server: agg_s,
+        partitions: parts,
+        peak_workers: peak.into_inner(),
+        bytes_stats,
+    })
+}
+
+fn empty_report(comm: CommLog, local_is_alice: bool) -> SetxReport {
+    SetxReport {
+        intersection: Vec::new(),
+        local_unique: Vec::new(),
+        kind: ProtocolKind::Bidi,
+        converged: true,
+        attempts: 1,
+        rounds: 0,
+        comm,
+        local_is_alice,
+    }
+}
+
+fn merge_into(agg: &mut SetxReport, part: SetxReport) {
+    agg.intersection.extend(part.intersection);
+    agg.local_unique.extend(part.local_unique);
+    agg.kind = part.kind;
+    agg.converged &= part.converged;
+    agg.attempts = agg.attempts.max(part.attempts);
+    agg.comm.extend(&part.comm);
+}
+
+fn finalize(agg: &mut SetxReport) {
+    agg.intersection.sort_unstable();
+    agg.local_unique.sort_unstable();
+    agg.rounds = agg.comm.payload_frames();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn partition_is_disjoint_cover() {
+        let ids: Vec<u64> = (0..10_000u64).collect();
+        let parts = partition(&ids, 8, 1);
+        assert_eq!(parts.len(), 8);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 10_000);
+        // Roughly balanced.
+        for p in &parts {
+            assert!((1_000..1_550).contains(&p.len()), "part size {}", p.len());
+        }
+    }
+
+    #[test]
+    fn partitioned_facade_is_exact_and_bounded() {
+        let (a, b) = synth::overlap_pair(12_000, 120, 150, 3);
+        let alice = Setx::builder(&a).build().unwrap();
+        let bob = Setx::builder(&b).build().unwrap();
+        let out = run_partitioned(&alice, &bob, 8, 4).unwrap();
+        assert_eq!(out.client.local_unique, synth::difference(&a, &b));
+        assert_eq!(out.server.local_unique, synth::difference(&b, &a));
+        assert_eq!(out.client.intersection, synth::intersect(&a, &b));
+        assert_eq!(out.client.intersection, out.server.intersection);
+        assert_eq!(out.partitions, 8);
+        assert!((1..=4).contains(&out.peak_workers), "cap violated: {}", out.peak_workers);
+        // Mirror accounting holds for the merged logs too.
+        assert_eq!(out.client.bytes_sent(), out.server.bytes_received());
+        assert_eq!(out.client.total_bytes(), out.server.total_bytes());
+    }
+
+    #[test]
+    fn zero_parts_and_threads_clamp() {
+        let (a, b) = synth::overlap_pair(1_000, 20, 20, 8);
+        let alice = Setx::builder(&a).build().unwrap();
+        let bob = Setx::builder(&b).build().unwrap();
+        let out = run_partitioned(&alice, &bob, 0, 0).unwrap();
+        assert_eq!(out.partitions, 1);
+        assert_eq!(out.peak_workers, 1);
+        assert_eq!(out.client.local_unique, synth::difference(&a, &b));
+        assert_eq!(out.server.local_unique, synth::difference(&b, &a));
+    }
+}

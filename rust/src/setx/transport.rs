@@ -1,0 +1,290 @@
+//! The byte-moving half of the facade: the [`Transport`] trait and its two built-in
+//! implementations (in-memory channel pair, TCP socket).
+//!
+//! # The `Transport` contract
+//!
+//! A transport carries whole [`Msg`] frames between exactly two endpoints. Implementors
+//! must provide:
+//!
+//! * **Framing** — `send` delivers one complete frame; `recv` returns one complete frame.
+//!   On a byte stream this means the wire encoding of [`Msg`] (`type:u8 | len:varint |
+//!   body`, see [`crate::protocol::wire`]); reads must validate the advertised body
+//!   length against [`crate::protocol::wire::MAX_FRAME_BYTES`] *before* sizing any buffer
+//!   by it.
+//! * **Ordering** — frames arrive exactly once, in send order, with no interleaving from
+//!   other conversations. One transport value = one conversation.
+//! * **Close semantics** — the endpoint that finishes last simply drops its transport;
+//!   nobody sends a close frame. `recv` must return `Ok(None)` for a peer that
+//!   disconnected cleanly *at a frame boundary* and `Err` for a mid-frame or corrupt
+//!   disconnect. After the protocol reports `Finish`, the driver stops receiving, so a
+//!   late peer teardown is never observed as an error.
+//! * **Role** — `is_client` says which end of the rendezvous this is (connector vs
+//!   acceptor). The protocol uses it only to break ties deterministically (initiator
+//!   election, accounting direction); it carries no privilege.
+//!
+//! Blocking `recv` is assumed; the facade has no internal timeouts — wrap the underlying
+//! socket with OS-level read timeouts if needed.
+
+use super::SetxError;
+use crate::protocol::wire::{self, Msg};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// One end of a two-party frame conversation (see the module docs for the contract).
+pub trait Transport {
+    /// Deliver one frame to the peer.
+    fn send(&mut self, msg: &Msg) -> Result<(), SetxError>;
+    /// Block for the peer's next frame; `Ok(None)` = clean close at a frame boundary.
+    fn recv(&mut self) -> Result<Option<Msg>, SetxError>;
+    /// Which end of the rendezvous this is (deterministic tie-breaks only).
+    fn is_client(&self) -> bool;
+}
+
+/// In-process channel transport. Frames cross through their real wire encoding, so byte
+/// accounting and parser behavior are identical to a socket run; the per-direction
+/// transcript is kept for determinism tests.
+pub struct MemTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    client: bool,
+    pub bytes_sent: usize,
+    pub bytes_received: usize,
+    /// Every frame this end sent, serialized, in order.
+    pub sent_frames: Vec<Vec<u8>>,
+}
+
+/// A connected pair of in-memory transports: `(client end, server end)`.
+pub fn mem_pair() -> (MemTransport, MemTransport) {
+    let (tx_ab, rx_ab) = channel();
+    let (tx_ba, rx_ba) = channel();
+    (
+        MemTransport {
+            tx: tx_ab,
+            rx: rx_ba,
+            client: true,
+            bytes_sent: 0,
+            bytes_received: 0,
+            sent_frames: Vec::new(),
+        },
+        MemTransport {
+            tx: tx_ba,
+            rx: rx_ab,
+            client: false,
+            bytes_sent: 0,
+            bytes_received: 0,
+            sent_frames: Vec::new(),
+        },
+    )
+}
+
+impl Transport for MemTransport {
+    fn send(&mut self, msg: &Msg) -> Result<(), SetxError> {
+        let bytes = msg.to_bytes();
+        self.bytes_sent += bytes.len();
+        self.sent_frames.push(bytes.clone());
+        self.tx
+            .send(bytes)
+            .map_err(|_| SetxError::PeerClosed { during: "in-memory send" })
+    }
+
+    fn recv(&mut self) -> Result<Option<Msg>, SetxError> {
+        let Ok(bytes) = self.rx.recv() else {
+            return Ok(None); // peer dropped its end: clean close
+        };
+        self.bytes_received += bytes.len();
+        let (msg, used) =
+            Msg::from_bytes(&bytes).ok_or(SetxError::MalformedFrame("in-memory frame"))?;
+        if used != bytes.len() {
+            return Err(SetxError::MalformedFrame("in-memory frame trailing bytes"));
+        }
+        Ok(Some(msg))
+    }
+
+    fn is_client(&self) -> bool {
+        self.client
+    }
+}
+
+/// TCP socket transport: length-prefixed frames hardened against adversarial length
+/// fields, with byte counters for wire-accounting cross-checks. The byte counts are
+/// ground truth (what actually crossed the socket); tests assert they equal the
+/// protocol's own [`crate::metrics::CommLog`] totals.
+pub struct TcpTransport {
+    stream: TcpStream,
+    client: bool,
+    pub bytes_sent: usize,
+    pub bytes_received: usize,
+}
+
+impl TcpTransport {
+    /// Connect to a listening peer (this end becomes the client).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<TcpTransport, SetxError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(TcpTransport::from_stream(stream, true))
+    }
+
+    /// Accept one connection from a bound listener (this end becomes the server).
+    pub fn accept(listener: &TcpListener) -> Result<TcpTransport, SetxError> {
+        let (stream, _addr) = listener.accept()?;
+        stream.set_nodelay(true).ok();
+        Ok(TcpTransport::from_stream(stream, false))
+    }
+
+    /// Wrap an already-connected stream. `client` must reflect which side initiated the
+    /// connection (or any out-of-band agreement — the two ends must disagree).
+    pub fn from_stream(stream: TcpStream, client: bool) -> TcpTransport {
+        TcpTransport { stream, client, bytes_sent: 0, bytes_received: 0 }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, msg: &Msg) -> Result<(), SetxError> {
+        let bytes = msg.to_bytes();
+        self.stream.write_all(&bytes)?;
+        self.bytes_sent += bytes.len();
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Option<Msg>, SetxError> {
+        let (msg, bytes_read) = read_frame(&mut self.stream)?;
+        self.bytes_received += bytes_read;
+        Ok(msg)
+    }
+
+    fn is_client(&self) -> bool {
+        self.client
+    }
+}
+
+/// Read exactly one frame from a stream: type byte + varint length + body. Returns
+/// `(Ok(None), 0)`-style on a clean end-of-stream at a frame boundary (the peer tore down
+/// after finishing); anything else — EOF mid-frame, a malformed frame, an adversarial
+/// length field — is an error. The advertised body length is validated against
+/// [`wire::MAX_FRAME_BYTES`] *before* any buffer is sized by it, so a hostile peer cannot
+/// drive a huge allocation with a 10-byte header. The returned count is the exact number
+/// of bytes consumed from the socket.
+pub(crate) fn read_frame(stream: &mut TcpStream) -> Result<(Option<Msg>, usize), SetxError> {
+    let mut byte = [0u8; 1];
+    match stream.read_exact(&mut byte) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok((None, 0)),
+        Err(e) => return Err(SetxError::Io(e)),
+    }
+    let mut frame = vec![byte[0]];
+    // Varint body length, byte by byte.
+    let mut len = 0u64;
+    let mut shift = 0u32;
+    let mut more = true;
+    while more {
+        stream.read_exact(&mut byte)?;
+        frame.push(byte[0]);
+        len |= ((byte[0] & 0x7f) as u64) << shift;
+        more = byte[0] & 0x80 != 0;
+        if more {
+            shift += 7;
+            if shift >= 64 {
+                return Err(SetxError::MalformedFrame("frame length varint overflow"));
+            }
+        }
+    }
+    let len = usize::try_from(len)
+        .map_err(|_| SetxError::MalformedFrame("frame length exceeds address space"))?;
+    if len > wire::MAX_FRAME_BYTES {
+        return Err(SetxError::MalformedFrame("frame length exceeds cap"));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    frame.extend_from_slice(&body);
+    let total = frame.len();
+    let (msg, used) =
+        Msg::from_bytes(&frame).ok_or(SetxError::MalformedFrame("unparseable frame"))?;
+    if used != total {
+        return Err(SetxError::MalformedFrame("frame parser length mismatch"));
+    }
+    Ok((Some(msg), total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::put_varint;
+
+    #[test]
+    fn mem_pair_moves_frames_and_counts_bytes() {
+        let (mut a, mut b) = mem_pair();
+        assert!(a.is_client() && !b.is_client());
+        let msg = Msg::Round {
+            residue: vec![1, 2, 3],
+            smf: None,
+            inquiry: vec![9],
+            answers: vec![true],
+            done: false,
+        };
+        a.send(&msg).unwrap();
+        let got = b.recv().unwrap().unwrap();
+        assert_eq!(got, msg);
+        assert_eq!(a.bytes_sent, msg.wire_len());
+        assert_eq!(b.bytes_received, msg.wire_len());
+        assert_eq!(a.sent_frames.len(), 1);
+        // Dropping one end closes the conversation cleanly.
+        drop(a);
+        assert!(matches!(b.recv(), Ok(None)));
+    }
+
+    #[test]
+    fn tcp_transport_roundtrips_frames() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let join = std::thread::spawn(move || {
+            let mut client = TcpTransport::connect(addr).unwrap();
+            let msg = Msg::Confirm { ok: true, reason: wire::REASON_OK, attempt: 2 };
+            client.send(&msg).unwrap();
+            client
+        });
+        let mut server = TcpTransport::accept(&listener).unwrap();
+        let got = server.recv().unwrap().unwrap();
+        assert_eq!(got, Msg::Confirm { ok: true, reason: wire::REASON_OK, attempt: 2 });
+        assert_eq!(server.bytes_received, got.wire_len());
+        let client = join.join().unwrap();
+        assert!(client.is_client() && !server.is_client());
+        // Clean teardown: the client dropped, so the server sees a frame-boundary close.
+        assert!(matches!(server.recv(), Ok(None)));
+    }
+
+    #[test]
+    fn read_frame_rejects_adversarial_length_before_allocating() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // A Round frame claiming a 2^62-byte body; the socket then stays open, so a
+            // reader that trusted the length would hang allocating/reading forever.
+            let mut frame = vec![3u8];
+            put_varint(&mut frame, 1u64 << 62);
+            s.write_all(&frame).unwrap();
+            s
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        assert!(read_frame(&mut stream).is_err());
+        drop(writer.join().unwrap());
+    }
+
+    #[test]
+    fn read_frame_rejects_truncated_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // Claims 16 body bytes, delivers 3, then closes.
+            let mut frame = vec![3u8];
+            put_varint(&mut frame, 16);
+            frame.extend_from_slice(&[1, 2, 3]);
+            s.write_all(&frame).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        assert!(read_frame(&mut stream).is_err());
+        writer.join().unwrap();
+    }
+}

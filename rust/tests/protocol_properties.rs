@@ -67,8 +67,11 @@ fn prop_uni_cost_beats_setr_bound() {
 
 /// Invariant: the d-estimate can be off by ±30% and the protocol stays exact (the paper
 /// assumes d known via sketch-based estimators, which carry exactly this kind of error).
+/// Failures are *typed* now: an undersized run must surface as a `Decode` error carrying
+/// which layer failed, never a bare `None` or a wrong answer.
 #[test]
 fn prop_robust_to_d_estimate_error() {
+    use commonsense::protocol::uni::UniError;
     for (mult, seed) in [(0.7f64, 11u64), (1.3, 12), (2.0, 13)] {
         let d = 300usize;
         let (a, b) = synth::subset_pair(20_000, d, seed);
@@ -78,14 +81,18 @@ fn prop_robust_to_d_estimate_error() {
         // Underestimates shrink l; the decoder may need the fallback, but must stay exact
         // whenever it reports success.
         match uni::run(&a, &b, &params) {
-            Some(out) => {
-                if out.b_minus_a.len() == d {
+            Ok(out) => {
+                if mult >= 1.0 || out.b_minus_a.len() == d {
                     assert_eq!(out.b_minus_a, synth::difference(&b, &a), "mult={mult}");
-                } else if mult >= 1.0 {
-                    panic!("overprovisioned run must be exact (mult={mult})");
                 }
             }
-            None => assert!(mult < 1.0, "only underestimates may fail"),
+            Err(e) => {
+                assert!(mult < 1.0, "only underestimates may fail (got {e})");
+                assert!(
+                    matches!(e, UniError::Decode(_)),
+                    "failure must be a typed decode error, got {e}"
+                );
+            }
         }
     }
 }

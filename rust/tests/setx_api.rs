@@ -1,0 +1,215 @@
+//! The front-door contract: one builder config drives every transport to the same
+//! answer with the same accounting; failures are typed; transcripts are deterministic;
+//! byte accounting is wire-true.
+
+use commonsense::coordinator::{connect, serve};
+use commonsense::data::synth;
+use commonsense::metrics::Phase;
+use commonsense::setx::transport::{mem_pair, TcpTransport};
+use commonsense::setx::{parallel, DiffSize, Mode, ProtocolKind, Setx, SetxError};
+use std::net::TcpListener;
+
+/// **Acceptance**: the identical builder config (Auto mode, estimated diff size — no
+/// caller-supplied d anywhere) runs over in-memory, TCP, and the partitioned pool, and
+/// all three produce identical intersections; in-memory and TCP match byte-for-byte in
+/// every phase and direction.
+#[test]
+fn one_builder_config_drives_all_three_transports() {
+    let (a, b) = synth::overlap_pair(4_000, 50, 70, 0x3a);
+    let build = |set: &[u64]| {
+        Setx::builder(set)
+            .mode(Mode::Auto)
+            .diff_size(DiffSize::Estimated)
+            .seed(0xFACADE)
+            .build()
+            .unwrap()
+    };
+    let alice = build(&a);
+    let bob = build(&b);
+
+    // 1. In-memory.
+    let (mem_a, mem_b) = alice.run_pair(&bob).unwrap();
+    assert!(mem_a.converged && mem_b.converged);
+    assert_eq!(mem_a.local_unique, synth::difference(&a, &b));
+    assert_eq!(mem_b.local_unique, synth::difference(&b, &a));
+    assert_eq!(mem_a.intersection, synth::intersect(&a, &b));
+    assert_eq!(mem_a.intersection, mem_b.intersection);
+
+    // 2. TCP.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let bob2 = bob.clone();
+    let server = std::thread::spawn(move || serve(&listener, &bob2).unwrap());
+    let tcp_a = connect(addr, &alice).unwrap();
+    let tcp_b = server.join().unwrap();
+    assert_eq!(tcp_a.intersection, mem_a.intersection);
+    assert_eq!(tcp_b.local_unique, mem_b.local_unique);
+    // Byte-identical per phase and direction: the transport cannot change the protocol.
+    for phase in Phase::ALL {
+        assert_eq!(tcp_a.phase_sent(phase), mem_a.phase_sent(phase), "{}", phase.name());
+        assert_eq!(tcp_a.phase_received(phase), mem_a.phase_received(phase), "{}", phase.name());
+        assert_eq!(tcp_b.phase_sent(phase), mem_b.phase_sent(phase), "{}", phase.name());
+    }
+    assert_eq!(tcp_a.total_bytes(), mem_a.total_bytes());
+
+    // 3. Partitioned pool (same builder config, its own partition-level accounting).
+    let par = parallel::run_partitioned(&alice, &bob, 8, 4).unwrap();
+    assert_eq!(par.client.intersection, mem_a.intersection);
+    assert_eq!(par.client.local_unique, mem_a.local_unique);
+    assert_eq!(par.server.local_unique, mem_b.local_unique);
+    assert!((1..=4).contains(&par.peak_workers));
+    // Mirror + partition accounting stays coherent: directions conserve, phases sum.
+    assert_eq!(par.client.bytes_sent(), par.server.bytes_received());
+    assert_eq!(par.client.bytes_received(), par.server.bytes_sent());
+    let phase_sum: usize = Phase::ALL.iter().map(|&p| par.client.phase_total(p)).sum();
+    assert_eq!(phase_sum, par.client.total_bytes());
+    // The global estimator handshake is charged (exactly once) there too.
+    assert!(par.client.phase_sent(Phase::Handshake) > 0);
+    assert!(mem_a.phase_sent(Phase::Handshake) > 0);
+}
+
+/// **Satellite (wire-accounting truth)**: bytes observed on the socket — counted by the
+/// transport, below the protocol — equal the endpoint's own `CommLog` totals, on both
+/// peers, across workload shapes.
+#[test]
+fn tcp_socket_bytes_equal_commlog_totals() {
+    for (au, bu, seed) in [(30usize, 40usize, 1u64), (0, 50, 2), (80, 20, 3)] {
+        let (a, b) = synth::overlap_pair(2_500, au, bu, seed);
+        let alice = Setx::builder(&a).build().unwrap();
+        let bob = Setx::builder(&b).build().unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let bob2 = bob.clone();
+        let server = std::thread::spawn(move || {
+            let mut transport = TcpTransport::accept(&listener).unwrap();
+            let report = bob2.run(&mut transport).unwrap();
+            (report, transport.bytes_sent, transport.bytes_received)
+        });
+        let mut transport = TcpTransport::connect(addr).unwrap();
+        let ra = alice.run(&mut transport).unwrap();
+        let (rb, b_sent, b_recv) = server.join().unwrap();
+        // Socket ground truth == protocol self-accounting, per endpoint and direction.
+        assert_eq!(transport.bytes_sent, ra.bytes_sent(), "client sent (seed {seed})");
+        assert_eq!(transport.bytes_received, ra.bytes_received(), "client recv (seed {seed})");
+        assert_eq!(b_sent, rb.bytes_sent(), "server sent (seed {seed})");
+        assert_eq!(b_recv, rb.bytes_received(), "server recv (seed {seed})");
+        // Conservation across the wire.
+        assert_eq!(transport.bytes_sent, b_recv, "seed {seed}");
+        assert_eq!(transport.bytes_received, b_sent, "seed {seed}");
+        assert_eq!(ra.total_bytes(), rb.total_bytes(), "seed {seed}");
+    }
+}
+
+/// **Satellite (determinism)**: identical sets, configs, and seeds produce byte-identical
+/// transcripts, frame for frame, in both directions.
+#[test]
+fn identical_seeds_produce_byte_identical_transcripts() {
+    fn transcripts() -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+        let (a, b) = synth::overlap_pair(3_000, 40, 50, 9);
+        let alice = Setx::builder(&a).seed(0xD15C).build().unwrap();
+        let bob = Setx::builder(&b).seed(0xD15C).build().unwrap();
+        let (mut ta, mut tb) = mem_pair();
+        let server = std::thread::spawn(move || {
+            bob.run(&mut tb).unwrap();
+            tb.sent_frames
+        });
+        alice.run(&mut ta).unwrap();
+        let from_bob = server.join().unwrap();
+        (ta.sent_frames, from_bob)
+    }
+    let (a1, b1) = transcripts();
+    let (a2, b2) = transcripts();
+    assert!(!a1.is_empty() && !b1.is_empty());
+    assert_eq!(a1, a2, "client transcript must be byte-identical across runs");
+    assert_eq!(b1, b2, "server transcript must be byte-identical across runs");
+}
+
+/// `DiffSize::Estimated` end to end: nobody supplies d, the handshake pays a few KB of
+/// estimators (visible in the phase breakdown), and the answer is exact.
+#[test]
+fn estimated_diff_size_needs_no_caller_d() {
+    let (a, b) = synth::overlap_pair(10_000, 120, 180, 0xe57);
+    let alice = Setx::builder(&a).build().unwrap();
+    let bob = Setx::builder(&b).build().unwrap();
+    let (ra, rb) = alice.run_pair(&bob).unwrap();
+    assert_eq!(ra.local_unique, synth::difference(&a, &b));
+    assert_eq!(rb.local_unique, synth::difference(&b, &a));
+    assert!(ra.phase_total(Phase::Handshake) > 0, "estimators ride the handshake");
+    assert!(ra.phase_total(Phase::Confirm) > 0, "attempts end with verdicts");
+    let phase_sum: usize = Phase::ALL.iter().map(|&p| ra.phase_total(p)).sum();
+    assert_eq!(phase_sum, ra.total_bytes());
+    // Both endpoints record the identical conversation.
+    assert_eq!(ra.total_bytes(), rb.total_bytes());
+    assert_eq!(ra.bytes_sent(), rb.bytes_received());
+}
+
+/// The escalation ladder: an endpoint configured with an under-calibrated safety factor
+/// fails its first attempt(s) and recovers *within the same connection*, reporting how
+/// many attempts it took — instead of failing opaquely.
+#[test]
+fn escalation_ladder_recovers_undersized_first_attempt() {
+    let (a, b) = synth::overlap_pair(6_000, 150, 150, 0x1ad);
+    let build = |set: &[u64]| {
+        Setx::builder(set)
+            .mode(Mode::Bidi)
+            .safety(0.45)
+            .max_attempts(4)
+            .seed(3)
+            .build()
+            .unwrap()
+    };
+    let (ra, rb) = build(&a).run_pair(&build(&b)).unwrap();
+    assert!(ra.attempts >= 2, "safety 0.45 must fail attempt 0 (attempts = {})", ra.attempts);
+    assert_eq!(ra.attempts, rb.attempts, "both sides count attempts identically");
+    assert_eq!(ra.local_unique, synth::difference(&a, &b));
+    assert_eq!(rb.local_unique, synth::difference(&b, &a));
+}
+
+/// The unidirectional ladder: a starved one-shot decode reports failure via `Confirm`,
+/// the sender escalates on the same connection, and the protocol stays unidirectional.
+#[test]
+fn uni_ladder_escalates_within_connection() {
+    let (a, b) = synth::subset_pair(8_000, 200, 0x11);
+    let build = |set: &[u64]| {
+        Setx::builder(set).mode(Mode::Uni).safety(0.5).max_attempts(4).build().unwrap()
+    };
+    let (ra, rb) = build(&a).run_pair(&build(&b)).unwrap();
+    assert!(rb.attempts >= 2, "safety 0.5 must fail attempt 0 (attempts = {})", rb.attempts);
+    assert_eq!(rb.kind, ProtocolKind::Uni);
+    assert_eq!(rb.local_unique, synth::difference(&b, &a));
+    assert!(ra.local_unique.is_empty());
+}
+
+/// A forced unidirectional run on a genuinely two-sided difference cannot succeed: the
+/// ladder exhausts and the caller gets the typed decode failure with the attempt count.
+#[test]
+fn forced_uni_on_two_sided_difference_fails_typed() {
+    let (a, b) = synth::overlap_pair(3_000, 60, 60, 0x2b);
+    let build = |set: &[u64]| {
+        Setx::builder(set).mode(Mode::Uni).max_attempts(2).build().unwrap()
+    };
+    match build(&a).run_pair(&build(&b)) {
+        Err(SetxError::Decode { attempts, .. }) => assert_eq!(attempts, 2),
+        Err(other) => panic!("expected Decode, got {other}"),
+        Ok((ra, _)) => panic!("two-sided uni must not succeed ({} uniques)", ra.local_unique.len()),
+    }
+}
+
+/// `Mode::Auto` detects a subset workload from the directional Strata signal and runs
+/// the cheaper one-message protocol — with no hints from the caller.
+#[test]
+fn auto_mode_detects_subset_and_runs_uni() {
+    let (a, b) = synth::subset_pair(20_000, 250, 0xab);
+    let alice = Setx::builder(&a).build().unwrap();
+    let bob = Setx::builder(&b).build().unwrap();
+    let (ra, rb) = alice.run_pair(&bob).unwrap();
+    assert_eq!(rb.kind, ProtocolKind::Uni, "subset shape must route to unidirectional");
+    assert_eq!(rb.local_unique, synth::difference(&b, &a));
+    assert_eq!(ra.intersection, rb.intersection);
+    // And a two-sided workload routes to the ping-pong.
+    let (x, y) = synth::overlap_pair(10_000, 100, 100, 0xac);
+    let ex = Setx::builder(&x).build().unwrap();
+    let ey = Setx::builder(&y).build().unwrap();
+    let (rx, _) = ex.run_pair(&ey).unwrap();
+    assert_eq!(rx.kind, ProtocolKind::Bidi);
+}

@@ -1,13 +1,14 @@
 //! Cross-layer integration: TCP sessions on realistic workloads, the PJRT runtime against
 //! the rust sparse path, streaming apps over the full pipeline, partitioned scale-out.
 
-use commonsense::coordinator::{connect_initiator, parallel, serve_responder};
+use commonsense::coordinator::{connect, parallel, serve};
 use commonsense::data::ethereum::{diff_stats, EthSim};
 use commonsense::data::synth;
 use commonsense::matrix::CsMatrix;
+use commonsense::metrics::Phase;
 use commonsense::protocol::bidi::BidiOptions;
-use commonsense::protocol::CsParams;
 use commonsense::runtime::Runtime;
+use commonsense::setx::Setx;
 use commonsense::sketch::Sketch;
 use std::net::TcpListener;
 
@@ -19,21 +20,22 @@ fn tcp_ethereum_session_end_to_end() {
     let a = sim.snapshot_ids();
     let st = diff_stats(&b, &a);
 
-    let params = CsParams::tuned_bidi(a.len().max(b.len()), st.s_minus_a, st.a_minus_s);
+    // No ground truth supplied: the builder defaults estimate d in the handshake.
+    let alice = Setx::builder(&a).universe_bits(256).build().unwrap();
+    let bob = Setx::builder(&b).universe_bits(256).build().unwrap();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
-    let a2 = a.clone();
-    let alice = std::thread::spawn(move || {
-        serve_responder(&listener, &a2, BidiOptions::default()).unwrap()
-    });
-    let bob = connect_initiator(addr, &b, &params, BidiOptions::default()).unwrap();
-    let alice = alice.join().unwrap();
+    let alice2 = alice.clone();
+    let server = std::thread::spawn(move || serve(&listener, &alice2).unwrap());
+    let bob_report = connect(addr, &bob).unwrap();
+    let alice_report = server.join().unwrap();
 
-    assert!(bob.converged && alice.converged);
-    assert_eq!(bob.unique, synth::difference(&b, &a));
-    assert_eq!(alice.unique, synth::difference(&a, &b));
+    assert!(bob_report.converged && alice_report.converged);
+    assert_eq!(bob_report.local_unique, synth::difference(&b, &a));
+    assert_eq!(alice_report.local_unique, synth::difference(&a, &b));
+    assert_eq!(bob_report.local_unique.len(), st.s_minus_a);
     // The headline at integration scale: on-wire bytes ≪ shipping either snapshot.
-    let wire = bob.bytes_sent + alice.bytes_sent;
+    let wire = bob_report.total_bytes();
     assert!(wire < 8 * b.len() / 4, "wire bytes {wire}");
 }
 
@@ -106,26 +108,37 @@ fn streaming_digest_composes_with_protocol_params() {
 
 #[test]
 fn tcp_and_in_memory_frontends_account_identical_bytes() {
-    // One sans-io Session engine behind every transport ⇒ the transport cannot change
-    // the conversation: a TCP run and an in-memory run of the same workload must
-    // exchange byte-identical traffic and reach identical results.
+    // One endpoint engine behind every transport ⇒ the transport cannot change the
+    // conversation: a TCP run and an in-memory run of the same workload must exchange
+    // byte-identical traffic — phase by phase, direction by direction — and reach
+    // identical results.
     let (a, b) = synth::overlap_pair(3_000, 40, 60, 21);
-    let params = CsParams::tuned_bidi(3_100, 40, 60);
-    let mem = commonsense::protocol::bidi::run(&a, &b, &params, BidiOptions::default());
-    assert!(mem.converged);
+    let alice = Setx::builder(&a).build().unwrap();
+    let bob = Setx::builder(&b).build().unwrap();
+    let (mem_a, mem_b) = alice.run_pair(&bob).unwrap();
+    assert!(mem_a.converged && mem_b.converged);
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
-    let b2 = b.clone();
-    let bob = std::thread::spawn(move || {
-        serve_responder(&listener, &b2, BidiOptions::default()).unwrap()
-    });
-    let alice = connect_initiator(addr, &a, &params, BidiOptions::default()).unwrap();
-    let bob = bob.join().unwrap();
-    assert!(alice.converged && bob.converged);
-    assert_eq!(alice.unique, mem.a_minus_b);
-    assert_eq!(bob.unique, mem.b_minus_a);
-    assert_eq!(alice.bytes_sent + bob.bytes_sent, mem.comm.total_bytes());
+    let bob2 = bob.clone();
+    let server = std::thread::spawn(move || serve(&listener, &bob2).unwrap());
+    let tcp_a = connect(addr, &alice).unwrap();
+    let tcp_b = server.join().unwrap();
+    assert!(tcp_a.converged && tcp_b.converged);
+    assert_eq!(tcp_a.local_unique, mem_a.local_unique);
+    assert_eq!(tcp_b.local_unique, mem_b.local_unique);
+    assert_eq!(tcp_a.intersection, mem_a.intersection);
+    for phase in Phase::ALL {
+        assert_eq!(tcp_a.phase_sent(phase), mem_a.phase_sent(phase), "{}", phase.name());
+        assert_eq!(
+            tcp_a.phase_received(phase),
+            mem_a.phase_received(phase),
+            "{}",
+            phase.name()
+        );
+    }
+    assert_eq!(tcp_a.total_bytes(), mem_a.total_bytes());
+    assert_eq!(tcp_b.total_bytes(), mem_b.total_bytes());
 }
 
 #[test]
@@ -148,17 +161,16 @@ fn concurrent_tcp_sessions_are_independent() {
     for seed in [1u64, 2] {
         joins.push(std::thread::spawn(move || {
             let (a, b) = mk(seed);
-            let params = CsParams::tuned_bidi(3_090, 30, 60);
+            let alice = Setx::builder(&a).build().unwrap();
+            let bob = Setx::builder(&b).build().unwrap();
             let listener = TcpListener::bind("127.0.0.1:0").unwrap();
             let addr = listener.local_addr().unwrap();
-            let b2 = b.clone();
-            let srv = std::thread::spawn(move || {
-                serve_responder(&listener, &b2, BidiOptions::default()).unwrap()
-            });
-            let cli = connect_initiator(addr, &a, &params, BidiOptions::default()).unwrap();
+            let bob2 = bob.clone();
+            let srv = std::thread::spawn(move || serve(&listener, &bob2).unwrap());
+            let cli = connect(addr, &alice).unwrap();
             let srv = srv.join().unwrap();
-            assert_eq!(cli.unique, synth::difference(&a, &b), "seed {seed}");
-            assert_eq!(srv.unique, synth::difference(&b, &a), "seed {seed}");
+            assert_eq!(cli.local_unique, synth::difference(&a, &b), "seed {seed}");
+            assert_eq!(srv.local_unique, synth::difference(&b, &a), "seed {seed}");
         }));
     }
     for j in joins {
