@@ -3,20 +3,27 @@
 //! of times slower than D.Digest") while PinSketch's BCH decode is orders slower at large d.
 //! Also covers the SSMP (L1) and BMP ablations and the PJRT dense-block decode path.
 //!
-//! Run: `cargo bench --offline --bench decode_throughput`
+//! Run: `cargo bench --offline --bench decode_throughput [-- --json] [-- --smoke]`
+//!
+//! `--json` appends every result to the root `BENCH_decode.json` trajectory. The
+//! headline pair there is `mp_build n=100000 d=1000 threads={1,4}`: the serial baseline
+//! vs the parallel decoder construction, so the speedup ratio is tracked run over run.
 
 use commonsense::baselines::iblt::{Iblt, IbltParams};
-use commonsense::baselines::pinsketch::PinSketch;
 use commonsense::data::synth;
 use commonsense::decoder::{DecoderConfig, MpDecoder, Side};
 use commonsense::matrix::CsMatrix;
-use commonsense::metrics::Bench;
+use commonsense::metrics::{self, Bench, BenchProfile, BenchResult};
 use commonsense::protocol::CsParams;
 use commonsense::sketch::Sketch;
 
 fn main() {
+    let profile = BenchProfile::from_env_args();
+    let mut results: Vec<BenchResult> = Vec::new();
     let n = 100_000usize;
-    for d in [100usize, 1_000, 5_000] {
+    // The smoke profile keeps the headline d=1000 point so CI tracks it on every push.
+    let ds: &[usize] = if profile.smoke { &[1_000] } else { &[100, 1_000, 5_000] };
+    for &d in ds {
         let params = CsParams::tuned_uni(n, d);
         let mat = params.matrix();
         let (a, b) = synth::subset_pair(n - d, d, 7);
@@ -24,32 +31,47 @@ fn main() {
         let residue: Vec<i32> = Sketch::encode(mat, &want).counts;
 
         // Decoder construction (CSR + reverse lookup) is a one-time per-session cost;
-        // bench it separately from the pursuit loop.
-        Bench::new(&format!("mp_build n={n} d={d}"))
-            .with_times(200, 1200)
-            .run(|| MpDecoder::new(&mat, &b, Side::Positive).num_candidates());
+        // bench it separately from the pursuit loop — serial baseline first, then the
+        // parallel build, so the JSON trajectory records both sides of the ratio.
+        for threads in [1usize, 4] {
+            let config = DecoderConfig { build_threads: threads, ..DecoderConfig::default() };
+            let (w, me) = profile.times(200, 1200);
+            results.push(
+                Bench::new(&format!("mp_build n={n} d={d} threads={threads}"))
+                    .with_times(w, me)
+                    .run(|| {
+                        MpDecoder::with_config(&mat, &b, Side::Positive, config).num_candidates()
+                    }),
+            );
+        }
 
         let mut dec = MpDecoder::new(&mat, &b, Side::Positive);
         dec.set_config(DecoderConfig::commonsense());
-        Bench::new(&format!("mp_decode(L2) n={n} d={d}"))
-            .with_times(200, 1500)
-            .run(|| {
-                dec.reset_signal();
-                dec.load_residue(&residue);
-                let stats = dec.run();
-                assert!(stats.converged);
-                stats.iterations
-            });
+        let (w, me) = profile.times(200, 1500);
+        results.push(
+            Bench::new(&format!("mp_decode(L2) n={n} d={d}"))
+                .with_times(w, me)
+                .run(|| {
+                    dec.reset_signal();
+                    dec.load_residue(&residue);
+                    let stats = dec.run();
+                    assert!(stats.converged);
+                    stats.iterations
+                }),
+        );
 
         let mut ssmp = MpDecoder::new(&mat, &b, Side::Positive);
         ssmp.set_config(DecoderConfig::ssmp());
-        Bench::new(&format!("ssmp_decode(L1) n={n} d={d}"))
-            .with_times(200, 1500)
-            .run(|| {
-                ssmp.reset_signal();
-                ssmp.load_residue(&residue);
-                ssmp.run().iterations
-            });
+        let (w, me) = profile.times(200, 1500);
+        results.push(
+            Bench::new(&format!("ssmp_decode(L1) n={n} d={d}"))
+                .with_times(w, me)
+                .run(|| {
+                    ssmp.reset_signal();
+                    ssmp.load_residue(&residue);
+                    ssmp.run().iterations
+                }),
+        );
 
         // IBLT peel at the same d (the D.Digest decode step).
         let iparams = IbltParams::paper_synthetic();
@@ -58,24 +80,32 @@ fn main() {
         let mut ib = Iblt::for_difference(d, iparams);
         ib.insert_all(&b);
         let diff = ia.sub(&ib);
-        Bench::new(&format!("iblt_peel d={d}"))
-            .with_times(200, 1200)
-            .run(|| {
-                let (p, ng) = diff.clone().peel().expect("peel");
-                p.len() + ng.len()
-            });
+        let (w, me) = profile.times(200, 1200);
+        results.push(
+            Bench::new(&format!("iblt_peel d={d}"))
+                .with_times(w, me)
+                .run(|| {
+                    let (p, ng) = diff.clone().peel().expect("peel");
+                    p.len() + ng.len()
+                }),
+        );
     }
 
     // PinSketch (BCH) decode: O(d²) BM + Chien — the reason the paper only *estimates*
     // ECC costs. Position space 2^14 per partition, d errors.
-    for d in [50usize, 200, 800] {
+    let pinsketch_ds: &[usize] = if profile.smoke { &[50] } else { &[50, 200, 800] };
+    for &d in pinsketch_ds {
+        use commonsense::baselines::pinsketch::PinSketch;
         let ps = PinSketch::new(14, d + 8);
         let positions: Vec<u32> = (0..d as u32).map(|i| i * 17 + 3).collect();
         let mine = ps.sketch(positions.iter().copied());
         let theirs = ps.sketch(std::iter::empty());
-        Bench::new(&format!("pinsketch_decode d={d}"))
-            .with_times(200, 1200)
-            .run(|| ps.diff(&mine, &theirs).expect("decode").len());
+        let (w, me) = profile.times(200, 1200);
+        results.push(
+            Bench::new(&format!("pinsketch_decode d={d}"))
+                .with_times(w, me)
+                .run(|| ps.diff(&mine, &theirs).expect("decode").len()),
+        );
     }
 
     // PJRT dense-block decode (the L1/L2 artifact), if built.
@@ -91,16 +121,29 @@ fn main() {
             .map(|&c| c as f32)
             .collect();
         let x0 = vec![0.0f32; shapes.nb];
-        Bench::new(&format!(
-            "pjrt_decode_block {}x{} steps={}",
-            shapes.l, shapes.nb, shapes.steps
-        ))
-        .with_times(300, 1500)
-        .run(|| {
-            let (r, _x) = rt.decode_block(&block, &r0, &x0, 5.0).unwrap();
-            r.len()
-        });
+        let (w, me) = profile.times(300, 1500);
+        results.push(
+            Bench::new(&format!(
+                "pjrt_decode_block {}x{} steps={}",
+                shapes.l, shapes.nb, shapes.steps
+            ))
+            .with_times(w, me)
+            .run(|| {
+                let (r, _x) = rt.decode_block(&block, &r0, &x0, 5.0).unwrap();
+                r.len()
+            }),
+        );
     } else {
         println!("(pjrt decode bench skipped: run `make artifacts`)");
+    }
+
+    if profile.json {
+        metrics::append_bench_json(
+            metrics::BENCH_DECODE_JSON,
+            &results,
+            profile.fingerprint("decode_throughput"),
+        )
+        .expect("append bench trajectory");
+        println!("(trajectory: {} records appended to {})", results.len(), metrics::BENCH_DECODE_JSON);
     }
 }

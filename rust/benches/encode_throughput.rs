@@ -2,19 +2,22 @@
 //! O(m) per streaming update, O(m·|S|) one-shot encode, plus the rANS and truncation
 //! codec costs and the PJRT dense-block encode path.
 //!
-//! Run: `cargo bench --offline --bench encode_throughput`
+//! Run: `cargo bench --offline --bench encode_throughput [-- --json] [-- --smoke]`
+//! (`--json` appends to the root `BENCH_decode.json` trajectory.)
 
 use commonsense::data::synth;
 use commonsense::entropy::{
     compress_residue, compress_sketch, decompress_residue, recover_sketch, SketchCodecParams,
 };
 use commonsense::matrix::CsMatrix;
-use commonsense::metrics::Bench;
+use commonsense::metrics::{self, Bench, BenchProfile, BenchResult};
 use commonsense::protocol::CsParams;
 use commonsense::sketch::Sketch;
 use commonsense::streaming::StreamDigest;
 
 fn main() {
+    let profile = BenchProfile::from_env_args();
+    let mut results: Vec<BenchResult> = Vec::new();
     let n = 200_000usize;
     let d = 2_000usize;
     let params = CsParams::tuned_uni(n, d);
@@ -22,17 +25,20 @@ fn main() {
     let (_, b) = synth::subset_pair(n - d, d, 5);
 
     // One-shot encode: O(m)/element (Theorem 2's encoding complexity).
+    let (w, me) = profile.times(300, 2000);
     let r = Bench::new(&format!("sketch_encode |S|={n} m={}", params.m))
-        .with_times(300, 2000)
+        .with_times(w, me)
         .run(|| Sketch::encode(mat, &b).counts.len());
     let per_elem = r.mean.as_nanos() as f64 / n as f64;
     println!("  → {per_elem:.1} ns/element");
+    results.push(r);
 
     // Streaming update: the §4 data-plane operation.
     let mut digest = StreamDigest::new(mat);
     let mut i = 0usize;
+    let (w, me) = profile.times(300, 1500);
     let r = Bench::new("stream_update (add+remove)")
-        .with_times(300, 1500)
+        .with_times(w, me)
         .run(|| {
             let id = b[i % b.len()];
             digest.add(id);
@@ -40,6 +46,7 @@ fn main() {
             i += 1;
         });
     println!("  → {:.1} ns per add+remove pair", r.mean.as_nanos());
+    results.push(r);
 
     // Residue codec.
     let sk = Sketch::encode(mat, &synth::difference(&b, &b[..n - d]));
@@ -51,12 +58,18 @@ fn main() {
         bytes.len(),
         8.0 * bytes.len() as f64 / residue.len() as f64
     );
-    Bench::new(&format!("rans_compress l={}", residue.len()))
-        .with_times(200, 1200)
-        .run(|| compress_residue(&residue).len());
-    Bench::new(&format!("rans_decompress l={}", residue.len()))
-        .with_times(200, 1200)
-        .run(|| decompress_residue(&bytes, residue.len()).unwrap().len());
+    let (w, me) = profile.times(200, 1200);
+    results.push(
+        Bench::new(&format!("rans_compress l={}", residue.len()))
+            .with_times(w, me)
+            .run(|| compress_residue(&residue).len()),
+    );
+    let (w, me) = profile.times(200, 1200);
+    results.push(
+        Bench::new(&format!("rans_decompress l={}", residue.len()))
+            .with_times(w, me)
+            .run(|| decompress_residue(&bytes, residue.len()).unwrap().len()),
+    );
 
     // Truncation codec (Alice's sketch → wire and back).
     let full = Sketch::encode(mat, &b);
@@ -67,27 +80,49 @@ fn main() {
         4 * full.counts.len(),
         msg.size_bytes()
     );
-    Bench::new("truncate_compress")
-        .with_times(200, 1200)
-        .run(|| compress_sketch(&full.counts, &codec).size_bytes());
+    let (w, me) = profile.times(200, 1200);
+    results.push(
+        Bench::new("truncate_compress")
+            .with_times(w, me)
+            .run(|| compress_sketch(&full.counts, &codec).size_bytes()),
+    );
     let y = full.counts.clone();
-    Bench::new("truncate_recover")
-        .with_times(200, 1200)
-        .run(|| recover_sketch(&msg, &y, &codec).unwrap().0.len());
+    let (w, me) = profile.times(200, 1200);
+    results.push(
+        Bench::new("truncate_recover")
+            .with_times(w, me)
+            .run(|| recover_sketch(&msg, &y, &codec).unwrap().0.len()),
+    );
 
     // PJRT dense-block encode (L1 Pallas kernel through XLA), if built.
     if let Ok(rt) = commonsense::runtime::Runtime::load_default() {
         let shapes = rt.shapes;
         let pmat = CsMatrix::new(shapes.l as u32, 5, 9);
         let ids: Vec<u64> = (0..shapes.nb as u64).collect();
+        let (w, me) = profile.times(300, 1500);
         let r = Bench::new(&format!("pjrt_encode_block {}x{}", shapes.l, shapes.nb))
-            .with_times(300, 1500)
+            .with_times(w, me)
             .run(|| rt.encode_set(pmat, &ids).unwrap().len());
         println!(
             "  → {:.1} ns/element (incl. block materialization)",
             r.mean.as_nanos() as f64 / shapes.nb as f64
         );
+        results.push(r);
     } else {
         println!("(pjrt encode bench skipped: run `make artifacts`)");
+    }
+
+    if profile.json {
+        metrics::append_bench_json(
+            metrics::BENCH_DECODE_JSON,
+            &results,
+            profile.fingerprint("encode_throughput"),
+        )
+        .expect("append bench trajectory");
+        println!(
+            "(trajectory: {} records appended to {})",
+            results.len(),
+            metrics::BENCH_DECODE_JSON
+        );
     }
 }

@@ -1,11 +1,14 @@
 //! Bench F2a — regenerates Figure 2a (unidirectional comm-cost sweep: CommonSense vs
 //! Graphene vs bounds) and times the end-to-end unidirectional pipeline.
 //!
-//! Run: `cargo bench --offline --bench fig2a_unidirectional [-- --scale N --instances K]`
+//! Run: `cargo bench --offline --bench fig2a_unidirectional
+//!       [-- --scale N --instances K] [-- --json] [-- --smoke]`
+//! (`--json` appends the timing results to the root `BENCH_protocol.json` trajectory;
+//! `--smoke` is the CI profile: small scale, one instance per point.)
 
 use commonsense::data::synth;
 use commonsense::experiments;
-use commonsense::metrics::Bench;
+use commonsense::metrics::{self, Bench, BenchProfile, BenchResult};
 use commonsense::protocol::{uni, CsParams};
 
 fn flag(name: &str, default: usize) -> usize {
@@ -18,15 +21,16 @@ fn flag(name: &str, default: usize) -> usize {
 }
 
 fn main() {
-    let scale = flag("--scale", 20_000);
-    let instances = flag("--instances", 3);
+    let profile = BenchProfile::from_env_args();
+    let scale = flag("--scale", if profile.smoke { 4_000 } else { 20_000 });
+    let instances = flag("--instances", if profile.smoke { 1 } else { 3 });
+    let fractions: &[f64] = if profile.smoke {
+        &[0.01, 0.1, 1.0]
+    } else {
+        &[0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5]
+    };
     println!("== Figure 2a regeneration (scale {scale}, {instances} instances/point) ==");
-    let rows = experiments::fig2a(
-        scale,
-        &[0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5],
-        instances,
-        true,
-    );
+    let rows = experiments::fig2a(scale, fractions, instances, true);
     // Paper shape checks (who wins, where the crossover goes).
     let first = &rows[0];
     println!(
@@ -36,11 +40,30 @@ fn main() {
     );
 
     println!("\n== end-to-end unidirectional timing ==");
-    for d in [200usize, 1_000] {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let ds: &[usize] = if profile.smoke { &[200] } else { &[200, 1_000] };
+    for &d in ds {
         let (a, b) = synth::subset_pair(scale, d, 0xbe);
         let params = CsParams::tuned_uni(b.len(), d);
-        Bench::new(&format!("uni_run n={scale} d={d}"))
-            .with_times(200, 1500)
-            .run(|| uni::run(&a, &b, &params).unwrap().comm.total_bytes());
+        let (w, me) = profile.times(200, 1500);
+        results.push(
+            Bench::new(&format!("uni_run n={scale} d={d}"))
+                .with_times(w, me)
+                .run(|| uni::run(&a, &b, &params).unwrap().comm.total_bytes()),
+        );
+    }
+
+    if profile.json {
+        metrics::append_bench_json(
+            metrics::BENCH_PROTOCOL_JSON,
+            &results,
+            profile.fingerprint("fig2a_unidirectional"),
+        )
+        .expect("append bench trajectory");
+        println!(
+            "(trajectory: {} records appended to {})",
+            results.len(),
+            metrics::BENCH_PROTOCOL_JSON
+        );
     }
 }

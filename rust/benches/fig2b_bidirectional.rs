@@ -1,11 +1,14 @@
 //! Bench F2b — regenerates Figure 2b (bidirectional comm-cost sweep: CommonSense vs IBLT
 //! vs ECC bound) and times the ping-pong pipeline, plus the O10 rounds observation.
 //!
-//! Run: `cargo bench --offline --bench fig2b_bidirectional [-- --scale N --instances K]`
+//! Run: `cargo bench --offline --bench fig2b_bidirectional
+//!       [-- --scale N --instances K] [-- --json] [-- --smoke]`
+//! (`--json` appends the timing results to the root `BENCH_protocol.json` trajectory;
+//! `--smoke` is the CI profile: small scale, one instance per point.)
 
 use commonsense::data::synth;
 use commonsense::experiments;
-use commonsense::metrics::Bench;
+use commonsense::metrics::{self, Bench, BenchProfile, BenchResult};
 use commonsense::protocol::bidi::{self, BidiOptions};
 use commonsense::protocol::CsParams;
 
@@ -19,10 +22,16 @@ fn flag(name: &str, default: usize) -> usize {
 }
 
 fn main() {
-    let scale = flag("--scale", 20_000);
-    let instances = flag("--instances", 3);
+    let profile = BenchProfile::from_env_args();
+    let scale = flag("--scale", if profile.smoke { 4_000 } else { 20_000 });
+    let instances = flag("--instances", if profile.smoke { 1 } else { 3 });
     let a_unique = scale / 100;
-    let bu: Vec<usize> = [0.0001f64, 0.0003, 0.001, 0.003, 0.01, 0.1, 0.3]
+    let fractions: &[f64] = if profile.smoke {
+        &[0.001, 0.01, 0.1]
+    } else {
+        &[0.0001, 0.0003, 0.001, 0.003, 0.01, 0.1, 0.3]
+    };
+    let bu: Vec<usize> = fractions
         .iter()
         .map(|f| ((scale as f64 * f) as usize).max(2))
         .collect();
@@ -39,15 +48,34 @@ fn main() {
     );
 
     println!("\n== end-to-end bidirectional timing ==");
-    for (au, bu) in [(100usize, 200usize), (500, 500)] {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let pairs: &[(usize, usize)] = if profile.smoke { &[(100, 200)] } else { &[(100, 200), (500, 500)] };
+    for &(au, bu) in pairs {
         let (a, b) = synth::overlap_pair(scale, au, bu, 0xbf);
         let params = CsParams::tuned_bidi(scale + au + bu, au, bu);
-        Bench::new(&format!("bidi_run n={scale} au={au} bu={bu}"))
-            .with_times(200, 1500)
-            .run(|| {
-                let out = bidi::run(&a, &b, &params, BidiOptions::default());
-                assert!(out.converged);
-                out.comm.total_bytes()
-            });
+        let (w, me) = profile.times(200, 1500);
+        results.push(
+            Bench::new(&format!("bidi_run n={scale} au={au} bu={bu}"))
+                .with_times(w, me)
+                .run(|| {
+                    let out = bidi::run(&a, &b, &params, BidiOptions::default());
+                    assert!(out.converged);
+                    out.comm.total_bytes()
+                }),
+        );
+    }
+
+    if profile.json {
+        metrics::append_bench_json(
+            metrics::BENCH_PROTOCOL_JSON,
+            &results,
+            profile.fingerprint("fig2b_bidirectional"),
+        )
+        .expect("append bench trajectory");
+        println!(
+            "(trajectory: {} records appended to {})",
+            results.len(),
+            metrics::BENCH_PROTOCOL_JSON
+        );
     }
 }

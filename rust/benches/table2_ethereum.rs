@@ -1,12 +1,15 @@
 //! Bench T2 — regenerates Tables 1 & 2 (Ethereum-sim SetX: CommonSense vs IBLT) and times
 //! the full Ethereum-workload session including the partitioned parallel variant (§7.3).
 //!
-//! Run: `cargo bench --offline --bench table2_ethereum [-- --accounts N]`
+//! Run: `cargo bench --offline --bench table2_ethereum
+//!       [-- --accounts N] [-- --json] [-- --smoke]`
+//! (`--json` appends the timing results to the root `BENCH_protocol.json` trajectory;
+//! `--smoke` is the CI profile: a small account population.)
 
 use commonsense::coordinator::parallel;
 use commonsense::data::ethereum::{diff_stats, EthSim};
 use commonsense::experiments;
-use commonsense::metrics::Bench;
+use commonsense::metrics::{self, Bench, BenchProfile, BenchResult};
 use commonsense::protocol::bidi::{self, BidiOptions};
 use commonsense::protocol::CsParams;
 
@@ -20,7 +23,8 @@ fn flag(name: &str, default: usize) -> usize {
 }
 
 fn main() {
-    let accounts = flag("--accounts", 150_000);
+    let profile = BenchProfile::from_env_args();
+    let accounts = flag("--accounts", if profile.smoke { 30_000 } else { 150_000 });
     println!("== Tables 1+2 regeneration (Ethereum-sim, {accounts} accounts) ==");
     let (_t1, t2) = experiments::ethereum(accounts, true);
     println!(
@@ -32,32 +36,53 @@ fn main() {
     );
 
     println!("\n== session timing (1-day staleness pair) ==");
+    let mut results: Vec<BenchResult> = Vec::new();
     let mut sim = EthSim::genesis(accounts / 3, 0xbeac);
     let b = sim.snapshot_ids();
     sim.advance_day();
     let a = sim.snapshot_ids();
     let st = diff_stats(&b, &a);
     let params = CsParams::tuned_bidi(a.len().max(b.len()), st.s_minus_a, st.a_minus_s);
-    Bench::new(&format!("eth_bidi n={} d={}", a.len(), st.sym_diff))
-        .with_times(300, 2000)
-        .run(|| {
-            let out = bidi::run(&b, &a, &params, BidiOptions::default());
-            assert!(out.converged);
-            out.comm.total_bytes()
-        });
-    Bench::new("eth_parallel_8x")
-        .with_times(300, 2000)
-        .run(|| {
-            let out = parallel::setx(
-                &a,
-                &b,
-                st.a_minus_s,
-                st.s_minus_a,
-                8,
-                8,
-                BidiOptions::default(),
-            );
-            assert!(out.converged);
-            out.total_bytes
-        });
+    let (w, me) = profile.times(300, 2000);
+    results.push(
+        Bench::new(&format!("eth_bidi n={} d={}", a.len(), st.sym_diff))
+            .with_times(w, me)
+            .run(|| {
+                let out = bidi::run(&b, &a, &params, BidiOptions::default());
+                assert!(out.converged);
+                out.comm.total_bytes()
+            }),
+    );
+    let (w, me) = profile.times(300, 2000);
+    results.push(
+        Bench::new("eth_parallel_8x")
+            .with_times(w, me)
+            .run(|| {
+                let out = parallel::setx(
+                    &a,
+                    &b,
+                    st.a_minus_s,
+                    st.s_minus_a,
+                    8,
+                    8,
+                    BidiOptions::default(),
+                );
+                assert!(out.converged);
+                out.total_bytes
+            }),
+    );
+
+    if profile.json {
+        metrics::append_bench_json(
+            metrics::BENCH_PROTOCOL_JSON,
+            &results,
+            profile.fingerprint("table2_ethereum"),
+        )
+        .expect("append bench trajectory");
+        println!(
+            "(trajectory: {} records appended to {})",
+            results.len(),
+            metrics::BENCH_PROTOCOL_JSON
+        );
+    }
 }

@@ -1,8 +1,18 @@
 //! Decoder internals: CSR column cache, reverse lookup, lazy priority queue, pursuit loop.
+//!
+//! Construction (the dominant per-session cost: column sampling + CSR + reverse lookup
+//! over all n candidates) is parallelized across a bounded worker pool when
+//! [`DecoderConfig::build_threads`] allows it; the parallel path is **bit-identical** to
+//! the serial one (property-tested) because chunks are contiguous candidate ranges merged
+//! in order and the reverse table is filled per disjoint row range in candidate order —
+//! exactly the order the serial counting sort produces.
 
 use super::{DecoderConfig, Pursuit};
+use crate::hash::{hash_u64, IdIndex};
 use crate::matrix::ColumnOracle;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Which side of the protocol this decoder runs on. The canonical residue orientation is
 /// `r = M(1_{B\A} − 1_{B̂\A}) − M(1_{A\B} − 1_{Â\B})` (Fact 12): Bob's signal appears with a
@@ -50,6 +60,197 @@ impl Csr {
     }
 }
 
+/// Below this candidate count, construction always runs serially: the work is too small
+/// to amortize thread spawn + merge overhead.
+const PAR_BUILD_MIN_CANDIDATES: usize = 2048;
+
+/// Resolve [`DecoderConfig::build_threads`] into a worker count for this build.
+fn resolve_build_threads(requested: usize, n: usize) -> usize {
+    if n < PAR_BUILD_MIN_CANDIDATES {
+        return 1;
+    }
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    t.clamp(1, 64)
+}
+
+/// Serial column CSR: sample every candidate's column in order.
+fn build_columns_serial<C: ColumnOracle>(oracle: &C, candidates: &[u64]) -> (Vec<u32>, Vec<u32>) {
+    let m = oracle.m() as usize;
+    let n = candidates.len();
+    let mut buf = vec![0u32; m.max(1)];
+    let mut col_offsets = Vec::with_capacity(n + 1);
+    let mut col_items = Vec::with_capacity(n * m);
+    col_offsets.push(0u32);
+    for &id in candidates {
+        for &r in oracle.column_into(id, &mut buf) {
+            col_items.push(r);
+        }
+        col_offsets.push(col_items.len() as u32);
+    }
+    (col_offsets, col_items)
+}
+
+/// One worker's output for a contiguous candidate range: per-column lengths plus the
+/// concatenated row indices, in candidate order.
+#[derive(Clone)]
+struct ColumnChunk {
+    lens: Vec<u32>,
+    items: Vec<u32>,
+}
+
+/// Parallel column CSR: a bounded pool of `threads` workers races on an atomic chunk
+/// counter (the same pattern as `setx/parallel.rs`); every chunk is a contiguous
+/// candidate range, so concatenating chunk outputs in chunk order reproduces the serial
+/// layout exactly.
+fn build_columns_parallel<C: ColumnOracle + Sync>(
+    oracle: &C,
+    candidates: &[u64],
+    threads: usize,
+) -> (Vec<u32>, Vec<u32>) {
+    let n = candidates.len();
+    let m = oracle.m() as usize;
+    // Oversplit for load balance (column sampling cost is uniform, but the OS isn't).
+    let chunk_len = n.div_ceil((threads * 8).min(n));
+    let num_chunks = n.div_ceil(chunk_len);
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<ColumnChunk>>> = Mutex::new(vec![None; num_chunks]);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut buf = vec![0u32; m.max(1)];
+                loop {
+                    let c = next.fetch_add(1, Ordering::Relaxed);
+                    if c >= num_chunks {
+                        break;
+                    }
+                    let lo = c * chunk_len;
+                    let hi = ((c + 1) * chunk_len).min(n);
+                    let mut lens = Vec::with_capacity(hi - lo);
+                    let mut items = Vec::with_capacity((hi - lo) * m);
+                    for &id in &candidates[lo..hi] {
+                        let rows = oracle.column_into(id, &mut buf);
+                        items.extend_from_slice(rows);
+                        lens.push(rows.len() as u32);
+                    }
+                    out.lock().expect("column chunk slot")[c] = Some(ColumnChunk { lens, items });
+                }
+            });
+        }
+    });
+    // In-order merge (the cheap, serial part): prefix-sum the lengths, memcpy the items.
+    let mut col_offsets = Vec::with_capacity(n + 1);
+    let mut col_items = Vec::with_capacity(n * m);
+    col_offsets.push(0u32);
+    let mut total = 0u32;
+    for slot in out.into_inner().expect("column chunk slots") {
+        let chunk = slot.expect("every chunk index was claimed by a worker");
+        for len in chunk.lens {
+            total += len;
+            col_offsets.push(total);
+        }
+        col_items.extend_from_slice(&chunk.items);
+    }
+    (col_offsets, col_items)
+}
+
+/// Row-load histogram prefix-summed into reverse-CSR offsets (`len l + 1`).
+fn rev_offsets_from_columns(l: u32, col_items: &[u32]) -> Vec<u32> {
+    let mut row_load = vec![0u32; l as usize + 1];
+    for &r in col_items {
+        row_load[r as usize + 1] += 1;
+    }
+    for i in 1..row_load.len() {
+        row_load[i] += row_load[i - 1];
+    }
+    row_load
+}
+
+/// Serial reverse CSR via counting sort (row → candidate indices, ascending).
+fn build_rev_serial(l: u32, col_offsets: &[u32], col_items: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let rev_offsets = rev_offsets_from_columns(l, col_items);
+    let mut cursor = rev_offsets.clone();
+    let mut rev_items = vec![0u32; col_items.len()];
+    let n = col_offsets.len() - 1;
+    for j in 0..n {
+        let start = col_offsets[j] as usize;
+        let end = col_offsets[j + 1] as usize;
+        for &r in &col_items[start..end] {
+            rev_items[cursor[r as usize] as usize] = j as u32;
+            cursor[r as usize] += 1;
+        }
+    }
+    (rev_offsets, rev_items)
+}
+
+/// Parallel reverse CSR: the row space is cut into `threads` contiguous ranges of
+/// roughly equal load; each worker owns the disjoint `rev_items` slice covering its rows
+/// and scans the column CSR in candidate order, so per-row candidate lists come out in
+/// exactly the ascending-candidate order of the serial counting sort. Workers re-read the
+/// whole column CSR (an O(threads·nnz) sequential read), which is far cheaper than the
+/// scattered writes it lets them split.
+fn build_rev_parallel(
+    l: u32,
+    col_offsets: &[u32],
+    col_items: &[u32],
+    threads: usize,
+) -> (Vec<u32>, Vec<u32>) {
+    let lus = l as usize;
+    let rev_offsets = rev_offsets_from_columns(l, col_items);
+    let total = col_items.len();
+    let mut rev_items = vec![0u32; total];
+    // Balanced cut points over rows: the k-th cut is the first row whose offset prefix
+    // reaches k/threads of the total load (clamped monotone so ranges stay well-formed).
+    let mut cuts = Vec::with_capacity(threads + 1);
+    cuts.push(0usize);
+    for k in 1..threads {
+        let target = (total as u64 * k as u64 / threads as u64) as u32;
+        let row = rev_offsets.partition_point(|&o| o < target);
+        let prev = *cuts.last().expect("cuts is seeded with 0");
+        cuts.push(row.clamp(prev, lus));
+    }
+    cuts.push(lus);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [u32] = &mut rev_items;
+        let mut consumed = 0usize;
+        for w in 0..threads {
+            let (r0, r1) = (cuts[w], cuts[w + 1]);
+            let base = rev_offsets[r0] as usize;
+            let end = rev_offsets[r1] as usize;
+            debug_assert_eq!(base, consumed);
+            let (mine, tail) = rest.split_at_mut(end - consumed);
+            rest = tail;
+            consumed = end;
+            let rev_offsets = &rev_offsets;
+            scope.spawn(move || {
+                if r0 == r1 || mine.is_empty() {
+                    return;
+                }
+                // Cursors rebased to this worker's slice.
+                let mut cursor: Vec<u32> =
+                    rev_offsets[r0..r1].iter().map(|&o| o - base as u32).collect();
+                let n = col_offsets.len() - 1;
+                for j in 0..n {
+                    let start = col_offsets[j] as usize;
+                    let stop = col_offsets[j + 1] as usize;
+                    for &r in &col_items[start..stop] {
+                        let r = r as usize;
+                        if r >= r0 && r < r1 {
+                            let c = &mut cursor[r - r0];
+                            mine[*c as usize] = j as u32;
+                            *c += 1;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    (rev_offsets, rev_items)
+}
+
 #[derive(PartialEq, Eq)]
 struct HeapEntry {
     gain: i32,
@@ -70,14 +271,24 @@ impl PartialOrd for HeapEntry {
 
 /// The matching-pursuit decoder over a fixed candidate set.
 ///
-/// Construction caches every candidate's column (CSR) and builds the row→candidates reverse
-/// lookup table of Appendix B; afterwards the decoder never consults the matrix again, and
-/// each pursuit costs `O(m · avg_row_load · log n)` as analyzed in Theorem 14.
+/// Construction caches every candidate's column (CSR), builds the row→candidates reverse
+/// lookup table of Appendix B, and indexes candidate ids in an open-addressing table
+/// ([`IdIndex`]) so per-id operations (`force`, `set_banned_ids`, §5.2 collision
+/// resolution) are O(1); afterwards the decoder never consults the matrix again, and each
+/// pursuit costs `O(m · avg_row_load · log n)` as analyzed in Theorem 14. Construction
+/// itself is parallelized per [`DecoderConfig::build_threads`].
 pub struct MpDecoder {
     /// Number of rows `l`.
     l: u32,
+    /// Column degree `m` of the matrix this decoder was built against (kept for the
+    /// exact-dimension check of the reuse cache).
+    m: u32,
     /// Candidate ids (signal coordinates this side may decode; Theorem 9 restricts to its own set).
     ids: Vec<u64>,
+    /// id → candidate slot (O(1) lookups for `force` & friends).
+    index: IdIndex,
+    /// Reuse-cache discriminator: hash of (matrix fingerprint, candidates, side).
+    key: u64,
     /// Candidate columns, CSR (j → rows).
     cols: Csr,
     /// Reverse lookup, CSR (row → candidate indices).
@@ -103,45 +314,44 @@ pub struct MpDecoder {
 }
 
 impl MpDecoder {
-    /// Build a decoder for `candidates` (deduplicated ids) against matrix `oracle`.
-    pub fn new<C: ColumnOracle>(oracle: &C, candidates: &[u64], side: Side) -> Self {
+    /// Build a decoder for `candidates` (deduplicated ids) against matrix `oracle` with
+    /// the default config (auto-parallel construction).
+    pub fn new<C: ColumnOracle + Sync>(oracle: &C, candidates: &[u64], side: Side) -> Self {
+        Self::with_config(oracle, candidates, side, DecoderConfig::default())
+    }
+
+    /// Build with an explicit config. [`DecoderConfig::build_threads`] governs the
+    /// construction pool (it has no effect when set later via [`Self::set_config`]); the
+    /// parallel build is bit-identical to the serial one — see [`Self::structure_digest`]
+    /// and the property tests.
+    pub fn with_config<C: ColumnOracle + Sync>(
+        oracle: &C,
+        candidates: &[u64],
+        side: Side,
+        config: DecoderConfig,
+    ) -> Self {
         let l = oracle.l();
-        let m = oracle.m() as usize;
         let n = candidates.len();
-        let mut buf = vec![0u32; m.max(1)];
-
-        // Column CSR + row loads in one pass.
-        let mut col_offsets = Vec::with_capacity(n + 1);
-        let mut col_items = Vec::with_capacity(n * m);
-        let mut row_load = vec![0u32; l as usize + 1];
-        col_offsets.push(0u32);
-        for &id in candidates {
-            for &r in oracle.column_into(id, &mut buf) {
-                col_items.push(r);
-                row_load[r as usize + 1] += 1;
-            }
-            col_offsets.push(col_items.len() as u32);
-        }
-
-        // Reverse CSR via counting sort.
-        for i in 1..row_load.len() {
-            row_load[i] += row_load[i - 1];
-        }
-        let rev_offsets = row_load.clone();
-        let mut cursor = row_load;
-        let mut rev_items = vec![0u32; col_items.len()];
-        for j in 0..n {
-            let start = col_offsets[j] as usize;
-            let end = col_offsets[j + 1] as usize;
-            for &r in &col_items[start..end] {
-                rev_items[cursor[r as usize] as usize] = j as u32;
-                cursor[r as usize] += 1;
-            }
-        }
+        let threads = resolve_build_threads(config.build_threads, n);
+        let (col_offsets, col_items) = if threads > 1 {
+            build_columns_parallel(oracle, candidates, threads)
+        } else {
+            build_columns_serial(oracle, candidates)
+        };
+        let (rev_offsets, rev_items) = if threads > 1 {
+            build_rev_parallel(l, &col_offsets, &col_items, threads)
+        } else {
+            build_rev_serial(l, &col_offsets, &col_items)
+        };
+        let index = IdIndex::build(candidates);
+        let key = Self::cache_key_for(oracle, candidates, side);
 
         MpDecoder {
             l,
+            m: oracle.m(),
             ids: candidates.to_vec(),
+            index,
+            key,
             cols: Csr { offsets: col_offsets, items: col_items },
             rev: Csr { offsets: rev_offsets, items: rev_items },
             x: vec![false; n],
@@ -150,7 +360,7 @@ impl MpDecoder {
             res: vec![0; l as usize],
             l2_sq: 0,
             side,
-            config: DecoderConfig::default(),
+            config,
             heap: BinaryHeap::new(),
             estimate_count: 0,
             seen: vec![0; n],
@@ -159,6 +369,56 @@ impl MpDecoder {
         }
     }
 
+    /// The reuse-cache key a decoder built from these inputs will carry — equal keys mean
+    /// a cached decoder is interchangeable with a fresh build (same matrix, same
+    /// candidate sequence, same side).
+    pub fn cache_key_for<C: ColumnOracle + ?Sized>(
+        oracle: &C,
+        candidates: &[u64],
+        side: Side,
+    ) -> u64 {
+        let mut h = oracle.structure_fingerprint();
+        h = hash_u64(h ^ candidates.len() as u64, 0xdec0_de00);
+        for &id in candidates {
+            h = hash_u64(h ^ id, 0xdec0_de01);
+        }
+        let side_tag = match side {
+            Side::Positive => 1,
+            Side::Negative => 2,
+        };
+        hash_u64(h ^ side_tag, 0xdec0_de02)
+    }
+
+    /// This decoder's reuse-cache key (see [`Self::cache_key_for`]).
+    pub fn cache_key(&self) -> u64 {
+        self.key
+    }
+
+    /// Dimensions `(l, m)` of the matrix this decoder was built against. The reuse cache
+    /// checks these for **exact equality** alongside the 64-bit key: with the dimensions
+    /// pinned, the seed → matrix-fingerprint chain is a composition of bijections, so an
+    /// adversarial `Hello` cannot forge a colliding key with different geometry (a plain
+    /// invertible-mixer hash alone would be forgeable).
+    pub fn matrix_dims(&self) -> (u32, u32) {
+        (self.l, self.m)
+    }
+
+    /// Order-sensitive digest of the constructed CSR structures (column cache + reverse
+    /// lookup). Two decoders with equal digests hold byte-identical tables — the
+    /// observable behind the parallel-equals-serial construction property tests.
+    pub fn structure_digest(&self) -> u64 {
+        let mut h = 0x0c5a_d165u64;
+        for part in [&self.cols.offsets, &self.cols.items, &self.rev.offsets, &self.rev.items] {
+            h = hash_u64(h ^ part.len() as u64, 0xdec0_de10);
+            for &v in part.iter() {
+                h = hash_u64(h ^ v as u64, 0xdec0_de11);
+            }
+        }
+        h
+    }
+
+    /// Update the pursuit config. `build_threads` is construction-time only and ignored
+    /// here.
     pub fn set_config(&mut self, config: DecoderConfig) {
         self.config = config;
     }
@@ -172,7 +432,9 @@ impl MpDecoder {
     }
 
     /// Mark candidates banned from automatic pursuit (SMF collision avoidance). The predicate
-    /// sees candidate ids. Passing `|_| false` clears all bans.
+    /// sees candidate ids. Passing `|_| false` clears all bans. O(n) by nature (the
+    /// predicate must be consulted for every candidate — e.g. a Bloom-filter membership
+    /// test); for an explicit id list use [`Self::set_banned_ids`], which is O(1) per id.
     pub fn set_banned(&mut self, test: impl Fn(u64) -> bool) {
         for (j, &id) in self.ids.iter().enumerate() {
             self.banned[j] = test(id);
@@ -180,6 +442,30 @@ impl MpDecoder {
         // Newly-banned candidates die lazily at pop time (their stored gain no longer
         // matches); newly-unbanned ones must be (re)enqueued.
         self.rebuild_heap();
+    }
+
+    /// Ban (or unban) exactly the listed ids, leaving every other candidate's ban state
+    /// untouched. O(1) per id: newly-banned entries die lazily in the queue at pop time,
+    /// newly-unbanned ones are re-enqueued if currently profitable — no full heap
+    /// rebuild. Ids outside the candidate set are ignored. Returns how many candidates
+    /// changed state.
+    pub fn set_banned_ids(&mut self, ids: &[u64], banned: bool) -> usize {
+        let mut changed = 0usize;
+        for &id in ids {
+            let Some(j) = self.candidate_index(id) else { continue };
+            if self.banned[j] == banned {
+                continue;
+            }
+            self.banned[j] = banned;
+            changed += 1;
+            if !banned {
+                let g = self.gain(j);
+                if g > 0 {
+                    self.heap.push(HeapEntry { gain: g, j: j as u32 });
+                }
+            }
+        }
+        changed
     }
 
     /// Load a residue given in *canonical* orientation; recomputes dots and rebuilds the
@@ -428,10 +714,26 @@ impl MpDecoder {
         }
     }
 
+    /// Slot index of candidate `id`, if it is in this decoder's candidate set. O(1)
+    /// expected (open-addressing lookup).
+    #[inline]
+    pub fn candidate_index(&self, id: u64) -> Option<usize> {
+        self.index.get(id).map(|j| j as usize)
+    }
+
+    /// [`Self::candidate_index`] plus the number of hash-table slots probed — lets tests
+    /// assert the O(1)-per-id property deterministically instead of timing it.
+    pub fn candidate_index_probed(&self, id: u64) -> (Option<usize>, usize) {
+        let (hit, probes) = self.index.get_probed(id);
+        (hit.map(|j| j as usize), probes)
+    }
+
     /// Force-set or force-unset a candidate regardless of gain or ban (used by the
     /// collision-resolution step of §5.2 and by tests). No-op if already in that state.
+    /// O(1) lookup + O(m · avg_row_load) flip — it no longer scans the candidate vector,
+    /// so resolving k collisions costs O(k), not O(n·k).
     pub fn force(&mut self, id: u64, set: bool) -> bool {
-        if let Some(j) = self.ids.iter().position(|&x| x == id) {
+        if let Some(j) = self.candidate_index(id) {
             if self.x[j] != set {
                 self.flip(j);
                 return true;
@@ -490,13 +792,17 @@ impl MpDecoder {
         self.rebuild_heap();
     }
 
-    /// Clear the signal estimate (x := 0) without touching the loaded residue state.
-    /// Callers then `load_residue` to start a fresh decode on the same candidate set —
-    /// the pattern benches and multi-session reuse rely on (construction is the expensive
-    /// part: CSR + reverse lookup).
+    /// Clear all per-decode state — signal estimate (x := 0), SMF bans, and the queue —
+    /// without touching the constructed CSR structures. Callers then `load_residue`
+    /// (which recomputes residue, dots, and the queue) to start a fresh decode on the
+    /// same candidate set; the result is bit-identical to a freshly built decoder
+    /// (property-tested). This is the reuse primitive behind [`super::DecoderCache`]:
+    /// construction (CSR + reverse lookup) is the expensive part, resetting is O(n).
     pub fn reset_signal(&mut self) {
         self.x.iter_mut().for_each(|b| *b = false);
+        self.banned.iter_mut().for_each(|b| *b = false);
         self.estimate_count = 0;
+        self.heap.clear();
     }
 
     /// Escape hatch for pairwise local minima: when two candidates' columns overlap in
@@ -638,6 +944,193 @@ mod tests {
         assert!(dec.force(500, false));
         assert_eq!(dec.residue_l2_sq(), before);
         assert!(!dec.force(500, false)); // already unset → no-op
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_to_serial_random_shapes() {
+        // Property: for random (l, m, n, threads) the parallel construction produces the
+        // exact CSR bytes of the serial one (chunk-ordered merge + per-row-range fill
+        // preserve the counting-sort order by design).
+        use crate::hash::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0xc5_1d);
+        for case in 0..10 {
+            let l = 64 + rng.gen_range(4000) as u32;
+            let m = 1 + rng.gen_range(8) as u32; // ≤ 8 ≤ l
+            let n = 1 + rng.gen_range(30_000) as usize;
+            let threads = 2 + rng.gen_range(7) as usize; // 2..=8
+            let seed = rng.next_u64();
+            let mat = CsMatrix::new(l, m, seed);
+            let candidates: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let serial = MpDecoder::with_config(
+                &mat,
+                &candidates,
+                Side::Positive,
+                DecoderConfig { build_threads: 1, ..DecoderConfig::default() },
+            );
+            let parallel = MpDecoder::with_config(
+                &mat,
+                &candidates,
+                Side::Positive,
+                DecoderConfig { build_threads: threads, ..DecoderConfig::default() },
+            );
+            assert_eq!(
+                serial.structure_digest(),
+                parallel.structure_digest(),
+                "case {case}: l={l} m={m} n={n} threads={threads} seed={seed:#x}"
+            );
+            assert_eq!(serial.cache_key(), parallel.cache_key());
+        }
+        // One deliberately large case well past the serial-build cutoff.
+        let mat = CsMatrix::new(6000, 7, 0xfeed);
+        let candidates: Vec<u64> = (0..50_000u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)).collect();
+        let serial = MpDecoder::with_config(
+            &mat,
+            &candidates,
+            Side::Positive,
+            DecoderConfig { build_threads: 1, ..DecoderConfig::default() },
+        );
+        let parallel = MpDecoder::with_config(
+            &mat,
+            &candidates,
+            Side::Positive,
+            DecoderConfig { build_threads: 4, ..DecoderConfig::default() },
+        );
+        assert_eq!(serial.structure_digest(), parallel.structure_digest());
+    }
+
+    #[test]
+    fn reset_signal_reuse_decodes_identically_to_fresh() {
+        // Property: decode residue A, reset, decode residue B — the second decode must be
+        // decision-for-decision identical to a brand-new decoder decoding B.
+        for seed in 0..5u64 {
+            let mat = CsMatrix::new(1600, 7, seed);
+            let candidates: Vec<u64> = (0..15_000u64).map(|i| i * 31 + seed).collect();
+            let planted_a: Vec<u64> = candidates.iter().copied().step_by(151).take(80).collect();
+            let planted_b: Vec<u64> = candidates.iter().copied().skip(7).step_by(173).take(90).collect();
+            let res_a = Sketch::encode(mat, &planted_a).counts;
+            let res_b = Sketch::encode(mat, &planted_b).counts;
+
+            let mut reused = MpDecoder::new(&mat, &candidates, Side::Positive);
+            reused.set_config(DecoderConfig::commonsense());
+            reused.load_residue(&res_a);
+            // Leave mid-decode debris behind on purpose: bans + a partial run.
+            reused.set_banned(|id| id % 5 == 0);
+            reused.run();
+            reused.reset_signal();
+            reused.load_residue(&res_b);
+            let stats_reused = reused.run();
+
+            let mut fresh = MpDecoder::new(&mat, &candidates, Side::Positive);
+            fresh.set_config(DecoderConfig::commonsense());
+            fresh.load_residue(&res_b);
+            let stats_fresh = fresh.run();
+
+            assert_eq!(stats_reused.converged, stats_fresh.converged, "seed {seed}");
+            assert_eq!(stats_reused.iterations, stats_fresh.iterations, "seed {seed}");
+            assert_eq!(stats_reused.sets, stats_fresh.sets, "seed {seed}");
+            assert_eq!(stats_reused.unsets, stats_fresh.unsets, "seed {seed}");
+            let (mut got_r, mut got_f) = (reused.estimate(), fresh.estimate());
+            got_r.sort_unstable();
+            got_f.sort_unstable();
+            assert_eq!(got_r, got_f, "seed {seed}");
+            assert_eq!(reused.export_residue(), fresh.export_residue(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn decoder_cache_reuses_on_match_and_rebuilds_on_mismatch() {
+        use super::super::DecoderCache;
+        let mat = CsMatrix::new(1200, 5, 9);
+        let candidates: Vec<u64> = (0..10_000u64).collect();
+        let planted: Vec<u64> = (0..40u64).map(|i| i * 211 + 5).collect();
+        let residue = Sketch::encode(mat, &planted).counts;
+
+        let mut cache = DecoderCache::new();
+        let mut first = cache.checkout(&mat, &candidates, Side::Positive, DecoderConfig::commonsense());
+        let key = first.cache_key();
+        first.load_residue(&residue);
+        assert!(first.run().converged);
+        cache.store(first);
+        assert!(cache.is_loaded());
+
+        // Hit: same (matrix, candidates, side) → same construction, clean slate.
+        let mut again = cache.checkout(&mat, &candidates, Side::Positive, DecoderConfig::commonsense());
+        assert_eq!(again.cache_key(), key);
+        assert_eq!(again.estimate_len(), 0, "reused decoder must start clean");
+        again.load_residue(&residue);
+        assert!(again.run().converged);
+        let mut got = again.estimate();
+        got.sort_unstable();
+        assert_eq!(got, planted);
+        cache.store(again);
+
+        // Miss: a redrawn matrix (the escalation ladder's seed perturbation) must rebuild.
+        let other = CsMatrix::new(1200, 5, 10);
+        let rebuilt = cache.checkout(&other, &candidates, Side::Positive, DecoderConfig::commonsense());
+        assert_ne!(rebuilt.cache_key(), key);
+    }
+
+    #[test]
+    fn force_lookup_is_constant_probe_on_100k_candidates() {
+        // §5.2 regression: collision resolution does one `force` per inquiry/answer. The
+        // id→index table must answer each lookup in O(1) expected probes — the old
+        // `ids.iter().position(..)` scan averaged n/2 = 50_000 comparisons per call,
+        // making a k-inquiry round O(n·k). Probe counts are deterministic, so this
+        // asserts sub-linearity without wall-clock flakiness.
+        let mat = CsMatrix::new(2048, 5, 77);
+        let candidates: Vec<u64> =
+            (0..100_000u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)).collect();
+        let mut dec = MpDecoder::new(&mat, &candidates, Side::Positive);
+        let mut total_probes = 0usize;
+        for &id in &candidates {
+            let (hit, probes) = dec.candidate_index_probed(id);
+            assert!(hit.is_some());
+            total_probes += probes;
+        }
+        assert!(
+            total_probes < 4 * candidates.len(),
+            "avg probes {:.2} — lookup degenerated toward a scan",
+            total_probes as f64 / candidates.len() as f64
+        );
+        // Misses are O(1) too (ids from the same injective map, outside the built range).
+        for i in 100_000..100_016u64 {
+            let (hit, probes) = dec.candidate_index_probed(i.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            assert!(hit.is_none());
+            assert!(probes < 64, "miss probes {probes}");
+        }
+        // And force itself round-trips through the table.
+        let sk = Sketch::encode(mat, &[candidates[17], candidates[93]]);
+        dec.load_residue(&sk.counts);
+        let before = dec.residue_l2_sq();
+        assert!(dec.force(candidates[50_000], true));
+        assert!(dec.force(candidates[50_000], false));
+        assert_eq!(dec.residue_l2_sq(), before);
+        assert!(!dec.force(0xdead_0000_0000_0001, true), "unknown id is a no-op");
+    }
+
+    #[test]
+    fn set_banned_ids_is_incremental() {
+        let mat = CsMatrix::new(400, 5, 31);
+        let candidates: Vec<u64> = (0..5_000u64).collect();
+        let planted: Vec<u64> = vec![10, 20, 30, 40];
+        let sk = Sketch::encode(mat, &planted);
+        let mut dec = MpDecoder::new(&mat, &candidates, Side::Positive);
+        dec.load_residue(&sk.counts);
+        // Ban two planted ids by list; the decoder must not set them.
+        assert_eq!(dec.set_banned_ids(&[10, 30, 999_999], true), 2);
+        dec.run();
+        let est = dec.estimate();
+        assert!(!est.contains(&10) && !est.contains(&30));
+        // Unban by list re-enqueues them; the decode completes without a heap rebuild.
+        assert_eq!(dec.set_banned_ids(&[10, 30], false), 2);
+        dec.load_residue(&dec.export_residue());
+        let stats = dec.run();
+        assert!(stats.converged);
+        let mut got = dec.estimate();
+        got.sort_unstable();
+        assert_eq!(got, planted);
+        // Re-applying the same state is a no-op.
+        assert_eq!(dec.set_banned_ids(&[10, 30], false), 0);
     }
 
     #[test]

@@ -18,6 +18,8 @@ mod example13;
 
 pub use self::core::{DecodeStats, MpDecoder, Side};
 
+use crate::matrix::ColumnOracle;
+
 /// Which residue norm the matching stage greedily minimizes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Pursuit {
@@ -36,11 +38,96 @@ pub struct DecoderConfig {
     pub allow_unset: bool,
     /// Hard cap on pursuit iterations for one `run` call (0 ⇒ `8·candidates + 64`).
     pub max_iters: usize,
+    /// Worker threads for decoder *construction* (column sampling + CSR + reverse
+    /// lookup — the dominant per-session cost). `0` ⇒ auto (available parallelism),
+    /// `1` ⇒ serial; clamped to 64. Construction-time only: the parallel build produces
+    /// bit-identical structures to the serial one, and small candidate sets always build
+    /// serially regardless.
+    pub build_threads: usize,
 }
 
 impl Default for DecoderConfig {
     fn default() -> Self {
-        DecoderConfig { pursuit: Pursuit::L2, allow_unset: true, max_iters: 0 }
+        DecoderConfig { pursuit: Pursuit::L2, allow_unset: true, max_iters: 0, build_threads: 0 }
+    }
+}
+
+/// A one-slot reuse cache for constructed decoders.
+///
+/// Decoder construction (CSR + reverse lookup over all n candidates) dwarfs everything
+/// else a session does locally, yet consecutive protocol attempts and repeat
+/// conversations often want a decoder over the *same* (matrix, candidate set, side)
+/// triple. The cache keeps the most recently finished decoder; [`DecoderCache::checkout`]
+/// hands it back — reset via [`MpDecoder::reset_signal`], which together with
+/// `load_residue` is decode-for-decode identical to a fresh build (property-tested) —
+/// when the cache key matches, and builds anew otherwise (e.g. after an escalation-ladder
+/// rung redraws the matrix). The `setx` facade threads one of these through its endpoint
+/// and sessions so the hot path skips rebuilds wherever the matrix survives.
+#[derive(Default)]
+pub struct DecoderCache {
+    slot: Option<MpDecoder>,
+    /// When set, overrides [`DecoderConfig::build_threads`] for every build this cache
+    /// performs — drivers that are already running many sessions in parallel (the
+    /// partitioned pool) pin this to 1 so nested construction pools don't oversubscribe
+    /// the machine `parts × cores`-fold.
+    build_threads: Option<usize>,
+}
+
+impl DecoderCache {
+    pub fn new() -> Self {
+        DecoderCache::default()
+    }
+
+    /// A cache whose builds always use exactly `threads` construction workers,
+    /// regardless of the per-checkout config (see the field docs).
+    pub fn with_build_threads(threads: usize) -> Self {
+        DecoderCache { slot: None, build_threads: Some(threads) }
+    }
+
+    /// A decoder for exactly `(oracle, candidates, side)`: the cached one when its key
+    /// matches (reset, with `config` applied), a fresh build otherwise.
+    pub fn checkout<C: ColumnOracle + Sync>(
+        &mut self,
+        oracle: &C,
+        candidates: &[u64],
+        side: Side,
+        mut config: DecoderConfig,
+    ) -> MpDecoder {
+        if let Some(threads) = self.build_threads {
+            config.build_threads = threads;
+        }
+        let want = MpDecoder::cache_key_for(oracle, candidates, side);
+        if let Some(mut dec) = self.slot.take() {
+            // Exact-dimension check on top of the 64-bit key: with (l, m) pinned, the
+            // seed → fingerprint chain is injective (a composition of bijections), so a
+            // wire peer cannot forge a colliding key with different matrix geometry and
+            // trick us into reusing mismatched CSR tables.
+            if dec.cache_key() == want && dec.matrix_dims() == (oracle.l(), oracle.m()) {
+                dec.set_config(config);
+                dec.reset_signal();
+                return dec;
+            }
+        }
+        MpDecoder::with_config(oracle, candidates, side, config)
+    }
+
+    /// Park a finished decoder for future reuse (replaces any previous occupant).
+    pub fn store(&mut self, dec: MpDecoder) {
+        self.slot = Some(dec);
+    }
+
+    /// Whether a decoder is currently parked.
+    pub fn is_loaded(&self) -> bool {
+        self.slot.is_some()
+    }
+}
+
+impl std::fmt::Debug for DecoderCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DecoderCache")
+            .field("loaded", &self.slot.is_some())
+            .field("candidates", &self.slot.as_ref().map(|d| d.num_candidates()))
+            .finish()
     }
 }
 

@@ -7,21 +7,83 @@
 
 use super::prng::{split_mix64, Xoshiro256};
 
+/// Largest supported column degree.
+///
+/// This is a **load-bearing invariant**, not a tuning knob: the streaming hot paths
+/// (`Sketch::update`, `Residue::add_column`, `Residue::dot_column`) sample columns into a
+/// `[u32; MAX_M as usize]` stack buffer, so an `m` beyond this bound would slice out of
+/// range deep inside those loops. Every `ColumnSampler` therefore rejects `m > MAX_M` at
+/// construction time — with a hard assert in [`ColumnSampler::new`] and a typed
+/// [`GeometryError`] in [`ColumnSampler::try_new`] for untrusted (wire-derived) geometry.
+/// The paper runs m ∈ {5, 7}; 64 is far above anything the tuning ever picks.
+pub const MAX_M: u32 = 64;
+
+/// Rejected CS-matrix geometry — the typed counterpart of the [`ColumnSampler::new`]
+/// assertions, for paths (wire `Hello` frames, config parsing) where a panic is not
+/// acceptable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GeometryError {
+    /// `m` must be at least 1 (a zero-degree column measures nothing).
+    ZeroM,
+    /// `m` exceeds the stack-buffer bound [`MAX_M`].
+    MTooLarge { m: u32 },
+    /// A column cannot have more distinct rows than the matrix has rows.
+    MExceedsL { m: u32, l: u32 },
+}
+
+impl std::fmt::Display for GeometryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GeometryError::ZeroM => write!(f, "column degree m must be >= 1"),
+            GeometryError::MTooLarge { m } => {
+                write!(f, "column degree m={m} exceeds MAX_M={MAX_M}")
+            }
+            GeometryError::MExceedsL { m, l } => {
+                write!(f, "column degree m={m} exceeds row count l={l}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GeometryError {}
+
 /// Deterministic sampler of m distinct rows in `[0, l)` per element id.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ColumnSampler {
     /// Number of rows of the CS matrix.
     pub l: u32,
-    /// Ones per column (right-degree of the bipartite expander).
+    /// Ones per column (right-degree of the bipartite expander); always ≤ [`MAX_M`].
     pub m: u32,
     /// Shared seed; Alice and Bob must agree on it.
     pub seed: u64,
 }
 
 impl ColumnSampler {
+    /// Construct a sampler, panicking on invalid geometry. Use [`Self::try_new`] when the
+    /// parameters come from the wire or any other untrusted source.
     pub fn new(l: u32, m: u32, seed: u64) -> Self {
-        assert!(m >= 1 && (m as u64) <= l as u64, "need 1 <= m <= l (m={m}, l={l})");
-        ColumnSampler { l, m, seed }
+        match Self::try_new(l, m, seed) {
+            Ok(s) => s,
+            Err(e) => panic!("invalid CS-matrix geometry: {e}"),
+        }
+    }
+
+    /// Construct a sampler, rejecting invalid geometry with a typed [`GeometryError`].
+    /// This is the single validation point for the `m ≤ MAX_M` stack-buffer invariant:
+    /// no `ColumnSampler` (hence no `CsMatrix`, hence no `Sketch`) with `m > MAX_M` can
+    /// exist, so the fixed-size buffers in the streaming hot paths never overflow —
+    /// in release builds included.
+    pub fn try_new(l: u32, m: u32, seed: u64) -> Result<Self, GeometryError> {
+        if m == 0 {
+            return Err(GeometryError::ZeroM);
+        }
+        if m > MAX_M {
+            return Err(GeometryError::MTooLarge { m });
+        }
+        if m > l {
+            return Err(GeometryError::MExceedsL { m, l });
+        }
+        Ok(ColumnSampler { l, m, seed })
     }
 
     /// Write the m distinct row indices of column `id` into `out` (must have length >= m).
@@ -86,6 +148,29 @@ mod tests {
         let s2 = ColumnSampler::new(512, 5, 2);
         let differs = (0..100u64).any(|id| s1.rows(id) != s2.rows(id));
         assert!(differs);
+    }
+
+    #[test]
+    fn try_new_rejects_bad_geometry_with_typed_errors() {
+        assert_eq!(ColumnSampler::try_new(100, 0, 1), Err(GeometryError::ZeroM));
+        assert_eq!(
+            ColumnSampler::try_new(1 << 20, MAX_M + 1, 1),
+            Err(GeometryError::MTooLarge { m: MAX_M + 1 })
+        );
+        assert_eq!(
+            ColumnSampler::try_new(4, 5, 1),
+            Err(GeometryError::MExceedsL { m: 5, l: 4 })
+        );
+        // The boundary itself is legal.
+        assert!(ColumnSampler::try_new(1 << 20, MAX_M, 1).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid CS-matrix geometry")]
+    fn new_panics_on_m_beyond_stack_buffer() {
+        // This used to be a debug_assert! deep in Sketch::update — release builds would
+        // sail past it and panic on a slice inside the hot loop instead.
+        let _ = ColumnSampler::new(1 << 20, MAX_M + 1, 1);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! `IdIndex` — an open-addressing id → index table (FxHashMap-shaped, dependency-free).
+//!
+//! The MP decoder needs to answer "which candidate slot holds element id `x`?" on every
+//! `force` call (one per §5.2 inquiry/answer, so O(d) of them per ping-pong round). A
+//! linear scan over the candidate vector makes that O(n) per call — the exact landmine
+//! this table removes. Linear-probed open addressing at load factor ≤ 0.5 answers in O(1)
+//! expected probes, the table is built once per decoder construction, and the layout is
+//! two flat arrays (keys + values), so lookups are one hash plus a short cache-friendly
+//! probe run.
+//!
+//! Values are `u32` slot indices; `u32::MAX` is reserved as the empty marker, which caps
+//! indexable collections at `u32::MAX - 1` entries — far beyond any candidate set this
+//! repo runs (and asserted at build time).
+
+use super::mix64;
+
+/// Empty-slot marker in the value array (keys are irrelevant where this appears).
+const EMPTY: u32 = u32::MAX;
+
+/// Immutable open-addressing map from `u64` ids to `u32` indices.
+///
+/// Built once from a slice of ids (`build`); duplicate ids keep the *first* index, which
+/// matches `ids.iter().position(..)` semantics the decoder previously relied on.
+#[derive(Clone, Debug)]
+pub struct IdIndex {
+    /// Power-of-two capacity minus one (probe mask).
+    mask: usize,
+    keys: Vec<u64>,
+    vals: Vec<u32>,
+    len: usize,
+}
+
+impl IdIndex {
+    /// Build the table over `ids[i] → i`. O(n) expected; capacity is the smallest power
+    /// of two giving load factor ≤ 0.5.
+    pub fn build(ids: &[u64]) -> IdIndex {
+        assert!(
+            (ids.len() as u64) < EMPTY as u64,
+            "IdIndex supports at most 2^32 - 1 entries (got {})",
+            ids.len()
+        );
+        let cap = (ids.len().max(4) * 2).next_power_of_two();
+        let mut index = IdIndex {
+            mask: cap - 1,
+            keys: vec![0u64; cap],
+            vals: vec![EMPTY; cap],
+            len: 0,
+        };
+        for (i, &id) in ids.iter().enumerate() {
+            index.insert_first_wins(id, i as u32);
+        }
+        index
+    }
+
+    #[inline]
+    fn slot_of(&self, id: u64) -> usize {
+        mix64(id) as usize & self.mask
+    }
+
+    fn insert_first_wins(&mut self, id: u64, val: u32) {
+        let mut slot = self.slot_of(id);
+        loop {
+            if self.vals[slot] == EMPTY {
+                self.keys[slot] = id;
+                self.vals[slot] = val;
+                self.len += 1;
+                return;
+            }
+            if self.keys[slot] == id {
+                // Duplicate id: keep the first index (position() semantics).
+                return;
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    /// Index of `id`, if present. O(1) expected probes at ≤ 0.5 load.
+    #[inline]
+    pub fn get(&self, id: u64) -> Option<u32> {
+        let mut slot = self.slot_of(id);
+        loop {
+            let v = self.vals[slot];
+            if v == EMPTY {
+                return None;
+            }
+            if self.keys[slot] == id {
+                return Some(v);
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    /// `get` plus the number of slots probed — the observable that lets tests assert the
+    /// O(1)-per-lookup property instead of wall-clock timing.
+    pub fn get_probed(&self, id: u64) -> (Option<u32>, usize) {
+        let mut slot = self.slot_of(id);
+        let mut probes = 1usize;
+        loop {
+            let v = self.vals[slot];
+            if v == EMPTY {
+                return (None, probes);
+            }
+            if self.keys[slot] == id {
+                return (Some(v), probes);
+            }
+            slot = (slot + 1) & self.mask;
+            probes += 1;
+        }
+    }
+
+    /// Distinct ids stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_every_id_to_its_slot() {
+        let ids: Vec<u64> = (0..10_000u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)).collect();
+        let idx = IdIndex::build(&ids);
+        assert_eq!(idx.len(), ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            assert_eq!(idx.get(id), Some(i as u32));
+        }
+    }
+
+    #[test]
+    fn misses_return_none() {
+        let ids: Vec<u64> = (0..1000u64).map(|i| i * 3).collect();
+        let idx = IdIndex::build(&ids);
+        assert_eq!(idx.get(1), None);
+        assert_eq!(idx.get(u64::MAX), None);
+    }
+
+    #[test]
+    fn duplicates_keep_first_index() {
+        let idx = IdIndex::build(&[7, 8, 7, 9]);
+        assert_eq!(idx.get(7), Some(0));
+        assert_eq!(idx.get(9), Some(3));
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn empty_and_tiny_tables_work() {
+        let idx = IdIndex::build(&[]);
+        assert!(idx.is_empty());
+        assert_eq!(idx.get(0), None);
+        let one = IdIndex::build(&[0]);
+        assert_eq!(one.get(0), Some(0));
+    }
+
+    #[test]
+    fn probe_counts_stay_constant_at_half_load() {
+        let ids: Vec<u64> = (0..50_000u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ 0xabcd).collect();
+        let idx = IdIndex::build(&ids);
+        let mut total = 0usize;
+        for &id in &ids {
+            let (hit, probes) = idx.get_probed(id);
+            assert!(hit.is_some());
+            total += probes;
+        }
+        // Expected probes ≈ 1.5 at load 0.5; a linear scan would average n/2 = 25_000.
+        assert!(total < 4 * ids.len(), "avg probes {:.2}", total as f64 / ids.len() as f64);
+    }
+}

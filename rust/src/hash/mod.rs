@@ -9,11 +9,13 @@
 //! from a shared `(seed, l, m)` triple, and experiments are exactly reproducible.
 
 mod column;
+mod idmap;
 mod prng;
 mod sha256;
 mod siphash;
 
-pub use column::ColumnSampler;
+pub use column::{ColumnSampler, GeometryError, MAX_M};
+pub use idmap::IdIndex;
 pub use prng::{split_mix64, Xoshiro256};
 pub use sha256::{sha256, Sha256};
 pub use siphash::SipHash13;

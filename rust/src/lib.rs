@@ -68,6 +68,32 @@
 //! (async, sharded, multi-tenant) implement `send`/`recv`/`is_client` and inherit the
 //! whole protocol, including parameter estimation and self-healing retries.
 //!
+//! ## Performance
+//!
+//! The dominant local cost of a session is **decoder construction** (column sampling +
+//! CSR + reverse lookup over all n candidates), and the repo attacks it three ways:
+//!
+//! * **Parallel construction** — [`decoder::MpDecoder::with_config`] shards the build
+//!   across a bounded worker pool ([`decoder::DecoderConfig::build_threads`]; `0` = auto)
+//!   with a counting-sort merge that is bit-identical to the serial path
+//!   (property-tested via [`decoder::MpDecoder::structure_digest`]).
+//! * **Decoder reuse** — a [`decoder::DecoderCache`] threads through the [`setx`]
+//!   endpoint, sessions, and the unidirectional decode: ladder attempts and repeat
+//!   conversations that keep the same matrix reset the constructed decoder
+//!   (`reset_signal`, decode-for-decode identical to a fresh build) instead of
+//!   rebuilding. Per-id hot operations (`force`, §5.2 collision resolution,
+//!   [`decoder::MpDecoder::set_banned_ids`]) are O(1) via an open-addressing id→slot
+//!   table ([`hash::IdIndex`]).
+//! * **A persistent perf trajectory** — every bench target supports
+//!   `cargo bench --bench <name> -- --json [--smoke]`; results (name, mean_ns, min_ns,
+//!   iters, config fingerprint) append to the repo-root `BENCH_decode.json`
+//!   (decode/encode microbenches) and `BENCH_protocol.json` (protocol sweeps) as one
+//!   growing JSON array. CI runs the `--smoke` profile on every push, restores the
+//!   accumulated files across runs (cache), and uploads them as the `bench-trajectory`
+//!   artifact, so perf regressions show up as data —
+//!   the headline series is `mp_build n=100000 d=1000 threads={1,4}` (serial baseline
+//!   vs parallel construction). See [`metrics::append_bench_json`].
+//!
 //! ## Workspace layout
 //!
 //! The Cargo workspace maps the repo's split source tree explicitly: the library lives at

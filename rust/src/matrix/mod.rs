@@ -10,7 +10,7 @@
 //! * dense-block materialization (`dense_block`) used by the PJRT/XLA accelerated path;
 //! * an empirical expander-quality probe (`expansion_probe`) used by tests and ablations.
 
-use crate::hash::ColumnSampler;
+use crate::hash::{hash_u64, ColumnSampler};
 
 /// Anything that can produce CS-matrix columns: the implicit [`CsMatrix`] in production,
 /// an [`ExplicitMatrix`] in tests/ablations (e.g. the paper's Appendix A Example 13).
@@ -21,6 +21,13 @@ pub trait ColumnOracle {
     fn m(&self) -> u32;
     /// Row indices of column `id` written into `buf` (length ≥ `m()`); returns filled slice.
     fn column_into<'a>(&self, id: u64, buf: &'a mut [u32]) -> &'a [u32];
+    /// Cache discriminator: equal fingerprints (together with equal `(l, m)`, which
+    /// [`crate::decoder::DecoderCache`] checks exactly) must imply equal column
+    /// functions, so a cached decoder built against one oracle can be reused against
+    /// another. Deliberately has **no default**: an implementation that forgot to cover
+    /// everything its columns depend on would silently alias distinct matrices in the
+    /// cache.
+    fn structure_fingerprint(&self) -> u64;
 }
 
 /// A fully materialized matrix keyed by small integer ids — for unit tests and the
@@ -45,6 +52,19 @@ impl ColumnOracle for ExplicitMatrix {
         buf[..col.len()].copy_from_slice(col);
         &buf[..col.len()]
     }
+
+    fn structure_fingerprint(&self) -> u64 {
+        // Explicit matrices are tiny (tests/worked examples): hash the full contents so
+        // two different matrices never alias in a decoder cache.
+        let mut h = hash_u64(self.l as u64, 0x0a11_0c58);
+        for col in &self.cols {
+            h = hash_u64(h ^ col.len() as u64, 0x0a11_0c59);
+            for &r in col {
+                h = hash_u64(h ^ r as u64, 0x0a11_0c5a);
+            }
+        }
+        h
+    }
 }
 
 /// Handle to the (implicit) CS matrix: dimensions + the column sampler.
@@ -64,6 +84,13 @@ impl ColumnOracle for CsMatrix {
 
     fn column_into<'a>(&self, id: u64, buf: &'a mut [u32]) -> &'a [u32] {
         self.sampler.rows_into(id, buf)
+    }
+
+    fn structure_fingerprint(&self) -> u64 {
+        // Columns are a pure function of (l, m, seed).
+        let mut h = hash_u64(self.sampler.seed, 0x0a11_0c5b);
+        h = hash_u64(h ^ self.sampler.l as u64, 0x0a11_0c5c);
+        hash_u64(h ^ self.sampler.m as u64, 0x0a11_0c5d)
     }
 }
 

@@ -3,7 +3,15 @@
 //! The paper's primary metric is the *total number of bytes transmitted in all rounds*
 //! (§7.1). Every protocol implementation in this repo routes its messages through a
 //! [`CommLog`], so reported costs are actual framed bytes — not analytic estimates.
+//!
+//! The harness also persists a **machine-readable perf trajectory**: every self-harnessed
+//! bench target (`cargo bench --bench <name> -- --json [--smoke]`) appends its
+//! [`BenchResult`]s as JSON records to a root-level trajectory file
+//! ([`BENCH_DECODE_JSON`] for the decode/encode microbenches, [`BENCH_PROTOCOL_JSON`]
+//! for the protocol-level sweeps), so regressions show up as data instead of anecdotes —
+//! CI runs the `--smoke` profile on every push and uploads the files as artifacts.
 
+use crate::hash::hash_u64;
 use std::time::{Duration, Instant};
 
 /// What stage of the protocol a wire frame belongs to. Every frame maps to exactly one
@@ -205,6 +213,131 @@ pub struct BenchResult {
     pub iters: u64,
 }
 
+impl BenchResult {
+    /// One flat JSON record: `name`, `mean_ns`, `min_ns`, `iters`, the run's config
+    /// fingerprint, and a unix timestamp — the schema of the `BENCH_*.json` trajectory.
+    pub fn to_json(&self, config_fingerprint: u64, unix_time_s: u64) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"mean_ns\":{},\"min_ns\":{},\"iters\":{},\
+             \"config_fingerprint\":\"{:#018x}\",\"unix_time_s\":{}}}",
+            json_escape(&self.name),
+            self.mean.as_nanos(),
+            self.min.as_nanos(),
+            self.iters,
+            config_fingerprint,
+            unix_time_s
+        )
+    }
+}
+
+/// Minimal JSON string escaping (bench names are ASCII-ish, but stay correct anyway).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Trajectory file for the decode/encode microbench targets
+/// (`decode_throughput`, `encode_throughput`), repo-root relative.
+pub const BENCH_DECODE_JSON: &str = "BENCH_decode.json";
+
+/// Trajectory file for the protocol-level bench targets
+/// (`fig2a_unidirectional`, `fig2b_bidirectional`, `table2_ethereum`), repo-root relative.
+pub const BENCH_PROTOCOL_JSON: &str = "BENCH_protocol.json";
+
+/// Shared CLI profile of the self-harnessed bench targets:
+/// `cargo bench --bench <name> -- [--json] [--smoke]`.
+///
+/// `--json` appends the run's results to the target's `BENCH_*.json` trajectory;
+/// `--smoke` shrinks measurement windows and sweep sizes to CI scale (the smoke profile
+/// keeps the headline configurations — e.g. `mp_build n=100000 d=1000` — so the CI
+/// artifact still tracks the numbers that matter).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BenchProfile {
+    pub json: bool,
+    pub smoke: bool,
+}
+
+impl BenchProfile {
+    pub fn from_env_args() -> Self {
+        let mut p = BenchProfile::default();
+        for arg in std::env::args() {
+            match arg.as_str() {
+                "--json" => p.json = true,
+                "--smoke" => p.smoke = true,
+                _ => {}
+            }
+        }
+        p
+    }
+
+    /// Scale a `(warmup_ms, measure_ms)` pair down for the smoke profile.
+    pub fn times(&self, warmup_ms: u64, measure_ms: u64) -> (u64, u64) {
+        if self.smoke {
+            ((warmup_ms / 10).max(10), (measure_ms / 10).max(60))
+        } else {
+            (warmup_ms, measure_ms)
+        }
+    }
+
+    /// Fingerprint of this run's configuration (bench target + profile), recorded on
+    /// every JSON record so trajectory points from different profiles never get compared
+    /// apples-to-oranges.
+    pub fn fingerprint(&self, bench_target: &str) -> u64 {
+        let mut h = 0xbe9c_0f17u64;
+        for &b in bench_target.as_bytes() {
+            h = hash_u64(h ^ b as u64, 0xbe9c_0001);
+        }
+        hash_u64(h ^ self.smoke as u64, 0xbe9c_0002)
+    }
+}
+
+/// Append `results` to the JSON-array trajectory file at `path`, creating it on first
+/// use. The file stays one valid JSON array across appends without needing a JSON
+/// parser: the closing bracket is stripped, records are appended, and the bracket is
+/// restored. A file that does not end in `]` (missing or corrupt) is started fresh.
+pub fn append_bench_json(
+    path: &str,
+    results: &[BenchResult],
+    config_fingerprint: u64,
+) -> std::io::Result<()> {
+    if results.is_empty() {
+        return Ok(());
+    }
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let body = results
+        .iter()
+        .map(|r| format!("  {}", r.to_json(config_fingerprint, now)))
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let content = match existing.trim_end().strip_suffix(']') {
+        Some(head) => {
+            let head = head.trim_end();
+            if head.ends_with('[') {
+                // Existing but empty array.
+                format!("{head}\n{body}\n]\n")
+            } else {
+                format!("{head},\n{body}\n]\n")
+            }
+        }
+        None => format!("[\n{body}\n]\n"),
+    };
+    std::fs::write(path, content)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,5 +381,56 @@ mod tests {
         let b = Bench::new("noop").with_times(1, 5);
         let r = b.run(|| 1 + 1);
         assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn bench_result_serializes_flat_json() {
+        let r = BenchResult {
+            name: "mp_build n=100000 d=1000 threads=4".to_string(),
+            mean: Duration::from_nanos(1234),
+            min: Duration::from_nanos(1200),
+            iters: 42,
+        };
+        let json = r.to_json(0xabcd, 1700000000);
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"name\":\"mp_build n=100000 d=1000 threads=4\""));
+        assert!(json.contains("\"mean_ns\":1234"));
+        assert!(json.contains("\"min_ns\":1200"));
+        assert!(json.contains("\"iters\":42"));
+        assert!(json.contains("\"config_fingerprint\":\"0x000000000000abcd\""));
+        // Escaping keeps hostile names inside the string literal.
+        let hostile = BenchResult {
+            name: "a\"b\\c\nd".to_string(),
+            mean: Duration::ZERO,
+            min: Duration::ZERO,
+            iters: 1,
+        };
+        assert!(hostile.to_json(1, 1).contains("a\\\"b\\\\c\\u000ad"));
+    }
+
+    #[test]
+    fn append_bench_json_keeps_one_valid_array_across_runs() {
+        let path = std::env::temp_dir().join(format!(
+            "commonsense_bench_trajectory_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().expect("temp path utf-8").to_string();
+        let _ = std::fs::remove_file(&path);
+        let mk = |name: &str| BenchResult {
+            name: name.to_string(),
+            mean: Duration::from_nanos(10),
+            min: Duration::from_nanos(9),
+            iters: 5,
+        };
+        append_bench_json(&path, &[mk("one"), mk("two")], 7).unwrap();
+        append_bench_json(&path, &[mk("three")], 7).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        let trimmed = content.trim();
+        assert!(trimmed.starts_with('['), "not an array: {trimmed}");
+        assert!(trimmed.ends_with(']'), "unterminated array: {trimmed}");
+        assert_eq!(content.matches("\"name\"").count(), 3, "append lost records");
+        // Exactly n-1 record separators → still parseable as one array.
+        assert_eq!(content.matches("},").count(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -27,7 +27,20 @@ pub use bidi::{BidiOptions, BidiOutcome};
 pub use session::{Role, Session, SessionError, SessionEvent, SessionOutcome};
 pub use uni::UniOutcome;
 
+use crate::hash::ColumnSampler;
 use crate::matrix::CsMatrix;
+
+/// Largest row count accepted from a wire `Hello` (2^28 rows ≈ 1 GiB of i32 residue):
+/// above this an adversarial frame would drive giant allocations before any decode runs.
+pub const MAX_WIRE_L: u32 = 1 << 28;
+
+/// The single trust-boundary check for wire-supplied CS geometry, shared by every
+/// `Hello` acceptor (the session engine and the facade endpoint) so the two boundaries
+/// cannot drift: typed [`crate::hash::GeometryError`] rules (`1 ≤ m ≤ min(l, MAX_M)` —
+/// the stack-buffer invariant) plus the [`MAX_WIRE_L`] allocation cap.
+pub fn wire_geometry_ok(l: u32, m: u32, seed: u64) -> bool {
+    l <= MAX_WIRE_L && ColumnSampler::try_new(l, m, seed).is_ok()
+}
 
 /// Why a decode attempt failed — the engine-level diagnosis both the unidirectional
 /// one-shot ([`uni`]) and the facade's escalation ladder report, so failures always

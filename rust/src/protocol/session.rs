@@ -22,7 +22,7 @@
 //! Every frame the session emits or absorbs is charged to its [`CommLog`] at its exact
 //! wire size, so all frontends report identical communication costs by construction.
 
-use crate::decoder::{run_with_fallback, DecoderConfig, MpDecoder, Side};
+use crate::decoder::{run_with_fallback, DecoderCache, DecoderConfig, MpDecoder, Side};
 use crate::entropy::{
     compress_residue, compress_sketch, decompress_residue, recover_sketch, SketchCodecParams,
 };
@@ -139,6 +139,10 @@ pub struct Session {
     set: Vec<u64>,
     phase: Phase,
     comm: CommLog,
+    /// Decoder reuse slot (see [`DecoderCache`]): consulted when this session builds its
+    /// decoder, refilled by [`Session::into_parts`] when the session ends, so callers
+    /// that keep the cache across attempts/conversations skip identical rebuilds.
+    cache: DecoderCache,
 }
 
 impl Session {
@@ -149,6 +153,20 @@ impl Session {
         set: &[u64],
         opts: BidiOptions,
         is_alice: bool,
+    ) -> (Session, Vec<Msg>) {
+        Self::initiator_cached(params, set, opts, is_alice, DecoderCache::new())
+    }
+
+    /// [`Session::initiator`] with a caller-provided decoder-reuse cache: when the cache
+    /// holds a decoder for the same (matrix, set, side) — e.g. a repeat conversation or a
+    /// ladder attempt that kept the matrix — construction is skipped via
+    /// [`MpDecoder::reset_signal`]. Recover the cache with [`Session::into_parts`].
+    pub fn initiator_cached(
+        params: &CsParams,
+        set: &[u64],
+        opts: BidiOptions,
+        is_alice: bool,
+        mut cache: DecoderCache,
     ) -> (Session, Vec<Msg>) {
         let (est_i, est_r) = if is_alice {
             (params.est_a_unique, params.est_b_unique)
@@ -165,7 +183,7 @@ impl Session {
             set_len: set.len() as u64,
         };
         let sketch = initiator_sketch(params, set, is_alice);
-        let peer = Peer::new(params, set, Side::Negative, opts);
+        let peer = Peer::with_cache(params, set, Side::Negative, opts, &mut cache);
         let mut session = Session {
             role: Role::Initiator,
             opts,
@@ -173,6 +191,7 @@ impl Session {
             set: Vec::new(),
             phase: Phase::PingPong(peer),
             comm: CommLog::new(),
+            cache,
         };
         session.record_sent(&hello);
         session.record_sent(&sketch);
@@ -182,6 +201,18 @@ impl Session {
     /// Open a session as the responder. Every protocol parameter is learned from the
     /// initiator's `Hello`; only the local set and options are needed up front.
     pub fn responder(set: &[u64], opts: BidiOptions, is_alice: bool) -> Session {
+        Self::responder_cached(set, opts, is_alice, DecoderCache::new())
+    }
+
+    /// [`Session::responder`] with a decoder-reuse cache (see
+    /// [`Session::initiator_cached`]); the responder consults it when the initiator's
+    /// sketch arrives and its decoder is built.
+    pub fn responder_cached(
+        set: &[u64],
+        opts: BidiOptions,
+        is_alice: bool,
+        cache: DecoderCache,
+    ) -> Session {
         Session {
             role: Role::Responder,
             opts,
@@ -189,7 +220,24 @@ impl Session {
             set: set.to_vec(),
             phase: Phase::AwaitHello,
             comm: CommLog::new(),
+            cache,
         }
+    }
+
+    /// Decompose a finished (or abandoned) session into its transcript, outcome
+    /// snapshot, and decoder cache — with the session's constructed decoder parked in the
+    /// cache so the next same-matrix session reuses it instead of rebuilding.
+    pub fn into_parts(self) -> (CommLog, SessionOutcome, DecoderCache) {
+        let Session { phase, comm, mut cache, .. } = self;
+        let outcome = match phase {
+            Phase::PingPong(peer) => {
+                let outcome = SessionOutcome { unique: peer.result(), converged: peer.settled };
+                cache.store(peer.into_decoder());
+                outcome
+            }
+            _ => SessionOutcome { unique: Vec::new(), converged: false },
+        };
+        (comm, outcome, cache)
     }
 
     /// Absorb one incoming frame and report what the transport should do next.
@@ -200,6 +248,12 @@ impl Session {
         self.record_received(incoming);
         match (std::mem::replace(&mut self.phase, Phase::Closed), incoming) {
             (Phase::AwaitHello, Msg::Hello { l, m, seed, universe_bits, est_initiator_unique, est_responder_unique, .. }) => {
+                // Adversarial-geometry hardening: reject rather than panic on a `Hello`
+                // whose (l, m) no ColumnSampler would accept (the m ≤ MAX_M stack-buffer
+                // invariant), or whose row count would drive a giant allocation.
+                if !crate::protocol::wire_geometry_ok(*l, *m, *seed) {
+                    return Err(SessionError::Corrupt("hello geometry"));
+                }
                 // Reconstruct the shared parameter view with the initiator in the "a"
                 // slot (`initiator_is_alice = true` keeps the codec orientation fixed
                 // regardless of which real host initiated).
@@ -219,7 +273,9 @@ impl Session {
                 let set = std::mem::take(&mut self.set);
                 let residue0 = responder_residue(&params, &set, sm, true)
                     .ok_or(SessionError::SketchRecovery)?;
-                let mut peer = Peer::new(&params, &set, Side::Positive, self.opts);
+                let opts = self.opts;
+                let mut peer =
+                    Peer::with_cache(&params, &set, Side::Positive, opts, &mut self.cache);
                 // The initial canonical residue enters the engine as a synthetic round:
                 // it is not a transmitted frame, so it is not charged to the comm log.
                 let reply = peer.step(&seed_round(&residue0))?;
@@ -364,10 +420,28 @@ pub struct Peer {
 
 impl Peer {
     pub fn new(params: &CsParams, set: &[u64], side: Side, opts: BidiOptions) -> Self {
+        Self::with_cache(params, set, side, opts, &mut DecoderCache::new())
+    }
+
+    /// [`Peer::new`] consulting a [`DecoderCache`] first: when the cache holds a decoder
+    /// for exactly this (matrix, set, side) it is reset and reused — bidi rounds and
+    /// ladder attempts that keep the same matrix skip the dominant CSR rebuild. Recover
+    /// the decoder for the cache with [`Peer::into_decoder`].
+    pub fn with_cache(
+        params: &CsParams,
+        set: &[u64],
+        side: Side,
+        opts: BidiOptions,
+        cache: &mut DecoderCache,
+    ) -> Self {
         let matrix = params.matrix();
-        let mut decoder = MpDecoder::new(&matrix, set, side);
-        decoder.set_config(DecoderConfig::commonsense());
+        let decoder = cache.checkout(&matrix, set, side, DecoderConfig::commonsense());
         Peer { decoder, opts, round: 0, tentative: Vec::new(), settled: false }
+    }
+
+    /// Surrender the constructed decoder (for parking in a [`DecoderCache`]).
+    pub fn into_decoder(self) -> MpDecoder {
+        self.decoder
     }
 
     fn sig(&self, id: u64) -> u64 {

@@ -14,7 +14,7 @@
 //! sketch) vs [`DecodeFailure::ResidueDecode`] (the MP decoder could not reach a zero
 //! residue — an undersized sketch).
 
-use crate::decoder::{run_with_fallback, DecoderConfig, MpDecoder, Side};
+use crate::decoder::{run_with_fallback, DecoderCache, DecoderConfig, Side};
 use crate::entropy::{compress_sketch, recover_sketch, SketchCodecParams};
 use crate::metrics::{CommLog, Phase};
 use crate::protocol::{wire::Msg, CsParams, DecodeFailure};
@@ -67,6 +67,20 @@ pub fn alice_encode(a: &[u64], params: &CsParams) -> (Msg, usize) {
 /// Bob's half: decode `B \ A` from the received sketch message. The error pins down the
 /// failing layer: sketch recovery/verification vs residue decode.
 pub fn bob_decode(msg: &Msg, b: &[u64], params: &CsParams) -> Result<(Vec<u64>, bool), UniError> {
+    bob_decode_cached(msg, b, params, &mut DecoderCache::new())
+}
+
+/// [`bob_decode`] consulting (and refilling) a [`DecoderCache`]: when the cache holds a
+/// decoder for the same (matrix, candidate set) the dominant CSR construction is skipped
+/// via `reset_signal`. The decoder is parked back in the cache on every decode outcome —
+/// including a failed residue decode, where the following escalation-ladder attempt may
+/// keep the matrix.
+pub fn bob_decode_cached(
+    msg: &Msg,
+    b: &[u64],
+    params: &CsParams,
+    cache: &mut DecoderCache,
+) -> Result<(Vec<u64>, bool), UniError> {
     let Msg::Sketch(sketch_msg) = msg else {
         return Err(UniError::Frame("expected sketch frame"));
     };
@@ -93,20 +107,21 @@ pub fn bob_decode(msg: &Msg, b: &[u64], params: &CsParams) -> Result<(Vec<u64>, 
         .map(|(y, x)| y - x)
         .collect();
 
-    let mut dec = MpDecoder::new(&matrix, b, Side::Positive);
-    dec.set_config(DecoderConfig::commonsense());
+    let mut dec = cache.checkout(&matrix, b, Side::Positive, DecoderConfig::commonsense());
     dec.load_residue(&residue);
     // §3.4: fall back to the RIP-1-safe L1 pursuit (SSMP) when vanilla MP stalls — the
     // same escalation ladder the ping-pong session engine uses (without its kicks: a
     // one-shot decode has no later rounds to absorb a wrong kick).
     let (stats, used_fallback) = run_with_fallback(&mut dec, true, 0);
     if !stats.converged {
+        cache.store(dec);
         // The sketch verified but the residue would not peel to zero — the
         // undecodable-residue failure shape (undersized `l` for the true difference).
         return Err(UniError::Decode(DecodeFailure::ResidueDecode));
     }
     let mut b_minus_a = dec.estimate();
     b_minus_a.sort_unstable();
+    cache.store(dec);
     Ok((b_minus_a, used_fallback))
 }
 

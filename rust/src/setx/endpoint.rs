@@ -27,6 +27,7 @@
 use std::collections::{HashSet, VecDeque};
 
 use super::{DecodeFailure, DiffSize, Mode, ProtocolKind, SetxConfig, SetxError, SetxReport};
+use crate::decoder::DecoderCache;
 use crate::metrics::CommLog;
 use crate::protocol::estimate::{MinHashEstimator, StrataEstimator};
 use crate::protocol::session::{frame_phase, label, Session, SessionError, SessionEvent};
@@ -293,6 +294,11 @@ pub(crate) struct Endpoint<'a> {
     unique: Vec<u64>,
     settled: bool,
     kind: ProtocolKind,
+    /// Decoder-reuse slot: moved into each session (which checks it out when building its
+    /// decoder) and reclaimed when the attempt ends, so ladder attempts and — via
+    /// [`Endpoint::take_cache`] — repeat conversations that keep the same matrix skip the
+    /// dominant CSR rebuild.
+    cache: DecoderCache,
 }
 
 impl<'a> Endpoint<'a> {
@@ -309,7 +315,20 @@ impl<'a> Endpoint<'a> {
             unique: Vec::new(),
             settled: false,
             kind: ProtocolKind::Bidi,
+            cache: DecoderCache::new(),
         }
+    }
+
+    /// Seed the decoder-reuse cache (typically with the slot a previous conversation of
+    /// the same [`super::Setx`] endpoint left behind).
+    pub(crate) fn set_cache(&mut self, cache: DecoderCache) {
+        self.cache = cache;
+    }
+
+    /// Reclaim the decoder-reuse cache for the next conversation. Best-effort: a
+    /// conversation torn down mid-session leaves its decoder in the dropped session.
+    pub(crate) fn take_cache(&mut self) -> DecoderCache {
+        std::mem::take(&mut self.cache)
     }
 
     /// An endpoint with the negotiation pre-computed (the partitioned driver negotiates
@@ -419,7 +438,7 @@ impl<'a> Endpoint<'a> {
                 }
                 Ok(SessionEvent::Done(_)) => {
                     // Session over (settled, or round budget exhausted): issue our verdict.
-                    self.absorb_session(&session);
+                    self.absorb_session(session);
                     let ok = self.settled;
                     let reason = if ok { REASON_OK } else { REASON_NOT_CONVERGED };
                     self.send_confirm_and_wait(ok, reason)
@@ -427,12 +446,12 @@ impl<'a> Endpoint<'a> {
                 Err(SessionError::SketchRecovery) => {
                     // Recoverable attempt failure (undersized/corrupt sketch): report it
                     // and let the ladder escalate instead of tearing the connection down.
-                    self.absorb_session(&session);
+                    self.absorb_session(session);
                     self.settled = false;
                     self.send_confirm_and_wait(false, REASON_SKETCH_RECOVERY)
                 }
                 Err(e) => {
-                    self.absorb_session(&session);
+                    self.absorb_session(session);
                     Step::Fatal(Vec::new(), SetxError::Protocol(e))
                 }
             },
@@ -446,7 +465,7 @@ impl<'a> Endpoint<'a> {
                         SetxError::MalformedFrame("confirm attempt index"),
                     );
                 }
-                self.absorb_session(&session);
+                self.absorb_session(session);
                 let my_ok = self.settled;
                 let my_reason = if my_ok { REASON_OK } else { REASON_NOT_CONVERGED };
                 let confirm = Msg::Confirm { ok: my_ok, reason: my_reason, attempt: self.attempt };
@@ -490,7 +509,9 @@ impl<'a> Endpoint<'a> {
         self.kind = kind;
         match kind {
             ProtocolKind::Bidi => {
-                let mut session = Session::responder(self.set, self.cfg.engine, self.client);
+                let cache = self.take_cache();
+                let mut session =
+                    Session::responder_cached(self.set, self.cfg.engine, self.client, cache);
                 match session.on_msg(msg) {
                     Ok(SessionEvent::Continue) => {
                         self.phase = EpPhase::Bidi(session);
@@ -517,9 +538,10 @@ impl<'a> Endpoint<'a> {
                 else {
                     return Step::Fatal(Vec::new(), SetxError::MalformedFrame("expected hello"));
                 };
-                // Adversarial `Hello` hardening: an absurd row count would drive a huge
-                // matrix allocation before the decode even starts.
-                if *l > (1 << 28) || *m == 0 || *m > 64 {
+                // Adversarial `Hello` hardening: the shared trust-boundary check (same
+                // one the session engine applies) — allocation cap plus the m ≤ MAX_M
+                // stack-buffer invariant.
+                if !crate::protocol::wire_geometry_ok(*l, *m, *seed) {
                     return Step::Fatal(Vec::new(), SetxError::MalformedFrame("hello geometry"));
                 }
                 let (Ok(ea), Ok(eb)) = (
@@ -545,7 +567,7 @@ impl<'a> Endpoint<'a> {
     /// The unidirectional decoder's half of an attempt.
     fn uni_decode(&mut self, params: &CsParams, msg: &Msg) -> Step {
         self.record_recv(msg);
-        match uni::bob_decode(msg, self.set, params) {
+        match uni::bob_decode_cached(msg, self.set, params, &mut self.cache) {
             Ok((unique, _used_fallback)) => {
                 self.unique = unique;
                 self.settled = true;
@@ -592,9 +614,11 @@ impl<'a> Endpoint<'a> {
             }
             ProtocolKind::Bidi => {
                 // The session records its own frames; they merge into our log at the end
-                // of the attempt (absorb_session).
+                // of the attempt (absorb_session) — together with the decoder cache it
+                // checks out here and refills there.
+                let cache = self.take_cache();
                 let (session, opening) =
-                    Session::initiator(&params, self.set, self.cfg.engine, self.client);
+                    Session::initiator_cached(&params, self.set, self.cfg.engine, self.client, cache);
                 self.phase = EpPhase::Bidi(session);
                 opening
             }
@@ -698,12 +722,14 @@ impl<'a> Endpoint<'a> {
         Step::Finish(out, Box::new(self.report()))
     }
 
-    /// Merge a finished (or abandoned) session's transcript and result into the endpoint.
-    fn absorb_session(&mut self, session: &Session) {
-        self.comm.extend(session.comm());
-        let outcome = session.outcome();
+    /// Merge a finished (or abandoned) session's transcript and result into the
+    /// endpoint, reclaiming the decoder-reuse cache (now holding the session's decoder).
+    fn absorb_session(&mut self, session: Session) {
+        let (comm, outcome, cache) = session.into_parts();
+        self.comm.extend(&comm);
         self.unique = outcome.unique;
         self.settled = outcome.converged;
+        self.cache = cache;
     }
 
     fn report(&self) -> SetxReport {

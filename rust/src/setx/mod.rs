@@ -38,11 +38,13 @@ mod endpoint;
 pub mod parallel;
 pub mod transport;
 
+use crate::decoder::DecoderCache;
 use crate::hash::hash_u64;
 use crate::metrics::{CommLog, Phase};
 use crate::protocol::bidi::BidiOptions;
 use crate::protocol::session::SessionError;
 use endpoint::{Endpoint, Step};
+use std::sync::Mutex;
 use transport::Transport;
 
 /// Which protocol family to run.
@@ -304,17 +306,41 @@ impl SetxBuilder {
                 cfg.engine.smf_fpr
             )));
         }
-        Ok(Setx { cfg: self.cfg, set: self.set })
+        Ok(Setx { cfg: self.cfg, set: self.set, cache: Mutex::new(DecoderCache::new()) })
     }
 }
 
 /// A configured SetX endpoint: one local set plus a validated [`SetxConfig`]. Run it over
 /// any [`Transport`]; the peer runs its own `Setx` (same config, its set) over the other
 /// end.
-#[derive(Clone, Debug)]
 pub struct Setx {
     pub(crate) cfg: SetxConfig,
     pub(crate) set: Vec<u64>,
+    /// Decoder-reuse slot persisted across conversations of this endpoint: a steady-state
+    /// re-sync (same set, same negotiated geometry — e.g. a server answering many clients
+    /// in sequence, or periodic delta-syncs against the same peer) skips the dominant
+    /// per-session cost, decoder construction, via [`crate::decoder::DecoderCache`].
+    /// Interior-mutable so `run(&self, ..)` stays shared; never held across a blocking
+    /// transport call.
+    cache: Mutex<DecoderCache>,
+}
+
+impl Clone for Setx {
+    fn clone(&self) -> Self {
+        // The reuse cache is per-handle runtime state, not configuration: clones start
+        // with an empty slot (a decoder is not Clone, and sharing one would serialize
+        // the clones on a lock).
+        Setx { cfg: self.cfg, set: self.set.clone(), cache: Mutex::new(DecoderCache::new()) }
+    }
+}
+
+impl std::fmt::Debug for Setx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Setx")
+            .field("cfg", &self.cfg)
+            .field("set_len", &self.set.len())
+            .finish_non_exhaustive()
+    }
 }
 
 impl Setx {
@@ -344,8 +370,26 @@ impl Setx {
 
     /// Run this endpoint over a transport to completion. Blocks on `transport.recv()`;
     /// returns the unified report, or the first typed error.
+    ///
+    /// Consecutive `run` calls on the same `Setx` reuse the previous conversation's
+    /// constructed decoder whenever the negotiated matrix comes out identical (the
+    /// steady-state re-sync case), skipping the dominant per-session CSR build.
     pub fn run<T: Transport>(&self, transport: &mut T) -> Result<SetxReport, SetxError> {
         let mut ep = Endpoint::new(&self.cfg, &self.set, transport.is_client());
+        if let Ok(mut slot) = self.cache.lock() {
+            ep.set_cache(std::mem::take(&mut *slot));
+        }
+        let result = Self::pump(&mut ep, transport);
+        if let Ok(mut slot) = self.cache.lock() {
+            *slot = ep.take_cache();
+        }
+        result
+    }
+
+    fn pump<T: Transport>(
+        ep: &mut Endpoint<'_>,
+        transport: &mut T,
+    ) -> Result<SetxReport, SetxError> {
         for msg in ep.start() {
             transport.send(&msg)?;
         }
@@ -389,7 +433,20 @@ impl Setx {
         }
         let mut a = Endpoint::new(&self.cfg, &self.set, true);
         let mut b = Endpoint::new(&peer.cfg, &peer.set, false);
-        endpoint::drive_endpoints(&mut a, &mut b)
+        if let Ok(mut slot) = self.cache.lock() {
+            a.set_cache(std::mem::take(&mut *slot));
+        }
+        if let Ok(mut slot) = peer.cache.lock() {
+            b.set_cache(std::mem::take(&mut *slot));
+        }
+        let result = endpoint::drive_endpoints(&mut a, &mut b);
+        if let Ok(mut slot) = self.cache.lock() {
+            *slot = a.take_cache();
+        }
+        if let Ok(mut slot) = peer.cache.lock() {
+            *slot = b.take_cache();
+        }
+        result
     }
 }
 
@@ -409,7 +466,9 @@ pub struct SetxReport {
     pub converged: bool,
     /// Decode attempts used (1 = first try; > 1 means the escalation ladder fired).
     pub attempts: u32,
-    /// Payload frames exchanged (sketch + residue phases, all attempts, both directions).
+    /// Payload frames exchanged (sketch + residue phases, all attempts, both
+    /// directions). For a partitioned aggregate this is the **slowest partition's**
+    /// count — partitions run concurrently, so summing would inflate with `parts`.
     pub rounds: usize,
     /// Full conversation transcript at exact wire sizes — both endpoints of a session
     /// record identical totals.

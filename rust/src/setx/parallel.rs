@@ -18,6 +18,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use super::endpoint::{
     build_est_hello, drive_endpoints, negotiate, union_estimate, Endpoint, Negotiated,
 };
+use crate::decoder::DecoderCache;
 use super::{ProtocolKind, Setx, SetxError, SetxReport};
 use crate::hash::hash_u64;
 use crate::metrics::{CommLog, Stats};
@@ -139,6 +140,11 @@ pub fn run_partitioned(
                     };
                     let mut ec = Endpoint::with_negotiated(&cfgs[p], cp, true, nego_cp);
                     let mut es = Endpoint::with_negotiated(&cfgs[p], sp, false, nego_sp);
+                    // This pool already saturates the machine with partition workers;
+                    // serial decoder builds inside each partition avoid an extra
+                    // parts × cores fan-out of construction threads.
+                    ec.set_cache(DecoderCache::with_build_threads(1));
+                    es.set_cache(DecoderCache::with_build_threads(1));
                     local.push(drive_endpoints(&mut ec, &mut es));
                     active.fetch_sub(1, Ordering::SeqCst);
                     p = next.fetch_add(1, Ordering::Relaxed);
@@ -174,7 +180,8 @@ fn empty_report(comm: CommLog, local_is_alice: bool) -> SetxReport {
     SetxReport {
         intersection: Vec::new(),
         local_unique: Vec::new(),
-        kind: ProtocolKind::Bidi,
+        // The escalation floor: stays `Uni` only if *every* partition ran unidirectional.
+        kind: ProtocolKind::Uni,
         converged: true,
         attempts: 1,
         rounds: 0,
@@ -183,19 +190,34 @@ fn empty_report(comm: CommLog, local_is_alice: bool) -> SetxReport {
     }
 }
 
+/// `Bidi` dominates `Uni`: a partitioned run "was unidirectional" only if every
+/// partition's conversation was.
+fn escalate(a: ProtocolKind, b: ProtocolKind) -> ProtocolKind {
+    if a == ProtocolKind::Bidi || b == ProtocolKind::Bidi {
+        ProtocolKind::Bidi
+    } else {
+        ProtocolKind::Uni
+    }
+}
+
 fn merge_into(agg: &mut SetxReport, part: SetxReport) {
     agg.intersection.extend(part.intersection);
     agg.local_unique.extend(part.local_unique);
-    agg.kind = part.kind;
+    // Max-escalation, NOT last-partition-wins: one partition falling back to the
+    // bidirectional ladder must show in the aggregate even if later-merged partitions
+    // stayed unidirectional.
+    agg.kind = escalate(agg.kind, part.kind);
     agg.converged &= part.converged;
     agg.attempts = agg.attempts.max(part.attempts);
+    // Partitions run concurrently, so the paper-sense round count of the aggregate is
+    // the slowest partition's, not the sum (which would inflate linearly with `parts`).
+    agg.rounds = agg.rounds.max(part.rounds);
     agg.comm.extend(&part.comm);
 }
 
 fn finalize(agg: &mut SetxReport) {
     agg.intersection.sort_unstable();
     agg.local_unique.sort_unstable();
-    agg.rounds = agg.comm.payload_frames();
 }
 
 #[cfg(test)]
@@ -231,6 +253,96 @@ mod tests {
         // Mirror accounting holds for the merged logs too.
         assert_eq!(out.client.bytes_sent(), out.server.bytes_received());
         assert_eq!(out.client.total_bytes(), out.server.total_bytes());
+    }
+
+    #[test]
+    fn merge_is_max_escalation_and_max_rounds() {
+        // Direct regression on the aggregation semantics: `kind` must not be
+        // last-partition-wins and `rounds` must not sum across partitions.
+        let mk = |kind, rounds, attempts| SetxReport {
+            intersection: Vec::new(),
+            local_unique: Vec::new(),
+            kind,
+            converged: true,
+            attempts,
+            rounds,
+            comm: CommLog::new(),
+            local_is_alice: true,
+        };
+        let mut agg = empty_report(CommLog::new(), true);
+        merge_into(&mut agg, mk(ProtocolKind::Uni, 1, 1));
+        assert_eq!(agg.kind, ProtocolKind::Uni);
+        merge_into(&mut agg, mk(ProtocolKind::Bidi, 7, 2));
+        // A trailing Uni partition must not mask the escalated one.
+        merge_into(&mut agg, mk(ProtocolKind::Uni, 1, 1));
+        finalize(&mut agg);
+        assert_eq!(agg.kind, ProtocolKind::Bidi, "kind regressed to last-partition-wins");
+        assert_eq!(agg.rounds, 7, "rounds must be the per-partition max, not a sum");
+        assert_eq!(agg.attempts, 2);
+    }
+
+    #[test]
+    fn mixed_subset_split_escalates_kind_without_inflating_rounds() {
+        use crate::setx::DiffSize;
+        // A is a subset of B except for ONE element, and the explicit d slightly
+        // undercounts, so negotiation sees a zero-unique initiator and every partition
+        // opens unidirectionally (Mode::Auto). The partition holding A's unique element
+        // cannot decode unidirectionally (Alice-side mass is unreachable for the
+        // decoder), fails its attempt, and climbs the ladder to bidirectional — a real
+        // mixed Uni/Bidi split.
+        let common: Vec<u64> = (0..4000u64).collect();
+        let mut a = common.clone();
+        a.push(99_999);
+        let mut b = common.clone();
+        b.extend(10_000u64..10_300);
+        // safety 1.5 gives the subset partitions ample sketch headroom, so the ONLY
+        // escalation in the run is the structural one (the A-unique partition).
+        let alice =
+            Setx::builder(&a).diff_size(DiffSize::Explicit(299)).safety(1.5).build().unwrap();
+        let bob =
+            Setx::builder(&b).diff_size(DiffSize::Explicit(299)).safety(1.5).build().unwrap();
+        let out = run_partitioned(&alice, &bob, 4, 2).unwrap();
+        // Exactness first: the escalated partition still recovers everything.
+        assert_eq!(out.client.local_unique, vec![99_999]);
+        assert_eq!(out.server.local_unique, (10_000u64..10_300).collect::<Vec<_>>());
+        assert_eq!(out.client.intersection, common);
+        // The aggregate must surface the escalation even though most partitions stayed
+        // unidirectional (and regardless of merge order).
+        assert_eq!(out.client.kind, ProtocolKind::Bidi, "escalated partition was masked");
+        assert_eq!(out.server.kind, ProtocolKind::Bidi);
+        assert!(out.client.attempts >= 2, "ladder fired in some partition");
+        // Rounds are the slowest partition's count: strictly fewer than the total
+        // payload frames the merged transcript holds (each subset partition adds its own
+        // sketch frame on top).
+        let total_payload = out.client.comm.payload_frames();
+        assert!(out.client.rounds >= 2, "escalated partition spans attempts");
+        assert!(
+            out.client.rounds < total_payload,
+            "rounds {} inflated toward the merged total {}",
+            out.client.rounds,
+            total_payload
+        );
+    }
+
+    #[test]
+    fn pure_subset_split_stays_uni_with_single_round() {
+        use crate::setx::DiffSize;
+        // Exact subset: every partition completes the one-message protocol, so the
+        // aggregate is Uni / 1 attempt / 1 round — not `rounds == parts`.
+        let a: Vec<u64> = (0..4000u64).collect();
+        let mut b = a.clone();
+        b.extend(10_000u64..10_300);
+        let alice =
+            Setx::builder(&a).diff_size(DiffSize::Explicit(300)).safety(1.5).build().unwrap();
+        let bob =
+            Setx::builder(&b).diff_size(DiffSize::Explicit(300)).safety(1.5).build().unwrap();
+        let out = run_partitioned(&alice, &bob, 4, 2).unwrap();
+        assert_eq!(out.client.kind, ProtocolKind::Uni);
+        assert_eq!(out.client.attempts, 1);
+        assert_eq!(out.client.rounds, 1, "rounds must not scale with parts");
+        assert!(out.client.local_unique.is_empty());
+        assert_eq!(out.server.local_unique, (10_000u64..10_300).collect::<Vec<_>>());
+        assert_eq!(out.client.intersection, a);
     }
 
     #[test]

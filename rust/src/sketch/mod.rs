@@ -3,11 +3,21 @@
 //! Because `M` is binary and sparse, the sketch of a set is exactly a counting-Bloom-filter-
 //! shaped vector (a coincidence the paper notes in §3.3), every coordinate is a small
 //! non-negative integer, and both one-shot encoding (O(m) per element) and streaming ±1-sparse
-//! updates (O(m) per update, §4) are cheap.
+//! updates (§4) are cheap.
+//!
+//! The streaming operations (`Sketch::update`, `Residue::add_column`,
+//! `Residue::dot_column`) are O(m) per call **because** they sample the column into a
+//! fixed `[u32; MAX_M]` stack buffer instead of allocating — valid only for
+//! `m ≤ `[`crate::hash::MAX_M`]` = 64`, an invariant every [`crate::hash::ColumnSampler`]
+//! (hence every `CsMatrix`) enforces at construction time, so no allocation-free path here
+//! can ever see a larger `m`. (This guard was once a debug-only assertion that release
+//! builds skipped, leaving a slice panic deep inside the hot loop; validation now happens
+//! once, up front, with a typed error for wire-derived geometry.)
 //!
 //! Coordinates are `i32`: residues (differences of sketches) are signed, and counts beyond
 //! ±2^31 would require |S| ≫ 10^9·l/m, far outside any regime we run.
 
+use crate::hash::MAX_M;
 use crate::matrix::CsMatrix;
 
 /// An integer CS sketch `M·x` for an integer-valued signal `x` (usually 0/1).
@@ -39,9 +49,10 @@ impl Sketch {
     /// This is the §4 data-streaming operation; O(m).
     #[inline]
     pub fn update(&mut self, id: u64, delta: i32) {
-        let mut buf = [0u32; 64];
+        // m ≤ MAX_M is enforced at ColumnSampler construction (see the module docs), so
+        // the stack buffer always fits the column.
+        let mut buf = [0u32; MAX_M as usize];
         let m = self.matrix.m() as usize;
-        debug_assert!(m <= 64, "m > 64 unsupported by the stack buffer");
         for &r in self.matrix.column_into(id, &mut buf[..m]) {
             self.counts[r as usize] += delta;
         }
@@ -102,7 +113,8 @@ impl Residue {
     /// Add `delta`·column(id). Used by decoders when (un)pursuing a coordinate.
     #[inline]
     pub fn add_column(&mut self, id: u64, delta: i32) {
-        let mut buf = [0u32; 64];
+        // m ≤ MAX_M by ColumnSampler construction (module docs).
+        let mut buf = [0u32; MAX_M as usize];
         let m = self.matrix.m() as usize;
         for &r in self.matrix.column_into(id, &mut buf[..m]) {
             self.values[r as usize] += delta;
@@ -120,7 +132,8 @@ impl Residue {
     /// (eq. B.1: the optimal L2 pursuit step is `δ_i = rᵀm_i / m`).
     #[inline]
     pub fn dot_column(&self, id: u64) -> i32 {
-        let mut buf = [0u32; 64];
+        // m ≤ MAX_M by ColumnSampler construction (module docs).
+        let mut buf = [0u32; MAX_M as usize];
         let m = self.matrix.m() as usize;
         let mut dot = 0i32;
         for &r in self.matrix.column_into(id, &mut buf[..m]) {
