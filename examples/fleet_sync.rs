@@ -1,0 +1,95 @@
+//! Fleet sync: one long-lived `SetxServer` holding a hot set, many clients delta-syncing
+//! against it — the one-server-many-clients shape of the paper's deployment scenarios
+//! (block propagation, data-center sync).
+//!
+//! Each client drifts between rounds (it gains a few local writes and misses the
+//! server's newest elements), reconciles over TCP, and verifies the intersection
+//! exactly. The server's decoder pool turns the fleet's repeated same-geometry sessions
+//! into cache hits — watch the `pool_hit_rate` in the final stats line.
+//!
+//! Run: `cargo run --release --offline --example fleet_sync`
+
+use commonsense::data::synth;
+use commonsense::server::SetxServer;
+use commonsense::setx::transport::TcpTransport;
+use commonsense::setx::{DiffSize, Setx};
+
+const COMMON: usize = 10_000;
+const CLIENT_UNIQUE: usize = 80;
+const SERVER_UNIQUE: usize = 120;
+const CLIENTS: u64 = 6;
+const ROUNDS: u64 = 3;
+
+/// Every endpoint of the fleet shares this builder shape (equal config fingerprints).
+/// Declaring the known difference size keeps all sessions on one matrix geometry — the
+/// decoder-pool sweet spot; see the `server` module docs.
+fn endpoint(set: &[u64]) -> Setx {
+    Setx::builder(set)
+        .diff_size(DiffSize::Explicit(CLIENT_UNIQUE + SERVER_UNIQUE))
+        .build()
+        .expect("valid fleet config")
+}
+
+fn main() {
+    // Host set: a common core every client knows, plus SERVER_UNIQUE fresh elements.
+    let mut rng = commonsense::hash::Xoshiro256::seed_from_u64(4242);
+    let ids = synth::distinct_ids(
+        COMMON + SERVER_UNIQUE + (CLIENTS * ROUNDS * CLIENT_UNIQUE as u64) as usize,
+        &mut rng,
+    );
+    let core = &ids[..COMMON];
+    let mut host = core.to_vec();
+    host.extend_from_slice(&ids[COMMON..COMMON + SERVER_UNIQUE]);
+
+    let server = SetxServer::builder(endpoint(&host))
+        .workers(3)
+        .bind("127.0.0.1:0")
+        .expect("bind fleet server");
+    let addr = server.local_addr();
+    println!("fleet server on {addr}: |host| = {}, {CLIENTS} clients × {ROUNDS} rounds", host.len());
+
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let ids = &ids;
+            let core_len = COMMON;
+            scope.spawn(move || {
+                for round in 0..ROUNDS {
+                    // Delta drift: this round's local writes are CLIENT_UNIQUE ids nobody
+                    // else holds (disjoint slices of the shared pool).
+                    let offset = COMMON
+                        + SERVER_UNIQUE
+                        + ((c * ROUNDS + round) * CLIENT_UNIQUE as u64) as usize;
+                    let mut set = ids[..core_len].to_vec();
+                    set.extend_from_slice(&ids[offset..offset + CLIENT_UNIQUE]);
+                    let alice = endpoint(&set);
+                    let mut transport =
+                        TcpTransport::connect(addr).expect("connect to fleet server");
+                    let report = alice.run(&mut transport).expect("fleet sync");
+                    // The exact answer is known: client ∩ host = the common core.
+                    let mut expected = ids[..core_len].to_vec();
+                    expected.sort_unstable();
+                    assert_eq!(report.intersection, expected, "client {c} round {round}");
+                    println!(
+                        "client {c} round {round}: verified |∩| = {} in {} B ({:?}, {} attempt(s))",
+                        report.intersection.len(),
+                        report.total_bytes(),
+                        report.kind,
+                        report.attempts
+                    );
+                }
+            });
+        }
+    });
+
+    let stats = server.shutdown();
+    println!("\nfinal server stats:\n{}", stats.to_json());
+    assert_eq!(stats.sessions_served, CLIENTS * ROUNDS);
+    assert_eq!(stats.sessions_failed, 0);
+    println!(
+        "decoder pool: {} hits / {} misses (hit rate {:.2}) — construction paid ~once per worker, \
+         not once per session",
+        stats.pool.hits,
+        stats.pool.misses,
+        stats.pool_hit_rate()
+    );
+}

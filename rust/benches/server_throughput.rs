@@ -1,0 +1,77 @@
+//! Multi-client server throughput: sessions/sec of a [`SetxServer`] under the verifying
+//! loadgen fleet, at clients = {1, 8, 32}, with the shared decoder pool on vs off.
+//!
+//! The pool-off column is the ablation: it pays full decoder construction per session,
+//! so the on/off ratio is the server-side payoff of PR 3's decoder-reuse machinery at
+//! fleet scale. Every session's intersection is verified — a throughput number from
+//! wrong answers would be worthless.
+//!
+//! `cargo bench --bench server_throughput -- [--json] [--smoke]` — `--json` appends one
+//! record per configuration to the repo-root `BENCH_server.json` trajectory
+//! ([`commonsense::metrics::BENCH_SERVER_JSON`]): `mean_ns`/`min_ns` are wall-clock per
+//! session (the inverse of sessions/sec; concurrency included), `iters` the sessions
+//! completed.
+
+use commonsense::metrics::{append_bench_json, BenchProfile, BenchResult, BENCH_SERVER_JSON};
+use commonsense::server::loadgen::{self, LoadgenConfig};
+use commonsense::server::SetxServer;
+use std::time::Instant;
+
+const WORKERS: usize = 4;
+
+fn main() {
+    let profile = BenchProfile::from_env_args();
+    // Smoke keeps the headline shape (same clients sweep, pool on vs off) at CI scale.
+    let common = if profile.smoke { 4_000 } else { 50_000 };
+    let rounds = if profile.smoke { 2 } else { 4 };
+    let mut results = Vec::new();
+    for pool_on in [true, false] {
+        for clients in [1usize, 8, 32] {
+            let cfg = LoadgenConfig { clients, rounds, common, ..LoadgenConfig::default() };
+            let (host, _, _) = cfg.workload();
+            let endpoint = cfg.endpoint(&host).expect("loadgen config is always valid");
+            let server = SetxServer::builder(endpoint)
+                .workers(WORKERS)
+                .max_inflight_sessions(2 * clients + 8)
+                .pool_capacity(if pool_on { 4 * WORKERS } else { 0 })
+                .bind("127.0.0.1:0")
+                .expect("bind ephemeral loopback listener");
+            let t0 = Instant::now();
+            let report = loadgen::run(server.local_addr(), &cfg);
+            let elapsed = t0.elapsed();
+            let stats = server.shutdown();
+            assert!(
+                report.verified(),
+                "throughput of wrong answers is meaningless: {:?}",
+                report.failures
+            );
+            let sessions = report.sessions_ok.max(1);
+            let per_session = elapsed / sessions as u32;
+            let name = format!(
+                "server_throughput common={common} clients={clients} rounds={rounds} \
+                 workers={WORKERS} pool={}",
+                if pool_on { "on" } else { "off" }
+            );
+            println!(
+                "bench {name:<72} {:>8.1} sessions/s (pool hit rate {:.3}, peak workers {})",
+                report.sessions_per_sec(),
+                stats.pool_hit_rate(),
+                stats.peak_workers
+            );
+            results.push(BenchResult {
+                name,
+                mean: per_session,
+                min: per_session,
+                iters: sessions as u64,
+            });
+        }
+    }
+    if profile.json {
+        append_bench_json(
+            BENCH_SERVER_JSON,
+            &results,
+            profile.fingerprint("server_throughput"),
+        )
+        .expect("append BENCH_server.json");
+    }
+}

@@ -1,13 +1,20 @@
-//! TCP serve/connect helpers — thin wrappers that pair a [`Setx`] endpoint with a
-//! [`TcpTransport`].
+//! **One-shot** TCP serve/connect helpers — thin wrappers that pair a [`Setx`] endpoint
+//! with a [`TcpTransport`] for exactly one session.
 //!
 //! All protocol logic lives in the facade's endpoint state machine
 //! ([`crate::setx`]); all framing lives in [`crate::setx::transport`] (length-prefixed
 //! reads hardened against adversarial length fields). This module only does the socket
 //! rendezvous: `connect` dials out (becoming the client/tie-break end), `serve` accepts
-//! one session on an already-bound listener. Both return the same [`SetxReport`] every
+//! one session on an already-bound listener — through the same
+//! [`TcpTransport::accept_with_timeouts`] helper the multi-client daemon uses — and
+//! **returns after that single session**. Both return the same [`SetxReport`] every
 //! other transport returns, with byte accounting identical to an in-memory run of the
 //! same workload *by construction*.
+//!
+//! To keep a hot set online and reconcile many concurrent clients against it —
+//! bounded workers, per-connection timeouts, admission control, a shared decoder pool —
+//! use [`crate::server::SetxServer`] instead; this module stays the documented
+//! point-to-point path.
 
 use crate::setx::transport::TcpTransport;
 use crate::setx::{Setx, SetxError, SetxReport};
@@ -19,11 +26,14 @@ pub fn connect(addr: impl ToSocketAddrs, setx: &Setx) -> Result<SetxReport, Setx
     setx.run(&mut transport)
 }
 
-/// Accept one connection on `listener` and run the endpoint to completion (this end is
-/// the server). The conversation's parameters come from the shared config + handshake;
-/// the server needs nothing beyond its own `Setx`.
+/// Accept **one** connection on `listener` and run the endpoint to completion (this end
+/// is the server), then return. The conversation's parameters come from the shared
+/// config + handshake; the server needs nothing beyond its own `Setx`. No timeouts are
+/// applied (a one-shot caller is already waiting on this session — pass your own via
+/// [`TcpTransport::accept_with_timeouts`] + [`Setx::run`] if the peer is untrusted);
+/// for a long-lived multi-connection server use [`crate::server::SetxServer`].
 pub fn serve(listener: &TcpListener, setx: &Setx) -> Result<SetxReport, SetxError> {
-    let mut transport = TcpTransport::accept(listener)?;
+    let mut transport = TcpTransport::accept_with_timeouts(listener, None, None)?;
     setx.run(&mut transport)
 }
 

@@ -289,6 +289,10 @@ pub struct MpDecoder {
     index: IdIndex,
     /// Reuse-cache discriminator: hash of (matrix fingerprint, candidates, side).
     key: u64,
+    /// The oracle's [`ColumnOracle::structure_fingerprint`] at build time — together
+    /// with `(l, m)` this is the exact-geometry key a shared decoder pool files this
+    /// decoder under (see [`crate::decoder::GeometryKey`]).
+    matrix_fp: u64,
     /// Candidate columns, CSR (j → rows).
     cols: Csr,
     /// Reverse lookup, CSR (row → candidate indices).
@@ -352,6 +356,7 @@ impl MpDecoder {
             ids: candidates.to_vec(),
             index,
             key,
+            matrix_fp: oracle.structure_fingerprint(),
             cols: Csr { offsets: col_offsets, items: col_items },
             rev: Csr { offsets: rev_offsets, items: rev_items },
             x: vec![false; n],
@@ -401,6 +406,13 @@ impl MpDecoder {
     /// invertible-mixer hash alone would be forgeable).
     pub fn matrix_dims(&self) -> (u32, u32) {
         (self.l, self.m)
+    }
+
+    /// The build-time matrix structure fingerprint (the geometry half of the reuse keys;
+    /// for the production [`crate::matrix::CsMatrix`] it is a pure function of
+    /// `(seed, l, m)`).
+    pub fn matrix_fingerprint(&self) -> u64 {
+        self.matrix_fp
     }
 
     /// Order-sensitive digest of the constructed CSR structures (column cache + reverse

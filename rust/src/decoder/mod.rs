@@ -52,6 +52,50 @@ impl Default for DecoderConfig {
     }
 }
 
+/// Exact-geometry key of a constructed decoder's matrix: the oracle's
+/// [`ColumnOracle::structure_fingerprint`] plus the exact `(l, m)` dimensions. For the
+/// production [`crate::matrix::CsMatrix`] the fingerprint is a pure function of
+/// `(seed, l, m)`, so this key *is* the `(seed, l, m)` geometry — a shared decoder pool
+/// ([`crate::server::DecoderPool`]) files parked decoders under it. The key deliberately
+/// excludes the candidate set: geometry narrows the search, and the full
+/// [`MpDecoder::cache_key`] (matrix + candidates + side) still decides actual reuse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GeometryKey {
+    pub matrix_fingerprint: u64,
+    pub l: u32,
+    pub m: u32,
+}
+
+impl GeometryKey {
+    /// The geometry key decoders built against `oracle` will carry.
+    pub fn of_oracle<C: ColumnOracle + ?Sized>(oracle: &C) -> GeometryKey {
+        GeometryKey { matrix_fingerprint: oracle.structure_fingerprint(), l: oracle.l(), m: oracle.m() }
+    }
+
+    /// The geometry key a built decoder files under.
+    pub fn of_decoder(dec: &MpDecoder) -> GeometryKey {
+        let (l, m) = dec.matrix_dims();
+        GeometryKey { matrix_fingerprint: dec.matrix_fingerprint(), l, m }
+    }
+}
+
+/// A concurrency-safe store of parked decoders shared across sessions (and threads).
+///
+/// [`DecoderCache`] consults one of these (when attached via
+/// [`DecoderCache::with_shared_store`]) so that *independent* sessions — e.g. the worker
+/// pool of [`crate::server::SetxServer`], where thousands of clients reconcile against
+/// one hot set — reuse each other's constructed decoders, not just their own
+/// conversation's. `take` must return only a decoder that is interchangeable with a
+/// fresh `(oracle, candidates, side)` build: geometry equal to `geo` *and*
+/// [`MpDecoder::cache_key`] equal to `want_key` (the same double check the one-slot
+/// cache performs).
+pub trait DecoderStore: Send + Sync {
+    /// Remove and return a parked decoder validating against (`geo`, `want_key`), if any.
+    fn take(&self, geo: GeometryKey, want_key: u64) -> Option<MpDecoder>;
+    /// Park a finished decoder under its geometry for future `take`s.
+    fn put(&self, geo: GeometryKey, dec: MpDecoder);
+}
+
 /// A one-slot reuse cache for constructed decoders.
 ///
 /// Decoder construction (CSR + reverse lookup over all n candidates) dwarfs everything
@@ -63,14 +107,22 @@ impl Default for DecoderConfig {
 /// when the cache key matches, and builds anew otherwise (e.g. after an escalation-ladder
 /// rung redraws the matrix). The `setx` facade threads one of these through its endpoint
 /// and sessions so the hot path skips rebuilds wherever the matrix survives.
+///
+/// With a [`DecoderStore`] attached ([`DecoderCache::with_shared_store`]) the cache
+/// becomes a *view onto a shared pool*: checkouts that miss the local slot consult the
+/// store, and finished decoders are parked in the store (instead of the slot) so other
+/// sessions can pick them up — the [`crate::server`] reuse path.
 #[derive(Default)]
 pub struct DecoderCache {
     slot: Option<MpDecoder>,
     /// When set, overrides [`DecoderConfig::build_threads`] for every build this cache
     /// performs — drivers that are already running many sessions in parallel (the
-    /// partitioned pool) pin this to 1 so nested construction pools don't oversubscribe
-    /// the machine `parts × cores`-fold.
+    /// partitioned pool, the server worker pool) pin this to 1 so nested construction
+    /// pools don't oversubscribe the machine `parts × cores`-fold.
     build_threads: Option<usize>,
+    /// Cross-session reuse: consulted after the local slot on checkout, and the park
+    /// target on `store` (see the type docs).
+    shared: Option<std::sync::Arc<dyn DecoderStore>>,
 }
 
 impl DecoderCache {
@@ -81,11 +133,19 @@ impl DecoderCache {
     /// A cache whose builds always use exactly `threads` construction workers,
     /// regardless of the per-checkout config (see the field docs).
     pub fn with_build_threads(threads: usize) -> Self {
-        DecoderCache { slot: None, build_threads: Some(threads) }
+        DecoderCache { slot: None, build_threads: Some(threads), shared: None }
+    }
+
+    /// Attach a shared [`DecoderStore`]: checkouts fall back to it and finished decoders
+    /// are parked in it, so concurrent sessions pool their construction work.
+    pub fn with_shared_store(mut self, store: std::sync::Arc<dyn DecoderStore>) -> Self {
+        self.shared = Some(store);
+        self
     }
 
     /// A decoder for exactly `(oracle, candidates, side)`: the cached one when its key
-    /// matches (reset, with `config` applied), a fresh build otherwise.
+    /// matches (reset, with `config` applied), else one from the shared store (same
+    /// validation), else a fresh build.
     pub fn checkout<C: ColumnOracle + Sync>(
         &mut self,
         oracle: &C,
@@ -108,15 +168,28 @@ impl DecoderCache {
                 return dec;
             }
         }
+        if let Some(store) = &self.shared {
+            if let Some(mut dec) = store.take(GeometryKey::of_oracle(oracle), want) {
+                dec.set_config(config);
+                dec.reset_signal();
+                return dec;
+            }
+        }
         MpDecoder::with_config(oracle, candidates, side, config)
     }
 
-    /// Park a finished decoder for future reuse (replaces any previous occupant).
+    /// Park a finished decoder for future reuse: in the shared store when one is
+    /// attached (so any session can reuse it), else in the local slot (replacing any
+    /// previous occupant).
     pub fn store(&mut self, dec: MpDecoder) {
-        self.slot = Some(dec);
+        match &self.shared {
+            Some(store) => store.put(GeometryKey::of_decoder(&dec), dec),
+            None => self.slot = Some(dec),
+        }
     }
 
-    /// Whether a decoder is currently parked.
+    /// Whether a decoder is currently parked in the local slot (a shared store keeps its
+    /// own inventory).
     pub fn is_loaded(&self) -> bool {
         self.slot.is_some()
     }
@@ -127,6 +200,7 @@ impl std::fmt::Debug for DecoderCache {
         f.debug_struct("DecoderCache")
             .field("loaded", &self.slot.is_some())
             .field("candidates", &self.slot.as_ref().map(|d| d.num_candidates()))
+            .field("shared", &self.shared.is_some())
             .finish()
     }
 }

@@ -50,10 +50,12 @@
 //!   the escalation ladder. **Start here**; drop to [`protocol`] only for manual tuning.
 //! * **Baselines** — [`baselines`]: IBLT/Difference Digest, Graphene, CBF approximate SetX,
 //!   PinSketch, and the information-theoretic [`bounds`].
-//! * **Systems layer** — [`streaming`] (§4 digests), [`data`] (synthetic + Ethereum-sim
+//! * **Systems layer** — [`server`] (the multi-client reconciliation daemon below),
+//!   [`streaming`] (§4 digests), [`data`] (synthetic + Ethereum-sim
 //!   workloads), [`runtime`] (PJRT/XLA AOT artifact execution), [`coordinator`] (thin
-//!   TCP serve/connect helpers and the legacy-shaped parallel entry point; threaded,
-//!   dependency-free — no tokio in the offline image's crate set, see DESIGN.md §4).
+//!   one-shot TCP serve/connect helpers and the legacy-shaped parallel entry point;
+//!   threaded, dependency-free — no tokio in the offline image's crate set, see
+//!   DESIGN.md §4).
 //!
 //! ## Architecture: sans-io all the way down
 //!
@@ -67,6 +69,31 @@
 //! frames, and byte accounting is identical across them *by construction*. New transports
 //! (async, sharded, multi-tenant) implement `send`/`recv`/`is_client` and inherit the
 //! whole protocol, including parameter estimation and self-healing retries.
+//!
+//! ## Serving many clients
+//!
+//! Two server shapes exist, and they are not interchangeable:
+//!
+//! * **One-shot** — [`coordinator::tcp::serve`] accepts a single connection, runs a
+//!   single session, and returns. Right for point-to-point syncs and tests.
+//! * **Daemon** — [`server::SetxServer`] keeps a hot host set online and reconciles any
+//!   number of concurrent clients against it: an accept loop feeds a bounded worker
+//!   pool, every accepted socket gets read/write timeouts (a stalled client cannot wedge
+//!   a worker), and connections beyond `max_inflight_sessions` receive a typed `Busy`
+//!   frame that clients see as [`setx::SetxError::ServerBusy`] (with a retry hint)
+//!   rather than a hang or a reset. [`server::ServerHandle::shutdown`] drains queued
+//!   sessions and returns final [`server::ServerStats`].
+//!
+//! The daemon's performance core is the [`server::DecoderPool`]: decoder construction
+//! over the host set dominates each session's local cost, and clients syncing against
+//! one hot set keep negotiating the same matrix geometry — so finished decoders are
+//! parked in a concurrency-safe LRU pool keyed by exact geometry `(seed, l, m)` and
+//! revalidated on checkout by the full decoder cache key (matrix + candidates + side;
+//! the same double check the one-slot [`decoder::DecoderCache`] performs). Thousands of
+//! same-geometry sessions then pay for construction only `workers` times. Hit/miss/
+//! eviction counters surface in `ServerStats`, and [`server::loadgen`] (also the
+//! `commonsense loadgen` CLI) provides a verifying many-client workload; the
+//! `server_throughput` bench tracks sessions/sec with the pool on vs off.
 //!
 //! ## Performance
 //!
@@ -116,6 +143,7 @@ pub mod matrix;
 pub mod metrics;
 pub mod protocol;
 pub mod runtime;
+pub mod server;
 pub mod setx;
 pub mod sketch;
 pub mod smf;

@@ -1,11 +1,15 @@
 //! The `commonsense` CLI: the unified `setx` driver, experiment harnesses, the l-tuner,
-//! and TCP serve/connect roles.
+//! the multi-client reconciliation daemon (`serve`) with its verifying load generator
+//! (`loadgen`), and a one-shot client role (`connect`).
 //!
 //! (Arg parsing is hand-rolled: the image's offline crate set has no clap — DESIGN.md §4.)
 
 use commonsense::coordinator::{connect, serve};
 use commonsense::data::synth;
 use commonsense::experiments;
+use commonsense::server::loadgen::{self, LoadgenConfig};
+use commonsense::server::SetxServer;
+use commonsense::setx::transport::TcpTransport;
 use commonsense::setx::{parallel, transport, DiffSize, Mode, Setx, SetxReport};
 use std::net::TcpListener;
 
@@ -19,15 +23,32 @@ USAGE:
                                              (one front door, three transports; d is
                                               estimated in the handshake unless
                                               --explicit-d is given)
-  commonsense serve --listen ADDR            (server role; set = synthetic demo workload)
-  commonsense connect --addr ADDR            (client role; set = synthetic demo workload)
+  commonsense serve [--listen ADDR] [--workers W] [--max-inflight M] [--pool-capacity C]
+                    [--no-pool] [--sessions K] [--common N] [--client-unique X]
+                    [--server-unique Y] [--seed S] [--estimate-d]
+                                             (multi-client daemon: keeps the host set
+                                              online until killed, or until K sessions
+                                              when --sessions is given; final stats as
+                                              one JSON line)
+  commonsense loadgen [--addr ADDR] [--clients N] [--rounds R] [--common N]
+                      [--client-unique X] [--server-unique Y] [--seed S]
+                      [--busy-retries K] [--estimate-d]
+                                             (N concurrent verified clients against a
+                                              `commonsense serve` with the same workload
+                                              flags — including --seed; exits non-zero
+                                              on any mismatch)
+  commonsense connect --addr ADDR            (one client, one sync, same workload flags)
   commonsense exp <fig2a|fig2b|table2|examples|ablations|all> [--scale N] [--instances K] [--eth-accounts N]
   commonsense tune [--n N] [--d D] [--bidi] [--trials K]
   commonsense selftest                       (quick end-to-end sanity run)
 
-Defaults: --transport mem, --common 50000, --a-unique 200, --b-unique 300, --parts 16,
-          --threads 4, --scale 50000, --instances 5, --eth-accounts 300000, --n 100000,
-          --d 1000."
+Defaults: --transport mem, --common 50000 (serve/loadgen/connect: 20000), --a-unique 200,
+          --b-unique 300, --parts 16, --threads 4, --scale 50000, --instances 5,
+          --eth-accounts 300000, --n 100000, --d 1000, --workers 4, --max-inflight 64,
+          --clients 8, --rounds 2, --client-unique 100, --server-unique 200, --seed 42,
+          --busy-retries 3. serve/loadgen/connect must share the workload flags
+          (including --seed) and declare the exactly-known d (one shared matrix
+          geometry, the decoder-pool sweet spot) unless --estimate-d is given."
     );
     std::process::exit(2)
 }
@@ -112,6 +133,24 @@ fn demo_setx(set: &[u64], args: &Args) -> Setx {
         eprintln!("invalid config: {e}");
         usage();
     })
+}
+
+/// Shared `serve`/`loadgen`/`connect` workload shape from CLI flags: both ends of the
+/// fleet must be built from the same flags so their config fingerprints (and, with the
+/// default explicit d, their negotiated matrix geometry) match.
+fn fleet_config(args: &Args) -> LoadgenConfig {
+    LoadgenConfig {
+        // Clamped ≥ 1: `connect` is fleet client 0, and a zero-session loadgen would
+        // vacuously report `verified = true`.
+        clients: args.get("clients", 8).max(1),
+        rounds: args.get("rounds", 2).max(1),
+        common: args.get("common", 20_000),
+        client_unique: args.get("client-unique", 100),
+        server_unique: args.get("server-unique", 200),
+        seed: args.get("seed", 42) as u64,
+        busy_retries: args.get("busy-retries", 3),
+        estimate_diff: args.has("estimate-d"),
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -204,22 +243,110 @@ fn main() -> anyhow::Result<()> {
             experiments::tune_l(n, d, args.has("bidi"), trials, true);
         }
         "serve" => {
+            // The multi-client daemon (crate::server::SetxServer). The host set comes
+            // from the shared serve/loadgen workload flags so a `commonsense loadgen`
+            // with the same flags speaks the same config fingerprint.
             let addr = args.str("listen", "127.0.0.1:7700");
-            let (_, b) = synth::overlap_pair(args.get("common", 20_000), 100, 200, 42);
-            let listener = TcpListener::bind(&addr)?;
-            println!("server listening on {addr} (|B| = {})", b.len());
-            let bob = demo_setx(&b, &args);
-            let report = serve(&listener, &bob)?;
-            print_report("server", &report);
+            let cfg = fleet_config(&args);
+            let (host, _, _) = cfg.workload();
+            let endpoint = cfg.endpoint(&host).unwrap_or_else(|e| {
+                eprintln!("invalid config: {e}");
+                usage();
+            });
+            let workers = args.get("workers", 4);
+            let pool_capacity = if args.has("no-pool") {
+                0
+            } else {
+                args.get("pool-capacity", 4 * workers.max(1))
+            };
+            let sessions = args.get("sessions", 0);
+            let server = SetxServer::builder(endpoint)
+                .workers(workers)
+                .max_inflight_sessions(args.get("max-inflight", 64))
+                .pool_capacity(pool_capacity)
+                .bind(&addr)?;
+            println!(
+                "serving |B| = {} on {} (workers {workers}, max inflight {}, pool capacity {}, \
+                 {})",
+                host.len(),
+                server.local_addr(),
+                args.get("max-inflight", 64),
+                pool_capacity,
+                if sessions == 0 {
+                    "until killed".to_string()
+                } else {
+                    format!("until {sessions} sessions")
+                }
+            );
+            let mut last_done = 0u64;
+            loop {
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                let stats = server.stats();
+                let done = stats.sessions_served + stats.sessions_failed;
+                if done != last_done {
+                    last_done = done;
+                    println!("{}", stats.to_json());
+                }
+                if sessions > 0 && done >= sessions as u64 {
+                    break;
+                }
+            }
+            let stats = server.shutdown();
+            println!("{}", stats.to_json());
+            if stats.sessions_failed > 0 {
+                std::process::exit(1);
+            }
+        }
+        "loadgen" => {
+            let addr = args.str("addr", "127.0.0.1:7700");
+            let cfg = fleet_config(&args);
+            println!(
+                "loadgen: {} clients × {} rounds against {addr} (|common| = {}, d = {})",
+                cfg.clients,
+                cfg.rounds,
+                cfg.common,
+                cfg.true_d()
+            );
+            let report = loadgen::run(&addr, &cfg);
+            println!(
+                "loadgen: {} ok / {} failed / {} busy-rejections, {} B total, \
+                 {:.1} sessions/s, verified = {}",
+                report.sessions_ok,
+                report.sessions_failed,
+                report.busy_rejections,
+                report.total_bytes,
+                report.sessions_per_sec(),
+                report.verified()
+            );
+            for failure in &report.failures {
+                eprintln!("loadgen failure: {failure}");
+            }
+            if !report.verified() {
+                std::process::exit(1);
+            }
         }
         "connect" => {
+            // One client, one verified sync against a `commonsense serve` daemon started
+            // with the same workload flags (it is loadgen client 0).
             let addr = args.str("addr", "127.0.0.1:7700");
-            let common = args.get("common", 20_000);
-            let (a, _) = synth::overlap_pair(common, 100, 200, 42);
-            let alice = demo_setx(&a, &args);
-            println!("client connecting to {addr} (|A| = {})", a.len());
-            let report = connect(&addr, &alice)?;
+            let cfg = fleet_config(&args);
+            let (host, clients, expected) = cfg.workload();
+            let alice = cfg.endpoint(&clients[0]).unwrap_or_else(|e| {
+                eprintln!("invalid config: {e}");
+                usage();
+            });
+            println!(
+                "client connecting to {addr} (|A| = {}, host |B| = {})",
+                clients[0].len(),
+                host.len()
+            );
+            let report = alice.run(&mut TcpTransport::connect(&addr)?)?;
             print_report("client", &report);
+            if report.intersection != expected {
+                eprintln!("intersection MISMATCH against the exactly-known answer");
+                std::process::exit(1);
+            }
+            println!("intersection verified ({} elements)", expected.len());
         }
         "selftest" => {
             let (a, b) = synth::overlap_pair(10_000, 100, 150, 7);

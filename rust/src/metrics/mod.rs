@@ -254,6 +254,10 @@ pub const BENCH_DECODE_JSON: &str = "BENCH_decode.json";
 /// (`fig2a_unidirectional`, `fig2b_bidirectional`, `table2_ethereum`), repo-root relative.
 pub const BENCH_PROTOCOL_JSON: &str = "BENCH_protocol.json";
 
+/// Trajectory file for the multi-client server bench (`server_throughput`: sessions/sec
+/// at clients = {1, 8, 32}, decoder pool on vs off), repo-root relative.
+pub const BENCH_SERVER_JSON: &str = "BENCH_server.json";
+
 /// Shared CLI profile of the self-harnessed bench targets:
 /// `cargo bench --bench <name> -- [--json] [--smoke]`.
 ///

@@ -115,6 +115,7 @@ pub(crate) fn label(msg: &Msg) -> &'static str {
         Msg::Sketch(_) => "sketch",
         Msg::Round { .. } => "round",
         Msg::Confirm { .. } => "confirm",
+        Msg::Busy { .. } => "busy",
     }
 }
 
@@ -122,7 +123,7 @@ pub(crate) fn label(msg: &Msg) -> &'static str {
 /// `Setx` facade, so per-phase breakdowns agree by construction).
 pub fn frame_phase(msg: &Msg) -> CommPhase {
     match msg {
-        Msg::EstHello { .. } | Msg::Hello { .. } => CommPhase::Handshake,
+        Msg::EstHello { .. } | Msg::Hello { .. } | Msg::Busy { .. } => CommPhase::Handshake,
         Msg::Sketch(_) => CommPhase::Sketch,
         Msg::Round { .. } => CommPhase::Residue,
         Msg::Confirm { .. } => CommPhase::Confirm,

@@ -71,6 +71,16 @@ pub enum Msg {
         /// 0-based index of the attempt being confirmed (both sides must agree).
         attempt: u32,
     },
+    /// Admission-control rejection: a [`crate::server::SetxServer`] at its
+    /// `max_inflight_sessions` cap answers a new connection with this frame and closes,
+    /// instead of letting the client hang on a never-served handshake (or see a bare
+    /// connection reset). The client surfaces it as
+    /// [`crate::setx::SetxError::ServerBusy`].
+    Busy {
+        /// Server's back-off hint in milliseconds (0 = no hint; clients should add their
+        /// own jitter either way).
+        retry_after_ms: u32,
+    },
 }
 
 /// `Confirm::reason` values.
@@ -87,6 +97,7 @@ const TYPE_SKETCH: u8 = 2;
 const TYPE_ROUND: u8 = 3;
 const TYPE_EST_HELLO: u8 = 4;
 const TYPE_CONFIRM: u8 = 5;
+const TYPE_BUSY: u8 = 6;
 
 /// Encoded length of a LEB128 varint.
 fn varint_len(v: u64) -> usize {
@@ -107,6 +118,7 @@ impl Msg {
                     + minhash.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
             }
             Msg::Confirm { attempt, .. } => 2 + varint_len(*attempt as u64),
+            Msg::Busy { retry_after_ms } => varint_len(*retry_after_ms as u64),
             Msg::Hello {
                 l,
                 m,
@@ -176,6 +188,10 @@ impl Msg {
                 body.push(*reason);
                 put_varint(&mut body, *attempt as u64);
                 TYPE_CONFIRM
+            }
+            Msg::Busy { retry_after_ms } => {
+                put_varint(&mut body, *retry_after_ms as u64);
+                TYPE_BUSY
             }
             Msg::Hello {
                 l,
@@ -293,6 +309,13 @@ impl Msg {
                     return None;
                 }
                 Msg::Confirm { ok, reason, attempt }
+            }
+            TYPE_BUSY => {
+                let retry_after_ms = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                if off != body.len() {
+                    return None;
+                }
+                Msg::Busy { retry_after_ms }
             }
             TYPE_HELLO => {
                 let l = take_varint(body, &mut off)?;
@@ -435,6 +458,32 @@ mod tests {
         // Unknown reason codes are rejected.
         let bad = Msg::Confirm { ok: false, reason: 99, attempt: 1 };
         assert!(Msg::from_bytes(&bad.to_bytes()).is_none());
+    }
+
+    #[test]
+    fn busy_roundtrip_and_validation() {
+        for msg in [Msg::Busy { retry_after_ms: 0 }, Msg::Busy { retry_after_ms: 120_000 }] {
+            let bytes = msg.to_bytes();
+            let (back, used) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(back, msg);
+            assert_eq!(used, bytes.len());
+            assert_eq!(msg.wire_len(), bytes.len());
+        }
+        // Trailing garbage in the body is rejected.
+        let mut body = Vec::new();
+        put_varint(&mut body, 100);
+        body.push(0xEE);
+        let mut frame = vec![TYPE_BUSY];
+        put_varint(&mut frame, body.len() as u64);
+        frame.extend_from_slice(&body);
+        assert!(Msg::from_bytes(&frame).is_none());
+        // A hint that overflows u32 is rejected.
+        let mut body = Vec::new();
+        put_varint(&mut body, u64::MAX);
+        let mut frame = vec![TYPE_BUSY];
+        put_varint(&mut frame, body.len() as u64);
+        frame.extend_from_slice(&body);
+        assert!(Msg::from_bytes(&frame).is_none());
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! A verifying load generator for [`super::SetxServer`]: N concurrent clients, each with
+//! its own perturbation of the host set, each *asserting* the intersection it gets back.
+//!
+//! The workload is the one-server-many-clients shape of the paper's deployment stories:
+//! every client shares a large common core with the host set, holds `client_unique`
+//! elements of its own, and is missing the server's `server_unique` elements — so the
+//! true difference size is `client_unique + server_unique` for every client, and (with
+//! the default explicit-d config) every session negotiates the **same matrix geometry**,
+//! which is precisely the regime the shared [`super::DecoderPool`] exists for. Each
+//! client runs `rounds` back-to-back syncs (the steady-state delta-sync pattern), and a
+//! [`SetxError::ServerBusy`] answer is retried with the server's back-off hint.
+//!
+//! Every returned intersection is compared against the exactly-known answer (the common
+//! core): the generator is a correctness harness first and a throughput meter second.
+//! It backs the `commonsense loadgen` CLI and the `server_throughput` bench.
+
+use crate::data::synth;
+use crate::hash::Xoshiro256;
+use crate::setx::transport::TcpTransport;
+use crate::setx::{DiffSize, Setx, SetxError};
+use std::net::ToSocketAddrs;
+use std::time::{Duration, Instant};
+
+/// Workload + fleet shape. `Default` is the CLI default: 8 clients × 2 rounds over a
+/// 20 000-element core with 100 client-unique / 200 server-unique elements.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Sequential syncs per client (≥ 2 exercises client-side decoder reuse too).
+    pub rounds: usize,
+    /// `|client ∩ server|` — the shared core.
+    pub common: usize,
+    /// Unique elements per client (disjoint across clients).
+    pub client_unique: usize,
+    /// Host-set elements no client holds.
+    pub server_unique: usize,
+    /// Workload id seed (set contents) — also used as the protocol seed.
+    pub seed: u64,
+    /// Retries after a `Busy` rejection before counting the session as failed.
+    pub busy_retries: usize,
+    /// Estimate `d` in the handshake instead of declaring it. The default (`false`)
+    /// declares the exactly-known `d = client_unique + server_unique`, which keeps every
+    /// session on one shared matrix geometry — the decoder-pool sweet spot. Estimation
+    /// adds per-client estimator noise, so geometries (and pool efficiency) vary.
+    pub estimate_diff: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            clients: 8,
+            rounds: 2,
+            common: 20_000,
+            client_unique: 100,
+            server_unique: 200,
+            seed: 42,
+            busy_retries: 3,
+            estimate_diff: false,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    /// The exactly-known per-client difference size.
+    pub fn true_d(&self) -> usize {
+        self.client_unique + self.server_unique
+    }
+
+    /// Deterministic disjoint id pools: `(host set, per-client sets, common core)`.
+    /// The core is returned sorted — it *is* every client's expected intersection.
+    pub fn workload(&self) -> (Vec<u64>, Vec<Vec<u64>>, Vec<u64>) {
+        let mut rng = Xoshiro256::seed_from_u64(self.seed);
+        let total = self.common + self.server_unique + self.clients * self.client_unique;
+        let ids = synth::distinct_ids(total, &mut rng);
+        let common = &ids[..self.common];
+        let server_only = &ids[self.common..self.common + self.server_unique];
+        let mut host = common.to_vec();
+        host.extend_from_slice(server_only);
+        let mut clients = Vec::with_capacity(self.clients);
+        for i in 0..self.clients {
+            let start = self.common + self.server_unique + i * self.client_unique;
+            let mut set = common.to_vec();
+            set.extend_from_slice(&ids[start..start + self.client_unique]);
+            clients.push(set);
+        }
+        let mut expected = common.to_vec();
+        expected.sort_unstable();
+        (host, clients, expected)
+    }
+
+    /// The `Setx` endpoint this workload runs under — used for the **host** set by
+    /// `commonsense serve` and for every client here, so the config fingerprints match.
+    pub fn endpoint(&self, set: &[u64]) -> Result<Setx, SetxError> {
+        let diff = if self.estimate_diff {
+            DiffSize::Estimated
+        } else {
+            DiffSize::Explicit(self.true_d())
+        };
+        Setx::builder(set).seed(self.seed).diff_size(diff).build()
+    }
+}
+
+/// What the fleet did. `verified` is the headline: every session's intersection equaled
+/// the exactly-known answer.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    /// Sessions that completed with the correct intersection.
+    pub sessions_ok: usize,
+    /// Sessions that failed (transport/protocol error, retry exhaustion) or returned a
+    /// *wrong* intersection (also described in `failures`).
+    pub sessions_failed: usize,
+    /// `Busy` rejections observed (including ones later resolved by a retry).
+    pub busy_rejections: usize,
+    /// Human-readable description of every failure, `client=<i> round=<r>: <why>`.
+    pub failures: Vec<String>,
+    /// Client-observed conversation bytes, all sessions.
+    pub total_bytes: usize,
+    /// Wall-clock for the whole fleet.
+    pub elapsed: Duration,
+}
+
+impl LoadgenReport {
+    /// Every session completed and every intersection matched the reference.
+    pub fn verified(&self) -> bool {
+        self.sessions_failed == 0 && self.failures.is_empty()
+    }
+
+    /// Completed sessions per wall-clock second.
+    pub fn sessions_per_sec(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs > 0.0 {
+            self.sessions_ok as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run the fleet against a listening server (typically a [`super::SetxServer`] — but any
+/// endpoint speaking the protocol works). Spawns `cfg.clients` OS threads; blocks until
+/// every client finishes all its rounds.
+pub fn run(addr: impl ToSocketAddrs, cfg: &LoadgenConfig) -> LoadgenReport {
+    if cfg.clients == 0 || cfg.rounds == 0 {
+        // A zero-session fleet must not vacuously report `verified()`.
+        return LoadgenReport {
+            failures: vec!["degenerate fleet: clients and rounds must be ≥ 1".to_string()],
+            ..LoadgenReport::default()
+        };
+    }
+    let addr = match addr.to_socket_addrs().ok().and_then(|mut a| a.next()) {
+        Some(a) => a,
+        None => {
+            return LoadgenReport {
+                sessions_failed: cfg.clients * cfg.rounds,
+                failures: vec!["unresolvable server address".to_string()],
+                ..LoadgenReport::default()
+            }
+        }
+    };
+    let (_host, client_sets, expected) = cfg.workload();
+    let started = Instant::now();
+    let outcomes: Vec<ClientOutcome> = std::thread::scope(|scope| {
+        let expected = &expected;
+        let handles: Vec<_> = client_sets
+            .iter()
+            .enumerate()
+            .map(|(i, set)| scope.spawn(move || run_client(addr, cfg, i, set, expected)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("loadgen client thread")).collect()
+    });
+    let mut report = LoadgenReport { elapsed: started.elapsed(), ..LoadgenReport::default() };
+    for outcome in outcomes {
+        report.sessions_ok += outcome.ok;
+        report.sessions_failed += outcome.failed;
+        report.busy_rejections += outcome.busy;
+        report.total_bytes += outcome.bytes;
+        report.failures.extend(outcome.failures);
+    }
+    report
+}
+
+#[derive(Default)]
+struct ClientOutcome {
+    ok: usize,
+    failed: usize,
+    busy: usize,
+    bytes: usize,
+    failures: Vec<String>,
+}
+
+fn run_client(
+    addr: std::net::SocketAddr,
+    cfg: &LoadgenConfig,
+    index: usize,
+    set: &[u64],
+    expected: &[u64],
+) -> ClientOutcome {
+    let mut out = ClientOutcome::default();
+    let endpoint = match cfg.endpoint(set) {
+        Ok(e) => e,
+        Err(e) => {
+            out.failed = cfg.rounds;
+            out.failures.push(format!("client={index}: invalid config: {e}"));
+            return out;
+        }
+    };
+    for round in 0..cfg.rounds {
+        match sync_once(addr, cfg, &endpoint, index, &mut out) {
+            Ok(report) => {
+                out.bytes += report.total_bytes();
+                if report.intersection == expected {
+                    out.ok += 1;
+                } else {
+                    out.failed += 1;
+                    out.failures.push(format!(
+                        "client={index} round={round}: WRONG intersection ({} elements, {} expected)",
+                        report.intersection.len(),
+                        expected.len()
+                    ));
+                }
+            }
+            Err(e) => {
+                out.failed += 1;
+                out.failures.push(format!("client={index} round={round}: {e}"));
+            }
+        }
+    }
+    out
+}
+
+/// One sync, retrying admission rejections with the server's back-off hint (plus a
+/// deterministic per-client jitter so a rejected burst does not re-arrive as a burst).
+fn sync_once(
+    addr: std::net::SocketAddr,
+    cfg: &LoadgenConfig,
+    endpoint: &Setx,
+    index: usize,
+    out: &mut ClientOutcome,
+) -> Result<crate::setx::SetxReport, SetxError> {
+    let mut attempt = 0;
+    loop {
+        let mut transport = TcpTransport::connect(addr)?;
+        match endpoint.run(&mut transport) {
+            Err(SetxError::ServerBusy { retry_after_ms }) => {
+                out.busy += 1;
+                attempt += 1;
+                if attempt > cfg.busy_retries {
+                    return Err(SetxError::ServerBusy { retry_after_ms });
+                }
+                let jitter = (index as u64 % 7) * 3;
+                std::thread::sleep(Duration::from_millis(
+                    u64::from(retry_after_ms).max(10) + jitter,
+                ));
+            }
+            other => return other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_cardinalities_and_disjointness() {
+        let cfg = LoadgenConfig {
+            clients: 3,
+            common: 500,
+            client_unique: 20,
+            server_unique: 30,
+            ..LoadgenConfig::default()
+        };
+        let (host, clients, expected) = cfg.workload();
+        assert_eq!(host.len(), 530);
+        assert_eq!(clients.len(), 3);
+        assert_eq!(expected.len(), 500);
+        for (i, c) in clients.iter().enumerate() {
+            assert_eq!(c.len(), 520);
+            // Every client's intersection with the host is exactly the core.
+            assert_eq!(synth::intersect(c, &host), expected, "client {i}");
+            assert_eq!(synth::difference(c, &host).len(), 20);
+        }
+        // Client-unique pools are disjoint across clients.
+        let u0 = synth::difference(&clients[0], &host);
+        let u1 = synth::difference(&clients[1], &host);
+        assert!(synth::intersect(&u0, &u1).is_empty());
+        assert_eq!(cfg.true_d(), 50);
+    }
+
+    #[test]
+    fn endpoints_share_a_fingerprint() {
+        let cfg = LoadgenConfig { common: 200, ..LoadgenConfig::default() };
+        let (host, clients, _) = cfg.workload();
+        let server = cfg.endpoint(&host).unwrap();
+        let client = cfg.endpoint(&clients[0]).unwrap();
+        assert_eq!(server.config().fingerprint(), client.config().fingerprint());
+    }
+}

@@ -1,0 +1,477 @@
+//! The multi-client SetX reconciliation daemon: one hot host set, any number of
+//! concurrent TCP clients.
+//!
+//! [`crate::coordinator::tcp::serve`] accepts exactly one connection, runs one session,
+//! and returns — the right shape for a point-to-point sync, useless for the paper's
+//! deployment scenarios (block propagation, data-center sync), where a long-lived
+//! service holds the authoritative set and reconciles a fleet against it. This module is
+//! that service, assembled from the pieces the earlier layers were built to enable:
+//!
+//! * **[`SetxServer`]** — an accept loop feeding a bounded worker pool (the same
+//!   atomic-counter + `peak_workers` discipline as [`crate::coordinator::parallel`]);
+//!   each worker drives a sans-io [`crate::setx`] endpoint over a
+//!   [`TcpTransport`] with per-connection session IDs, OS-level read/write timeouts
+//!   (one stalled client must never wedge a worker forever), and graceful shutdown
+//!   ([`ServerHandle::shutdown`] drains queued sessions before returning).
+//! * **[`DecoderPool`]** — PR 3's one-slot decoder cache generalized into a shared,
+//!   capacity-bounded LRU pool keyed by exact matrix geometry, so the dominant
+//!   per-session cost (decoder construction over the host set) is paid once per
+//!   geometry instead of once per connection.
+//! * **Admission control** — at `max_inflight_sessions` live sessions, new connections
+//!   get a typed [`Msg::Busy`] frame (surfaced client-side as
+//!   [`SetxError::ServerBusy`] with a retry hint) instead of a hung or reset socket.
+//! * **[`ServerStats`]** — sessions served/failed/rejected, per-phase wire bytes,
+//!   decoder-pool hit rate, and worker high-water marks, snapshotable at any time and
+//!   serializable as one flat JSON record.
+//! * **[`loadgen`]** — a verifying load generator (N concurrent clients with perturbed
+//!   sets, every returned intersection checked against the exact answer), which also
+//!   backs the `commonsense loadgen` CLI and the `server_throughput` bench.
+//!
+//! ```no_run
+//! use commonsense::server::SetxServer;
+//! use commonsense::setx::Setx;
+//!
+//! let host_set: Vec<u64> = (0..100_000).collect();
+//! let endpoint = Setx::builder(&host_set).build().unwrap();
+//! let server = SetxServer::builder(endpoint).workers(4).bind("0.0.0.0:7700").unwrap();
+//! // ... clients run `Setx::run` over `TcpTransport::connect` against us ...
+//! let stats = server.shutdown();
+//! println!("{}", stats.to_json());
+//! ```
+
+pub mod loadgen;
+pub mod pool;
+mod stats;
+
+pub use pool::{DecoderPool, PoolStats};
+pub use stats::ServerStats;
+
+use crate::decoder::{DecoderCache, DecoderStore};
+use crate::protocol::wire::Msg;
+use crate::setx::endpoint::Endpoint;
+use crate::setx::transport::{TcpTransport, Transport};
+use crate::setx::{Setx, SetxConfig, SetxError, SetxReport};
+use stats::StatsInner;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Builder for a [`SetxServer`]; obtain via [`SetxServer::builder`]. Every knob has a
+/// service-shaped default, so `SetxServer::builder(endpoint).bind(addr)` is a complete
+/// daemon.
+#[derive(Debug)]
+pub struct ServerBuilder {
+    endpoint: Setx,
+    workers: usize,
+    max_inflight: usize,
+    pool_capacity: Option<usize>,
+    read_timeout: Option<Duration>,
+    write_timeout: Option<Duration>,
+    build_threads: usize,
+    busy_retry_hint_ms: u32,
+}
+
+impl ServerBuilder {
+    /// Worker threads driving sessions (default 4; clamped to ≥ 1). This is the
+    /// concurrency bound: at most `workers` sessions make protocol progress at once,
+    /// the rest queue (but still count against admission).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Admission cap: connections arriving while this many sessions are live (queued or
+    /// being served) are turned away with a `Busy` frame (default 64; clamped ≥ 1).
+    pub fn max_inflight_sessions(mut self, cap: usize) -> Self {
+        self.max_inflight = cap.max(1);
+        self
+    }
+
+    /// Decoder-pool capacity (default `4 × workers`; `0` disables pooling — every
+    /// session then builds its decoders from scratch).
+    pub fn pool_capacity(mut self, capacity: usize) -> Self {
+        self.pool_capacity = Some(capacity);
+        self
+    }
+
+    /// OS-level read/write timeouts applied to every accepted connection (default 30 s
+    /// each — sane for a service; `None` means block forever, which re-opens the
+    /// wedged-worker failure mode and is only sensible for debugging).
+    pub fn timeouts(mut self, read: Option<Duration>, write: Option<Duration>) -> Self {
+        self.read_timeout = read;
+        self.write_timeout = write;
+        self
+    }
+
+    /// Decoder *construction* threads per session (default 1: the worker pool already
+    /// provides the server's parallelism, and nested construction pools would
+    /// oversubscribe the machine `workers × cores`-fold; `0` = auto).
+    pub fn build_threads(mut self, threads: usize) -> Self {
+        self.build_threads = threads;
+        self
+    }
+
+    /// The back-off hint carried in `Busy` rejections, milliseconds (default 50).
+    pub fn busy_retry_hint_ms(mut self, ms: u32) -> Self {
+        self.busy_retry_hint_ms = ms;
+        self
+    }
+
+    /// Bind the listener and start the accept loop + worker pool. The returned handle
+    /// is the server: drop it (or call [`ServerHandle::shutdown`]) to stop.
+    pub fn bind(self, addr: impl ToSocketAddrs) -> Result<ServerHandle, SetxError> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let pool_capacity = self.pool_capacity.unwrap_or(4 * self.workers);
+        let pool =
+            (pool_capacity > 0).then(|| Arc::new(DecoderPool::new(pool_capacity)));
+        let shared = Arc::new(Shared {
+            cfg: *self.endpoint.config(),
+            set: Mutex::new(Arc::new(self.endpoint.set().to_vec())),
+            pool,
+            stats: StatsInner::default(),
+            shutdown: AtomicBool::new(false),
+            last_failure: Mutex::new(None),
+            next_session_id: AtomicU64::new(1),
+            read_timeout: self.read_timeout,
+            write_timeout: self.write_timeout,
+            build_threads: self.build_threads,
+            max_inflight: self.max_inflight,
+            workers: self.workers,
+            busy_retry_hint_ms: self.busy_retry_hint_ms,
+        });
+
+        let (tx, rx) = channel::<(TcpStream, u64)>();
+        let rx = Arc::new(Mutex::new(rx));
+        let worker_handles: Vec<JoinHandle<()>> = (0..self.workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("setx-worker-{w}"))
+                    .spawn(move || worker_loop(&shared, &rx))
+                    .expect("spawn server worker")
+            })
+            .collect();
+        let accept_handle = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("setx-accept".to_string())
+                .spawn(move || accept_loop(&shared, &listener, tx))
+                .expect("spawn server accept loop")
+        };
+        Ok(ServerHandle {
+            shared,
+            addr,
+            accept: Some(accept_handle),
+            workers: worker_handles,
+        })
+    }
+}
+
+/// State shared by the accept loop, the workers, and the handle.
+struct Shared {
+    cfg: SetxConfig,
+    /// The (mutable) host set. Each session snapshots the current `Arc` at start;
+    /// [`ServerHandle::replace_set`] swaps it atomically, so in-flight sessions keep
+    /// reconciling against the set they started with.
+    set: Mutex<Arc<Vec<u64>>>,
+    /// `None` when pooling is disabled.
+    pool: Option<Arc<DecoderPool>>,
+    stats: StatsInner,
+    shutdown: AtomicBool,
+    /// Most recent failed session: `(session_id, error)` — the minimal breadcrumb an
+    /// operator needs before turning on real logging.
+    last_failure: Mutex<Option<(u64, String)>>,
+    next_session_id: AtomicU64,
+    read_timeout: Option<Duration>,
+    write_timeout: Option<Duration>,
+    build_threads: usize,
+    max_inflight: usize,
+    workers: usize,
+    busy_retry_hint_ms: u32,
+}
+
+impl Shared {
+    fn current_set(&self) -> Arc<Vec<u64>> {
+        Arc::clone(&self.set.lock().expect("host set lock poisoned"))
+    }
+}
+
+/// The namespace entry point: [`SetxServer::builder`] is how a server is made.
+pub struct SetxServer;
+
+impl SetxServer {
+    /// Start building a server around `endpoint` — a validated [`Setx`] whose config
+    /// every client must match (fingerprint-checked in the handshake, exactly as in a
+    /// point-to-point run) and whose set becomes the initial host set.
+    pub fn builder(endpoint: Setx) -> ServerBuilder {
+        ServerBuilder {
+            endpoint,
+            workers: 4,
+            max_inflight: 64,
+            pool_capacity: None,
+            read_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(30)),
+            build_threads: 1,
+            busy_retry_hint_ms: 50,
+        }
+    }
+}
+
+/// A running server. Dropping the handle shuts the server down (best-effort); call
+/// [`ServerHandle::shutdown`] to do it explicitly and receive the final stats.
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Point-in-time stats snapshot.
+    pub fn stats(&self) -> ServerStats {
+        let s = &self.shared.stats;
+        ServerStats {
+            sessions_accepted: s.sessions_accepted.load(Ordering::Relaxed),
+            sessions_served: s.sessions_served.load(Ordering::Relaxed),
+            sessions_failed: s.sessions_failed.load(Ordering::Relaxed),
+            sessions_rejected: s.sessions_rejected.load(Ordering::Relaxed),
+            phase_bytes: [
+                s.phase_bytes[0].load(Ordering::Relaxed),
+                s.phase_bytes[1].load(Ordering::Relaxed),
+                s.phase_bytes[2].load(Ordering::Relaxed),
+                s.phase_bytes[3].load(Ordering::Relaxed),
+            ],
+            pool: self.shared.pool.as_ref().map(|p| p.stats()).unwrap_or_default(),
+            inflight: s.inflight.load(Ordering::SeqCst),
+            peak_inflight: s.peak_inflight.load(Ordering::Relaxed),
+            peak_workers: s.peak_workers.load(Ordering::Relaxed),
+            workers: self.shared.workers,
+            max_inflight_sessions: self.shared.max_inflight,
+        }
+    }
+
+    /// The most recent failed session, as `(session_id, error message)`.
+    pub fn last_failure(&self) -> Option<(u64, String)> {
+        self.shared.last_failure.lock().expect("failure lock poisoned").clone()
+    }
+
+    /// Replace the host set. In-flight sessions finish against the set they started
+    /// with; new sessions reconcile against the replacement. Decoders parked in the
+    /// pool for the old set become unreachable (their cache keys no longer validate)
+    /// and age out by LRU.
+    pub fn replace_set(&self, set: Vec<u64>) {
+        *self.shared.set.lock().expect("host set lock poisoned") = Arc::new(set);
+    }
+
+    /// Graceful shutdown: stop accepting, serve every already-queued session to
+    /// completion, join all threads, and return the final stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.shutdown_inner();
+        self.stats()
+    }
+
+    fn shutdown_inner(&mut self) {
+        if !self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            // Unblock the accept loop: it re-checks the flag per connection, so one
+            // throwaway local dial is enough (best-effort — the loop may already be
+            // past its accept call). A wildcard bind (0.0.0.0 / ::) is not a dialable
+            // destination everywhere, so aim the wake-up at loopback on the same port.
+            let mut wake = self.addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match wake.ip() {
+                    std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                    std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+                });
+            }
+            let _ = TcpStream::connect_timeout(&wake, Duration::from_millis(500));
+        }
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl std::fmt::Debug for ServerHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerHandle")
+            .field("addr", &self.addr)
+            .field("workers", &self.shared.workers)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+/// The accept loop: admission control happens here, *before* a worker is occupied, so a
+/// full server answers instantly instead of queueing the connection behind the backlog.
+/// Dropping `tx` at loop exit is the workers' shutdown signal (they drain the queue
+/// first — mpsc delivers buffered jobs even after the sender is gone).
+fn accept_loop(shared: &Shared, listener: &TcpListener, tx: Sender<(TcpStream, u64)>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) if shared.shutdown.load(Ordering::SeqCst) => break,
+            Err(_) => {
+                // Transient accept error (EMFILE under fd pressure, ECONNABORTED, …):
+                // keep serving, but back off briefly — a persistent error would
+                // otherwise spin this thread at 100% CPU against the same failure.
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break; // the shutdown wake-up dial (or a late client): drop and exit
+        }
+        let inflight = shared.stats.inflight.load(Ordering::SeqCst);
+        if inflight >= shared.max_inflight {
+            reject_busy(shared, stream);
+            continue;
+        }
+        let live = shared.stats.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        shared.stats.peak_inflight.fetch_max(live, Ordering::SeqCst);
+        shared.stats.sessions_accepted.fetch_add(1, Ordering::Relaxed);
+        let sid = shared.next_session_id.fetch_add(1, Ordering::Relaxed);
+        if tx.send((stream, sid)).is_err() {
+            // Workers are gone (shutdown race): undo the admission and stop.
+            shared.stats.inflight.fetch_sub(1, Ordering::SeqCst);
+            break;
+        }
+    }
+}
+
+/// Answer an over-admission connection with the typed `Busy` frame (bounded write so a
+/// non-reading client cannot stall the accept thread), then close.
+fn reject_busy(shared: &Shared, stream: TcpStream) {
+    shared.stats.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+    stream.set_nodelay(true).ok();
+    let mut transport = TcpTransport::from_stream(stream, false);
+    let _ = transport
+        .set_timeouts(Some(Duration::from_millis(500)), Some(Duration::from_millis(500)));
+    let _ = transport.send(&Msg::Busy { retry_after_ms: shared.busy_retry_hint_ms });
+}
+
+fn worker_loop(shared: &Shared, rx: &Mutex<Receiver<(TcpStream, u64)>>) {
+    loop {
+        // Hold the lock only for the dequeue: exactly one idle worker blocks in `recv`,
+        // the rest queue on the mutex — jobs hand off one at a time.
+        let job = rx.lock().expect("server work queue poisoned").recv();
+        let Ok((stream, sid)) = job else {
+            break; // queue closed and drained: shutdown
+        };
+        let busy = shared.stats.busy_workers.fetch_add(1, Ordering::SeqCst) + 1;
+        shared.stats.peak_workers.fetch_max(busy, Ordering::SeqCst);
+        match serve_connection(shared, stream) {
+            Ok(report) => {
+                shared.stats.sessions_served.fetch_add(1, Ordering::Relaxed);
+                shared.stats.charge_comm(&report.comm);
+            }
+            Err(err) => {
+                shared.stats.sessions_failed.fetch_add(1, Ordering::Relaxed);
+                *shared.last_failure.lock().expect("failure lock poisoned") =
+                    Some((sid, err.to_string()));
+            }
+        }
+        shared.stats.busy_workers.fetch_sub(1, Ordering::SeqCst);
+        shared.stats.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Drive one accepted connection to completion: snapshot the host set, build a facade
+/// endpoint whose decoder cache is backed by the shared pool, and pump it over the
+/// timeout-guarded transport — the exact loop `Setx::run` uses, so server sessions and
+/// point-to-point runs cannot diverge.
+fn serve_connection(shared: &Shared, stream: TcpStream) -> Result<SetxReport, SetxError> {
+    stream.set_nodelay(true).ok();
+    let mut transport = TcpTransport::from_stream(stream, false);
+    transport.set_timeouts(shared.read_timeout, shared.write_timeout)?;
+    let set = shared.current_set();
+    let mut endpoint = Endpoint::new(&shared.cfg, &set, false);
+    let mut cache = DecoderCache::with_build_threads(shared.build_threads);
+    if let Some(pool) = &shared.pool {
+        cache = cache.with_shared_store(Arc::clone(pool) as Arc<dyn DecoderStore>);
+    }
+    endpoint.set_cache(cache);
+    Setx::pump(&mut endpoint, &mut transport)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn bind_and_shutdown_without_clients() {
+        let set: Vec<u64> = (0..500).collect();
+        let endpoint = Setx::builder(&set).build().unwrap();
+        let server =
+            SetxServer::builder(endpoint).workers(2).bind("127.0.0.1:0").unwrap();
+        assert_ne!(server.local_addr().port(), 0);
+        let stats = server.shutdown();
+        assert_eq!(stats.sessions_accepted, 0);
+        assert_eq!(stats.sessions_rejected, 0);
+        assert_eq!(stats.workers, 2);
+    }
+
+    #[test]
+    fn one_client_round_trip_and_stats() {
+        let (a, b) = synth::overlap_pair(2_000, 30, 40, 5);
+        let server = SetxServer::builder(Setx::builder(&b).build().unwrap())
+            .workers(1)
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let addr = server.local_addr();
+        let alice = Setx::builder(&a).build().unwrap();
+        let mut transport = TcpTransport::connect(addr).unwrap();
+        let report = alice.run(&mut transport).unwrap();
+        assert_eq!(report.local_unique, synth::difference(&a, &b));
+        assert_eq!(report.intersection, synth::intersect(&a, &b));
+        // The worker finishes asynchronously after the client's last frame lands.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while server.stats().sessions_served == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.sessions_served, 1, "last failure: {:?}", stats);
+        assert_eq!(stats.sessions_failed, 0);
+        assert!(stats.total_bytes() > 0);
+        assert_eq!(stats.peak_workers, 1);
+    }
+
+    #[test]
+    fn replace_set_serves_the_new_set() {
+        let (a, b1) = synth::overlap_pair(1_500, 20, 30, 8);
+        let server = SetxServer::builder(Setx::builder(&b1).build().unwrap())
+            .workers(1)
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let addr = server.local_addr();
+        let alice = Setx::builder(&a).build().unwrap();
+        let r1 = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+        assert_eq!(r1.intersection, synth::intersect(&a, &b1));
+        // Mutate the host set: drop half of B's unique elements and half the overlap.
+        let mut b2 = b1.clone();
+        b2.truncate(b1.len() - 25);
+        server.replace_set(b2.clone());
+        let r2 = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+        assert_eq!(r2.intersection, synth::intersect(&a, &b2));
+        server.shutdown();
+    }
+}

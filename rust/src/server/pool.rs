@@ -1,0 +1,321 @@
+//! The shared decoder pool: the one-slot [`crate::decoder::DecoderCache`] generalized
+//! into a concurrency-safe, capacity-bounded LRU pool keyed by exact matrix geometry.
+//!
+//! Decoder construction is the dominant per-session cost on the server side, and a
+//! server answering thousands of clients against one hot set keeps negotiating the same
+//! matrix geometry `(seed, l, m)` — so the decoders those sessions build are
+//! interchangeable ([`MpDecoder::cache_key`] covers matrix + candidates + side, and the
+//! host set is the candidate set of every responder decode). The pool parks finished
+//! decoders and hands them back to whichever worker asks next:
+//!
+//! * **Keyed by exact geometry** — entries file under [`GeometryKey`] (the matrix
+//!   structure fingerprint, a pure function of `(seed, l, m)` for the production
+//!   matrix, plus the exact dimensions). A `take` additionally validates the full
+//!   64-bit cache key, the same double check [`crate::decoder::DecoderCache`] performs,
+//!   so a parked decoder for a *stale* host set (after
+//!   [`crate::server::ServerHandle::replace_set`])
+//!   or the opposite decode side can never be mistaken for a match — it is simply
+//!   skipped and ages out by LRU.
+//! * **A pool, not a map** — the same geometry may be parked multiple times, one per
+//!   concurrently-finishing worker, so `workers` simultaneous sessions on one hot
+//!   geometry all hit once warmed (a single-slot map would serve only one of them).
+//! * **LRU-bounded** — `capacity` caps parked decoders (each holds O(n·m) CSR tables);
+//!   inserting past it evicts the least-recently-parked entry. `capacity == 0` disables
+//!   parking entirely (the pool-off ablation of the `server_throughput` bench).
+//! * **Counted** — hits, misses, and evictions are exposed ([`PoolStats`]) and surface
+//!   in [`crate::server::ServerStats`] as the pool hit rate.
+
+use crate::decoder::{DecoderStore, GeometryKey, MpDecoder};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Counter snapshot of a [`DecoderPool`] (see [`DecoderPool::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// `take`s answered from the pool (a whole decoder construction skipped).
+    pub hits: u64,
+    /// `take`s that found no interchangeable decoder (the caller built fresh).
+    pub misses: u64,
+    /// Parked decoders discarded by the LRU capacity bound.
+    pub evictions: u64,
+    /// Decoders currently parked.
+    pub parked: usize,
+    /// The capacity bound (0 = pooling disabled).
+    pub capacity: usize,
+}
+
+impl PoolStats {
+    /// `hits / (hits + misses)`; 0.0 for a pool that was never consulted — so a
+    /// disabled pool (the `--no-pool` ablation) reads as 0, never as a perfect score.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Parked {
+    geo: GeometryKey,
+    dec: MpDecoder,
+}
+
+/// The concurrency-safe LRU decoder pool (module docs). Share it as an
+/// `Arc<DecoderPool>`: it implements [`DecoderStore`], so attaching it to a
+/// [`DecoderCache`] via [`DecoderCache::with_shared_store`] makes every session built on
+/// that cache pool-backed — which is exactly what [`crate::server::SetxServer`] does for
+/// each worker connection.
+///
+/// [`DecoderCache`]: crate::decoder::DecoderCache
+/// [`DecoderCache::with_shared_store`]: crate::decoder::DecoderCache::with_shared_store
+pub struct DecoderPool {
+    /// Parked decoders, least-recently-parked first (evict index 0).
+    entries: Mutex<Vec<Parked>>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl DecoderPool {
+    /// An empty pool holding at most `capacity` parked decoders (`0` disables parking:
+    /// every take misses and every put drops).
+    pub fn new(capacity: usize) -> DecoderPool {
+        DecoderPool {
+            entries: Mutex::new(Vec::new()),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Counter + occupancy snapshot.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            parked: self.entries.lock().map(|e| e.len()).unwrap_or(0),
+            capacity: self.capacity,
+        }
+    }
+}
+
+impl DecoderStore for DecoderPool {
+    fn take(&self, geo: GeometryKey, want_key: u64) -> Option<MpDecoder> {
+        let mut entries = self.entries.lock().expect("decoder pool poisoned");
+        // Newest first: the most recently parked decoder is the most likely to be warm
+        // in cache and the least likely to be stale.
+        let found = entries
+            .iter()
+            .rposition(|p| p.geo == geo && p.dec.cache_key() == want_key);
+        match found {
+            Some(i) => {
+                let parked = entries.remove(i);
+                drop(entries);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(parked.dec)
+            }
+            None => {
+                drop(entries);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn put(&self, geo: GeometryKey, dec: MpDecoder) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut entries = self.entries.lock().expect("decoder pool poisoned");
+        entries.push(Parked { geo, dec });
+        let mut evicted = 0u64;
+        while entries.len() > self.capacity {
+            entries.remove(0);
+            evicted += 1;
+        }
+        drop(entries);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+}
+
+impl std::fmt::Debug for DecoderPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("DecoderPool")
+            .field("parked", &s.parked)
+            .field("capacity", &s.capacity)
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .field("evictions", &s.evictions)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoder::{DecoderCache, DecoderConfig, Side};
+    use crate::matrix::CsMatrix;
+    use std::sync::Arc;
+
+    fn mk_matrix(seed: u64) -> CsMatrix {
+        CsMatrix::new(256, 4, seed)
+    }
+
+    fn mk_decoder(matrix: &CsMatrix, candidates: &[u64]) -> MpDecoder {
+        MpDecoder::with_config(matrix, candidates, Side::Positive, DecoderConfig::commonsense())
+    }
+
+    #[test]
+    fn take_validates_geometry_and_full_key() {
+        let pool = DecoderPool::new(4);
+        let matrix = mk_matrix(1);
+        let cands: Vec<u64> = (0..100).collect();
+        let dec = mk_decoder(&matrix, &cands);
+        let geo = GeometryKey::of_decoder(&dec);
+        let want = dec.cache_key();
+        pool.put(geo, dec);
+
+        // Wrong full key (different candidate set, same geometry): skipped, not returned.
+        let other_want =
+            MpDecoder::cache_key_for(&matrix, &(0..101).collect::<Vec<u64>>(), Side::Positive);
+        assert!(pool.take(geo, other_want).is_none());
+        // Wrong geometry: also a miss.
+        let other_geo = GeometryKey::of_oracle(&mk_matrix(2));
+        assert!(pool.take(other_geo, want).is_none());
+        // Exact match: hit — and the entry leaves the pool.
+        assert!(pool.take(geo, want).is_some());
+        assert!(pool.take(geo, want).is_none());
+        let s = pool.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 3);
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let pool = DecoderPool::new(2);
+        let cands: Vec<u64> = (0..50).collect();
+        let matrices: Vec<CsMatrix> = (1..=3).map(mk_matrix).collect();
+        let mut keys = Vec::new();
+        for m in &matrices {
+            let dec = mk_decoder(m, &cands);
+            keys.push((GeometryKey::of_decoder(&dec), dec.cache_key()));
+            pool.put(GeometryKey::of_decoder(&dec), dec);
+        }
+        assert_eq!(pool.stats().parked, 2);
+        assert_eq!(pool.stats().evictions, 1);
+        // The least-recently-parked entry (matrix 1) was evicted; 2 and 3 survive.
+        assert!(pool.take(keys[0].0, keys[0].1).is_none(), "oldest must be evicted");
+        assert!(pool.take(keys[1].0, keys[1].1).is_some());
+        assert!(pool.take(keys[2].0, keys[2].1).is_some());
+    }
+
+    #[test]
+    fn untouched_pool_reports_zero_hit_rate() {
+        // The --no-pool ablation must never read as a perfect score.
+        assert_eq!(DecoderPool::new(8).stats().hit_rate(), 0.0);
+        assert_eq!(DecoderPool::new(0).stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn zero_capacity_disables_parking() {
+        let pool = DecoderPool::new(0);
+        let matrix = mk_matrix(7);
+        let cands: Vec<u64> = (0..50).collect();
+        let dec = mk_decoder(&matrix, &cands);
+        let geo = GeometryKey::of_decoder(&dec);
+        let want = dec.cache_key();
+        pool.put(geo, dec);
+        assert_eq!(pool.stats().parked, 0);
+        assert!(pool.take(geo, want).is_none());
+    }
+
+    #[test]
+    fn same_geometry_parks_multiple_copies_for_concurrent_workers() {
+        // A map keyed by geometry would keep one decoder and starve all but one of the
+        // concurrently-running workers; the pool must hold several.
+        let pool = DecoderPool::new(4);
+        let matrix = mk_matrix(9);
+        let cands: Vec<u64> = (0..80).collect();
+        let (mut geo, mut want) = (None, 0);
+        for _ in 0..3 {
+            let dec = mk_decoder(&matrix, &cands);
+            geo = Some(GeometryKey::of_decoder(&dec));
+            want = dec.cache_key();
+            pool.put(geo.unwrap(), dec);
+        }
+        let geo = geo.unwrap();
+        assert_eq!(pool.stats().parked, 3);
+        assert!(pool.take(geo, want).is_some());
+        assert!(pool.take(geo, want).is_some());
+        assert!(pool.take(geo, want).is_some());
+        assert!(pool.take(geo, want).is_none());
+    }
+
+    #[test]
+    fn concurrent_checkout_return_from_four_threads() {
+        // ≥4 threads hammer checkout/return through the DecoderCache front (the way
+        // server workers do). Invariants: no deadlock, counters account for every
+        // checkout, and the pool never exceeds capacity.
+        let pool = Arc::new(DecoderPool::new(8));
+        let matrix = Arc::new(mk_matrix(11));
+        let cands: Arc<Vec<u64>> = Arc::new((0..200).collect());
+        let threads = 4;
+        let iters = 25;
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let pool = Arc::clone(&pool);
+                let matrix = Arc::clone(&matrix);
+                let cands = Arc::clone(&cands);
+                scope.spawn(move || {
+                    let mut cache = DecoderCache::with_build_threads(1)
+                        .with_shared_store(pool as Arc<dyn DecoderStore>);
+                    for _ in 0..iters {
+                        let dec = cache.checkout(
+                            matrix.as_ref(),
+                            &cands,
+                            Side::Positive,
+                            DecoderConfig::commonsense(),
+                        );
+                        cache.store(dec);
+                    }
+                });
+            }
+        });
+        let s = pool.stats();
+        assert_eq!(s.hits + s.misses, (threads * iters) as u64, "every checkout counted");
+        // Once each thread has parked a decoder, subsequent checkouts hit; at most one
+        // cold miss per thread (plus any races in the very first wave).
+        assert!(s.hits >= (threads * (iters - 1)) as u64, "stats {s:?}");
+        assert!(s.parked <= 8);
+    }
+
+    #[test]
+    fn pooled_decode_is_result_identical_to_fresh_build() {
+        // Extends PR 3's reuse-equals-fresh property to the shared pool: a uni decode
+        // whose decoder came out of the pool must produce exactly the fresh-build answer.
+        use crate::data::synth;
+        use crate::protocol::{uni, CsParams};
+        let (a, b) = synth::subset_pair(4_000, 60, 21);
+        let params = CsParams::tuned_uni(b.len(), 60);
+        let (msg, _) = uni::alice_encode(&a, &params);
+
+        let fresh = uni::bob_decode(&msg, &b, &params).unwrap().0;
+        let pool: Arc<DecoderPool> = Arc::new(DecoderPool::new(2));
+        let mut cache =
+            DecoderCache::new().with_shared_store(Arc::clone(&pool) as Arc<dyn DecoderStore>);
+        let first = uni::bob_decode_cached(&msg, &b, &params, &mut cache).unwrap().0;
+        assert_eq!(pool.stats().parked, 1, "decode must park its decoder in the pool");
+        let second = uni::bob_decode_cached(&msg, &b, &params, &mut cache).unwrap().0;
+        assert_eq!(first, fresh);
+        assert_eq!(second, fresh, "pooled decoder must decode identically");
+        assert!(pool.stats().hits >= 1, "second decode must hit the pool");
+    }
+}

@@ -1,0 +1,175 @@
+//! Server-side observability: lock-free counters aggregated across workers, snapshotted
+//! as [`ServerStats`] and serialized through the same flat-JSON conventions as the
+//! [`crate::metrics`] bench trajectory (one record per line, numeric fields only), so
+//! the `server_throughput` bench and the `commonsense serve` CLI can emit
+//! machine-readable operating points without a serde dependency.
+
+use super::pool::PoolStats;
+use crate::metrics::{CommLog, Phase};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// The atomics every worker/accept thread updates (shared behind one `Arc`).
+#[derive(Default)]
+pub(crate) struct StatsInner {
+    pub(crate) sessions_accepted: AtomicU64,
+    pub(crate) sessions_served: AtomicU64,
+    pub(crate) sessions_failed: AtomicU64,
+    pub(crate) sessions_rejected: AtomicU64,
+    /// Conversation bytes by protocol phase, indexed in [`Phase::ALL`] order
+    /// (successful sessions only — a torn-down conversation has no agreed transcript).
+    pub(crate) phase_bytes: [AtomicU64; 4],
+    /// Live sessions (accepted, not yet finished) — the admission-control gauge.
+    pub(crate) inflight: AtomicUsize,
+    pub(crate) peak_inflight: AtomicUsize,
+    /// Workers currently driving a session; high-water mark ≤ the worker count (the
+    /// same bounded-pool regression guard `coordinator::parallel` keeps).
+    pub(crate) busy_workers: AtomicUsize,
+    pub(crate) peak_workers: AtomicUsize,
+}
+
+impl StatsInner {
+    /// Charge one finished session's transcript to the per-phase byte counters.
+    pub(crate) fn charge_comm(&self, comm: &CommLog) {
+        for (i, &phase) in Phase::ALL.iter().enumerate() {
+            let b = comm.bytes_by_phase(phase) as u64;
+            if b > 0 {
+                self.phase_bytes[i].fetch_add(b, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// A point-in-time snapshot of a running (or stopped) [`crate::server::SetxServer`]:
+/// admission and outcome counters, per-phase wire bytes, decoder-pool effectiveness,
+/// and the worker-pool high-water marks.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerStats {
+    /// Connections accepted into a session (admitted; == served + failed + in flight).
+    pub sessions_accepted: u64,
+    /// Sessions that completed with a verified report.
+    pub sessions_served: u64,
+    /// Sessions that ended in a typed error (timeout, malformed peer, decode exhaustion).
+    pub sessions_failed: u64,
+    /// Connections turned away at admission with a `Busy` frame.
+    pub sessions_rejected: u64,
+    /// Conversation bytes by phase (successful sessions), in [`Phase::ALL`] order:
+    /// handshake, sketch, residue, confirm.
+    pub phase_bytes: [u64; 4],
+    /// Decoder-pool counters (all zeros when the pool is disabled).
+    pub pool: PoolStats,
+    /// Currently admitted, unfinished sessions (the live admission gauge).
+    pub inflight: usize,
+    /// High-water mark of concurrently admitted sessions.
+    pub peak_inflight: usize,
+    /// High-water mark of concurrently busy workers (≤ configured `workers`).
+    pub peak_workers: usize,
+    /// Configured worker count.
+    pub workers: usize,
+    /// Configured admission cap.
+    pub max_inflight_sessions: usize,
+}
+
+impl ServerStats {
+    /// Total conversation bytes across phases (successful sessions).
+    pub fn total_bytes(&self) -> u64 {
+        self.phase_bytes.iter().sum()
+    }
+
+    /// Decoder-pool hit rate (0.0 when the pool was never consulted or is disabled).
+    pub fn pool_hit_rate(&self) -> f64 {
+        self.pool.hit_rate()
+    }
+
+    /// One flat JSON record (the schema style of the `BENCH_*.json` trajectory): every
+    /// field numeric, keys stable, no nesting — ready to append to a log or paste into
+    /// the bench tooling.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"sessions_accepted\":{},\"sessions_served\":{},\"sessions_failed\":{},\
+             \"sessions_rejected\":{},\"bytes_handshake\":{},\"bytes_sketch\":{},\
+             \"bytes_residue\":{},\"bytes_confirm\":{},\"pool_hits\":{},\"pool_misses\":{},\
+             \"pool_evictions\":{},\"pool_parked\":{},\"pool_capacity\":{},\
+             \"pool_hit_rate\":{:.4},\"inflight\":{},\"peak_inflight\":{},\
+             \"peak_workers\":{},\"workers\":{},\"max_inflight_sessions\":{}}}",
+            self.sessions_accepted,
+            self.sessions_served,
+            self.sessions_failed,
+            self.sessions_rejected,
+            self.phase_bytes[0],
+            self.phase_bytes[1],
+            self.phase_bytes[2],
+            self.phase_bytes[3],
+            self.pool.hits,
+            self.pool.misses,
+            self.pool.evictions,
+            self.pool.parked,
+            self.pool.capacity,
+            self.pool_hit_rate(),
+            self.inflight,
+            self.peak_inflight,
+            self.peak_workers,
+            self.workers,
+            self.max_inflight_sessions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_comm_buckets_by_phase() {
+        let inner = StatsInner::default();
+        let mut comm = CommLog::new();
+        comm.record(true, Phase::Handshake, 10);
+        comm.record(false, Phase::Sketch, 100);
+        comm.record(true, Phase::Residue, 40);
+        comm.record(false, Phase::Residue, 5);
+        comm.record(true, Phase::Confirm, 3);
+        inner.charge_comm(&comm);
+        let got: Vec<u64> =
+            inner.phase_bytes.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        assert_eq!(got, vec![10, 100, 45, 3]);
+    }
+
+    #[test]
+    fn stats_json_is_flat_and_complete() {
+        let stats = ServerStats {
+            sessions_accepted: 34,
+            sessions_served: 32,
+            sessions_failed: 1,
+            sessions_rejected: 1,
+            phase_bytes: [1, 2, 3, 4],
+            pool: PoolStats { hits: 30, misses: 2, evictions: 0, parked: 2, capacity: 8 },
+            inflight: 1,
+            peak_inflight: 5,
+            peak_workers: 4,
+            workers: 4,
+            max_inflight_sessions: 64,
+        };
+        let json = stats.to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        for key in [
+            "sessions_accepted",
+            "sessions_served",
+            "sessions_failed",
+            "sessions_rejected",
+            "bytes_handshake",
+            "bytes_sketch",
+            "bytes_residue",
+            "bytes_confirm",
+            "pool_hits",
+            "pool_misses",
+            "pool_hit_rate",
+            "inflight",
+            "peak_inflight",
+            "peak_workers",
+            "max_inflight_sessions",
+        ] {
+            assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
+        }
+        assert_eq!(stats.total_bytes(), 10);
+        assert!((stats.pool_hit_rate() - 30.0 / 32.0).abs() < 1e-12);
+    }
+}

@@ -406,6 +406,21 @@ impl<'a> Endpoint<'a> {
                     Step::Continue
                 }
             }
+            // Role-gated on the *client* end: only the dialing side can legitimately be
+            // turned away at admission. A Busy arriving at a serving endpoint falls
+            // through to the catch-all below as an UnexpectedMessage protocol fault —
+            // otherwise a malicious client could plant a nonsensical "server busy"
+            // diagnosis in the server's own failure log.
+            (EpPhase::AwaitEstHello, Msg::Busy { retry_after_ms }) if self.client => {
+                // Admission-control rejection from a multi-client server: the connection
+                // carries no session, so surface the typed error (not a protocol fault —
+                // the caller may back off and retry).
+                self.record_recv(msg);
+                Step::Fatal(
+                    Vec::new(),
+                    SetxError::ServerBusy { retry_after_ms: *retry_after_ms },
+                )
+            }
             (EpPhase::AwaitOpen, m @ Msg::Hello { .. }) => self.on_open_hello(m),
             (EpPhase::UniWaitSketch(params), m @ Msg::Sketch(_)) => self.uni_decode(&params, m),
             (EpPhase::UniWaitConfirm, Msg::Confirm { ok, reason, attempt }) => {

@@ -34,7 +34,7 @@
 //!   escalated along a calibrated safety ladder ([`SetxConfig::ladder_factor`]), instead
 //!   of failing opaquely.
 
-mod endpoint;
+pub(crate) mod endpoint;
 pub mod parallel;
 pub mod transport;
 
@@ -103,6 +103,10 @@ pub enum SetxError {
     /// Every attempt of the escalation ladder failed; `failure` is the last attempt's
     /// reason and `attempts` how many were tried.
     Decode { failure: DecodeFailure, attempts: u32 },
+    /// The server rejected the connection at admission (its `max_inflight_sessions` cap):
+    /// a [`crate::protocol::wire::Msg::Busy`] frame arrived instead of the handshake.
+    /// Retry after roughly `retry_after_ms` (0 = no server hint) plus client-side jitter.
+    ServerBusy { retry_after_ms: u32 },
 }
 
 impl std::fmt::Display for SetxError {
@@ -118,6 +122,9 @@ impl std::fmt::Display for SetxError {
             SetxError::Protocol(e) => write!(f, "protocol violation: {e}"),
             SetxError::Decode { failure, attempts } => {
                 write!(f, "{} after {attempts} attempt(s)", failure.name())
+            }
+            SetxError::ServerBusy { retry_after_ms } => {
+                write!(f, "server at admission capacity (retry after ~{retry_after_ms} ms)")
             }
         }
     }
@@ -386,7 +393,11 @@ impl Setx {
         result
     }
 
-    fn pump<T: Transport>(
+    /// The one frame pump every transport-driven run shares: deliver the endpoint's
+    /// opening frames, then feed received frames in until it finishes or fails.
+    /// (`pub(crate)`: [`crate::server`] workers drive their per-connection endpoints
+    /// through this exact loop, so server sessions and `Setx::run` cannot drift.)
+    pub(crate) fn pump<T: Transport>(
         ep: &mut Endpoint<'_>,
         transport: &mut T,
     ) -> Result<SetxReport, SetxError> {

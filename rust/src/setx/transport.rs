@@ -22,8 +22,11 @@
 //!   acceptor). The protocol uses it only to break ties deterministically (initiator
 //!   election, accounting direction); it carries no privilege.
 //!
-//! Blocking `recv` is assumed; the facade has no internal timeouts — wrap the underlying
-//! socket with OS-level read timeouts if needed.
+//! Blocking `recv` is assumed; the facade has no internal timeouts. For sockets, use
+//! [`TcpTransport::set_timeouts`] (or [`TcpTransport::accept_with_timeouts`]) to bound
+//! how long a stalled peer can hold a `recv`/`send` — the multi-client
+//! [`crate::server::SetxServer`] applies these to every accepted connection so one slow
+//! client cannot wedge a worker.
 
 use super::SetxError;
 use crate::protocol::wire::{self, Msg};
@@ -127,15 +130,44 @@ impl TcpTransport {
 
     /// Accept one connection from a bound listener (this end becomes the server).
     pub fn accept(listener: &TcpListener) -> Result<TcpTransport, SetxError> {
+        Self::accept_with_timeouts(listener, None, None)
+    }
+
+    /// [`TcpTransport::accept`] with OS-level read/write timeouts applied before any
+    /// frame I/O — the shared accept helper behind both the one-shot
+    /// [`crate::coordinator::tcp::serve`] and every [`crate::server::SetxServer`]
+    /// worker connection.
+    pub fn accept_with_timeouts(
+        listener: &TcpListener,
+        read: Option<std::time::Duration>,
+        write: Option<std::time::Duration>,
+    ) -> Result<TcpTransport, SetxError> {
         let (stream, _addr) = listener.accept()?;
         stream.set_nodelay(true).ok();
-        Ok(TcpTransport::from_stream(stream, false))
+        let transport = TcpTransport::from_stream(stream, false);
+        transport.set_timeouts(read, write)?;
+        Ok(transport)
     }
 
     /// Wrap an already-connected stream. `client` must reflect which side initiated the
     /// connection (or any out-of-band agreement — the two ends must disagree).
     pub fn from_stream(stream: TcpStream, client: bool) -> TcpTransport {
         TcpTransport { stream, client, bytes_sent: 0, bytes_received: 0 }
+    }
+
+    /// Bound every subsequent socket read/write: a peer that stalls mid-conversation
+    /// longer than the timeout turns the blocked `recv`/`send` into a
+    /// [`SetxError::Io`] (kind `WouldBlock`/`TimedOut`) instead of wedging the calling
+    /// thread forever. `None` restores OS-default blocking. Frame reads are not resumable
+    /// after a timeout — treat the session as failed and drop the transport.
+    pub fn set_timeouts(
+        &self,
+        read: Option<std::time::Duration>,
+        write: Option<std::time::Duration>,
+    ) -> Result<(), SetxError> {
+        self.stream.set_read_timeout(read)?;
+        self.stream.set_write_timeout(write)?;
+        Ok(())
     }
 }
 
@@ -251,6 +283,42 @@ mod tests {
         assert!(client.is_client() && !server.is_client());
         // Clean teardown: the client dropped, so the server sees a frame-boundary close.
         assert!(matches!(server.recv(), Ok(None)));
+    }
+
+    #[test]
+    fn read_timeout_turns_stalled_peer_into_io_error() {
+        use std::time::Duration;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stalled = std::thread::spawn(move || {
+            // Connect, then send nothing for far longer than the server's read timeout.
+            let s = TcpStream::connect(addr).unwrap();
+            std::thread::sleep(Duration::from_millis(400));
+            drop(s);
+        });
+        let mut server = TcpTransport::accept_with_timeouts(
+            &listener,
+            Some(Duration::from_millis(50)),
+            Some(Duration::from_millis(50)),
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        match server.recv() {
+            Err(SetxError::Io(e)) => assert!(
+                matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ),
+                "unexpected io kind {:?}",
+                e.kind()
+            ),
+            other => panic!("stalled peer must surface as Io timeout, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(350),
+            "recv must return at the timeout, not at peer close"
+        );
+        stalled.join().unwrap();
     }
 
     #[test]

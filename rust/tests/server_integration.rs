@@ -1,0 +1,276 @@
+//! System-level tests for the multi-client reconciliation daemon (`commonsense::server`):
+//! fleets of concurrent TCP clients against one `SetxServer`, checked element-for-element
+//! against the in-memory reference, plus the admission-control, timeout, pool-efficiency,
+//! and graceful-shutdown contracts.
+//!
+//! Every listener binds `127.0.0.1:0` (an OS-assigned ephemeral port), so these tests
+//! are safe under any `--test-threads` level — nothing races on a fixed port.
+
+use commonsense::server::loadgen::{self, LoadgenConfig};
+use commonsense::server::SetxServer;
+use commonsense::setx::transport::TcpTransport;
+use commonsense::setx::{Setx, SetxError};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Poll `cond` until it holds or the deadline passes (worker counters update
+/// asynchronously after a client sees its last frame).
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The issue's headline workload: 32 concurrent clients of three shapes — subset
+/// (client ⊆ host), general overlap, and disjoint-heavy (a third of each set unique) —
+/// against a 4-worker server, every report equal to the `run_pair` in-memory reference.
+#[test]
+fn thirty_two_mixed_clients_match_the_in_memory_reference() {
+    let host: Vec<u64> = (0..3_000).collect();
+    let server = SetxServer::builder(Setx::builder(&host).build().unwrap())
+        .workers(4)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    let client_sets: Vec<Vec<u64>> = (0..32u64)
+        .map(|i| match i % 3 {
+            // Subset: Mode::Auto routes these through the unidirectional protocol.
+            0 => host[..(3_000 - 40 - 3 * i as usize)].to_vec(),
+            // General overlap: a few hundred unique on each side.
+            1 => {
+                let mut set = host[..2_500].to_vec();
+                set.extend(100_000 + i * 1_000..100_000 + i * 1_000 + 230);
+                set
+            }
+            // Disjoint-heavy: a third of either set is unique to it.
+            _ => {
+                let mut set = host[..2_000].to_vec();
+                set.extend(200_000 + i * 10_000..200_000 + i * 10_000 + 1_000);
+                set
+            }
+        })
+        .collect();
+
+    let bob = Setx::builder(&host).build().unwrap();
+    let outcomes: Vec<(usize, Result<(), String>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = client_sets
+            .iter()
+            .enumerate()
+            .map(|(i, set)| {
+                let bob = &bob;
+                scope.spawn(move || {
+                    let alice = Setx::builder(set).build().expect("client config");
+                    // In-memory reference first (its own Setx clone so decoder caches
+                    // don't couple the two runs).
+                    let (ref_client, _ref_server) =
+                        alice.clone().run_pair(&bob.clone()).expect("reference run");
+                    let run = || -> Result<(), String> {
+                        let mut transport =
+                            TcpTransport::connect(addr).map_err(|e| e.to_string())?;
+                        let report = alice.run(&mut transport).map_err(|e| e.to_string())?;
+                        if report.intersection != ref_client.intersection {
+                            return Err(format!(
+                                "intersection mismatch: {} vs reference {}",
+                                report.intersection.len(),
+                                ref_client.intersection.len()
+                            ));
+                        }
+                        if report.local_unique != ref_client.local_unique {
+                            return Err("local_unique mismatch".to_string());
+                        }
+                        Ok(())
+                    };
+                    (i, run())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    for (i, outcome) in &outcomes {
+        assert!(outcome.is_ok(), "client {i} (shape {}): {outcome:?}", i % 3);
+    }
+    wait_until("all 32 sessions to be counted", || server.stats().sessions_served >= 32);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_served, 32, "stats: {stats:?}");
+    assert_eq!(stats.sessions_failed, 0, "last failure: {:?}", stats);
+    assert_eq!(stats.sessions_rejected, 0);
+    assert!(stats.peak_workers <= 4, "bounded pool violated: {}", stats.peak_workers);
+    assert!(stats.peak_workers >= 2, "a 32-client burst must overlap sessions");
+    assert!(stats.peak_inflight >= stats.peak_workers);
+    assert!(stats.total_bytes() > 0);
+}
+
+/// Over-admission: at `max_inflight_sessions` live sessions a new connection gets the
+/// typed `Busy` frame, surfaced by the client facade as `SetxError::ServerBusy` — not a
+/// hang, not a reset.
+#[test]
+fn over_admission_surfaces_server_busy() {
+    let host: Vec<u64> = (0..1_000).collect();
+    let server = SetxServer::builder(Setx::builder(&host).build().unwrap())
+        .workers(1)
+        .max_inflight_sessions(1)
+        .timeouts(Some(Duration::from_secs(5)), Some(Duration::from_secs(5)))
+        .busy_retry_hint_ms(70)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    // Occupy the one admission slot with a connection that never speaks.
+    let stalled = TcpStream::connect(addr).unwrap();
+    wait_until("the stalled connection to be admitted", || {
+        server.stats().sessions_accepted == 1
+    });
+
+    // The next client must be turned away with the typed error (and the hint).
+    let client: Vec<u64> = (0..900).collect();
+    let alice = Setx::builder(&client).build().unwrap();
+    let mut transport = TcpTransport::connect(addr).unwrap();
+    match alice.run(&mut transport) {
+        Err(SetxError::ServerBusy { retry_after_ms }) => assert_eq!(retry_after_ms, 70),
+        other => panic!("over-admission must be ServerBusy, got {other:?}"),
+    }
+
+    // Release the slot; the same client is now admitted and served.
+    drop(stalled);
+    wait_until("the stalled session to be reaped", || server.stats().inflight == 0);
+    let report = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+    assert_eq!(report.intersection, client);
+
+    wait_until("final session counts", || {
+        let s = server.stats();
+        s.sessions_served == 1 && s.sessions_failed == 1
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_rejected, 1);
+    assert_eq!(stats.sessions_accepted, 2);
+}
+
+/// Satellite regression: a client that stalls mid-handshake is timed out by the
+/// per-connection read timeout, freeing the worker — it must not wedge forever.
+#[test]
+fn slow_client_times_out_and_frees_the_worker() {
+    let host: Vec<u64> = (0..1_200).collect();
+    let server = SetxServer::builder(Setx::builder(&host).build().unwrap())
+        .workers(1)
+        .timeouts(Some(Duration::from_millis(150)), Some(Duration::from_millis(150)))
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    let slow = TcpStream::connect(addr).unwrap(); // connects, then sends nothing
+    wait_until("the slow client to be timed out", || server.stats().sessions_failed == 1);
+    // The single worker is free again: a real client completes normally.
+    let client: Vec<u64> = (0..1_000).collect();
+    let alice = Setx::builder(&client).build().unwrap();
+    let report = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+    assert_eq!(report.intersection, client);
+    drop(slow);
+    wait_until("the served session to be counted", || server.stats().sessions_served == 1);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_failed, 1);
+    assert_eq!(stats.sessions_served, 1);
+}
+
+/// The acceptance criterion: a shared-geometry fleet (the loadgen default) reuses pooled
+/// decoders for all but the cold starts — hit rate > 0.9 — with every intersection
+/// verified.
+#[test]
+fn shared_geometry_fleet_hits_the_decoder_pool() {
+    let cfg = LoadgenConfig {
+        clients: 8,
+        rounds: 4,
+        common: 4_000,
+        client_unique: 60,
+        server_unique: 90,
+        seed: 7,
+        ..LoadgenConfig::default()
+    };
+    let (host, _, _) = cfg.workload();
+    let server = SetxServer::builder(cfg.endpoint(&host).unwrap())
+        .workers(2)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let report = loadgen::run(server.local_addr(), &cfg);
+    assert!(report.verified(), "loadgen failures: {:?}", report.failures);
+    assert_eq!(report.sessions_ok, 32);
+    wait_until("all sessions to be counted", || server.stats().sessions_served >= 32);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_served, 32);
+    assert_eq!(stats.sessions_failed, 0, "last failure: {stats:?}");
+    assert!(stats.peak_workers <= 2);
+    // With 2 workers on one shared geometry, only the cold-start builds miss.
+    assert!(
+        stats.pool_hit_rate() > 0.9,
+        "decoder pool ineffective: hit rate {:.3} ({:?})",
+        stats.pool_hit_rate(),
+        stats.pool
+    );
+    assert!(stats.pool.hits + stats.pool.misses >= 32, "pool never consulted: {:?}", stats.pool);
+}
+
+/// Pool-off ablation still serves correctly (it just rebuilds decoders every session).
+#[test]
+fn pool_disabled_fleet_still_verifies() {
+    let cfg = LoadgenConfig {
+        clients: 4,
+        rounds: 2,
+        common: 2_000,
+        client_unique: 40,
+        server_unique: 50,
+        seed: 9,
+        ..LoadgenConfig::default()
+    };
+    let (host, _, _) = cfg.workload();
+    let server = SetxServer::builder(cfg.endpoint(&host).unwrap())
+        .workers(2)
+        .pool_capacity(0)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let report = loadgen::run(server.local_addr(), &cfg);
+    assert!(report.verified(), "loadgen failures: {:?}", report.failures);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_served, 8);
+    assert_eq!(stats.pool.hits, 0, "disabled pool must never hit: {:?}", stats.pool);
+}
+
+/// Graceful shutdown drains the queue: sessions admitted before `shutdown` complete,
+/// and their clients get correct answers.
+#[test]
+fn shutdown_drains_already_admitted_sessions() {
+    let host: Vec<u64> = (0..2_000).collect();
+    let server = SetxServer::builder(Setx::builder(&host).build().unwrap())
+        .workers(1)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+    let clients = 4usize;
+    std::thread::scope(|scope| {
+        let host = &host;
+        let handles: Vec<_> = (0..clients)
+            .map(|i| {
+                scope.spawn(move || {
+                    let set: Vec<u64> = host[..1_800 - 10 * i].to_vec();
+                    let alice = Setx::builder(&set).build().unwrap();
+                    let report =
+                        alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+                    assert_eq!(report.intersection, set, "client {i}");
+                })
+            })
+            .collect();
+        // Shut down as soon as everyone is admitted — with one worker, most sessions are
+        // still queued; the drain contract says they all finish anyway.
+        wait_until("all clients to be admitted", || {
+            server.stats().sessions_accepted as usize == clients
+        });
+        let stats = server.shutdown();
+        assert_eq!(stats.sessions_served as usize, clients, "queued sessions dropped");
+        assert_eq!(stats.sessions_failed, 0);
+        for h in handles {
+            h.join().expect("client thread");
+        }
+    });
+}
