@@ -1,9 +1,13 @@
-//! Bench D2 — encode/update/codec throughput backing Theorem 2's complexity claims:
-//! O(m) per streaming update, O(m·|S|) one-shot encode, plus the rANS and truncation
-//! codec costs and the PJRT dense-block encode path.
+//! Bench E1 — the encode-side hot path backing Theorem 2's complexity claims and the
+//! server's host-sketch reuse: serial (batched-sampling) vs parallel `Sketch::encode`
+//! at the headline `n = 100000`, `SketchStore` hit vs miss, the §4 streaming update,
+//! the rANS and truncation codec costs, and the PJRT dense-block encode path.
 //!
 //! Run: `cargo bench --offline --bench encode_throughput [-- --json] [-- --smoke]`
-//! (`--json` appends to the root `BENCH_decode.json` trajectory.)
+//! (`--json` appends to the root `BENCH_encode.json` trajectory. Headline series:
+//! `sketch_encode n=100000` serial baseline plus `sketch_encode_par` threads = {1, 4},
+//! so the parallel speedup ratio stays computable, and `sketch_store_hit` vs
+//! `sketch_store_miss`, the store's per-session payoff.)
 
 use commonsense::data::synth;
 use commonsense::entropy::{
@@ -12,28 +16,68 @@ use commonsense::entropy::{
 use commonsense::matrix::CsMatrix;
 use commonsense::metrics::{self, Bench, BenchProfile, BenchResult};
 use commonsense::protocol::CsParams;
-use commonsense::sketch::Sketch;
+use commonsense::server::SketchStore;
+use commonsense::sketch::{EncodeConfig, Sketch, SketchSource};
 use commonsense::streaming::StreamDigest;
+use std::sync::Arc;
 
 fn main() {
     let profile = BenchProfile::from_env_args();
     let mut results: Vec<BenchResult> = Vec::new();
-    let n = 200_000usize;
-    let d = 2_000usize;
+    // The headline geometry, aligned with the decode bench's `mp_build n=100000 d=1000`.
+    let n = 100_000usize;
+    let d = 1_000usize;
     let params = CsParams::tuned_uni(n, d);
     let mat = params.matrix();
     let (_, b) = synth::subset_pair(n - d, d, 5);
 
-    // One-shot encode: O(m)/element (Theorem 2's encoding complexity).
+    // Serial one-shot encode: O(m)/element (Theorem 2), batched column sampling.
     let (w, me) = profile.times(300, 2000);
-    let r = Bench::new(&format!("sketch_encode |S|={n} m={}", params.m))
+    let r = Bench::new(&format!("sketch_encode n={n} m={} serial", params.m))
         .with_times(w, me)
         .run(|| Sketch::encode(mat, &b).counts.len());
     let per_elem = r.mean.as_nanos() as f64 / n as f64;
     println!("  → {per_elem:.1} ns/element");
     results.push(r);
 
-    // Streaming update: the §4 data-plane operation.
+    // Parallel encode at pinned thread counts. threads=1 resolves to the serial path
+    // by construction (it should track the `serial` row exactly — a drift between the
+    // two rows flags a dispatch regression); threads=4 is the speedup row, and its
+    // ratio vs threads=1 is the pool's payoff.
+    for threads in [1usize, 4] {
+        let (w, me) = profile.times(300, 2000);
+        let r = Bench::new(&format!("sketch_encode_par n={n} threads={threads}"))
+            .with_times(w, me)
+            .run(|| Sketch::encode_par(mat, &b, EncodeConfig { threads }).counts.len());
+        println!("  → {:.1} ns/element", r.mean.as_nanos() as f64 / n as f64);
+        results.push(r);
+    }
+
+    // Host-sketch store: a warm checkout (the steady-state server session) vs a forced
+    // miss (cold geometry → full encode + insert). The hit/miss ratio is the store's
+    // per-session payoff.
+    let host: Arc<Vec<u64>> = Arc::new(b.clone());
+    let store = SketchStore::new(4, Arc::clone(&host));
+    store.host_sketch(&mat, &host, EncodeConfig::serial()); // warm the entry
+    let (w, me) = profile.times(100, 800);
+    results.push(
+        Bench::new(&format!("sketch_store_hit n={n}"))
+            .with_times(w, me)
+            .run(|| store.host_sketch(&mat, &host, EncodeConfig::serial()).counts.len()),
+    );
+    // Forced misses: a capacity-1 store ping-ponged between two geometries never hits.
+    let store1 = SketchStore::new(1, Arc::clone(&host));
+    let other = CsMatrix::new(mat.l(), mat.m(), mat.sampler.seed ^ 1);
+    let mut flip = false;
+    let (w, me) = profile.times(300, 2000);
+    results.push(Bench::new(&format!("sketch_store_miss n={n}")).with_times(w, me).run(|| {
+        flip = !flip;
+        let m = if flip { other } else { mat };
+        store1.host_sketch(&m, &host, EncodeConfig::serial()).counts.len()
+    }));
+
+    // Streaming update: the §4 data-plane operation (also what keeps resident store
+    // sketches warm through `replace_set` churn).
     let mut digest = StreamDigest::new(mat);
     let mut i = 0usize;
     let (w, me) = profile.times(300, 1500);
@@ -114,7 +158,7 @@ fn main() {
 
     if profile.json {
         metrics::append_bench_json(
-            metrics::BENCH_DECODE_JSON,
+            metrics::BENCH_ENCODE_JSON,
             &results,
             profile.fingerprint("encode_throughput"),
         )
@@ -122,7 +166,7 @@ fn main() {
         println!(
             "(trajectory: {} records appended to {})",
             results.len(),
-            metrics::BENCH_DECODE_JSON
+            metrics::BENCH_ENCODE_JSON
         );
     }
 }

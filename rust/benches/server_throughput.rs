@@ -1,10 +1,13 @@
 //! Multi-client server throughput: sessions/sec of a [`SetxServer`] under the verifying
-//! loadgen fleet, at clients = {1, 8, 32}, with the shared decoder pool on vs off.
+//! loadgen fleet, at clients = {1, 8, 32}, with the shared decoder pool and the
+//! host-sketch store on vs off, plus a `workers` sweep at the fleet shape.
 //!
-//! The pool-off column is the ablation: it pays full decoder construction per session,
-//! so the on/off ratio is the server-side payoff of PR 3's decoder-reuse machinery at
-//! fleet scale. Every session's intersection is verified — a throughput number from
-//! wrong answers would be worthless.
+//! The off columns are the ablations: pool-off pays full decoder construction per
+//! session, store-off pays a full host-set encode per session, so the on/off ratios are
+//! the server-side payoff of the reuse machinery at fleet scale. The workers sweep
+//! (clients = 8, everything on) shows how that payoff scales with server parallelism.
+//! Every session's intersection is verified — a throughput number from wrong answers
+//! would be worthless.
 //!
 //! `cargo bench --bench server_throughput -- [--json] [--smoke]` — `--json` appends one
 //! record per configuration to the repo-root `BENCH_server.json` trajectory
@@ -19,52 +22,69 @@ use std::time::Instant;
 
 const WORKERS: usize = 4;
 
+/// One verified fleet run; returns the per-session wall-clock record.
+fn run_config(
+    common: usize,
+    rounds: usize,
+    clients: usize,
+    workers: usize,
+    pool_on: bool,
+    store_on: bool,
+) -> BenchResult {
+    let cfg = LoadgenConfig { clients, rounds, common, ..LoadgenConfig::default() };
+    let (host, _, _) = cfg.workload();
+    let endpoint = cfg.endpoint(&host).expect("loadgen config is always valid");
+    let server = SetxServer::builder(endpoint)
+        .workers(workers)
+        .max_inflight_sessions(2 * clients + 8)
+        .pool_capacity(if pool_on { 4 * workers } else { 0 })
+        .sketch_store_capacity(if store_on { 8 } else { 0 })
+        .bind("127.0.0.1:0")
+        .expect("bind ephemeral loopback listener");
+    let t0 = Instant::now();
+    let report = loadgen::run(server.local_addr(), &cfg);
+    let elapsed = t0.elapsed();
+    let stats = server.shutdown();
+    assert!(
+        report.verified(),
+        "throughput of wrong answers is meaningless: {:?}",
+        report.failures
+    );
+    let sessions = report.sessions_ok.max(1);
+    let per_session = elapsed / sessions as u32;
+    let name = format!(
+        "server_throughput common={common} clients={clients} rounds={rounds} \
+         workers={workers} pool={} store={}",
+        if pool_on { "on" } else { "off" },
+        if store_on { "on" } else { "off" }
+    );
+    println!(
+        "bench {name:<84} {:>8.1} sessions/s (pool hit {:.3}, store hit {:.3}, peak workers {})",
+        report.sessions_per_sec(),
+        stats.pool_hit_rate(),
+        stats.sketch_store_hit_rate(),
+        stats.peak_workers
+    );
+    BenchResult { name, mean: per_session, min: per_session, iters: sessions as u64 }
+}
+
 fn main() {
     let profile = BenchProfile::from_env_args();
-    // Smoke keeps the headline shape (same clients sweep, pool on vs off) at CI scale.
+    // Smoke keeps the headline shape (same sweeps, reuse on vs off) at CI scale.
     let common = if profile.smoke { 4_000 } else { 50_000 };
     let rounds = if profile.smoke { 2 } else { 4 };
     let mut results = Vec::new();
-    for pool_on in [true, false] {
+    // Clients sweep × reuse ablations: everything-on, store-off (encode ablation),
+    // everything-off (the PR 3-era baseline).
+    for (pool_on, store_on) in [(true, true), (true, false), (false, false)] {
         for clients in [1usize, 8, 32] {
-            let cfg = LoadgenConfig { clients, rounds, common, ..LoadgenConfig::default() };
-            let (host, _, _) = cfg.workload();
-            let endpoint = cfg.endpoint(&host).expect("loadgen config is always valid");
-            let server = SetxServer::builder(endpoint)
-                .workers(WORKERS)
-                .max_inflight_sessions(2 * clients + 8)
-                .pool_capacity(if pool_on { 4 * WORKERS } else { 0 })
-                .bind("127.0.0.1:0")
-                .expect("bind ephemeral loopback listener");
-            let t0 = Instant::now();
-            let report = loadgen::run(server.local_addr(), &cfg);
-            let elapsed = t0.elapsed();
-            let stats = server.shutdown();
-            assert!(
-                report.verified(),
-                "throughput of wrong answers is meaningless: {:?}",
-                report.failures
-            );
-            let sessions = report.sessions_ok.max(1);
-            let per_session = elapsed / sessions as u32;
-            let name = format!(
-                "server_throughput common={common} clients={clients} rounds={rounds} \
-                 workers={WORKERS} pool={}",
-                if pool_on { "on" } else { "off" }
-            );
-            println!(
-                "bench {name:<72} {:>8.1} sessions/s (pool hit rate {:.3}, peak workers {})",
-                report.sessions_per_sec(),
-                stats.pool_hit_rate(),
-                stats.peak_workers
-            );
-            results.push(BenchResult {
-                name,
-                mean: per_session,
-                min: per_session,
-                iters: sessions as u64,
-            });
+            results.push(run_config(common, rounds, clients, WORKERS, pool_on, store_on));
         }
+    }
+    // Workers sweep at the fleet shape (clients = 8, reuse on): the ROADMAP's
+    // scale-with-parallelism axis.
+    for workers in [1usize, 2, 8] {
+        results.push(run_config(common, rounds, 8, workers, true, true));
     }
     if profile.json {
         append_bench_json(

@@ -95,7 +95,17 @@ impl ColumnSampler {
     #[inline]
     pub fn rows_into<'a>(&self, id: u64, out: &'a mut [u32]) -> &'a [u32] {
         debug_assert!(out.len() >= self.m as usize);
-        let mut rng = Xoshiro256::seed_from_u64(split_mix64(self.seed) ^ split_mix64(id));
+        self.rows_into_mixed(split_mix64(self.seed), id, out);
+        &out[..self.m as usize]
+    }
+
+    /// The shared Floyd kernel: `seed_mix` is the pre-mixed `split_mix64(self.seed)`, so
+    /// batch callers hoist that half of the PRNG seeding out of their per-element loop.
+    /// [`rows_into`](Self::rows_into) and [`rows_batch`](Self::rows_batch) both funnel
+    /// through here — they cannot drift apart.
+    #[inline]
+    fn rows_into_mixed(&self, seed_mix: u64, id: u64, out: &mut [u32]) {
+        let mut rng = Xoshiro256::seed_from_u64(seed_mix ^ split_mix64(id));
         let mut count = 0usize;
         let start = self.l - self.m;
         for j in start..self.l {
@@ -104,7 +114,26 @@ impl ColumnSampler {
             out[count] = pick;
             count += 1;
         }
-        &out[..self.m as usize]
+    }
+
+    /// Batched [`rows_into`](Self::rows_into): sample the columns of every id in `ids` in
+    /// one call, writing column `i` into `out[i*m .. (i+1)*m]` (`out.len()` must be at
+    /// least `ids.len() * m`). Bit-identical to calling `rows_into` per id — same Floyd
+    /// draws from the same per-id PRNG stream — but the seed pre-mix, the bounds checks,
+    /// and the call overhead are hoisted out of the per-element loop, which is what the
+    /// encode hot path ([`crate::sketch::Sketch::encode`]) iterates millions of times.
+    pub fn rows_batch(&self, ids: &[u64], out: &mut [u32]) {
+        let m = self.m as usize;
+        assert!(
+            out.len() >= ids.len() * m,
+            "rows_batch out buffer too small: {} < {}",
+            out.len(),
+            ids.len() * m
+        );
+        let seed_mix = split_mix64(self.seed);
+        for (col, &id) in out.chunks_exact_mut(m).zip(ids) {
+            self.rows_into_mixed(seed_mix, id, col);
+        }
     }
 
     /// Allocate-and-return variant of [`rows_into`](Self::rows_into).
@@ -171,6 +200,34 @@ mod tests {
         // This used to be a debug_assert! deep in Sketch::update — release builds would
         // sail past it and panic on a slice inside the hot loop instead.
         let _ = ColumnSampler::new(1 << 20, MAX_M + 1, 1);
+    }
+
+    #[test]
+    fn rows_batch_is_bit_identical_to_rows_into() {
+        // Property: across geometries (including the MAX_M boundary and m == l), the
+        // batched sampler writes exactly the per-id rows, in the same order.
+        let mut rng_seed = 0x5eedu64;
+        let geoms = [(1000u32, 7u32), (512, 5), (64, 64), (1 << 16, MAX_M), (5, 5), (128, 1)];
+        for &(l, m) in &geoms {
+            rng_seed = rng_seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let s = ColumnSampler::new(l, m, rng_seed);
+            let ids: Vec<u64> =
+                (0..257u64).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15) ^ rng_seed).collect();
+            let mut batch = vec![0u32; ids.len() * m as usize];
+            s.rows_batch(&ids, &mut batch);
+            for (i, &id) in ids.iter().enumerate() {
+                let col = &batch[i * m as usize..(i + 1) * m as usize];
+                assert_eq!(col, &s.rows(id)[..], "l={l} m={m} id={id}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rows_batch out buffer too small")]
+    fn rows_batch_rejects_short_buffer() {
+        let s = ColumnSampler::new(128, 5, 1);
+        let mut out = vec![0u32; 9]; // 2 ids need 10
+        s.rows_batch(&[1, 2], &mut out);
     }
 
     #[test]

@@ -84,42 +84,66 @@
 //!   rather than a hang or a reset. [`server::ServerHandle::shutdown`] drains queued
 //!   sessions and returns final [`server::ServerStats`].
 //!
-//! The daemon's performance core is the [`server::DecoderPool`]: decoder construction
-//! over the host set dominates each session's local cost, and clients syncing against
-//! one hot set keep negotiating the same matrix geometry — so finished decoders are
-//! parked in a concurrency-safe LRU pool keyed by exact geometry `(seed, l, m)` and
-//! revalidated on checkout by the full decoder cache key (matrix + candidates + side;
-//! the same double check the one-slot [`decoder::DecoderCache`] performs). Thousands of
-//! same-geometry sessions then pay for construction only `workers` times. Hit/miss/
-//! eviction counters surface in `ServerStats`, and [`server::loadgen`] (also the
-//! `commonsense loadgen` CLI) provides a verifying many-client workload; the
-//! `server_throughput` bench tracks sessions/sec with the pool on vs off.
+//! The daemon's performance core is two reuse layers over one observation — clients
+//! syncing against one hot set keep negotiating the same matrix geometry:
+//!
+//! * [`server::DecoderPool`]: decoder construction over the host set dominates each
+//!   session's local cost, so finished decoders are parked in a concurrency-safe LRU
+//!   pool keyed by exact geometry `(seed, l, m)` and revalidated on checkout by the
+//!   full decoder cache key (matrix + candidates + side; the same double check the
+//!   one-slot [`decoder::DecoderCache`] performs). Thousands of same-geometry sessions
+//!   then pay for construction only `workers` times.
+//! * [`server::SketchStore`]: the next cost down is re-encoding the (unchanged) host
+//!   set's sketch `M·1_host` per session and per escalation rung, so the store
+//!   memoizes it per geometry — encoded once (single-flight under a cold burst),
+//!   checked out afterwards as an O(1) shared `Arc` clone, and **maintained
+//!   incrementally** through [`server::ServerHandle::replace_set`] by §4 streaming
+//!   updates over the per-id set delta (entries are invalidated and re-encoded on
+//!   demand when the delta outweighs the set).
+//!
+//! Hit/miss/eviction/incremental-update counters for both layers surface in
+//! `ServerStats`, and [`server::loadgen`] (also the `commonsense loadgen` CLI) provides
+//! a verifying many-client workload; the `server_throughput` bench tracks sessions/sec
+//! with each layer on vs off, across a `workers` sweep.
 //!
 //! ## Performance
 //!
-//! The dominant local cost of a session is **decoder construction** (column sampling +
-//! CSR + reverse lookup over all n candidates), and the repo attacks it three ways:
+//! The dominant local costs of a session are **decoder construction** (column sampling +
+//! CSR + reverse lookup over all n candidates) and **sketch encoding** (O(m·|S|),
+//! Theorem 2), and the repo attacks both the same three ways:
 //!
-//! * **Parallel construction** — [`decoder::MpDecoder::with_config`] shards the build
-//!   across a bounded worker pool ([`decoder::DecoderConfig::build_threads`]; `0` = auto)
-//!   with a counting-sort merge that is bit-identical to the serial path
-//!   (property-tested via [`decoder::MpDecoder::structure_digest`]).
-//! * **Decoder reuse** — a [`decoder::DecoderCache`] threads through the [`setx`]
-//!   endpoint, sessions, and the unidirectional decode: ladder attempts and repeat
-//!   conversations that keep the same matrix reset the constructed decoder
-//!   (`reset_signal`, decode-for-decode identical to a fresh build) instead of
-//!   rebuilding. Per-id hot operations (`force`, §5.2 collision resolution,
+//! * **Parallel construction and encoding** — [`decoder::MpDecoder::with_config`]
+//!   shards the build across a bounded worker pool
+//!   ([`decoder::DecoderConfig::build_threads`]; `0` = auto) with a counting-sort merge
+//!   that is bit-identical to the serial path (property-tested via
+//!   [`decoder::MpDecoder::structure_digest`]); [`sketch::Sketch::encode_par`] does the
+//!   same for encoding ([`sketch::EncodeConfig`]; `0` = auto; `Setx::builder(…)
+//!   .encode_threads(n)` is the facade knob) with thread-local count vectors merged by
+//!   addition — also bit-identical, property-tested through the `m = 64` boundary. The
+//!   serial encode itself samples columns in batches
+//!   ([`hash::ColumnSampler::rows_batch`]), hoisting PRNG seeding and bounds checks out
+//!   of the per-element loop. Nested drivers (partitioned workers, server worker pools)
+//!   pin both knobs to 1 so pools don't multiply.
+//! * **Reuse** — a [`decoder::DecoderCache`] threads through the [`setx`] endpoint,
+//!   sessions, and the unidirectional decode: ladder attempts and repeat conversations
+//!   that keep the same matrix reset the constructed decoder (`reset_signal`,
+//!   decode-for-decode identical to a fresh build) instead of rebuilding; the
+//!   encode-side twin is the server's [`server::SketchStore`] (host sketch per
+//!   geometry, O(1) checkout, §4-incremental under `replace_set`). Per-id hot
+//!   operations (`force`, §5.2 collision resolution,
 //!   [`decoder::MpDecoder::set_banned_ids`]) are O(1) via an open-addressing id→slot
 //!   table ([`hash::IdIndex`]).
 //! * **A persistent perf trajectory** — every bench target supports
 //!   `cargo bench --bench <name> -- --json [--smoke]`; results (name, mean_ns, min_ns,
-//!   iters, config fingerprint) append to the repo-root `BENCH_decode.json`
-//!   (decode/encode microbenches) and `BENCH_protocol.json` (protocol sweeps) as one
-//!   growing JSON array. CI runs the `--smoke` profile on every push, restores the
-//!   accumulated files across runs (cache), and uploads them as the `bench-trajectory`
-//!   artifact, so perf regressions show up as data —
-//!   the headline series is `mp_build n=100000 d=1000 threads={1,4}` (serial baseline
-//!   vs parallel construction). See [`metrics::append_bench_json`].
+//!   iters, config fingerprint) append to the repo-root `BENCH_decode.json` (decode
+//!   microbenches), `BENCH_encode.json` (encode/store microbenches),
+//!   `BENCH_protocol.json` (protocol sweeps), and `BENCH_server.json` (server operating
+//!   points) as one growing JSON array each. CI runs the `--smoke` profile on every
+//!   push, restores the accumulated files across runs (cache), and uploads them as the
+//!   `bench-trajectory` artifact, so perf regressions show up as data — the headline
+//!   series are `mp_build n=100000 d=1000 threads={1,4}` and
+//!   `sketch_encode[_par] n=100000` serial/threads={1,4} (serial baselines vs parallel),
+//!   plus `sketch_store_hit` vs `sketch_store_miss`. See [`metrics::append_bench_json`].
 //!
 //! ## Workspace layout
 //!

@@ -24,7 +24,8 @@ USAGE:
                                               estimated in the handshake unless
                                               --explicit-d is given)
   commonsense serve [--listen ADDR] [--workers W] [--max-inflight M] [--pool-capacity C]
-                    [--no-pool] [--sessions K] [--common N] [--client-unique X]
+                    [--no-pool] [--store-capacity C] [--no-store] [--sessions K]
+                    [--common N] [--client-unique X]
                     [--server-unique Y] [--seed S] [--estimate-d]
                                              (multi-client daemon: keeps the host set
                                               online until killed, or until K sessions
@@ -46,7 +47,7 @@ Defaults: --transport mem, --common 50000 (serve/loadgen/connect: 20000), --a-un
           --b-unique 300, --parts 16, --threads 4, --scale 50000, --instances 5,
           --eth-accounts 300000, --n 100000, --d 1000, --workers 4, --max-inflight 64,
           --clients 8, --rounds 2, --client-unique 100, --server-unique 200, --seed 42,
-          --busy-retries 3. serve/loadgen/connect must share the workload flags
+          --busy-retries 3, --store-capacity 8. serve/loadgen/connect must share the workload flags
           (including --seed) and declare the exactly-known d (one shared matrix
           geometry, the decoder-pool sweet spot) unless --estimate-d is given."
     );
@@ -259,15 +260,18 @@ fn main() -> anyhow::Result<()> {
             } else {
                 args.get("pool-capacity", 4 * workers.max(1))
             };
+            let store_capacity =
+                if args.has("no-store") { 0 } else { args.get("store-capacity", 8) };
             let sessions = args.get("sessions", 0);
             let server = SetxServer::builder(endpoint)
                 .workers(workers)
                 .max_inflight_sessions(args.get("max-inflight", 64))
                 .pool_capacity(pool_capacity)
+                .sketch_store_capacity(store_capacity)
                 .bind(&addr)?;
             println!(
                 "serving |B| = {} on {} (workers {workers}, max inflight {}, pool capacity {}, \
-                 {})",
+                 sketch store capacity {store_capacity}, {})",
                 host.len(),
                 server.local_addr(),
                 args.get("max-inflight", 64),

@@ -160,9 +160,13 @@ impl CsMatrix {
         let mut worst = 1.0f64;
         let mut buf = vec![0u32; self.m() as usize];
         let mut mark = vec![false; self.l() as usize];
+        // One s·m-capacity scratch for the whole probe: the per-trial allocation used
+        // to dominate small-s sweeps (`trials` heap round-trips for a buffer whose size
+        // never changes); `clear()` keeps the capacity across trials.
+        let mut touched: Vec<u32> = Vec::with_capacity(s * self.m() as usize);
         for _ in 0..trials {
             let mut distinct = 0usize;
-            let mut touched: Vec<u32> = Vec::with_capacity(s * self.m() as usize);
+            touched.clear();
             for _ in 0..s {
                 let id = ids[rng.gen_range(ids.len() as u64) as usize];
                 for &r in self.column_into(id, &mut buf) {
@@ -173,7 +177,7 @@ impl CsMatrix {
                     }
                 }
             }
-            for r in touched {
+            for &r in &touched {
                 mark[r as usize] = false;
             }
             let ratio = distinct as f64 / (s as f64 * self.m() as f64);

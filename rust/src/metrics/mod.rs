@@ -7,9 +7,11 @@
 //! The harness also persists a **machine-readable perf trajectory**: every self-harnessed
 //! bench target (`cargo bench --bench <name> -- --json [--smoke]`) appends its
 //! [`BenchResult`]s as JSON records to a root-level trajectory file
-//! ([`BENCH_DECODE_JSON`] for the decode/encode microbenches, [`BENCH_PROTOCOL_JSON`]
-//! for the protocol-level sweeps), so regressions show up as data instead of anecdotes —
-//! CI runs the `--smoke` profile on every push and uploads the files as artifacts.
+//! ([`BENCH_DECODE_JSON`] for the decode microbenches, [`BENCH_ENCODE_JSON`] for the
+//! encode-side microbenches, [`BENCH_PROTOCOL_JSON`] for the protocol-level sweeps,
+//! [`BENCH_SERVER_JSON`] for the multi-client server operating points), so regressions
+//! show up as data instead of anecdotes — CI runs the `--smoke` profile on every push
+//! and uploads the files as artifacts.
 
 use crate::hash::hash_u64;
 use std::time::{Duration, Instant};
@@ -246,9 +248,14 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-/// Trajectory file for the decode/encode microbench targets
-/// (`decode_throughput`, `encode_throughput`), repo-root relative.
+/// Trajectory file for the decode microbench target (`decode_throughput`),
+/// repo-root relative.
 pub const BENCH_DECODE_JSON: &str = "BENCH_decode.json";
+
+/// Trajectory file for the encode-side microbench target (`encode_throughput`:
+/// serial vs parallel `Sketch::encode` at n = 100000, sketch-store hit vs miss,
+/// streaming updates, codecs), repo-root relative.
+pub const BENCH_ENCODE_JSON: &str = "BENCH_encode.json";
 
 /// Trajectory file for the protocol-level bench targets
 /// (`fig2a_unidirectional`, `fig2b_bidirectional`, `table2_ethereum`), repo-root relative.

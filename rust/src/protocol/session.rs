@@ -30,9 +30,10 @@ use crate::hash::hash_u64;
 use crate::metrics::{CommLog, Phase as CommPhase};
 use crate::protocol::bidi::BidiOptions;
 use crate::protocol::{wire::Msg, CsParams};
-use crate::sketch::Sketch;
+use crate::sketch::{EncodeConfig, Sketch};
 use crate::smf::BloomFilter;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Terminal protocol faults. Any error closes the session: the frame stream is not
 /// trustworthy past the first malformed or out-of-phase message.
@@ -144,6 +145,14 @@ pub struct Session {
     /// decoder, refilled by [`Session::into_parts`] when the session ends, so callers
     /// that keep the cache across attempts/conversations skip identical rebuilds.
     cache: DecoderCache,
+    /// Encode-side parallelism for this session's own-set sketch (see [`EncodeConfig`];
+    /// local knob, no wire impact).
+    enc: EncodeConfig,
+    /// A pre-resolved sketch of this endpoint's set (e.g. checked out of a server's
+    /// host-sketch store) consumed when the initiator's sketch arrives; matrix-validated
+    /// before use and ignored on mismatch, so a wrong hint degrades to a re-encode, never
+    /// to a wrong residue.
+    host_sketch: Option<Arc<Sketch>>,
 }
 
 impl Session {
@@ -167,7 +176,23 @@ impl Session {
         set: &[u64],
         opts: BidiOptions,
         is_alice: bool,
+        cache: DecoderCache,
+    ) -> (Session, Vec<Msg>) {
+        Self::initiator_with(params, set, opts, is_alice, cache, EncodeConfig::default(), None)
+    }
+
+    /// [`Session::initiator_cached`] with the encode-side knobs: `enc` parallelizes the
+    /// opening sketch encode, and `host_sketch` (when it matches the attempt's matrix —
+    /// validated, ignored otherwise) skips that encode entirely, e.g. when a server-side
+    /// initiator checks its host set's sketch out of a shared store.
+    pub fn initiator_with(
+        params: &CsParams,
+        set: &[u64],
+        opts: BidiOptions,
+        is_alice: bool,
         mut cache: DecoderCache,
+        enc: EncodeConfig,
+        host_sketch: Option<&Sketch>,
     ) -> (Session, Vec<Msg>) {
         let (est_i, est_r) = if is_alice {
             (params.est_a_unique, params.est_b_unique)
@@ -183,7 +208,10 @@ impl Session {
             est_responder_unique: est_r as u64,
             set_len: set.len() as u64,
         };
-        let sketch = initiator_sketch(params, set, is_alice);
+        let sketch = match host_sketch.filter(|sk| sk.matrix == params.matrix()) {
+            Some(sk) => sketch_msg(params, &sk.counts, is_alice),
+            None => initiator_sketch_with(params, set, is_alice, enc),
+        };
         let peer = Peer::with_cache(params, set, Side::Negative, opts, &mut cache);
         let mut session = Session {
             role: Role::Initiator,
@@ -193,6 +221,8 @@ impl Session {
             phase: Phase::PingPong(peer),
             comm: CommLog::new(),
             cache,
+            enc,
+            host_sketch: None,
         };
         session.record_sent(&hello);
         session.record_sent(&sketch);
@@ -222,7 +252,22 @@ impl Session {
             phase: Phase::AwaitHello,
             comm: CommLog::new(),
             cache,
+            enc: EncodeConfig::default(),
+            host_sketch: None,
         }
+    }
+
+    /// Set the encode-side parallelism for this session's own-set sketch work (drivers
+    /// that already run many sessions in parallel pin [`EncodeConfig::serial`]).
+    pub fn set_encode_config(&mut self, enc: EncodeConfig) {
+        self.enc = enc;
+    }
+
+    /// Hand the responder a pre-resolved sketch of its own set (e.g. from a shared
+    /// host-sketch store) to use instead of re-encoding when the initiator's sketch
+    /// arrives. Matrix-validated at use: a sketch for a different matrix is ignored.
+    pub fn set_host_sketch(&mut self, sketch: Arc<Sketch>) {
+        self.host_sketch = Some(sketch);
     }
 
     /// Decompose a finished (or abandoned) session into its transcript, outcome
@@ -272,8 +317,10 @@ impl Session {
             (Phase::AwaitSketch(params), Msg::Sketch(sm)) => {
                 // The decoder copies the candidate ids; release our buffer with it.
                 let set = std::mem::take(&mut self.set);
-                let residue0 = responder_residue(&params, &set, sm, true)
-                    .ok_or(SessionError::SketchRecovery)?;
+                let host = self.host_sketch.take();
+                let residue0 =
+                    responder_residue_with(&params, &set, sm, true, host.as_deref(), self.enc)
+                        .ok_or(SessionError::SketchRecovery)?;
                 let opts = self.opts;
                 let mut peer =
                     Peer::with_cache(&params, &set, Side::Positive, opts, &mut self.cache);
@@ -565,21 +612,61 @@ pub fn codec_params(params: &CsParams, initiator_is_alice: bool) -> SketchCodecP
     SketchCodecParams::derive(r_unique, i_unique, params.l, params.m)
 }
 
-/// Initiator helper: the compressed sketch message for `set`.
+/// Initiator helper: the compressed sketch message for `set` (serial encode; the session
+/// paths use [`initiator_sketch_with`]).
 pub fn initiator_sketch(params: &CsParams, set: &[u64], initiator_is_alice: bool) -> Msg {
-    let sketch = Sketch::encode(params.matrix(), set);
-    Msg::Sketch(compress_sketch(&sketch.counts, &codec_params(params, initiator_is_alice)))
+    initiator_sketch_with(params, set, initiator_is_alice, EncodeConfig::serial())
+}
+
+/// [`initiator_sketch`] with an [`EncodeConfig`]: the sketch encode — the initiator's
+/// dominant local cost at large |set| — runs on the bounded encode pool.
+pub fn initiator_sketch_with(
+    params: &CsParams,
+    set: &[u64],
+    initiator_is_alice: bool,
+    enc: EncodeConfig,
+) -> Msg {
+    let sketch = Sketch::encode_par(params.matrix(), set, enc);
+    sketch_msg(params, &sketch.counts, initiator_is_alice)
+}
+
+/// Compress already-encoded sketch counts into the wire frame.
+fn sketch_msg(params: &CsParams, counts: &[i32], initiator_is_alice: bool) -> Msg {
+    Msg::Sketch(compress_sketch(counts, &codec_params(params, initiator_is_alice)))
 }
 
 /// Responder helper: recover the initiator's sketch and form the initial canonical
-/// residue `r⃗_(1) = M·1_R − M̂·1_I` (responder-positive).
+/// residue `r⃗_(1) = M·1_R − M̂·1_I` (responder-positive). Serial self-encode; the
+/// session paths use [`responder_residue_with`].
 pub fn responder_residue(
     params: &CsParams,
     set: &[u64],
     sketch: &crate::entropy::SketchMsg,
     initiator_is_alice: bool,
 ) -> Option<Vec<i32>> {
-    let my_sketch = Sketch::encode(params.matrix(), set);
+    responder_residue_with(params, set, sketch, initiator_is_alice, None, EncodeConfig::serial())
+}
+
+/// [`responder_residue`] with the encode-side knobs: when `host` holds a pre-resolved
+/// sketch of `set` under exactly `params.matrix()` (validated here) the O(m·|set|)
+/// self-encode is skipped entirely — the server host-sketch-store fast path; otherwise
+/// the encode runs under `enc`.
+pub fn responder_residue_with(
+    params: &CsParams,
+    set: &[u64],
+    sketch: &crate::entropy::SketchMsg,
+    initiator_is_alice: bool,
+    host: Option<&Sketch>,
+    enc: EncodeConfig,
+) -> Option<Vec<i32>> {
+    let owned;
+    let my_sketch = match host.filter(|sk| sk.matrix == params.matrix()) {
+        Some(sk) => sk,
+        None => {
+            owned = Sketch::encode_par(params.matrix(), set, enc);
+            &owned
+        }
+    };
     if sketch.n != my_sketch.counts.len() {
         // Mis-negotiated or adversarial frame: `recover_sketch` asserts on a length
         // mismatch; refuse here so transports get an error instead of a panic.

@@ -18,7 +18,7 @@ use crate::decoder::{run_with_fallback, DecoderCache, DecoderConfig, Side};
 use crate::entropy::{compress_sketch, recover_sketch, SketchCodecParams};
 use crate::metrics::{CommLog, Phase};
 use crate::protocol::{wire::Msg, CsParams, DecodeFailure};
-use crate::sketch::Sketch;
+use crate::sketch::{EncodeConfig, Sketch};
 
 /// Engine-level unidirectional error: either the frame itself was unusable, or the
 /// decode failed with a layer-specific [`DecodeFailure`]. The facade wraps this into its
@@ -55,9 +55,30 @@ pub struct UniOutcome {
     pub used_fallback: bool,
 }
 
-/// Alice's half: produce the (framed) sketch message.
+/// Alice's half: produce the (framed) sketch message (serial encode; the facade paths
+/// use [`alice_encode_with`]).
 pub fn alice_encode(a: &[u64], params: &CsParams) -> (Msg, usize) {
-    let sketch = Sketch::encode(params.matrix(), a);
+    alice_encode_with(a, params, EncodeConfig::serial(), None)
+}
+
+/// [`alice_encode`] with the encode-side knobs: `host` (a pre-resolved sketch of `a`
+/// under exactly `params.matrix()`, validated here) skips the O(m·|a|) encode — the
+/// host-sketch-store fast path for a serving initiator — and `enc` parallelizes it
+/// otherwise.
+pub fn alice_encode_with(
+    a: &[u64],
+    params: &CsParams,
+    enc: EncodeConfig,
+    host: Option<&Sketch>,
+) -> (Msg, usize) {
+    let owned;
+    let sketch = match host.filter(|sk| sk.matrix == params.matrix()) {
+        Some(sk) => sk,
+        None => {
+            owned = Sketch::encode_par(params.matrix(), a, enc);
+            &owned
+        }
+    };
     let codec = SketchCodecParams::derive(params.est_b_unique, params.est_a_unique, params.l, params.m);
     let msg = Msg::Sketch(compress_sketch(&sketch.counts, &codec));
     let size = msg.to_bytes().len();
@@ -81,11 +102,33 @@ pub fn bob_decode_cached(
     params: &CsParams,
     cache: &mut DecoderCache,
 ) -> Result<(Vec<u64>, bool), UniError> {
+    bob_decode_with(msg, b, params, cache, None, EncodeConfig::serial())
+}
+
+/// [`bob_decode_cached`] with the encode-side knobs: `host` (a pre-resolved sketch of
+/// `b` under exactly `params.matrix()`, validated here) skips Bob's own O(m·|b|)
+/// self-encode — the server host-sketch-store fast path — and `enc` parallelizes the
+/// encode otherwise.
+pub fn bob_decode_with(
+    msg: &Msg,
+    b: &[u64],
+    params: &CsParams,
+    cache: &mut DecoderCache,
+    host: Option<&Sketch>,
+    enc: EncodeConfig,
+) -> Result<(Vec<u64>, bool), UniError> {
     let Msg::Sketch(sketch_msg) = msg else {
         return Err(UniError::Frame("expected sketch frame"));
     };
     let matrix = params.matrix();
-    let my_sketch = Sketch::encode(matrix, b);
+    let owned;
+    let my_sketch = match host.filter(|sk| sk.matrix == matrix) {
+        Some(sk) => sk,
+        None => {
+            owned = Sketch::encode_par(matrix, b, enc);
+            &owned
+        }
+    };
     if sketch_msg.n != my_sketch.counts.len() {
         // Mis-negotiated geometry: `recover_sketch` asserts on a length mismatch; refuse
         // here so callers get a typed error instead of a panic.

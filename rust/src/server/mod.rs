@@ -17,6 +17,11 @@
 //!   capacity-bounded LRU pool keyed by exact matrix geometry, so the dominant
 //!   per-session cost (decoder construction over the host set) is paid once per
 //!   geometry instead of once per connection.
+//! * **[`SketchStore`]** — the encode-side sibling of the decoder pool: the host set's
+//!   sketch per negotiated geometry, encoded once (single-flight) and checked out in
+//!   O(1) by every later session instead of re-encoded O(m·n) per connection;
+//!   [`ServerHandle::replace_set`] maintains resident sketches *incrementally* via §4
+//!   streaming ±1 updates over the set diff.
 //! * **Admission control** — at `max_inflight_sessions` live sessions, new connections
 //!   get a typed [`Msg::Busy`] frame (surfaced client-side as
 //!   [`SetxError::ServerBusy`] with a retry hint) instead of a hung or reset socket.
@@ -41,9 +46,11 @@
 
 pub mod loadgen;
 pub mod pool;
+pub mod sketch_store;
 mod stats;
 
 pub use pool::{DecoderPool, PoolStats};
+pub use sketch_store::{SketchStore, SketchStoreStats};
 pub use stats::ServerStats;
 
 use crate::decoder::{DecoderCache, DecoderStore};
@@ -51,6 +58,7 @@ use crate::protocol::wire::Msg;
 use crate::setx::endpoint::Endpoint;
 use crate::setx::transport::{TcpTransport, Transport};
 use crate::setx::{Setx, SetxConfig, SetxError, SetxReport};
+use crate::sketch::SketchSource;
 use stats::StatsInner;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -68,9 +76,11 @@ pub struct ServerBuilder {
     workers: usize,
     max_inflight: usize,
     pool_capacity: Option<usize>,
+    sketch_store_capacity: Option<usize>,
     read_timeout: Option<Duration>,
     write_timeout: Option<Duration>,
     build_threads: usize,
+    encode_threads: usize,
     busy_retry_hint_ms: u32,
 }
 
@@ -97,6 +107,14 @@ impl ServerBuilder {
         self
     }
 
+    /// Host-sketch-store capacity — resident per-geometry sketches of the host set
+    /// (default 8; `0` disables the store, the ablation shape: every session re-encodes
+    /// the host set). See [`SketchStore`].
+    pub fn sketch_store_capacity(mut self, capacity: usize) -> Self {
+        self.sketch_store_capacity = Some(capacity);
+        self
+    }
+
     /// OS-level read/write timeouts applied to every accepted connection (default 30 s
     /// each — sane for a service; `None` means block forever, which re-opens the
     /// wedged-worker failure mode and is only sensible for debugging).
@@ -114,6 +132,15 @@ impl ServerBuilder {
         self
     }
 
+    /// Sketch *encode* threads per session (default 1, for the same oversubscription
+    /// reason as [`ServerBuilder::build_threads`]; `0` = auto). The host-sketch store's
+    /// cold encodes run under the checking-out session's setting, so this governs them
+    /// too.
+    pub fn encode_threads(mut self, threads: usize) -> Self {
+        self.encode_threads = threads;
+        self
+    }
+
     /// The back-off hint carried in `Busy` rejections, milliseconds (default 50).
     pub fn busy_retry_hint_ms(mut self, ms: u32) -> Self {
         self.busy_retry_hint_ms = ms;
@@ -128,10 +155,19 @@ impl ServerBuilder {
         let pool_capacity = self.pool_capacity.unwrap_or(4 * self.workers);
         let pool =
             (pool_capacity > 0).then(|| Arc::new(DecoderPool::new(pool_capacity)));
+        let mut cfg = *self.endpoint.config();
+        // Per-session encodes follow the server's knob, not the endpoint builder's: the
+        // worker pool is the daemon's parallelism (a local setting — not fingerprinted).
+        cfg.encode_threads = self.encode_threads;
+        let set = Arc::new(self.endpoint.set().to_vec());
+        let store_capacity = self.sketch_store_capacity.unwrap_or(8);
+        let sketch_store = (store_capacity > 0)
+            .then(|| Arc::new(SketchStore::new(store_capacity, Arc::clone(&set))));
         let shared = Arc::new(Shared {
-            cfg: *self.endpoint.config(),
-            set: Mutex::new(Arc::new(self.endpoint.set().to_vec())),
+            cfg,
+            set: Mutex::new(set),
             pool,
+            sketch_store,
             stats: StatsInner::default(),
             shutdown: AtomicBool::new(false),
             last_failure: Mutex::new(None),
@@ -181,6 +217,8 @@ struct Shared {
     set: Mutex<Arc<Vec<u64>>>,
     /// `None` when pooling is disabled.
     pool: Option<Arc<DecoderPool>>,
+    /// Host-sketch store (encode-side reuse); `None` when disabled (the ablation).
+    sketch_store: Option<Arc<SketchStore>>,
     stats: StatsInner,
     shutdown: AtomicBool,
     /// Most recent failed session: `(session_id, error)` — the minimal breadcrumb an
@@ -214,9 +252,11 @@ impl SetxServer {
             workers: 4,
             max_inflight: 64,
             pool_capacity: None,
+            sketch_store_capacity: None,
             read_timeout: Some(Duration::from_secs(30)),
             write_timeout: Some(Duration::from_secs(30)),
             build_threads: 1,
+            encode_threads: 1,
             busy_retry_hint_ms: 50,
         }
     }
@@ -252,6 +292,12 @@ impl ServerHandle {
                 s.phase_bytes[3].load(Ordering::Relaxed),
             ],
             pool: self.shared.pool.as_ref().map(|p| p.stats()).unwrap_or_default(),
+            sketch_store: self
+                .shared
+                .sketch_store
+                .as_ref()
+                .map(|s| s.stats())
+                .unwrap_or_default(),
             inflight: s.inflight.load(Ordering::SeqCst),
             peak_inflight: s.peak_inflight.load(Ordering::Relaxed),
             peak_workers: s.peak_workers.load(Ordering::Relaxed),
@@ -268,9 +314,23 @@ impl ServerHandle {
     /// Replace the host set. In-flight sessions finish against the set they started
     /// with; new sessions reconcile against the replacement. Decoders parked in the
     /// pool for the old set become unreachable (their cache keys no longer validate)
-    /// and age out by LRU.
+    /// and age out by LRU; resident host sketches are *maintained* across the change —
+    /// the [`SketchStore`] applies §4 streaming ±1 updates over the set diff (or
+    /// re-encodes when the diff is larger than the set), so the encode-side cache stays
+    /// warm through churn. In-flight sessions holding the old snapshot are detected by
+    /// the store and served their own set's sketch, never the replacement's.
     pub fn replace_set(&self, set: Vec<u64>) {
-        *self.shared.set.lock().expect("host set lock poisoned") = Arc::new(set);
+        let set = Arc::new(set);
+        // One critical section for both views: concurrent `replace_set` calls must not
+        // interleave the store update and the set swap in opposite orders, or the store
+        // would validate sessions against a different snapshot than they hold and
+        // bypass (fresh-encode) every checkout until the next replacement. Lock order
+        // is always set-lock → store-lock (the store's other users never hold both).
+        let mut guard = self.shared.set.lock().expect("host set lock poisoned");
+        if let Some(store) = &self.shared.sketch_store {
+            store.replace_set(Arc::clone(&set));
+        }
+        *guard = set;
     }
 
     /// Graceful shutdown: stop accepting, serve every already-queued session to
@@ -409,6 +469,9 @@ fn serve_connection(shared: &Shared, stream: TcpStream) -> Result<SetxReport, Se
         cache = cache.with_shared_store(Arc::clone(pool) as Arc<dyn DecoderStore>);
     }
     endpoint.set_cache(cache);
+    if let Some(store) = &shared.sketch_store {
+        endpoint.set_sketch_source(Arc::clone(store) as Arc<dyn SketchSource>);
+    }
     Setx::pump(&mut endpoint, &mut transport)
 }
 

@@ -1,0 +1,445 @@
+//! The shared host-sketch store: the encode-side sibling of [`super::DecoderPool`].
+//!
+//! Every session a [`crate::server::SetxServer`] serves needs `M·1_host` — the sketch of
+//! the (unchanged) host set under the session's negotiated matrix — and before this store
+//! existed each session re-encoded it from scratch: O(m·n) per connection and per
+//! l-escalation rung, for a value that is a pure function of `(matrix, host set)`. The
+//! store memoizes it:
+//!
+//! * **Keyed by exact geometry** — entries file under [`GeometryKey`] (matrix structure
+//!   fingerprint + exact `(l, m)`), the same key discipline as the decoder pool. A fleet
+//!   negotiating one hot geometry pays the encode **once**; every later session checks
+//!   the sketch out in O(1) as a shared [`Arc<Sketch>`] clone.
+//! * **Single-flight, off-lock** — a missing entry's encode runs *outside* the store
+//!   lock under a per-geometry in-flight registry: a cold-start burst of same-geometry
+//!   sessions performs exactly one encode (the rest wait on a condvar, then hit), while
+//!   sessions negotiating *different* geometries encode concurrently instead of
+//!   convoying on the mutex. Encodes use the store's [`EncodeConfig`]. Sketches longer
+//!   than [`MAX_CACHED_L`] are served but never cached — a wire peer picks the attempt
+//!   geometry, and parking a handful of adversarially-huge count vectors must not pin
+//!   gigabytes after the connection dies.
+//! * **Set-validated** — the store knows which host set its entries describe (the same
+//!   `Arc<Vec<u64>>` snapshot the server hands each session). A session holding a
+//!   *different* snapshot (it raced a [`SketchStore::replace_set`]) is detected by slice
+//!   identity and answered with a fresh, uncached encode — never a stale sketch.
+//! * **Incrementally maintained** — [`SketchStore::replace_set`] applies §4 streaming
+//!   updates ([`Sketch::update`]) over the old/new per-id *multiplicity delta* to every
+//!   resident sketch (O(m·|delta|) each; exact even for multiset inputs). When the
+//!   delta outweighs the new set, entries are dropped and re-encoded on demand by the
+//!   next checkout instead — maintenance runs under the store lock, and eager O(m·n)
+//!   re-encodes there would stall every worker. Sharing is safe: updates go through
+//!   [`Arc::make_mut`], so sessions still holding the pre-churn sketch keep their
+//!   (correct, snapshot-consistent) copy untouched.
+//! * **LRU-bounded and counted** — `capacity` caps resident sketches (each is O(l)
+//!   i32s); hits/misses/encodes/incremental-update/rebuild counters surface in
+//!   [`crate::server::ServerStats`] and the `server_throughput` bench's store ablation.
+
+use crate::decoder::GeometryKey;
+use crate::matrix::CsMatrix;
+use crate::sketch::{EncodeConfig, Sketch, SketchSource};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Longest sketch (`l` coordinates) the store will keep resident. The attempt geometry
+/// comes off the wire, so without a cap a malicious initiator could park
+/// `capacity × 4·MAX_WIRE_L` bytes of counts that outlive its connections. Honest tuned
+/// geometries sit far below this (l ≈ d·m·log(n/d)/7); an over-cap sketch is still
+/// encoded and served — it just isn't cached.
+pub const MAX_CACHED_L: usize = 1 << 22;
+
+/// Counter snapshot of a [`SketchStore`] (see [`SketchStore::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SketchStoreStats {
+    /// Checkouts answered from a resident sketch (a whole host-set encode skipped).
+    pub hits: u64,
+    /// Checkouts that found no resident sketch for the geometry (encoded + cached).
+    pub misses: u64,
+    /// Checkouts by sessions holding a stale set snapshot (answered with a fresh,
+    /// uncached encode — counted separately so they cannot masquerade as misses of a
+    /// warmed store).
+    pub stale_bypasses: u64,
+    /// Full encodes performed (misses + bypasses + rebuilds; the cost the hits avoid).
+    pub encodes: u64,
+    /// Resident sketches maintained through a `replace_set` by streaming ±1 updates
+    /// over the set diff (§4) instead of a re-encode.
+    pub incremental_updates: u64,
+    /// Resident sketches invalidated by a `replace_set` whose diff exceeded the new set
+    /// size: dropped and re-encoded on demand by the next checkout (the off-lock miss
+    /// path), instead of eagerly — and worker-stallingly — under the store lock.
+    pub full_rebuilds: u64,
+    /// Sketches currently resident.
+    pub resident: usize,
+    /// The capacity bound (0 = store disabled).
+    pub capacity: usize,
+}
+
+impl SketchStoreStats {
+    /// `hits / (hits + misses + stale_bypasses)`; 0.0 for a store never consulted — so
+    /// the store-off ablation reads as 0, never as a perfect score.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses + self.stale_bypasses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Resident entries plus the host-set snapshot they are valid for. The lock covers
+/// lookup, the in-flight registry, and churn maintenance; the encodes themselves run
+/// off-lock (see [`SketchStore::host_sketch`]).
+struct StoreInner {
+    /// The host set every resident sketch encodes. Compared by slice identity with the
+    /// snapshot a session presents.
+    set: Arc<Vec<u64>>,
+    /// Resident sketches, least-recently-used first (evict index 0).
+    entries: Vec<(GeometryKey, Arc<Sketch>)>,
+    /// Geometries some session is currently encoding (the single-flight registry):
+    /// same-geometry callers wait on [`SketchStore::encoded`] instead of duplicating
+    /// the encode.
+    in_flight: HashSet<GeometryKey>,
+}
+
+/// The concurrency-safe host-sketch store (module docs). Share it as an
+/// `Arc<SketchStore>`: it implements [`SketchSource`], so attaching it to a session's
+/// endpoint makes every own-set sketch checkout store-backed — which is exactly what
+/// [`crate::server::SetxServer`] does for each worker connection.
+pub struct SketchStore {
+    inner: Mutex<StoreInner>,
+    /// Signalled whenever an in-flight encode finishes (successfully cached or not), so
+    /// same-geometry waiters re-check the entries.
+    encoded: Condvar,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stale_bypasses: AtomicU64,
+    encodes: AtomicU64,
+    incremental_updates: AtomicU64,
+    full_rebuilds: AtomicU64,
+}
+
+impl SketchStore {
+    /// An empty store over `set` holding at most `capacity` resident sketches (misses
+    /// encode with the [`EncodeConfig`] each checkout supplies). `capacity == 0` keeps
+    /// nothing resident — every checkout encodes fresh (the store-off ablation shape).
+    pub fn new(capacity: usize, set: Arc<Vec<u64>>) -> SketchStore {
+        SketchStore {
+            inner: Mutex::new(StoreInner {
+                set,
+                entries: Vec::new(),
+                in_flight: HashSet::new(),
+            }),
+            encoded: Condvar::new(),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stale_bypasses: AtomicU64::new(0),
+            encodes: AtomicU64::new(0),
+            incremental_updates: AtomicU64::new(0),
+            full_rebuilds: AtomicU64::new(0),
+        }
+    }
+
+    /// Counter + occupancy snapshot.
+    pub fn stats(&self) -> SketchStoreStats {
+        SketchStoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stale_bypasses: self.stale_bypasses.load(Ordering::Relaxed),
+            encodes: self.encodes.load(Ordering::Relaxed),
+            incremental_updates: self.incremental_updates.load(Ordering::Relaxed),
+            full_rebuilds: self.full_rebuilds.load(Ordering::Relaxed),
+            resident: self.inner.lock().map(|i| i.entries.len()).unwrap_or(0),
+            capacity: self.capacity,
+        }
+    }
+
+    /// The host-set snapshot resident sketches currently describe.
+    pub fn current_set(&self) -> Arc<Vec<u64>> {
+        Arc::clone(&self.inner.lock().expect("sketch store poisoned").set)
+    }
+
+    /// Swap the host set, maintaining every resident sketch across the change: apply §4
+    /// streaming updates over the old/new multiplicity delta when it is smaller than
+    /// the new set, else drop the entries for on-demand re-encode (see the module
+    /// docs). Sessions still holding the old snapshot keep their pre-churn sketches
+    /// ([`Arc::make_mut`] clones under sharing) and are bypassed on later checkouts.
+    pub fn replace_set(&self, new: Arc<Vec<u64>>) {
+        let mut inner = self.inner.lock().expect("sketch store poisoned");
+        let old = std::mem::replace(&mut inner.set, Arc::clone(&new));
+        if inner.entries.is_empty() || Arc::ptr_eq(&old, &new) {
+            return;
+        }
+        // Per-id multiplicity delta, not a set diff: `Sketch::encode` is multiset-linear
+        // (a duplicated id contributes its column twice), so maintenance must mirror
+        // exact multiplicities or the maintained sketch silently drifts from
+        // `encode(new)` on host sets carrying duplicates.
+        let mut delta: HashMap<u64, i32> = HashMap::new();
+        for &id in new.iter() {
+            *delta.entry(id).or_insert(0) += 1;
+        }
+        for &id in old.iter() {
+            *delta.entry(id).or_insert(0) -= 1;
+        }
+        delta.retain(|_, d| *d != 0);
+        let diff_size: usize = delta.values().map(|d| d.unsigned_abs() as usize).sum();
+        if diff_size > new.len() {
+            // The diff outweighs the set, so maintenance costs more than re-encoding —
+            // but re-encoding *here* would run up to `capacity` O(m·n) encodes under
+            // the store lock (and, on the server path, under the host-set lock),
+            // freezing every worker. Drop the entries instead: the off-lock
+            // single-flight miss path re-encodes each geometry on demand.
+            let dropped = inner.entries.len() as u64;
+            inner.entries.clear();
+            self.full_rebuilds.fetch_add(dropped, Ordering::Relaxed);
+        } else {
+            for (_, sk) in &mut inner.entries {
+                let sketch = Arc::make_mut(sk);
+                for (&id, &d) in &delta {
+                    sketch.update(id, d);
+                }
+                self.incremental_updates.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl SketchSource for SketchStore {
+    fn host_sketch(&self, matrix: &CsMatrix, set: &[u64], enc: EncodeConfig) -> Arc<Sketch> {
+        let key = GeometryKey::of_oracle(matrix);
+        let mut inner = self.inner.lock().expect("sketch store poisoned");
+        loop {
+            let same_snapshot =
+                inner.set.len() == set.len() && std::ptr::eq(inner.set.as_ptr(), set.as_ptr());
+            if !same_snapshot {
+                // The caller's set snapshot predates (or otherwise isn't) ours: serve a
+                // correct fresh encode for *its* set and cache nothing — off-lock, a
+                // stale straggler must not stall the hot path.
+                drop(inner);
+                self.stale_bypasses.fetch_add(1, Ordering::Relaxed);
+                self.encodes.fetch_add(1, Ordering::Relaxed);
+                return Arc::new(Sketch::encode_par(*matrix, set, enc));
+            }
+            if let Some(pos) = inner.entries.iter().position(|(k, _)| *k == key) {
+                // Refresh LRU position, hand out a shared clone.
+                let entry = inner.entries.remove(pos);
+                let sketch = Arc::clone(&entry.1);
+                inner.entries.push(entry);
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return sketch;
+            }
+            if !inner.in_flight.contains(&key) {
+                break;
+            }
+            // Another session is already encoding this geometry: wait for it rather
+            // than duplicating the work, then re-check everything (the host set may
+            // have been replaced, or the encoder may have discarded its result).
+            inner = self.encoded.wait(inner).expect("sketch store poisoned");
+        }
+        // Single-flight miss: claim the geometry and encode *outside* the lock, so a
+        // same-geometry cold burst performs exactly one encode while sessions on other
+        // geometries keep encoding concurrently instead of convoying on the mutex.
+        inner.in_flight.insert(key);
+        let snapshot = Arc::clone(&inner.set);
+        drop(inner);
+        let sketch = Arc::new(Sketch::encode_par(*matrix, set, enc));
+        let mut inner = self.inner.lock().expect("sketch store poisoned");
+        inner.in_flight.remove(&key);
+        // Cache only when the host set is still the snapshot we encoded (a concurrent
+        // `replace_set` invalidates the result for future sessions — the caller still
+        // gets it, correct for *its* snapshot) and the sketch is small enough to park.
+        if self.capacity > 0
+            && sketch.counts.len() <= MAX_CACHED_L
+            && Arc::ptr_eq(&inner.set, &snapshot)
+        {
+            inner.entries.push((key, Arc::clone(&sketch)));
+            while inner.entries.len() > self.capacity {
+                inner.entries.remove(0);
+            }
+        }
+        drop(inner);
+        self.encoded.notify_all();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.encodes.fetch_add(1, Ordering::Relaxed);
+        sketch
+    }
+}
+
+impl std::fmt::Debug for SketchStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("SketchStore")
+            .field("resident", &s.resident)
+            .field("capacity", &s.capacity)
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .field("incremental_updates", &s.incremental_updates)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Xoshiro256;
+
+    fn mk_store(set: Vec<u64>, capacity: usize) -> (Arc<SketchStore>, Arc<Vec<u64>>) {
+        let set = Arc::new(set);
+        (Arc::new(SketchStore::new(capacity, Arc::clone(&set))), set)
+    }
+
+    #[test]
+    fn checkout_equals_fresh_encode_and_hits_after_warmup() {
+        let (store, set) = mk_store((0..5_000u64).collect(), 4);
+        let matrix = CsMatrix::new(1024, 5, 7);
+        let first = store.host_sketch(&matrix, &set, EncodeConfig::serial());
+        assert_eq!(*first, Sketch::encode(matrix, &set));
+        let second = store.host_sketch(&matrix, &set, EncodeConfig::serial());
+        assert!(Arc::ptr_eq(&first, &second), "warm checkout must be the shared Arc");
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.encodes), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_geometries_cache_independently_with_lru_eviction() {
+        let (store, set) = mk_store((0..1_000u64).collect(), 2);
+        let m1 = CsMatrix::new(256, 5, 1);
+        let m2 = CsMatrix::new(512, 5, 1);
+        let m3 = CsMatrix::new(256, 7, 1);
+        for m in [m1, m2, m3] {
+            store.host_sketch(&m, &set, EncodeConfig::serial());
+        }
+        assert_eq!(store.stats().resident, 2);
+        // m1 (least recently used) was evicted: touching it again is a miss …
+        store.host_sketch(&m1, &set, EncodeConfig::serial());
+        // … while m3 stayed resident.
+        store.host_sketch(&m3, &set, EncodeConfig::serial());
+        let s = store.stats();
+        assert_eq!(s.misses, 4);
+        assert_eq!(s.hits, 1);
+    }
+
+    #[test]
+    fn concurrent_same_geometry_checkout_performs_exactly_one_encode() {
+        // The acceptance shape: 4 threads race on one cold geometry; single-flight must
+        // collapse them to one encode, and the counters must account for every checkout.
+        let (store, set) = mk_store((0..20_000u64).collect(), 4);
+        let matrix = CsMatrix::new(2048, 5, 11);
+        let threads = 4;
+        let iters = 8;
+        let reference = Sketch::encode(matrix, &set);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let store = Arc::clone(&store);
+                let set = Arc::clone(&set);
+                let reference = &reference;
+                scope.spawn(move || {
+                    for _ in 0..iters {
+                        let sk = store.host_sketch(&matrix, &set, EncodeConfig::serial());
+                        assert_eq!(*sk, *reference, "store returned a wrong sketch");
+                    }
+                });
+            }
+        });
+        let s = store.stats();
+        assert_eq!(s.encodes, 1, "single-flight must collapse the cold burst: {s:?}");
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, (threads * iters - 1) as u64, "every checkout counted: {s:?}");
+        assert_eq!(s.stale_bypasses, 0);
+    }
+
+    #[test]
+    fn stale_snapshot_is_bypassed_not_served_stale() {
+        let (store, old_set) = mk_store((0..2_000u64).collect(), 4);
+        let matrix = CsMatrix::new(512, 5, 3);
+        store.host_sketch(&matrix, &old_set, EncodeConfig::serial());
+        let new_set: Arc<Vec<u64>> = Arc::new((0..2_100u64).collect());
+        store.replace_set(Arc::clone(&new_set));
+        // A session still holding the old snapshot gets the *old* set's sketch (fresh
+        // encode), not the resident sketch of the new set.
+        let sk = store.host_sketch(&matrix, &old_set, EncodeConfig::serial());
+        assert_eq!(*sk, Sketch::encode(matrix, &old_set));
+        assert_eq!(store.stats().stale_bypasses, 1);
+        // And a new-snapshot session gets the maintained resident sketch.
+        let sk = store.host_sketch(&matrix, &new_set, EncodeConfig::serial());
+        assert_eq!(*sk, Sketch::encode(matrix, &new_set));
+    }
+
+    #[test]
+    fn incremental_replace_set_equals_fresh_encode_under_churn() {
+        // The §4 property: across randomized add/remove churn, a resident sketch
+        // maintained by streaming ±1 diff updates stays coordinate-identical to a fresh
+        // encode of the current set — for every resident geometry.
+        let mut rng = Xoshiro256::seed_from_u64(0xc0de);
+        let (store, mut current) = mk_store((0..3_000u64).collect(), 4);
+        let geometries = [CsMatrix::new(700, 5, 1), CsMatrix::new(1024, 7, 2)];
+        for m in &geometries {
+            store.host_sketch(m, &current, EncodeConfig::serial());
+        }
+        for round in 0..12 {
+            // Random churn: drop ~1/8 of the set, add a fresh disjoint band.
+            let mut next: Vec<u64> =
+                current.iter().copied().filter(|_| rng.gen_range(8) != 0).collect();
+            let base = 1_000_000 * (round as u64 + 1);
+            next.extend(base..base + rng.gen_range(200) + 1);
+            let next = Arc::new(next);
+            store.replace_set(Arc::clone(&next));
+            for m in &geometries {
+                let maintained = store.host_sketch(m, &next, EncodeConfig::serial());
+                assert_eq!(
+                    *maintained,
+                    Sketch::encode(*m, &next),
+                    "round {round}: incrementally-maintained sketch diverged"
+                );
+            }
+            current = next;
+        }
+        let s = store.stats();
+        assert_eq!(s.incremental_updates, 24, "2 geometries × 12 rounds: {s:?}");
+        assert_eq!(s.full_rebuilds, 0, "small diffs must stay incremental: {s:?}");
+        // Post-churn checkouts all hit — maintenance never invalidated the entries.
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 24);
+    }
+
+    #[test]
+    fn oversized_diff_invalidates_for_on_demand_reencode() {
+        let (store, set) = mk_store((0..1_000u64).collect(), 4);
+        let matrix = CsMatrix::new(512, 5, 9);
+        store.host_sketch(&matrix, &set, EncodeConfig::serial());
+        // Replace with a completely disjoint set: diff (2·1000) > new set (1000), so
+        // maintenance must drop the entry (never serve it) rather than patch or eagerly
+        // re-encode it under the lock.
+        let next: Arc<Vec<u64>> = Arc::new((10_000..11_000u64).collect());
+        store.replace_set(Arc::clone(&next));
+        let s = store.stats();
+        assert_eq!(s.full_rebuilds, 1, "disjoint swap must invalidate: {s:?}");
+        assert_eq!(s.incremental_updates, 0);
+        assert_eq!(s.resident, 0, "invalidated entries must leave the store");
+        // The next checkout re-encodes on demand (a miss) and is hot afterwards.
+        let sk = store.host_sketch(&matrix, &next, EncodeConfig::serial());
+        assert_eq!(*sk, Sketch::encode(matrix, &next));
+        assert_eq!(store.stats().misses, 2);
+        store.host_sketch(&matrix, &next, EncodeConfig::serial());
+        assert_eq!(store.stats().hits, 1, "re-encoded entry is resident and hot");
+    }
+
+    #[test]
+    fn zero_capacity_store_encodes_fresh_every_time() {
+        let (store, set) = mk_store((0..500u64).collect(), 0);
+        let matrix = CsMatrix::new(256, 5, 5);
+        for _ in 0..3 {
+            let sk = store.host_sketch(&matrix, &set, EncodeConfig::serial());
+            assert_eq!(*sk, Sketch::encode(matrix, &set));
+        }
+        let s = store.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.encodes, 3);
+        assert_eq!(s.resident, 0);
+        assert_eq!(s.hit_rate(), 0.0);
+    }
+}

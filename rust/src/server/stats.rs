@@ -5,6 +5,7 @@
 //! machine-readable operating points without a serde dependency.
 
 use super::pool::PoolStats;
+use super::sketch_store::SketchStoreStats;
 use crate::metrics::{CommLog, Phase};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
@@ -57,6 +58,10 @@ pub struct ServerStats {
     pub phase_bytes: [u64; 4],
     /// Decoder-pool counters (all zeros when the pool is disabled).
     pub pool: PoolStats,
+    /// Host-sketch-store counters (all zeros when the store is disabled): hits are
+    /// whole host-set encodes skipped, incremental updates are resident sketches
+    /// maintained through `replace_set` churn by §4 streaming diffs.
+    pub sketch_store: SketchStoreStats,
     /// Currently admitted, unfinished sessions (the live admission gauge).
     pub inflight: usize,
     /// High-water mark of concurrently admitted sessions.
@@ -80,6 +85,11 @@ impl ServerStats {
         self.pool.hit_rate()
     }
 
+    /// Host-sketch-store hit rate (0.0 when the store was never consulted or disabled).
+    pub fn sketch_store_hit_rate(&self) -> f64 {
+        self.sketch_store.hit_rate()
+    }
+
     /// One flat JSON record (the schema style of the `BENCH_*.json` trajectory): every
     /// field numeric, keys stable, no nesting — ready to append to a log or paste into
     /// the bench tooling.
@@ -89,7 +99,11 @@ impl ServerStats {
              \"sessions_rejected\":{},\"bytes_handshake\":{},\"bytes_sketch\":{},\
              \"bytes_residue\":{},\"bytes_confirm\":{},\"pool_hits\":{},\"pool_misses\":{},\
              \"pool_evictions\":{},\"pool_parked\":{},\"pool_capacity\":{},\
-             \"pool_hit_rate\":{:.4},\"inflight\":{},\"peak_inflight\":{},\
+             \"pool_hit_rate\":{:.4},\"store_hits\":{},\"store_misses\":{},\
+             \"store_stale_bypasses\":{},\"store_encodes\":{},\
+             \"store_incremental_updates\":{},\"store_full_rebuilds\":{},\
+             \"store_resident\":{},\"store_capacity\":{},\"store_hit_rate\":{:.4},\
+             \"inflight\":{},\"peak_inflight\":{},\
              \"peak_workers\":{},\"workers\":{},\"max_inflight_sessions\":{}}}",
             self.sessions_accepted,
             self.sessions_served,
@@ -105,6 +119,15 @@ impl ServerStats {
             self.pool.parked,
             self.pool.capacity,
             self.pool_hit_rate(),
+            self.sketch_store.hits,
+            self.sketch_store.misses,
+            self.sketch_store.stale_bypasses,
+            self.sketch_store.encodes,
+            self.sketch_store.incremental_updates,
+            self.sketch_store.full_rebuilds,
+            self.sketch_store.resident,
+            self.sketch_store.capacity,
+            self.sketch_store_hit_rate(),
             self.inflight,
             self.peak_inflight,
             self.peak_workers,
@@ -142,6 +165,16 @@ mod tests {
             sessions_rejected: 1,
             phase_bytes: [1, 2, 3, 4],
             pool: PoolStats { hits: 30, misses: 2, evictions: 0, parked: 2, capacity: 8 },
+            sketch_store: SketchStoreStats {
+                hits: 28,
+                misses: 2,
+                stale_bypasses: 2,
+                encodes: 4,
+                incremental_updates: 3,
+                full_rebuilds: 1,
+                resident: 2,
+                capacity: 8,
+            },
             inflight: 1,
             peak_inflight: 5,
             peak_workers: 4,
@@ -162,6 +195,11 @@ mod tests {
             "pool_hits",
             "pool_misses",
             "pool_hit_rate",
+            "store_hits",
+            "store_misses",
+            "store_incremental_updates",
+            "store_full_rebuilds",
+            "store_hit_rate",
             "inflight",
             "peak_inflight",
             "peak_workers",
@@ -171,5 +209,6 @@ mod tests {
         }
         assert_eq!(stats.total_bytes(), 10);
         assert!((stats.pool_hit_rate() - 30.0 / 32.0).abs() < 1e-12);
+        assert!((stats.sketch_store_hit_rate() - 28.0 / 32.0).abs() < 1e-12);
     }
 }

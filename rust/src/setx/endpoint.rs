@@ -25,6 +25,7 @@
 //! of the partitioned-parallel driver.
 
 use std::collections::{HashSet, VecDeque};
+use std::sync::Arc;
 
 use super::{DecodeFailure, DiffSize, Mode, ProtocolKind, SetxConfig, SetxError, SetxReport};
 use crate::decoder::DecoderCache;
@@ -36,6 +37,7 @@ use crate::protocol::wire::{
     Msg, REASON_NOT_CONVERGED, REASON_OK, REASON_RESIDUE_DECODE, REASON_SKETCH_RECOVERY,
 };
 use crate::protocol::CsParams;
+use crate::sketch::{EncodeConfig, Sketch, SketchSource};
 
 /// Handshake estimator shape: 24 strata × 32 cells ≈ 10 KB plus a 256-hash MinHash
 /// signature (~2 KB) per direction. Charged to the `Handshake` phase of the report.
@@ -299,6 +301,19 @@ pub(crate) struct Endpoint<'a> {
     /// [`Endpoint::take_cache`] — repeat conversations that keep the same matrix skip the
     /// dominant CSR rebuild.
     cache: DecoderCache,
+    /// Encode-side parallelism for this endpoint's own-set sketch encodes (from
+    /// [`SetxConfig::encode_threads`]; overridable via [`Endpoint::set_encode`]).
+    enc: EncodeConfig,
+    /// Optional shared host-sketch store (the encode-side sibling of the decoder pool):
+    /// consulted per attempt for this endpoint's own-set sketch, so repeat sessions on a
+    /// warmed geometry skip the O(m·n) self-encode entirely.
+    sketch_source: Option<Arc<dyn SketchSource>>,
+    /// Responder-side deferral: the attempt geometry noted at `Hello`, consumed when the
+    /// initiator's `Sketch` frame actually arrives. The store checkout (and any encode
+    /// it implies) must not happen on a bare `Hello` — a peer could otherwise trigger
+    /// O(m·n) encodes and store insertions for attempt geometries it never follows
+    /// through on.
+    pending_host_matrix: Option<crate::matrix::CsMatrix>,
 }
 
 impl<'a> Endpoint<'a> {
@@ -316,7 +331,32 @@ impl<'a> Endpoint<'a> {
             settled: false,
             kind: ProtocolKind::Bidi,
             cache: DecoderCache::new(),
+            enc: EncodeConfig { threads: cfg.encode_threads },
+            sketch_source: None,
+            pending_host_matrix: None,
         }
+    }
+
+    /// Override the encode-side parallelism (drivers already running many endpoints in
+    /// parallel pin [`EncodeConfig::serial`], as they do for decoder construction).
+    pub(crate) fn set_encode(&mut self, enc: EncodeConfig) {
+        self.enc = enc;
+    }
+
+    /// Attach a shared host-sketch store: every attempt's own-set sketch is checked out
+    /// of (or encoded into) it instead of re-encoded per session — the
+    /// [`crate::server`] reuse path.
+    pub(crate) fn set_sketch_source(&mut self, source: Arc<dyn SketchSource>) {
+        self.sketch_source = Some(source);
+    }
+
+    /// This endpoint's own-set sketch for the attempt matrix of `params` — from the
+    /// shared store when one is attached (O(1) once warmed), else `None` (the caller
+    /// encodes inline).
+    fn own_sketch(&self, params: &CsParams) -> Option<Arc<Sketch>> {
+        self.sketch_source
+            .as_ref()
+            .map(|src| src.host_sketch(&params.matrix(), self.set, self.enc))
     }
 
     /// Seed the decoder-reuse cache (typically with the slot a previous conversation of
@@ -442,34 +482,49 @@ impl<'a> Endpoint<'a> {
             (
                 EpPhase::Bidi(mut session),
                 m @ (Msg::Hello { .. } | Msg::Sketch(_) | Msg::Round { .. }),
-            ) => match session.on_msg(m) {
-                Ok(SessionEvent::Reply(reply)) => {
-                    self.phase = EpPhase::Bidi(session);
-                    Step::Send(vec![reply])
+            ) => {
+                if matches!(m, Msg::Sketch(_)) {
+                    // The initiator followed through with its sketch: now (and only
+                    // now) check our own-set sketch out of the shared store for the
+                    // geometry its Hello announced, so the session skips the O(m·n)
+                    // self-encode.
+                    if let (Some(src), Some(matrix)) =
+                        (&self.sketch_source, self.pending_host_matrix.take())
+                    {
+                        session.set_host_sketch(src.host_sketch(&matrix, self.set, self.enc));
+                    }
                 }
-                Ok(SessionEvent::Continue) => {
-                    self.phase = EpPhase::Bidi(session);
-                    Step::Continue
+                match session.on_msg(m) {
+                    Ok(SessionEvent::Reply(reply)) => {
+                        self.phase = EpPhase::Bidi(session);
+                        Step::Send(vec![reply])
+                    }
+                    Ok(SessionEvent::Continue) => {
+                        self.phase = EpPhase::Bidi(session);
+                        Step::Continue
+                    }
+                    Ok(SessionEvent::Done(_)) => {
+                        // Session over (settled, or round budget exhausted): issue our
+                        // verdict.
+                        self.absorb_session(session);
+                        let ok = self.settled;
+                        let reason = if ok { REASON_OK } else { REASON_NOT_CONVERGED };
+                        self.send_confirm_and_wait(ok, reason)
+                    }
+                    Err(SessionError::SketchRecovery) => {
+                        // Recoverable attempt failure (undersized/corrupt sketch):
+                        // report it and let the ladder escalate instead of tearing the
+                        // connection down.
+                        self.absorb_session(session);
+                        self.settled = false;
+                        self.send_confirm_and_wait(false, REASON_SKETCH_RECOVERY)
+                    }
+                    Err(e) => {
+                        self.absorb_session(session);
+                        Step::Fatal(Vec::new(), SetxError::Protocol(e))
+                    }
                 }
-                Ok(SessionEvent::Done(_)) => {
-                    // Session over (settled, or round budget exhausted): issue our verdict.
-                    self.absorb_session(session);
-                    let ok = self.settled;
-                    let reason = if ok { REASON_OK } else { REASON_NOT_CONVERGED };
-                    self.send_confirm_and_wait(ok, reason)
-                }
-                Err(SessionError::SketchRecovery) => {
-                    // Recoverable attempt failure (undersized/corrupt sketch): report it
-                    // and let the ladder escalate instead of tearing the connection down.
-                    self.absorb_session(session);
-                    self.settled = false;
-                    self.send_confirm_and_wait(false, REASON_SKETCH_RECOVERY)
-                }
-                Err(e) => {
-                    self.absorb_session(session);
-                    Step::Fatal(Vec::new(), SetxError::Protocol(e))
-                }
-            },
+            }
             (EpPhase::Bidi(session), Msg::Confirm { ok, reason, attempt }) => {
                 // The peer's side of the attempt ended first (it settled on our `done`
                 // flag, or it failed); settle ours from the current session state.
@@ -527,6 +582,20 @@ impl<'a> Endpoint<'a> {
                 let cache = self.take_cache();
                 let mut session =
                     Session::responder_cached(self.set, self.cfg.engine, self.client, cache);
+                session.set_encode_config(self.enc);
+                // Note the attempt geometry (the `Hello` carries it) but *defer* the
+                // store checkout to the initiator's `Sketch` frame — the self-encode is
+                // only needed then, and resolving on a bare `Hello` would hand a peer
+                // free O(m·n) encodes. Only geometry a ColumnSampler would accept is
+                // noted; invalid frames take the session's own typed-error path.
+                if let Msg::Hello { l, m, seed, .. } = msg {
+                    if self.sketch_source.is_some()
+                        && crate::protocol::wire_geometry_ok(*l, *m, *seed)
+                    {
+                        self.pending_host_matrix =
+                            Some(crate::matrix::CsMatrix::new(*l, *m, *seed));
+                    }
+                }
                 match session.on_msg(msg) {
                     Ok(SessionEvent::Continue) => {
                         self.phase = EpPhase::Bidi(session);
@@ -582,7 +651,9 @@ impl<'a> Endpoint<'a> {
     /// The unidirectional decoder's half of an attempt.
     fn uni_decode(&mut self, params: &CsParams, msg: &Msg) -> Step {
         self.record_recv(msg);
-        match uni::bob_decode_cached(msg, self.set, params, &mut self.cache) {
+        let host = self.own_sketch(params);
+        let enc = self.enc;
+        match uni::bob_decode_with(msg, self.set, params, &mut self.cache, host.as_deref(), enc) {
             Ok((unique, _used_fallback)) => {
                 self.unique = unique;
                 self.settled = true;
@@ -621,7 +692,9 @@ impl<'a> Endpoint<'a> {
                     est_responder_unique: params.est_b_unique as u64,
                     set_len: self.set.len() as u64,
                 };
-                let (sketch, _) = uni::alice_encode(self.set, &params);
+                let host = self.own_sketch(&params);
+                let (sketch, _) =
+                    uni::alice_encode_with(self.set, &params, self.enc, host.as_deref());
                 self.record_sent(&hello);
                 self.record_sent(&sketch);
                 self.phase = EpPhase::UniWaitConfirm;
@@ -632,8 +705,16 @@ impl<'a> Endpoint<'a> {
                 // of the attempt (absorb_session) — together with the decoder cache it
                 // checks out here and refills there.
                 let cache = self.take_cache();
-                let (session, opening) =
-                    Session::initiator_cached(&params, self.set, self.cfg.engine, self.client, cache);
+                let host = self.own_sketch(&params);
+                let (session, opening) = Session::initiator_with(
+                    &params,
+                    self.set,
+                    self.cfg.engine,
+                    self.client,
+                    cache,
+                    self.enc,
+                    host.as_deref(),
+                );
                 self.phase = EpPhase::Bidi(session);
                 opening
             }

@@ -177,6 +177,12 @@ pub struct SetxConfig {
     pub universe_bits: u32,
     /// Ladder depth: how many decode attempts (with escalating `l`) before giving up.
     pub max_attempts: u32,
+    /// Encode-side worker threads for this endpoint's own-set sketch encodes (`0` = auto,
+    /// mirroring [`crate::decoder::DecoderConfig::build_threads`]; clamped to 64; small
+    /// sets always encode serially). **Deliberately not fingerprinted**: the parallel
+    /// encode is bit-identical to the serial one, so peers with different thread counts
+    /// interoperate — this is a local performance knob, not protocol state.
+    pub encode_threads: usize,
     /// Engine tunables (round budget, SMF fpr, …) — advanced; defaults match the paper.
     pub engine: BidiOptions,
 }
@@ -266,6 +272,14 @@ impl SetxBuilder {
     /// Ladder depth: decode attempts before giving up (default 3).
     pub fn max_attempts(mut self, attempts: u32) -> Self {
         self.cfg.max_attempts = attempts;
+        self
+    }
+
+    /// Encode-side worker threads for this endpoint's sketch encodes (default `0` =
+    /// auto; `1` = serial). Local performance knob — not part of the config fingerprint,
+    /// so the peer need not match it.
+    pub fn encode_threads(mut self, threads: usize) -> Self {
+        self.cfg.encode_threads = threads;
         self
     }
 
@@ -362,6 +376,7 @@ impl Setx {
                 seed: 0xC0FFEE,
                 universe_bits: 64,
                 max_attempts: 3,
+                encode_threads: 0,
                 engine: BidiOptions::default(),
             },
         }
@@ -576,6 +591,12 @@ mod tests {
         assert_ne!(base, mode);
         // And equality for equal configs (the property the handshake relies on).
         assert_eq!(base, Setx::builder(&set).build().unwrap().cfg.fingerprint());
+        // encode_threads is a *local* perf knob: peers with different settings must
+        // still fingerprint-match (the parallel encode is bit-identical to serial).
+        assert_eq!(
+            base,
+            Setx::builder(&set).encode_threads(4).build().unwrap().cfg.fingerprint()
+        );
     }
 
     #[test]

@@ -19,6 +19,7 @@ use super::endpoint::{
     build_est_hello, drive_endpoints, negotiate, union_estimate, Endpoint, Negotiated,
 };
 use crate::decoder::DecoderCache;
+use crate::sketch::EncodeConfig;
 use super::{ProtocolKind, Setx, SetxError, SetxReport};
 use crate::hash::hash_u64;
 use crate::metrics::{CommLog, Stats};
@@ -141,10 +142,12 @@ pub fn run_partitioned(
                     let mut ec = Endpoint::with_negotiated(&cfgs[p], cp, true, nego_cp);
                     let mut es = Endpoint::with_negotiated(&cfgs[p], sp, false, nego_sp);
                     // This pool already saturates the machine with partition workers;
-                    // serial decoder builds inside each partition avoid an extra
-                    // parts × cores fan-out of construction threads.
+                    // serial decoder builds *and* serial sketch encodes inside each
+                    // partition avoid an extra parts × cores fan-out of nested threads.
                     ec.set_cache(DecoderCache::with_build_threads(1));
                     es.set_cache(DecoderCache::with_build_threads(1));
+                    ec.set_encode(EncodeConfig::serial());
+                    es.set_encode(EncodeConfig::serial());
                     local.push(drive_endpoints(&mut ec, &mut es));
                     active.fetch_sub(1, Ordering::SeqCst);
                     p = next.fetch_add(1, Ordering::Relaxed);

@@ -2,8 +2,26 @@
 //!
 //! Because `M` is binary and sparse, the sketch of a set is exactly a counting-Bloom-filter-
 //! shaped vector (a coincidence the paper notes in §3.3), every coordinate is a small
-//! non-negative integer, and both one-shot encoding (O(m) per element) and streaming ±1-sparse
-//! updates (§4) are cheap.
+//! non-negative integer, and encoding is cheap three ways, engaged in this order:
+//!
+//! * **Batched one-shot encode** — [`Sketch::encode`] walks the id slice in blocks
+//!   through [`crate::hash::ColumnSampler::rows_batch`], which hoists the PRNG seed
+//!   pre-mix and the bounds checks out of the per-element loop. Still O(m·|S|)
+//!   (Theorem 2's encoding complexity), just with a smaller constant than the old
+//!   one-column-at-a-time loop.
+//! * **Parallel encode** — [`Sketch::encode_par`] shards the id slice across a bounded
+//!   worker pool ([`EncodeConfig::threads`]; `0` = auto, mirroring
+//!   [`crate::decoder::DecoderConfig::build_threads`]) into thread-local count vectors
+//!   merged by addition — bit-identical to the serial encode (integer adds commute;
+//!   property-tested across geometries including the `m = 64` boundary). Sets smaller
+//!   than [`PAR_ENCODE_MIN_IDS`] always encode serially: the work cannot amortize the
+//!   thread spawn + merge. Drivers that already saturate the machine (the partitioned
+//!   pool, the server worker pool) pin `threads = 1`, exactly as they do for decoder
+//!   construction.
+//! * **Streaming ±1 updates** — [`Sketch::update`] is the §4 data-streaming operation,
+//!   O(m) per call; it is also what lets a *cached* sketch be maintained incrementally
+//!   under set churn instead of re-encoded (the [`SketchSource`] consumers, e.g. the
+//!   server's host-sketch store, apply it over a set diff on `replace_set`).
 //!
 //! The streaming operations (`Sketch::update`, `Residue::add_column`,
 //! `Residue::dot_column`) are O(m) per call **because** they sample the column into a
@@ -19,6 +37,70 @@
 
 use crate::hash::MAX_M;
 use crate::matrix::CsMatrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Below this id count, [`Sketch::encode_par`] always encodes serially — sampling a few
+/// thousand columns is microseconds of work and cannot amortize thread spawn + merge.
+pub const PAR_ENCODE_MIN_IDS: usize = 4096;
+
+/// Ids per [`crate::hash::ColumnSampler::rows_batch`] block in the encode loops: large
+/// enough to amortize the per-call overhead, small enough that the row buffer
+/// (`BLOCK × m` u32s ≤ 128 KiB at `m = MAX_M`) stays cache-resident.
+const ENCODE_BLOCK_IDS: usize = 512;
+
+/// Encode-side parallelism knob, mirroring [`crate::decoder::DecoderConfig::build_threads`]:
+/// `0` = auto (available parallelism), `1` = serial, clamped to 64. This is a **local**
+/// performance setting with no wire or result impact — `encode_par` is bit-identical to
+/// the serial encode at every thread count, so the two endpoints of a conversation may
+/// configure it differently.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EncodeConfig {
+    /// Worker threads for one-shot encodes (`0` = auto, the `Default`; small inputs
+    /// stay serial regardless — see [`PAR_ENCODE_MIN_IDS`]).
+    pub threads: usize,
+}
+
+impl EncodeConfig {
+    /// Auto parallelism (`threads = 0`) — the default.
+    pub fn auto() -> Self {
+        EncodeConfig { threads: 0 }
+    }
+
+    /// Always-serial encoding — what nested drivers (partitioned workers, server worker
+    /// pools) pin so encode threads don't multiply with their own pool.
+    pub fn serial() -> Self {
+        EncodeConfig { threads: 1 }
+    }
+
+    /// Resolve the knob into a worker count for `n` ids (1 ⇒ take the serial path).
+    fn resolve(self, n: usize) -> usize {
+        if n < PAR_ENCODE_MIN_IDS {
+            return 1;
+        }
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        t.clamp(1, 64).min(n.div_ceil(ENCODE_BLOCK_IDS))
+    }
+}
+
+/// A provider of host-set sketches that may cache across sessions.
+///
+/// The encode-side sibling of [`crate::decoder::DecoderStore`]: a server answering many
+/// clients against one hot set re-derives `M·1_host` for every session that negotiates a
+/// geometry it has already seen — pure waste, since the sketch is a function of
+/// `(matrix, set)` alone. Implementations (e.g. `server::SketchStore`) hand back a shared
+/// [`Arc<Sketch>`] in O(1) on a cache hit. The contract is strict: the returned sketch
+/// **must** equal `Sketch::encode(*matrix, set)` exactly — consumers feed it straight
+/// into residue arithmetic and sketch recovery, where a stale coordinate corrupts the
+/// decode silently.
+pub trait SketchSource: Send + Sync {
+    /// The sketch of `set` under `matrix` (encoding with `enc` on a miss).
+    fn host_sketch(&self, matrix: &CsMatrix, set: &[u64], enc: EncodeConfig) -> Arc<Sketch>;
+}
 
 /// An integer CS sketch `M·x` for an integer-valued signal `x` (usually 0/1).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -33,13 +115,55 @@ impl Sketch {
         Sketch { matrix, counts: vec![0; matrix.l() as usize] }
     }
 
-    /// One-shot encode of a set: `M·1_S`. O(m·|S|).
+    /// One-shot encode of a set: `M·1_S`. O(m·|S|), serial; columns are sampled in
+    /// 512-id batches ([`crate::hash::ColumnSampler::rows_batch`]) so the per-element
+    /// loop carries no PRNG seeding or bounds-check overhead.
     pub fn encode(matrix: CsMatrix, ids: &[u64]) -> Self {
         let mut sk = Self::zero(matrix);
-        let mut buf = vec![0u32; matrix.m() as usize];
-        for &id in ids {
-            for &r in matrix.column_into(id, &mut buf) {
-                sk.counts[r as usize] += 1;
+        accumulate(&matrix, ids, &mut sk.counts);
+        sk
+    }
+
+    /// [`Sketch::encode`] on a bounded worker pool: chunk `ids` across `enc.threads`
+    /// workers (0 = auto), each accumulating into a thread-local count vector, and merge
+    /// by addition. Bit-identical to the serial encode — the count of a row is a sum of
+    /// independent per-id contributions, and integer addition is exact and commutative —
+    /// which the property tests pin across geometries including `m = `[`MAX_M`].
+    /// Inputs below [`PAR_ENCODE_MIN_IDS`] take the serial path unconditionally.
+    pub fn encode_par(matrix: CsMatrix, ids: &[u64], enc: EncodeConfig) -> Self {
+        let threads = enc.resolve(ids.len());
+        if threads == 1 {
+            return Self::encode(matrix, ids);
+        }
+        let l = matrix.l() as usize;
+        // Workers race on an atomic chunk counter (the same bounded-pool discipline as
+        // decoder construction); chunk assignment does not affect the result, so no
+        // ordered merge is needed — locals just sum into the final counts.
+        let num_chunks = ids.len().div_ceil(ENCODE_BLOCK_IDS);
+        let next = AtomicUsize::new(0);
+        let locals: Mutex<Vec<Vec<i32>>> = Mutex::new(Vec::with_capacity(threads));
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| {
+                    let mut counts = vec![0i32; l];
+                    let mut rows = vec![0u32; ENCODE_BLOCK_IDS * matrix.m() as usize];
+                    loop {
+                        let c = next.fetch_add(1, Ordering::Relaxed);
+                        if c >= num_chunks {
+                            break;
+                        }
+                        let lo = c * ENCODE_BLOCK_IDS;
+                        let hi = (lo + ENCODE_BLOCK_IDS).min(ids.len());
+                        accumulate_with(&matrix, &ids[lo..hi], &mut counts, &mut rows);
+                    }
+                    locals.lock().expect("encode worker locals").push(counts);
+                });
+            }
+        });
+        let mut sk = Self::zero(matrix);
+        for local in locals.into_inner().expect("encode worker locals") {
+            for (dst, src) in sk.counts.iter_mut().zip(&local) {
+                *dst += src;
             }
         }
         sk
@@ -75,6 +199,27 @@ impl Sketch {
     /// L1 norm of the sketch (= m·|S| for a set sketch; used in sanity checks).
     pub fn l1(&self) -> u64 {
         self.counts.iter().map(|&c| c.unsigned_abs() as u64).sum()
+    }
+}
+
+/// Scatter-add every id's column into `counts`, block-batching the column sampling.
+/// The shared inner loop of [`Sketch::encode`] and each [`Sketch::encode_par`] worker.
+fn accumulate(matrix: &CsMatrix, ids: &[u64], counts: &mut [i32]) {
+    let m = matrix.m() as usize;
+    let mut rows = vec![0u32; ENCODE_BLOCK_IDS.min(ids.len().max(1)) * m];
+    accumulate_with(matrix, ids, counts, &mut rows);
+}
+
+/// [`accumulate`] with a caller-owned row scratch (`≥ min(|ids|, block) · m` long), so
+/// the parallel workers allocate it once per worker instead of once per chunk.
+fn accumulate_with(matrix: &CsMatrix, ids: &[u64], counts: &mut [i32], rows: &mut [u32]) {
+    let m = matrix.m() as usize;
+    for block in ids.chunks(ENCODE_BLOCK_IDS) {
+        let filled = &mut rows[..block.len() * m];
+        matrix.sampler.rows_batch(block, filled);
+        for &r in filled.iter() {
+            counts[r as usize] += 1;
+        }
     }
 }
 
@@ -234,5 +379,52 @@ mod tests {
     fn moments_of_zero_residue() {
         let r = Residue::zero(mat());
         assert_eq!(r.moments(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn encode_par_is_bit_identical_to_serial_across_geometries() {
+        // The tentpole property: for random geometries — including the m = MAX_M = 64
+        // stack-buffer boundary — and sets straddling the PAR_ENCODE_MIN_IDS threshold,
+        // the parallel encode equals the serial one coordinate-for-coordinate at every
+        // thread count (0 = auto included).
+        let geometries =
+            [(256u32, 5u32, 7u64), (1024, 7, 1), (64, 64, 3), (4096, MAX_M, 9), (128, 1, 11)];
+        for &(l, m, seed) in &geometries {
+            let matrix = CsMatrix::new(l, m, seed);
+            for n in [0usize, 17, PAR_ENCODE_MIN_IDS - 1, PAR_ENCODE_MIN_IDS + 513] {
+                let ids: Vec<u64> =
+                    (0..n as u64).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15) ^ seed).collect();
+                let serial = Sketch::encode(matrix, &ids);
+                for threads in [0usize, 1, 2, 4, 7] {
+                    let par = Sketch::encode_par(matrix, &ids, EncodeConfig { threads });
+                    assert_eq!(
+                        par, serial,
+                        "l={l} m={m} n={n} threads={threads} diverged from serial"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_par_handles_duplicate_ids_like_serial() {
+        // Multiplicities are legal inputs (encode is linear, not set-semantic): chunk
+        // boundaries must not change how repeated columns accumulate.
+        let matrix = CsMatrix::new(512, 6, 21);
+        let ids: Vec<u64> = (0..(PAR_ENCODE_MIN_IDS as u64 + 1000)).map(|i| i % 97).collect();
+        let serial = Sketch::encode(matrix, &ids);
+        let par = Sketch::encode_par(matrix, &ids, EncodeConfig { threads: 4 });
+        assert_eq!(par, serial);
+        assert_eq!(serial.l1(), 6 * ids.len() as u64);
+    }
+
+    #[test]
+    fn encode_config_resolution_floors_and_clamps() {
+        assert_eq!(EncodeConfig::serial().resolve(1 << 20), 1, "serial stays serial");
+        assert_eq!(EncodeConfig { threads: 8 }.resolve(100), 1, "small inputs stay serial");
+        assert_eq!(EncodeConfig { threads: 999 }.resolve(1 << 20), 64, "clamped to 64");
+        assert!(EncodeConfig::auto().resolve(1 << 20) >= 1);
+        // Never more workers than batch-sized chunks of work.
+        assert!(EncodeConfig { threads: 64 }.resolve(PAR_ENCODE_MIN_IDS) <= 64);
     }
 }

@@ -237,6 +237,125 @@ fn pool_disabled_fleet_still_verifies() {
     assert_eq!(stats.pool.hits, 0, "disabled pool must never hit: {:?}", stats.pool);
 }
 
+/// The encode-side acceptance criterion: a shared-geometry fleet re-uses the host
+/// sketch for all but the cold encode — SketchStore hit rate > 0.9 — and the pooled run
+/// is byte-identical to the store-off ablation (per-phase wire bytes agree exactly),
+/// with every intersection verified on both runs.
+#[test]
+fn shared_geometry_fleet_hits_the_sketch_store_and_matches_ablation_bytes() {
+    let cfg = LoadgenConfig {
+        clients: 8,
+        rounds: 4,
+        common: 4_000,
+        client_unique: 60,
+        server_unique: 90,
+        seed: 13,
+        ..LoadgenConfig::default()
+    };
+    let (host, _, _) = cfg.workload();
+    let mut phase_bytes = Vec::new();
+    let mut client_bytes = Vec::new();
+    for store_on in [true, false] {
+        let server = SetxServer::builder(cfg.endpoint(&host).unwrap())
+            .workers(2)
+            .sketch_store_capacity(if store_on { 8 } else { 0 })
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let report = loadgen::run(server.local_addr(), &cfg);
+        assert!(report.verified(), "store_on={store_on} failures: {:?}", report.failures);
+        assert_eq!(report.sessions_ok, 32);
+        wait_until("all sessions to be counted", || server.stats().sessions_served >= 32);
+        let stats = server.shutdown();
+        assert_eq!(stats.sessions_served, 32, "store_on={store_on}: {stats:?}");
+        if store_on {
+            // One shared geometry: only the cold-start encode misses.
+            assert!(
+                stats.sketch_store_hit_rate() > 0.9,
+                "sketch store ineffective: hit rate {:.3} ({:?})",
+                stats.sketch_store_hit_rate(),
+                stats.sketch_store
+            );
+            assert!(
+                stats.sketch_store.hits + stats.sketch_store.misses >= 32,
+                "store never consulted: {:?}",
+                stats.sketch_store
+            );
+        } else {
+            assert_eq!(stats.sketch_store.hits, 0, "disabled store must never hit");
+        }
+        phase_bytes.push(stats.phase_bytes);
+        client_bytes.push(report.total_bytes);
+    }
+    // The store must be invisible on the wire: per-phase byte totals and the clients'
+    // own accounting agree exactly between the store-on and store-off runs.
+    assert_eq!(
+        phase_bytes[0], phase_bytes[1],
+        "store-on transcripts diverged from the store-off ablation"
+    );
+    assert_eq!(client_bytes[0], client_bytes[1]);
+}
+
+/// `replace_set` under a warmed store: resident sketches are maintained incrementally
+/// (no full rebuild for a small diff), post-churn sessions still verify, and the store
+/// keeps hitting — churn must not silently flush the encode-side cache.
+#[test]
+fn replace_set_maintains_resident_sketches_incrementally() {
+    let cfg = LoadgenConfig {
+        clients: 2,
+        rounds: 2,
+        common: 3_000,
+        client_unique: 40,
+        server_unique: 60,
+        seed: 21,
+        ..LoadgenConfig::default()
+    };
+    let (host, _, _) = cfg.workload();
+    let server = SetxServer::builder(cfg.endpoint(&host).unwrap())
+        .workers(2)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let report = loadgen::run(server.local_addr(), &cfg);
+    assert!(report.verified(), "pre-churn failures: {:?}", report.failures);
+    wait_until("pre-churn sessions to finish", || server.stats().sessions_served >= 4);
+    let warmed = server.stats().sketch_store;
+    assert!(warmed.resident >= 1, "fleet must warm the store: {warmed:?}");
+
+    // Small churn: swap 50 server-unique elements for 50 fresh ones. The diff (100) is
+    // ≪ n ⇒ the §4 incremental path, and the host set *length* is unchanged, so the
+    // handshake negotiates the identical geometry — the maintained resident sketch is
+    // exactly what the next session checks out.
+    let mut churned_host = host.clone();
+    churned_host.truncate(host.len() - 50);
+    churned_host.extend(900_000u64..900_050);
+    server.replace_set(churned_host.clone());
+    let churned = server.stats().sketch_store;
+    assert!(
+        churned.incremental_updates >= warmed.resident as u64,
+        "resident sketches must be diff-maintained: {churned:?}"
+    );
+    assert_eq!(churned.full_rebuilds, 0, "a 100-element diff must not rebuild: {churned:?}");
+
+    // A fresh client against the churned set: the maintained sketch serves the decode
+    // (hits keep growing — the cache survived the churn), and the answer is exact, so
+    // incremental maintenance demonstrably produced the true `M·1_host`.
+    let client_set = report_client_set(&cfg);
+    let alice = cfg.endpoint(&client_set).unwrap();
+    let out = alice.run(&mut TcpTransport::connect(server.local_addr()).unwrap()).unwrap();
+    let mut expected: Vec<u64> =
+        client_set.iter().copied().filter(|id| churned_host.contains(id)).collect();
+    expected.sort_unstable();
+    assert_eq!(out.intersection, expected);
+    wait_until("post-churn session to be counted", || server.stats().sessions_served >= 5);
+    let after = server.shutdown().sketch_store;
+    assert!(after.hits > churned.hits, "post-churn session must hit the store: {after:?}");
+}
+
+/// Client 0's set for `cfg` (the loadgen workload is deterministic).
+fn report_client_set(cfg: &LoadgenConfig) -> Vec<u64> {
+    let (_, clients, _) = cfg.workload();
+    clients.into_iter().next().expect("at least one client")
+}
+
 /// Graceful shutdown drains the queue: sessions admitted before `shutdown` complete,
 /// and their clients get correct answers.
 #[test]
