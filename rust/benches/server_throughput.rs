@@ -1,13 +1,19 @@
 //! Multi-client server throughput: sessions/sec of a [`SetxServer`] under the verifying
 //! loadgen fleet, at clients = {1, 8, 32}, with the shared decoder pool and the
-//! host-sketch store on vs off, plus a `workers` sweep at the fleet shape.
+//! host-sketch store on vs off, plus a `workers` sweep at the fleet shape, a
+//! connection-scaling column at clients = {64, 256, 1024} × workers = {2, 4} over a
+//! mixed-tenant fleet, and a `replace_set`-churn-under-load row.
 //!
 //! The off columns are the ablations: pool-off pays full decoder construction per
 //! session, store-off pays a full host-set encode per session, so the on/off ratios are
 //! the server-side payoff of the reuse machinery at fleet scale. The workers sweep
 //! (clients = 8, everything on) shows how that payoff scales with server parallelism.
-//! Every session's intersection is verified — a throughput number from wrong answers
-//! would be worthless.
+//! The scaling column measures the readiness-based driver itself (small sets, one
+//! round): how sessions/sec holds up as resident connections outnumber poller threads
+//! by 2-3 orders of magnitude. The churn row hot-swaps tenant 0's host set every ~2ms
+//! while the fleet runs — resident sketches are diff-maintained mid-flight and every
+//! answer still verifies. Every session's intersection is verified in all rows — a
+//! throughput number from wrong answers would be worthless.
 //!
 //! `cargo bench --bench server_throughput -- [--json] [--smoke]` — `--json` appends one
 //! record per configuration to the repo-root `BENCH_server.json` trajectory
@@ -18,22 +24,59 @@
 use commonsense::metrics::{append_bench_json, BenchProfile, BenchResult, BENCH_SERVER_JSON};
 use commonsense::server::loadgen::{self, LoadgenConfig};
 use commonsense::server::SetxServer;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 const WORKERS: usize = 4;
 
-/// One verified fleet run; returns the per-session wall-clock record.
+// setrlimit(2), hand-rolled (mirrors the integration tests): the 1024-client scaling
+// rows need ~3 fds per live session and the default soft cap is often exactly 1024.
+const RLIMIT_NOFILE: i32 = 7;
+
+#[repr(C)]
+struct RLimit {
+    rlim_cur: u64,
+    rlim_max: u64,
+}
+
+extern "C" {
+    fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+}
+
+/// Raise the fd soft limit toward `want` (bounded by the hard limit); returns the
+/// effective soft limit so the sweep can scale down instead of failing.
+fn raise_nofile(want: u64) -> u64 {
+    unsafe {
+        let mut lim = RLimit { rlim_cur: 0, rlim_max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+            return 1024;
+        }
+        if lim.rlim_cur < want {
+            let raised = RLimit { rlim_cur: want.min(lim.rlim_max), rlim_max: lim.rlim_max };
+            if setrlimit(RLIMIT_NOFILE, &raised) == 0 {
+                return raised.rlim_cur;
+            }
+        }
+        lim.rlim_cur
+    }
+}
+
+/// One verified fleet run; returns the per-session wall-clock record. `tenants > 1`
+/// spreads the fleet round-robin over that many resident namespaces (each with its own
+/// host set and pool/store shards).
 fn run_config(
     common: usize,
     rounds: usize,
     clients: usize,
     workers: usize,
+    tenants: usize,
     pool_on: bool,
     store_on: bool,
 ) -> BenchResult {
-    let cfg = LoadgenConfig { clients, rounds, common, ..LoadgenConfig::default() };
-    let (host, _, _) = cfg.workload();
-    let endpoint = cfg.endpoint(&host).expect("loadgen config is always valid");
+    let cfg = LoadgenConfig { clients, rounds, common, tenants, ..LoadgenConfig::default() };
+    let (hosts, _, _) = cfg.tenant_workload();
+    let endpoint = cfg.endpoint(&hosts[0]).expect("loadgen config is always valid");
     let server = SetxServer::builder(endpoint)
         .workers(workers)
         .max_inflight_sessions(2 * clients + 8)
@@ -41,6 +84,9 @@ fn run_config(
         .sketch_store_capacity(if store_on { 8 } else { 0 })
         .bind("127.0.0.1:0")
         .expect("bind ephemeral loopback listener");
+    for (ns, host) in hosts.iter().enumerate().skip(1) {
+        assert!(server.add_tenant(ns as u32, host.clone()), "duplicate tenant {ns}");
+    }
     let t0 = Instant::now();
     let report = loadgen::run(server.local_addr(), &cfg);
     let elapsed = t0.elapsed();
@@ -48,22 +94,79 @@ fn run_config(
     assert!(
         report.verified(),
         "throughput of wrong answers is meaningless: {:?}",
-        report.failures
+        report.failures.iter().take(5).collect::<Vec<_>>()
     );
     let sessions = report.sessions_ok.max(1);
     let per_session = elapsed / sessions as u32;
-    let name = format!(
+    let mut name = format!(
         "server_throughput common={common} clients={clients} rounds={rounds} \
          workers={workers} pool={} store={}",
         if pool_on { "on" } else { "off" },
         if store_on { "on" } else { "off" }
     );
+    if tenants > 1 {
+        name.push_str(&format!(" tenants={tenants}"));
+    }
     println!(
         "bench {name:<84} {:>8.1} sessions/s (pool hit {:.3}, store hit {:.3}, peak workers {})",
         report.sessions_per_sec(),
         stats.pool_hit_rate(),
         stats.sketch_store_hit_rate(),
         stats.peak_workers
+    );
+    BenchResult { name, mean: per_session, min: per_session, iters: sessions as u64 }
+}
+
+/// The churn row: the fleet syncs while a control thread hot-swaps tenant 0's host set
+/// every ~2ms. Only server-unique tail elements are swapped (the common core every
+/// client checks is untouched) and the set length is preserved, so in-flight sessions
+/// keep their negotiated geometry and the resident sketch is §4-diff-maintained rather
+/// than rebuilt — the encode cache must stay warm *and* every answer must stay exact.
+fn run_churn(common: usize, clients: usize, workers: usize) -> BenchResult {
+    let cfg = LoadgenConfig { clients, rounds: 2, common, ..LoadgenConfig::default() };
+    let (host, _, _) = cfg.workload();
+    let endpoint = cfg.endpoint(&host).expect("loadgen config is always valid");
+    let server = SetxServer::builder(endpoint)
+        .workers(workers)
+        .max_inflight_sessions(2 * clients + 8)
+        .bind("127.0.0.1:0")
+        .expect("bind ephemeral loopback listener");
+    let stop = AtomicBool::new(false);
+    let t0 = Instant::now();
+    let (report, swaps) = std::thread::scope(|scope| {
+        let churner = scope.spawn(|| {
+            let mut swaps = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let mut churned = host[..host.len() - 50].to_vec();
+                let base = 1_000_000_000 + swaps * 64;
+                churned.extend(base..base + 50);
+                server.replace_set(churned);
+                swaps += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            swaps
+        });
+        let report = loadgen::run(server.local_addr(), &cfg);
+        stop.store(true, Ordering::Relaxed);
+        (report, churner.join().expect("churn thread"))
+    });
+    let elapsed = t0.elapsed();
+    let stats = server.shutdown();
+    assert!(
+        report.verified(),
+        "churn must not corrupt answers: {:?}",
+        report.failures.iter().take(5).collect::<Vec<_>>()
+    );
+    assert!(swaps >= 1, "the churner never got a swap in");
+    let sessions = report.sessions_ok.max(1);
+    let per_session = elapsed / sessions as u32;
+    let name =
+        format!("server_throughput churn common={common} clients={clients} workers={workers}");
+    println!(
+        "bench {name:<84} {:>8.1} sessions/s ({swaps} set swaps mid-run, {} incremental updates, {} rebuilds)",
+        report.sessions_per_sec(),
+        stats.sketch_store.incremental_updates,
+        stats.sketch_store.full_rebuilds
     );
     BenchResult { name, mean: per_session, min: per_session, iters: sessions as u64 }
 }
@@ -78,14 +181,35 @@ fn main() {
     // everything-off (the PR 3-era baseline).
     for (pool_on, store_on) in [(true, true), (true, false), (false, false)] {
         for clients in [1usize, 8, 32] {
-            results.push(run_config(common, rounds, clients, WORKERS, pool_on, store_on));
+            results.push(run_config(common, rounds, clients, WORKERS, 1, pool_on, store_on));
         }
     }
     // Workers sweep at the fleet shape (clients = 8, reuse on): the ROADMAP's
     // scale-with-parallelism axis.
     for workers in [1usize, 2, 8] {
-        results.push(run_config(common, rounds, 8, workers, true, true));
+        results.push(run_config(common, rounds, 8, workers, 1, true, true));
     }
+    // Connection-scaling column: a three-tenant fleet at clients = {64, 256, 1024} on
+    // workers = {2, 4} pollers, one round over small sets — this measures the
+    // readiness-based driver, not the codec.
+    let scale_common = if profile.smoke { 600 } else { 4_000 };
+    let limit = raise_nofile(4 * 1024 + 256);
+    let client_cap = ((limit.saturating_sub(256) / 3) as usize).max(16);
+    for workers in [2usize, 4] {
+        for clients in [64usize, 256, 1024] {
+            results.push(run_config(
+                scale_common,
+                1,
+                clients.min(client_cap),
+                workers,
+                3,
+                true,
+                true,
+            ));
+        }
+    }
+    // Churn-under-load: replace_set every ~2ms while the fleet runs.
+    results.push(run_churn(if profile.smoke { 2_000 } else { 20_000 }, 8, WORKERS));
     if profile.json {
         append_bench_json(
             BENCH_SERVER_JSON,

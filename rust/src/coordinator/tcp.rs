@@ -11,10 +11,13 @@
 //! other transport returns, with byte accounting identical to an in-memory run of the
 //! same workload *by construction*.
 //!
-//! To keep a hot set online and reconcile many concurrent clients against it —
-//! bounded workers, per-connection timeouts, admission control, a shared decoder pool —
-//! use [`crate::server::SetxServer`] instead; this module stays the documented
-//! point-to-point path.
+//! These helpers are a **debugging and test convenience** (one blocking session on the
+//! caller's thread, no timeouts, no admission control) — handy for a quick manual sync
+//! or a protocol experiment, and deliberately *not* a service. To keep hot host sets
+//! online and reconcile many concurrent clients against them — the readiness-based
+//! poller pool, per-connection deadlines, admission control and tenant quotas, sharded
+//! decoder pools and sketch stores — use [`crate::server::SetxServer`]; this module
+//! stays the documented point-to-point path.
 
 use crate::setx::transport::TcpTransport;
 use crate::setx::{Setx, SetxError, SetxReport};

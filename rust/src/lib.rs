@@ -75,14 +75,28 @@
 //! Two server shapes exist, and they are not interchangeable:
 //!
 //! * **One-shot** — [`coordinator::tcp::serve`] accepts a single connection, runs a
-//!   single session, and returns. Right for point-to-point syncs and tests.
-//! * **Daemon** — [`server::SetxServer`] keeps a hot host set online and reconciles any
-//!   number of concurrent clients against it: an accept loop feeds a bounded worker
-//!   pool, every accepted socket gets read/write timeouts (a stalled client cannot wedge
-//!   a worker), and connections beyond `max_inflight_sessions` receive a typed `Busy`
-//!   frame that clients see as [`setx::SetxError::ServerBusy`] (with a retry hint)
-//!   rather than a hang or a reset. [`server::ServerHandle::shutdown`] drains queued
-//!   sessions and returns final [`server::ServerStats`].
+//!   single session, and returns. A debugging and test convenience, not a service.
+//! * **Daemon** — [`server::SetxServer`] keeps any number of hot host sets online —
+//!   one per *tenant namespace* — and reconciles any number of concurrent clients
+//!   against them. The driver is readiness-based, not thread-per-session: a fixed pool
+//!   of `workers` poller threads multiplexes every resident connection over
+//!   non-blocking sockets and `poll(2)`, each connection a small state machine around
+//!   the same sans-io endpoint the point-to-point paths use, so a thousand concurrent
+//!   clients cost a thousand small buffers, not a thousand threads. Stalled clients are
+//!   reaped by per-connection deadlines (a wedged peer can never pin a poller);
+//!   connections beyond `max_inflight_sessions` — or beyond a tenant's quota — receive
+//!   a typed `Busy` frame that clients see as [`setx::SetxError::ServerBusy`] (with a
+//!   retry hint and the rejecting namespace) rather than a hang or a reset.
+//!
+//! Clients pick their tenant with `Setx::builder(…).namespace(n)` — carried in the
+//! handshake as a versioned field, so namespace-less clients (and the pre-tenancy wire
+//! format) land on tenant 0 unchanged. Tenants are administered at runtime through
+//! [`server::ServerHandle::add_tenant`] / [`server::ServerHandle::remove_tenant`] /
+//! [`server::ServerHandle::replace_tenant_set`]; each gets its own host set, decoder
+//! pool and sketch-store shard, quota, and a per-tenant block in
+//! [`server::ServerStats`] (shards sum exactly to the globals).
+//! [`server::ServerHandle::shutdown`] stops accepting, drains every resident
+//! connection to completion, and returns the final stats.
 //!
 //! The daemon's performance core is two reuse layers over one observation — clients
 //! syncing against one hot set keep negotiating the same matrix geometry:
@@ -101,10 +115,13 @@
 //!   updates over the per-id set delta (entries are invalidated and re-encoded on
 //!   demand when the delta outweighs the set).
 //!
-//! Hit/miss/eviction/incremental-update counters for both layers surface in
-//! `ServerStats`, and [`server::loadgen`] (also the `commonsense loadgen` CLI) provides
-//! a verifying many-client workload; the `server_throughput` bench tracks sessions/sec
-//! with each layer on vs off, across a `workers` sweep.
+//! Both layers are sharded per tenant — a tenant's churn or eviction pressure cannot
+//! flush a neighbour's warm decoders or sketches. Hit/miss/eviction/incremental-update
+//! counters surface in `ServerStats` (globally and per shard), and [`server::loadgen`]
+//! (also the `commonsense loadgen` CLI) provides a verifying many-client, many-tenant
+//! workload with capped-exponential-backoff retries on `Busy`; the `server_throughput`
+//! bench tracks sessions/sec with each layer on vs off, across `workers` and
+//! connection-scaling sweeps, plus a `replace_set`-churn-under-load row.
 //!
 //! ## Performance
 //!

@@ -25,19 +25,20 @@ USAGE:
                                               --explicit-d is given)
   commonsense serve [--listen ADDR] [--workers W] [--max-inflight M] [--pool-capacity C]
                     [--no-pool] [--store-capacity C] [--no-store] [--sessions K]
-                    [--common N] [--client-unique X]
+                    [--tenants T] [--common N] [--client-unique X]
                     [--server-unique Y] [--seed S] [--estimate-d]
-                                             (multi-client daemon: keeps the host set
-                                              online until killed, or until K sessions
-                                              when --sessions is given; final stats as
-                                              one JSON line)
-  commonsense loadgen [--addr ADDR] [--clients N] [--rounds R] [--common N]
+                                             (multi-tenant daemon: keeps T host sets
+                                              (namespaces 0..T) online until killed, or
+                                              until K sessions when --sessions is given;
+                                              final stats as one JSON line)
+  commonsense loadgen [--addr ADDR] [--clients N] [--rounds R] [--tenants T] [--common N]
                       [--client-unique X] [--server-unique Y] [--seed S]
                       [--busy-retries K] [--estimate-d]
-                                             (N concurrent verified clients against a
-                                              `commonsense serve` with the same workload
-                                              flags — including --seed; exits non-zero
-                                              on any mismatch)
+                                             (N concurrent verified clients spread over T
+                                              tenants against a `commonsense serve` with
+                                              the same workload flags — including --seed
+                                              and --tenants; exits non-zero on any
+                                              mismatch)
   commonsense connect --addr ADDR            (one client, one sync, same workload flags)
   commonsense exp <fig2a|fig2b|table2|examples|ablations|all> [--scale N] [--instances K] [--eth-accounts N]
   commonsense tune [--n N] [--d D] [--bidi] [--trials K]
@@ -46,10 +47,11 @@ USAGE:
 Defaults: --transport mem, --common 50000 (serve/loadgen/connect: 20000), --a-unique 200,
           --b-unique 300, --parts 16, --threads 4, --scale 50000, --instances 5,
           --eth-accounts 300000, --n 100000, --d 1000, --workers 4, --max-inflight 64,
-          --clients 8, --rounds 2, --client-unique 100, --server-unique 200, --seed 42,
-          --busy-retries 3, --store-capacity 8. serve/loadgen/connect must share the workload flags
-          (including --seed) and declare the exactly-known d (one shared matrix
-          geometry, the decoder-pool sweet spot) unless --estimate-d is given."
+          --clients 8, --rounds 2, --tenants 1, --client-unique 100, --server-unique 200,
+          --seed 42, --busy-retries 3, --store-capacity 8. serve/loadgen/connect must share
+          the workload flags (including --seed and --tenants) and declare the exactly-known
+          d (one shared matrix geometry, the decoder-pool sweet spot) unless --estimate-d
+          is given."
     );
     std::process::exit(2)
 }
@@ -151,6 +153,7 @@ fn fleet_config(args: &Args) -> LoadgenConfig {
         seed: args.get("seed", 42) as u64,
         busy_retries: args.get("busy-retries", 3),
         estimate_diff: args.has("estimate-d"),
+        tenants: args.get("tenants", 1).max(1),
     }
 }
 
@@ -249,8 +252,8 @@ fn main() -> anyhow::Result<()> {
             // with the same flags speaks the same config fingerprint.
             let addr = args.str("listen", "127.0.0.1:7700");
             let cfg = fleet_config(&args);
-            let (host, _, _) = cfg.workload();
-            let endpoint = cfg.endpoint(&host).unwrap_or_else(|e| {
+            let (hosts, _, _) = cfg.tenant_workload();
+            let endpoint = cfg.endpoint(&hosts[0]).unwrap_or_else(|e| {
                 eprintln!("invalid config: {e}");
                 usage();
             });
@@ -263,16 +266,21 @@ fn main() -> anyhow::Result<()> {
             let store_capacity =
                 if args.has("no-store") { 0 } else { args.get("store-capacity", 8) };
             let sessions = args.get("sessions", 0);
-            let server = SetxServer::builder(endpoint)
+            let mut builder = SetxServer::builder(endpoint)
                 .workers(workers)
                 .max_inflight_sessions(args.get("max-inflight", 64))
                 .pool_capacity(pool_capacity)
-                .sketch_store_capacity(store_capacity)
-                .bind(&addr)?;
+                .sketch_store_capacity(store_capacity);
+            // Tenant 0 is the builder endpoint's set; the rest ride along by namespace.
+            for (ns, host) in hosts.iter().enumerate().skip(1) {
+                builder = builder.tenant(ns as u32, host.clone());
+            }
+            let server = builder.bind(&addr)?;
             println!(
-                "serving |B| = {} on {} (workers {workers}, max inflight {}, pool capacity {}, \
-                 sketch store capacity {store_capacity}, {})",
-                host.len(),
+                "serving {} tenant(s), |B| = {} each on {} (workers {workers}, max inflight {}, \
+                 pool capacity {}, sketch store capacity {store_capacity}, {})",
+                hosts.len(),
+                hosts[0].len(),
                 server.local_addr(),
                 args.get("max-inflight", 64),
                 pool_capacity,
@@ -305,19 +313,22 @@ fn main() -> anyhow::Result<()> {
             let addr = args.str("addr", "127.0.0.1:7700");
             let cfg = fleet_config(&args);
             println!(
-                "loadgen: {} clients × {} rounds against {addr} (|common| = {}, d = {})",
+                "loadgen: {} clients × {} rounds over {} tenant(s) against {addr} \
+                 (|common| = {}, d = {})",
                 cfg.clients,
                 cfg.rounds,
+                cfg.tenants,
                 cfg.common,
                 cfg.true_d()
             );
             let report = loadgen::run(&addr, &cfg);
             println!(
-                "loadgen: {} ok / {} failed / {} busy-rejections, {} B total, \
+                "loadgen: {} ok / {} failed / {} busy-rejections ({} retried), {} B total, \
                  {:.1} sessions/s, verified = {}",
                 report.sessions_ok,
                 report.sessions_failed,
                 report.busy_rejections,
+                report.retries,
                 report.total_bytes,
                 report.sessions_per_sec(),
                 report.verified()

@@ -45,6 +45,11 @@ pub struct BidiOptions {
     pub ssmp_fallback: bool,
     /// Seed for inquiry signatures.
     pub sig_seed: u64,
+    /// Tenant namespace stamped into the session `Hello` (0 = the default tenant; the
+    /// field is then absent on the wire). Both endpoints must agree — the responder
+    /// rejects a `Hello` for a different namespace. Deliberately *not* part of the
+    /// config fingerprint: it routes the session, it does not change the protocol.
+    pub namespace: u32,
 }
 
 impl Default for BidiOptions {
@@ -55,6 +60,7 @@ impl Default for BidiOptions {
             smf_fpr: 0.01,
             ssmp_fallback: true,
             sig_seed: 0x5167_5eed_0f_c0de,
+            namespace: 0,
         }
     }
 }

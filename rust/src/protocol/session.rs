@@ -207,6 +207,7 @@ impl Session {
             est_initiator_unique: est_i as u64,
             est_responder_unique: est_r as u64,
             set_len: set.len() as u64,
+            namespace: opts.namespace,
         };
         let sketch = match host_sketch.filter(|sk| sk.matrix == params.matrix()) {
             Some(sk) => sketch_msg(params, &sk.counts, is_alice),
@@ -293,12 +294,19 @@ impl Session {
     pub fn on_msg(&mut self, incoming: &Msg) -> Result<SessionEvent, SessionError> {
         self.record_received(incoming);
         match (std::mem::replace(&mut self.phase, Phase::Closed), incoming) {
-            (Phase::AwaitHello, Msg::Hello { l, m, seed, universe_bits, est_initiator_unique, est_responder_unique, .. }) => {
+            (Phase::AwaitHello, Msg::Hello { l, m, seed, universe_bits, est_initiator_unique, est_responder_unique, namespace, .. }) => {
                 // Adversarial-geometry hardening: reject rather than panic on a `Hello`
                 // whose (l, m) no ColumnSampler would accept (the m ≤ MAX_M stack-buffer
                 // invariant), or whose row count would drive a giant allocation.
                 if !crate::protocol::wire_geometry_ok(*l, *m, *seed) {
                     return Err(SessionError::Corrupt("hello geometry"));
+                }
+                // Tenant routing happens before the session opens (the server picks the
+                // host set from the EstHello namespace); a session-level Hello for a
+                // *different* namespace means the peer is confused about which resident
+                // set it is reconciling against — terminal, like any other bad frame.
+                if *namespace != self.opts.namespace {
+                    return Err(SessionError::Corrupt("hello namespace"));
                 }
                 // Reconstruct the shared parameter view with the initiator in the "a"
                 // slot (`initiator_is_alice = true` keeps the codec orientation fixed
@@ -729,11 +737,35 @@ mod tests {
             est_initiator_unique: 1,
             est_responder_unique: 1,
             set_len: 100,
+            namespace: 0,
         };
         assert!(matches!(
             res.on_msg(&hello),
             Err(SessionError::UnexpectedMessage { phase: "closed", .. })
         ));
+    }
+
+    #[test]
+    fn hello_for_a_different_namespace_is_rejected() {
+        let set: Vec<u64> = (0..100).collect();
+        let mut res = Session::responder(&set, BidiOptions::default(), false);
+        let hello = Msg::Hello {
+            l: 128,
+            m: 5,
+            seed: 1,
+            universe_bits: 64,
+            est_initiator_unique: 1,
+            est_responder_unique: 1,
+            set_len: 100,
+            namespace: 9,
+        };
+        assert!(matches!(res.on_msg(&hello), Err(SessionError::Corrupt("hello namespace"))));
+
+        // And a matched non-zero namespace is accepted (the session proceeds to
+        // await-sketch, i.e. the Hello itself was not the problem).
+        let opts = BidiOptions { namespace: 9, ..BidiOptions::default() };
+        let mut res = Session::responder(&set, opts, false);
+        assert!(matches!(res.on_msg(&hello), Ok(SessionEvent::Continue)));
     }
 
     #[test]

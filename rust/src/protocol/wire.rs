@@ -31,6 +31,11 @@ pub enum Msg {
         strata: Option<Vec<u8>>,
         /// Serialized [`crate::protocol::estimate::MinHashEstimator`] (iff `Estimated`).
         minhash: Option<Vec<u8>>,
+        /// Tenant namespace the sender wants to reconcile against. Versioned encoding:
+        /// the field is on the wire (flags bit 3 + trailing varint) iff non-zero, so a
+        /// PR-5-era frame without it parses as tenant 0 and a tenant-0 frame is
+        /// byte-identical to the old format — old clients and old servers interop.
+        namespace: u32,
     },
     /// Session handshake: CS parameters + role metadata.
     Hello {
@@ -41,6 +46,9 @@ pub enum Msg {
         est_initiator_unique: u64,
         est_responder_unique: u64,
         set_len: u64,
+        /// Tenant namespace (same versioned encoding as [`Msg::EstHello`]: a trailing
+        /// varint present iff non-zero; absent means tenant 0).
+        namespace: u32,
     },
     /// The initiator's compressed, truncation-coded sketch (message 1).
     Sketch(SketchMsg),
@@ -80,6 +88,10 @@ pub enum Msg {
         /// Server's back-off hint in milliseconds (0 = no hint; clients should add their
         /// own jitter either way).
         retry_after_ms: u32,
+        /// Tenant namespace whose admission quota rejected the session (0 = the global
+        /// cap / the default tenant). Same versioned trailing-varint encoding as
+        /// [`Msg::Hello`], so PR-5-era peers interop.
+        namespace: u32,
     },
 }
 
@@ -104,21 +116,46 @@ fn varint_len(v: u64) -> usize {
     ((64 - v.leading_zeros()).max(1) as usize).div_ceil(7)
 }
 
+/// Wire cost of the versioned trailing `namespace` field: zero bytes for tenant 0 (the
+/// field is simply absent, keeping tenant-0 frames byte-identical to the PR-5 format).
+fn opt_namespace_len(ns: u32) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        varint_len(ns as u64)
+    }
+}
+
+/// Parse a *present* trailing `namespace` varint. Canonical-form hardening: tenant 0 is
+/// encoded by omission, so a frame that carries the field with value 0 is malformed —
+/// accepting it would make two byte strings decode to the same message and break the
+/// `wire_len == to_bytes().len()` accounting invariant.
+fn parse_namespace(body: &[u8], off: &mut usize) -> Option<u32> {
+    let ns = u32::try_from(take_varint(body, off)?).ok()?;
+    if ns == 0 {
+        return None;
+    }
+    Some(ns)
+}
+
 impl Msg {
     /// Exact wire size of this frame — equals `self.to_bytes().len()` without building
     /// the buffer. The session engine charges every frame through this, so accounting
     /// costs no allocation or serialization on the hot path.
     pub fn wire_len(&self) -> usize {
         let body = match self {
-            Msg::EstHello { set_len, explicit_d, strata, minhash, .. } => {
+            Msg::EstHello { set_len, explicit_d, strata, minhash, namespace, .. } => {
                 8 + varint_len(*set_len)
                     + 1
                     + explicit_d.map_or(0, |d| varint_len(d))
                     + strata.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
                     + minhash.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
+                    + opt_namespace_len(*namespace)
             }
             Msg::Confirm { attempt, .. } => 2 + varint_len(*attempt as u64),
-            Msg::Busy { retry_after_ms } => varint_len(*retry_after_ms as u64),
+            Msg::Busy { retry_after_ms, namespace } => {
+                varint_len(*retry_after_ms as u64) + opt_namespace_len(*namespace)
+            }
             Msg::Hello {
                 l,
                 m,
@@ -126,6 +163,7 @@ impl Msg {
                 est_initiator_unique,
                 est_responder_unique,
                 set_len,
+                namespace,
                 ..
             } => {
                 varint_len(*l as u64)
@@ -135,6 +173,7 @@ impl Msg {
                     + varint_len(*est_initiator_unique)
                     + varint_len(*est_responder_unique)
                     + varint_len(*set_len)
+                    + opt_namespace_len(*namespace)
             }
             Msg::Sketch(sk) => {
                 varint_len(sk.n as u64)
@@ -163,12 +202,13 @@ impl Msg {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut body = Vec::new();
         let ty = match self {
-            Msg::EstHello { config_fingerprint, set_len, explicit_d, strata, minhash } => {
+            Msg::EstHello { config_fingerprint, set_len, explicit_d, strata, minhash, namespace } => {
                 body.extend_from_slice(&config_fingerprint.to_le_bytes());
                 put_varint(&mut body, *set_len);
                 let flags = (explicit_d.is_some() as u8)
                     | (strata.is_some() as u8) << 1
-                    | (minhash.is_some() as u8) << 2;
+                    | (minhash.is_some() as u8) << 2
+                    | ((*namespace != 0) as u8) << 3;
                 body.push(flags);
                 if let Some(d) = explicit_d {
                     put_varint(&mut body, *d);
@@ -181,6 +221,9 @@ impl Msg {
                     put_varint(&mut body, bytes.len() as u64);
                     body.extend_from_slice(bytes);
                 }
+                if *namespace != 0 {
+                    put_varint(&mut body, *namespace as u64);
+                }
                 TYPE_EST_HELLO
             }
             Msg::Confirm { ok, reason, attempt } => {
@@ -189,8 +232,11 @@ impl Msg {
                 put_varint(&mut body, *attempt as u64);
                 TYPE_CONFIRM
             }
-            Msg::Busy { retry_after_ms } => {
+            Msg::Busy { retry_after_ms, namespace } => {
                 put_varint(&mut body, *retry_after_ms as u64);
+                if *namespace != 0 {
+                    put_varint(&mut body, *namespace as u64);
+                }
                 TYPE_BUSY
             }
             Msg::Hello {
@@ -201,6 +247,7 @@ impl Msg {
                 est_initiator_unique,
                 est_responder_unique,
                 set_len,
+                namespace,
             } => {
                 put_varint(&mut body, *l as u64);
                 put_varint(&mut body, *m as u64);
@@ -209,6 +256,9 @@ impl Msg {
                 put_varint(&mut body, *est_initiator_unique);
                 put_varint(&mut body, *est_responder_unique);
                 put_varint(&mut body, *set_len);
+                if *namespace != 0 {
+                    put_varint(&mut body, *namespace as u64);
+                }
                 TYPE_HELLO
             }
             Msg::Sketch(sk) => {
@@ -272,7 +322,7 @@ impl Msg {
                 let fp = u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?);
                 let set_len = take_varint(body, &mut off)?;
                 let flags = take(body, &mut off, 1)?[0];
-                if flags & !0b111 != 0 {
+                if flags & !0b1111 != 0 {
                     return None;
                 }
                 let explicit_d = if flags & 1 != 0 {
@@ -289,10 +339,22 @@ impl Msg {
                 };
                 let strata = opt_bytes(flags & 2 != 0)?;
                 let minhash = opt_bytes(flags & 4 != 0)?;
+                let namespace = if flags & 8 != 0 {
+                    parse_namespace(body, &mut off)?
+                } else {
+                    0
+                };
                 if off != body.len() {
                     return None;
                 }
-                Msg::EstHello { config_fingerprint: fp, set_len, explicit_d, strata, minhash }
+                Msg::EstHello {
+                    config_fingerprint: fp,
+                    set_len,
+                    explicit_d,
+                    strata,
+                    minhash,
+                    namespace,
+                }
             }
             TYPE_CONFIRM => {
                 let ok = match take(body, &mut off, 1)?[0] {
@@ -312,10 +374,12 @@ impl Msg {
             }
             TYPE_BUSY => {
                 let retry_after_ms = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                let namespace =
+                    if off < body.len() { parse_namespace(body, &mut off)? } else { 0 };
                 if off != body.len() {
                     return None;
                 }
-                Msg::Busy { retry_after_ms }
+                Msg::Busy { retry_after_ms, namespace }
             }
             TYPE_HELLO => {
                 let l = take_varint(body, &mut off)?;
@@ -325,6 +389,8 @@ impl Msg {
                 let ei = take_varint(body, &mut off)?;
                 let er = take_varint(body, &mut off)?;
                 let sl = take_varint(body, &mut off)?;
+                let namespace =
+                    if off < body.len() { parse_namespace(body, &mut off)? } else { 0 };
                 if off != body.len() {
                     return None;
                 }
@@ -336,6 +402,7 @@ impl Msg {
                     est_initiator_unique: ei,
                     est_responder_unique: er,
                     set_len: sl,
+                    namespace,
                 }
             }
             TYPE_SKETCH => Msg::Sketch(SketchMsg::from_bytes(body)?),
@@ -390,19 +457,23 @@ mod tests {
 
     #[test]
     fn hello_roundtrip() {
-        let msg = Msg::Hello {
-            l: 1234,
-            m: 7,
-            seed: 0xdead_beef,
-            universe_bits: 256,
-            est_initiator_unique: 10,
-            est_responder_unique: 999,
-            set_len: 1_000_000,
-        };
-        let bytes = msg.to_bytes();
-        let (back, used) = Msg::from_bytes(&bytes).unwrap();
-        assert_eq!(back, msg);
-        assert_eq!(used, bytes.len());
+        for namespace in [0, 1, 127, 128, u32::MAX] {
+            let msg = Msg::Hello {
+                l: 1234,
+                m: 7,
+                seed: 0xdead_beef,
+                universe_bits: 256,
+                est_initiator_unique: 10,
+                est_responder_unique: 999,
+                set_len: 1_000_000,
+                namespace,
+            };
+            let bytes = msg.to_bytes();
+            let (back, used) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(back, msg);
+            assert_eq!(used, bytes.len());
+            assert_eq!(msg.wire_len(), bytes.len());
+        }
     }
 
     #[test]
@@ -414,6 +485,7 @@ mod tests {
                 explicit_d: None,
                 strata: Some(vec![7; 300]),
                 minhash: Some(vec![9; 64]),
+                namespace: 0,
             },
             Msg::EstHello {
                 config_fingerprint: u64::MAX,
@@ -421,6 +493,7 @@ mod tests {
                 explicit_d: Some(12_345),
                 strata: None,
                 minhash: None,
+                namespace: 3,
             },
             Msg::EstHello {
                 config_fingerprint: 0,
@@ -428,6 +501,15 @@ mod tests {
                 explicit_d: None,
                 strata: None,
                 minhash: None,
+                namespace: u32::MAX,
+            },
+            Msg::EstHello {
+                config_fingerprint: 7,
+                set_len: 2,
+                explicit_d: Some(9),
+                strata: Some(vec![1; 12]),
+                minhash: Some(vec![2; 8]),
+                namespace: 200,
             },
         ];
         for msg in &variants {
@@ -462,7 +544,12 @@ mod tests {
 
     #[test]
     fn busy_roundtrip_and_validation() {
-        for msg in [Msg::Busy { retry_after_ms: 0 }, Msg::Busy { retry_after_ms: 120_000 }] {
+        for msg in [
+            Msg::Busy { retry_after_ms: 0, namespace: 0 },
+            Msg::Busy { retry_after_ms: 120_000, namespace: 0 },
+            Msg::Busy { retry_after_ms: 50, namespace: 7 },
+            Msg::Busy { retry_after_ms: 0, namespace: u32::MAX },
+        ] {
             let bytes = msg.to_bytes();
             let (back, used) = Msg::from_bytes(&bytes).unwrap();
             assert_eq!(back, msg);
@@ -494,15 +581,16 @@ mod tests {
             explicit_d: None,
             strata: Some(vec![5; 40]),
             minhash: Some(vec![6; 24]),
+            namespace: 0,
         };
         let bytes = msg.to_bytes();
         for cut in 0..bytes.len() {
             assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut} parsed");
         }
-        // Reserved flag bits must be zero.
+        // Reserved flag bits (above the namespace bit) must be zero.
         let mut body = bytes[2..].to_vec(); // type byte + 1-byte varint length here
         let flags_off = 8 + varint_len(9_999);
-        body[flags_off] |= 0b1000;
+        body[flags_off] |= 0b10000;
         let mut frame = vec![TYPE_EST_HELLO];
         put_varint(&mut frame, body.len() as u64);
         frame.extend_from_slice(&body);
@@ -656,13 +744,147 @@ mod tests {
             est_initiator_unique: 1,
             est_responder_unique: 2,
             set_len: 3,
+            namespace: 0,
         };
         let good = msg.to_bytes();
-        let mut body = good[2..].to_vec();
-        body.push(0x7F);
+        let reframe = |garbage: &[u8]| {
+            let mut body = good[2..].to_vec();
+            body.extend_from_slice(garbage);
+            let mut frame = vec![TYPE_HELLO];
+            put_varint(&mut frame, body.len() as u64);
+            frame.extend_from_slice(&body);
+            frame
+        };
+        // A lone `0x7F` IS a valid trailing namespace varint (127) — the versioned
+        // encoding claims exactly one optional field. Everything beyond it is garbage:
+        let (back, _) = Msg::from_bytes(&reframe(&[0x7F])).unwrap();
+        assert!(matches!(back, Msg::Hello { namespace: 127, .. }));
+        // … an incomplete varint,
+        assert!(Msg::from_bytes(&reframe(&[0x80])).is_none());
+        // … a canonical-form violation (tenant 0 must be encoded by omission),
+        assert!(Msg::from_bytes(&reframe(&[0x00])).is_none());
+        // … bytes after the namespace varint,
+        assert!(Msg::from_bytes(&reframe(&[0x7F, 0x7F])).is_none());
+        // … and a namespace that overflows u32.
+        let mut over = Vec::new();
+        put_varint(&mut over, u64::from(u32::MAX) + 1);
+        assert!(Msg::from_bytes(&reframe(&over)).is_none());
+    }
+
+    /// The satellite's backward-compat proof: a PR-5-era frame (serialized before the
+    /// `namespace` field existed) parses to tenant 0, and a tenant-0 frame serializes
+    /// byte-identically to the old format — old clients and old servers interop.
+    #[test]
+    fn pr5_era_frames_without_namespace_parse_to_tenant_zero() {
+        // Hello, hand-built exactly as the PR-5 serializer wrote it.
+        let mut body = Vec::new();
+        put_varint(&mut body, 77u64); // l
+        put_varint(&mut body, 5u64); // m
+        body.extend_from_slice(&0xfeed_u64.to_le_bytes()); // seed
+        put_varint(&mut body, 64u64); // universe_bits
+        put_varint(&mut body, 10u64); // est_initiator_unique
+        put_varint(&mut body, 20u64); // est_responder_unique
+        put_varint(&mut body, 900u64); // set_len
         let mut frame = vec![TYPE_HELLO];
         put_varint(&mut frame, body.len() as u64);
         frame.extend_from_slice(&body);
+        let expected = Msg::Hello {
+            l: 77,
+            m: 5,
+            seed: 0xfeed,
+            universe_bits: 64,
+            est_initiator_unique: 10,
+            est_responder_unique: 20,
+            set_len: 900,
+            namespace: 0,
+        };
+        let (back, used) = Msg::from_bytes(&frame).unwrap();
+        assert_eq!(back, expected);
+        assert_eq!(used, frame.len());
+        assert_eq!(expected.to_bytes(), frame, "tenant-0 Hello must stay byte-identical");
+
+        // EstHello with the old three-bit flags byte (explicit_d only).
+        let mut body = Vec::new();
+        body.extend_from_slice(&42u64.to_le_bytes()); // config_fingerprint
+        put_varint(&mut body, 500u64); // set_len
+        body.push(0b001); // flags: explicit_d present, no namespace bit
+        put_varint(&mut body, 33u64); // explicit_d
+        let mut frame = vec![TYPE_EST_HELLO];
+        put_varint(&mut frame, body.len() as u64);
+        frame.extend_from_slice(&body);
+        let expected = Msg::EstHello {
+            config_fingerprint: 42,
+            set_len: 500,
+            explicit_d: Some(33),
+            strata: None,
+            minhash: None,
+            namespace: 0,
+        };
+        let (back, _) = Msg::from_bytes(&frame).unwrap();
+        assert_eq!(back, expected);
+        assert_eq!(expected.to_bytes(), frame, "tenant-0 EstHello must stay byte-identical");
+
+        // Busy with only the retry hint.
+        let mut body = Vec::new();
+        put_varint(&mut body, 50u64);
+        let mut frame = vec![TYPE_BUSY];
+        put_varint(&mut frame, body.len() as u64);
+        frame.extend_from_slice(&body);
+        let expected = Msg::Busy { retry_after_ms: 50, namespace: 0 };
+        let (back, _) = Msg::from_bytes(&frame).unwrap();
+        assert_eq!(back, expected);
+        assert_eq!(expected.to_bytes(), frame, "tenant-0 Busy must stay byte-identical");
+    }
+
+    /// Namespace hardening: truncated, oversize, and non-canonical encodings of the new
+    /// field are rejected on all three frames that carry it.
+    #[test]
+    fn namespace_field_truncation_and_oversize_rejected() {
+        let est = Msg::EstHello {
+            config_fingerprint: 1,
+            set_len: 10,
+            explicit_d: Some(4),
+            strata: None,
+            minhash: None,
+            namespace: 300,
+        };
+        let hello = Msg::Hello {
+            l: 64,
+            m: 5,
+            seed: 1,
+            universe_bits: 64,
+            est_initiator_unique: 3,
+            est_responder_unique: 4,
+            set_len: 9,
+            namespace: 300,
+        };
+        let busy = Msg::Busy { retry_after_ms: 10, namespace: 300 };
+        for msg in [&est, &hello, &busy] {
+            let bytes = msg.to_bytes();
+            // Every truncation of the frame — including mid-namespace — must die.
+            for cut in 0..bytes.len() {
+                assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "{msg:?} cut {cut}");
+            }
+            let (back, _) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(&back, msg);
+        }
+        // Oversize: a namespace varint wider than u32 is rejected even when the flags
+        // byte legitimately announces the field (EstHello path).
+        let good = est.to_bytes();
+        let body = &good[2..]; // 1-byte type + 1-byte length at this size
+        let ns_len = varint_len(300);
+        let mut huge = body[..body.len() - ns_len].to_vec();
+        put_varint(&mut huge, u64::MAX);
+        let mut frame = vec![TYPE_EST_HELLO];
+        put_varint(&mut frame, huge.len() as u64);
+        frame.extend_from_slice(&huge);
+        assert!(Msg::from_bytes(&frame).is_none());
+        // Non-canonical: flags announce the field but it encodes tenant 0.
+        let mut zero = body[..body.len() - ns_len].to_vec();
+        zero.push(0x00);
+        let mut frame = vec![TYPE_EST_HELLO];
+        put_varint(&mut frame, zero.len() as u64);
+        frame.extend_from_slice(&zero);
         assert!(Msg::from_bytes(&frame).is_none());
     }
 
@@ -677,7 +899,9 @@ mod tests {
                 est_initiator_unique: 128,
                 est_responder_unique: 1 << 40,
                 set_len: u64::MAX,
+                namespace: 1 << 21,
             },
+            Msg::Busy { retry_after_ms: 99, namespace: 1 },
             Msg::Sketch(crate::entropy::SketchMsg {
                 n: 300,
                 table: vec![1; 40],

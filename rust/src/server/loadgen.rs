@@ -1,41 +1,47 @@
 //! A verifying load generator for [`super::SetxServer`]: N concurrent clients, each with
-//! its own perturbation of the host set, each *asserting* the intersection it gets back.
+//! its own perturbation of its tenant's host set, each *asserting* the intersection it
+//! gets back.
 //!
 //! The workload is the one-server-many-clients shape of the paper's deployment stories:
-//! every client shares a large common core with the host set, holds `client_unique`
-//! elements of its own, and is missing the server's `server_unique` elements — so the
-//! true difference size is `client_unique + server_unique` for every client, and (with
-//! the default explicit-d config) every session negotiates the **same matrix geometry**,
-//! which is precisely the regime the shared [`super::DecoderPool`] exists for. Each
-//! client runs `rounds` back-to-back syncs (the steady-state delta-sync pattern), and a
-//! [`SetxError::ServerBusy`] answer is retried with the server's back-off hint.
+//! every client shares a large common core with its tenant's host set, holds
+//! `client_unique` elements of its own, and is missing the tenant's `server_unique`
+//! elements — so the true difference size is `client_unique + server_unique` for every
+//! client, and (with the default explicit-d config) every session negotiates the **same
+//! matrix geometry**, which is precisely the regime the shared [`super::DecoderPool`]
+//! exists for. With `tenants > 1` the id space is partitioned into per-tenant blocks
+//! (client *i* belongs to tenant *i mod tenants*), so a mixed fleet exercises the
+//! namespace-sharded server. Each client runs `rounds` back-to-back syncs (the
+//! steady-state delta-sync pattern), and a [`SetxError::ServerBusy`] answer is retried
+//! under capped exponential back-off with deterministic, seeded per-client jitter.
 //!
-//! Every returned intersection is compared against the exactly-known answer (the common
-//! core): the generator is a correctness harness first and a throughput meter second.
-//! It backs the `commonsense loadgen` CLI and the `server_throughput` bench.
+//! Every returned intersection is compared against the exactly-known answer (the
+//! tenant's common core): the generator is a correctness harness first and a throughput
+//! meter second. It backs the `commonsense loadgen` CLI and the `server_throughput`
+//! bench.
 
 use crate::data::synth;
-use crate::hash::Xoshiro256;
+use crate::hash::{split_mix64, Xoshiro256};
 use crate::setx::transport::TcpTransport;
 use crate::setx::{DiffSize, Setx, SetxError};
 use std::net::ToSocketAddrs;
 use std::time::{Duration, Instant};
 
 /// Workload + fleet shape. `Default` is the CLI default: 8 clients × 2 rounds over a
-/// 20 000-element core with 100 client-unique / 200 server-unique elements.
+/// 20 000-element core with 100 client-unique / 200 server-unique elements, one tenant.
 #[derive(Clone, Copy, Debug)]
 pub struct LoadgenConfig {
     /// Concurrent client threads.
     pub clients: usize,
     /// Sequential syncs per client (≥ 2 exercises client-side decoder reuse too).
     pub rounds: usize,
-    /// `|client ∩ server|` — the shared core.
+    /// `|client ∩ tenant host set|` — the shared core, per tenant.
     pub common: usize,
-    /// Unique elements per client (disjoint across clients).
+    /// Unique elements per client (disjoint across clients and tenants).
     pub client_unique: usize,
-    /// Host-set elements no client holds.
+    /// Host-set elements no client holds, per tenant.
     pub server_unique: usize,
-    /// Workload id seed (set contents) — also used as the protocol seed.
+    /// Workload id seed (set contents) — also used as the protocol seed and the
+    /// retry-jitter seed.
     pub seed: u64,
     /// Retries after a `Busy` rejection before counting the session as failed.
     pub busy_retries: usize,
@@ -44,6 +50,9 @@ pub struct LoadgenConfig {
     /// session on one shared matrix geometry — the decoder-pool sweet spot. Estimation
     /// adds per-client estimator noise, so geometries (and pool efficiency) vary.
     pub estimate_diff: bool,
+    /// Tenant namespaces to spread the fleet across (clamped ≥ 1). Tenant ids are
+    /// `0..tenants`; client *i* syncs against tenant *i mod tenants*.
+    pub tenants: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -57,6 +66,7 @@ impl Default for LoadgenConfig {
             seed: 42,
             busy_retries: 3,
             estimate_diff: false,
+            tenants: 1,
         }
     }
 }
@@ -67,42 +77,75 @@ impl LoadgenConfig {
         self.client_unique + self.server_unique
     }
 
-    /// Deterministic disjoint id pools: `(host set, per-client sets, common core)`.
-    /// The core is returned sorted — it *is* every client's expected intersection.
-    pub fn workload(&self) -> (Vec<u64>, Vec<Vec<u64>>, Vec<u64>) {
+    /// Deterministic disjoint id pools, partitioned by tenant:
+    /// `(per-tenant host sets, per-client sets, per-tenant expected intersections)`.
+    /// Tenant `t`'s expected intersection (its common core, sorted) is what every
+    /// client `i` with `i % tenants == t` must get back. All pools are mutually
+    /// disjoint — across tenants and across clients.
+    pub fn tenant_workload(&self) -> (Vec<Vec<u64>>, Vec<Vec<u64>>, Vec<Vec<u64>>) {
+        let tenants = self.tenants.max(1);
         let mut rng = Xoshiro256::seed_from_u64(self.seed);
-        let total = self.common + self.server_unique + self.clients * self.client_unique;
+        let per_tenant = self.common + self.server_unique;
+        let total = tenants * per_tenant + self.clients * self.client_unique;
         let ids = synth::distinct_ids(total, &mut rng);
-        let common = &ids[..self.common];
-        let server_only = &ids[self.common..self.common + self.server_unique];
-        let mut host = common.to_vec();
-        host.extend_from_slice(server_only);
+        let mut hosts = Vec::with_capacity(tenants);
+        let mut expected = Vec::with_capacity(tenants);
+        for t in 0..tenants {
+            let base = t * per_tenant;
+            let common = &ids[base..base + self.common];
+            let mut host = common.to_vec();
+            host.extend_from_slice(&ids[base + self.common..base + per_tenant]);
+            hosts.push(host);
+            let mut exp = common.to_vec();
+            exp.sort_unstable();
+            expected.push(exp);
+        }
         let mut clients = Vec::with_capacity(self.clients);
         for i in 0..self.clients {
-            let start = self.common + self.server_unique + i * self.client_unique;
-            let mut set = common.to_vec();
+            let base = (i % tenants) * per_tenant;
+            let start = tenants * per_tenant + i * self.client_unique;
+            let mut set = ids[base..base + self.common].to_vec();
             set.extend_from_slice(&ids[start..start + self.client_unique]);
             clients.push(set);
         }
-        let mut expected = common.to_vec();
-        expected.sort_unstable();
-        (host, clients, expected)
+        (hosts, clients, expected)
     }
 
-    /// The `Setx` endpoint this workload runs under — used for the **host** set by
-    /// `commonsense serve` and for every client here, so the config fingerprints match.
-    pub fn endpoint(&self, set: &[u64]) -> Result<Setx, SetxError> {
+    /// The single-tenant projection of [`tenant_workload`](Self::tenant_workload):
+    /// `(host set, per-client sets, common core)` — the pre-tenancy shape, kept for
+    /// callers that serve one set (its id layout is unchanged, so seeded workloads
+    /// reproduce across versions).
+    pub fn workload(&self) -> (Vec<u64>, Vec<Vec<u64>>, Vec<u64>) {
+        let single = LoadgenConfig { tenants: 1, ..*self };
+        let (mut hosts, clients, mut expected) = single.tenant_workload();
+        (hosts.remove(0), clients, expected.remove(0))
+    }
+
+    /// The `Setx` endpoint this workload runs under for one tenant — used for the
+    /// **host** sets by `commonsense serve` and for every client here, so the config
+    /// fingerprints match (the namespace is deliberately outside the fingerprint).
+    pub fn endpoint_for_tenant(
+        &self,
+        set: &[u64],
+        namespace: u32,
+    ) -> Result<Setx, SetxError> {
         let diff = if self.estimate_diff {
             DiffSize::Estimated
         } else {
             DiffSize::Explicit(self.true_d())
         };
-        Setx::builder(set).seed(self.seed).diff_size(diff).build()
+        Setx::builder(set).seed(self.seed).diff_size(diff).namespace(namespace).build()
+    }
+
+    /// [`endpoint_for_tenant`](Self::endpoint_for_tenant) for tenant 0 (the
+    /// pre-tenancy API).
+    pub fn endpoint(&self, set: &[u64]) -> Result<Setx, SetxError> {
+        self.endpoint_for_tenant(set, 0)
     }
 }
 
 /// What the fleet did. `verified` is the headline: every session's intersection equaled
-/// the exactly-known answer.
+/// the exactly-known answer for its tenant.
 #[derive(Clone, Debug, Default)]
 pub struct LoadgenReport {
     /// Sessions that completed with the correct intersection.
@@ -112,6 +155,9 @@ pub struct LoadgenReport {
     pub sessions_failed: usize,
     /// `Busy` rejections observed (including ones later resolved by a retry).
     pub busy_rejections: usize,
+    /// Back-off retries actually performed (a rejection past the retry budget is
+    /// counted in `busy_rejections` but not here).
+    pub retries: usize,
     /// Human-readable description of every failure, `client=<i> round=<r>: <why>`.
     pub failures: Vec<String>,
     /// Client-observed conversation bytes, all sessions.
@@ -139,7 +185,8 @@ impl LoadgenReport {
 
 /// Run the fleet against a listening server (typically a [`super::SetxServer`] — but any
 /// endpoint speaking the protocol works). Spawns `cfg.clients` OS threads; blocks until
-/// every client finishes all its rounds.
+/// every client finishes all its rounds. With `cfg.tenants > 1` the server must have
+/// tenants `0..tenants` resident (e.g. via [`super::ServerHandle::add_tenant`]).
 pub fn run(addr: impl ToSocketAddrs, cfg: &LoadgenConfig) -> LoadgenReport {
     if cfg.clients == 0 || cfg.rounds == 0 {
         // A zero-session fleet must not vacuously report `verified()`.
@@ -158,14 +205,19 @@ pub fn run(addr: impl ToSocketAddrs, cfg: &LoadgenConfig) -> LoadgenReport {
             }
         }
     };
-    let (_host, client_sets, expected) = cfg.workload();
+    let tenants = cfg.tenants.max(1);
+    let (_hosts, client_sets, expected) = cfg.tenant_workload();
     let started = Instant::now();
     let outcomes: Vec<ClientOutcome> = std::thread::scope(|scope| {
         let expected = &expected;
         let handles: Vec<_> = client_sets
             .iter()
             .enumerate()
-            .map(|(i, set)| scope.spawn(move || run_client(addr, cfg, i, set, expected)))
+            .map(|(i, set)| {
+                let exp = &expected[i % tenants];
+                let ns = (i % tenants) as u32;
+                scope.spawn(move || run_client(addr, cfg, i, ns, set, exp))
+            })
             .collect();
         handles.into_iter().map(|h| h.join().expect("loadgen client thread")).collect()
     });
@@ -174,6 +226,7 @@ pub fn run(addr: impl ToSocketAddrs, cfg: &LoadgenConfig) -> LoadgenReport {
         report.sessions_ok += outcome.ok;
         report.sessions_failed += outcome.failed;
         report.busy_rejections += outcome.busy;
+        report.retries += outcome.retries;
         report.total_bytes += outcome.bytes;
         report.failures.extend(outcome.failures);
     }
@@ -185,6 +238,7 @@ struct ClientOutcome {
     ok: usize,
     failed: usize,
     busy: usize,
+    retries: usize,
     bytes: usize,
     failures: Vec<String>,
 }
@@ -193,11 +247,12 @@ fn run_client(
     addr: std::net::SocketAddr,
     cfg: &LoadgenConfig,
     index: usize,
+    namespace: u32,
     set: &[u64],
     expected: &[u64],
 ) -> ClientOutcome {
     let mut out = ClientOutcome::default();
-    let endpoint = match cfg.endpoint(set) {
+    let endpoint = match cfg.endpoint_for_tenant(set, namespace) {
         Ok(e) => e,
         Err(e) => {
             out.failed = cfg.rounds;
@@ -229,8 +284,11 @@ fn run_client(
     out
 }
 
-/// One sync, retrying admission rejections with the server's back-off hint (plus a
-/// deterministic per-client jitter so a rejected burst does not re-arrive as a burst).
+/// One sync, retrying admission rejections under capped exponential back-off: the k-th
+/// retry waits `hint·2^(k−1)` milliseconds (hint floored at 10 ms, wait capped at 2 s)
+/// plus a deterministic per-client jitter hashed from `(client, attempt, seed)` — so a
+/// rejected burst neither re-arrives as a burst nor synchronizes across runs, and a
+/// given fleet's retry schedule is exactly reproducible from its seed.
 fn sync_once(
     addr: std::net::SocketAddr,
     cfg: &LoadgenConfig,
@@ -238,20 +296,24 @@ fn sync_once(
     index: usize,
     out: &mut ClientOutcome,
 ) -> Result<crate::setx::SetxReport, SetxError> {
-    let mut attempt = 0;
+    let mut attempt = 0usize;
     loop {
         let mut transport = TcpTransport::connect(addr)?;
         match endpoint.run(&mut transport) {
-            Err(SetxError::ServerBusy { retry_after_ms }) => {
+            Err(SetxError::ServerBusy { retry_after_ms, namespace }) => {
                 out.busy += 1;
                 attempt += 1;
                 if attempt > cfg.busy_retries {
-                    return Err(SetxError::ServerBusy { retry_after_ms });
+                    return Err(SetxError::ServerBusy { retry_after_ms, namespace });
                 }
-                let jitter = (index as u64 % 7) * 3;
-                std::thread::sleep(Duration::from_millis(
-                    u64::from(retry_after_ms).max(10) + jitter,
-                ));
+                out.retries += 1;
+                let base = u64::from(retry_after_ms).max(10);
+                let backoff =
+                    base.saturating_mul(1u64 << (attempt - 1).min(6)).min(2_000);
+                let jitter =
+                    split_mix64((index as u64) ^ ((attempt as u64) << 32) ^ cfg.seed)
+                        % (base / 2 + 1);
+                std::thread::sleep(Duration::from_millis(backoff + jitter));
             }
             other => return other,
         }
@@ -289,11 +351,49 @@ mod tests {
     }
 
     #[test]
+    fn tenant_workload_partitions_are_disjoint() {
+        let cfg = LoadgenConfig {
+            clients: 5,
+            tenants: 2,
+            common: 300,
+            client_unique: 10,
+            server_unique: 20,
+            ..LoadgenConfig::default()
+        };
+        let (hosts, clients, expected) = cfg.tenant_workload();
+        assert_eq!(hosts.len(), 2);
+        assert_eq!(expected.len(), 2);
+        assert_eq!(clients.len(), 5);
+        // Tenant pools never overlap.
+        assert!(synth::intersect(&hosts[0], &hosts[1]).is_empty());
+        for (i, c) in clients.iter().enumerate() {
+            let t = i % 2;
+            assert_eq!(c.len(), 310);
+            assert_eq!(synth::intersect(c, &hosts[t]), expected[t], "client {i}");
+            assert_eq!(synth::difference(c, &hosts[t]).len(), 10);
+            // A client shares nothing with the *other* tenant's host set.
+            assert!(synth::intersect(c, &hosts[1 - t]).is_empty(), "client {i}");
+        }
+        // The single-tenant projection is exactly the legacy layout.
+        let single = LoadgenConfig { tenants: 1, ..cfg };
+        let (host, lc, exp) = single.workload();
+        let (th, tc, te) = single.tenant_workload();
+        assert_eq!(host, th[0]);
+        assert_eq!(lc, tc);
+        assert_eq!(exp, te[0]);
+    }
+
+    #[test]
     fn endpoints_share_a_fingerprint() {
         let cfg = LoadgenConfig { common: 200, ..LoadgenConfig::default() };
         let (host, clients, _) = cfg.workload();
         let server = cfg.endpoint(&host).unwrap();
         let client = cfg.endpoint(&clients[0]).unwrap();
         assert_eq!(server.config().fingerprint(), client.config().fingerprint());
+        // Namespaces route, they don't re-shape the protocol: a tenant-3 client still
+        // fingerprint-matches a tenant-0 server endpoint.
+        let t3 = cfg.endpoint_for_tenant(&clients[0], 3).unwrap();
+        assert_eq!(server.config().fingerprint(), t3.config().fingerprint());
+        assert_eq!(t3.config().namespace(), 3);
     }
 }

@@ -1,36 +1,52 @@
-//! The multi-client SetX reconciliation daemon: one hot host set, any number of
-//! concurrent TCP clients.
+//! The multi-tenant SetX reconciliation daemon: many resident host sets, any number of
+//! concurrent TCP clients, driven by a fixed pool of readiness-based poller threads.
 //!
 //! [`crate::coordinator::tcp::serve`] accepts exactly one connection, runs one session,
-//! and returns — the right shape for a point-to-point sync, useless for the paper's
-//! deployment scenarios (block propagation, data-center sync), where a long-lived
-//! service holds the authoritative set and reconciles a fleet against it. This module is
-//! that service, assembled from the pieces the earlier layers were built to enable:
+//! and returns — the right shape for a point-to-point debug sync, useless for the
+//! paper's deployment scenarios (block propagation, data-center sync), where a
+//! long-lived service holds authoritative sets and reconciles a fleet against them.
+//! This module is that service, assembled from the pieces the earlier layers were built
+//! to enable:
 //!
-//! * **[`SetxServer`]** — an accept loop feeding a bounded worker pool (the same
-//!   atomic-counter + `peak_workers` discipline as [`crate::coordinator::parallel`]);
-//!   each worker drives a sans-io [`crate::setx`] endpoint over a
-//!   [`TcpTransport`] with per-connection session IDs, OS-level read/write timeouts
-//!   (one stalled client must never wedge a worker forever), and graceful shutdown
-//!   ([`ServerHandle::shutdown`] drains queued sessions before returning).
+//! * **The readiness driver** — there is no thread-per-connection and no blocking
+//!   transport on the server side. Each of the `workers` poller threads owns a slice of
+//!   the live connections and multiplexes them with `poll(2)` over non-blocking
+//!   sockets; every connection is a small state machine
+//!   ([`Conn`](self)) wrapping a sans-io [`crate::setx`] endpoint, fed whole frames by
+//!   the incremental framer ([`frame_extent`]) and drained through a per-connection
+//!   write buffer. Liveness is enforced by *per-connection deadlines* (refreshed on
+//!   progress) instead of OS read/write timeouts, so one stalled client costs a poll
+//!   slot, never a thread. All pollers poll the shared listener; whoever wakes first
+//!   accepts (the herd is the load balancer). Shutdown is graceful: the listener stops
+//!   being polled, resident connections drain to completion, then the pollers exit.
+//! * **Multi-tenancy** — the client's `EstHello` carries a `namespace` id (absent on
+//!   the wire for tenant 0, so pre-namespace clients interoperate unchanged) that
+//!   routes the connection to one of many resident tenants. Each tenant owns its host
+//!   set, its own [`DecoderPool`] and [`SketchStore`] shard, a concurrency quota, and a
+//!   counter shard ([`TenantStats`]); [`ServerHandle::add_tenant`] /
+//!   [`remove_tenant`](ServerHandle::remove_tenant) /
+//!   [`replace_tenant_set`](ServerHandle::replace_tenant_set) manage the map at
+//!   runtime. An unknown namespace or an over-quota tenant answers a typed
+//!   [`Msg::Busy`] carrying the tenant id (surfaced client-side as
+//!   [`SetxError::ServerBusy`]).
 //! * **[`DecoderPool`]** — PR 3's one-slot decoder cache generalized into a shared,
 //!   capacity-bounded LRU pool keyed by exact matrix geometry, so the dominant
 //!   per-session cost (decoder construction over the host set) is paid once per
-//!   geometry instead of once per connection.
+//!   geometry instead of once per connection — now one shard per tenant.
 //! * **[`SketchStore`]** — the encode-side sibling of the decoder pool: the host set's
 //!   sketch per negotiated geometry, encoded once (single-flight) and checked out in
-//!   O(1) by every later session instead of re-encoded O(m·n) per connection;
-//!   [`ServerHandle::replace_set`] maintains resident sketches *incrementally* via §4
-//!   streaming ±1 updates over the set diff.
-//! * **Admission control** — at `max_inflight_sessions` live sessions, new connections
-//!   get a typed [`Msg::Busy`] frame (surfaced client-side as
-//!   [`SetxError::ServerBusy`] with a retry hint) instead of a hung or reset socket.
-//! * **[`ServerStats`]** — sessions served/failed/rejected, per-phase wire bytes,
-//!   decoder-pool hit rate, and worker high-water marks, snapshotable at any time and
-//!   serializable as one flat JSON record.
-//! * **[`loadgen`]** — a verifying load generator (N concurrent clients with perturbed
-//!   sets, every returned intersection checked against the exact answer), which also
-//!   backs the `commonsense loadgen` CLI and the `server_throughput` bench.
+//!   O(1) by every later session; set replacement maintains resident sketches
+//!   *incrementally* via §4 streaming ±1 updates — also one shard per tenant.
+//! * **Admission control** — two gates: a global `max_inflight_sessions` cap applied at
+//!   accept (before any protocol work), and a per-tenant quota applied at routing.
+//!   Both answer with `Busy` instead of a hung or reset socket.
+//! * **[`ServerStats`]** — global counters plus one [`TenantStats`] shard per resident
+//!   tenant (shard sums + the `unrouted_*` remainders equal the globals), snapshotable
+//!   at any time and serializable as one flat JSON record.
+//! * **[`loadgen`]** — a verifying load generator (N concurrent clients across M
+//!   tenants with perturbed sets, every returned intersection checked against the exact
+//!   answer, capped-exponential retry on `Busy`), which also backs the
+//!   `commonsense loadgen` CLI and the `server_throughput` bench.
 //!
 //! ```no_run
 //! use commonsense::server::SetxServer;
@@ -38,8 +54,13 @@
 //!
 //! let host_set: Vec<u64> = (0..100_000).collect();
 //! let endpoint = Setx::builder(&host_set).build().unwrap();
-//! let server = SetxServer::builder(endpoint).workers(4).bind("0.0.0.0:7700").unwrap();
-//! // ... clients run `Setx::run` over `TcpTransport::connect` against us ...
+//! let server = SetxServer::builder(endpoint)
+//!     .workers(4)
+//!     .tenant(7, (500_000..600_000).collect())
+//!     .bind("0.0.0.0:7700")
+//!     .unwrap();
+//! // ... clients run `Setx::run` over `TcpTransport::connect` against us; a client
+//! // built with `.namespace(7)` reconciles against tenant 7's set ...
 //! let stats = server.shutdown();
 //! println!("{}", stats.to_json());
 //! ```
@@ -51,21 +72,46 @@ mod stats;
 
 pub use pool::{DecoderPool, PoolStats};
 pub use sketch_store::{SketchStore, SketchStoreStats};
-pub use stats::ServerStats;
+pub use stats::{ServerStats, TenantStats};
 
 use crate::decoder::{DecoderCache, DecoderStore};
 use crate::protocol::wire::Msg;
-use crate::setx::endpoint::Endpoint;
-use crate::setx::transport::{TcpTransport, Transport};
+use crate::setx::endpoint::{Endpoint, Step};
+use crate::setx::transport::frame_extent;
 use crate::setx::{Setx, SetxConfig, SetxError, SetxReport};
 use crate::sketch::SketchSource;
-use stats::StatsInner;
+use stats::{StatsInner, TenantCounters};
+use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// poll(2) FFI — the only readiness primitive the driver needs, hand-rolled to
+// keep the crate dependency-free.
+// ---------------------------------------------------------------------------
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+}
 
 /// Builder for a [`SetxServer`]; obtain via [`SetxServer::builder`]. Every knob has a
 /// service-shaped default, so `SetxServer::builder(endpoint).bind(addr)` is a complete
@@ -82,49 +128,55 @@ pub struct ServerBuilder {
     build_threads: usize,
     encode_threads: usize,
     busy_retry_hint_ms: u32,
+    tenant_quota: Option<usize>,
+    extra_tenants: Vec<(u32, Vec<u64>)>,
 }
 
 impl ServerBuilder {
-    /// Worker threads driving sessions (default 4; clamped to ≥ 1). This is the
-    /// concurrency bound: at most `workers` sessions make protocol progress at once,
-    /// the rest queue (but still count against admission).
+    /// Poller threads driving connections (default 4; clamped to ≥ 1). This is the
+    /// concurrency bound: at most `workers` threads make protocol progress at once;
+    /// each multiplexes its share of the live connections by readiness.
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
         self
     }
 
-    /// Admission cap: connections arriving while this many sessions are live (queued or
-    /// being served) are turned away with a `Busy` frame (default 64; clamped ≥ 1).
+    /// Global admission cap: connections arriving while this many are live are turned
+    /// away with a `Busy` frame before any protocol work (default 64; clamped ≥ 1).
     pub fn max_inflight_sessions(mut self, cap: usize) -> Self {
         self.max_inflight = cap.max(1);
         self
     }
 
-    /// Decoder-pool capacity (default `4 × workers`; `0` disables pooling — every
-    /// session then builds its decoders from scratch).
+    /// Per-tenant decoder-pool capacity (default `4 × workers`; `0` disables pooling —
+    /// every session then builds its decoders from scratch).
     pub fn pool_capacity(mut self, capacity: usize) -> Self {
         self.pool_capacity = Some(capacity);
         self
     }
 
-    /// Host-sketch-store capacity — resident per-geometry sketches of the host set
-    /// (default 8; `0` disables the store, the ablation shape: every session re-encodes
-    /// the host set). See [`SketchStore`].
+    /// Per-tenant host-sketch-store capacity — resident per-geometry sketches of the
+    /// tenant's set (default 8; `0` disables the store, the ablation shape: every
+    /// session re-encodes the host set). See [`SketchStore`].
     pub fn sketch_store_capacity(mut self, capacity: usize) -> Self {
         self.sketch_store_capacity = Some(capacity);
         self
     }
 
-    /// OS-level read/write timeouts applied to every accepted connection (default 30 s
-    /// each — sane for a service; `None` means block forever, which re-opens the
-    /// wedged-worker failure mode and is only sensible for debugging).
+    /// Per-connection inactivity deadline, taken as `read.or(write)` (default 30 s).
+    /// The deadline is refreshed whenever a connection makes read or write progress;
+    /// a connection that stalls past it is torn down with a timeout error. `None`
+    /// disables the deadline, which re-opens the parked-forever failure mode and is
+    /// only sensible for debugging. (The two-parameter shape is kept for builder
+    /// compatibility with the blocking-transport era, which mapped them onto OS socket
+    /// timeouts.)
     pub fn timeouts(mut self, read: Option<Duration>, write: Option<Duration>) -> Self {
         self.read_timeout = read;
         self.write_timeout = write;
         self
     }
 
-    /// Decoder *construction* threads per session (default 1: the worker pool already
+    /// Decoder *construction* threads per session (default 1: the poller pool already
     /// provides the server's parallelism, and nested construction pools would
     /// oversubscribe the machine `workers × cores`-fold; `0` = auto).
     pub fn build_threads(mut self, threads: usize) -> Self {
@@ -133,7 +185,7 @@ impl ServerBuilder {
     }
 
     /// Sketch *encode* threads per session (default 1, for the same oversubscription
-    /// reason as [`ServerBuilder::build_threads`]; `0` = auto). The host-sketch store's
+    /// reason as [`ServerBuilder::build_threads`]; `0` = auto). Each tenant store's
     /// cold encodes run under the checking-out session's setting, so this governs them
     /// too.
     pub fn encode_threads(mut self, threads: usize) -> Self {
@@ -147,95 +199,172 @@ impl ServerBuilder {
         self
     }
 
-    /// Bind the listener and start the accept loop + worker pool. The returned handle
-    /// is the server: drop it (or call [`ServerHandle::shutdown`]) to stop.
+    /// Per-tenant concurrency quota: at most this many routed sessions per tenant at
+    /// once, the rest answered `Busy` with the tenant id (default: the global
+    /// admission cap, i.e. no per-tenant throttling; clamped ≥ 1). Applies to every
+    /// tenant, including ones added at runtime.
+    pub fn tenant_quota(mut self, quota: usize) -> Self {
+        self.tenant_quota = Some(quota.max(1));
+        self
+    }
+
+    /// Pre-register a tenant: clients whose `EstHello` carries `namespace` reconcile
+    /// against `set`. Tenant 0 is always the builder endpoint's set; registering
+    /// namespace 0 here replaces it. Tenants can also be added after bind via
+    /// [`ServerHandle::add_tenant`].
+    pub fn tenant(mut self, namespace: u32, set: Vec<u64>) -> Self {
+        self.extra_tenants.push((namespace, set));
+        self
+    }
+
+    /// Bind the listener and start the poller pool. The returned handle is the server:
+    /// drop it (or call [`ServerHandle::shutdown`]) to stop.
     pub fn bind(self, addr: impl ToSocketAddrs) -> Result<ServerHandle, SetxError> {
         let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let pool_capacity = self.pool_capacity.unwrap_or(4 * self.workers);
-        let pool =
-            (pool_capacity > 0).then(|| Arc::new(DecoderPool::new(pool_capacity)));
+        let store_capacity = self.sketch_store_capacity.unwrap_or(8);
+        let tenant_quota = self.tenant_quota.unwrap_or(self.max_inflight).max(1);
         let mut cfg = *self.endpoint.config();
         // Per-session encodes follow the server's knob, not the endpoint builder's: the
-        // worker pool is the daemon's parallelism (a local setting — not fingerprinted).
+        // poller pool is the daemon's parallelism (a local setting — not fingerprinted).
         cfg.encode_threads = self.encode_threads;
-        let set = Arc::new(self.endpoint.set().to_vec());
-        let store_capacity = self.sketch_store_capacity.unwrap_or(8);
-        let sketch_store = (store_capacity > 0)
-            .then(|| Arc::new(SketchStore::new(store_capacity, Arc::clone(&set))));
+
+        let mut tenants = HashMap::new();
+        let set0 = Arc::new(self.endpoint.set().to_vec());
+        tenants.insert(
+            0u32,
+            TenantState::new(0, set0, pool_capacity, store_capacity, tenant_quota),
+        );
+        for (ns, set) in self.extra_tenants {
+            tenants.insert(
+                ns,
+                TenantState::new(ns, Arc::new(set), pool_capacity, store_capacity, tenant_quota),
+            );
+        }
+
         let shared = Arc::new(Shared {
             cfg,
-            set: Mutex::new(set),
-            pool,
-            sketch_store,
+            tenants: RwLock::new(tenants),
             stats: StatsInner::default(),
             shutdown: AtomicBool::new(false),
             last_failure: Mutex::new(None),
             next_session_id: AtomicU64::new(1),
-            read_timeout: self.read_timeout,
-            write_timeout: self.write_timeout,
+            session_timeout: self.read_timeout.or(self.write_timeout),
             build_threads: self.build_threads,
             max_inflight: self.max_inflight,
             workers: self.workers,
             busy_retry_hint_ms: self.busy_retry_hint_ms,
+            pool_capacity,
+            store_capacity,
+            tenant_quota,
         });
 
-        let (tx, rx) = channel::<(TcpStream, u64)>();
-        let rx = Arc::new(Mutex::new(rx));
-        let worker_handles: Vec<JoinHandle<()>> = (0..self.workers)
-            .map(|w| {
-                let shared = Arc::clone(&shared);
-                let rx = Arc::clone(&rx);
-                std::thread::Builder::new()
-                    .name(format!("setx-worker-{w}"))
-                    .spawn(move || worker_loop(&shared, &rx))
-                    .expect("spawn server worker")
-            })
-            .collect();
-        let accept_handle = {
+        let listener = Arc::new(listener);
+        let mut pollers = Vec::with_capacity(self.workers);
+        let mut wakers = Vec::with_capacity(self.workers);
+        for w in 0..self.workers {
+            let (wake_tx, wake_rx) = UnixStream::pair()?;
+            wake_rx.set_nonblocking(true)?;
+            wakers.push(wake_tx);
             let shared = Arc::clone(&shared);
-            std::thread::Builder::new()
-                .name("setx-accept".to_string())
-                .spawn(move || accept_loop(&shared, &listener, tx))
-                .expect("spawn server accept loop")
-        };
-        Ok(ServerHandle {
-            shared,
-            addr,
-            accept: Some(accept_handle),
-            workers: worker_handles,
-        })
+            let listener = Arc::clone(&listener);
+            pollers.push(
+                std::thread::Builder::new()
+                    .name(format!("setx-poller-{w}"))
+                    .spawn(move || poller_loop(&shared, &listener, &wake_rx))
+                    .expect("spawn server poller"),
+            );
+        }
+        Ok(ServerHandle { shared, addr, pollers, wakers })
     }
 }
 
-/// State shared by the accept loop, the workers, and the handle.
-struct Shared {
-    cfg: SetxConfig,
-    /// The (mutable) host set. Each session snapshots the current `Arc` at start;
-    /// [`ServerHandle::replace_set`] swaps it atomically, so in-flight sessions keep
-    /// reconciling against the set they started with.
+/// One resident tenant: its host set, its private pool/store shards, its quota, and
+/// its counter shard. Connections hold an `Arc` to the tenant they routed to, so
+/// [`ServerHandle::remove_tenant`] never tears down in-flight sessions.
+struct TenantState {
+    namespace: u32,
+    /// The (mutable) host set. Each session snapshots the current `Arc` at routing;
+    /// replacement swaps it atomically, so in-flight sessions keep reconciling against
+    /// the set they started with.
     set: Mutex<Arc<Vec<u64>>>,
     /// `None` when pooling is disabled.
     pool: Option<Arc<DecoderPool>>,
     /// Host-sketch store (encode-side reuse); `None` when disabled (the ablation).
-    sketch_store: Option<Arc<SketchStore>>,
+    store: Option<Arc<SketchStore>>,
+    quota: usize,
+    counters: TenantCounters,
+}
+
+impl TenantState {
+    fn new(
+        namespace: u32,
+        set: Arc<Vec<u64>>,
+        pool_capacity: usize,
+        store_capacity: usize,
+        quota: usize,
+    ) -> Arc<TenantState> {
+        Arc::new(TenantState {
+            namespace,
+            pool: (pool_capacity > 0).then(|| Arc::new(DecoderPool::new(pool_capacity))),
+            store: (store_capacity > 0)
+                .then(|| Arc::new(SketchStore::new(store_capacity, Arc::clone(&set)))),
+            set: Mutex::new(set),
+            quota,
+            counters: TenantCounters::default(),
+        })
+    }
+
+    fn current_set(&self) -> Arc<Vec<u64>> {
+        Arc::clone(&self.set.lock().expect("tenant set lock poisoned"))
+    }
+
+    /// Replace the tenant's set. One critical section for both views: concurrent
+    /// replacements must not interleave the store update and the set swap in opposite
+    /// orders, or the store would validate sessions against a different snapshot than
+    /// they hold and bypass (fresh-encode) every checkout until the next replacement.
+    /// Lock order is always set-lock → store-lock (the store's other users never hold
+    /// both).
+    fn replace(&self, set: Arc<Vec<u64>>) {
+        let mut guard = self.set.lock().expect("tenant set lock poisoned");
+        if let Some(store) = &self.store {
+            store.replace_set(Arc::clone(&set));
+        }
+        *guard = set;
+    }
+}
+
+/// State shared by the poller threads and the handle.
+struct Shared {
+    cfg: SetxConfig,
+    tenants: RwLock<HashMap<u32, Arc<TenantState>>>,
     stats: StatsInner,
     shutdown: AtomicBool,
     /// Most recent failed session: `(session_id, error)` — the minimal breadcrumb an
     /// operator needs before turning on real logging.
     last_failure: Mutex<Option<(u64, String)>>,
     next_session_id: AtomicU64,
-    read_timeout: Option<Duration>,
-    write_timeout: Option<Duration>,
+    /// Per-connection inactivity deadline (refreshed on progress); `None` = no limit.
+    session_timeout: Option<Duration>,
     build_threads: usize,
     max_inflight: usize,
     workers: usize,
     busy_retry_hint_ms: u32,
+    pool_capacity: usize,
+    store_capacity: usize,
+    tenant_quota: usize,
 }
 
 impl Shared {
-    fn current_set(&self) -> Arc<Vec<u64>> {
-        Arc::clone(&self.set.lock().expect("host set lock poisoned"))
+    fn tenant(&self, namespace: u32) -> Option<Arc<TenantState>> {
+        self.tenants.read().expect("tenant map poisoned").get(&namespace).cloned()
+    }
+
+    fn record_failure(&self, sid: u64, err: &SetxError) {
+        *self.last_failure.lock().expect("failure lock poisoned") =
+            Some((sid, err.to_string()));
     }
 }
 
@@ -245,7 +374,7 @@ pub struct SetxServer;
 impl SetxServer {
     /// Start building a server around `endpoint` — a validated [`Setx`] whose config
     /// every client must match (fingerprint-checked in the handshake, exactly as in a
-    /// point-to-point run) and whose set becomes the initial host set.
+    /// point-to-point run) and whose set becomes tenant 0's initial host set.
     pub fn builder(endpoint: Setx) -> ServerBuilder {
         ServerBuilder {
             endpoint,
@@ -258,6 +387,8 @@ impl SetxServer {
             build_threads: 1,
             encode_threads: 1,
             busy_retry_hint_ms: 50,
+            tenant_quota: None,
+            extra_tenants: Vec::new(),
         }
     }
 }
@@ -267,8 +398,8 @@ impl SetxServer {
 pub struct ServerHandle {
     shared: Arc<Shared>,
     addr: SocketAddr,
-    accept: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    pollers: Vec<JoinHandle<()>>,
+    wakers: Vec<UnixStream>,
 }
 
 impl ServerHandle {
@@ -277,32 +408,62 @@ impl ServerHandle {
         self.addr
     }
 
-    /// Point-in-time stats snapshot.
+    /// Point-in-time stats snapshot: globals plus one shard per resident tenant
+    /// (sorted by namespace); the `pool`/`sketch_store` blocks are sums across shards.
     pub fn stats(&self) -> ServerStats {
         let s = &self.shared.stats;
+        let mut tenants: Vec<TenantStats> = {
+            let map = self.shared.tenants.read().expect("tenant map poisoned");
+            map.values()
+                .map(|t| {
+                    t.counters.snapshot(
+                        t.namespace,
+                        t.quota,
+                        t.pool.as_ref().map(|p| p.stats()).unwrap_or_default(),
+                        t.store.as_ref().map(|st| st.stats()).unwrap_or_default(),
+                    )
+                })
+                .collect()
+        };
+        tenants.sort_by_key(|t| t.namespace);
+        let mut pool = PoolStats::default();
+        let mut store = SketchStoreStats::default();
+        for t in &tenants {
+            pool.hits += t.pool.hits;
+            pool.misses += t.pool.misses;
+            pool.evictions += t.pool.evictions;
+            pool.parked += t.pool.parked;
+            pool.capacity += t.pool.capacity;
+            store.hits += t.sketch_store.hits;
+            store.misses += t.sketch_store.misses;
+            store.stale_bypasses += t.sketch_store.stale_bypasses;
+            store.encodes += t.sketch_store.encodes;
+            store.incremental_updates += t.sketch_store.incremental_updates;
+            store.full_rebuilds += t.sketch_store.full_rebuilds;
+            store.resident += t.sketch_store.resident;
+            store.capacity += t.sketch_store.capacity;
+        }
         ServerStats {
             sessions_accepted: s.sessions_accepted.load(Ordering::Relaxed),
             sessions_served: s.sessions_served.load(Ordering::Relaxed),
             sessions_failed: s.sessions_failed.load(Ordering::Relaxed),
             sessions_rejected: s.sessions_rejected.load(Ordering::Relaxed),
+            unrouted_failed: s.unrouted_failed.load(Ordering::Relaxed),
+            unrouted_rejected: s.unrouted_rejected.load(Ordering::Relaxed),
             phase_bytes: [
                 s.phase_bytes[0].load(Ordering::Relaxed),
                 s.phase_bytes[1].load(Ordering::Relaxed),
                 s.phase_bytes[2].load(Ordering::Relaxed),
                 s.phase_bytes[3].load(Ordering::Relaxed),
             ],
-            pool: self.shared.pool.as_ref().map(|p| p.stats()).unwrap_or_default(),
-            sketch_store: self
-                .shared
-                .sketch_store
-                .as_ref()
-                .map(|s| s.stats())
-                .unwrap_or_default(),
+            pool,
+            sketch_store: store,
             inflight: s.inflight.load(Ordering::SeqCst),
             peak_inflight: s.peak_inflight.load(Ordering::Relaxed),
             peak_workers: s.peak_workers.load(Ordering::Relaxed),
             workers: self.shared.workers,
             max_inflight_sessions: self.shared.max_inflight,
+            tenants,
         }
     }
 
@@ -311,30 +472,61 @@ impl ServerHandle {
         self.shared.last_failure.lock().expect("failure lock poisoned").clone()
     }
 
-    /// Replace the host set. In-flight sessions finish against the set they started
-    /// with; new sessions reconcile against the replacement. Decoders parked in the
-    /// pool for the old set become unreachable (their cache keys no longer validate)
-    /// and age out by LRU; resident host sketches are *maintained* across the change —
-    /// the [`SketchStore`] applies §4 streaming ±1 updates over the set diff (or
-    /// re-encodes when the diff is larger than the set), so the encode-side cache stays
-    /// warm through churn. In-flight sessions holding the old snapshot are detected by
-    /// the store and served their own set's sketch, never the replacement's.
-    pub fn replace_set(&self, set: Vec<u64>) {
-        let set = Arc::new(set);
-        // One critical section for both views: concurrent `replace_set` calls must not
-        // interleave the store update and the set swap in opposite orders, or the store
-        // would validate sessions against a different snapshot than they hold and
-        // bypass (fresh-encode) every checkout until the next replacement. Lock order
-        // is always set-lock → store-lock (the store's other users never hold both).
-        let mut guard = self.shared.set.lock().expect("host set lock poisoned");
-        if let Some(store) = &self.shared.sketch_store {
-            store.replace_set(Arc::clone(&set));
+    /// Register a new tenant at runtime. Returns `false` (and changes nothing) if the
+    /// namespace is already resident. The tenant gets its own pool/store shards sized
+    /// by the builder's capacities and the builder's quota.
+    pub fn add_tenant(&self, namespace: u32, set: Vec<u64>) -> bool {
+        let mut map = self.shared.tenants.write().expect("tenant map poisoned");
+        if map.contains_key(&namespace) {
+            return false;
         }
-        *guard = set;
+        map.insert(
+            namespace,
+            TenantState::new(
+                namespace,
+                Arc::new(set),
+                self.shared.pool_capacity,
+                self.shared.store_capacity,
+                self.shared.tenant_quota,
+            ),
+        );
+        true
     }
 
-    /// Graceful shutdown: stop accepting, serve every already-queued session to
-    /// completion, join all threads, and return the final stats.
+    /// Deregister a tenant. In-flight sessions of the tenant finish normally (they
+    /// hold the tenant state alive); *new* connections for the namespace are answered
+    /// `Busy`. Returns `false` if the namespace was not resident. Note the removed
+    /// shard's counters leave the [`ServerStats::tenants`] breakdown with it.
+    pub fn remove_tenant(&self, namespace: u32) -> bool {
+        self.shared.tenants.write().expect("tenant map poisoned").remove(&namespace).is_some()
+    }
+
+    /// Replace one tenant's host set. In-flight sessions finish against the set they
+    /// started with; new sessions reconcile against the replacement. Decoders parked
+    /// in the tenant's pool for the old set become unreachable (their cache keys no
+    /// longer validate) and age out by LRU; resident host sketches are *maintained*
+    /// across the change — the [`SketchStore`] applies §4 streaming ±1 updates over
+    /// the set diff (or re-encodes when the diff is larger than the set), so the
+    /// encode-side cache stays warm through churn. Returns `false` if the namespace is
+    /// not resident.
+    pub fn replace_tenant_set(&self, namespace: u32, set: Vec<u64>) -> bool {
+        match self.shared.tenant(namespace) {
+            Some(t) => {
+                t.replace(Arc::new(set));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Replace tenant 0's host set (the pre-tenancy API, kept for callers that serve a
+    /// single set).
+    pub fn replace_set(&self, set: Vec<u64>) {
+        self.replace_tenant_set(0, set);
+    }
+
+    /// Graceful shutdown: stop accepting, drain every resident connection to
+    /// completion, join the pollers, and return the final stats.
     pub fn shutdown(mut self) -> ServerStats {
         self.shutdown_inner();
         self.stats()
@@ -342,23 +534,14 @@ impl ServerHandle {
 
     fn shutdown_inner(&mut self) {
         if !self.shared.shutdown.swap(true, Ordering::SeqCst) {
-            // Unblock the accept loop: it re-checks the flag per connection, so one
-            // throwaway local dial is enough (best-effort — the loop may already be
-            // past its accept call). A wildcard bind (0.0.0.0 / ::) is not a dialable
-            // destination everywhere, so aim the wake-up at loopback on the same port.
-            let mut wake = self.addr;
-            if wake.ip().is_unspecified() {
-                wake.set_ip(match wake.ip() {
-                    std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
-                    std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
-                });
+            // One byte down each wake pipe interrupts the pollers' `poll` immediately;
+            // they re-read the flag, stop polling the listener, and drain.
+            for w in &self.wakers {
+                let mut end: &UnixStream = w;
+                let _ = end.write(&[1]);
             }
-            let _ = TcpStream::connect_timeout(&wake, Duration::from_millis(500));
         }
-        if let Some(handle) = self.accept.take() {
-            let _ = handle.join();
-        }
-        for handle in self.workers.drain(..) {
+        for handle in self.pollers.drain(..) {
             let _ = handle.join();
         }
     }
@@ -380,105 +563,475 @@ impl std::fmt::Debug for ServerHandle {
     }
 }
 
-/// The accept loop: admission control happens here, *before* a worker is occupied, so a
-/// full server answers instantly instead of queueing the connection behind the backlog.
-/// Dropping `tx` at loop exit is the workers' shutdown signal (they drain the queue
-/// first — mpsc delivers buffered jobs even after the sender is gone).
-fn accept_loop(shared: &Shared, listener: &TcpListener, tx: Sender<(TcpStream, u64)>) {
-    loop {
-        let stream = match listener.accept() {
-            Ok((stream, _peer)) => stream,
-            Err(_) if shared.shutdown.load(Ordering::SeqCst) => break,
-            Err(_) => {
-                // Transient accept error (EMFILE under fd pressure, ECONNABORTED, …):
-                // keep serving, but back off briefly — a persistent error would
-                // otherwise spin this thread at 100% CPU against the same failure.
-                std::thread::sleep(Duration::from_millis(20));
-                continue;
-            }
+// ---------------------------------------------------------------------------
+// The per-connection state machine.
+// ---------------------------------------------------------------------------
+
+enum ConnState {
+    /// Admitted; waiting for the opening `EstHello` to learn the tenant.
+    AwaitRoute,
+    /// Routed: a live sans-io endpoint pinned to its tenant.
+    Live { endpoint: Endpoint<'static>, tenant: Arc<TenantState> },
+    /// Flushing a final `Busy` frame, then closing (never routed to a session).
+    Closing,
+}
+
+struct Conn {
+    stream: TcpStream,
+    sid: u64,
+    /// Whether this connection occupies a global admission slot (rejected-at-accept
+    /// connections do not).
+    holds_slot: bool,
+    state: ConnState,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    /// Bytes of `write_buf` already written to the socket.
+    wpos: usize,
+    deadline: Option<Instant>,
+    saw_eof: bool,
+    done: Option<Result<Box<SetxReport>, SetxError>>,
+}
+
+impl Conn {
+    fn admitted(stream: TcpStream, sid: u64, timeout: Option<Duration>) -> Conn {
+        Conn {
+            stream,
+            sid,
+            holds_slot: true,
+            state: ConnState::AwaitRoute,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            wpos: 0,
+            deadline: timeout.map(|t| Instant::now() + t),
+            saw_eof: false,
+            done: None,
+        }
+    }
+
+    /// A connection turned away at accept: owes the peer one `Busy` frame, holds no
+    /// admission slot, and is given a short grace deadline to flush.
+    fn rejecting(stream: TcpStream, hint: u32, namespace: u32) -> Conn {
+        let mut conn = Conn {
+            stream,
+            sid: 0,
+            holds_slot: false,
+            state: ConnState::Closing,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            wpos: 0,
+            deadline: Some(Instant::now() + Duration::from_millis(500)),
+            saw_eof: false,
+            done: None,
         };
-        if shared.shutdown.load(Ordering::SeqCst) {
-            break; // the shutdown wake-up dial (or a late client): drop and exit
+        conn.queue(&Msg::Busy { retry_after_ms: hint, namespace });
+        conn
+    }
+
+    fn queue(&mut self, msg: &Msg) {
+        self.write_buf.extend_from_slice(&msg.to_bytes());
+    }
+
+    fn flushed(&self) -> bool {
+        self.wpos == self.write_buf.len()
+    }
+
+    /// The poll events this connection currently cares about.
+    fn interest(&self) -> i16 {
+        let mut ev = 0;
+        if self.done.is_none() && !matches!(self.state, ConnState::Closing) {
+            ev |= POLLIN;
         }
-        let inflight = shared.stats.inflight.load(Ordering::SeqCst);
-        if inflight >= shared.max_inflight {
-            reject_busy(shared, stream);
-            continue;
+        if !self.flushed() {
+            ev |= POLLOUT;
         }
-        let live = shared.stats.inflight.fetch_add(1, Ordering::SeqCst) + 1;
-        shared.stats.peak_inflight.fetch_max(live, Ordering::SeqCst);
-        shared.stats.sessions_accepted.fetch_add(1, Ordering::Relaxed);
-        let sid = shared.next_session_id.fetch_add(1, Ordering::Relaxed);
-        if tx.send((stream, sid)).is_err() {
-            // Workers are gone (shutdown race): undo the admission and stop.
-            shared.stats.inflight.fetch_sub(1, Ordering::SeqCst);
+        ev
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The readiness driver.
+// ---------------------------------------------------------------------------
+
+fn poller_loop(shared: &Arc<Shared>, listener: &TcpListener, wake: &UnixStream) {
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        let draining = shared.shutdown.load(Ordering::SeqCst);
+        if draining && conns.is_empty() {
             break;
         }
-    }
-}
+        let mut fds: Vec<PollFd> = Vec::with_capacity(conns.len() + 2);
+        fds.push(PollFd { fd: wake.as_raw_fd(), events: POLLIN, revents: 0 });
+        let listener_polled = !draining;
+        if listener_polled {
+            fds.push(PollFd { fd: listener.as_raw_fd(), events: POLLIN, revents: 0 });
+        }
+        let base = fds.len();
+        for c in &conns {
+            fds.push(PollFd { fd: c.stream.as_raw_fd(), events: c.interest(), revents: 0 });
+        }
 
-/// Answer an over-admission connection with the typed `Busy` frame (bounded write so a
-/// non-reading client cannot stall the accept thread), then close.
-fn reject_busy(shared: &Shared, stream: TcpStream) {
-    shared.stats.sessions_rejected.fetch_add(1, Ordering::Relaxed);
-    stream.set_nodelay(true).ok();
-    let mut transport = TcpTransport::from_stream(stream, false);
-    let _ = transport
-        .set_timeouts(Some(Duration::from_millis(500)), Some(Duration::from_millis(500)));
-    let _ = transport.send(&Msg::Busy { retry_after_ms: shared.busy_retry_hint_ms });
-}
-
-fn worker_loop(shared: &Shared, rx: &Mutex<Receiver<(TcpStream, u64)>>) {
-    loop {
-        // Hold the lock only for the dequeue: exactly one idle worker blocks in `recv`,
-        // the rest queue on the mutex — jobs hand off one at a time.
-        let job = rx.lock().expect("server work queue poisoned").recv();
-        let Ok((stream, sid)) = job else {
-            break; // queue closed and drained: shutdown
-        };
-        let busy = shared.stats.busy_workers.fetch_add(1, Ordering::SeqCst) + 1;
-        shared.stats.peak_workers.fetch_max(busy, Ordering::SeqCst);
-        match serve_connection(shared, stream) {
-            Ok(report) => {
-                shared.stats.sessions_served.fetch_add(1, Ordering::Relaxed);
-                shared.stats.charge_comm(&report.comm);
+        let timeout = poll_timeout(&conns);
+        let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout) };
+        if n < 0 {
+            // EINTR or a transient kernel error: re-poll.
+            continue;
+        }
+        if n > 0 {
+            let busy = shared.stats.busy_workers.fetch_add(1, Ordering::SeqCst) + 1;
+            shared.stats.peak_workers.fetch_max(busy, Ordering::SeqCst);
+            if fds[0].revents != 0 {
+                drain_wake(wake);
             }
-            Err(err) => {
-                shared.stats.sessions_failed.fetch_add(1, Ordering::Relaxed);
-                *shared.last_failure.lock().expect("failure lock poisoned") =
-                    Some((sid, err.to_string()));
+            if listener_polled && fds[1].revents != 0 {
+                accept_ready(shared, listener, &mut conns);
+            }
+            // `accept_ready` only appends, so the fd→conn index mapping of the
+            // pre-accept snapshot is still valid.
+            for i in 0..(fds.len() - base) {
+                let revents = fds[base + i].revents;
+                if revents != 0 {
+                    handle_events(shared, &mut conns[i], revents);
+                }
+            }
+            shared.stats.busy_workers.fetch_sub(1, Ordering::SeqCst);
+        }
+
+        // Close finished connections and enforce deadlines (reverse order so
+        // `swap_remove` never disturbs an unvisited index).
+        let now = Instant::now();
+        let mut j = conns.len();
+        while j > 0 {
+            j -= 1;
+            let timed_out = conns[j].deadline.map_or(false, |d| now >= d);
+            if timed_out
+                && conns[j].done.is_none()
+                && !matches!(conns[j].state, ConnState::Closing)
+            {
+                conns[j].done = Some(Err(SetxError::Io(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "per-connection deadline elapsed",
+                ))));
+            }
+            if timed_out || should_close(&conns[j]) {
+                let conn = conns.swap_remove(j);
+                finalize(shared, conn);
             }
         }
-        shared.stats.busy_workers.fetch_sub(1, Ordering::SeqCst);
-        shared.stats.inflight.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
-/// Drive one accepted connection to completion: snapshot the host set, build a facade
-/// endpoint whose decoder cache is backed by the shared pool, and pump it over the
-/// timeout-guarded transport — the exact loop `Setx::run` uses, so server sessions and
-/// point-to-point runs cannot diverge.
-fn serve_connection(shared: &Shared, stream: TcpStream) -> Result<SetxReport, SetxError> {
-    stream.set_nodelay(true).ok();
-    let mut transport = TcpTransport::from_stream(stream, false);
-    transport.set_timeouts(shared.read_timeout, shared.write_timeout)?;
-    let set = shared.current_set();
-    let mut endpoint = Endpoint::new(&shared.cfg, &set, false);
+/// Next poll timeout: the nearest connection deadline, capped at 250 ms so flag
+/// changes are observed promptly even without a wake byte.
+fn poll_timeout(conns: &[Conn]) -> i32 {
+    let mut timeout: u128 = 250;
+    if let Some(nearest) = conns.iter().filter_map(|c| c.deadline).min() {
+        let now = Instant::now();
+        let until =
+            if nearest <= now { 0 } else { nearest.duration_since(now).as_millis() + 1 };
+        timeout = timeout.min(until);
+    }
+    timeout as i32
+}
+
+fn drain_wake(wake: &UnixStream) {
+    let mut buf = [0u8; 64];
+    let mut end: &UnixStream = wake;
+    while matches!(end.read(&mut buf), Ok(n) if n > 0) {}
+}
+
+/// Accept everything the listener has ready. Global admission happens here, before any
+/// protocol work: an over-cap connection gets a `Busy` frame and (at most) a brief stay
+/// in the poll set to flush it.
+fn accept_ready(shared: &Shared, listener: &TcpListener, conns: &mut Vec<Conn>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _peer)) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            // Transient (ECONNABORTED, EMFILE, or another poller won the race): let the
+            // next readiness event retry rather than spinning here.
+            Err(_) => break,
+        };
+        stream.set_nodelay(true).ok();
+        if stream.set_nonblocking(true).is_err() {
+            continue;
+        }
+        let admitted = shared
+            .stats
+            .inflight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                (v < shared.max_inflight).then(|| v + 1)
+            });
+        match admitted {
+            Err(_) => {
+                shared.stats.reject(None);
+                let mut conn =
+                    Conn::rejecting(stream, shared.busy_retry_hint_ms, 0);
+                flush_write(&mut conn);
+                if !should_close(&conn) {
+                    conns.push(conn);
+                }
+            }
+            Ok(prev) => {
+                shared.stats.peak_inflight.fetch_max(prev + 1, Ordering::SeqCst);
+                let sid = shared.next_session_id.fetch_add(1, Ordering::Relaxed);
+                conns.push(Conn::admitted(stream, sid, shared.session_timeout));
+            }
+        }
+    }
+}
+
+/// React to one connection's readiness events: read everything available, pump whole
+/// frames through the state machine, flush the write buffer, and refresh the deadline
+/// on progress.
+fn handle_events(shared: &Shared, conn: &mut Conn, revents: i16) {
+    let mut progressed = false;
+    if conn.done.is_none() && revents & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0 {
+        progressed |= fill_read(conn);
+        pump_frames(shared, conn);
+    }
+    if !conn.flushed() {
+        progressed |= flush_write(conn);
+    }
+    if conn.saw_eof && conn.done.is_none() && !matches!(conn.state, ConnState::Closing) {
+        conn.done = Some(Err(SetxError::PeerClosed { during: "server session" }));
+    }
+    if progressed && conn.done.is_none() {
+        if let Some(t) = shared.session_timeout {
+            conn.deadline = Some(Instant::now() + t);
+        }
+    }
+}
+
+/// Drain the socket into the read buffer. Returns whether any bytes arrived.
+fn fill_read(conn: &mut Conn) -> bool {
+    let mut progressed = false;
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => {
+                conn.saw_eof = true;
+                break;
+            }
+            Ok(n) => {
+                conn.read_buf.extend_from_slice(&chunk[..n]);
+                progressed = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                if conn.done.is_none() {
+                    conn.done = Some(Err(SetxError::Io(e)));
+                }
+                break;
+            }
+        }
+    }
+    progressed
+}
+
+/// Feed every complete frame in the read buffer through the connection state machine.
+/// [`frame_extent`] distinguishes "need more bytes" from corruption, so a slow sender
+/// costs nothing and a malformed one is torn down with a typed error.
+fn pump_frames(shared: &Shared, conn: &mut Conn) {
+    while conn.done.is_none() && !matches!(conn.state, ConnState::Closing) {
+        let extent = match frame_extent(&conn.read_buf) {
+            Ok(Some(extent)) => extent,
+            Ok(None) => break,
+            Err(why) => {
+                conn.done = Some(Err(SetxError::MalformedFrame(why)));
+                break;
+            }
+        };
+        let parsed = Msg::from_bytes(&conn.read_buf[..extent]);
+        let Some((msg, used)) = parsed else {
+            conn.done = Some(Err(SetxError::MalformedFrame("unparseable frame")));
+            break;
+        };
+        if used != extent {
+            conn.done = Some(Err(SetxError::MalformedFrame("frame length mismatch")));
+            break;
+        }
+        conn.read_buf.drain(..extent);
+        match conn.state {
+            ConnState::AwaitRoute => route(shared, conn, &msg),
+            ConnState::Live { .. } => feed_live(conn, &msg),
+            ConnState::Closing => {}
+        }
+    }
+}
+
+/// First frame of an admitted connection: must be an `EstHello`; its namespace selects
+/// the tenant. On success the connection becomes a live session whose endpoint owns a
+/// snapshot of the tenant's set and borrows the tenant's pool/store shards; the same
+/// `EstHello` is then fed to the fresh endpoint (the server's own opening frames are
+/// queued first, preserving the order the blocking pump produced).
+fn route(shared: &Shared, conn: &mut Conn, msg: &Msg) {
+    let ns = match msg {
+        Msg::EstHello { namespace, .. } => *namespace,
+        _ => {
+            conn.done = Some(Err(SetxError::MalformedFrame("expected est-hello")));
+            return;
+        }
+    };
+    let Some(tenant) = shared.tenant(ns) else {
+        shared.stats.reject(None);
+        reject(shared, conn, ns);
+        return;
+    };
+    let live = tenant.counters.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+    if live > tenant.quota {
+        tenant.counters.inflight.fetch_sub(1, Ordering::SeqCst);
+        shared.stats.reject(Some(&tenant.counters));
+        reject(shared, conn, ns);
+        return;
+    }
+    shared.stats.route_accepted(&tenant.counters);
+
+    let mut cfg = shared.cfg;
+    cfg.engine.namespace = ns;
+    let mut endpoint = Endpoint::new_owned(cfg, tenant.current_set(), false);
     let mut cache = DecoderCache::with_build_threads(shared.build_threads);
-    if let Some(pool) = &shared.pool {
+    if let Some(pool) = &tenant.pool {
         cache = cache.with_shared_store(Arc::clone(pool) as Arc<dyn DecoderStore>);
     }
     endpoint.set_cache(cache);
-    if let Some(store) = &shared.sketch_store {
+    if let Some(store) = &tenant.store {
         endpoint.set_sketch_source(Arc::clone(store) as Arc<dyn SketchSource>);
     }
-    Setx::pump(&mut endpoint, &mut transport)
+    for m in endpoint.start() {
+        conn.queue(&m);
+    }
+    conn.state = ConnState::Live { endpoint, tenant };
+    feed_live(conn, msg);
+}
+
+/// Turn a connection away with a `Busy` frame carrying the tenant id, then close once
+/// the frame is flushed (bounded by a short grace deadline — a non-reading peer cannot
+/// park the slot).
+fn reject(shared: &Shared, conn: &mut Conn, namespace: u32) {
+    conn.queue(&Msg::Busy { retry_after_ms: shared.busy_retry_hint_ms, namespace });
+    conn.state = ConnState::Closing;
+    conn.deadline = Some(Instant::now() + Duration::from_millis(500));
+    flush_write(conn);
+}
+
+/// Feed one frame to a live endpoint and queue whatever it owes the peer.
+fn feed_live(conn: &mut Conn, msg: &Msg) {
+    let step = match &mut conn.state {
+        ConnState::Live { endpoint, .. } => endpoint.on_msg(msg),
+        _ => return,
+    };
+    match step {
+        Step::Send(msgs) => {
+            for m in &msgs {
+                conn.queue(m);
+            }
+        }
+        Step::Continue => {}
+        Step::Finish(msgs, report) => {
+            for m in &msgs {
+                conn.queue(m);
+            }
+            conn.done = Some(Ok(report));
+        }
+        Step::Fatal(msgs, err) => {
+            for m in &msgs {
+                conn.queue(m);
+            }
+            conn.done = Some(Err(err));
+        }
+    }
+}
+
+/// Write as much of the pending buffer as the socket accepts. A hard write failure
+/// abandons the unflushable tail (so the close is not deferred to the deadline) and
+/// records an error unless an outcome is already set. Returns whether bytes moved.
+fn flush_write(conn: &mut Conn) -> bool {
+    let mut progressed = false;
+    while conn.wpos < conn.write_buf.len() {
+        match conn.stream.write(&conn.write_buf[conn.wpos..]) {
+            Ok(0) => {
+                if conn.done.is_none() {
+                    conn.done =
+                        Some(Err(SetxError::PeerClosed { during: "server write" }));
+                }
+                conn.wpos = conn.write_buf.len();
+                break;
+            }
+            Ok(n) => {
+                conn.wpos += n;
+                progressed = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                if conn.done.is_none() {
+                    conn.done = Some(Err(SetxError::Io(e)));
+                }
+                conn.wpos = conn.write_buf.len();
+                break;
+            }
+        }
+    }
+    if conn.wpos == conn.write_buf.len() && conn.wpos > 0 {
+        conn.write_buf.clear();
+        conn.wpos = 0;
+    }
+    progressed
+}
+
+fn should_close(conn: &Conn) -> bool {
+    match (&conn.state, &conn.done) {
+        (ConnState::Closing, done) => conn.flushed() || done.is_some(),
+        (_, Some(Err(_))) => true,
+        (_, Some(Ok(_))) => conn.flushed(),
+        (_, None) => false,
+    }
+}
+
+/// Account for a closed connection: release its admission slots and charge its outcome
+/// to the right scope (tenant shard for routed sessions, the unrouted counters for
+/// connections that never reached one; `Closing` connections were already counted when
+/// rejected).
+fn finalize(shared: &Shared, conn: Conn) {
+    if conn.holds_slot {
+        shared.stats.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+    match conn.state {
+        ConnState::Closing => {}
+        ConnState::AwaitRoute => {
+            shared.stats.fail(None);
+            let err = match conn.done {
+                Some(Err(err)) => err,
+                _ => SetxError::PeerClosed { during: "routing" },
+            };
+            shared.record_failure(conn.sid, &err);
+        }
+        ConnState::Live { tenant, .. } => {
+            tenant.counters.inflight.fetch_sub(1, Ordering::SeqCst);
+            match conn.done {
+                Some(Ok(report)) => shared.stats.serve(&tenant.counters, &report.comm),
+                Some(Err(err)) => {
+                    shared.stats.fail(Some(&tenant.counters));
+                    shared.record_failure(conn.sid, &err);
+                }
+                None => {
+                    shared.stats.fail(Some(&tenant.counters));
+                    shared.record_failure(
+                        conn.sid,
+                        &SetxError::PeerClosed { during: "server session" },
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::setx::transport::TcpTransport;
 
     #[test]
     fn bind_and_shutdown_without_clients() {
@@ -491,6 +1044,8 @@ mod tests {
         assert_eq!(stats.sessions_accepted, 0);
         assert_eq!(stats.sessions_rejected, 0);
         assert_eq!(stats.workers, 2);
+        assert_eq!(stats.tenants.len(), 1);
+        assert_eq!(stats.tenants[0].namespace, 0);
     }
 
     #[test]
@@ -506,9 +1061,10 @@ mod tests {
         let report = alice.run(&mut transport).unwrap();
         assert_eq!(report.local_unique, synth::difference(&a, &b));
         assert_eq!(report.intersection, synth::intersect(&a, &b));
-        // The worker finishes asynchronously after the client's last frame lands.
+        // The poller finishes asynchronously after the client's last frame lands.
         let deadline = std::time::Instant::now() + Duration::from_secs(5);
-        while server.stats().sessions_served == 0 && std::time::Instant::now() < deadline {
+        while server.stats().sessions_served == 0 && std::time::Instant::now() < deadline
+        {
             std::thread::sleep(Duration::from_millis(10));
         }
         let stats = server.shutdown();
@@ -516,6 +1072,9 @@ mod tests {
         assert_eq!(stats.sessions_failed, 0);
         assert!(stats.total_bytes() > 0);
         assert_eq!(stats.peak_workers, 1);
+        let t0 = stats.tenant(0).expect("tenant 0 resident");
+        assert_eq!(t0.sessions_served, 1);
+        assert_eq!(t0.phase_bytes, stats.phase_bytes);
     }
 
     #[test]
@@ -536,5 +1095,33 @@ mod tests {
         let r2 = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
         assert_eq!(r2.intersection, synth::intersect(&a, &b2));
         server.shutdown();
+    }
+
+    #[test]
+    fn tenants_can_be_added_and_removed() {
+        let (a, b) = synth::overlap_pair(1_200, 15, 25, 11);
+        let host0: Vec<u64> = (10_000_000..10_001_000).collect();
+        let server = SetxServer::builder(Setx::builder(&host0).build().unwrap())
+            .workers(2)
+            .bind("127.0.0.1:0")
+            .unwrap();
+        let addr = server.local_addr();
+        assert!(server.add_tenant(7, b.clone()));
+        assert!(!server.add_tenant(7, b.clone()), "duplicate namespace must refuse");
+
+        let alice = Setx::builder(&a).namespace(7).build().unwrap();
+        let report = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+        assert_eq!(report.intersection, synth::intersect(&a, &b));
+
+        assert!(server.remove_tenant(7));
+        assert!(!server.remove_tenant(7));
+        let err = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap_err();
+        match err {
+            SetxError::ServerBusy { namespace, .. } => assert_eq!(namespace, 7),
+            other => panic!("expected ServerBusy for an evicted tenant, got {other:?}"),
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.unrouted_rejected, 1);
+        assert_eq!(stats.sessions_served, 1);
     }
 }

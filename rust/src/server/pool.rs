@@ -24,6 +24,11 @@
 //!   parking entirely (the pool-off ablation of the `server_throughput` bench).
 //! * **Counted** — hits, misses, and evictions are exposed ([`PoolStats`]) and surface
 //!   in [`crate::server::ServerStats`] as the pool hit rate.
+//! * **Sharded per tenant** — the multi-tenant server gives every tenant namespace its
+//!   own `DecoderPool` (sized by the builder's `pool_capacity`), so one tenant's churn
+//!   or eviction pressure cannot flush a neighbour's warm decoders; the global
+//!   `ServerStats` pool block is the sum over shards, with per-shard counters in each
+//!   [`crate::server::TenantStats`].
 
 use crate::decoder::{DecoderStore, GeometryKey, MpDecoder};
 use std::sync::atomic::{AtomicU64, Ordering};

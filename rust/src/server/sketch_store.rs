@@ -33,6 +33,11 @@
 //! * **LRU-bounded and counted** — `capacity` caps resident sketches (each is O(l)
 //!   i32s); hits/misses/encodes/incremental-update/rebuild counters surface in
 //!   [`crate::server::ServerStats`] and the `server_throughput` bench's store ablation.
+//! * **Sharded per tenant** — as with the decoder pool, the multi-tenant server gives
+//!   every tenant namespace its own store over its own host set, so per-tenant
+//!   `replace_tenant_set` churn maintains only that tenant's resident sketches; the
+//!   global `ServerStats` store block is the sum over shards, with per-shard counters
+//!   in each [`crate::server::TenantStats`].
 
 use crate::decoder::GeometryKey;
 use crate::matrix::CsMatrix;

@@ -1,77 +1,225 @@
-//! Server-side observability: lock-free counters aggregated across workers, snapshotted
-//! as [`ServerStats`] and serialized through the same flat-JSON conventions as the
-//! [`crate::metrics`] bench trajectory (one record per line, numeric fields only), so
-//! the `server_throughput` bench and the `commonsense serve` CLI can emit
+//! Server-side observability: lock-free counters aggregated across poller threads,
+//! snapshotted as [`ServerStats`] and serialized through the same flat-JSON conventions
+//! as the [`crate::metrics`] bench trajectory (one record per line, numeric fields only),
+//! so the `server_throughput` bench and the `commonsense serve` CLI can emit
 //! machine-readable operating points without a serde dependency.
+//!
+//! With multi-tenancy there are two accounting scopes:
+//!
+//! * **global** counters in [`StatsInner`] — every connection lands here, and
+//! * **per-tenant shards** in [`TenantCounters`] — a connection is charged to a shard
+//!   once its `EstHello` has been routed to a tenant.
+//!
+//! A connection that dies *before* routing (malformed opening frame, admission-cap
+//! rejection, unknown namespace) has no tenant; its failure/rejection is recorded in the
+//! global `unrouted_*` counters. At quiescence the shard sums plus the unrouted counters
+//! always equal the globals — both update paths go through the same helpers
+//! ([`StatsInner::route_accepted`] / [`serve`](StatsInner::serve) /
+//! [`fail`](StatsInner::fail) / [`reject`](StatsInner::reject)), and the property test
+//! below drives random sequences of them to pin the invariant.
 
 use super::pool::PoolStats;
 use super::sketch_store::SketchStoreStats;
 use crate::metrics::{CommLog, Phase};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-/// The atomics every worker/accept thread updates (shared behind one `Arc`).
+/// Charge one finished session's transcript to a per-phase byte array
+/// (shared by the global and per-tenant scopes).
+pub(crate) fn charge(phase_bytes: &[AtomicU64; 4], comm: &CommLog) {
+    for (i, &phase) in Phase::ALL.iter().enumerate() {
+        let b = comm.bytes_by_phase(phase) as u64;
+        if b > 0 {
+            phase_bytes[i].fetch_add(b, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Per-tenant counter shard. Owned by the tenant entry in the server's tenant map;
+/// every routed connection is charged here *and* to the global [`StatsInner`].
+#[derive(Default)]
+pub(crate) struct TenantCounters {
+    pub(crate) accepted: AtomicU64,
+    pub(crate) served: AtomicU64,
+    pub(crate) failed: AtomicU64,
+    pub(crate) rejected: AtomicU64,
+    pub(crate) phase_bytes: [AtomicU64; 4],
+    /// Routed, unfinished sessions of this tenant — the quota gauge.
+    pub(crate) inflight: AtomicUsize,
+}
+
+/// The atomics every poller thread updates (shared behind one `Arc`).
 #[derive(Default)]
 pub(crate) struct StatsInner {
+    /// Connections routed into a session (== served + failed + in flight, per tenant
+    /// and globally).
     pub(crate) sessions_accepted: AtomicU64,
     pub(crate) sessions_served: AtomicU64,
     pub(crate) sessions_failed: AtomicU64,
     pub(crate) sessions_rejected: AtomicU64,
+    /// Failures of connections that never reached a tenant (torn down pre-routing).
+    pub(crate) unrouted_failed: AtomicU64,
+    /// Rejections issued before routing (admission cap, unknown namespace).
+    pub(crate) unrouted_rejected: AtomicU64,
     /// Conversation bytes by protocol phase, indexed in [`Phase::ALL`] order
     /// (successful sessions only — a torn-down conversation has no agreed transcript).
     pub(crate) phase_bytes: [AtomicU64; 4],
-    /// Live sessions (accepted, not yet finished) — the admission-control gauge.
+    /// Live connections (admitted at accept, not yet closed) — the global
+    /// admission-control gauge.
     pub(crate) inflight: AtomicUsize,
     pub(crate) peak_inflight: AtomicUsize,
-    /// Workers currently driving a session; high-water mark ≤ the worker count (the
-    /// same bounded-pool regression guard `coordinator::parallel` keeps).
+    /// Poller threads currently processing readiness events; high-water mark ≤ the
+    /// poller count (the same bounded-pool regression guard `coordinator::parallel`
+    /// keeps).
     pub(crate) busy_workers: AtomicUsize,
     pub(crate) peak_workers: AtomicUsize,
 }
 
 impl StatsInner {
-    /// Charge one finished session's transcript to the per-phase byte counters.
+    /// Charge one finished session's transcript to the global per-phase byte counters.
     pub(crate) fn charge_comm(&self, comm: &CommLog) {
-        for (i, &phase) in Phase::ALL.iter().enumerate() {
-            let b = comm.bytes_by_phase(phase) as u64;
-            if b > 0 {
-                self.phase_bytes[i].fetch_add(b, Ordering::Relaxed);
+        charge(&self.phase_bytes, comm);
+    }
+
+    /// A connection's `EstHello` was routed to a tenant: count the session as accepted
+    /// in both scopes.
+    pub(crate) fn route_accepted(&self, t: &TenantCounters) {
+        self.sessions_accepted.fetch_add(1, Ordering::Relaxed);
+        t.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A routed session finished with a verified report: count it served and charge its
+    /// transcript, in both scopes.
+    pub(crate) fn serve(&self, t: &TenantCounters, comm: &CommLog) {
+        self.sessions_served.fetch_add(1, Ordering::Relaxed);
+        t.served.fetch_add(1, Ordering::Relaxed);
+        charge(&self.phase_bytes, comm);
+        charge(&t.phase_bytes, comm);
+    }
+
+    /// A session ended in a typed error. `None` = the connection never routed to a
+    /// tenant (charged to `unrouted_failed`).
+    pub(crate) fn fail(&self, t: Option<&TenantCounters>) {
+        self.sessions_failed.fetch_add(1, Ordering::Relaxed);
+        match t {
+            Some(t) => {
+                t.failed.fetch_add(1, Ordering::Relaxed);
             }
+            None => {
+                self.unrouted_failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// A connection was turned away with a `Busy` frame. `None` = rejected before
+    /// routing (admission cap, unknown namespace — charged to `unrouted_rejected`);
+    /// `Some` = a known tenant was over its quota.
+    pub(crate) fn reject(&self, t: Option<&TenantCounters>) {
+        self.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+        match t {
+            Some(t) => {
+                t.rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                self.unrouted_rejected.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// A point-in-time snapshot of one tenant's shard: routed-session outcomes, per-phase
+/// wire bytes, the quota gauge, and the tenant's private decoder-pool and
+/// host-sketch-store counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantStats {
+    /// The tenant's wire namespace id.
+    pub namespace: u32,
+    pub sessions_accepted: u64,
+    pub sessions_served: u64,
+    pub sessions_failed: u64,
+    pub sessions_rejected: u64,
+    /// Conversation bytes by phase (successful sessions), in [`Phase::ALL`] order.
+    pub phase_bytes: [u64; 4],
+    /// Routed, unfinished sessions of this tenant.
+    pub inflight: usize,
+    /// Per-tenant concurrency quota.
+    pub quota: usize,
+    /// This tenant's decoder-pool shard (zeros when disabled).
+    pub pool: PoolStats,
+    /// This tenant's host-sketch-store shard (zeros when disabled).
+    pub sketch_store: SketchStoreStats,
+}
+
+impl TenantCounters {
+    pub(crate) fn snapshot(
+        &self,
+        namespace: u32,
+        quota: usize,
+        pool: PoolStats,
+        sketch_store: SketchStoreStats,
+    ) -> TenantStats {
+        TenantStats {
+            namespace,
+            sessions_accepted: self.accepted.load(Ordering::Relaxed),
+            sessions_served: self.served.load(Ordering::Relaxed),
+            sessions_failed: self.failed.load(Ordering::Relaxed),
+            sessions_rejected: self.rejected.load(Ordering::Relaxed),
+            phase_bytes: [
+                self.phase_bytes[0].load(Ordering::Relaxed),
+                self.phase_bytes[1].load(Ordering::Relaxed),
+                self.phase_bytes[2].load(Ordering::Relaxed),
+                self.phase_bytes[3].load(Ordering::Relaxed),
+            ],
+            inflight: self.inflight.load(Ordering::Relaxed),
+            quota,
+            pool,
+            sketch_store,
         }
     }
 }
 
 /// A point-in-time snapshot of a running (or stopped) [`crate::server::SetxServer`]:
 /// admission and outcome counters, per-phase wire bytes, decoder-pool effectiveness,
-/// and the worker-pool high-water marks.
-#[derive(Clone, Copy, Debug)]
+/// the poller-pool high-water marks, and one [`TenantStats`] per resident tenant.
+///
+/// `pool` and `sketch_store` are *aggregates* summed across the tenant shards
+/// (capacities and resident counts included), preserving the pre-tenancy meaning of the
+/// flat JSON record.
+#[derive(Clone, Debug)]
 pub struct ServerStats {
-    /// Connections accepted into a session (admitted; == served + failed + in flight).
+    /// Connections routed into a session (== served + failed + in flight).
     pub sessions_accepted: u64,
     /// Sessions that completed with a verified report.
     pub sessions_served: u64,
     /// Sessions that ended in a typed error (timeout, malformed peer, decode exhaustion).
     pub sessions_failed: u64,
-    /// Connections turned away at admission with a `Busy` frame.
+    /// Connections turned away with a `Busy` frame (admission cap, unknown namespace,
+    /// or tenant quota).
     pub sessions_rejected: u64,
+    /// Failures of connections torn down before routing to a tenant.
+    pub unrouted_failed: u64,
+    /// Rejections issued before routing (admission cap, unknown namespace).
+    pub unrouted_rejected: u64,
     /// Conversation bytes by phase (successful sessions), in [`Phase::ALL`] order:
     /// handshake, sketch, residue, confirm.
     pub phase_bytes: [u64; 4],
-    /// Decoder-pool counters (all zeros when the pool is disabled).
+    /// Decoder-pool counters summed across tenant shards (all zeros when disabled).
     pub pool: PoolStats,
-    /// Host-sketch-store counters (all zeros when the store is disabled): hits are
-    /// whole host-set encodes skipped, incremental updates are resident sketches
-    /// maintained through `replace_set` churn by §4 streaming diffs.
+    /// Host-sketch-store counters summed across tenant shards (all zeros when
+    /// disabled): hits are whole host-set encodes skipped, incremental updates are
+    /// resident sketches maintained through `replace_set` churn by §4 streaming diffs.
     pub sketch_store: SketchStoreStats,
-    /// Currently admitted, unfinished sessions (the live admission gauge).
+    /// Currently admitted, unclosed connections (the live admission gauge).
     pub inflight: usize,
-    /// High-water mark of concurrently admitted sessions.
+    /// High-water mark of concurrently admitted connections.
     pub peak_inflight: usize,
-    /// High-water mark of concurrently busy workers (≤ configured `workers`).
+    /// High-water mark of concurrently busy poller threads (≤ configured `workers`).
     pub peak_workers: usize,
-    /// Configured worker count.
+    /// Configured poller-thread count.
     pub workers: usize,
-    /// Configured admission cap.
+    /// Configured global admission cap.
     pub max_inflight_sessions: usize,
+    /// Per-tenant shard snapshots, sorted by namespace.
+    pub tenants: Vec<TenantStats>,
 }
 
 impl ServerStats {
@@ -90,13 +238,20 @@ impl ServerStats {
         self.sketch_store.hit_rate()
     }
 
+    /// The shard for `namespace`, if resident at snapshot time.
+    pub fn tenant(&self, namespace: u32) -> Option<&TenantStats> {
+        self.tenants.iter().find(|t| t.namespace == namespace)
+    }
+
     /// One flat JSON record (the schema style of the `BENCH_*.json` trajectory): every
     /// field numeric, keys stable, no nesting — ready to append to a log or paste into
-    /// the bench tooling.
+    /// the bench tooling. Per-tenant shards are summarized by `tenant_count` plus the
+    /// `unrouted_*` remainders; the full breakdown lives in [`ServerStats::tenants`].
     pub fn to_json(&self) -> String {
         format!(
             "{{\"sessions_accepted\":{},\"sessions_served\":{},\"sessions_failed\":{},\
-             \"sessions_rejected\":{},\"bytes_handshake\":{},\"bytes_sketch\":{},\
+             \"sessions_rejected\":{},\"unrouted_failed\":{},\"unrouted_rejected\":{},\
+             \"tenant_count\":{},\"bytes_handshake\":{},\"bytes_sketch\":{},\
              \"bytes_residue\":{},\"bytes_confirm\":{},\"pool_hits\":{},\"pool_misses\":{},\
              \"pool_evictions\":{},\"pool_parked\":{},\"pool_capacity\":{},\
              \"pool_hit_rate\":{:.4},\"store_hits\":{},\"store_misses\":{},\
@@ -109,6 +264,9 @@ impl ServerStats {
             self.sessions_served,
             self.sessions_failed,
             self.sessions_rejected,
+            self.unrouted_failed,
+            self.unrouted_rejected,
+            self.tenants.len(),
             self.phase_bytes[0],
             self.phase_bytes[1],
             self.phase_bytes[2],
@@ -163,6 +321,8 @@ mod tests {
             sessions_served: 32,
             sessions_failed: 1,
             sessions_rejected: 1,
+            unrouted_failed: 0,
+            unrouted_rejected: 1,
             phase_bytes: [1, 2, 3, 4],
             pool: PoolStats { hits: 30, misses: 2, evictions: 0, parked: 2, capacity: 8 },
             sketch_store: SketchStoreStats {
@@ -180,6 +340,7 @@ mod tests {
             peak_workers: 4,
             workers: 4,
             max_inflight_sessions: 64,
+            tenants: vec![TenantStats { namespace: 0, quota: 64, ..TenantStats::default() }],
         };
         let json = stats.to_json();
         assert!(json.starts_with('{') && json.ends_with('}'));
@@ -188,6 +349,9 @@ mod tests {
             "sessions_served",
             "sessions_failed",
             "sessions_rejected",
+            "unrouted_failed",
+            "unrouted_rejected",
+            "tenant_count",
             "bytes_handshake",
             "bytes_sketch",
             "bytes_residue",
@@ -210,5 +374,85 @@ mod tests {
         assert_eq!(stats.total_bytes(), 10);
         assert!((stats.pool_hit_rate() - 30.0 / 32.0).abs() < 1e-12);
         assert!((stats.sketch_store_hit_rate() - 28.0 / 32.0).abs() < 1e-12);
+        assert!(json.contains("\"tenant_count\":1"));
+    }
+
+    /// Drive random sequences of the shared update helpers against a global
+    /// [`StatsInner`] and a handful of tenant shards, then check the accounting
+    /// invariant the server relies on: shard sums plus the unrouted remainders equal
+    /// the globals, for every counter and every phase-byte bucket.
+    #[test]
+    fn tenant_shards_plus_unrouted_sum_to_globals() {
+        let mut rng = crate::hash::Xoshiro256::seed_from_u64(0x7e4a_17);
+        let inner = StatsInner::default();
+        let shards: Vec<TenantCounters> =
+            (0..4).map(|_| TenantCounters::default()).collect();
+
+        let mut comm = CommLog::new();
+        comm.record(true, Phase::Handshake, 7);
+        comm.record(false, Phase::Sketch, 31);
+        comm.record(true, Phase::Residue, 13);
+        comm.record(false, Phase::Confirm, 2);
+
+        for _ in 0..10_000 {
+            let shard = match rng.next_u64() % 5 {
+                4 => None,
+                i => Some(&shards[i as usize]),
+            };
+            match rng.next_u64() % 4 {
+                0 => {
+                    // route_accepted + serve only make sense for routed connections.
+                    if let Some(t) = shard {
+                        inner.route_accepted(t);
+                        inner.serve(t, &comm);
+                    }
+                }
+                1 => {
+                    if let Some(t) = shard {
+                        inner.route_accepted(t);
+                    }
+                    inner.fail(shard);
+                }
+                2 => inner.reject(shard),
+                _ => {
+                    if let Some(t) = shard {
+                        inner.route_accepted(t);
+                    }
+                }
+            }
+        }
+
+        let sum = |f: fn(&TenantCounters) -> &AtomicU64| -> u64 {
+            shards.iter().map(|t| f(t).load(Ordering::Relaxed)).sum()
+        };
+        assert_eq!(
+            inner.sessions_accepted.load(Ordering::Relaxed),
+            sum(|t| &t.accepted),
+            "accepted != shard sum (every accepted session is routed)"
+        );
+        assert_eq!(
+            inner.sessions_served.load(Ordering::Relaxed),
+            sum(|t| &t.served),
+            "served != shard sum"
+        );
+        assert_eq!(
+            inner.sessions_failed.load(Ordering::Relaxed),
+            sum(|t| &t.failed) + inner.unrouted_failed.load(Ordering::Relaxed),
+            "failed != shard sum + unrouted"
+        );
+        assert_eq!(
+            inner.sessions_rejected.load(Ordering::Relaxed),
+            sum(|t| &t.rejected) + inner.unrouted_rejected.load(Ordering::Relaxed),
+            "rejected != shard sum + unrouted"
+        );
+        for i in 0..4 {
+            let shard_bytes: u64 =
+                shards.iter().map(|t| t.phase_bytes[i].load(Ordering::Relaxed)).sum();
+            assert_eq!(
+                inner.phase_bytes[i].load(Ordering::Relaxed),
+                shard_bytes,
+                "phase bucket {i} != shard sum"
+            );
+        }
     }
 }

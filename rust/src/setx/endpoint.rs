@@ -151,6 +151,7 @@ pub(crate) fn build_est_hello(
                 explicit_d: Some(d as u64),
                 strata: None,
                 minhash: None,
+                namespace: cfg.namespace(),
             },
             None,
         ),
@@ -165,6 +166,7 @@ pub(crate) fn build_est_hello(
                 explicit_d: None,
                 strata: Some(strata.to_bytes()),
                 minhash: Some(minhash.to_bytes()),
+                namespace: cfg.namespace(),
             };
             (msg, Some((strata, minhash)))
         }
@@ -280,10 +282,31 @@ pub(crate) fn attempt_kind(cfg: &SetxConfig, nego: &Negotiated, attempt: u32) ->
     }
 }
 
+/// The endpoint's view of its local set: borrowed for the classic `Setx::run` path
+/// (the endpoint lives inside one call frame), or an owned `Arc` snapshot for drivers
+/// whose endpoints outlive any caller frame — the readiness-based server parks its
+/// per-connection endpoints in a poll-loop table, so they must be `'static`.
+pub(crate) enum SetRef<'a> {
+    Borrowed(&'a [u64]),
+    Owned(Arc<Vec<u64>>),
+}
+
+impl SetRef<'_> {
+    fn as_slice(&self) -> &[u64] {
+        match self {
+            SetRef::Borrowed(s) => s,
+            SetRef::Owned(v) => v,
+        }
+    }
+}
+
 /// One facade endpoint (see the module docs).
 pub(crate) struct Endpoint<'a> {
-    cfg: &'a SetxConfig,
-    set: &'a [u64],
+    /// Owned copy of the declarative config (`SetxConfig` is `Copy`); owning it — rather
+    /// than borrowing the caller's — is what lets [`Endpoint::new_owned`] hand out
+    /// `'static` endpoints for the server's connection table.
+    cfg: SetxConfig,
+    set: SetRef<'a>,
     /// Client end of the transport; doubles as the "Alice" direction label and the
     /// initiator tie-break.
     client: bool,
@@ -317,7 +340,23 @@ pub(crate) struct Endpoint<'a> {
 }
 
 impl<'a> Endpoint<'a> {
-    pub(crate) fn new(cfg: &'a SetxConfig, set: &'a [u64], client: bool) -> Endpoint<'a> {
+    pub(crate) fn new(cfg: &SetxConfig, set: &'a [u64], client: bool) -> Endpoint<'a> {
+        Self::with_set_ref(*cfg, SetRef::Borrowed(set), client)
+    }
+
+    /// An endpoint that *owns* its config and set snapshot, so it has no borrow of the
+    /// caller's frame: the server's poll-loop connection table parks these across poll
+    /// iterations. The `Arc` keeps `replace_set` cheap — every live session holds its
+    /// own consistent snapshot while the server moves on.
+    pub(crate) fn new_owned(
+        cfg: SetxConfig,
+        set: Arc<Vec<u64>>,
+        client: bool,
+    ) -> Endpoint<'static> {
+        Endpoint::with_set_ref(cfg, SetRef::Owned(set), client)
+    }
+
+    fn with_set_ref(cfg: SetxConfig, set: SetRef<'a>, client: bool) -> Endpoint<'a> {
         Endpoint {
             cfg,
             set,
@@ -356,7 +395,7 @@ impl<'a> Endpoint<'a> {
     fn own_sketch(&self, params: &CsParams) -> Option<Arc<Sketch>> {
         self.sketch_source
             .as_ref()
-            .map(|src| src.host_sketch(&params.matrix(), self.set, self.enc))
+            .map(|src| src.host_sketch(&params.matrix(), self.set.as_slice(), self.enc))
     }
 
     /// Seed the decoder-reuse cache (typically with the slot a previous conversation of
@@ -375,7 +414,7 @@ impl<'a> Endpoint<'a> {
     /// once globally, then provisions every partition) — `start` skips the `EstHello`
     /// exchange and opens the first attempt directly.
     pub(crate) fn with_negotiated(
-        cfg: &'a SetxConfig,
+        cfg: &SetxConfig,
         set: &'a [u64],
         client: bool,
         nego: Negotiated,
@@ -395,7 +434,7 @@ impl<'a> Endpoint<'a> {
             self.phase = EpPhase::AwaitOpen;
             return Vec::new();
         }
-        let (msg, ests) = build_est_hello(self.cfg, self.set);
+        let (msg, ests) = build_est_hello(&self.cfg, self.set.as_slice());
         self.ests = ests;
         self.record_sent(&msg);
         self.phase = EpPhase::AwaitEstHello;
@@ -411,7 +450,14 @@ impl<'a> Endpoint<'a> {
         match (std::mem::replace(&mut self.phase, EpPhase::Finished), msg) {
             (
                 EpPhase::AwaitEstHello,
-                Msg::EstHello { config_fingerprint, set_len, explicit_d, strata, minhash },
+                Msg::EstHello {
+                    config_fingerprint,
+                    set_len,
+                    explicit_d,
+                    strata,
+                    minhash,
+                    namespace,
+                },
             ) => {
                 self.record_recv(msg);
                 let ours = self.cfg.fingerprint();
@@ -421,14 +467,23 @@ impl<'a> Endpoint<'a> {
                         SetxError::ConfigMismatch { ours, theirs: *config_fingerprint },
                     );
                 }
+                // The namespace routes the connection to a tenant; both ends must agree.
+                // (The multi-tenant server never reaches this check — it reads the frame
+                // *before* constructing the endpoint, with the tenant's own config.)
+                if *namespace != self.cfg.namespace() {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("est-hello namespace mismatch"),
+                    );
+                }
                 let Ok(peer_len) = usize::try_from(*set_len) else {
                     return Step::Fatal(Vec::new(), SetxError::MalformedFrame("set_len"));
                 };
                 let my_ests = self.ests.take();
                 let nego = match negotiate(
-                    self.cfg,
+                    &self.cfg,
                     self.client,
-                    self.set.len(),
+                    self.set.as_slice().len(),
                     my_ests.as_ref(),
                     peer_len,
                     *explicit_d,
@@ -451,14 +506,18 @@ impl<'a> Endpoint<'a> {
             // through to the catch-all below as an UnexpectedMessage protocol fault —
             // otherwise a malicious client could plant a nonsensical "server busy"
             // diagnosis in the server's own failure log.
-            (EpPhase::AwaitEstHello, Msg::Busy { retry_after_ms }) if self.client => {
+            (EpPhase::AwaitEstHello, Msg::Busy { retry_after_ms, namespace }) if self.client => {
                 // Admission-control rejection from a multi-client server: the connection
                 // carries no session, so surface the typed error (not a protocol fault —
-                // the caller may back off and retry).
+                // the caller may back off and retry). The echoed namespace tells the
+                // caller *which* tenant's quota turned it away (0 = the global cap).
                 self.record_recv(msg);
                 Step::Fatal(
                     Vec::new(),
-                    SetxError::ServerBusy { retry_after_ms: *retry_after_ms },
+                    SetxError::ServerBusy {
+                        retry_after_ms: *retry_after_ms,
+                        namespace: *namespace,
+                    },
                 )
             }
             (EpPhase::AwaitOpen, m @ Msg::Hello { .. }) => self.on_open_hello(m),
@@ -491,7 +550,11 @@ impl<'a> Endpoint<'a> {
                     if let (Some(src), Some(matrix)) =
                         (&self.sketch_source, self.pending_host_matrix.take())
                     {
-                        session.set_host_sketch(src.host_sketch(&matrix, self.set, self.enc));
+                        session.set_host_sketch(src.host_sketch(
+                            &matrix,
+                            self.set.as_slice(),
+                            self.enc,
+                        ));
                     }
                 }
                 match session.on_msg(m) {
@@ -575,13 +638,17 @@ impl<'a> Endpoint<'a> {
     /// The responder's dispatch of an attempt-opening `Hello`.
     fn on_open_hello(&mut self, msg: &Msg) -> Step {
         let nego = self.nego.expect("negotiated before AwaitOpen");
-        let kind = attempt_kind(self.cfg, &nego, self.attempt);
+        let kind = attempt_kind(&self.cfg, &nego, self.attempt);
         self.kind = kind;
         match kind {
             ProtocolKind::Bidi => {
                 let cache = self.take_cache();
-                let mut session =
-                    Session::responder_cached(self.set, self.cfg.engine, self.client, cache);
+                let mut session = Session::responder_cached(
+                    self.set.as_slice(),
+                    self.cfg.engine,
+                    self.client,
+                    cache,
+                );
                 session.set_encode_config(self.enc);
                 // Note the attempt geometry (the `Hello` carries it) but *defer* the
                 // store checkout to the initiator's `Sketch` frame — the self-encode is
@@ -617,11 +684,20 @@ impl<'a> Endpoint<'a> {
                     universe_bits,
                     est_initiator_unique,
                     est_responder_unique,
+                    namespace,
                     ..
                 } = msg
                 else {
                     return Step::Fatal(Vec::new(), SetxError::MalformedFrame("expected hello"));
                 };
+                // Mirror the bidi session's namespace check (the uni `Hello` is handled
+                // here, outside any `Session`).
+                if *namespace != self.cfg.namespace() {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("hello namespace mismatch"),
+                    );
+                }
                 // Adversarial `Hello` hardening: the shared trust-boundary check (same
                 // one the session engine applies) — allocation cap plus the m ≤ MAX_M
                 // stack-buffer invariant.
@@ -653,7 +729,14 @@ impl<'a> Endpoint<'a> {
         self.record_recv(msg);
         let host = self.own_sketch(params);
         let enc = self.enc;
-        match uni::bob_decode_with(msg, self.set, params, &mut self.cache, host.as_deref(), enc) {
+        match uni::bob_decode_with(
+            msg,
+            self.set.as_slice(),
+            params,
+            &mut self.cache,
+            host.as_deref(),
+            enc,
+        ) {
             Ok((unique, _used_fallback)) => {
                 self.unique = unique;
                 self.settled = true;
@@ -678,7 +761,7 @@ impl<'a> Endpoint<'a> {
     /// protocol kind, with the sketch length escalated along the ladder.
     fn open_attempt(&mut self) -> Vec<Msg> {
         let nego = self.nego.expect("negotiated before open_attempt");
-        let kind = attempt_kind(self.cfg, &nego, self.attempt);
+        let kind = attempt_kind(&self.cfg, &nego, self.attempt);
         self.kind = kind;
         let params = self.attempt_params(&nego, kind);
         match kind {
@@ -690,11 +773,12 @@ impl<'a> Endpoint<'a> {
                     universe_bits: params.universe_bits,
                     est_initiator_unique: params.est_a_unique as u64,
                     est_responder_unique: params.est_b_unique as u64,
-                    set_len: self.set.len() as u64,
+                    set_len: self.set.as_slice().len() as u64,
+                    namespace: self.cfg.namespace(),
                 };
                 let host = self.own_sketch(&params);
                 let (sketch, _) =
-                    uni::alice_encode_with(self.set, &params, self.enc, host.as_deref());
+                    uni::alice_encode_with(self.set.as_slice(), &params, self.enc, host.as_deref());
                 self.record_sent(&hello);
                 self.record_sent(&sketch);
                 self.phase = EpPhase::UniWaitConfirm;
@@ -708,7 +792,7 @@ impl<'a> Endpoint<'a> {
                 let host = self.own_sketch(&params);
                 let (session, opening) = Session::initiator_with(
                     &params,
-                    self.set,
+                    self.set.as_slice(),
                     self.cfg.engine,
                     self.client,
                     cache,
@@ -833,7 +917,7 @@ impl<'a> Endpoint<'a> {
         local_unique.sort_unstable();
         let exclude: HashSet<u64> = local_unique.iter().copied().collect();
         let mut intersection: Vec<u64> =
-            self.set.iter().copied().filter(|x| !exclude.contains(x)).collect();
+            self.set.as_slice().iter().copied().filter(|x| !exclude.contains(x)).collect();
         intersection.sort_unstable();
         let rounds = self.comm.payload_frames();
         SetxReport {

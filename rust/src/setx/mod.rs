@@ -103,10 +103,15 @@ pub enum SetxError {
     /// Every attempt of the escalation ladder failed; `failure` is the last attempt's
     /// reason and `attempts` how many were tried.
     Decode { failure: DecodeFailure, attempts: u32 },
-    /// The server rejected the connection at admission (its `max_inflight_sessions` cap):
-    /// a [`crate::protocol::wire::Msg::Busy`] frame arrived instead of the handshake.
+    /// The server rejected the connection at admission (its global
+    /// `max_inflight_sessions` cap, or the per-tenant quota of `namespace`): a
+    /// [`crate::protocol::wire::Msg::Busy`] frame arrived instead of the handshake.
     /// Retry after roughly `retry_after_ms` (0 = no server hint) plus client-side jitter.
-    ServerBusy { retry_after_ms: u32 },
+    ServerBusy {
+        retry_after_ms: u32,
+        /// Tenant whose quota rejected us (0 = the global cap / default tenant).
+        namespace: u32,
+    },
 }
 
 impl std::fmt::Display for SetxError {
@@ -123,8 +128,12 @@ impl std::fmt::Display for SetxError {
             SetxError::Decode { failure, attempts } => {
                 write!(f, "{} after {attempts} attempt(s)", failure.name())
             }
-            SetxError::ServerBusy { retry_after_ms } => {
-                write!(f, "server at admission capacity (retry after ~{retry_after_ms} ms)")
+            SetxError::ServerBusy { retry_after_ms, namespace } => {
+                write!(
+                    f,
+                    "server at admission capacity for tenant {namespace} \
+                     (retry after ~{retry_after_ms} ms)"
+                )
             }
         }
     }
@@ -184,6 +193,7 @@ pub struct SetxConfig {
     /// interoperate — this is a local performance knob, not protocol state.
     pub encode_threads: usize,
     /// Engine tunables (round budget, SMF fpr, …) — advanced; defaults match the paper.
+    /// `engine.namespace` carries the tenant namespace (see [`SetxConfig::namespace`]).
     pub engine: BidiOptions,
 }
 
@@ -195,8 +205,18 @@ impl SetxConfig {
         1.6f64.powi(attempt.min(8) as i32)
     }
 
+    /// The tenant namespace this endpoint reconciles against (0 = the default tenant; a
+    /// multi-tenant [`crate::server::SetxServer`] routes the session to the matching
+    /// resident host set). **Deliberately not fingerprinted** — it selects *which* set a
+    /// server answers with, it does not change the protocol, so clients of different
+    /// tenants share one config fingerprint.
+    pub fn namespace(&self) -> u32 {
+        self.engine.namespace
+    }
+
     /// Order-sensitive hash of every semantic field. Equal configs ⇒ equal fingerprints;
-    /// endpoints exchange this in `EstHello` and refuse mismatched peers.
+    /// endpoints exchange this in `EstHello` and refuse mismatched peers. The tenant
+    /// [`SetxConfig::namespace`] is intentionally excluded (routing, not protocol).
     pub fn fingerprint(&self) -> u64 {
         let diff_tag = match self.diff {
             DiffSize::Explicit(d) => [1u64, d as u64],
@@ -283,9 +303,20 @@ impl SetxBuilder {
         self
     }
 
-    /// Advanced engine tunables (round budget, SMF fpr, confident round, …).
+    /// Advanced engine tunables (round budget, SMF fpr, confident round, …). Note this
+    /// replaces the whole options struct, including any [`SetxBuilder::namespace`] set
+    /// earlier — set the namespace after (or via `opts.namespace`) when combining both.
     pub fn engine_options(mut self, opts: BidiOptions) -> Self {
         self.cfg.engine = opts;
+        self
+    }
+
+    /// Tenant namespace to reconcile against (default 0 = the default tenant, which is
+    /// also byte-identical on the wire to the pre-namespace frame format). Local routing
+    /// knob — not part of the config fingerprint, so clients of different tenants still
+    /// fingerprint-match the server.
+    pub fn namespace(mut self, namespace: u32) -> Self {
+        self.cfg.engine.namespace = namespace;
         self
     }
 
@@ -597,6 +628,11 @@ mod tests {
             base,
             Setx::builder(&set).encode_threads(4).build().unwrap().cfg.fingerprint()
         );
+        // The tenant namespace is routing, not protocol: clients of different tenants
+        // must share the server's fingerprint or multi-tenancy could never handshake.
+        let tenant9 = Setx::builder(&set).namespace(9).build().unwrap();
+        assert_eq!(base, tenant9.cfg.fingerprint());
+        assert_eq!(tenant9.cfg.namespace(), 9);
     }
 
     #[test]

@@ -24,9 +24,11 @@
 //!
 //! Blocking `recv` is assumed; the facade has no internal timeouts. For sockets, use
 //! [`TcpTransport::set_timeouts`] (or [`TcpTransport::accept_with_timeouts`]) to bound
-//! how long a stalled peer can hold a `recv`/`send` — the multi-client
-//! [`crate::server::SetxServer`] applies these to every accepted connection so one slow
-//! client cannot wedge a worker.
+//! how long a stalled peer can hold a `recv`/`send`. The multi-client
+//! [`crate::server::SetxServer`] does **not** use this blocking transport at all: its
+//! readiness-based driver runs non-blocking sockets through [`frame_extent`] and
+//! enforces per-connection deadlines itself, so a stalled peer costs a table slot, not
+//! a thread.
 
 use super::SetxError;
 use crate::protocol::wire::{self, Msg};
@@ -238,6 +240,40 @@ pub(crate) fn read_frame(stream: &mut TcpStream) -> Result<(Option<Msg>, usize),
     Ok((Some(msg), total))
 }
 
+/// Frame-boundary scan for non-blocking drivers: given the bytes buffered so far, how
+/// long (in bytes) is the first complete frame? `Ok(None)` means the header or body is
+/// still incomplete — read more and retry. `Err` means the buffered header can never
+/// become a valid frame (varint overflow, or a body length beyond
+/// [`wire::MAX_FRAME_BYTES`]) — the connection is corrupt and must be dropped. This is
+/// the header-first mirror of [`read_frame`] for sockets that deliver partial frames:
+/// the length is validated *before* any buffer is sized by it, and — unlike
+/// [`Msg::from_bytes`], which returns `None` for both — it distinguishes
+/// "need more bytes" from "garbage".
+pub(crate) fn frame_extent(buf: &[u8]) -> Result<Option<usize>, &'static str> {
+    let mut len = 0u64;
+    let mut shift = 0u32;
+    let mut i = 1usize; // the type byte needs no validation here
+    loop {
+        let Some(&b) = buf.get(i) else { return Ok(None) };
+        i += 1;
+        len |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            break;
+        }
+        shift += 7;
+        if shift >= 64 {
+            return Err("frame length varint overflow");
+        }
+    }
+    let Ok(len) = usize::try_from(len) else {
+        return Err("frame length exceeds address space");
+    };
+    if len > wire::MAX_FRAME_BYTES {
+        return Err("frame length exceeds cap");
+    }
+    Ok(if buf.len() < i + len { None } else { Some(i + len) })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,6 +373,28 @@ mod tests {
         let (mut stream, _) = listener.accept().unwrap();
         assert!(read_frame(&mut stream).is_err());
         drop(writer.join().unwrap());
+    }
+
+    #[test]
+    fn frame_extent_distinguishes_incomplete_from_corrupt() {
+        let msg = Msg::Confirm { ok: true, reason: wire::REASON_OK, attempt: 3 };
+        let bytes = msg.to_bytes();
+        // Every strict prefix is "incomplete", never "corrupt".
+        for cut in 0..bytes.len() {
+            assert_eq!(frame_extent(&bytes[..cut]), Ok(None), "prefix of {cut} bytes");
+        }
+        // The full frame (and the full frame plus the next frame's first bytes) reports
+        // exactly the first frame's extent.
+        assert_eq!(frame_extent(&bytes), Ok(Some(bytes.len())));
+        let mut two = bytes.clone();
+        two.extend_from_slice(&bytes[..3]);
+        assert_eq!(frame_extent(&two), Ok(Some(bytes.len())));
+        // Adversarial headers fail closed before any allocation.
+        let mut huge = vec![3u8];
+        put_varint(&mut huge, (wire::MAX_FRAME_BYTES as u64) + 1);
+        assert!(frame_extent(&huge).is_err(), "over-cap length must be corrupt");
+        let overflow = [3u8, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80];
+        assert!(frame_extent(&overflow).is_err(), "varint overflow must be corrupt");
     }
 
     #[test]
