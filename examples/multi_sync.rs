@@ -1,0 +1,59 @@
+//! Five hosts, one round: multi-party `∩ᵢSᵢ` over real sockets.
+//!
+//! One coordinator thread hosts the round on an ephemeral loopback listener; four spoke
+//! threads join it with `setx::multi::net::join_round`. Every party's answer is verified
+//! against the exact intersection, then the per-party byte shards are printed.
+//!
+//! Run: `cargo run --release --example multi_sync`
+
+use commonsense::data::synth;
+use commonsense::setx::multi::net::{host_round, join_round};
+use commonsense::setx::Setx;
+use std::net::TcpListener;
+use std::time::Duration;
+
+const PARTIES: usize = 5;
+const COMMON: usize = 5_000;
+const UNIQUE: usize = 60;
+
+fn main() {
+    let sets = synth::overlap_n(PARTIES, COMMON, UNIQUE, 0x5EED);
+    let mut expected = sets[0].clone();
+    for s in &sets[1..] {
+        expected = synth::intersect(&expected, s);
+    }
+    let cfg = *Setx::builder(&sets[0]).build().expect("valid default config").config();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = listener.local_addr().expect("listener address");
+
+    let report = std::thread::scope(|scope| {
+        for id in 1..PARTIES as u32 {
+            let set = sets[id as usize].clone();
+            let expected = &expected;
+            scope.spawn(move || {
+                let r = join_round(addr, &cfg, set, id, PARTIES as u32).expect("spoke completes");
+                assert_eq!(&r.intersection, expected, "spoke {id} answer");
+            });
+        }
+        host_round(&listener, &cfg, sets[0].clone(), PARTIES as u32, Duration::from_secs(30))
+            .expect("coordinator completes")
+    });
+
+    assert_eq!(report.intersection, expected, "coordinator answer");
+    let per_party: usize = report.parties.iter().map(|p| p.total_bytes()).sum();
+    assert_eq!(per_party, report.total_bytes(), "byte shards sum to the round total");
+
+    println!("multi-party SetX: {PARTIES} parties, |core| = {COMMON}, {UNIQUE} unique each");
+    println!(
+        "intersection: {} elements, {} bytes total",
+        report.intersection.len(),
+        report.total_bytes()
+    );
+    for p in &report.parties {
+        let status = match &p.error {
+            None => "synced".to_string(),
+            Some(e) => format!("FAILED: {e}"),
+        };
+        println!("  party {:>2}: {:>7} bytes  {}", p.party, p.total_bytes(), status);
+    }
+}

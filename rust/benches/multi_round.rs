@@ -1,0 +1,54 @@
+//! Bench: one N-party [`setx::multi`](commonsense::setx::multi) round at N = {3, 5, 8}
+//! — wall-clock per round plus bytes-per-party, every iteration verified against the
+//! exact intersection before it is allowed to count.
+//!
+//! Run: `cargo bench --offline --bench multi_round [-- --json] [-- --smoke]`
+//! (`--json` appends the results to the root `BENCH_protocol.json` trajectory next to
+//! the two-party fig2a/fig2b rows; `--smoke` is the CI profile.)
+
+use commonsense::data::synth;
+use commonsense::metrics::{self, BenchProfile, BenchResult};
+use commonsense::setx::Setx;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let profile = BenchProfile::from_env_args();
+    let common = if profile.smoke { 2_000 } else { 20_000 };
+    let unique = if profile.smoke { 25 } else { 200 };
+    let iters = if profile.smoke { 1u32 } else { 3 };
+    let mut results: Vec<BenchResult> = Vec::new();
+    for parties in [3usize, 5, 8] {
+        let sets = synth::overlap_n(parties, common, unique, 0xA115 + parties as u64);
+        let mut expected = sets[0].clone();
+        for s in &sets[1..] {
+            expected = synth::intersect(&expected, s);
+        }
+        let mut total = Duration::ZERO;
+        let mut min = Duration::MAX;
+        let mut bytes_per_party = 0usize;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let report = Setx::multi(&sets).expect("multi round");
+            let dt = t0.elapsed();
+            assert_eq!(report.intersection, expected, "unverified timing is worthless");
+            assert_eq!(report.completed(), parties - 1);
+            total += dt;
+            min = min.min(dt);
+            bytes_per_party = report.total_bytes() / (parties - 1);
+        }
+        let name = format!(
+            "multi_round parties={parties} common={common} unique={unique} \
+             bytes_per_party={bytes_per_party}"
+        );
+        println!("bench {name:<84} {:>10.1?} / round", total / iters);
+        results.push(BenchResult { name, mean: total / iters, min, iters: iters as u64 });
+    }
+    if profile.json {
+        metrics::append_bench_json(
+            metrics::BENCH_PROTOCOL_JSON,
+            &results,
+            profile.fingerprint("multi_round"),
+        )
+        .expect("append BENCH_protocol.json");
+    }
+}

@@ -1,8 +1,9 @@
 //! Multi-client server throughput: sessions/sec of a [`SetxServer`] under the verifying
 //! loadgen fleet, at clients = {1, 8, 32}, with the shared decoder pool and the
-//! host-sketch store on vs off, plus a `workers` sweep at the fleet shape, a
-//! connection-scaling column at clients = {64, 256, 1024} × workers = {2, 4} over a
-//! mixed-tenant fleet, and a `replace_set`-churn-under-load row.
+//! host-sketch store on vs off, plus a `workers` sweep at the fleet shape, an
+//! `--estimate-d` mixed-geometry column at clients = {8, 32}, a connection-scaling
+//! column at clients = {64, 256, 1024} × workers = {2, 4} over a mixed-tenant fleet,
+//! and a `replace_set`-churn-under-load row.
 //!
 //! The off columns are the ablations: pool-off pays full decoder construction per
 //! session, store-off pays a full host-set encode per session, so the on/off ratios are
@@ -12,8 +13,12 @@
 //! round): how sessions/sec holds up as resident connections outnumber poller threads
 //! by 2-3 orders of magnitude. The churn row hot-swaps tenant 0's host set every ~2ms
 //! while the fleet runs — resident sketches are diff-maintained mid-flight and every
-//! answer still verifies. Every session's intersection is verified in all rows — a
-//! throughput number from wrong answers would be worthless.
+//! answer still verifies. The estimate-d rows drop the explicit difference-size
+//! declaration: clients estimate `d` from sketch moments during the handshake, so
+//! estimator noise spreads sessions across matrix geometries and the pool/store shards
+//! actually contend instead of all sessions hitting one hot geometry. Every session's
+//! intersection is verified in all rows — a throughput number from wrong answers would
+//! be worthless.
 //!
 //! `cargo bench --bench server_throughput -- [--json] [--smoke]` — `--json` appends one
 //! record per configuration to the repo-root `BENCH_server.json` trajectory
@@ -64,7 +69,9 @@ fn raise_nofile(want: u64) -> u64 {
 
 /// One verified fleet run; returns the per-session wall-clock record. `tenants > 1`
 /// spreads the fleet round-robin over that many resident namespaces (each with its own
-/// host set and pool/store shards).
+/// host set and pool/store shards); `estimate_d` makes every client estimate the
+/// difference size in the handshake instead of declaring it, so sessions negotiate
+/// mixed matrix geometries.
 fn run_config(
     common: usize,
     rounds: usize,
@@ -73,8 +80,16 @@ fn run_config(
     tenants: usize,
     pool_on: bool,
     store_on: bool,
+    estimate_d: bool,
 ) -> BenchResult {
-    let cfg = LoadgenConfig { clients, rounds, common, tenants, ..LoadgenConfig::default() };
+    let cfg = LoadgenConfig {
+        clients,
+        rounds,
+        common,
+        tenants,
+        estimate_diff: estimate_d,
+        ..LoadgenConfig::default()
+    };
     let (hosts, _, _) = cfg.tenant_workload();
     let endpoint = cfg.endpoint(&hosts[0]).expect("loadgen config is always valid");
     let server = SetxServer::builder(endpoint)
@@ -106,6 +121,9 @@ fn run_config(
     );
     if tenants > 1 {
         name.push_str(&format!(" tenants={tenants}"));
+    }
+    if estimate_d {
+        name.push_str(" estimate_d=on");
     }
     println!(
         "bench {name:<84} {:>8.1} sessions/s (pool hit {:.3}, store hit {:.3}, peak workers {})",
@@ -181,13 +199,20 @@ fn main() {
     // everything-off (the PR 3-era baseline).
     for (pool_on, store_on) in [(true, true), (true, false), (false, false)] {
         for clients in [1usize, 8, 32] {
-            results.push(run_config(common, rounds, clients, WORKERS, 1, pool_on, store_on));
+            results.push(run_config(common, rounds, clients, WORKERS, 1, pool_on, store_on, false));
         }
     }
     // Workers sweep at the fleet shape (clients = 8, reuse on): the ROADMAP's
     // scale-with-parallelism axis.
     for workers in [1usize, 2, 8] {
-        results.push(run_config(common, rounds, 8, workers, 1, true, true));
+        results.push(run_config(common, rounds, 8, workers, 1, true, true, false));
+    }
+    // Mixed-geometry column (the ROADMAP's `--estimate-d` row): clients estimate d from
+    // sketch moments during the handshake instead of declaring it, so estimator noise
+    // spreads sessions across matrix geometries — stressing the reuse layer's sharding
+    // instead of the one-hot-geometry sweet spot every explicit-d row above sits in.
+    for clients in [8usize, 32] {
+        results.push(run_config(common, rounds, clients, WORKERS, 1, true, true, true));
     }
     // Connection-scaling column: a three-tenant fleet at clients = {64, 256, 1024} on
     // workers = {2, 4} pollers, one round over small sets — this measures the
@@ -205,6 +230,7 @@ fn main() {
                 3,
                 true,
                 true,
+                false,
             ));
         }
     }

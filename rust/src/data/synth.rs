@@ -48,6 +48,24 @@ pub fn overlap_pair(
     (a, b)
 }
 
+/// N-party overlap: every party holds the same `n_common` core plus its own disjoint
+/// `unique`-element tail, so `∩ᵢSᵢ` is exactly the core (the multi-party workload; see
+/// [`crate::setx::multi`]). `overlap_n(2, c, u, s)` is the equal-tails special case of
+/// [`overlap_pair`].
+pub fn overlap_n(parties: usize, n_common: usize, unique: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let ids = distinct_ids(n_common + parties * unique, &mut rng);
+    let common = &ids[..n_common];
+    (0..parties)
+        .map(|i| {
+            let mut s = common.to_vec();
+            let tail = n_common + i * unique;
+            s.extend_from_slice(&ids[tail..tail + unique]);
+            s
+        })
+        .collect()
+}
+
 /// Exact intersection of two id slices (reference answer for correctness checks).
 pub fn intersect(a: &[u64], b: &[u64]) -> Vec<u64> {
     let bs: HashSet<u64> = b.iter().copied().collect();
@@ -86,6 +104,24 @@ mod tests {
         assert_eq!(intersect(&a, &b).len(), 500);
         assert_eq!(difference(&a, &b).len(), 20);
         assert_eq!(difference(&b, &a).len(), 60);
+    }
+
+    #[test]
+    fn overlap_n_cardinalities_and_exact_core() {
+        let sets = overlap_n(4, 300, 25, 3);
+        assert_eq!(sets.len(), 4);
+        let mut core = sets[0].clone();
+        for s in &sets {
+            assert_eq!(s.len(), 325);
+            core = intersect(&core, s);
+        }
+        assert_eq!(core.len(), 300, "pairwise-disjoint tails leave exactly the core");
+        // Tails are globally disjoint, not just core-disjoint.
+        for i in 0..sets.len() {
+            for j in (i + 1)..sets.len() {
+                assert_eq!(intersect(&sets[i], &sets[j]).len(), 300);
+            }
+        }
     }
 
     #[test]

@@ -123,6 +123,51 @@
 //! bench tracks sessions/sec with each layer on vs off, across `workers` and
 //! connection-scaling sweeps, plus a `replace_set`-churn-under-load row.
 //!
+//! ## Multi-party intersection
+//!
+//! Sketch linearity is what makes the two-party protocol work — `sk(B) − sk(A)` *is*
+//! the sketch of the symmetric difference — and it is also what generalizes it: a sum
+//! of integer CS sketches is the sketch of the multiset union, so one coordinator can
+//! collect every party's sketch under a shared matrix, aggregate them, and repair each
+//! spoke against its own residue. [`setx::multi`] implements that as a star — one
+//! coordinator (party 0), N−1 spokes, every party ending the round with the exact
+//! `∩ᵢSᵢ` and a typed [`setx::multi::MultiError::PartyTimeout`] isolating any spoke
+//! that stalls instead of wedging the other N−1:
+//!
+//! ```text
+//!        S₁          S₂        join: two-party EstHello + (party i, N) varints
+//!          ╲        ╱          collect: Σᵢ sk(Sᵢ) under one shared geometry
+//!           C (S₀) ──→ ∩ᵢSᵢ    repair: per-spoke residue + escalation ladder
+//!          ╱        ╲          membership: ∩ = S₀ ∖ ⋃ᵢ(S₀∖Sᵢ), broadcast back
+//!        S₃          S₄        confirm: all N certify the same intersection
+//! ```
+//!
+//! ```
+//! use commonsense::setx::Setx;
+//! use commonsense::data::synth;
+//!
+//! // Five parties around a 500-element core, each holding a 10-element private tail.
+//! let sets = synth::overlap_n(5, 500, 10, 7);
+//! let mut expected = sets[0].clone();
+//! for s in &sets[1..] {
+//!     expected = synth::intersect(&expected, s);
+//! }
+//! let report = Setx::multi(&sets).unwrap();
+//! assert_eq!(report.intersection, expected);
+//! assert_eq!(report.completed(), 4);
+//! // Per-spoke transcripts shard the round's bytes exactly.
+//! let per_party: usize = report.parties.iter().map(|p| p.total_bytes()).sum();
+//! assert_eq!(per_party, report.total_bytes());
+//! ```
+//!
+//! The same round runs over real sockets via [`setx::multi::net::host_round`] /
+//! [`setx::multi::net::join_round`] (the `commonsense multi` CLI subcommand), and as a
+//! daemon through the server's coordinator mode:
+//! [`server::ServerBuilder::multi_tenant`] turns a tenant namespace into a standing
+//! round that spokes join with `join_round`, with completed [`setx::multi::MultiReport`]s
+//! collected off [`server::ServerHandle::take_multi_reports`]. The `multi_round` bench
+//! tracks wall-clock and bytes-per-party at N = {3, 5, 8} in `BENCH_protocol.json`.
+//!
 //! ## Performance
 //!
 //! The dominant local costs of a session are **decoder construction** (column sampling +

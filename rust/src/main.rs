@@ -9,6 +9,7 @@ use commonsense::data::synth;
 use commonsense::experiments;
 use commonsense::server::loadgen::{self, LoadgenConfig};
 use commonsense::server::SetxServer;
+use commonsense::setx::multi::{net as multi_net, MultiReport};
 use commonsense::setx::transport::TcpTransport;
 use commonsense::setx::{parallel, transport, DiffSize, Mode, Setx, SetxReport};
 use std::net::TcpListener;
@@ -40,6 +41,14 @@ USAGE:
                                               and --tenants; exits non-zero on any
                                               mismatch)
   commonsense connect --addr ADDR            (one client, one sync, same workload flags)
+  commonsense multi [--parties N] [--common C] [--unique U] [--seed S]
+                    [--host --listen ADDR [--deadline-ms D] | --join --addr ADDR --party I]
+                                             (N-party intersection ∩ᵢSᵢ: in-process by
+                                              default; --host runs the star coordinator
+                                              (party 0) over TCP, --join dials in as
+                                              spoke I — all sides synthesize the same
+                                              workload from the shared flags and verify
+                                              against the exactly-known answer)
   commonsense exp <fig2a|fig2b|table2|examples|ablations|all> [--scale N] [--instances K] [--eth-accounts N]
   commonsense tune [--n N] [--d D] [--bidi] [--trials K]
   commonsense selftest                       (quick end-to-end sanity run)
@@ -48,10 +57,10 @@ Defaults: --transport mem, --common 50000 (serve/loadgen/connect: 20000), --a-un
           --b-unique 300, --parts 16, --threads 4, --scale 50000, --instances 5,
           --eth-accounts 300000, --n 100000, --d 1000, --workers 4, --max-inflight 64,
           --clients 8, --rounds 2, --tenants 1, --client-unique 100, --server-unique 200,
-          --seed 42, --busy-retries 3, --store-capacity 8. serve/loadgen/connect must share
-          the workload flags (including --seed and --tenants) and declare the exactly-known
-          d (one shared matrix geometry, the decoder-pool sweet spot) unless --estimate-d
-          is given."
+          --seed 42, --busy-retries 3, --store-capacity 8, --parties 3, --unique 100,
+          --deadline-ms 10000. serve/loadgen/connect must share the workload flags
+          (including --seed and --tenants) and declare the exactly-known d (one shared
+          matrix geometry, the decoder-pool sweet spot) unless --estimate-d is given."
     );
     std::process::exit(2)
 }
@@ -94,6 +103,28 @@ impl Args {
 
     fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
+    }
+}
+
+fn print_multi_report(report: &MultiReport) {
+    println!(
+        "multi: |∩| = {}, {} of {} spokes completed, {} B total",
+        report.intersection.len(),
+        report.completed(),
+        report.parties.len(),
+        report.total_bytes()
+    );
+    for p in &report.parties {
+        match &p.error {
+            None => println!(
+                "  party {}: {} B, attempts {}, synced = {}",
+                p.party,
+                p.total_bytes(),
+                p.attempts,
+                p.synced
+            ),
+            Some(e) => println!("  party {}: {} B, FAILED: {e}", p.party, p.total_bytes()),
+        }
     }
 }
 
@@ -358,6 +389,85 @@ fn main() -> anyhow::Result<()> {
             let report = alice.run(&mut TcpTransport::connect(&addr)?)?;
             print_report("client", &report);
             if report.intersection != expected {
+                eprintln!("intersection MISMATCH against the exactly-known answer");
+                std::process::exit(1);
+            }
+            println!("intersection verified ({} elements)", expected.len());
+        }
+        "multi" => {
+            // N-party intersection. Every side synthesizes the full workload from the
+            // shared flags (like serve/loadgen), so each role holds its own set *and*
+            // the exactly-known answer to verify against.
+            let parties = args.get("parties", 3).max(2);
+            let common = args.get("common", 20_000);
+            let unique = args.get("unique", 100);
+            let seed = args.get("seed", 42) as u64;
+            let sets = synth::overlap_n(parties, common, unique, seed);
+            let expected = sets
+                .iter()
+                .skip(1)
+                .fold(sets[0].clone(), |acc, s| synth::intersect(&acc, s));
+            let learned = if args.has("join") {
+                let addr = args.str("addr", "127.0.0.1:7800");
+                let id = args.get("party", 1);
+                if id == 0 || id >= parties {
+                    eprintln!("--party must be in 1..{parties} (party 0 is the host)");
+                    usage();
+                }
+                let endpoint = Setx::builder(&sets[id]).build().unwrap_or_else(|e| {
+                    eprintln!("invalid config: {e}");
+                    usage();
+                });
+                let cfg = *endpoint.config();
+                println!(
+                    "party {id}/{parties} joining {addr} (|S| = {}, |∩| expected = {})",
+                    sets[id].len(),
+                    expected.len()
+                );
+                let report = multi_net::join_round(
+                    &addr,
+                    &cfg,
+                    sets[id].clone(),
+                    id as u32,
+                    parties as u32,
+                )?;
+                print_report(&format!("party {id}"), &report);
+                report.intersection.clone()
+            } else if args.has("host") {
+                let addr = args.str("listen", "127.0.0.1:7800");
+                let deadline =
+                    std::time::Duration::from_millis(args.get("deadline-ms", 10_000) as u64);
+                let endpoint = Setx::builder(&sets[0]).build().unwrap_or_else(|e| {
+                    eprintln!("invalid config: {e}");
+                    usage();
+                });
+                let cfg = *endpoint.config();
+                let listener = TcpListener::bind(&addr)?;
+                println!(
+                    "hosting a {parties}-party round on {} (|C| = {}, join deadline {deadline:?})",
+                    listener.local_addr()?,
+                    sets[0].len()
+                );
+                let report = multi_net::host_round(
+                    &listener,
+                    &cfg,
+                    sets[0].clone(),
+                    parties as u32,
+                    deadline,
+                )?;
+                print_multi_report(&report);
+                report.intersection
+            } else {
+                println!(
+                    "in-process {parties}-party round (|S| = {} each, |∩| = {})",
+                    sets[0].len(),
+                    expected.len()
+                );
+                let report = Setx::multi(&sets)?;
+                print_multi_report(&report);
+                report.intersection
+            };
+            if learned != expected {
                 eprintln!("intersection MISMATCH against the exactly-known answer");
                 std::process::exit(1);
             }

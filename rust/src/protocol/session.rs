@@ -117,6 +117,8 @@ pub(crate) fn label(msg: &Msg) -> &'static str {
         Msg::Round { .. } => "round",
         Msg::Confirm { .. } => "confirm",
         Msg::Busy { .. } => "busy",
+        Msg::AggSketch { .. } => "agg-sketch",
+        Msg::MultiResidue { .. } => "multi-residue",
     }
 }
 
@@ -125,8 +127,8 @@ pub(crate) fn label(msg: &Msg) -> &'static str {
 pub fn frame_phase(msg: &Msg) -> CommPhase {
     match msg {
         Msg::EstHello { .. } | Msg::Hello { .. } | Msg::Busy { .. } => CommPhase::Handshake,
-        Msg::Sketch(_) => CommPhase::Sketch,
-        Msg::Round { .. } => CommPhase::Residue,
+        Msg::Sketch(_) | Msg::AggSketch { .. } => CommPhase::Sketch,
+        Msg::Round { .. } | Msg::MultiResidue { .. } => CommPhase::Residue,
         Msg::Confirm { .. } => CommPhase::Confirm,
     }
 }

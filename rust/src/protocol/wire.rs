@@ -36,6 +36,12 @@ pub enum Msg {
         /// PR-5-era frame without it parses as tenant 0 and a tenant-0 frame is
         /// byte-identical to the old format — old clients and old servers interop.
         namespace: u32,
+        /// Multi-party join: `(party_id, party_count)`. Rides the same trailing-varint
+        /// versioning pattern as `namespace` (flags bit 4 + two varints after the
+        /// namespace one): absent for every two-party frame, so PR-6-era frames stay
+        /// byte-identical. Parse enforces `party_count ≥ 2 && party_id < party_count`;
+        /// id 0 is the coordinator.
+        party: Option<(u32, u32)>,
     },
     /// Session handshake: CS parameters + role metadata.
     Hello {
@@ -93,7 +99,57 @@ pub enum Msg {
         /// [`Msg::Hello`], so PR-5-era peers interop.
         namespace: u32,
     },
+    /// Multi-party round barrier (coordinator → each spoke): announces the aggregate
+    /// sketch `Σᵢ sk(Sᵢ)` formed from `parties` collected sketches, and tells the spoke
+    /// whether its own sketch matched the coordinator's (in which case the inner repair
+    /// session is skipped). The aggregate counts ride along when they fit the frame cap —
+    /// a digest-only frame is valid too (the counts are telemetry / cross-check; sync
+    /// decisions rest on per-party residues, which a sum cannot certify: two honest
+    /// parties off by `+x` and `−x` cancel).
+    AggSketch {
+        /// Number of party sketches folded into the aggregate (coordinator included).
+        parties: u32,
+        /// Shared collect-phase sketch length.
+        l: u32,
+        /// Shared collect-phase row weight.
+        m: u32,
+        /// Shared collect-phase matrix seed.
+        seed: u64,
+        /// Sequential hash fold over the aggregate counts (cross-check only).
+        digest: u64,
+        /// What the receiving spoke should do next: one of the `DIRECTIVE_*` constants.
+        directive: u8,
+        /// The aggregate counts themselves (zigzag varints), present iff they fit the
+        /// frame budget. When present, the count **must** equal `l` — a mismatched
+        /// length is a malformed frame, not a short read.
+        counts: Option<Vec<i32>>,
+    },
+    /// Multi-party exact-membership round (coordinator → one spoke): a compressed sketch
+    /// of the coordinator's current intersection estimate, decoded by the spoke against
+    /// its pairwise-common candidates `Kᵢ = C ∩ Sᵢ` to learn exactly which candidates
+    /// dropped out of the N-way intersection. Carries its own geometry because each
+    /// spoke's membership ladder escalates independently.
+    MultiResidue {
+        /// Receiving spoke's party id.
+        party: u32,
+        /// 0-based rung of this spoke's membership-escalation ladder.
+        attempt: u32,
+        l: u32,
+        m: u32,
+        seed: u64,
+        universe_bits: u32,
+        /// Exact `|Kᵢ ∖ ∩|` — the spoke derives the shared codec from it.
+        est_drop: u64,
+        /// The truncation-coded sketch of the intersection estimate.
+        sketch: SketchMsg,
+    },
 }
+
+/// `AggSketch::directive`: the spoke's collect sketch matched the coordinator's set —
+/// skip the inner repair session and wait for the membership round.
+pub const DIRECTIVE_IN_SYNC: u8 = 0;
+/// `AggSketch::directive`: differences detected — run the inner two-party session.
+pub const DIRECTIVE_SESSION: u8 = 1;
 
 /// `Confirm::reason` values.
 pub const REASON_OK: u8 = 0;
@@ -110,6 +166,8 @@ const TYPE_ROUND: u8 = 3;
 const TYPE_EST_HELLO: u8 = 4;
 const TYPE_CONFIRM: u8 = 5;
 const TYPE_BUSY: u8 = 6;
+const TYPE_AGG_SKETCH: u8 = 7;
+const TYPE_MULTI_RESIDUE: u8 = 8;
 
 /// Encoded length of a LEB128 varint.
 fn varint_len(v: u64) -> usize {
@@ -138,19 +196,45 @@ fn parse_namespace(body: &[u8], off: &mut usize) -> Option<u32> {
     Some(ns)
 }
 
+/// Zigzag-map a signed count onto the varint-friendly non-negative range
+/// (`0, -1, 1, -2, … → 0, 1, 2, 3, …`). Sketch counts in an aggregate are small and
+/// centered near zero, so this keeps most of them to one byte each.
+fn zigzag(v: i32) -> u64 {
+    (((v as i64) << 1) ^ ((v as i64) >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`]; rejects values outside `i32` (an adversarial varint can
+/// encode anything up to `u64::MAX`).
+fn unzigzag(z: u64) -> Option<i32> {
+    i32::try_from(((z >> 1) as i64) ^ -((z & 1) as i64)).ok()
+}
+
+/// Serialized size of an embedded [`SketchMsg`] (mirrors `SketchMsg::to_bytes`).
+fn sketch_msg_len(sk: &SketchMsg) -> usize {
+    varint_len(sk.n as u64)
+        + varint_len(sk.table.len() as u64)
+        + sk.table.len()
+        + varint_len(sk.payload.len() as u64)
+        + sk.payload.len()
+        + varint_len(sk.syndromes.len() as u64)
+        + sk.syndromes.len()
+}
+
 impl Msg {
     /// Exact wire size of this frame — equals `self.to_bytes().len()` without building
     /// the buffer. The session engine charges every frame through this, so accounting
     /// costs no allocation or serialization on the hot path.
     pub fn wire_len(&self) -> usize {
         let body = match self {
-            Msg::EstHello { set_len, explicit_d, strata, minhash, namespace, .. } => {
+            Msg::EstHello { set_len, explicit_d, strata, minhash, namespace, party, .. } => {
                 8 + varint_len(*set_len)
                     + 1
                     + explicit_d.map_or(0, |d| varint_len(d))
                     + strata.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
                     + minhash.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
                     + opt_namespace_len(*namespace)
+                    + party
+                        .map_or(0, |(id, count)| varint_len(id as u64) + varint_len(count as u64))
             }
             Msg::Confirm { attempt, .. } => 2 + varint_len(*attempt as u64),
             Msg::Busy { retry_after_ms, namespace } => {
@@ -175,14 +259,41 @@ impl Msg {
                     + varint_len(*set_len)
                     + opt_namespace_len(*namespace)
             }
-            Msg::Sketch(sk) => {
-                varint_len(sk.n as u64)
-                    + varint_len(sk.table.len() as u64)
-                    + sk.table.len()
-                    + varint_len(sk.payload.len() as u64)
-                    + sk.payload.len()
-                    + varint_len(sk.syndromes.len() as u64)
-                    + sk.syndromes.len()
+            Msg::Sketch(sk) => sketch_msg_len(sk),
+            Msg::AggSketch { parties, l, m, digest: _, seed: _, directive: _, counts } => {
+                varint_len(*parties as u64)
+                    + varint_len(*l as u64)
+                    + varint_len(*m as u64)
+                    + 8
+                    + 8
+                    + 1
+                    + 1
+                    + counts.as_ref().map_or(0, |c| {
+                        varint_len(c.len() as u64)
+                            + c.iter().map(|&v| varint_len(zigzag(v))).sum::<usize>()
+                    })
+            }
+            Msg::MultiResidue {
+                party,
+                attempt,
+                l,
+                m,
+                seed: _,
+                universe_bits,
+                est_drop,
+                sketch,
+            } => {
+                varint_len(*party as u64)
+                    + varint_len(*attempt as u64)
+                    + varint_len(*l as u64)
+                    + varint_len(*m as u64)
+                    + 8
+                    + varint_len(*universe_bits as u64)
+                    + varint_len(*est_drop)
+                    + {
+                        let sk = sketch_msg_len(sketch);
+                        varint_len(sk as u64) + sk
+                    }
             }
             Msg::Round { residue, smf, inquiry, answers, .. } => {
                 varint_len(residue.len() as u64)
@@ -202,13 +313,22 @@ impl Msg {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut body = Vec::new();
         let ty = match self {
-            Msg::EstHello { config_fingerprint, set_len, explicit_d, strata, minhash, namespace } => {
+            Msg::EstHello {
+                config_fingerprint,
+                set_len,
+                explicit_d,
+                strata,
+                minhash,
+                namespace,
+                party,
+            } => {
                 body.extend_from_slice(&config_fingerprint.to_le_bytes());
                 put_varint(&mut body, *set_len);
                 let flags = (explicit_d.is_some() as u8)
                     | (strata.is_some() as u8) << 1
                     | (minhash.is_some() as u8) << 2
-                    | ((*namespace != 0) as u8) << 3;
+                    | ((*namespace != 0) as u8) << 3
+                    | (party.is_some() as u8) << 4;
                 body.push(flags);
                 if let Some(d) = explicit_d {
                     put_varint(&mut body, *d);
@@ -223,6 +343,10 @@ impl Msg {
                 }
                 if *namespace != 0 {
                     put_varint(&mut body, *namespace as u64);
+                }
+                if let Some((id, count)) = party {
+                    put_varint(&mut body, *id as u64);
+                    put_varint(&mut body, *count as u64);
                 }
                 TYPE_EST_HELLO
             }
@@ -264,6 +388,38 @@ impl Msg {
             Msg::Sketch(sk) => {
                 body = sk.to_bytes();
                 TYPE_SKETCH
+            }
+            Msg::AggSketch { parties, l, m, seed, digest, directive, counts } => {
+                put_varint(&mut body, *parties as u64);
+                put_varint(&mut body, *l as u64);
+                put_varint(&mut body, *m as u64);
+                body.extend_from_slice(&seed.to_le_bytes());
+                body.extend_from_slice(&digest.to_le_bytes());
+                body.push(*directive);
+                match counts {
+                    Some(c) => {
+                        body.push(1);
+                        put_varint(&mut body, c.len() as u64);
+                        for &v in c {
+                            put_varint(&mut body, zigzag(v));
+                        }
+                    }
+                    None => body.push(0),
+                }
+                TYPE_AGG_SKETCH
+            }
+            Msg::MultiResidue { party, attempt, l, m, seed, universe_bits, est_drop, sketch } => {
+                put_varint(&mut body, *party as u64);
+                put_varint(&mut body, *attempt as u64);
+                put_varint(&mut body, *l as u64);
+                put_varint(&mut body, *m as u64);
+                body.extend_from_slice(&seed.to_le_bytes());
+                put_varint(&mut body, *universe_bits as u64);
+                put_varint(&mut body, *est_drop);
+                let sk = sketch.to_bytes();
+                put_varint(&mut body, sk.len() as u64);
+                body.extend_from_slice(&sk);
+                TYPE_MULTI_RESIDUE
             }
             Msg::Round { residue, smf, inquiry, answers, done } => {
                 put_varint(&mut body, residue.len() as u64);
@@ -322,7 +478,7 @@ impl Msg {
                 let fp = u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?);
                 let set_len = take_varint(body, &mut off)?;
                 let flags = take(body, &mut off, 1)?[0];
-                if flags & !0b1111 != 0 {
+                if flags & !0b1_1111 != 0 {
                     return None;
                 }
                 let explicit_d = if flags & 1 != 0 {
@@ -344,6 +500,18 @@ impl Msg {
                 } else {
                     0
                 };
+                let party = if flags & 16 != 0 {
+                    let id = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                    let count = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                    // A "multi-party" round of fewer than two parties is meaningless, and
+                    // an id at or past the count can never have been assigned.
+                    if count < 2 || id >= count {
+                        return None;
+                    }
+                    Some((id, count))
+                } else {
+                    None
+                };
                 if off != body.len() {
                     return None;
                 }
@@ -354,6 +522,7 @@ impl Msg {
                     strata,
                     minhash,
                     namespace,
+                    party,
                 }
             }
             TYPE_CONFIRM => {
@@ -406,6 +575,54 @@ impl Msg {
                 }
             }
             TYPE_SKETCH => Msg::Sketch(SketchMsg::from_bytes(body)?),
+            TYPE_AGG_SKETCH => {
+                let parties = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                let l = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                let m = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                let seed = u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?);
+                let digest = u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?);
+                let directive = take(body, &mut off, 1)?[0];
+                if parties < 2 || directive > DIRECTIVE_SESSION {
+                    return None;
+                }
+                let counts = match take(body, &mut off, 1)?[0] {
+                    0 => None,
+                    1 => {
+                        let n = usize::try_from(take_varint(body, &mut off)?).ok()?;
+                        // The aggregate must cover exactly the announced geometry — a
+                        // count/`l` mismatch is a malformed frame. Each zigzag varint is
+                        // ≥ 1 byte, so this also kills inflated counts before allocation.
+                        if n != l as usize || n > body.len().saturating_sub(off) {
+                            return None;
+                        }
+                        let mut c = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            c.push(unzigzag(take_varint(body, &mut off)?)?);
+                        }
+                        Some(c)
+                    }
+                    _ => return None,
+                };
+                if off != body.len() {
+                    return None;
+                }
+                Msg::AggSketch { parties, l, m, seed, digest, directive, counts }
+            }
+            TYPE_MULTI_RESIDUE => {
+                let party = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                let attempt = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                let l = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                let m = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                let seed = u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?);
+                let universe_bits = u32::try_from(take_varint(body, &mut off)?).ok()?;
+                let est_drop = take_varint(body, &mut off)?;
+                let sk_len = usize::try_from(take_varint(body, &mut off)?).ok()?;
+                let sketch = SketchMsg::from_bytes(take(body, &mut off, sk_len)?)?;
+                if off != body.len() {
+                    return None;
+                }
+                Msg::MultiResidue { party, attempt, l, m, seed, universe_bits, est_drop, sketch }
+            }
             TYPE_ROUND => {
                 let rl = usize::try_from(take_varint(body, &mut off)?).ok()?;
                 let residue = take(body, &mut off, rl)?.to_vec();
@@ -486,6 +703,7 @@ mod tests {
                 strata: Some(vec![7; 300]),
                 minhash: Some(vec![9; 64]),
                 namespace: 0,
+                party: None,
             },
             Msg::EstHello {
                 config_fingerprint: u64::MAX,
@@ -494,6 +712,7 @@ mod tests {
                 strata: None,
                 minhash: None,
                 namespace: 3,
+                party: None,
             },
             Msg::EstHello {
                 config_fingerprint: 0,
@@ -502,6 +721,7 @@ mod tests {
                 strata: None,
                 minhash: None,
                 namespace: u32::MAX,
+                party: None,
             },
             Msg::EstHello {
                 config_fingerprint: 7,
@@ -510,6 +730,7 @@ mod tests {
                 strata: Some(vec![1; 12]),
                 minhash: Some(vec![2; 8]),
                 namespace: 200,
+                party: None,
             },
         ];
         for msg in &variants {
@@ -582,15 +803,23 @@ mod tests {
             strata: Some(vec![5; 40]),
             minhash: Some(vec![6; 24]),
             namespace: 0,
+            party: None,
         };
         let bytes = msg.to_bytes();
         for cut in 0..bytes.len() {
             assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut} parsed");
         }
-        // Reserved flag bits (above the namespace bit) must be zero.
+        // Reserved flag bits (above the party bit) must be zero.
         let mut body = bytes[2..].to_vec(); // type byte + 1-byte varint length here
         let flags_off = 8 + varint_len(9_999);
-        body[flags_off] |= 0b10000;
+        body[flags_off] |= 0b10_0000;
+        let mut frame = vec![TYPE_EST_HELLO];
+        put_varint(&mut frame, body.len() as u64);
+        frame.extend_from_slice(&body);
+        assert!(Msg::from_bytes(&frame).is_none());
+        // The party flag (bit 4) announcing varints that are not there is a truncation.
+        let mut body = bytes[2..].to_vec();
+        body[flags_off] |= 0b1_0000;
         let mut frame = vec![TYPE_EST_HELLO];
         put_varint(&mut frame, body.len() as u64);
         frame.extend_from_slice(&body);
@@ -819,6 +1048,7 @@ mod tests {
             strata: None,
             minhash: None,
             namespace: 0,
+            party: None,
         };
         let (back, _) = Msg::from_bytes(&frame).unwrap();
         assert_eq!(back, expected);
@@ -847,6 +1077,7 @@ mod tests {
             strata: None,
             minhash: None,
             namespace: 300,
+            party: None,
         };
         let hello = Msg::Hello {
             l: 64,
@@ -919,6 +1150,250 @@ mod tests {
         ];
         for msg in &msgs {
             assert_eq!(msg.wire_len(), msg.to_bytes().len(), "{msg:?}");
+        }
+    }
+
+    /// Craft a frame of arbitrary type around a hand-built body.
+    fn frame_with_body(ty: u8, body: &[u8]) -> Vec<u8> {
+        let mut out = vec![ty];
+        put_varint(&mut out, body.len() as u64);
+        out.extend_from_slice(body);
+        out
+    }
+
+    #[test]
+    fn est_hello_party_field_roundtrip() {
+        for (party, namespace) in [
+            (Some((0u32, 2u32)), 0u32),
+            (Some((1, 3)), 0),
+            (Some((7, 8)), 42),
+            (Some((199, u32::MAX)), u32::MAX),
+        ] {
+            let msg = Msg::EstHello {
+                config_fingerprint: 9,
+                set_len: 1_000,
+                explicit_d: None,
+                strata: Some(vec![4; 17]),
+                minhash: Some(vec![5; 9]),
+                namespace,
+                party,
+            };
+            let bytes = msg.to_bytes();
+            let (back, used) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(back, msg);
+            assert_eq!(used, bytes.len());
+            assert_eq!(msg.wire_len(), bytes.len(), "{msg:?}");
+            // Every truncation — including mid-party-varint — must die.
+            for cut in 0..bytes.len() {
+                assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut} parsed");
+            }
+        }
+    }
+
+    #[test]
+    fn est_hello_party_field_validation_rejects_bad_ids_and_oversize() {
+        let base = Msg::EstHello {
+            config_fingerprint: 9,
+            set_len: 7,
+            explicit_d: Some(3),
+            strata: None,
+            minhash: None,
+            namespace: 0,
+            party: Some((1, 2)),
+        };
+        let good = base.to_bytes();
+        let body = &good[2..]; // 1-byte type + 1-byte length at this size
+        let stem = &body[..body.len() - 2]; // strip the two single-byte party varints
+        let reframe = |id: u64, count: u64| {
+            let mut b = stem.to_vec();
+            put_varint(&mut b, id);
+            put_varint(&mut b, count);
+            frame_with_body(TYPE_EST_HELLO, &b)
+        };
+        // A party "count" of 0 or 1 can never describe a multi-party round.
+        assert!(Msg::from_bytes(&reframe(0, 0)).is_none());
+        assert!(Msg::from_bytes(&reframe(0, 1)).is_none());
+        // An id at or past the count was never assigned.
+        assert!(Msg::from_bytes(&reframe(2, 2)).is_none());
+        assert!(Msg::from_bytes(&reframe(9, 3)).is_none());
+        // Varints that overflow u32 are rejected, not truncated.
+        assert!(Msg::from_bytes(&reframe(u64::MAX, 3)).is_none());
+        assert!(Msg::from_bytes(&reframe(1, u64::from(u32::MAX) + 1)).is_none());
+        // The flag with only one of the two varints present is a truncation.
+        let mut b = stem.to_vec();
+        put_varint(&mut b, 1u64);
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_EST_HELLO, &b)).is_none());
+    }
+
+    /// The multi-party satellite's backward-compat proof: a PR-6-era frame (serialized
+    /// before the `party` field existed) parses to `party: None`, and a two-party frame
+    /// serializes byte-identically to the PR-6 format — old peers interop unchanged.
+    #[test]
+    fn pr6_era_two_party_frames_byte_identical() {
+        // EstHello with namespace but no party bit, exactly as the PR-6 serializer wrote.
+        let mut body = Vec::new();
+        body.extend_from_slice(&42u64.to_le_bytes()); // config_fingerprint
+        put_varint(&mut body, 500u64); // set_len
+        body.push(0b1001); // flags: explicit_d + namespace, no party bit
+        put_varint(&mut body, 33u64); // explicit_d
+        put_varint(&mut body, 6u64); // namespace
+        let frame = frame_with_body(TYPE_EST_HELLO, &body);
+        let expected = Msg::EstHello {
+            config_fingerprint: 42,
+            set_len: 500,
+            explicit_d: Some(33),
+            strata: None,
+            minhash: None,
+            namespace: 6,
+            party: None,
+        };
+        let (back, used) = Msg::from_bytes(&frame).unwrap();
+        assert_eq!(back, expected);
+        assert_eq!(used, frame.len());
+        assert_eq!(expected.to_bytes(), frame, "two-party EstHello must stay byte-identical");
+    }
+
+    #[test]
+    fn agg_sketch_roundtrip_with_and_without_counts() {
+        let variants = [
+            Msg::AggSketch {
+                parties: 3,
+                l: 7,
+                m: 5,
+                seed: 0xfeed,
+                digest: 0xabcdef,
+                directive: DIRECTIVE_SESSION,
+                counts: Some(vec![0, 1, -1, i32::MAX, i32::MIN, 5, -3]),
+            },
+            Msg::AggSketch {
+                parties: 8,
+                l: 1 << 20,
+                m: 64,
+                seed: u64::MAX,
+                digest: 0,
+                directive: DIRECTIVE_IN_SYNC,
+                counts: None,
+            },
+        ];
+        for msg in &variants {
+            let bytes = msg.to_bytes();
+            let (back, used) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(&back, msg);
+            assert_eq!(used, bytes.len());
+            assert_eq!(msg.wire_len(), bytes.len(), "{msg:?}");
+            for cut in 0..bytes.len() {
+                assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut} parsed");
+            }
+        }
+    }
+
+    #[test]
+    fn agg_sketch_count_length_mismatch_rejected() {
+        // 6 counts under an announced l of 7: a malformed aggregate, not a short read.
+        let mut body = Vec::new();
+        put_varint(&mut body, 3u64); // parties
+        put_varint(&mut body, 7u64); // l
+        put_varint(&mut body, 5u64); // m
+        body.extend_from_slice(&1u64.to_le_bytes()); // seed
+        body.extend_from_slice(&2u64.to_le_bytes()); // digest
+        body.push(DIRECTIVE_SESSION);
+        body.push(1); // counts present
+        put_varint(&mut body, 6u64);
+        for _ in 0..6 {
+            body.push(0);
+        }
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_AGG_SKETCH, &body)).is_none());
+        // An inflated count dies before any allocation sized by it.
+        let mut body = Vec::new();
+        put_varint(&mut body, 3u64);
+        put_varint(&mut body, u32::MAX as u64); // l
+        put_varint(&mut body, 5u64);
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&2u64.to_le_bytes());
+        body.push(DIRECTIVE_SESSION);
+        body.push(1);
+        put_varint(&mut body, u32::MAX as u64); // matches l, but 4 G counts aren't here
+        body.extend_from_slice(&[0u8; 64]);
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_AGG_SKETCH, &body)).is_none());
+    }
+
+    #[test]
+    fn agg_sketch_bad_directive_and_party_count_rejected() {
+        let good = Msg::AggSketch {
+            parties: 3,
+            l: 4,
+            m: 5,
+            seed: 1,
+            digest: 2,
+            directive: DIRECTIVE_IN_SYNC,
+            counts: Some(vec![1, -1, 0, 2]),
+        };
+        let bytes = good.to_bytes();
+        let body = &bytes[2..];
+        // Unknown directive byte.
+        let mut bad = body.to_vec();
+        let directive_off = 1 + 1 + 1 + 8 + 8; // parties|l|m varints are 1 byte each here
+        bad[directive_off] = 2;
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_AGG_SKETCH, &bad)).is_none());
+        // A one-party "aggregate" is meaningless.
+        let mut bad = body.to_vec();
+        bad[0] = 1;
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_AGG_SKETCH, &bad)).is_none());
+        // Counts-present flag with any value other than 0/1.
+        let mut bad = body.to_vec();
+        bad[directive_off + 1] = 9;
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_AGG_SKETCH, &bad)).is_none());
+        // Trailing garbage after the counts.
+        let mut bad = body.to_vec();
+        bad.push(0xEE);
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_AGG_SKETCH, &bad)).is_none());
+    }
+
+    #[test]
+    fn multi_residue_roundtrip_and_embedded_sketch_validation() {
+        let msg = Msg::MultiResidue {
+            party: 4,
+            attempt: 2,
+            l: 300,
+            m: 7,
+            seed: 0xc0ffee,
+            universe_bits: 64,
+            est_drop: 11,
+            sketch: SketchMsg {
+                n: 300,
+                table: vec![1; 40],
+                payload: vec![2; 129],
+                syndromes: vec![3; 7],
+            },
+        };
+        let bytes = msg.to_bytes();
+        let (back, used) = Msg::from_bytes(&bytes).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(used, bytes.len());
+        assert_eq!(msg.wire_len(), bytes.len());
+        for cut in 0..bytes.len() {
+            assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut} parsed");
+        }
+        // A sketch-length prefix that undershoots the embedded sketch truncates it —
+        // the inner parser's strictness must reject the slice, not resync.
+        let body = &bytes[3..]; // 1-byte type + 2-byte varint length at this size
+        let header = 1 + 1 + 2 + 1 + 8 + 1 + 1; // party|attempt|l|m|seed|ub|est_drop
+        let sk = msg_sketch_bytes(&msg);
+        let mut bad = body[..header].to_vec();
+        put_varint(&mut bad, (sk.len() - 1) as u64);
+        bad.extend_from_slice(&sk);
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_MULTI_RESIDUE, &bad)).is_none());
+        // An oversized prefix overruns the body.
+        let mut bad = body[..header].to_vec();
+        put_varint(&mut bad, u64::MAX);
+        bad.extend_from_slice(&sk);
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_MULTI_RESIDUE, &bad)).is_none());
+    }
+
+    fn msg_sketch_bytes(msg: &Msg) -> Vec<u8> {
+        match msg {
+            Msg::MultiResidue { sketch, .. } => sketch.to_bytes(),
+            _ => unreachable!(),
         }
     }
 

@@ -77,6 +77,7 @@ pub use stats::{ServerStats, TenantStats};
 use crate::decoder::{DecoderCache, DecoderStore};
 use crate::protocol::wire::Msg;
 use crate::setx::endpoint::{Endpoint, Step};
+use crate::setx::multi::{MultiCoordinator, MultiError, MultiReport};
 use crate::setx::transport::frame_extent;
 use crate::setx::{Setx, SetxConfig, SetxError, SetxReport};
 use crate::sketch::SketchSource;
@@ -130,6 +131,7 @@ pub struct ServerBuilder {
     busy_retry_hint_ms: u32,
     tenant_quota: Option<usize>,
     extra_tenants: Vec<(u32, Vec<u64>)>,
+    multi_tenants: Vec<(u32, Vec<u64>, u32)>,
 }
 
 impl ServerBuilder {
@@ -217,6 +219,18 @@ impl ServerBuilder {
         self
     }
 
+    /// Pre-register a *coordinator* tenant: spokes joining `namespace` with a
+    /// multi-party hello ([`crate::setx::multi::Party`]) are gathered into N-party
+    /// rounds (`parties` total, the tenant's resident `set` being party 0) and driven
+    /// over the poller pool by a shared sans-io [`MultiCoordinator`]. When a round
+    /// completes, the next multi-party join starts a fresh one; completed rounds are
+    /// drained via [`ServerHandle::take_multi_reports`]. Ordinary two-party clients of
+    /// the same namespace are still served against `set` as usual.
+    pub fn multi_tenant(mut self, namespace: u32, set: Vec<u64>, parties: u32) -> Self {
+        self.multi_tenants.push((namespace, set, parties));
+        self
+    }
+
     /// Bind the listener and start the poller pool. The returned handle is the server:
     /// drop it (or call [`ServerHandle::shutdown`]) to stop.
     pub fn bind(self, addr: impl ToSocketAddrs) -> Result<ServerHandle, SetxError> {
@@ -235,13 +249,49 @@ impl ServerBuilder {
         let set0 = Arc::new(self.endpoint.set().to_vec());
         tenants.insert(
             0u32,
-            TenantState::new(0, set0, pool_capacity, store_capacity, tenant_quota),
+            TenantState::new(0, set0, pool_capacity, store_capacity, tenant_quota, None),
         );
         for (ns, set) in self.extra_tenants {
             tenants.insert(
                 ns,
-                TenantState::new(ns, Arc::new(set), pool_capacity, store_capacity, tenant_quota),
+                TenantState::new(
+                    ns,
+                    Arc::new(set),
+                    pool_capacity,
+                    store_capacity,
+                    tenant_quota,
+                    None,
+                ),
             );
+        }
+        for (ns, set, parties) in self.multi_tenants {
+            tenants.insert(
+                ns,
+                TenantState::new(
+                    ns,
+                    Arc::new(set),
+                    pool_capacity,
+                    store_capacity,
+                    tenant_quota,
+                    Some(parties),
+                ),
+            );
+        }
+
+        // Wake pipes are created before the pollers so `Shared` can own the write ends:
+        // any thread (a poller delivering cross-connection multi-party frames, or the
+        // handle shutting down) can then interrupt every `poll` immediately.
+        let mut wake_rxs = Vec::with_capacity(self.workers);
+        let mut wakers = Vec::with_capacity(self.workers);
+        for _ in 0..self.workers {
+            let (wake_tx, wake_rx) = UnixStream::pair()?;
+            wake_rx.set_nonblocking(true)?;
+            // Nonblocking on the write end too: a wake byte dropped against a full pipe
+            // is free (the pipe being non-empty is already a pending wake), while a
+            // blocking write there could stall a poller mid-delivery.
+            wake_tx.set_nonblocking(true)?;
+            wakers.push(wake_tx);
+            wake_rxs.push(wake_rx);
         }
 
         let shared = Arc::new(Shared {
@@ -259,15 +309,12 @@ impl ServerBuilder {
             pool_capacity,
             store_capacity,
             tenant_quota,
+            wakers,
         });
 
         let listener = Arc::new(listener);
         let mut pollers = Vec::with_capacity(self.workers);
-        let mut wakers = Vec::with_capacity(self.workers);
-        for w in 0..self.workers {
-            let (wake_tx, wake_rx) = UnixStream::pair()?;
-            wake_rx.set_nonblocking(true)?;
-            wakers.push(wake_tx);
+        for (w, wake_rx) in wake_rxs.into_iter().enumerate() {
             let shared = Arc::clone(&shared);
             let listener = Arc::clone(&listener);
             pollers.push(
@@ -277,7 +324,7 @@ impl ServerBuilder {
                     .expect("spawn server poller"),
             );
         }
-        Ok(ServerHandle { shared, addr, pollers, wakers })
+        Ok(ServerHandle { shared, addr, pollers })
     }
 }
 
@@ -296,6 +343,10 @@ struct TenantState {
     store: Option<Arc<SketchStore>>,
     quota: usize,
     counters: TenantCounters,
+    /// `Some` iff this is a coordinator tenant (registered via
+    /// [`ServerBuilder::multi_tenant`]): the slot through which multi-party joins are
+    /// gathered into rounds.
+    round: Option<Mutex<RoundSlot>>,
 }
 
 impl TenantState {
@@ -305,6 +356,7 @@ impl TenantState {
         pool_capacity: usize,
         store_capacity: usize,
         quota: usize,
+        parties: Option<u32>,
     ) -> Arc<TenantState> {
         Arc::new(TenantState {
             namespace,
@@ -314,6 +366,7 @@ impl TenantState {
             set: Mutex::new(set),
             quota,
             counters: TenantCounters::default(),
+            round: parties.map(|n| Mutex::new(RoundSlot::new(n))),
         })
     }
 
@@ -336,6 +389,69 @@ impl TenantState {
     }
 }
 
+/// One coordinator tenant's multi-party machinery. At most one round is in flight per
+/// tenant at a time; the [`MultiCoordinator`] itself is sans-io, so the slot also
+/// carries per-party outboxes ferrying its emitted frames to whichever poller owns each
+/// spoke's connection (one spoke's frame can release barrier frames for spokes polled
+/// by other threads).
+struct RoundSlot {
+    /// Round size (total parties, the tenant's resident set being party 0).
+    parties: u32,
+    /// `Some` while a round is in flight; `None` between rounds. The first multi-party
+    /// join after a round completes starts the next one.
+    coordinator: Option<MultiCoordinator>,
+    /// Serialized coordinator→spoke frames awaiting pickup, keyed by party id. Every
+    /// poller drains its own connections' entries each loop iteration; a wake byte
+    /// makes that prompt rather than poll-cap bounded.
+    outboxes: HashMap<u32, Vec<u8>>,
+    /// Completed rounds, oldest first, until [`ServerHandle::take_multi_reports`]
+    /// drains them (bounded so an unobserved server cannot grow without limit).
+    reports: Vec<MultiReport>,
+    /// When to stop waiting for the roster and run with whoever joined. Set when a
+    /// round starts; `None` once it fires (or when the server runs without deadlines).
+    join_deadline: Option<Instant>,
+}
+
+impl RoundSlot {
+    fn new(parties: u32) -> RoundSlot {
+        RoundSlot {
+            parties,
+            coordinator: None,
+            outboxes: HashMap::new(),
+            reports: Vec::new(),
+            join_deadline: None,
+        }
+    }
+
+    /// Serialize coordinator-emitted frames into the per-party outboxes.
+    fn queue(&mut self, frames: Vec<(u32, Msg)>) {
+        for (party, msg) in frames {
+            self.outboxes.entry(party).or_default().extend_from_slice(&msg.to_bytes());
+        }
+    }
+
+    /// If the in-flight round just finished, finalize it: charge each party's outcome
+    /// to the tenant's stats shard and park the report for
+    /// [`ServerHandle::take_multi_reports`].
+    fn finish_if_done(&mut self, shared: &Shared, counters: &TenantCounters) {
+        if self.coordinator.as_ref().map_or(false, |c| c.is_done()) {
+            let report =
+                self.coordinator.take().expect("round checked present").into_report();
+            for p in &report.parties {
+                if p.error.is_none() {
+                    shared.stats.serve(counters, &p.comm);
+                } else {
+                    shared.stats.fail(Some(counters));
+                }
+            }
+            if self.reports.len() >= 64 {
+                self.reports.remove(0);
+            }
+            self.reports.push(report);
+        }
+    }
+}
+
 /// State shared by the poller threads and the handle.
 struct Shared {
     cfg: SetxConfig,
@@ -355,11 +471,22 @@ struct Shared {
     pool_capacity: usize,
     store_capacity: usize,
     tenant_quota: usize,
+    /// One wake-pipe write end per poller; a byte interrupts that poller's `poll`.
+    wakers: Vec<UnixStream>,
 }
 
 impl Shared {
     fn tenant(&self, namespace: u32) -> Option<Arc<TenantState>> {
         self.tenants.read().expect("tenant map poisoned").get(&namespace).cloned()
+    }
+
+    /// Interrupt every poller so cross-thread work (multi-party outbox deliveries,
+    /// shutdown) is observed now rather than at the 250 ms poll cap.
+    fn wake_all(&self) {
+        for w in &self.wakers {
+            let mut end: &UnixStream = w;
+            let _ = end.write(&[1]);
+        }
     }
 
     fn record_failure(&self, sid: u64, err: &SetxError) {
@@ -389,6 +516,7 @@ impl SetxServer {
             busy_retry_hint_ms: 50,
             tenant_quota: None,
             extra_tenants: Vec::new(),
+            multi_tenants: Vec::new(),
         }
     }
 }
@@ -399,7 +527,6 @@ pub struct ServerHandle {
     shared: Arc<Shared>,
     addr: SocketAddr,
     pollers: Vec<JoinHandle<()>>,
-    wakers: Vec<UnixStream>,
 }
 
 impl ServerHandle {
@@ -525,6 +652,21 @@ impl ServerHandle {
         self.replace_tenant_set(0, set);
     }
 
+    /// Drain the completed multi-party rounds of a coordinator tenant, oldest first.
+    /// Empty for unknown namespaces, for tenants without a coordinator role (see
+    /// [`ServerBuilder::multi_tenant`]), and when no round has finished since the last
+    /// call.
+    pub fn take_multi_reports(&self, namespace: u32) -> Vec<MultiReport> {
+        self.shared
+            .tenant(namespace)
+            .and_then(|t| {
+                t.round.as_ref().map(|r| {
+                    std::mem::take(&mut r.lock().expect("round slot poisoned").reports)
+                })
+            })
+            .unwrap_or_default()
+    }
+
     /// Graceful shutdown: stop accepting, drain every resident connection to
     /// completion, join the pollers, and return the final stats.
     pub fn shutdown(mut self) -> ServerStats {
@@ -536,10 +678,7 @@ impl ServerHandle {
         if !self.shared.shutdown.swap(true, Ordering::SeqCst) {
             // One byte down each wake pipe interrupts the pollers' `poll` immediately;
             // they re-read the flag, stop polling the listener, and drain.
-            for w in &self.wakers {
-                let mut end: &UnixStream = w;
-                let _ = end.write(&[1]);
-            }
+            self.shared.wake_all();
         }
         for handle in self.pollers.drain(..) {
             let _ = handle.join();
@@ -572,6 +711,9 @@ enum ConnState {
     AwaitRoute,
     /// Routed: a live sans-io endpoint pinned to its tenant.
     Live { endpoint: Endpoint<'static>, tenant: Arc<TenantState> },
+    /// Routed as one spoke of a coordinator tenant's multi-party round: frames flow
+    /// through the tenant's shared [`RoundSlot`] rather than a private endpoint.
+    MultiParty { tenant: Arc<TenantState>, party: u32 },
     /// Flushing a final `Busy` frame, then closing (never routed to a session).
     Closing,
 }
@@ -696,13 +838,28 @@ fn poller_loop(shared: &Arc<Shared>, listener: &TcpListener, wake: &UnixStream) 
             shared.stats.busy_workers.fetch_sub(1, Ordering::SeqCst);
         }
 
+        // Cross-poller deliveries: a frame handled on another thread may have queued
+        // multi-party bytes for connections this poller owns.
+        for conn in conns.iter_mut() {
+            if drain_multi_outbox(shared, conn) {
+                if let Some(t) = shared.session_timeout {
+                    conn.deadline = Some(Instant::now() + t);
+                }
+            }
+        }
+
         // Close finished connections and enforce deadlines (reverse order so
         // `swap_remove` never disturbs an unvisited index).
         let now = Instant::now();
         let mut j = conns.len();
         while j > 0 {
             j -= 1;
-            let timed_out = conns[j].deadline.map_or(false, |d| now >= d);
+            let mut timed_out = conns[j].deadline.map_or(false, |d| now >= d);
+            if timed_out && multi_barrier_parked(&conns[j]) {
+                // Alive by construction: the round is waiting on *other* parties.
+                conns[j].deadline = shared.session_timeout.map(|t| now + t);
+                timed_out = false;
+            }
             if timed_out
                 && conns[j].done.is_none()
                 && !matches!(conns[j].state, ConnState::Closing)
@@ -855,6 +1012,7 @@ fn pump_frames(shared: &Shared, conn: &mut Conn) {
         match conn.state {
             ConnState::AwaitRoute => route(shared, conn, &msg),
             ConnState::Live { .. } => feed_live(conn, &msg),
+            ConnState::MultiParty { .. } => feed_multi(shared, conn, &msg),
             ConnState::Closing => {}
         }
     }
@@ -866,8 +1024,8 @@ fn pump_frames(shared: &Shared, conn: &mut Conn) {
 /// `EstHello` is then fed to the fresh endpoint (the server's own opening frames are
 /// queued first, preserving the order the blocking pump produced).
 fn route(shared: &Shared, conn: &mut Conn, msg: &Msg) {
-    let ns = match msg {
-        Msg::EstHello { namespace, .. } => *namespace,
+    let (ns, party) = match msg {
+        Msg::EstHello { namespace, party, .. } => (*namespace, *party),
         _ => {
             conn.done = Some(Err(SetxError::MalformedFrame("expected est-hello")));
             return;
@@ -878,6 +1036,10 @@ fn route(shared: &Shared, conn: &mut Conn, msg: &Msg) {
         reject(shared, conn, ns);
         return;
     };
+    if party.is_some() {
+        route_multi(shared, conn, msg, tenant);
+        return;
+    }
     let live = tenant.counters.inflight.fetch_add(1, Ordering::SeqCst) + 1;
     if live > tenant.quota {
         tenant.counters.inflight.fetch_sub(1, Ordering::SeqCst);
@@ -913,6 +1075,156 @@ fn reject(shared: &Shared, conn: &mut Conn, namespace: u32) {
     conn.state = ConnState::Closing;
     conn.deadline = Some(Instant::now() + Duration::from_millis(500));
     flush_write(conn);
+}
+
+/// A multi-party hello on an admitted connection: the spoke joins (or starts) its
+/// tenant's round. The shared coordinator answers through the slot's outboxes — this
+/// connection's entry is pulled immediately; frames released for *other* spokes stay
+/// queued for their owning pollers, which a wake byte summons.
+fn route_multi(shared: &Shared, conn: &mut Conn, msg: &Msg, tenant: Arc<TenantState>) {
+    let Some(round) = &tenant.round else {
+        // Not a coordinator tenant: a multi-party join has nowhere to go.
+        shared.stats.reject(Some(&tenant.counters));
+        reject(shared, conn, tenant.namespace);
+        return;
+    };
+    let live = tenant.counters.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+    if live > tenant.quota {
+        tenant.counters.inflight.fetch_sub(1, Ordering::SeqCst);
+        shared.stats.reject(Some(&tenant.counters));
+        reject(shared, conn, tenant.namespace);
+        return;
+    }
+    let mut slot = round.lock().expect("round slot poisoned");
+    if slot.coordinator.is_none() {
+        let mut cfg = shared.cfg;
+        cfg.engine.namespace = tenant.namespace;
+        match MultiCoordinator::new(&cfg, tenant.current_set(), slot.parties) {
+            Ok(coord) => {
+                slot.outboxes.clear();
+                slot.coordinator = Some(coord);
+                slot.join_deadline =
+                    shared.session_timeout.map(|t| Instant::now() + t);
+            }
+            Err(_) => {
+                drop(slot);
+                tenant.counters.inflight.fetch_sub(1, Ordering::SeqCst);
+                shared.stats.reject(Some(&tenant.counters));
+                reject(shared, conn, tenant.namespace);
+                return;
+            }
+        }
+    }
+    let coord = slot.coordinator.as_mut().expect("round just ensured");
+    match coord.route_hello(msg) {
+        Ok((party, frames)) => {
+            let fan_out = frames.iter().any(|(p, _)| *p != party);
+            slot.queue(frames);
+            let mine = slot.outboxes.remove(&party).unwrap_or_default();
+            drop(slot);
+            shared.stats.route_accepted(&tenant.counters);
+            conn.write_buf.extend_from_slice(&mine);
+            conn.state = ConnState::MultiParty { tenant, party };
+            if fan_out {
+                shared.wake_all();
+            }
+        }
+        // Duplicate ids, mid-round joins, count mismatches: this *connection* is turned
+        // away with `Busy`; the round and every joined spoke stay intact.
+        Err(_) => {
+            drop(slot);
+            tenant.counters.inflight.fetch_sub(1, Ordering::SeqCst);
+            shared.stats.reject(Some(&tenant.counters));
+            reject(shared, conn, tenant.namespace);
+        }
+    }
+}
+
+/// Feed one frame from a routed spoke to its tenant's shared coordinator, then pick up
+/// whatever the round owes *this* connection (frames for other spokes stay in the
+/// outboxes for their owning pollers).
+fn feed_multi(shared: &Shared, conn: &mut Conn, msg: &Msg) {
+    let (tenant, party) = match &conn.state {
+        ConnState::MultiParty { tenant, party } => (Arc::clone(tenant), *party),
+        _ => return,
+    };
+    let Some(round) = &tenant.round else { return };
+    let mut slot = round.lock().expect("round slot poisoned");
+    let Some(coord) = slot.coordinator.as_mut() else {
+        // The round this spoke belonged to already finalized (completed, or the spoke
+        // was dropped at a deadline): any straggler frame just closes the connection.
+        drop(slot);
+        conn.state = ConnState::Closing;
+        conn.deadline = Some(Instant::now() + Duration::from_millis(500));
+        return;
+    };
+    let frames = coord.on_msg(party, msg);
+    let fan_out = frames.iter().any(|(p, _)| *p != party);
+    slot.queue(frames);
+    slot.finish_if_done(shared, &tenant.counters);
+    let mine = slot.outboxes.remove(&party).unwrap_or_default();
+    drop(slot);
+    conn.write_buf.extend_from_slice(&mine);
+    if fan_out {
+        shared.wake_all();
+    }
+}
+
+/// Deliver any outbox bytes a multi-party round owes this connection — they may have
+/// been queued by a frame *another* poller processed — and fire the round's join
+/// deadline when it comes due (every poller runs this each loop iteration, so the
+/// check is at worst poll-cap late). Returns whether bytes moved.
+fn drain_multi_outbox(shared: &Shared, conn: &mut Conn) -> bool {
+    let pending = match &conn.state {
+        ConnState::MultiParty { tenant, party } => {
+            let Some(round) = &tenant.round else { return false };
+            let mut slot = round.lock().expect("round slot poisoned");
+            let join_due = slot.join_deadline.map_or(false, |d| Instant::now() >= d)
+                && slot.coordinator.as_ref().map_or(false, |c| c.roster_open());
+            if join_due {
+                slot.join_deadline = None;
+                let frames =
+                    slot.coordinator.as_mut().expect("roster checked").deadline_join();
+                let fan_out = !frames.is_empty();
+                slot.queue(frames);
+                slot.finish_if_done(shared, &tenant.counters);
+                if fan_out {
+                    shared.wake_all();
+                }
+            }
+            slot.outboxes.remove(party)
+        }
+        _ => None,
+    };
+    match pending {
+        Some(bytes) if !bytes.is_empty() => {
+            conn.write_buf.extend_from_slice(&bytes);
+            flush_write(conn);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Whether a multi-party spoke's expired deadline should be forgiven: the round is in
+/// flight and is *not* waiting on this party — it is parked at a barrier for the other
+/// parties, so its silence is legitimate. A party the round *is* awaiting stays subject
+/// to the deadline; that is exactly the stalled-spoke case, surfaced as
+/// [`MultiError::PartyTimeout`] when [`finalize`] drops it from the round.
+fn multi_barrier_parked(conn: &Conn) -> bool {
+    match &conn.state {
+        ConnState::MultiParty { tenant, party } => match &tenant.round {
+            Some(round) => {
+                let slot = round.lock().expect("round slot poisoned");
+                match &slot.coordinator {
+                    Some(c) => c.joined(*party) && !c.awaiting(*party),
+                    None => false,
+                }
+            }
+            None => false,
+        },
+        _ => false,
+    }
 }
 
 /// Feed one frame to a live endpoint and queue whatever it owes the peer.
@@ -1024,6 +1336,33 @@ fn finalize(shared: &Shared, conn: Conn) {
                 }
             }
         }
+        ConnState::MultiParty { tenant, party } => {
+            tenant.counters.inflight.fetch_sub(1, Ordering::SeqCst);
+            let mut dropped = false;
+            if let Some(round) = &tenant.round {
+                let mut slot = round.lock().expect("round slot poisoned");
+                if let Some(coord) = slot.coordinator.as_mut() {
+                    // Losing the connection mid-round drops the party so the other
+                    // N−1 spokes are not wedged. A spoke that already completed the
+                    // round is immune (`drop_party` is a no-op for it), and a round
+                    // already finalized has no coordinator to consult.
+                    dropped = coord.joined(party);
+                    let frames =
+                        coord.drop_party(party, MultiError::PartyTimeout { party });
+                    slot.queue(frames);
+                    slot.finish_if_done(shared, &tenant.counters);
+                }
+                drop(slot);
+                if dropped {
+                    shared.wake_all();
+                }
+            }
+            if dropped {
+                if let Some(Err(err)) = &conn.done {
+                    shared.record_failure(conn.sid, err);
+                }
+            }
+        }
     }
 }
 
@@ -1123,5 +1462,28 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.unrouted_rejected, 1);
         assert_eq!(stats.sessions_served, 1);
+    }
+
+    #[test]
+    fn multi_join_to_a_plain_tenant_is_rejected_busy() {
+        use crate::setx::multi::Party;
+        let set: Vec<u64> = (0..400).collect();
+        let endpoint = Setx::builder(&set).build().unwrap();
+        let cfg = *endpoint.config();
+        let server =
+            SetxServer::builder(endpoint).workers(1).bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        // Tenant 0 is an ordinary two-party tenant; a multi-party join must be turned
+        // away with a typed Busy, not a hang or a protocol fault.
+        let mut party = Party::new(&cfg, (0..100).collect(), 1, 3).unwrap();
+        let mut transport = TcpTransport::connect(addr).unwrap();
+        let err = party.run(&mut transport).unwrap_err();
+        match err {
+            SetxError::ServerBusy { namespace, .. } => assert_eq!(namespace, 0),
+            other => panic!("expected ServerBusy for a plain tenant, got {other:?}"),
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.sessions_served, 0);
+        assert_eq!(stats.sessions_rejected, 1);
     }
 }

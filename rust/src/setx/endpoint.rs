@@ -121,7 +121,7 @@ fn phase_label(phase: &EpPhase) -> &'static str {
     }
 }
 
-fn failure_to_reason(f: DecodeFailure) -> u8 {
+pub(crate) fn failure_to_reason(f: DecodeFailure) -> u8 {
     match f {
         DecodeFailure::SketchRecovery => REASON_SKETCH_RECOVERY,
         DecodeFailure::ResidueDecode => REASON_RESIDUE_DECODE,
@@ -129,7 +129,7 @@ fn failure_to_reason(f: DecodeFailure) -> u8 {
     }
 }
 
-fn reason_to_failure(r: u8) -> DecodeFailure {
+pub(crate) fn reason_to_failure(r: u8) -> DecodeFailure {
     match r {
         REASON_SKETCH_RECOVERY => DecodeFailure::SketchRecovery,
         REASON_RESIDUE_DECODE => DecodeFailure::ResidueDecode,
@@ -152,6 +152,7 @@ pub(crate) fn build_est_hello(
                 strata: None,
                 minhash: None,
                 namespace: cfg.namespace(),
+                party: None,
             },
             None,
         ),
@@ -167,6 +168,7 @@ pub(crate) fn build_est_hello(
                 strata: Some(strata.to_bytes()),
                 minhash: Some(minhash.to_bytes()),
                 namespace: cfg.namespace(),
+                party: None,
             };
             (msg, Some((strata, minhash)))
         }
@@ -424,6 +426,21 @@ impl<'a> Endpoint<'a> {
         ep
     }
 
+    /// Owned-set variant of [`Endpoint::with_negotiated`]: the multi-party coordinator
+    /// negotiates per spoke during its collect phase, then parks one inner endpoint per
+    /// out-of-sync spoke in its own state (and the server parks them across poll
+    /// iterations), so the endpoint must not borrow the caller's frame.
+    pub(crate) fn new_owned_negotiated(
+        cfg: SetxConfig,
+        set: Arc<Vec<u64>>,
+        client: bool,
+        nego: Negotiated,
+    ) -> Endpoint<'static> {
+        let mut ep = Endpoint::new_owned(cfg, set, client);
+        ep.nego = Some(nego);
+        ep
+    }
+
     /// Opening frames the transport must deliver before the first `on_msg`.
     pub(crate) fn start(&mut self) -> Vec<Msg> {
         if let Some(nego) = self.nego {
@@ -457,6 +474,7 @@ impl<'a> Endpoint<'a> {
                     strata,
                     minhash,
                     namespace,
+                    party,
                 },
             ) => {
                 self.record_recv(msg);
@@ -465,6 +483,14 @@ impl<'a> Endpoint<'a> {
                     return Step::Fatal(
                         Vec::new(),
                         SetxError::ConfigMismatch { ours, theirs: *config_fingerprint },
+                    );
+                }
+                // A multi-party join frame aimed at a plain two-party endpoint is a
+                // topology mismatch, not something to silently downgrade.
+                if party.is_some() {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("multi-party est-hello at two-party endpoint"),
                     );
                 }
                 // The namespace routes the connection to a tenant; both ends must agree.

@@ -35,6 +35,7 @@
 //!   of failing opaquely.
 
 pub(crate) mod endpoint;
+pub mod multi;
 pub mod parallel;
 pub mod transport;
 

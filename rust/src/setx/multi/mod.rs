@@ -1,0 +1,1486 @@
+//! **Multi-party SetX**: one coordinator, N−1 spokes, everyone learns `∩ᵢSᵢ`.
+//!
+//! The two-party protocol reconciles a *pair* of sets through one linear CS sketch
+//! exchange. Linearity is what generalizes it: a sum of sketches is the sketch of the
+//! multiset union, so a single coordinator can collect every party's sketch under one
+//! shared matrix, aggregate them, and repair each spoke against its own residue — a star
+//! topology with per-spoke failure and escalation isolation (the same receiver/N−1-sender
+//! shape the multi-party PSI literature settles on, and exactly the topology
+//! [`crate::server::SetxServer`] already serves).
+//!
+//! ```text
+//!                    S₁ ─╮  EstHello(party 1/N) + sketch
+//!        S₂ ──────────── C ── aggregate Σ sk(Sᵢ), per-spoke repair, membership
+//!                    S₃ ─╯  ⇒ every party holds ∩ᵢSᵢ
+//! ```
+//!
+//! ## Round structure
+//!
+//! 1. **Join** — each spoke opens with the two-party `EstHello` frame plus the versioned
+//!    `party: (id, count)` trailing varints; the coordinator answers with its own hello,
+//!    and both ends run the ordinary estimator negotiation per spoke.
+//! 2. **Collect** — once all parties joined, the coordinator fixes one shared collect
+//!    geometry (sized for the *worst* spoke's estimated difference) and every spoke sends
+//!    its compressed CS sketch under it.
+//! 3. **Aggregate + repair** — the coordinator recovers each spoke's counts against its
+//!    own sketch, forms the aggregate `Σᵢ sk(Sᵢ)`, and broadcasts an
+//!    [`Msg::AggSketch`] barrier telling each spoke whether its per-party residue was
+//!    zero. Out-of-sync spokes run a full inner two-party session (same `Session`
+//!    engine, same l-escalation ladder) to exchange exact differences. Note the
+//!    *aggregate itself* is never used as a sync test — `sk(S₁)+sk(S₂) = 2·sk(C)` also
+//!    holds for `S₁ = C∪{x}, S₂ = C∖{x}` — sync is decided per party.
+//! 4. **Membership** — knowing every `C∖Sᵢ`, the coordinator computes
+//!    `∩ = C ∖ ∪ᵢ(C∖Sᵢ)` and tells each spoke exactly which of its pairwise-common
+//!    elements dropped out, as a compressed sketch of `∩` decoded against the spoke's
+//!    candidates ([`Msg::MultiResidue`], per-spoke escalation ladder).
+//! 5. **Final confirm** — once every live spoke acknowledged, a last `Confirm` broadcast
+//!    certifies that all N parties agree on `∩ᵢSᵢ`.
+//!
+//! A stalled or disconnected spoke is dropped from the round with
+//! [`MultiError::PartyTimeout`] instead of wedging the other N−1 — see
+//! [`MultiCoordinator::awaiting`] and [`MultiCoordinator::drop_party`].
+//!
+//! Entry points: [`crate::setx::Setx::multi`] / [`crate::setx::SetxBuilder::parties`]
+//! (in-process), [`net::host_round`] / [`net::join_round`] (TCP), and the
+//! [`crate::server::ServerBuilder::multi_tenant`] coordinator mode (daemon).
+
+pub mod net;
+
+use std::collections::{BTreeMap, HashSet};
+use std::sync::Arc;
+
+use crate::decoder::DecoderCache;
+use crate::entropy::{compress_sketch, recover_sketch};
+use crate::hash::hash_u64;
+use crate::metrics::CommLog;
+use crate::protocol::session::{codec_params, frame_phase};
+use crate::protocol::wire::{Msg, DIRECTIVE_IN_SYNC, DIRECTIVE_SESSION, REASON_OK};
+use crate::protocol::{uni, wire_geometry_ok, CsParams};
+use crate::sketch::{EncodeConfig, Sketch};
+
+use super::endpoint::{
+    build_est_hello, failure_to_reason, negotiate, reason_to_failure, Endpoint, Negotiated, Step,
+};
+use super::{ProtocolKind, Setx, SetxConfig, SetxError, SetxReport};
+
+/// Upper bound on `party_count` accepted by coordinator and spokes — far above any
+/// deployment, low enough that an adversarial count cannot size allocations.
+pub const MAX_PARTIES: u32 = 1 << 16;
+
+/// Soft cap on the `AggSketch` frame: the aggregate counts ride along only while the
+/// whole frame stays under this, otherwise the digest-only form is sent.
+const AGG_COUNTS_BUDGET: usize = 64 << 10;
+
+/// Collect-phase matrix seed: derived from the config seed but disjoint from every
+/// two-party attempt seed (which perturbs `cfg.seed` by attempt multiples).
+fn collect_seed(seed: u64) -> u64 {
+    hash_u64(seed, 0xA66C_5EED_0000_0001)
+}
+
+/// Per-(party, rung) membership-sketch seed — each retry and each spoke gets a fresh
+/// matrix so a pathological column layout cannot pin a spoke's ladder.
+fn membership_seed(seed: u64, party: u32, attempt: u32) -> u64 {
+    hash_u64(seed ^ (((party as u64) << 32) | attempt as u64), 0xA66D_5EED_0000_0002)
+}
+
+/// Order-sensitive hash fold over aggregate counts (coordinate i at position i).
+fn agg_digest(counts: &[i64], seed: u64) -> u64 {
+    let mut h = 0xA66D_1665_u64 ^ seed;
+    for &c in counts {
+        h = hash_u64(h ^ (c as u64), seed);
+    }
+    h
+}
+
+/// The typed error surface of the multi-party facade.
+#[derive(Debug)]
+pub enum MultiError {
+    /// Builder/validation failure (party counts, config ranges).
+    Config(String),
+    /// A spoke tried to claim a party id that is already joined. The offending
+    /// connection is rejected; the round (and the first claimer) stay intact.
+    DuplicateParty { party: u32 },
+    /// A spoke stalled past the round deadline (or disconnected) while the round was
+    /// waiting on it, and was dropped so the other N−1 parties could proceed.
+    PartyTimeout { party: u32 },
+    /// A join arrived after the round left its join phase.
+    RoundInProgress,
+    /// A spoke failed with an ordinary two-party error (config mismatch, malformed
+    /// frame, exhausted decode ladder, transport I/O).
+    Party { party: u32, error: SetxError },
+}
+
+impl std::fmt::Display for MultiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MultiError::Config(why) => write!(f, "invalid multi-party config: {why}"),
+            MultiError::DuplicateParty { party } => {
+                write!(f, "party id {party} already joined this round")
+            }
+            MultiError::PartyTimeout { party } => {
+                write!(f, "party {party} stalled past the round deadline and was dropped")
+            }
+            MultiError::RoundInProgress => write!(f, "round already past its join phase"),
+            MultiError::Party { party, error } => write!(f, "party {party}: {error}"),
+        }
+    }
+}
+
+impl std::error::Error for MultiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MultiError::Party { error, .. } => Some(error),
+            _ => None,
+        }
+    }
+}
+
+/// Per-spoke outcome inside a [`MultiReport`].
+#[derive(Debug)]
+pub struct PartyOutcome {
+    /// The spoke's party id (1-based; 0 is the coordinator itself).
+    pub party: u32,
+    /// Exact transcript of every frame exchanged with this spoke — handshake, collect,
+    /// inner repair session, membership, final confirm — at wire sizes.
+    pub comm: CommLog,
+    /// Membership-ladder rungs used (0 = the spoke's pairwise-common set was exactly the
+    /// intersection, so a bare confirm sufficed).
+    pub attempts: u32,
+    /// The spoke's collect sketch matched the coordinator's set bit-exactly (zero
+    /// per-party residue — the fast path that skips the inner session).
+    pub synced: bool,
+    /// Why this spoke did not complete the round, if it did not. Parties dropped after
+    /// the intersection was committed keep the committed value out of the result.
+    pub error: Option<MultiError>,
+}
+
+impl PartyOutcome {
+    /// Total bytes exchanged with this spoke, both directions.
+    pub fn total_bytes(&self) -> usize {
+        self.comm.total_bytes()
+    }
+}
+
+/// Outcome of a multi-party round at the coordinator.
+#[derive(Debug)]
+pub struct MultiReport {
+    /// `∩ᵢSᵢ` over the coordinator and every spoke whose difference constraint
+    /// committed, sorted ascending.
+    pub intersection: Vec<u64>,
+    /// One entry per spoke, in party-id order.
+    pub parties: Vec<PartyOutcome>,
+    /// Concatenation of every spoke's transcript — per-party bytes sum to this total by
+    /// construction.
+    pub comm: CommLog,
+}
+
+impl MultiReport {
+    /// Total conversation bytes across every spoke, both directions.
+    pub fn total_bytes(&self) -> usize {
+        self.comm.total_bytes()
+    }
+
+    /// How many spokes completed the round (coordinator excluded).
+    pub fn completed(&self) -> usize {
+        self.parties.iter().filter(|p| p.error.is_none()).count()
+    }
+}
+
+/// Coordinator-side view of one spoke.
+enum SpokeState {
+    /// Joined and negotiated; waiting for the join barrier to fix the collect geometry.
+    Joined,
+    /// Collect `Hello` out; awaiting the spoke's compressed sketch.
+    AwaitSketch,
+    /// Sketch absorbed (recovered or not); waiting for the collect barrier.
+    Sketched,
+    /// Inner two-party repair session in flight.
+    Session(Box<Endpoint<'static>>),
+    /// `C∖Sᵢ` known; waiting for the constraint barrier (the intersection commit).
+    Constrained,
+    /// Membership frame out; awaiting the spoke's verdict for this ladder rung.
+    AwaitVerdict { attempt: u32 },
+    /// Spoke acknowledged the membership round; waiting for the final barrier.
+    Settled,
+    /// Terminal (final confirm sent, or dropped/failed).
+    Done,
+}
+
+struct Spoke {
+    state: SpokeState,
+    nego: Negotiated,
+    comm: CommLog,
+    /// Collect params for this spoke (shared matrix; per-spoke entropy codec).
+    params: Option<CsParams>,
+    /// `C ∖ Sᵢ` once the constraint committed.
+    unique: Vec<u64>,
+    /// `Kᵢ ∖ ∩` — fixed at the membership barrier, re-sketched on every ladder rung.
+    drop: Vec<u64>,
+    kept_len: usize,
+    synced: bool,
+    /// Collect recovery failed — treated as out-of-sync and excluded from the aggregate.
+    needs_session: bool,
+    attempts: u32,
+    error: Option<MultiError>,
+}
+
+impl Spoke {
+    fn live(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Sans-io multi-party coordinator state machine. Feed it spoke frames via
+/// [`MultiCoordinator::route_hello`] (first frame of a connection) and
+/// [`MultiCoordinator::on_msg`]; it returns `(party, frame)` pairs the driver must
+/// deliver. Works unchanged under the in-process pump, the threaded TCP harness
+/// ([`net::host_round`]), and the server's poller pool.
+pub struct MultiCoordinator {
+    cfg: SetxConfig,
+    set: Arc<Vec<u64>>,
+    /// The coordinator's set, sorted (set-algebra phases want deterministic order).
+    sorted: Vec<u64>,
+    count: u32,
+    hello: Msg,
+    ests: Option<(
+        crate::protocol::estimate::StrataEstimator,
+        crate::protocol::estimate::MinHashEstimator,
+    )>,
+    enc: EncodeConfig,
+    spokes: BTreeMap<u32, Spoke>,
+    /// No further joins: the join barrier fired (all parties present or deadline).
+    joins_closed: bool,
+    collect_sent: bool,
+    directives_sent: bool,
+    finals_sent: bool,
+    /// `sk(C)` under the shared collect geometry.
+    sketch_c: Option<Sketch>,
+    /// Running aggregate `Σᵢ sk(Sᵢ)` (i64: a hostile spoke's recovered counts must not
+    /// overflow the fold).
+    agg: Vec<i64>,
+    parties_in_agg: u32,
+    intersection: Option<Vec<u64>>,
+}
+
+impl MultiCoordinator {
+    /// A coordinator holding set `C` (party 0) for a round of `count` parties total.
+    pub fn new(cfg: &SetxConfig, set: Arc<Vec<u64>>, count: u32) -> Result<Self, MultiError> {
+        if !(2..=MAX_PARTIES).contains(&count) {
+            return Err(MultiError::Config(format!(
+                "party count {count} outside [2, {MAX_PARTIES}]"
+            )));
+        }
+        let (mut hello, ests) = build_est_hello(cfg, &set);
+        if let Msg::EstHello { party, .. } = &mut hello {
+            *party = Some((0, count));
+        }
+        let mut sorted = (*set).clone();
+        sorted.sort_unstable();
+        Ok(MultiCoordinator {
+            cfg: *cfg,
+            set,
+            sorted,
+            count,
+            hello,
+            ests,
+            enc: EncodeConfig { threads: cfg.encode_threads },
+            spokes: BTreeMap::new(),
+            joins_closed: false,
+            collect_sent: false,
+            directives_sent: false,
+            finals_sent: false,
+            sketch_c: None,
+            agg: Vec::new(),
+            parties_in_agg: 1,
+            intersection: None,
+        })
+    }
+
+    /// Feed the opening frame of a new connection. On success returns the claimed party
+    /// id plus frames to deliver (the coordinator's own hello, and — when this join
+    /// completes the roster — the collect broadcast). On error the *connection* is
+    /// rejected; the round and every joined spoke stay intact.
+    pub fn route_hello(&mut self, msg: &Msg) -> Result<(u32, Vec<(u32, Msg)>), MultiError> {
+        let Msg::EstHello {
+            config_fingerprint,
+            set_len,
+            explicit_d,
+            strata,
+            minhash,
+            namespace,
+            party: Some((id, count)),
+        } = msg
+        else {
+            return Err(MultiError::Party {
+                party: 0,
+                error: SetxError::MalformedFrame("multi-party join must open with a party hello"),
+            });
+        };
+        let (id, count) = (*id, *count);
+        let reject = |error| MultiError::Party { party: id, error };
+        if count != self.count || id == 0 {
+            return Err(reject(SetxError::MalformedFrame("party id/count mismatch")));
+        }
+        if self.joins_closed {
+            return Err(MultiError::RoundInProgress);
+        }
+        if self.spokes.contains_key(&id) {
+            return Err(MultiError::DuplicateParty { party: id });
+        }
+        let ours = self.cfg.fingerprint();
+        if *config_fingerprint != ours {
+            return Err(reject(SetxError::ConfigMismatch { ours, theirs: *config_fingerprint }));
+        }
+        if *namespace != self.cfg.namespace() {
+            return Err(reject(SetxError::MalformedFrame("party hello namespace mismatch")));
+        }
+        let Ok(peer_len) = usize::try_from(*set_len) else {
+            return Err(reject(SetxError::MalformedFrame("set_len")));
+        };
+        let nego = negotiate(
+            &self.cfg,
+            false,
+            self.set.len(),
+            self.ests.as_ref(),
+            peer_len,
+            *explicit_d,
+            strata.as_deref(),
+            minhash.as_deref(),
+        )
+        .map_err(reject)?;
+        let mut spoke = Spoke {
+            state: SpokeState::Joined,
+            nego,
+            comm: CommLog::new(),
+            params: None,
+            unique: Vec::new(),
+            drop: Vec::new(),
+            kept_len: 0,
+            synced: false,
+            needs_session: false,
+            attempts: 0,
+            error: None,
+        };
+        spoke.comm.record(true, frame_phase(msg), msg.wire_len());
+        spoke.comm.record(false, frame_phase(&self.hello), self.hello.wire_len());
+        self.spokes.insert(id, spoke);
+        let mut out = vec![(id, self.hello.clone())];
+        out.extend(self.advance());
+        Ok((id, out))
+    }
+
+    /// The join deadline fired: proceed with whoever joined. Missing party ids are *not*
+    /// marked failed (they never existed as connections) — the round simply runs with
+    /// the present roster.
+    pub fn deadline_join(&mut self) -> Vec<(u32, Msg)> {
+        self.joins_closed = true;
+        self.advance()
+    }
+
+    /// True while the round still expects a frame from this spoke. The per-connection
+    /// deadline machinery must consult this before dropping: a spoke parked at a barrier
+    /// (waiting on *other* parties) is idle legitimately.
+    pub fn awaiting(&self, party: u32) -> bool {
+        match self.spokes.get(&party).filter(|s| s.live()).map(|s| &s.state) {
+            Some(SpokeState::AwaitSketch)
+            | Some(SpokeState::Session(_))
+            | Some(SpokeState::AwaitVerdict { .. }) => true,
+            Some(_) | None => false,
+        }
+    }
+
+    /// Whether `party` has joined (and not been dropped).
+    pub fn joined(&self, party: u32) -> bool {
+        self.spokes.get(&party).is_some_and(|s| s.live())
+    }
+
+    /// Whether the round still accepts joins (roster incomplete and no join deadline
+    /// yet). Drivers use this to gate their accept loop.
+    pub fn roster_open(&self) -> bool {
+        !self.joins_closed
+    }
+
+    /// Drop a spoke from the round (timeout, disconnect): every other party proceeds. A
+    /// spoke dropped before the intersection commits is excluded from it; one dropped
+    /// after keeps the committed value intact and is merely reported failed.
+    pub fn drop_party(&mut self, party: u32, err: MultiError) -> Vec<(u32, Msg)> {
+        if let Some(spoke) = self.spokes.get_mut(&party) {
+            // A spoke that already completed the round (`Done` without error) is immune:
+            // its transport closing after the final confirm is the normal teardown.
+            if spoke.live() && !matches!(spoke.state, SpokeState::Done) {
+                spoke.error = Some(err);
+                spoke.state = SpokeState::Done;
+            }
+        }
+        self.advance()
+    }
+
+    /// The round finished: every spoke is settled, failed, or dropped.
+    pub fn is_done(&self) -> bool {
+        self.finals_sent
+            || (self.joins_closed
+                && self
+                    .spokes
+                    .values()
+                    .all(|s| matches!(s.state, SpokeState::Done)))
+    }
+
+    /// Feed one frame from a joined spoke.
+    pub fn on_msg(&mut self, party: u32, msg: &Msg) -> Vec<(u32, Msg)> {
+        let Some(spoke) = self.spokes.get_mut(&party) else {
+            return Vec::new();
+        };
+        if !spoke.live() {
+            return Vec::new();
+        }
+        let mut out: Vec<(u32, Msg)> = Vec::new();
+        match (std::mem::replace(&mut spoke.state, SpokeState::Done), msg) {
+            (SpokeState::AwaitSketch, Msg::Sketch(sk_msg)) => {
+                spoke.comm.record(true, frame_phase(msg), msg.wire_len());
+                let params = spoke.params.as_ref().expect("collect params set with hello");
+                let counts = &self.sketch_c.as_ref().expect("sk(C) encoded at collect").counts;
+                let recovered = (sk_msg.n == counts.len())
+                    .then(|| recover_sketch(sk_msg, counts, &codec_params(params, true)))
+                    .flatten();
+                match recovered {
+                    Some((x_hat, _, _)) => {
+                        spoke.synced = counts.iter().zip(&x_hat).all(|(c, x)| c == x);
+                        for (a, x) in self.agg.iter_mut().zip(&x_hat) {
+                            *a += *x as i64;
+                        }
+                        self.parties_in_agg += 1;
+                    }
+                    None => {
+                        // Could not reconcile the spoke's sketch with ours: exclude it
+                        // from the aggregate and let the inner session repair the pair.
+                        spoke.needs_session = true;
+                    }
+                }
+                spoke.state = SpokeState::Sketched;
+            }
+            (SpokeState::Session(mut ep), _) => match ep.on_msg(msg) {
+                Step::Send(msgs) => {
+                    spoke.state = SpokeState::Session(ep);
+                    out.extend(msgs.into_iter().map(|m| (party, m)));
+                }
+                Step::Continue => spoke.state = SpokeState::Session(ep),
+                Step::Finish(msgs, report) => {
+                    out.extend(msgs.into_iter().map(|m| (party, m)));
+                    spoke.comm.extend(&report.comm);
+                    spoke.attempts = report.attempts;
+                    spoke.unique = report.local_unique;
+                    spoke.state = SpokeState::Constrained;
+                }
+                Step::Fatal(msgs, error) => {
+                    out.extend(msgs.into_iter().map(|m| (party, m)));
+                    spoke.error = Some(MultiError::Party { party, error });
+                }
+            },
+            (SpokeState::AwaitVerdict { attempt }, Msg::Confirm { ok, reason, attempt: a }) => {
+                spoke.comm.record(true, frame_phase(msg), msg.wire_len());
+                if *a != attempt {
+                    spoke.error = Some(MultiError::Party {
+                        party,
+                        error: SetxError::MalformedFrame("membership confirm attempt skew"),
+                    });
+                } else if *ok {
+                    spoke.state = SpokeState::Settled;
+                } else if attempt + 1 < self.cfg.max_attempts {
+                    let next = attempt + 1;
+                    let frame = membership_frame(
+                        &self.cfg,
+                        self.enc,
+                        self.intersection.as_ref().expect("membership implies commit"),
+                        party,
+                        next,
+                        spoke.kept_len,
+                        &spoke.drop,
+                    );
+                    spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                    spoke.attempts = next + 1;
+                    spoke.state = SpokeState::AwaitVerdict { attempt: next };
+                    out.push((party, frame));
+                } else {
+                    // Ladder exhausted: echo the verdict as a teardown so the spoke sees
+                    // a terminal Confirm (not a silent close), then fail the party.
+                    let frame = Msg::Confirm { ok: false, reason: *reason, attempt };
+                    spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                    out.push((party, frame));
+                    spoke.error = Some(MultiError::Party {
+                        party,
+                        error: SetxError::Decode {
+                            failure: reason_to_failure(*reason),
+                            attempts: attempt + 1,
+                        },
+                    });
+                }
+            }
+            (_, _) => {
+                spoke.comm.record(true, frame_phase(msg), msg.wire_len());
+                spoke.error = Some(MultiError::Party {
+                    party,
+                    error: SetxError::MalformedFrame("frame out of phase for this spoke"),
+                });
+            }
+        }
+        out.extend(self.advance());
+        out
+    }
+
+    /// Run every barrier that can fire, in order, returning the frames it produces.
+    fn advance(&mut self) -> Vec<(u32, Msg)> {
+        let mut out = Vec::new();
+        // Join barrier: full roster (or deadline) → fix the shared collect geometry.
+        if !self.collect_sent
+            && (self.joins_closed || self.spokes.len() as u32 == self.count - 1)
+        {
+            self.joins_closed = true;
+            self.collect_sent = true;
+            let live: Vec<u32> = self.live_ids();
+            if !live.is_empty() {
+                // One matrix for every spoke, sized for the worst estimated difference.
+                let l = live
+                    .iter()
+                    .map(|id| {
+                        let n = self.spokes[id].nego;
+                        CsParams::tuned_uni_with_safety(n.n_union, n.d_hat, self.cfg.safety).l
+                    })
+                    .max()
+                    .unwrap_or(1);
+                let seed = collect_seed(self.cfg.seed);
+                let base = CsParams {
+                    l,
+                    m: 7,
+                    seed,
+                    universe_bits: self.cfg.universe_bits,
+                    est_a_unique: 0,
+                    est_b_unique: 0,
+                };
+                let sk = Sketch::encode_par(base.matrix(), &self.set, self.enc);
+                self.agg = sk.counts.iter().map(|&c| c as i64).collect();
+                self.sketch_c = Some(sk);
+                for id in live {
+                    let spoke = self.spokes.get_mut(&id).expect("live id");
+                    let params = CsParams {
+                        est_a_unique: spoke.nego.est_peer,
+                        est_b_unique: spoke.nego.est_local,
+                        ..base
+                    };
+                    let hello = Msg::Hello {
+                        l: params.l,
+                        m: params.m,
+                        seed: params.seed,
+                        universe_bits: params.universe_bits,
+                        est_initiator_unique: params.est_a_unique as u64,
+                        est_responder_unique: params.est_b_unique as u64,
+                        set_len: self.set.len() as u64,
+                        namespace: self.cfg.namespace(),
+                    };
+                    spoke.comm.record(false, frame_phase(&hello), hello.wire_len());
+                    spoke.params = Some(params);
+                    spoke.state = SpokeState::AwaitSketch;
+                    out.push((id, hello));
+                }
+            }
+        }
+        // Collect barrier: every live spoke sketched → aggregate + directives.
+        if self.collect_sent
+            && !self.directives_sent
+            && self.live_states_none(|s| matches!(s, SpokeState::AwaitSketch | SpokeState::Joined))
+        {
+            self.directives_sent = true;
+            let digest = agg_digest(&self.agg, collect_seed(self.cfg.seed));
+            let counts32: Option<Vec<i32>> = self
+                .agg
+                .iter()
+                .map(|&c| i32::try_from(c).ok())
+                .collect::<Option<Vec<i32>>>();
+            for id in self.live_ids() {
+                let spoke = self.spokes.get_mut(&id).expect("live id");
+                let params = spoke.params.as_ref().expect("collect params");
+                let session = spoke.needs_session || !spoke.synced;
+                let mut frame = Msg::AggSketch {
+                    parties: self.parties_in_agg.max(2),
+                    l: params.l,
+                    m: params.m,
+                    seed: params.seed,
+                    digest,
+                    directive: if session { DIRECTIVE_SESSION } else { DIRECTIVE_IN_SYNC },
+                    counts: counts32.clone(),
+                };
+                if frame.wire_len() > AGG_COUNTS_BUDGET {
+                    if let Msg::AggSketch { counts, .. } = &mut frame {
+                        *counts = None;
+                    }
+                }
+                spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                out.push((id, frame));
+                if session {
+                    let mut ep = Endpoint::new_owned_negotiated(
+                        self.cfg,
+                        self.set.clone(),
+                        false,
+                        spoke.nego,
+                    );
+                    ep.set_encode(self.enc);
+                    out.extend(ep.start().into_iter().map(|m| (id, m)));
+                    spoke.state = SpokeState::Session(Box::new(ep));
+                } else {
+                    spoke.unique = Vec::new();
+                    spoke.state = SpokeState::Constrained;
+                }
+            }
+        }
+        // Constraint barrier: every live spoke's `C∖Sᵢ` committed → intersection +
+        // membership round.
+        if self.directives_sent
+            && self.intersection.is_none()
+            && self.live_states_none(|s| {
+                matches!(
+                    s,
+                    SpokeState::Session(_) | SpokeState::Sketched | SpokeState::AwaitSketch
+                )
+            })
+        {
+            let mut gone: HashSet<u64> = HashSet::new();
+            for spoke in self.spokes.values().filter(|s| s.live()) {
+                gone.extend(spoke.unique.iter().copied());
+            }
+            let inter: Vec<u64> =
+                self.sorted.iter().copied().filter(|x| !gone.contains(x)).collect();
+            let inter_set: HashSet<u64> = inter.iter().copied().collect();
+            for (&id, spoke) in self.spokes.iter_mut().filter(|(_, s)| s.live()) {
+                let mine: HashSet<u64> = spoke.unique.iter().copied().collect();
+                let kept: Vec<u64> =
+                    self.sorted.iter().copied().filter(|x| !mine.contains(x)).collect();
+                spoke.drop = kept.iter().copied().filter(|x| !inter_set.contains(x)).collect();
+                spoke.kept_len = kept.len();
+                let frame = if spoke.drop.is_empty() {
+                    // The spoke's pairwise-common set IS the intersection.
+                    Msg::Confirm { ok: true, reason: REASON_OK, attempt: 0 }
+                } else {
+                    membership_frame(
+                        &self.cfg,
+                        self.enc,
+                        &inter,
+                        id,
+                        0,
+                        spoke.kept_len,
+                        &spoke.drop,
+                    )
+                };
+                if !spoke.drop.is_empty() {
+                    spoke.attempts = 1;
+                }
+                spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                spoke.state = SpokeState::AwaitVerdict { attempt: 0 };
+                out.push((id, frame));
+            }
+            self.intersection = Some(inter);
+        }
+        // Final barrier: every live spoke settled → certify the round to all of them.
+        if self.intersection.is_some()
+            && !self.finals_sent
+            && self.live_states_none(|s| matches!(s, SpokeState::AwaitVerdict { .. }))
+        {
+            self.finals_sent = true;
+            for id in self.live_ids() {
+                let spoke = self.spokes.get_mut(&id).expect("live id");
+                if matches!(spoke.state, SpokeState::Settled) {
+                    let frame = Msg::Confirm { ok: true, reason: REASON_OK, attempt: 0 };
+                    spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                    spoke.state = SpokeState::Done;
+                    out.push((id, frame));
+                }
+            }
+        }
+        out
+    }
+
+    fn live_ids(&self) -> Vec<u32> {
+        self.spokes.iter().filter(|(_, s)| s.live()).map(|(&id, _)| id).collect()
+    }
+
+    /// No live spoke is in a state matching `pred`.
+    fn live_states_none(&self, pred: impl Fn(&SpokeState) -> bool) -> bool {
+        !self.spokes.values().any(|s| s.live() && pred(&s.state))
+    }
+
+    /// Consume the coordinator into its report. Call once [`MultiCoordinator::is_done`];
+    /// earlier calls report the round as it stands (unfinished spokes show errors).
+    pub fn into_report(self) -> MultiReport {
+        let intersection = self.intersection.unwrap_or_else(|| self.sorted.clone());
+        let mut comm = CommLog::new();
+        let parties: Vec<PartyOutcome> = self
+            .spokes
+            .into_iter()
+            .map(|(party, spoke)| {
+                comm.extend(&spoke.comm);
+                PartyOutcome {
+                    party,
+                    comm: spoke.comm,
+                    attempts: spoke.attempts,
+                    synced: spoke.synced && !spoke.needs_session,
+                    error: spoke.error,
+                }
+            })
+            .collect();
+        MultiReport { intersection, parties, comm }
+    }
+}
+
+/// Build one membership frame: a compressed sketch of the intersection, sized for this
+/// spoke's exact drop count with the rung's escalated safety factor.
+fn membership_frame(
+    cfg: &SetxConfig,
+    enc: EncodeConfig,
+    intersection: &[u64],
+    party: u32,
+    attempt: u32,
+    kept_len: usize,
+    drop: &[u64],
+) -> Msg {
+    let mut params = CsParams::tuned_uni_with_safety(
+        kept_len.max(1),
+        drop.len().max(1),
+        cfg.safety * SetxConfig::ladder_factor(attempt),
+    );
+    params.seed = membership_seed(cfg.seed, party, attempt);
+    params.universe_bits = cfg.universe_bits;
+    let codec = codec_params(&params, true);
+    let sketch = Sketch::encode_par(params.matrix(), intersection, enc);
+    Msg::MultiResidue {
+        party,
+        attempt,
+        l: params.l,
+        m: params.m,
+        seed: params.seed,
+        universe_bits: params.universe_bits,
+        est_drop: drop.len() as u64,
+        sketch: compress_sketch(&sketch.counts, &codec),
+    }
+}
+
+/// Spoke-side phase.
+enum PartyPhase {
+    /// Our party hello is out; awaiting the coordinator's.
+    AwaitCoordHello,
+    /// Negotiated; awaiting the shared collect geometry.
+    AwaitCollectHello,
+    /// Collect sketch sent; awaiting the aggregate barrier + directive.
+    AwaitDirective { params: CsParams },
+    /// Inner two-party repair session in flight.
+    Session(Box<Endpoint<'static>>),
+    /// Constraint done; awaiting the membership verdict (sketch or bare confirm).
+    AwaitMembership,
+    /// Intersection known and acknowledged; awaiting the final round certificate.
+    AwaitFinal,
+    /// Terminal.
+    Done,
+}
+
+fn party_phase_name(phase: &PartyPhase) -> &'static str {
+    match phase {
+        PartyPhase::AwaitCoordHello => "await-coordinator-hello",
+        PartyPhase::AwaitCollectHello => "await-collect-hello",
+        PartyPhase::AwaitDirective { .. } => "await-aggregate",
+        PartyPhase::Session(_) => "inner-session",
+        PartyPhase::AwaitMembership => "await-membership",
+        PartyPhase::AwaitFinal => "await-final-confirm",
+        PartyPhase::Done => "done",
+    }
+}
+
+/// One spoke endpoint of a multi-party round, driven over any
+/// [`super::transport::Transport`] via [`Party::run`] (or sans-io via
+/// [`Party::start`]/[`Party::on_msg`], which is how the in-process pump drives it).
+pub struct Party {
+    cfg: SetxConfig,
+    set: Arc<Vec<u64>>,
+    sorted: Vec<u64>,
+    id: u32,
+    count: u32,
+    phase: PartyPhase,
+    comm: CommLog,
+    ests: Option<(
+        crate::protocol::estimate::StrataEstimator,
+        crate::protocol::estimate::MinHashEstimator,
+    )>,
+    nego: Option<Negotiated>,
+    cache: DecoderCache,
+    enc: EncodeConfig,
+    /// `Sᵢ ∖ C` from the inner session (empty when in sync).
+    unique: Vec<u64>,
+    /// `Kᵢ = Sᵢ ∩ C`, the membership-round candidates.
+    kept: Vec<u64>,
+    /// `Kᵢ ∖ ∩` decoded in the membership round.
+    dropped: Vec<u64>,
+    intersection: Vec<u64>,
+    kind: ProtocolKind,
+    attempts: u32,
+}
+
+impl Party {
+    /// A spoke holding `set`, claiming `id` (1-based) in a round of `count` parties.
+    pub fn new(cfg: &SetxConfig, set: Vec<u64>, id: u32, count: u32) -> Result<Party, MultiError> {
+        if !(2..=MAX_PARTIES).contains(&count) {
+            return Err(MultiError::Config(format!(
+                "party count {count} outside [2, {MAX_PARTIES}]"
+            )));
+        }
+        if id == 0 || id >= count {
+            return Err(MultiError::Config(format!(
+                "party id {id} outside [1, {}]",
+                count - 1
+            )));
+        }
+        let mut sorted = set.clone();
+        sorted.sort_unstable();
+        Ok(Party {
+            cfg: *cfg,
+            set: Arc::new(set),
+            sorted,
+            id,
+            count,
+            phase: PartyPhase::AwaitCoordHello,
+            comm: CommLog::new(),
+            ests: None,
+            nego: None,
+            cache: DecoderCache::new(),
+            enc: EncodeConfig { threads: cfg.encode_threads },
+            unique: Vec::new(),
+            kept: Vec::new(),
+            dropped: Vec::new(),
+            intersection: Vec::new(),
+            kind: ProtocolKind::Uni,
+            attempts: 0,
+        })
+    }
+
+    pub fn phase_name(&self) -> &'static str {
+        party_phase_name(&self.phase)
+    }
+
+    /// Opening frames (the party hello).
+    pub fn start(&mut self) -> Vec<Msg> {
+        let (mut hello, ests) = build_est_hello(&self.cfg, &self.set);
+        if let Msg::EstHello { party, .. } = &mut hello {
+            *party = Some((self.id, self.count));
+        }
+        self.ests = ests;
+        self.record_sent(&hello);
+        self.phase = PartyPhase::AwaitCoordHello;
+        vec![hello]
+    }
+
+    /// Absorb one coordinator frame.
+    pub fn on_msg(&mut self, msg: &Msg) -> Step {
+        match (std::mem::replace(&mut self.phase, PartyPhase::Done), msg) {
+            (
+                PartyPhase::AwaitCoordHello,
+                Msg::EstHello {
+                    config_fingerprint,
+                    set_len,
+                    explicit_d,
+                    strata,
+                    minhash,
+                    namespace,
+                    party,
+                },
+            ) => {
+                self.record_recv(msg);
+                let ours = self.cfg.fingerprint();
+                if *config_fingerprint != ours {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::ConfigMismatch { ours, theirs: *config_fingerprint },
+                    );
+                }
+                if *party != Some((0, self.count)) {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("coordinator hello party mismatch"),
+                    );
+                }
+                if *namespace != self.cfg.namespace() {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("coordinator hello namespace mismatch"),
+                    );
+                }
+                let Ok(peer_len) = usize::try_from(*set_len) else {
+                    return Step::Fatal(Vec::new(), SetxError::MalformedFrame("set_len"));
+                };
+                let ests = self.ests.take();
+                match negotiate(
+                    &self.cfg,
+                    true,
+                    self.set.len(),
+                    ests.as_ref(),
+                    peer_len,
+                    *explicit_d,
+                    strata.as_deref(),
+                    minhash.as_deref(),
+                ) {
+                    Ok(nego) => {
+                        self.nego = Some(nego);
+                        self.phase = PartyPhase::AwaitCollectHello;
+                        Step::Continue
+                    }
+                    Err(e) => Step::Fatal(Vec::new(), e),
+                }
+            }
+            (
+                PartyPhase::AwaitCollectHello,
+                Msg::Hello {
+                    l,
+                    m,
+                    seed,
+                    universe_bits,
+                    est_initiator_unique,
+                    est_responder_unique,
+                    set_len: _,
+                    namespace,
+                },
+            ) => {
+                self.record_recv(msg);
+                if *namespace != self.cfg.namespace() {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("collect hello namespace mismatch"),
+                    );
+                }
+                if !wire_geometry_ok(*l, *m, *seed) || *universe_bits != self.cfg.universe_bits {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("collect hello geometry"),
+                    );
+                }
+                let (Ok(est_a), Ok(est_b)) = (
+                    usize::try_from(*est_initiator_unique),
+                    usize::try_from(*est_responder_unique),
+                ) else {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("collect hello estimates"),
+                    );
+                };
+                let params = CsParams {
+                    l: *l,
+                    m: *m,
+                    seed: *seed,
+                    universe_bits: *universe_bits,
+                    est_a_unique: est_a,
+                    est_b_unique: est_b,
+                };
+                let (sketch, _) = uni::alice_encode_with(&self.set, &params, self.enc, None);
+                self.record_sent(&sketch);
+                self.phase = PartyPhase::AwaitDirective { params };
+                Step::Send(vec![sketch])
+            }
+            (
+                PartyPhase::AwaitDirective { params },
+                Msg::AggSketch { parties: _, l, m, seed, digest, directive, counts },
+            ) => {
+                self.record_recv(msg);
+                if (*l, *m, *seed) != (params.l, params.m, params.seed) {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("aggregate geometry skew"),
+                    );
+                }
+                if let Some(c) = counts {
+                    // The aggregate payload is telemetry, but when present it must at
+                    // least be self-consistent with its own digest.
+                    let folded: Vec<i64> = c.iter().map(|&v| v as i64).collect();
+                    if agg_digest(&folded, *seed) != *digest {
+                        return Step::Fatal(
+                            Vec::new(),
+                            SetxError::MalformedFrame("aggregate digest mismatch"),
+                        );
+                    }
+                }
+                if *directive == DIRECTIVE_IN_SYNC {
+                    self.unique = Vec::new();
+                    self.kept = self.sorted.clone();
+                    self.phase = PartyPhase::AwaitMembership;
+                    return Step::Continue;
+                }
+                let nego = self.nego.expect("negotiated before directive");
+                let mut ep =
+                    Endpoint::new_owned_negotiated(self.cfg, self.set.clone(), true, nego);
+                ep.set_encode(self.enc);
+                ep.set_cache(std::mem::take(&mut self.cache));
+                let msgs = ep.start();
+                self.phase = PartyPhase::Session(Box::new(ep));
+                Step::Send(msgs)
+            }
+            (PartyPhase::Session(mut ep), _) => match ep.on_msg(msg) {
+                Step::Send(msgs) => {
+                    self.phase = PartyPhase::Session(ep);
+                    Step::Send(msgs)
+                }
+                Step::Continue => {
+                    self.phase = PartyPhase::Session(ep);
+                    Step::Continue
+                }
+                Step::Finish(msgs, report) => {
+                    self.cache = ep.take_cache();
+                    self.comm.extend(&report.comm);
+                    self.kind = report.kind;
+                    self.attempts = report.attempts;
+                    self.unique = report.local_unique;
+                    let mine: HashSet<u64> = self.unique.iter().copied().collect();
+                    self.kept =
+                        self.sorted.iter().copied().filter(|x| !mine.contains(x)).collect();
+                    self.phase = PartyPhase::AwaitMembership;
+                    Step::Send(msgs)
+                }
+                Step::Fatal(msgs, err) => Step::Fatal(msgs, err),
+            },
+            (PartyPhase::AwaitMembership, Msg::Confirm { ok, reason, attempt }) => {
+                self.record_recv(msg);
+                if !*ok {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::Decode {
+                            failure: reason_to_failure(*reason),
+                            attempts: attempt + 1,
+                        },
+                    );
+                }
+                // Bare confirm: our pairwise-common set is exactly the intersection.
+                self.intersection = self.kept.clone();
+                self.phase = PartyPhase::AwaitFinal;
+                let ack = Msg::Confirm { ok: true, reason: REASON_OK, attempt: *attempt };
+                self.record_sent(&ack);
+                Step::Send(vec![ack])
+            }
+            (
+                PartyPhase::AwaitMembership,
+                Msg::MultiResidue { party, attempt, l, m, seed, universe_bits, est_drop, sketch },
+            ) => {
+                self.record_recv(msg);
+                if *party != self.id {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("membership frame for another party"),
+                    );
+                }
+                if !wire_geometry_ok(*l, *m, *seed)
+                    || *est_drop > self.kept.len() as u64
+                    || *universe_bits != self.cfg.universe_bits
+                {
+                    return Step::Fatal(
+                        Vec::new(),
+                        SetxError::MalformedFrame("membership geometry"),
+                    );
+                }
+                let params = CsParams {
+                    l: *l,
+                    m: *m,
+                    seed: *seed,
+                    universe_bits: *universe_bits,
+                    est_a_unique: 0,
+                    est_b_unique: *est_drop as usize,
+                };
+                self.attempts = self.attempts.max(attempt + 1);
+                match uni::bob_decode_with(
+                    &Msg::Sketch(sketch.clone()),
+                    &self.kept,
+                    &params,
+                    &mut self.cache,
+                    None,
+                    self.enc,
+                ) {
+                    Ok((dropped, _)) => {
+                        let gone: HashSet<u64> = dropped.iter().copied().collect();
+                        self.intersection =
+                            self.kept.iter().copied().filter(|x| !gone.contains(x)).collect();
+                        self.dropped = dropped;
+                        self.phase = PartyPhase::AwaitFinal;
+                        let ack = Msg::Confirm { ok: true, reason: REASON_OK, attempt: *attempt };
+                        self.record_sent(&ack);
+                        Step::Send(vec![ack])
+                    }
+                    Err(uni::UniError::Decode(failure)) => {
+                        // This rung failed: report why and wait for the escalated
+                        // re-sketch (or the coordinator's teardown).
+                        let nack = Msg::Confirm {
+                            ok: false,
+                            reason: failure_to_reason(failure),
+                            attempt: *attempt,
+                        };
+                        self.record_sent(&nack);
+                        self.phase = PartyPhase::AwaitMembership;
+                        Step::Send(vec![nack])
+                    }
+                    Err(uni::UniError::Frame(what)) => {
+                        Step::Fatal(Vec::new(), SetxError::MalformedFrame(what))
+                    }
+                }
+            }
+            (PartyPhase::AwaitCoordHello, Msg::Busy { retry_after_ms, namespace }) => {
+                // Admission rejection (daemon over quota, tenant not a coordinator, or
+                // a duplicate/mid-round join): surface the typed error so the caller
+                // can back off and retry, exactly as a two-party client would.
+                self.record_recv(msg);
+                Step::Fatal(
+                    Vec::new(),
+                    SetxError::ServerBusy {
+                        retry_after_ms: *retry_after_ms,
+                        namespace: *namespace,
+                    },
+                )
+            }
+            (PartyPhase::AwaitFinal, Msg::Confirm { ok: true, .. }) => {
+                self.record_recv(msg);
+                let mut local_unique: Vec<u64> =
+                    self.unique.iter().chain(self.dropped.iter()).copied().collect();
+                local_unique.sort_unstable();
+                let report = SetxReport {
+                    intersection: std::mem::take(&mut self.intersection),
+                    local_unique,
+                    kind: self.kind,
+                    converged: true,
+                    attempts: self.attempts.max(1),
+                    rounds: self.comm.payload_frames(),
+                    comm: std::mem::take(&mut self.comm),
+                    local_is_alice: true,
+                };
+                Step::Finish(Vec::new(), Box::new(report))
+            }
+            (_, _) => {
+                self.record_recv(msg);
+                Step::Fatal(
+                    Vec::new(),
+                    SetxError::MalformedFrame("frame out of phase for this party"),
+                )
+            }
+        }
+    }
+
+    /// Drive this spoke over a transport to completion (the multi-party sibling of
+    /// [`Setx::run`]).
+    pub fn run<T: super::transport::Transport>(
+        &mut self,
+        transport: &mut T,
+    ) -> Result<SetxReport, SetxError> {
+        for msg in self.start() {
+            transport.send(&msg)?;
+        }
+        loop {
+            let Some(msg) = transport.recv()? else {
+                return Err(SetxError::PeerClosed { during: self.phase_name() });
+            };
+            match self.on_msg(&msg) {
+                Step::Send(msgs) => {
+                    for m in msgs {
+                        transport.send(&m)?;
+                    }
+                }
+                Step::Continue => {}
+                Step::Finish(msgs, report) => {
+                    for m in msgs {
+                        transport.send(&m)?;
+                    }
+                    return Ok(*report);
+                }
+                Step::Fatal(msgs, err) => {
+                    for m in msgs {
+                        let _ = transport.send(&m);
+                    }
+                    return Err(err);
+                }
+            }
+        }
+    }
+
+    fn record_sent(&mut self, msg: &Msg) {
+        self.comm.record(true, frame_phase(msg), msg.wire_len());
+    }
+
+    fn record_recv(&mut self, msg: &Msg) {
+        self.comm.record(false, frame_phase(msg), msg.wire_len());
+    }
+}
+
+/// A configured in-process multi-party round: the builder's set is party 0 (the
+/// coordinator), `sets[1..]` the spokes. Obtain via [`super::SetxBuilder::parties`].
+pub struct MultiSetx {
+    cfg: SetxConfig,
+    sets: Vec<Arc<Vec<u64>>>,
+}
+
+impl MultiSetx {
+    pub(crate) fn new(cfg: SetxConfig, sets: Vec<Arc<Vec<u64>>>) -> Result<MultiSetx, MultiError> {
+        if sets.len() < 2 {
+            return Err(MultiError::Config(format!(
+                "multi-party round needs ≥ 2 sets, got {}",
+                sets.len()
+            )));
+        }
+        if sets.len() as u64 > MAX_PARTIES as u64 {
+            return Err(MultiError::Config(format!(
+                "party count {} above {MAX_PARTIES}",
+                sets.len()
+            )));
+        }
+        Ok(MultiSetx { cfg, sets })
+    }
+
+    /// Run the round deterministically in-process (no threads — the multi-party sibling
+    /// of [`Setx::run_pair`]) and return the coordinator's report.
+    pub fn run(&self) -> Result<MultiReport, MultiError> {
+        self.run_detailed().map(|(report, _)| report)
+    }
+
+    /// [`MultiSetx::run`] also returning every spoke's own [`SetxReport`] (party-id
+    /// order) — what the verifying harnesses assert against.
+    pub fn run_detailed(&self) -> Result<(MultiReport, Vec<SetxReport>), MultiError> {
+        let count = self.sets.len() as u32;
+        let mut coord = MultiCoordinator::new(&self.cfg, self.sets[0].clone(), count)?;
+        let mut parties: Vec<Party> = (1..count)
+            .map(|id| {
+                Party::new(&self.cfg, (*self.sets[id as usize]).clone(), id, count)
+            })
+            .collect::<Result<_, _>>()?;
+        // Per-spoke frame queues, coordinator ↔ party i+1.
+        let mut to_coord: Vec<std::collections::VecDeque<Msg>> =
+            (1..count).map(|_| std::collections::VecDeque::new()).collect();
+        let mut to_party: Vec<std::collections::VecDeque<Msg>> =
+            (1..count).map(|_| std::collections::VecDeque::new()).collect();
+        let mut reports: Vec<Option<SetxReport>> = (1..count).map(|_| None).collect();
+        let mut failed: Vec<Option<SetxError>> = (1..count).map(|_| None).collect();
+        for (i, party) in parties.iter_mut().enumerate() {
+            to_coord[i].extend(party.start());
+        }
+        // Joins route through `route_hello` exactly as a server connection would.
+        for q in &mut to_coord {
+            let hello = q.pop_front().expect("party start sends its hello");
+            let (_, frames) = coord.route_hello(&hello)?;
+            for (p, m) in frames {
+                to_party[(p - 1) as usize].push_back(m);
+            }
+        }
+        loop {
+            let mut progressed = false;
+            for i in 0..to_coord.len() {
+                let party_id = (i + 1) as u32;
+                while let Some(msg) = to_coord[i].pop_front() {
+                    progressed = true;
+                    for (p, m) in coord.on_msg(party_id, &msg) {
+                        to_party[(p - 1) as usize].push_back(m);
+                    }
+                }
+                if reports[i].is_some() || failed[i].is_some() {
+                    to_party[i].clear();
+                    continue;
+                }
+                while let Some(msg) = to_party[i].pop_front() {
+                    progressed = true;
+                    match parties[i].on_msg(&msg) {
+                        Step::Send(msgs) => to_coord[i].extend(msgs),
+                        Step::Continue => {}
+                        Step::Finish(msgs, report) => {
+                            to_coord[i].extend(msgs);
+                            reports[i] = Some(*report);
+                        }
+                        Step::Fatal(msgs, err) => {
+                            to_coord[i].extend(msgs);
+                            failed[i] = Some(err);
+                        }
+                    }
+                }
+            }
+            let all_parties_done =
+                (0..reports.len()).all(|i| reports[i].is_some() || failed[i].is_some());
+            let queues_empty = to_coord.iter().all(|q| q.is_empty())
+                && to_party.iter().all(|q| q.is_empty());
+            if coord.is_done() && all_parties_done && queues_empty {
+                break;
+            }
+            if !progressed {
+                // Both sides idle with frames owed: a failed spoke the coordinator still
+                // awaits is dropped (the in-process analogue of the deadline); anything
+                // else is a drive bug.
+                let mut dropped_any = false;
+                for i in 0..reports.len() {
+                    let party_id = (i + 1) as u32;
+                    if failed[i].is_some() && coord.awaiting(party_id) {
+                        for (p, m) in
+                            coord.drop_party(party_id, MultiError::PartyTimeout { party: party_id })
+                        {
+                            to_party[(p - 1) as usize].push_back(m);
+                        }
+                        dropped_any = true;
+                    }
+                }
+                if !dropped_any {
+                    return Err(MultiError::Config(
+                        "in-process multi-party drive stalled".into(),
+                    ));
+                }
+            }
+        }
+        let report = coord.into_report();
+        let mut spoke_reports = Vec::new();
+        for (i, slot) in reports.into_iter().enumerate() {
+            match slot {
+                Some(r) => spoke_reports.push(r),
+                None => {
+                    let party = (i + 1) as u32;
+                    let error = failed[i]
+                        .take()
+                        .unwrap_or(SetxError::PeerClosed { during: "multi-party round" });
+                    return Err(MultiError::Party { party, error });
+                }
+            }
+        }
+        Ok((report, spoke_reports))
+    }
+}
+
+impl super::SetxBuilder {
+    /// Turn this builder into an in-process multi-party round: the builder's set is the
+    /// coordinator (party 0), `others` the spokes. All config knobs set on the builder
+    /// apply to every party (multi-party rounds require identical configs, exactly like
+    /// two-party sessions).
+    pub fn parties(self, others: &[Vec<u64>]) -> Result<MultiSetx, MultiError> {
+        let setx = self.build().map_err(|e| MultiError::Config(e.to_string()))?;
+        let mut sets = Vec::with_capacity(1 + others.len());
+        sets.push(Arc::new(setx.set));
+        sets.extend(others.iter().map(|s| Arc::new(s.clone())));
+        MultiSetx::new(setx.cfg, sets)
+    }
+}
+
+impl Setx {
+    /// Compute `∩ᵢSᵢ` across N ≥ 2 sets in-process with default config: `sets[0]` is the
+    /// coordinator, the rest are spokes. See [`MultiSetx`] for custom knobs.
+    pub fn multi(sets: &[Vec<u64>]) -> Result<MultiReport, MultiError> {
+        if sets.is_empty() {
+            return Err(MultiError::Config("no sets".into()));
+        }
+        Setx::builder(&sets[0]).parties(&sets[1..])?.run()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::data::synth;
+
+    /// N sets sharing a common core of `common` ids plus `unique` per-party ids from
+    /// disjoint tails, so the exact intersection is the core by construction.
+    pub fn n_sets(n: usize, common: usize, unique: usize, seed: u64) -> Vec<Vec<u64>> {
+        synth::overlap_n(n, common, unique, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::n_sets;
+    use super::*;
+
+    #[test]
+    fn three_party_round_in_process() {
+        let sets = n_sets(3, 600, 12, 42);
+        let multi = Setx::builder(&sets[0]).parties(&sets[1..]).unwrap();
+        let (report, spoke_reports) = multi.run_detailed().unwrap();
+        let mut expect: Vec<u64> = sets[0]
+            .iter()
+            .copied()
+            .filter(|x| sets[1..].iter().all(|s| s.contains(x)))
+            .collect();
+        expect.sort_unstable();
+        assert_eq!(report.intersection, expect);
+        assert_eq!(report.completed(), 2);
+        for r in &spoke_reports {
+            assert_eq!(r.intersection, expect);
+        }
+        // Per-party bytes sum to the coordinator total by construction — and each
+        // spoke's own transcript agrees with the coordinator's view of it.
+        let sum: usize = report.parties.iter().map(|p| p.total_bytes()).sum();
+        assert_eq!(sum, report.total_bytes());
+        for (p, r) in report.parties.iter().zip(&spoke_reports) {
+            assert_eq!(p.comm.total_bytes(), r.total_bytes(), "party {}", p.party);
+        }
+    }
+
+    #[test]
+    fn identical_sets_take_the_synced_fast_path() {
+        let base: Vec<u64> = (1..400u64).map(|x| x * 3).collect();
+        let sets = vec![base.clone(), base.clone(), base.clone(), base.clone()];
+        let report = Setx::multi(&sets).unwrap();
+        let mut expect = base;
+        expect.sort_unstable();
+        assert_eq!(report.intersection, expect);
+        for p in &report.parties {
+            assert!(p.synced, "identical party {} must be in sync", p.party);
+            assert_eq!(p.attempts, 0);
+            assert!(p.error.is_none());
+        }
+    }
+
+    #[test]
+    fn duplicate_party_id_is_rejected_without_killing_the_round() {
+        let sets = n_sets(3, 200, 5, 9);
+        let cfg = *Setx::builder(&sets[0]).build().unwrap().config();
+        let mut coord =
+            MultiCoordinator::new(&cfg, Arc::new(sets[0].clone()), 3).unwrap();
+        let mut p1 = Party::new(&cfg, sets[1].clone(), 1, 3).unwrap();
+        let hello1 = p1.start().remove(0);
+        coord.route_hello(&hello1).unwrap();
+        // A second connection claiming id 1: rejected, round intact.
+        let mut imp = Party::new(&cfg, sets[2].clone(), 1, 3).unwrap();
+        let imp_hello = imp.start().remove(0);
+        assert!(matches!(
+            coord.route_hello(&imp_hello),
+            Err(MultiError::DuplicateParty { party: 1 })
+        ));
+        assert!(coord.joined(1));
+        assert!(!coord.is_done());
+    }
+
+    #[test]
+    fn misconfigured_party_counts_rejected() {
+        let set: Vec<u64> = (0..50).collect();
+        assert!(matches!(
+            Setx::builder(&set).parties(&[]),
+            Err(MultiError::Config(_))
+        ));
+        let cfg = *Setx::builder(&set).build().unwrap().config();
+        assert!(Party::new(&cfg, set.clone(), 0, 3).is_err());
+        assert!(Party::new(&cfg, set.clone(), 3, 3).is_err());
+        assert!(MultiCoordinator::new(&cfg, Arc::new(set.clone()), 1).is_err());
+        // A join whose count disagrees with the coordinator's roster size.
+        let mut coord = MultiCoordinator::new(&cfg, Arc::new(set.clone()), 3).unwrap();
+        let mut p = Party::new(&cfg, set.clone(), 1, 4).unwrap();
+        let hello = p.start().remove(0);
+        assert!(matches!(
+            coord.route_hello(&hello),
+            Err(MultiError::Party { party: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn deadline_join_runs_with_partial_roster() {
+        let sets = n_sets(4, 300, 8, 77);
+        let cfg = *Setx::builder(&sets[0]).build().unwrap().config();
+        let mut coord = MultiCoordinator::new(&cfg, Arc::new(sets[0].clone()), 4).unwrap();
+        let mut p1 = Party::new(&cfg, sets[1].clone(), 1, 4).unwrap();
+        let hello = p1.start().remove(0);
+        let (_, frames) = coord.route_hello(&hello).unwrap();
+        // Roster incomplete: only the coordinator's hello so far, no collect broadcast.
+        assert_eq!(frames.len(), 1);
+        assert!(!coord.awaiting(1));
+        // Parties 2 and 3 never dial in; the deadline closes the roster.
+        let frames = coord.deadline_join();
+        assert!(
+            frames.iter().any(|(p, m)| *p == 1 && matches!(m, Msg::Hello { .. })),
+            "collect hello must go out to the joined spoke"
+        );
+        assert!(coord.awaiting(1));
+        assert!(!coord.joined(2));
+    }
+}

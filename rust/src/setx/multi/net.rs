@@ -1,0 +1,361 @@
+//! TCP driver for a multi-party round: [`host_round`] runs the coordinator side of an
+//! N-party intersection over real sockets, [`join_round`] is the matching spoke dial-in.
+//!
+//! The coordinator is event-driven but deliberately simpler than the server's poller
+//! pool: one reader thread per spoke feeds a single `mpsc` event loop that owns the
+//! sans-io [`MultiCoordinator`]. Readers buffer raw bytes and cut frames with
+//! [`frame_extent`] (never a blocking mid-frame read), so a stalled spoke can always be
+//! dropped at a frame boundary. The per-party deadline consults
+//! [`MultiCoordinator::awaiting`] first: a spoke parked at a barrier — idle because it is
+//! waiting on *other* parties — is never a timeout candidate, only one the round is
+//! actually waiting on. This is the CLI / test harness; the daemon-grade variant is the
+//! [`crate::server::SetxServer`] coordinator mode, which multiplexes the same state
+//! machine over its non-blocking poller pool.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::super::transport::{frame_extent, TcpTransport};
+use super::super::{SetxConfig, SetxError, SetxReport};
+use super::{MultiCoordinator, MultiError, MultiReport, Party};
+use crate::protocol::wire::Msg;
+
+/// How often a blocked reader wakes to notice a shut-down socket or closed event loop.
+const READ_TICK: Duration = Duration::from_millis(50);
+
+/// Poll cadence of the coordinator event loop (accepts + deadline scans between events).
+const LOOP_TICK: Duration = Duration::from_millis(20);
+
+enum Event {
+    Frame(Msg),
+    /// The reader's read timed out — a wake-up so the main loop runs its deadline scan.
+    Idle,
+    /// Clean close, mid-frame corruption, or unparseable frame: the connection is dead.
+    Gone,
+}
+
+struct Conn {
+    write: TcpStream,
+    party: Option<u32>,
+    last: Instant,
+    open: bool,
+}
+
+impl Conn {
+    fn close(&mut self) {
+        if self.open {
+            self.open = false;
+            let _ = self.write.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Host one N-party round on an already-bound listener and return the coordinator's
+/// [`MultiReport`]. `deadline` bounds *each* wait on a spoke — the join window, and every
+/// frame the round is actually awaiting from a party ([`MultiCoordinator::awaiting`]);
+/// a spoke that overruns is dropped with [`MultiError::PartyTimeout`] while the other
+/// N−1 parties complete.
+pub fn host_round(
+    listener: &TcpListener,
+    cfg: &SetxConfig,
+    set: Vec<u64>,
+    count: u32,
+    deadline: Duration,
+) -> Result<MultiReport, MultiError> {
+    let io = |e: std::io::Error| MultiError::Party { party: 0, error: SetxError::Io(e) };
+    listener.set_nonblocking(true).map_err(io)?;
+    let coord = MultiCoordinator::new(cfg, std::sync::Arc::new(set), count)?;
+    std::thread::scope(|scope| {
+        let mut coord = coord;
+        let (tx, rx) = mpsc::channel::<(usize, Event)>();
+        let mut conns: Vec<Conn> = Vec::new();
+        let started = Instant::now();
+        loop {
+            // Accept new spokes while the roster is open; after that, late dialers are
+            // turned away at the socket (the daemon mode answers `Busy` instead).
+            if coord.roster_open() {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nodelay(true).ok();
+                        stream.set_write_timeout(Some(deadline)).ok();
+                        if let Ok(read_half) = stream.try_clone() {
+                            read_half.set_read_timeout(Some(READ_TICK)).ok();
+                            let idx = conns.len();
+                            let tx = tx.clone();
+                            scope.spawn(move || reader_loop(read_half, idx, tx));
+                            conns.push(Conn {
+                                write: stream,
+                                party: None,
+                                last: Instant::now(),
+                                open: true,
+                            });
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                    Err(_) => {}
+                }
+                if started.elapsed() >= deadline && coord.roster_open() {
+                    let frames = coord.deadline_join();
+                    deliver(&mut coord, &mut conns, frames);
+                }
+            }
+            // One blocking wait, then drain whatever queued behind it.
+            let mut events: Vec<(usize, Event)> = match rx.recv_timeout(LOOP_TICK) {
+                Ok(ev) => vec![ev],
+                Err(mpsc::RecvTimeoutError::Timeout) => Vec::new(),
+                Err(mpsc::RecvTimeoutError::Disconnected) => Vec::new(),
+            };
+            events.extend(rx.try_iter());
+            for (idx, ev) in events {
+                handle_event(&mut coord, &mut conns, idx, ev);
+            }
+            // Per-party deadline scan: only spokes the round is awaiting can time out;
+            // barrier-parked (or unjoined) connections get their clock refreshed.
+            let now = Instant::now();
+            for idx in 0..conns.len() {
+                if !conns[idx].open {
+                    continue;
+                }
+                let Some(party) = conns[idx].party else {
+                    if !coord.roster_open() {
+                        conns[idx].close();
+                    }
+                    continue;
+                };
+                if !coord.awaiting(party) {
+                    conns[idx].last = now;
+                } else if now.duration_since(conns[idx].last) >= deadline {
+                    conns[idx].close();
+                    let frames = coord.drop_party(party, MultiError::PartyTimeout { party });
+                    deliver(&mut coord, &mut conns, frames);
+                }
+            }
+            if coord.is_done() {
+                break;
+            }
+        }
+        for conn in &mut conns {
+            conn.close();
+        }
+        // `tx`/`rx` drop here; readers notice within a tick and the scope joins them.
+        Ok(coord.into_report())
+    })
+}
+
+/// Dial into a hosted round as spoke `id` and drive [`Party::run`] to completion,
+/// returning this party's own [`SetxReport`] (its view of `∩ᵢSᵢ`).
+pub fn join_round(
+    addr: impl ToSocketAddrs,
+    cfg: &SetxConfig,
+    set: Vec<u64>,
+    id: u32,
+    count: u32,
+) -> Result<SetxReport, MultiError> {
+    let mut party = Party::new(cfg, set, id, count)?;
+    let wrap = |error| MultiError::Party { party: id, error };
+    let mut transport = TcpTransport::connect(addr).map_err(wrap)?;
+    party.run(&mut transport).map_err(wrap)
+}
+
+fn handle_event(coord: &mut MultiCoordinator, conns: &mut [Conn], idx: usize, ev: Event) {
+    match ev {
+        Event::Frame(msg) => {
+            conns[idx].last = Instant::now();
+            match conns[idx].party {
+                None => match coord.route_hello(&msg) {
+                    Ok((party, frames)) => {
+                        conns[idx].party = Some(party);
+                        deliver(coord, conns, frames);
+                    }
+                    // Rejected join (duplicate id, bad count, config mismatch, late
+                    // dialer): only this connection dies, the round is untouched.
+                    Err(_) => conns[idx].close(),
+                },
+                Some(party) => {
+                    let frames = coord.on_msg(party, &msg);
+                    deliver(coord, conns, frames);
+                }
+            }
+        }
+        Event::Idle => {}
+        Event::Gone => {
+            if conns[idx].open {
+                conns[idx].close();
+                if let Some(party) = conns[idx].party {
+                    let frames = coord.drop_party(party, MultiError::PartyTimeout { party });
+                    deliver(coord, conns, frames);
+                }
+            }
+        }
+    }
+}
+
+/// Write coordinator frames out to their spokes. A failed write is a dead spoke: it is
+/// dropped from the round, and any frames that releases (other parties' barriers) join
+/// the queue.
+fn deliver(coord: &mut MultiCoordinator, conns: &mut [Conn], frames: Vec<(u32, Msg)>) {
+    let mut pending: VecDeque<(u32, Msg)> = frames.into();
+    while let Some((party, msg)) = pending.pop_front() {
+        let Some(conn) = conns.iter_mut().find(|c| c.party == Some(party) && c.open) else {
+            continue;
+        };
+        if conn.write.write_all(&msg.to_bytes()).is_err() {
+            conn.close();
+            pending.extend(coord.drop_party(party, MultiError::PartyTimeout { party }));
+        }
+    }
+}
+
+/// Per-connection reader: buffer raw bytes, cut complete frames with [`frame_extent`],
+/// and feed the event loop. Never blocks mid-frame (reads are chunked with a short OS
+/// timeout), so the main loop's deadline verdicts always land on a frame boundary.
+fn reader_loop(mut stream: TcpStream, idx: usize, tx: mpsc::Sender<(usize, Event)>) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 8192];
+    loop {
+        loop {
+            match frame_extent(&buf) {
+                Ok(Some(len)) => {
+                    let rest = buf.split_off(len);
+                    let frame = std::mem::replace(&mut buf, rest);
+                    match Msg::from_bytes(&frame) {
+                        Some((msg, used)) if used == frame.len() => {
+                            if tx.send((idx, Event::Frame(msg))).is_err() {
+                                return;
+                            }
+                        }
+                        _ => {
+                            let _ = tx.send((idx, Event::Gone));
+                            return;
+                        }
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    let _ = tx.send((idx, Event::Gone));
+                    return;
+                }
+            }
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                let _ = tx.send((idx, Event::Gone));
+                return;
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if tx.send((idx, Event::Idle)).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                let _ = tx.send((idx, Event::Gone));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::n_sets;
+    use super::*;
+    use crate::setx::Setx;
+
+    fn expected_intersection(sets: &[Vec<u64>]) -> Vec<u64> {
+        let mut out: Vec<u64> = sets[0]
+            .iter()
+            .copied()
+            .filter(|x| sets[1..].iter().all(|s| s.contains(x)))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn tcp_round_three_parties_all_learn_the_intersection() {
+        let sets = n_sets(3, 500, 10, 0xD1A1);
+        let cfg = *Setx::builder(&sets[0]).build().unwrap().config();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let spokes: Vec<_> = (1u32..3)
+            .map(|id| {
+                let set = sets[id as usize].clone();
+                std::thread::spawn(move || join_round(addr, &cfg, set, id, 3))
+            })
+            .collect();
+        let report =
+            host_round(&listener, &cfg, sets[0].clone(), 3, Duration::from_secs(10)).unwrap();
+        let expect = expected_intersection(&sets);
+        assert_eq!(report.intersection, expect);
+        assert_eq!(report.completed(), 2);
+        let sum: usize = report.parties.iter().map(|p| p.total_bytes()).sum();
+        assert_eq!(sum, report.total_bytes());
+        for h in spokes {
+            let r = h.join().unwrap().unwrap();
+            assert_eq!(r.intersection, expect);
+        }
+    }
+
+    #[test]
+    fn stalled_spoke_times_out_and_the_rest_complete() {
+        let sets = n_sets(3, 400, 8, 0x57A1);
+        let cfg = *Setx::builder(&sets[0]).build().unwrap().config();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Spoke 2 joins (so the roster completes) and then goes silent mid-round.
+        let stall_set = sets[2].clone();
+        let staller = std::thread::spawn(move || {
+            let mut party = Party::new(&cfg, stall_set, 2, 3).unwrap();
+            let mut s = TcpStream::connect(addr).unwrap();
+            for m in party.start() {
+                s.write_all(&m.to_bytes()).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(2500));
+            drop(s);
+        });
+        let live_set = sets[1].clone();
+        let live = std::thread::spawn(move || join_round(addr, &cfg, live_set, 1, 3));
+        let report =
+            host_round(&listener, &cfg, sets[0].clone(), 3, Duration::from_millis(700)).unwrap();
+        // The committed intersection covers the parties that stayed: coordinator + spoke 1.
+        let expect = expected_intersection(&sets[..2]);
+        assert_eq!(report.intersection, expect);
+        assert_eq!(report.completed(), 1);
+        let timed_out = report.parties.iter().find(|p| p.party == 2).unwrap();
+        assert!(
+            matches!(timed_out.error, Some(MultiError::PartyTimeout { party: 2 })),
+            "stalled spoke must surface PartyTimeout, got {:?}",
+            timed_out.error
+        );
+        assert!(report.parties.iter().find(|p| p.party == 1).unwrap().error.is_none());
+        let r1 = live.join().unwrap().unwrap();
+        assert_eq!(r1.intersection, expect);
+        staller.join().unwrap();
+    }
+
+    #[test]
+    fn empty_roster_round_closes_at_the_join_deadline() {
+        let cfg = *Setx::builder(&[1, 2, 3]).build().unwrap().config();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let report = host_round(
+            &listener,
+            &cfg,
+            vec![3, 1, 2],
+            3,
+            Duration::from_millis(200),
+        )
+        .unwrap();
+        // Nobody dialed in: the round degenerates to the coordinator's own set.
+        assert_eq!(report.intersection, vec![1, 2, 3]);
+        assert!(report.parties.is_empty());
+    }
+}

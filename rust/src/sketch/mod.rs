@@ -419,6 +419,40 @@ mod tests {
     }
 
     #[test]
+    fn party_sketch_sums_equal_the_multiset_union_sketch() {
+        // The multi-party aggregation invariant (see `setx::multi`): Σᵢ sk(Sᵢ) is
+        // bit-exactly the sketch of the multiset union — across geometries including the
+        // m = MAX_M boundary, with ids shared between parties (multiplicities add, never
+        // saturate) and duplicated within a single party.
+        let geometries = [(256u32, 5u32, 7u64), (1024, 7, 13), (512, MAX_M, 3), (128, 1, 19)];
+        for &(l, m, seed) in &geometries {
+            let matrix = CsMatrix::new(l, m, seed);
+            let core: Vec<u64> = (0..120u64).map(|i| i.wrapping_mul(0x9e37_79b9) ^ seed).collect();
+            let parties: Vec<Vec<u64>> = (0..4u64)
+                .map(|p| {
+                    let mut s = core.clone();
+                    s.extend((0..40u64).map(|i| (1_000_000 + p * 1_000 + i).wrapping_mul(31)));
+                    s.push(core[0]); // within-party duplicate: encode is multiset-linear
+                    s
+                })
+                .collect();
+            let mut sum = vec![0i32; l as usize];
+            let mut union: Vec<u64> = Vec::new();
+            for s in &parties {
+                let sk = Sketch::encode(matrix, s);
+                for (d, c) in sum.iter_mut().zip(&sk.counts) {
+                    *d += c;
+                }
+                union.extend_from_slice(s);
+            }
+            let direct = Sketch::encode(matrix, &union);
+            assert_eq!(sum, direct.counts, "l={l} m={m}: sum of party sketches != union sketch");
+            // The parallel encode agrees on the aggregate input too.
+            assert_eq!(Sketch::encode_par(matrix, &union, EncodeConfig { threads: 4 }), direct);
+        }
+    }
+
+    #[test]
     fn encode_config_resolution_floors_and_clamps() {
         assert_eq!(EncodeConfig::serial().resolve(1 << 20), 1, "serial stays serial");
         assert_eq!(EncodeConfig { threads: 8 }.resolve(100), 1, "small inputs stay serial");

@@ -1,0 +1,153 @@
+//! Multi-party integration: N ∈ {3, 5, 8} parties of mixed shapes — subset, general
+//! overlap, disjoint-heavy — all learning `∩ᵢSᵢ`, cross-checked against the *iterated
+//! two-party fold* (`run_pair` over a running intersection: the reference any N-party
+//! round must agree with), plus the per-party byte-accounting invariant and the
+//! stalled-spoke drop over real sockets.
+//!
+//! Every listener binds `127.0.0.1:0` (an OS-assigned ephemeral port), so this suite is
+//! safe at any `--test-threads` level.
+
+use commonsense::data::synth;
+use commonsense::hash::Xoshiro256;
+use commonsense::setx::multi::net::{host_round, join_round};
+use commonsense::setx::multi::{MultiError, Party};
+use commonsense::setx::Setx;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// N sets of three interleaved shapes around one shared core: the coordinator holds the
+/// full core plus its own small tail; spokes cycle through subset (a strict prefix of
+/// the core, no tail), general overlap (full core + own tail), and disjoint-heavy (half
+/// the core + a tail a third the size of the core). All tails are disjoint slices of one
+/// id pool, so the exact intersection is a core prefix, computable by construction.
+fn mixed_sets(n: usize, core: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let tail = core / 10;
+    let heavy_tail = core / 3;
+    let ids = synth::distinct_ids(core + n * heavy_tail, &mut rng);
+    let core_ids = &ids[..core];
+    let mut sets = Vec::with_capacity(n);
+    let mut coordinator = core_ids.to_vec();
+    coordinator.extend_from_slice(&ids[core..core + tail]);
+    sets.push(coordinator);
+    for i in 1..n {
+        let start = core + i * heavy_tail;
+        sets.push(match i % 3 {
+            0 => core_ids[..core - 5 * i].to_vec(),
+            1 => {
+                let mut s = core_ids.to_vec();
+                s.extend_from_slice(&ids[start..start + tail]);
+                s
+            }
+            _ => {
+                let mut s = core_ids[..core / 2].to_vec();
+                s.extend_from_slice(&ids[start..start + heavy_tail]);
+                s
+            }
+        });
+    }
+    sets
+}
+
+/// The exact reference: fold `synth::intersect` over the sets.
+fn exact_fold(sets: &[Vec<u64>]) -> Vec<u64> {
+    let mut acc = sets[0].clone();
+    for s in &sets[1..] {
+        acc = synth::intersect(&acc, s);
+    }
+    acc
+}
+
+/// The protocol reference: iterate the *two-party* engine over a running intersection —
+/// N−1 full `run_pair` sessions. An N-party round must land on exactly this answer (in
+/// one round, with one sketch collection, instead of N−1 sequential conversations).
+fn run_pair_fold(sets: &[Vec<u64>]) -> Vec<u64> {
+    let mut acc = sets[0].clone();
+    for (i, s) in sets[1..].iter().enumerate() {
+        let alice = Setx::builder(&acc).build().expect("fold alice config");
+        let bob = Setx::builder(s).build().expect("fold bob config");
+        let (ra, _) = alice.run_pair(&bob).unwrap_or_else(|e| panic!("fold step {i}: {e}"));
+        acc = ra.intersection;
+    }
+    acc.sort_unstable();
+    acc
+}
+
+/// The headline acceptance: mixed-shape rounds at N = {3, 5, 8}, every party's answer
+/// equal to the iterated two-party fold, every per-party transcript summing exactly to
+/// the coordinator's total.
+#[test]
+fn mixed_shape_rounds_match_the_iterated_two_party_fold() {
+    for n in [3usize, 5, 8] {
+        let sets = mixed_sets(n, 900, 0x1234 + n as u64);
+        let expected = exact_fold(&sets);
+        assert!(!expected.is_empty(), "degenerate workload at n={n}");
+        assert_eq!(run_pair_fold(&sets), expected, "two-party fold reference at n={n}");
+
+        let multi = Setx::builder(&sets[0]).parties(&sets[1..]).expect("multi config");
+        let (report, spoke_reports) = multi.run_detailed().expect("multi round");
+        assert_eq!(report.intersection, expected, "coordinator at n={n}");
+        assert_eq!(report.completed(), n - 1);
+        for (p, r) in report.parties.iter().zip(&spoke_reports) {
+            assert!(p.error.is_none(), "party {} failed: {:?}", p.party, p.error);
+            assert_eq!(r.intersection, expected, "party {} at n={n}", p.party);
+            // The coordinator's view of each spoke's transcript equals the spoke's own.
+            assert_eq!(
+                p.comm.total_bytes(),
+                r.total_bytes(),
+                "coordinator vs spoke transcript, party {} at n={n}",
+                p.party
+            );
+        }
+        let per_party: usize = report.parties.iter().map(|p| p.total_bytes()).sum();
+        assert_eq!(per_party, report.total_bytes(), "byte shards must sum at n={n}");
+    }
+}
+
+/// The failure-isolation acceptance, over real sockets: in a 5-party round, spoke 4
+/// joins (completing the roster) and then goes silent. It must be dropped with a typed
+/// `PartyTimeout` while the coordinator and the three live spokes finish the round —
+/// and commit the intersection of exactly the parties that stayed.
+#[test]
+fn stalled_party_is_dropped_and_the_rest_complete_over_tcp() {
+    let sets = synth::overlap_n(5, 600, 15, 0xBEEF);
+    let cfg = *Setx::builder(&sets[0]).build().unwrap().config();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let stall_set = sets[4].clone();
+    let staller = std::thread::spawn(move || {
+        let mut party = Party::new(&cfg, stall_set, 4, 5).unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        for m in party.start() {
+            s.write_all(&m.to_bytes()).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(2_500));
+        drop(s);
+    });
+    let live: Vec<_> = (1u32..4)
+        .map(|id| {
+            let set = sets[id as usize].clone();
+            std::thread::spawn(move || join_round(addr, &cfg, set, id, 5))
+        })
+        .collect();
+
+    let report =
+        host_round(&listener, &cfg, sets[0].clone(), 5, Duration::from_millis(700)).unwrap();
+    // The committed intersection covers the parties that stayed: coordinator + 1..=3.
+    let expected = exact_fold(&sets[..4]);
+    assert_eq!(report.intersection, expected);
+    assert_eq!(report.completed(), 3);
+    let timed_out = report.parties.iter().find(|p| p.party == 4).unwrap();
+    assert!(
+        matches!(timed_out.error, Some(MultiError::PartyTimeout { party: 4 })),
+        "stalled spoke must surface PartyTimeout, got {:?}",
+        timed_out.error
+    );
+    for h in live {
+        let r = h.join().expect("spoke thread").expect("live spoke completes");
+        assert_eq!(r.intersection, expected);
+    }
+    staller.join().unwrap();
+}

@@ -7,10 +7,14 @@
 //! Every listener binds `127.0.0.1:0` (an OS-assigned ephemeral port), so these tests
 //! are safe under any `--test-threads` level — nothing races on a fixed port.
 
+use commonsense::data::synth;
 use commonsense::server::loadgen::{self, LoadgenConfig};
 use commonsense::server::SetxServer;
+use commonsense::setx::multi::net::join_round;
+use commonsense::setx::multi::{MultiError, Party};
 use commonsense::setx::transport::TcpTransport;
 use commonsense::setx::{Setx, SetxError};
+use std::io::Write;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -593,4 +597,164 @@ fn mixed_tenant_fleet_matches_references_and_shards_sum_to_globals() {
     for t in &stats.tenants {
         assert!(t.sessions_served >= 1, "tenant {} starved: {stats:?}", t.namespace);
     }
+}
+
+/// Coordinator mode end to end: a 3-party round through the daemon — two spokes join a
+/// `multi_tenant` namespace over TCP, every party lands on the exact `∩ᵢSᵢ`, the
+/// completed round is drained via `take_multi_reports`, and an ordinary two-party
+/// client of the same namespace is still served afterwards.
+#[test]
+fn server_coordinator_mode_runs_an_n_party_round() {
+    let sets = synth::overlap_n(3, 800, 25, 0xC0DE);
+    let mut expected = sets[0].clone();
+    for s in &sets[1..] {
+        expected = synth::intersect(&expected, s);
+    }
+    let host0: Vec<u64> = (0..1_000).collect();
+    let server = SetxServer::builder(Setx::builder(&host0).build().unwrap())
+        .workers(2)
+        .multi_tenant(9, sets[0].clone(), 3)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    let spokes: Vec<_> = (1u32..3)
+        .map(|id| {
+            let set = sets[id as usize].clone();
+            std::thread::spawn(move || {
+                let cfg = *Setx::builder(&set).namespace(9).build().unwrap().config();
+                join_round(addr, &cfg, set, id, 3)
+            })
+        })
+        .collect();
+    for (i, h) in spokes.into_iter().enumerate() {
+        let r = h.join().expect("spoke thread").expect("spoke completes");
+        assert_eq!(r.intersection, expected, "spoke {} answer", i + 1);
+    }
+
+    let mut reports = Vec::new();
+    wait_until("the completed round to be drained", || {
+        reports.extend(server.take_multi_reports(9));
+        !reports.is_empty()
+    });
+    assert_eq!(reports.len(), 1, "exactly one completed round");
+    let round = &reports[0];
+    assert_eq!(round.intersection, expected);
+    assert_eq!(round.completed(), 2);
+    let per_party: usize = round.parties.iter().map(|p| p.total_bytes()).sum();
+    assert_eq!(per_party, round.total_bytes(), "byte shards must sum");
+
+    // The coordinator tenant still serves plain two-party clients against its set.
+    let pair_set = sets[0][..700].to_vec();
+    let alice = Setx::builder(&pair_set).namespace(9).build().unwrap();
+    let report = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+    assert_eq!(report.intersection, synth::intersect(&pair_set, &sets[0]));
+
+    wait_until("final session counts", || server.stats().sessions_served == 3);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_served, 3, "2 spokes + 1 two-party client: {stats:?}");
+    assert_eq!(stats.sessions_failed, 0, "{stats:?}");
+}
+
+/// A coordinator round whose roster never fills: with `session_timeout` = 400ms, the
+/// join deadline closes the roster and the round runs with the parties actually
+/// present — the daemon sibling of `net::host_round`'s deadline parameter.
+#[test]
+fn server_coordinator_join_deadline_runs_partial_roster() {
+    let sets = synth::overlap_n(3, 400, 10, 0xDEAD);
+    let host0: Vec<u64> = (0..500).collect();
+    let server = SetxServer::builder(Setx::builder(&host0).build().unwrap())
+        .workers(2)
+        .multi_tenant(4, sets[0].clone(), 3)
+        .timeouts(Some(Duration::from_millis(400)), Some(Duration::from_millis(400)))
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    // Only spoke 1 of the declared 3 parties ever joins.
+    let cfg = *Setx::builder(&sets[1]).namespace(4).build().unwrap().config();
+    let r = join_round(addr, &cfg, sets[1].clone(), 1, 3).expect("lone spoke completes");
+    let expected = synth::intersect(&sets[0], &sets[1]);
+    assert_eq!(r.intersection, expected);
+
+    let mut reports = Vec::new();
+    wait_until("the partial-roster round to be drained", || {
+        reports.extend(server.take_multi_reports(4));
+        !reports.is_empty()
+    });
+    assert_eq!(reports[0].intersection, expected);
+    assert_eq!(reports[0].completed(), 1);
+    assert_eq!(reports[0].parties.len(), 1, "only the joined spoke appears");
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_served, 1, "{stats:?}");
+    assert_eq!(stats.sessions_failed, 0, "{stats:?}");
+}
+
+/// A joined-then-stalled spoke inside the daemon: the connection deadline drops it from
+/// the round with a typed `PartyTimeout` while the other spokes complete the
+/// intersection of the parties that stayed.
+#[test]
+fn server_coordinator_drops_a_stalled_spoke() {
+    let sets = synth::overlap_n(4, 500, 12, 0x57A11);
+    let host0: Vec<u64> = (0..600).collect();
+    let server = SetxServer::builder(Setx::builder(&host0).build().unwrap())
+        .workers(2)
+        .multi_tenant(6, sets[0].clone(), 4)
+        .timeouts(Some(Duration::from_millis(500)), Some(Duration::from_millis(500)))
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    // Spoke 3 joins the roster with a real hello, then goes silent holding the socket.
+    let stall_cfg = *Setx::builder(&sets[3]).namespace(6).build().unwrap().config();
+    let stall_set = sets[3].clone();
+    let staller = std::thread::spawn(move || {
+        let mut party = Party::new(&stall_cfg, stall_set, 3, 4).unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        for m in party.start() {
+            s.write_all(&m.to_bytes()).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(2_500));
+        drop(s);
+    });
+    let live: Vec<_> = (1u32..3)
+        .map(|id| {
+            let set = sets[id as usize].clone();
+            std::thread::spawn(move || {
+                let cfg = *Setx::builder(&set).namespace(6).build().unwrap().config();
+                join_round(addr, &cfg, set, id, 4)
+            })
+        })
+        .collect();
+
+    let expected = {
+        let mut acc = sets[0].clone();
+        for s in &sets[1..3] {
+            acc = synth::intersect(&acc, s);
+        }
+        acc
+    };
+    for (i, h) in live.into_iter().enumerate() {
+        let r = h.join().expect("spoke thread").expect("live spoke completes");
+        assert_eq!(r.intersection, expected, "spoke {} answer", i + 1);
+    }
+
+    let mut reports = Vec::new();
+    wait_until("the degraded round to be drained", || {
+        reports.extend(server.take_multi_reports(6));
+        !reports.is_empty()
+    });
+    let round = &reports[0];
+    assert_eq!(round.intersection, expected);
+    assert_eq!(round.completed(), 2);
+    let dropped = round.parties.iter().find(|p| p.party == 3).unwrap();
+    assert!(
+        matches!(dropped.error, Some(MultiError::PartyTimeout { party: 3 })),
+        "stalled spoke must surface PartyTimeout, got {:?}",
+        dropped.error
+    );
+    staller.join().unwrap();
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_served, 2, "{stats:?}");
+    assert_eq!(stats.sessions_failed, 1, "the dropped spoke: {stats:?}");
 }
