@@ -53,6 +53,36 @@ fn main() {
         );
     }
 
+    // Columnar-codec ablation: the same sketch framed codec-on vs codec-off, with the
+    // per-frame raw/encoded accounting baked into the trajectory row names.
+    println!("\n== columnar codec ablation ==");
+    for &d in ds {
+        let (a, b) = synth::subset_pair(scale, d, 0xbe);
+        let params = CsParams::tuned_uni(b.len(), d);
+        let on = uni::run_with_codec(&a, &b, &params, true).unwrap();
+        let off = uni::run(&a, &b, &params).unwrap();
+        let (enc, raw) = (on.comm.total_bytes(), on.comm.total_raw_bytes());
+        assert_eq!(raw, off.comm.total_bytes(), "raw accounting must equal codec-off wire");
+        let ratio = enc as f64 / raw as f64;
+        println!("uni d={d}: raw {raw} B, encoded {enc} B, ratio {ratio:.4}");
+        let (w, me) = profile.times(200, 1500);
+        results.push(
+            Bench::new(&format!(
+                "uni_codec n={scale} d={d} codec=on raw={raw} enc={enc} ratio={ratio:.4}"
+            ))
+            .with_times(w, me)
+            .run(|| uni::run_with_codec(&a, &b, &params, true).unwrap().comm.total_bytes()),
+        );
+        let (w, me) = profile.times(200, 1500);
+        results.push(
+            Bench::new(&format!(
+                "uni_codec n={scale} d={d} codec=off raw={raw} enc={raw} ratio=1.0000"
+            ))
+            .with_times(w, me)
+            .run(|| uni::run(&a, &b, &params).unwrap().comm.total_bytes()),
+        );
+    }
+
     if profile.json {
         metrics::append_bench_json(
             metrics::BENCH_PROTOCOL_JSON,

@@ -49,7 +49,8 @@ fn main() {
 
     println!("\n== end-to-end bidirectional timing ==");
     let mut results: Vec<BenchResult> = Vec::new();
-    let pairs: &[(usize, usize)] = if profile.smoke { &[(100, 200)] } else { &[(100, 200), (500, 500)] };
+    let pairs: &[(usize, usize)] =
+        if profile.smoke { &[(100, 200)] } else { &[(100, 200), (500, 500)] };
     for &(au, bu) in pairs {
         let (a, b) = synth::overlap_pair(scale, au, bu, 0xbf);
         let params = CsParams::tuned_bidi(scale + au + bu, au, bu);
@@ -62,6 +63,41 @@ fn main() {
                     assert!(out.converged);
                     out.comm.total_bytes()
                 }),
+        );
+    }
+
+    // Columnar-codec ablation: identical ping-pong, codec-on vs codec-off framing; the
+    // SMF boolean-RLE re-encode makes the bidirectional path a guaranteed net win.
+    println!("\n== columnar codec ablation ==");
+    for &(au, bu) in pairs {
+        let (a, b) = synth::overlap_pair(scale, au, bu, 0xbf);
+        let params = CsParams::tuned_bidi(scale + au + bu, au, bu);
+        let opts_on = BidiOptions::default();
+        let opts_off = BidiOptions { codec: false, ..BidiOptions::default() };
+        let on = bidi::run(&a, &b, &params, opts_on);
+        let off = bidi::run(&a, &b, &params, opts_off);
+        assert!(on.converged && off.converged);
+        let (enc, raw) = (on.comm.total_bytes(), on.comm.total_raw_bytes());
+        assert_eq!(raw, off.comm.total_bytes(), "raw accounting must equal codec-off wire");
+        let ratio = enc as f64 / raw as f64;
+        println!("bidi au={au} bu={bu}: raw {raw} B, encoded {enc} B, ratio {ratio:.4}");
+        let (w, me) = profile.times(200, 1500);
+        results.push(
+            Bench::new(&format!(
+                "bidi_codec n={scale} au={au} bu={bu} codec=on raw={raw} enc={enc} \
+                 ratio={ratio:.4}"
+            ))
+            .with_times(w, me)
+            .run(|| bidi::run(&a, &b, &params, opts_on).comm.total_bytes()),
+        );
+        let (w, me) = profile.times(200, 1500);
+        results.push(
+            Bench::new(&format!(
+                "bidi_codec n={scale} au={au} bu={bu} codec=off raw={raw} enc={raw} \
+                 ratio=1.0000"
+            ))
+            .with_times(w, me)
+            .run(|| bidi::run(&a, &b, &params, opts_off).comm.total_bytes()),
         );
     }
 

@@ -26,6 +26,7 @@ fn main() {
         let mut total = Duration::ZERO;
         let mut min = Duration::MAX;
         let mut bytes_per_party = 0usize;
+        let (mut enc, mut raw) = (0usize, 0usize);
         for _ in 0..iters {
             let t0 = Instant::now();
             let report = Setx::multi(&sets).expect("multi round");
@@ -35,13 +36,36 @@ fn main() {
             total += dt;
             min = min.min(dt);
             bytes_per_party = report.total_bytes() / (parties - 1);
+            enc = report.total_bytes();
+            raw = report.total_raw_bytes();
         }
+        let ratio = enc as f64 / raw as f64;
         let name = format!(
             "multi_round parties={parties} common={common} unique={unique} \
-             bytes_per_party={bytes_per_party}"
+             bytes_per_party={bytes_per_party} codec=on raw={raw} enc={enc} ratio={ratio:.4}"
         );
         println!("bench {name:<84} {:>10.1?} / round", total / iters);
         results.push(BenchResult { name, mean: total / iters, min, iters: iters as u64 });
+
+        // Codec-off ablation: same sets, columnar framing disabled on every endpoint.
+        // Its wire total must equal the codec-on run's raw-bytes column exactly.
+        let t0 = Instant::now();
+        let off = Setx::builder(&sets[0])
+            .codec(false)
+            .parties(&sets[1..])
+            .expect("multi builder")
+            .run()
+            .expect("multi round (codec off)");
+        let dt = t0.elapsed();
+        assert_eq!(off.intersection, expected, "codec must not change the answer");
+        assert_eq!(off.total_bytes(), raw, "codec-off wire must equal codec-on raw bytes");
+        let name = format!(
+            "multi_round parties={parties} common={common} unique={unique} \
+             bytes_per_party={} codec=off raw={raw} enc={raw} ratio=1.0000",
+            off.total_bytes() / (parties - 1)
+        );
+        println!("bench {name:<84} {:>10.1?} / round", dt);
+        results.push(BenchResult { name, mean: dt, min: dt, iters: 1 });
     }
     if profile.json {
         metrics::append_bench_json(

@@ -53,6 +53,40 @@ fn main() {
                 out.comm.total_bytes()
             }),
     );
+    // Columnar-codec ablation on the Table-2 workload — the acceptance gate for the
+    // wire::column layer: codec-on must be a strict byte win on this realistic diff, and
+    // the codec-on transcript's raw-bytes column must reproduce the codec-off wire.
+    let opts_on = BidiOptions::default();
+    let opts_off = BidiOptions { codec: false, ..BidiOptions::default() };
+    let on = bidi::run(&b, &a, &params, opts_on);
+    let off = bidi::run(&b, &a, &params, opts_off);
+    assert!(on.converged && off.converged);
+    assert_eq!(on.a_minus_b, off.a_minus_b, "codec must not change protocol decisions");
+    let (enc, raw) = (on.comm.total_bytes(), on.comm.total_raw_bytes());
+    assert_eq!(raw, off.comm.total_bytes(), "raw accounting must equal codec-off wire");
+    assert!(enc < raw, "codec on ({enc} B) must strictly beat codec off ({raw} B)");
+    let ratio = enc as f64 / raw as f64;
+    println!("codec ablation: raw {raw} B, encoded {enc} B, ratio {ratio:.4}");
+    let (w, me) = profile.times(300, 2000);
+    results.push(
+        Bench::new(&format!(
+            "eth_codec n={} d={} codec=on raw={raw} enc={enc} ratio={ratio:.4}",
+            a.len(),
+            st.sym_diff
+        ))
+        .with_times(w, me)
+        .run(|| bidi::run(&b, &a, &params, opts_on).comm.total_bytes()),
+    );
+    let (w, me) = profile.times(300, 2000);
+    results.push(
+        Bench::new(&format!(
+            "eth_codec n={} d={} codec=off raw={raw} enc={raw} ratio=1.0000",
+            a.len(),
+            st.sym_diff
+        ))
+        .with_times(w, me)
+        .run(|| bidi::run(&b, &a, &params, opts_off).comm.total_bytes()),
+    );
     let (w, me) = profile.times(300, 2000);
     results.push(
         Bench::new("eth_parallel_8x")

@@ -10,6 +10,14 @@
 
 use crate::entropy::{put_varint, take, take_varint, unzigzag, zigzag};
 use crate::hash::hash_u64;
+use crate::wire::column::{varint_len, Column, RleU64Col};
+
+/// Hard ceiling on the cell count accepted by [`Iblt::from_columnar_bytes`]. The
+/// run-length column can claim many cells in few bytes (a repeat run is ~3 bytes
+/// regardless of length), so unlike the legacy parser the byte count of the input does
+/// not bound the allocation — this constant does. Far above any table the estimators
+/// ship, far below anything that could hurt.
+const MAX_COLUMNAR_CELLS: usize = 1 << 20;
 
 /// Accounting + structural parameters.
 #[derive(Clone, Copy, Debug)]
@@ -166,6 +174,61 @@ impl Iblt {
             let count = unzigzag(take_varint(data, off)?);
             cells.push(Cell { key_xor, fp_xor, count });
         }
+        Some(Iblt { params, cells })
+    }
+
+    /// Byte length of [`Iblt::to_bytes`] output, computed without serializing. Used by
+    /// the wire layer to charge codec-off-equivalent bytes for columnar frames.
+    pub fn legacy_len(&self) -> usize {
+        let mut len = varint_len(self.cells.len() as u64);
+        for c in &self.cells {
+            len += 8 + varint_len(c.fp_xor) + varint_len(zigzag(c.count));
+        }
+        len
+    }
+
+    /// Columnar serialization: the cell array transposed into three [`RleU64Col`]
+    /// columns — `key_xor`s, `fp_xor`s, zigzagged `count`s. Strata-estimator tables are
+    /// mostly empty cells (all-zero in every field), which the run-length columns
+    /// collapse to a few bytes each; the legacy row-major layout pays ≥ 10 bytes per
+    /// cell no matter what. Like [`Iblt::to_bytes`], structural parameters are not
+    /// included.
+    pub fn to_columnar_bytes(&self) -> Vec<u8> {
+        let keys: Vec<u64> = self.cells.iter().map(|c| c.key_xor).collect();
+        let fps: Vec<u64> = self.cells.iter().map(|c| c.fp_xor).collect();
+        let counts: Vec<u64> = self.cells.iter().map(|c| zigzag(c.count)).collect();
+        let mut out = Vec::with_capacity(
+            RleU64Col::encoded_len(&keys)
+                + RleU64Col::encoded_len(&fps)
+                + RleU64Col::encoded_len(&counts),
+        );
+        RleU64Col::encode(&keys, &mut out);
+        RleU64Col::encode(&fps, &mut out);
+        RleU64Col::encode(&counts, &mut out);
+        out
+    }
+
+    /// Parse cells written by [`Iblt::to_columnar_bytes`] from `data[*off..]`, advancing
+    /// the cursor. The three columns must decode to the same nonzero length, a multiple
+    /// of `n_hashes`, at most [`MAX_COLUMNAR_CELLS`].
+    pub fn from_columnar_bytes(data: &[u8], off: &mut usize, params: IbltParams) -> Option<Iblt> {
+        let keys = RleU64Col::decode(data, off, MAX_COLUMNAR_CELLS)?;
+        let fps = RleU64Col::decode(data, off, MAX_COLUMNAR_CELLS)?;
+        let counts = RleU64Col::decode(data, off, MAX_COLUMNAR_CELLS)?;
+        let n = keys.len();
+        if n == 0 || fps.len() != n || counts.len() != n {
+            return None;
+        }
+        let k = params.n_hashes.max(1) as usize;
+        if n % k != 0 {
+            return None; // `Iblt::new` always produces a multiple of `n_hashes` cells
+        }
+        let cells = keys
+            .into_iter()
+            .zip(fps)
+            .zip(counts)
+            .map(|((key_xor, fp_xor), c)| Cell { key_xor, fp_xor, count: unzigzag(c) })
+            .collect();
         Some(Iblt { params, cells })
     }
 
@@ -330,6 +393,59 @@ mod tests {
         // Semantics survive the roundtrip: subtracting the original leaves nothing.
         let (pos, neg) = back.sub(&t).peel().unwrap();
         assert!(pos.is_empty() && neg.is_empty());
+    }
+
+    #[test]
+    fn columnar_roundtrips_and_beats_legacy_on_sparse_tables() {
+        let params = IbltParams::paper_synthetic();
+        let mut t = Iblt::new(256, params);
+        for k in 0..10u64 {
+            t.insert(k * 13 + 7); // 10 keys into 256+ cells: mostly-empty table
+        }
+        let legacy = t.to_bytes();
+        assert_eq!(legacy.len(), t.legacy_len());
+        let blob = t.to_columnar_bytes();
+        let mut off = 0;
+        let back = Iblt::from_columnar_bytes(&blob, &mut off, params).unwrap();
+        assert_eq!(off, blob.len());
+        assert_eq!(back.num_cells(), t.num_cells());
+        let (pos, neg) = back.sub(&t).peel().unwrap();
+        assert!(pos.is_empty() && neg.is_empty());
+        // The zero runs collapse: the columnar form is a fraction of the row-major one.
+        assert!(blob.len() * 4 < legacy.len(), "columnar {} legacy {}", blob.len(), legacy.len());
+    }
+
+    #[test]
+    fn columnar_parse_rejects_malformed_columns() {
+        let params = IbltParams::paper_synthetic();
+        let mut t = Iblt::new(16, params);
+        t.insert_all(&[3, 5, 9]);
+        let blob = t.to_columnar_bytes();
+        for cut in 0..blob.len() {
+            let mut off = 0;
+            assert!(Iblt::from_columnar_bytes(&blob[..cut], &mut off, params).is_none(), "{cut}");
+        }
+        // Column length mismatch: 16 keys but a second column claiming 8 elements.
+        let mut bad = Vec::new();
+        RleU64Col::encode(&[0u64; 16], &mut bad);
+        RleU64Col::encode(&[0u64; 8], &mut bad);
+        RleU64Col::encode(&[0u64; 16], &mut bad);
+        let mut off = 0;
+        assert!(Iblt::from_columnar_bytes(&bad, &mut off, params).is_none());
+        // Not a multiple of n_hashes (4): 6-cell columns.
+        let mut bad = Vec::new();
+        for _ in 0..3 {
+            RleU64Col::encode(&[0u64; 6], &mut bad);
+        }
+        let mut off = 0;
+        assert!(Iblt::from_columnar_bytes(&bad, &mut off, params).is_none());
+        // Empty table.
+        let mut bad = Vec::new();
+        for _ in 0..3 {
+            RleU64Col::encode(&[], &mut bad);
+        }
+        let mut off = 0;
+        assert!(Iblt::from_columnar_bytes(&bad, &mut off, params).is_none());
     }
 
     #[test]

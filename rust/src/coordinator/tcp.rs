@@ -110,6 +110,7 @@ mod tests {
                 inquiry: vec![],
                 answers: vec![],
                 done: false,
+                codec: false,
             };
             s.write_all(&rogue.to_bytes()).unwrap();
             s

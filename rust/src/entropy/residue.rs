@@ -4,6 +4,11 @@
 //! ships them as two f32s, and both sides derive the identical quantized symbol model from
 //! the analytic Skellam pmf over a high-coverage range. Out-of-range coordinates (rare) are
 //! escape-coded: an escape symbol in the rANS stream plus a zigzag-varint side channel.
+//!
+//! This payload is already entropy-coded to near the Skellam model's entropy, so the
+//! [`crate::wire::column`] codec deliberately leaves it alone: residue bytes are
+//! byte-identical whether a session negotiated the codec on or off (the codec re-frames
+//! the *surrounding* id lists, bitmaps, and headers, where the redundancy actually is).
 
 use super::rans::{RansDecoder, RansEncoder, SymbolModel};
 use super::skellam::{skellam_pmf, skellam_range, SkellamParams};

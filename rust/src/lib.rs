@@ -207,6 +207,25 @@
 //!   `sketch_encode[_par] n=100000` serial/threads={1,4} (serial baselines vs parallel),
 //!   plus `sketch_store_hit` vs `sketch_store_miss`. See [`metrics::append_bench_json`].
 //!
+//! ## Wire format & compression
+//!
+//! Every frame is `type:u8 | body_len:varint | body`, parsed with checked offsets and a
+//! hard frame cap ([`protocol::wire::MAX_FRAME_BYTES`]). Under the frame layer sits one
+//! columnar codec layer, [`wire::column`]: LEB128 varints, delta+varint columns for
+//! sorted id sequences, run-length columns for sparse integer vectors (CS sketch count
+//! tables are mostly zeros at low d), and boolean-RLE for bitmaps — each behind the
+//! [`wire::column::Column`] trait with length-capped, offset-checked decoding. The
+//! compact encodings are **negotiated**, not assumed: a flags bit in the `EstHello`
+//! handshake (the same versioned trailing-field pattern that carries `namespace` and the
+//! multi-party fields) turns them on only when both endpoints advertise support, so
+//! codec-off frames are byte-identical to the pre-codec wire format and old peers
+//! interop unchanged. Sessions charge every frame both its encoded bytes and its
+//! codec-off-equivalent ([`protocol::wire::Msg::raw_wire_len`]) to the
+//! [`metrics::CommLog`], so [`setx::SetxReport::compression_ratio`] and the server's
+//! per-tenant stats report the measured — not estimated — wire savings; the
+//! `fig2a`/`fig2b`/`table2_ethereum`/`multi_round` benches record codec-on vs codec-off
+//! rows in `BENCH_protocol.json`.
+//!
 //! ## Workspace layout
 //!
 //! The Cargo workspace maps the repo's split source tree explicitly: the library lives at
@@ -234,6 +253,7 @@ pub mod setx;
 pub mod sketch;
 pub mod smf;
 pub mod streaming;
+pub mod wire;
 
 /// Element identifiers. Objects are identified by (hashes of) their content; internally we
 /// operate on 64-bit ids. When the nominal universe is larger (e.g. `2^256` for Ethereum

@@ -62,7 +62,12 @@ pub struct CommEntry {
     pub from_alice: bool,
     /// Which protocol stage the frame belongs to.
     pub phase: Phase,
+    /// Framed bytes actually sent (the encoded size under the negotiated codec).
     pub bytes: usize,
+    /// Framed bytes the same message would occupy with the columnar codec off
+    /// (`Msg::raw_wire_len`). Equal to `bytes` for codec-off frames, so
+    /// `raw_bytes − bytes` is the measured per-frame compression win.
+    pub raw_bytes: usize,
 }
 
 impl CommLog {
@@ -71,12 +76,35 @@ impl CommLog {
     }
 
     pub fn record(&mut self, from_alice: bool, phase: Phase, bytes: usize) {
-        self.entries.push(CommEntry { from_alice, phase, bytes });
+        self.entries.push(CommEntry { from_alice, phase, bytes, raw_bytes: bytes });
+    }
+
+    /// Like [`CommLog::record`], but with separate encoded and codec-off-equivalent
+    /// sizes — the entry point for codec-aware frame accounting.
+    pub fn record_framed(&mut self, from_alice: bool, phase: Phase, bytes: usize, raw: usize) {
+        self.entries.push(CommEntry { from_alice, phase, bytes, raw_bytes: raw });
     }
 
     /// Total bytes in both directions — the paper's communication cost.
     pub fn total_bytes(&self) -> usize {
         self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Total codec-off-equivalent bytes — what [`CommLog::total_bytes`] would have been
+    /// with the columnar codec disabled.
+    pub fn total_raw_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.raw_bytes).sum()
+    }
+
+    /// Aggregate encoded/raw ratio (< 1.0 when the codec saved bytes; 1.0 for an empty
+    /// or fully codec-off log).
+    pub fn compression_ratio(&self) -> f64 {
+        let raw = self.total_raw_bytes();
+        if raw == 0 {
+            1.0
+        } else {
+            self.total_bytes() as f64 / raw as f64
+        }
     }
 
     /// Number of messages (the paper counts "rounds of communication" as messages sent,
@@ -372,6 +400,27 @@ mod tests {
         merged.extend(&log);
         merged.extend(&log);
         assert_eq!(merged.total_bytes(), 320);
+    }
+
+    #[test]
+    fn comm_log_raw_vs_encoded_accounting() {
+        let mut log = CommLog::new();
+        // Plain `record` charges raw == encoded (codec-off frames).
+        log.record(true, Phase::Handshake, 100);
+        assert_eq!(log.total_raw_bytes(), 100);
+        assert!((log.compression_ratio() - 1.0).abs() < 1e-12);
+        // Codec frames charge both sides; the ratio reflects the measured saving.
+        log.record_framed(true, Phase::Sketch, 60, 100);
+        log.record_framed(false, Phase::Residue, 40, 100);
+        assert_eq!(log.total_bytes(), 200);
+        assert_eq!(log.total_raw_bytes(), 300);
+        assert!((log.compression_ratio() - 200.0 / 300.0).abs() < 1e-12);
+        // `extend` carries raw bytes across merges.
+        let mut merged = CommLog::new();
+        merged.extend(&log);
+        assert_eq!(merged.total_raw_bytes(), 300);
+        // Empty log: ratio defined as 1.0.
+        assert!((CommLog::new().compression_ratio() - 1.0).abs() < 1e-12);
     }
 
     #[test]

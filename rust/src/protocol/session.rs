@@ -113,7 +113,7 @@ pub(crate) fn label(msg: &Msg) -> &'static str {
     match msg {
         Msg::EstHello { .. } => "est-hello",
         Msg::Hello { .. } => "hello",
-        Msg::Sketch(_) => "sketch",
+        Msg::Sketch { .. } => "sketch",
         Msg::Round { .. } => "round",
         Msg::Confirm { .. } => "confirm",
         Msg::Busy { .. } => "busy",
@@ -127,7 +127,7 @@ pub(crate) fn label(msg: &Msg) -> &'static str {
 pub fn frame_phase(msg: &Msg) -> CommPhase {
     match msg {
         Msg::EstHello { .. } | Msg::Hello { .. } | Msg::Busy { .. } => CommPhase::Handshake,
-        Msg::Sketch(_) | Msg::AggSketch { .. } => CommPhase::Sketch,
+        Msg::Sketch { .. } | Msg::AggSketch { .. } => CommPhase::Sketch,
         Msg::Round { .. } | Msg::MultiResidue { .. } => CommPhase::Residue,
         Msg::Confirm { .. } => CommPhase::Confirm,
     }
@@ -212,8 +212,8 @@ impl Session {
             namespace: opts.namespace,
         };
         let sketch = match host_sketch.filter(|sk| sk.matrix == params.matrix()) {
-            Some(sk) => sketch_msg(params, &sk.counts, is_alice),
-            None => initiator_sketch_with(params, set, is_alice, enc),
+            Some(sk) => sketch_msg(params, &sk.counts, is_alice, opts.codec),
+            None => initiator_sketch_with(params, set, is_alice, enc, opts.codec),
         };
         let peer = Peer::with_cache(params, set, Side::Negative, opts, &mut cache);
         let mut session = Session {
@@ -324,7 +324,7 @@ impl Session {
                 self.phase = Phase::AwaitSketch(params);
                 Ok(SessionEvent::Continue)
             }
-            (Phase::AwaitSketch(params), Msg::Sketch(sm)) => {
+            (Phase::AwaitSketch(params), Msg::Sketch { sketch: sm, .. }) => {
                 // The decoder copies the candidate ids; release our buffer with it.
                 let set = std::mem::take(&mut self.set);
                 let host = self.host_sketch.take();
@@ -369,11 +369,13 @@ impl Session {
     }
 
     fn record_sent(&mut self, msg: &Msg) {
-        self.comm.record(self.is_alice, frame_phase(msg), msg.wire_len());
+        let (enc, raw) = (msg.wire_len(), msg.raw_wire_len());
+        self.comm.record_framed(self.is_alice, frame_phase(msg), enc, raw);
     }
 
     fn record_received(&mut self, msg: &Msg) {
-        self.comm.record(!self.is_alice, frame_phase(msg), msg.wire_len());
+        let (enc, raw) = (msg.wire_len(), msg.raw_wire_len());
+        self.comm.record_framed(!self.is_alice, frame_phase(msg), enc, raw);
     }
 
     /// Messages seen so far that count against the round budget (everything but the
@@ -509,7 +511,7 @@ impl Peer {
     /// Process an incoming round message and produce the reply (or `None` when the
     /// session is complete and the peer needs nothing further).
     pub fn step(&mut self, incoming: &Msg) -> Result<Option<Msg>, SessionError> {
-        let Msg::Round { residue, smf, inquiry, answers, done } = incoming else {
+        let Msg::Round { residue, smf, inquiry, answers, done, codec } = incoming else {
             return Err(SessionError::UnexpectedMessage {
                 phase: "ping-pong",
                 got: label(incoming),
@@ -550,9 +552,15 @@ impl Peer {
         }
 
         // 4. Collision avoidance: refuse to set coordinates in the peer's estimate SMF.
+        //    The frame's own codec flag picks the filter layout — codec-on peers ship
+        //    the boolean-RLE form, codec-off peers the PR-7 flat bytes.
         if let Some(bytes) = smf {
-            let bloom =
-                BloomFilter::from_bytes(bytes).ok_or(SessionError::Corrupt("smf"))?;
+            let bloom = if *codec {
+                BloomFilter::from_codec_bytes(bytes)
+            } else {
+                BloomFilter::from_bytes(bytes)
+            }
+            .ok_or(SessionError::Corrupt("smf"))?;
             self.decoder.set_banned(move |id| bloom.contains(id));
         }
 
@@ -592,7 +600,7 @@ impl Peer {
             for id in &est {
                 bloom.insert(*id);
             }
-            Some(bloom.to_bytes())
+            Some(if self.opts.codec { bloom.to_codec_bytes() } else { bloom.to_bytes() })
         };
         Ok(Some(Msg::Round {
             residue: compress_residue(&self.decoder.export_residue()),
@@ -600,6 +608,7 @@ impl Peer {
             inquiry: my_inquiry,
             answers: my_answers,
             done: self.settled,
+            codec: self.opts.codec,
         }))
     }
 
@@ -622,27 +631,30 @@ pub fn codec_params(params: &CsParams, initiator_is_alice: bool) -> SketchCodecP
     SketchCodecParams::derive(r_unique, i_unique, params.l, params.m)
 }
 
-/// Initiator helper: the compressed sketch message for `set` (serial encode; the session
-/// paths use [`initiator_sketch_with`]).
+/// Initiator helper: the compressed sketch message for `set` (serial encode, codec-off
+/// framing; the session paths use [`initiator_sketch_with`]).
 pub fn initiator_sketch(params: &CsParams, set: &[u64], initiator_is_alice: bool) -> Msg {
-    initiator_sketch_with(params, set, initiator_is_alice, EncodeConfig::serial())
+    initiator_sketch_with(params, set, initiator_is_alice, EncodeConfig::serial(), false)
 }
 
-/// [`initiator_sketch`] with an [`EncodeConfig`]: the sketch encode — the initiator's
-/// dominant local cost at large |set| — runs on the bounded encode pool.
+/// [`initiator_sketch`] with an [`EncodeConfig`] — the sketch encode, the initiator's
+/// dominant local cost at large |set|, runs on the bounded encode pool — and the
+/// negotiated `codec` framing flag.
 pub fn initiator_sketch_with(
     params: &CsParams,
     set: &[u64],
     initiator_is_alice: bool,
     enc: EncodeConfig,
+    codec: bool,
 ) -> Msg {
     let sketch = Sketch::encode_par(params.matrix(), set, enc);
-    sketch_msg(params, &sketch.counts, initiator_is_alice)
+    sketch_msg(params, &sketch.counts, initiator_is_alice, codec)
 }
 
 /// Compress already-encoded sketch counts into the wire frame.
-fn sketch_msg(params: &CsParams, counts: &[i32], initiator_is_alice: bool) -> Msg {
-    Msg::Sketch(compress_sketch(counts, &codec_params(params, initiator_is_alice)))
+fn sketch_msg(params: &CsParams, counts: &[i32], initiator_is_alice: bool, codec: bool) -> Msg {
+    let sketch = compress_sketch(counts, &codec_params(params, initiator_is_alice));
+    Msg::Sketch { sketch, codec }
 }
 
 /// Responder helper: recover the initiator's sketch and form the initial canonical
@@ -695,6 +707,7 @@ pub fn seed_round(residue0: &[i32]) -> Msg {
         inquiry: Vec::new(),
         answers: Vec::new(),
         done: false,
+        codec: false,
     }
 }
 
@@ -776,8 +789,14 @@ mod tests {
         let params = CsParams::tuned_bidi(1_000, 10, 10);
         // Initiator sessions enter the ping-pong phase immediately.
         let (mut ini, _opening) = Session::initiator(&params, &set, BidiOptions::default(), true);
-        let garbage_residue =
-            Msg::Round { residue: vec![0xff; 7], smf: None, inquiry: vec![], answers: vec![], done: false };
+        let garbage_residue = Msg::Round {
+            residue: vec![0xff; 7],
+            smf: None,
+            inquiry: vec![],
+            answers: vec![],
+            done: false,
+            codec: false,
+        };
         assert!(matches!(ini.on_msg(&garbage_residue), Err(SessionError::Corrupt("residue"))));
 
         let (mut ini, _opening) = Session::initiator(&params, &set, BidiOptions::default(), true);
@@ -788,6 +807,7 @@ mod tests {
             inquiry: vec![],
             answers: vec![],
             done: false,
+            codec: false,
         };
         assert!(matches!(ini.on_msg(&garbage_smf), Err(SessionError::Corrupt("smf"))));
     }

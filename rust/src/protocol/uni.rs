@@ -55,21 +55,23 @@ pub struct UniOutcome {
     pub used_fallback: bool,
 }
 
-/// Alice's half: produce the (framed) sketch message (serial encode; the facade paths
-/// use [`alice_encode_with`]).
+/// Alice's half: produce the (framed) sketch message (serial encode, codec-off framing;
+/// the facade paths use [`alice_encode_with`]).
 pub fn alice_encode(a: &[u64], params: &CsParams) -> (Msg, usize) {
-    alice_encode_with(a, params, EncodeConfig::serial(), None)
+    alice_encode_with(a, params, EncodeConfig::serial(), None, false)
 }
 
-/// [`alice_encode`] with the encode-side knobs: `host` (a pre-resolved sketch of `a`
+/// [`alice_encode`] with the encode-side knobs — `host` (a pre-resolved sketch of `a`
 /// under exactly `params.matrix()`, validated here) skips the O(m·|a|) encode — the
 /// host-sketch-store fast path for a serving initiator — and `enc` parallelizes it
-/// otherwise.
+/// otherwise — plus the negotiated `wire_codec` framing flag (run-length table framing
+/// when on; byte-identical legacy framing when off).
 pub fn alice_encode_with(
     a: &[u64],
     params: &CsParams,
     enc: EncodeConfig,
     host: Option<&Sketch>,
+    wire_codec: bool,
 ) -> (Msg, usize) {
     let owned;
     let sketch = match host.filter(|sk| sk.matrix == params.matrix()) {
@@ -80,7 +82,8 @@ pub fn alice_encode_with(
         }
     };
     let codec = SketchCodecParams::derive(params.est_b_unique, params.est_a_unique, params.l, params.m);
-    let msg = Msg::Sketch(compress_sketch(&sketch.counts, &codec));
+    let sketch_msg = compress_sketch(&sketch.counts, &codec);
+    let msg = Msg::Sketch { sketch: sketch_msg, codec: wire_codec };
     let size = msg.to_bytes().len();
     (msg, size)
 }
@@ -117,7 +120,7 @@ pub fn bob_decode_with(
     host: Option<&Sketch>,
     enc: EncodeConfig,
 ) -> Result<(Vec<u64>, bool), UniError> {
-    let Msg::Sketch(sketch_msg) = msg else {
+    let Msg::Sketch { sketch: sketch_msg, .. } = msg else {
         return Err(UniError::Frame("expected sketch frame"));
     };
     let matrix = params.matrix();
@@ -168,11 +171,24 @@ pub fn bob_decode_with(
     Ok((b_minus_a, used_fallback))
 }
 
-/// End-to-end in-memory run with exact byte accounting.
+/// End-to-end in-memory run with exact byte accounting (codec-off framing, so the cost
+/// is directly comparable to the pre-codec wire format; [`run_with_codec`] is the
+/// ablation knob).
 pub fn run(a: &[u64], b: &[u64], params: &CsParams) -> Result<UniOutcome, UniError> {
+    run_with_codec(a, b, params, false)
+}
+
+/// [`run`] with the columnar wire codec on or off — the fig2a codec-ablation entry
+/// point. The comm log charges the frame's encoded bytes and its codec-off equivalent.
+pub fn run_with_codec(
+    a: &[u64],
+    b: &[u64],
+    params: &CsParams,
+    codec: bool,
+) -> Result<UniOutcome, UniError> {
     let mut comm = CommLog::new();
-    let (msg, size) = alice_encode(a, params);
-    comm.record(true, Phase::Sketch, size);
+    let (msg, size) = alice_encode_with(a, params, EncodeConfig::serial(), None, codec);
+    comm.record_framed(true, Phase::Sketch, size, msg.raw_wire_len());
     // Serialize/deserialize through the real wire format (what TCP would carry).
     let bytes = msg.to_bytes();
     let (received, _) =
@@ -209,6 +225,27 @@ mod tests {
             let out = run(&a, &b, &params).unwrap();
             assert_eq!(out.b_minus_a, synth::difference(&b, &a), "seed {seed}");
         }
+    }
+
+    #[test]
+    fn codec_framing_roundtrips_with_exact_raw_accounting() {
+        // The one-shot protocol has little columnar structure to exploit (the rANS
+        // table is already near-entropy), so the codec guarantee here is the adaptive
+        // floor: same answer, raw accounting equal to the measured codec-off wire, and
+        // at worst the mode byte of overhead.
+        let (a, b) = synth::subset_pair(5_000, 50, 7);
+        let params = CsParams::tuned_uni(b.len(), 50);
+        let off = run_with_codec(&a, &b, &params, false).unwrap();
+        let on = run_with_codec(&a, &b, &params, true).unwrap();
+        assert_eq!(on.b_minus_a, off.b_minus_a);
+        assert_eq!(off.comm.total_raw_bytes(), off.comm.total_bytes());
+        assert_eq!(on.comm.total_raw_bytes(), off.comm.total_bytes());
+        assert!(
+            on.comm.total_bytes() <= off.comm.total_bytes() + 2,
+            "codec on {} vs off {}",
+            on.comm.total_bytes(),
+            off.comm.total_bytes()
+        );
     }
 
     #[test]
@@ -264,11 +301,11 @@ mod tests {
         let (a, b) = synth::subset_pair(10_000, 100, 5);
         let params = CsParams::tuned_uni(b.len(), 100);
         let (msg, _) = alice_encode(&a, &params);
-        let Msg::Sketch(mut sk) = msg else { panic!("alice encodes a sketch") };
+        let Msg::Sketch { sketch: mut sk, .. } = msg else { panic!("alice encodes a sketch") };
         for byte in sk.payload.iter_mut().take(24) {
             *byte ^= 0xa5;
         }
-        let corrupt = Msg::Sketch(sk);
+        let corrupt = Msg::Sketch { sketch: sk, codec: false };
         match bob_decode(&corrupt, &b, &params) {
             // Either the truncation/verification layer rejects the payload outright, or
             // it slips through as garbage and the residue decode fails — both must be

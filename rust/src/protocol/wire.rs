@@ -4,13 +4,33 @@
 //! serialized here so the experiment harnesses charge real sizes. (The image's crate set
 //! has no serde; this module doubles as the protocol's stable interchange format for the
 //! TCP coordinator.)
+//!
+//! Repeated values inside a body — id sequences, count vectors, bitmaps — are encoded
+//! through the columnar codecs in [`crate::wire::column`]. Each payload frame exists in
+//! two forms selected by the negotiated `codec` flag (see the module docs there): the
+//! codec-off form is byte-identical to the PR 7 wire format and uses the original type
+//! bytes, the codec-on form uses a dedicated type byte (`TYPE_*_C`) with columnar field
+//! encodings. [`Msg::raw_wire_len`] reports the codec-off-equivalent size of any frame,
+//! which is how [`crate::metrics::CommLog`] measures the compression ratio on real
+//! traffic instead of estimating it.
 
 use crate::entropy::{get_varint, put_varint, take, take_varint, SketchMsg};
+use crate::wire::column::{BoolRleCol, Column, DeltaU64Col, Fixed64Col, RleU64Col};
 
 /// Hard cap on a frame body's advertised length. Adversarial frames can claim up to
 /// `u64::MAX` bytes; every reader — the in-memory parser here and the TCP framer in
 /// [`crate::coordinator::tcp`] — must reject the claim *before* reserving memory for it.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Cap on the inquiry signatures / answer bits a single codec-on `Round` frame may
+/// claim. The legacy form is naturally bounded (8 body bytes per signature); a columnar
+/// run can decode far more elements than it has payload bytes, so the codec arms need an
+/// explicit ceiling. Real inquiry lists are at most a few × d.
+const MAX_ROUND_ITEMS: usize = 1 << 20;
+
+/// Cap on sketch-table coordinates in a codec-on sketch body (parity with the
+/// `MAX_COORDS` guard inside [`SketchMsg::from_bytes`]).
+const MAX_TABLE_COORDS: usize = 1 << 24;
 
 /// A protocol message.
 #[derive(Clone, Debug, PartialEq)]
@@ -28,6 +48,7 @@ pub enum Msg {
         /// Caller-supplied `d = |AΔB|` (present iff the config says `DiffSize::Explicit`).
         explicit_d: Option<u64>,
         /// Serialized [`crate::protocol::estimate::StrataEstimator`] (iff `Estimated`).
+        /// Columnar form iff `codec` is set — the flag tells the receiver how to parse.
         strata: Option<Vec<u8>>,
         /// Serialized [`crate::protocol::estimate::MinHashEstimator`] (iff `Estimated`).
         minhash: Option<Vec<u8>>,
@@ -42,6 +63,12 @@ pub enum Msg {
         /// byte-identical. Parse enforces `party_count ≥ 2 && party_id < party_count`;
         /// id 0 is the coordinator.
         party: Option<(u32, u32)>,
+        /// Sender supports (and, for its own estimator blobs, is using) the columnar
+        /// wire codec. Flags bit 5 — the same versioned pattern as `namespace`/`party`:
+        /// the bit is zero on every pre-codec frame, so PR-7-era frames parse as
+        /// `codec: false` and a codec-off frame stays byte-identical. The session runs
+        /// codec-on iff **both** hellos carry the bit.
+        codec: bool,
     },
     /// Session handshake: CS parameters + role metadata.
     Hello {
@@ -57,13 +84,21 @@ pub enum Msg {
         namespace: u32,
     },
     /// The initiator's compressed, truncation-coded sketch (message 1).
-    Sketch(SketchMsg),
+    Sketch {
+        sketch: SketchMsg,
+        /// Columnar codec negotiated for this session. Not a body field: codec-on
+        /// frames use the dedicated `TYPE_SKETCH_C` type byte (run-length table
+        /// column), codec-off frames are byte-identical to PR 7.
+        codec: bool,
+    },
     /// One ping-pong round (§5.1–5.2).
     Round {
-        /// Entropy-compressed canonical residue.
+        /// Entropy-compressed canonical residue (already rANS-coded — identical bytes
+        /// in both codec modes).
         residue: Vec<u8>,
         /// Serialized Bloom filter of the sender's current estimate set (absent on the
-        /// final confirmation).
+        /// final confirmation). Codec-on rounds carry the boolean-RLE form produced by
+        /// [`crate::smf::BloomFilter::to_codec_bytes`]; codec-off rounds the flat form.
         smf: Option<Vec<u8>>,
         /// "Last inquiry": signatures of tentatively-updated SMF-positive coordinates.
         inquiry: Vec<u64>,
@@ -72,11 +107,17 @@ pub enum Msg {
         answers: Vec<bool>,
         /// Sender believes the session is complete (residue zero, nothing outstanding).
         done: bool,
+        /// Columnar codec negotiated: delta+varint inquiry column and boolean-RLE
+        /// answers under `TYPE_ROUND_C`; raw words + bitpacked bytes under the PR-7
+        /// `TYPE_ROUND` layout otherwise.
+        codec: bool,
     },
     /// End-of-attempt verdict (the `Setx` facade). Both endpoints exchange one `Confirm`
     /// per attempt; a failed attempt (`ok = false`) triggers the l-escalation ladder —
     /// the initiator re-opens with a larger sketch *on the same connection* — instead of
-    /// an opaque teardown.
+    /// an opaque teardown. Carries no id list (only this verdict triple), so it is the
+    /// one payload frame with nothing to run through the columnar codecs: both codec
+    /// modes serialize it identically.
     Confirm {
         /// The sender's attempt succeeded (decode exact / session settled).
         ok: bool,
@@ -119,10 +160,13 @@ pub enum Msg {
         digest: u64,
         /// What the receiving spoke should do next: one of the `DIRECTIVE_*` constants.
         directive: u8,
-        /// The aggregate counts themselves (zigzag varints), present iff they fit the
-        /// frame budget. When present, the count **must** equal `l` — a mismatched
-        /// length is a malformed frame, not a short read.
+        /// The aggregate counts themselves, present iff they fit the frame budget
+        /// (zigzag varints codec-off; a zigzag run-length column under
+        /// `TYPE_AGG_SKETCH_C`). When present, the count **must** equal `l` — a
+        /// mismatched length is a malformed frame, not a short read.
         counts: Option<Vec<i32>>,
+        /// Columnar codec negotiated with the receiving spoke.
+        codec: bool,
     },
     /// Multi-party exact-membership round (coordinator → one spoke): a compressed sketch
     /// of the coordinator's current intersection estimate, decoded by the spoke against
@@ -142,6 +186,9 @@ pub enum Msg {
         est_drop: u64,
         /// The truncation-coded sketch of the intersection estimate.
         sketch: SketchMsg,
+        /// Columnar codec negotiated with the receiving spoke (same embedded-sketch
+        /// column reuse as [`Msg::Sketch`], under `TYPE_MULTI_RESIDUE_C`).
+        codec: bool,
     },
 }
 
@@ -168,6 +215,13 @@ const TYPE_CONFIRM: u8 = 5;
 const TYPE_BUSY: u8 = 6;
 const TYPE_AGG_SKETCH: u8 = 7;
 const TYPE_MULTI_RESIDUE: u8 = 8;
+// Codec-on forms of the payload frames. A dedicated type byte (rather than a body flag)
+// keeps `from_bytes` context-free and the codec-off byte streams untouched: a PR-7
+// binary that sees type 9–12 rejects the frame outright instead of misparsing it.
+const TYPE_SKETCH_C: u8 = 9;
+const TYPE_ROUND_C: u8 = 10;
+const TYPE_AGG_SKETCH_C: u8 = 11;
+const TYPE_MULTI_RESIDUE_C: u8 = 12;
 
 /// Encoded length of a LEB128 varint.
 fn varint_len(v: u64) -> usize {
@@ -220,10 +274,79 @@ fn sketch_msg_len(sk: &SketchMsg) -> usize {
         + sk.syndromes.len()
 }
 
+/// Total frame size around a body of `body` bytes.
+fn frame_len(body: usize) -> usize {
+    1 + varint_len(body as u64) + body
+}
+
+/// The rANS table of a sketch widened to the column item type. The table is a dense
+/// per-symbol byte vector that collapses hard under run-length framing whenever the
+/// truncation alphabet is narrow.
+fn table_words(sk: &SketchMsg) -> Vec<u64> {
+    sk.table.iter().map(|&b| b as u64).collect()
+}
+
+/// Zigzagged aggregate counts as column items.
+fn counts_words(c: &[i32]) -> Vec<u64> {
+    c.iter().map(|&v| zigzag(v)).collect()
+}
+
+/// Codec-on serialized size of an embedded [`SketchMsg`] (mirrors
+/// [`put_sketch_msg_codec`]).
+fn sketch_msg_codec_len(sk: &SketchMsg) -> usize {
+    varint_len(sk.n as u64)
+        + RleU64Col::encoded_len(&table_words(sk))
+        + varint_len(sk.payload.len() as u64)
+        + sk.payload.len()
+        + varint_len(sk.syndromes.len() as u64)
+        + sk.syndromes.len()
+}
+
+/// Codec-on form of an embedded sketch: same field order as `SketchMsg::to_bytes`, but
+/// the table rides a run-length column (the rANS payload and BCH syndromes are already
+/// entropy-coded — recoding them buys nothing, so their bytes pass through unchanged,
+/// exactly like the rANS residue blob in `Round`).
+fn put_sketch_msg_codec(body: &mut Vec<u8>, sk: &SketchMsg) {
+    put_varint(body, sk.n as u64);
+    RleU64Col::encode(&table_words(sk), body);
+    put_varint(body, sk.payload.len() as u64);
+    body.extend_from_slice(&sk.payload);
+    put_varint(body, sk.syndromes.len() as u64);
+    body.extend_from_slice(&sk.syndromes);
+}
+
+/// Parse a codec-on embedded sketch (no trailing-byte check — the caller owns the
+/// enclosing extent). Mirrors the validation of `SketchMsg::from_bytes`: coordinate
+/// count capped, every length checked before the bytes are taken, and table entries
+/// must fit the `u8` symbol alphabet.
+fn take_sketch_msg_codec(body: &[u8], off: &mut usize) -> Option<SketchMsg> {
+    let n = usize::try_from(take_varint(body, off)?).ok()?;
+    if n > MAX_TABLE_COORDS {
+        return None;
+    }
+    let words = RleU64Col::decode(body, off, MAX_TABLE_COORDS)?;
+    let mut table = Vec::with_capacity(words.len());
+    for w in words {
+        table.push(u8::try_from(w).ok()?);
+    }
+    let pl = usize::try_from(take_varint(body, off)?).ok()?;
+    let payload = take(body, off, pl)?.to_vec();
+    let sl = usize::try_from(take_varint(body, off)?).ok()?;
+    let syndromes = take(body, off, sl)?.to_vec();
+    Some(SketchMsg { n, table, payload, syndromes })
+}
+
+/// Legacy wire cost of aggregate counts (varint count + zigzag varints).
+fn agg_counts_legacy_len(c: &[i32]) -> usize {
+    varint_len(c.len() as u64) + c.iter().map(|&v| varint_len(zigzag(v))).sum::<usize>()
+}
+
 impl Msg {
     /// Exact wire size of this frame — equals `self.to_bytes().len()` without building
-    /// the buffer. The session engine charges every frame through this, so accounting
-    /// costs no allocation or serialization on the hot path.
+    /// the buffer. The session engine charges every frame through this; on the per-round
+    /// hot path the computation allocates nothing (column `encoded_len`s iterate in
+    /// place — only the once-per-attempt sketch/aggregate frames widen their tables to
+    /// column items first).
     pub fn wire_len(&self) -> usize {
         let body = match self {
             Msg::EstHello { set_len, explicit_d, strata, minhash, namespace, party, .. } => {
@@ -259,8 +382,16 @@ impl Msg {
                     + varint_len(*set_len)
                     + opt_namespace_len(*namespace)
             }
-            Msg::Sketch(sk) => sketch_msg_len(sk),
-            Msg::AggSketch { parties, l, m, digest: _, seed: _, directive: _, counts } => {
+            Msg::Sketch { sketch, codec } => {
+                if *codec {
+                    sketch_msg_codec_len(sketch)
+                } else {
+                    sketch_msg_len(sketch)
+                }
+            }
+            Msg::AggSketch {
+                parties, l, m, digest: _, seed: _, directive: _, counts, codec,
+            } => {
                 varint_len(*parties as u64)
                     + varint_len(*l as u64)
                     + varint_len(*m as u64)
@@ -269,8 +400,11 @@ impl Msg {
                     + 1
                     + 1
                     + counts.as_ref().map_or(0, |c| {
-                        varint_len(c.len() as u64)
-                            + c.iter().map(|&v| varint_len(zigzag(v))).sum::<usize>()
+                        if *codec {
+                            RleU64Col::encoded_len(&counts_words(c))
+                        } else {
+                            agg_counts_legacy_len(c)
+                        }
                     })
             }
             Msg::MultiResidue {
@@ -282,6 +416,7 @@ impl Msg {
                 universe_bits,
                 est_drop,
                 sketch,
+                codec,
             } => {
                 varint_len(*party as u64)
                     + varint_len(*attempt as u64)
@@ -291,23 +426,115 @@ impl Msg {
                     + varint_len(*universe_bits as u64)
                     + varint_len(*est_drop)
                     + {
-                        let sk = sketch_msg_len(sketch);
+                        let sk = if *codec {
+                            sketch_msg_codec_len(sketch)
+                        } else {
+                            sketch_msg_len(sketch)
+                        };
                         varint_len(sk as u64) + sk
                     }
             }
-            Msg::Round { residue, smf, inquiry, answers, .. } => {
+            Msg::Round { residue, smf, inquiry, answers, codec, .. } => {
                 varint_len(residue.len() as u64)
                     + residue.len()
                     + 1
                     + smf.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
-                    + varint_len(inquiry.len() as u64)
-                    + 8 * inquiry.len()
-                    + varint_len(answers.len() as u64)
-                    + answers.len().div_ceil(8)
+                    + if *codec {
+                        DeltaU64Col::encoded_len(inquiry) + BoolRleCol::encoded_len(answers)
+                    } else {
+                        Fixed64Col::encoded_len(inquiry)
+                            + varint_len(answers.len() as u64)
+                            + answers.len().div_ceil(8)
+                    }
                     + 1
             }
         };
-        1 + varint_len(body as u64) + body
+        frame_len(body)
+    }
+
+    /// Codec-off-equivalent wire size of this frame: what the same message would have
+    /// cost on the PR 7 wire format. Equals [`Msg::wire_len`] for every codec-off frame;
+    /// for codec-on frames it recomputes the legacy field framing (including the flat
+    /// size of a boolean-RLE SMF blob and the per-cell legacy cost of a columnar strata
+    /// blob). [`crate::metrics::CommLog`] charges both numbers per frame, which is where
+    /// the end-to-end compression ratio comes from.
+    pub fn raw_wire_len(&self) -> usize {
+        match self {
+            Msg::Sketch { sketch, codec: true } => frame_len(sketch_msg_len(sketch)),
+            Msg::Round { residue, smf, inquiry, answers, codec: true, .. } => {
+                let smf_cost = smf.as_ref().map_or(0, |b| {
+                    let flat = crate::smf::codec_bytes_flat_len(b).unwrap_or(b.len());
+                    varint_len(flat as u64) + flat
+                });
+                frame_len(
+                    varint_len(residue.len() as u64)
+                        + residue.len()
+                        + 1
+                        + smf_cost
+                        + Fixed64Col::encoded_len(inquiry)
+                        + varint_len(answers.len() as u64)
+                        + answers.len().div_ceil(8)
+                        + 1,
+                )
+            }
+            Msg::AggSketch { parties, l, m, counts, codec: true, .. } => frame_len(
+                varint_len(*parties as u64)
+                    + varint_len(*l as u64)
+                    + varint_len(*m as u64)
+                    + 8
+                    + 8
+                    + 1
+                    + 1
+                    + counts.as_ref().map_or(0, |c| agg_counts_legacy_len(c)),
+            ),
+            Msg::MultiResidue {
+                party, attempt, l, m, universe_bits, est_drop, sketch, codec: true, ..
+            } => {
+                let sk = sketch_msg_len(sketch);
+                frame_len(
+                    varint_len(*party as u64)
+                        + varint_len(*attempt as u64)
+                        + varint_len(*l as u64)
+                        + varint_len(*m as u64)
+                        + 8
+                        + varint_len(*universe_bits as u64)
+                        + varint_len(*est_drop)
+                        + varint_len(sk as u64)
+                        + sk,
+                )
+            }
+            Msg::EstHello {
+                set_len,
+                explicit_d,
+                strata,
+                minhash,
+                namespace,
+                party,
+                codec: true,
+                ..
+            } => {
+                // The codec bit itself is free (a flag bit) and the MinHash blob is
+                // byte-identical in both modes; only the strata blob re-expands.
+                let strata_cost = strata.as_ref().map_or(0, |b| {
+                    let flat =
+                        crate::protocol::estimate::strata_columnar_legacy_len(b)
+                            .unwrap_or(b.len());
+                    varint_len(flat as u64) + flat
+                });
+                frame_len(
+                    8 + varint_len(*set_len)
+                        + 1
+                        + explicit_d.map_or(0, |d| varint_len(d))
+                        + strata_cost
+                        + minhash.as_ref().map_or(0, |b| varint_len(b.len() as u64) + b.len())
+                        + opt_namespace_len(*namespace)
+                        + party.map_or(0, |(id, count)| {
+                            varint_len(id as u64) + varint_len(count as u64)
+                        }),
+                )
+            }
+            _ => self.wire_len(),
+        }
     }
 
     pub fn to_bytes(&self) -> Vec<u8> {
@@ -321,6 +548,7 @@ impl Msg {
                 minhash,
                 namespace,
                 party,
+                codec,
             } => {
                 body.extend_from_slice(&config_fingerprint.to_le_bytes());
                 put_varint(&mut body, *set_len);
@@ -328,7 +556,8 @@ impl Msg {
                     | (strata.is_some() as u8) << 1
                     | (minhash.is_some() as u8) << 2
                     | ((*namespace != 0) as u8) << 3
-                    | (party.is_some() as u8) << 4;
+                    | (party.is_some() as u8) << 4
+                    | (*codec as u8) << 5;
                 body.push(flags);
                 if let Some(d) = explicit_d {
                     put_varint(&mut body, *d);
@@ -385,11 +614,16 @@ impl Msg {
                 }
                 TYPE_HELLO
             }
-            Msg::Sketch(sk) => {
-                body = sk.to_bytes();
-                TYPE_SKETCH
+            Msg::Sketch { sketch, codec } => {
+                if *codec {
+                    put_sketch_msg_codec(&mut body, sketch);
+                    TYPE_SKETCH_C
+                } else {
+                    body = sketch.to_bytes();
+                    TYPE_SKETCH
+                }
             }
-            Msg::AggSketch { parties, l, m, seed, digest, directive, counts } => {
+            Msg::AggSketch { parties, l, m, seed, digest, directive, counts, codec } => {
                 put_varint(&mut body, *parties as u64);
                 put_varint(&mut body, *l as u64);
                 put_varint(&mut body, *m as u64);
@@ -399,16 +633,34 @@ impl Msg {
                 match counts {
                     Some(c) => {
                         body.push(1);
-                        put_varint(&mut body, c.len() as u64);
-                        for &v in c {
-                            put_varint(&mut body, zigzag(v));
+                        if *codec {
+                            RleU64Col::encode(&counts_words(c), &mut body);
+                        } else {
+                            put_varint(&mut body, c.len() as u64);
+                            for &v in c {
+                                put_varint(&mut body, zigzag(v));
+                            }
                         }
                     }
                     None => body.push(0),
                 }
-                TYPE_AGG_SKETCH
+                if *codec {
+                    TYPE_AGG_SKETCH_C
+                } else {
+                    TYPE_AGG_SKETCH
+                }
             }
-            Msg::MultiResidue { party, attempt, l, m, seed, universe_bits, est_drop, sketch } => {
+            Msg::MultiResidue {
+                party,
+                attempt,
+                l,
+                m,
+                seed,
+                universe_bits,
+                est_drop,
+                sketch,
+                codec,
+            } => {
                 put_varint(&mut body, *party as u64);
                 put_varint(&mut body, *attempt as u64);
                 put_varint(&mut body, *l as u64);
@@ -416,12 +668,18 @@ impl Msg {
                 body.extend_from_slice(&seed.to_le_bytes());
                 put_varint(&mut body, *universe_bits as u64);
                 put_varint(&mut body, *est_drop);
-                let sk = sketch.to_bytes();
-                put_varint(&mut body, sk.len() as u64);
-                body.extend_from_slice(&sk);
-                TYPE_MULTI_RESIDUE
+                if *codec {
+                    put_varint(&mut body, sketch_msg_codec_len(sketch) as u64);
+                    put_sketch_msg_codec(&mut body, sketch);
+                    TYPE_MULTI_RESIDUE_C
+                } else {
+                    let sk = sketch.to_bytes();
+                    put_varint(&mut body, sk.len() as u64);
+                    body.extend_from_slice(&sk);
+                    TYPE_MULTI_RESIDUE
+                }
             }
-            Msg::Round { residue, smf, inquiry, answers, done } => {
+            Msg::Round { residue, smf, inquiry, answers, done, codec } => {
                 put_varint(&mut body, residue.len() as u64);
                 body.extend_from_slice(residue);
                 match smf {
@@ -432,21 +690,27 @@ impl Msg {
                     }
                     None => body.push(0),
                 }
-                put_varint(&mut body, inquiry.len() as u64);
-                for sig in inquiry {
-                    body.extend_from_slice(&sig.to_le_bytes());
-                }
-                put_varint(&mut body, answers.len() as u64);
-                // Bit-packed answers.
-                let mut packed = vec![0u8; answers.len().div_ceil(8)];
-                for (i, &a) in answers.iter().enumerate() {
-                    if a {
-                        packed[i / 8] |= 1 << (i % 8);
+                if *codec {
+                    DeltaU64Col::encode(inquiry, &mut body);
+                    BoolRleCol::encode(answers, &mut body);
+                } else {
+                    Fixed64Col::encode(inquiry, &mut body);
+                    put_varint(&mut body, answers.len() as u64);
+                    // Bit-packed answers.
+                    let mut packed = vec![0u8; answers.len().div_ceil(8)];
+                    for (i, &a) in answers.iter().enumerate() {
+                        if a {
+                            packed[i / 8] |= 1 << (i % 8);
+                        }
                     }
+                    body.extend_from_slice(&packed);
                 }
-                body.extend_from_slice(&packed);
                 body.push(*done as u8);
-                TYPE_ROUND
+                if *codec {
+                    TYPE_ROUND_C
+                } else {
+                    TYPE_ROUND
+                }
             }
         };
         let mut out = Vec::with_capacity(body.len() + 6);
@@ -460,8 +724,8 @@ impl Msg {
     ///
     /// Adversarial-frame hardened: all offset arithmetic is checked (no debug-build
     /// overflow panics), every length field is validated against the bytes actually
-    /// present *before* any allocation sized by it, and trailing garbage inside a
-    /// `Hello`/`Round` body is rejected.
+    /// present *before* any allocation sized by it (columnar fields additionally cap
+    /// their decoded element counts), and trailing garbage inside a body is rejected.
     pub fn from_bytes(data: &[u8]) -> Option<(Msg, usize)> {
         let ty = *data.first()?;
         let (body_len, used) = get_varint(data.get(1..)?)?;
@@ -478,7 +742,7 @@ impl Msg {
                 let fp = u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?);
                 let set_len = take_varint(body, &mut off)?;
                 let flags = take(body, &mut off, 1)?[0];
-                if flags & !0b1_1111 != 0 {
+                if flags & !0b11_1111 != 0 {
                     return None;
                 }
                 let explicit_d = if flags & 1 != 0 {
@@ -523,6 +787,7 @@ impl Msg {
                     minhash,
                     namespace,
                     party,
+                    codec: flags & 0b10_0000 != 0,
                 }
             }
             TYPE_CONFIRM => {
@@ -574,8 +839,16 @@ impl Msg {
                     namespace,
                 }
             }
-            TYPE_SKETCH => Msg::Sketch(SketchMsg::from_bytes(body)?),
-            TYPE_AGG_SKETCH => {
+            TYPE_SKETCH => Msg::Sketch { sketch: SketchMsg::from_bytes(body)?, codec: false },
+            TYPE_SKETCH_C => {
+                let sketch = take_sketch_msg_codec(body, &mut off)?;
+                if off != body.len() {
+                    return None;
+                }
+                Msg::Sketch { sketch, codec: true }
+            }
+            TYPE_AGG_SKETCH | TYPE_AGG_SKETCH_C => {
+                let codec = ty == TYPE_AGG_SKETCH_C;
                 let parties = u32::try_from(take_varint(body, &mut off)?).ok()?;
                 let l = u32::try_from(take_varint(body, &mut off)?).ok()?;
                 let m = u32::try_from(take_varint(body, &mut off)?).ok()?;
@@ -587,11 +860,26 @@ impl Msg {
                 }
                 let counts = match take(body, &mut off, 1)?[0] {
                     0 => None,
+                    1 if codec => {
+                        // The aggregate must cover exactly the announced geometry — the
+                        // column's cap is `l` and a shorter decode is a malformed frame,
+                        // the same posture as the legacy arm below.
+                        let words = RleU64Col::decode(body, &mut off, l as usize)?;
+                        if words.len() != l as usize {
+                            return None;
+                        }
+                        let mut c = Vec::with_capacity(words.len());
+                        for w in words {
+                            c.push(unzigzag(w)?);
+                        }
+                        Some(c)
+                    }
                     1 => {
                         let n = usize::try_from(take_varint(body, &mut off)?).ok()?;
                         // The aggregate must cover exactly the announced geometry — a
-                        // count/`l` mismatch is a malformed frame. Each zigzag varint is
-                        // ≥ 1 byte, so this also kills inflated counts before allocation.
+                        // count/`l` mismatch is a malformed frame, not a short read.
+                        // Each zigzag varint is ≥ 1 byte, so this also kills inflated
+                        // counts before allocation.
                         if n != l as usize || n > body.len().saturating_sub(off) {
                             return None;
                         }
@@ -606,9 +894,10 @@ impl Msg {
                 if off != body.len() {
                     return None;
                 }
-                Msg::AggSketch { parties, l, m, seed, digest, directive, counts }
+                Msg::AggSketch { parties, l, m, seed, digest, directive, counts, codec }
             }
-            TYPE_MULTI_RESIDUE => {
+            TYPE_MULTI_RESIDUE | TYPE_MULTI_RESIDUE_C => {
+                let codec = ty == TYPE_MULTI_RESIDUE_C;
                 let party = u32::try_from(take_varint(body, &mut off)?).ok()?;
                 let attempt = u32::try_from(take_varint(body, &mut off)?).ok()?;
                 let l = u32::try_from(take_varint(body, &mut off)?).ok()?;
@@ -617,13 +906,34 @@ impl Msg {
                 let universe_bits = u32::try_from(take_varint(body, &mut off)?).ok()?;
                 let est_drop = take_varint(body, &mut off)?;
                 let sk_len = usize::try_from(take_varint(body, &mut off)?).ok()?;
-                let sketch = SketchMsg::from_bytes(take(body, &mut off, sk_len)?)?;
+                let sk_bytes = take(body, &mut off, sk_len)?;
+                let sketch = if codec {
+                    let mut soff = 0usize;
+                    let sk = take_sketch_msg_codec(sk_bytes, &mut soff)?;
+                    if soff != sk_bytes.len() {
+                        return None;
+                    }
+                    sk
+                } else {
+                    SketchMsg::from_bytes(sk_bytes)?
+                };
                 if off != body.len() {
                     return None;
                 }
-                Msg::MultiResidue { party, attempt, l, m, seed, universe_bits, est_drop, sketch }
+                Msg::MultiResidue {
+                    party,
+                    attempt,
+                    l,
+                    m,
+                    seed,
+                    universe_bits,
+                    est_drop,
+                    sketch,
+                    codec,
+                }
             }
-            TYPE_ROUND => {
+            TYPE_ROUND | TYPE_ROUND_C => {
+                let codec = ty == TYPE_ROUND_C;
                 let rl = usize::try_from(take_varint(body, &mut off)?).ok()?;
                 let residue = take(body, &mut off, rl)?.to_vec();
                 let smf = match take(body, &mut off, 1)?[0] {
@@ -634,23 +944,24 @@ impl Msg {
                     }
                     _ => return None,
                 };
-                let nq = usize::try_from(take_varint(body, &mut off)?).ok()?;
-                // Each inquiry signature occupies 8 of the remaining body bytes; an
-                // inflated count must die before `Vec::with_capacity`.
-                if nq > body.len().saturating_sub(off) / 8 {
-                    return None;
-                }
-                let mut inquiry = Vec::with_capacity(nq);
-                for _ in 0..nq {
-                    inquiry.push(u64::from_le_bytes(take(body, &mut off, 8)?.try_into().ok()?));
-                }
-                let na = usize::try_from(take_varint(body, &mut off)?).ok()?;
-                let packed_len = na.div_ceil(8);
-                if packed_len > body.len().saturating_sub(off) {
-                    return None;
-                }
-                let packed = take(body, &mut off, packed_len)?;
-                let answers = (0..na).map(|i| packed[i / 8] >> (i % 8) & 1 == 1).collect();
+                let (inquiry, answers) = if codec {
+                    let inquiry = DeltaU64Col::decode(body, &mut off, MAX_ROUND_ITEMS)?;
+                    let answers = BoolRleCol::decode(body, &mut off, MAX_ROUND_ITEMS)?;
+                    (inquiry, answers)
+                } else {
+                    // The legacy column is naturally byte-bounded (8 body bytes per
+                    // signature); `Fixed64Col::decode` performs the same
+                    // inflated-count-dies-before-allocation check this arm always had.
+                    let inquiry = Fixed64Col::decode(body, &mut off, usize::MAX)?;
+                    let na = usize::try_from(take_varint(body, &mut off)?).ok()?;
+                    let packed_len = na.div_ceil(8);
+                    if packed_len > body.len().saturating_sub(off) {
+                        return None;
+                    }
+                    let packed = take(body, &mut off, packed_len)?;
+                    let answers = (0..na).map(|i| packed[i / 8] >> (i % 8) & 1 == 1).collect();
+                    (inquiry, answers)
+                };
                 let done = match take(body, &mut off, 1)?[0] {
                     0 => false,
                     1 => true,
@@ -659,7 +970,7 @@ impl Msg {
                 if off != body.len() {
                     return None;
                 }
-                Msg::Round { residue, smf, inquiry, answers, done }
+                Msg::Round { residue, smf, inquiry, answers, done, codec }
             }
             _ => return None,
         };
@@ -704,6 +1015,7 @@ mod tests {
                 minhash: Some(vec![9; 64]),
                 namespace: 0,
                 party: None,
+                codec: false,
             },
             Msg::EstHello {
                 config_fingerprint: u64::MAX,
@@ -713,6 +1025,7 @@ mod tests {
                 minhash: None,
                 namespace: 3,
                 party: None,
+                codec: false,
             },
             Msg::EstHello {
                 config_fingerprint: 0,
@@ -722,6 +1035,7 @@ mod tests {
                 minhash: None,
                 namespace: u32::MAX,
                 party: None,
+                codec: true,
             },
             Msg::EstHello {
                 config_fingerprint: 7,
@@ -731,6 +1045,7 @@ mod tests {
                 minhash: Some(vec![2; 8]),
                 namespace: 200,
                 party: None,
+                codec: true,
             },
         ];
         for msg in &variants {
@@ -804,15 +1119,16 @@ mod tests {
             minhash: Some(vec![6; 24]),
             namespace: 0,
             party: None,
+            codec: false,
         };
         let bytes = msg.to_bytes();
         for cut in 0..bytes.len() {
             assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut} parsed");
         }
-        // Reserved flag bits (above the party bit) must be zero.
+        // Reserved flag bits (above the codec bit) must be zero.
         let mut body = bytes[2..].to_vec(); // type byte + 1-byte varint length here
         let flags_off = 8 + varint_len(9_999);
-        body[flags_off] |= 0b10_0000;
+        body[flags_off] |= 0b100_0000;
         let mut frame = vec![TYPE_EST_HELLO];
         put_varint(&mut frame, body.len() as u64);
         frame.extend_from_slice(&body);
@@ -835,31 +1151,37 @@ mod tests {
 
     #[test]
     fn round_roundtrip_full_fields() {
-        let msg = Msg::Round {
-            residue: compress_residue(&[0, 1, -1, 0, 2]),
-            smf: Some(vec![1, 2, 3, 4, 5]),
-            inquiry: vec![0xAAAA, 0xBBBB],
-            answers: vec![true, false, true, true, false, false, false, true, true],
-            done: false,
-        };
-        let bytes = msg.to_bytes();
-        let (back, used) = Msg::from_bytes(&bytes).unwrap();
-        assert_eq!(back, msg);
-        assert_eq!(used, bytes.len());
+        for codec in [false, true] {
+            let msg = Msg::Round {
+                residue: compress_residue(&[0, 1, -1, 0, 2]),
+                smf: Some(vec![1, 2, 3, 4, 5]),
+                inquiry: vec![0xAAAA, 0xBBBB],
+                answers: vec![true, false, true, true, false, false, false, true, true],
+                done: false,
+                codec,
+            };
+            let bytes = msg.to_bytes();
+            let (back, used) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(back, msg);
+            assert_eq!(used, bytes.len());
+        }
     }
 
     #[test]
     fn round_roundtrip_minimal() {
-        let msg = Msg::Round {
-            residue: vec![],
-            smf: None,
-            inquiry: vec![],
-            answers: vec![],
-            done: true,
-        };
-        let bytes = msg.to_bytes();
-        let (back, _) = Msg::from_bytes(&bytes).unwrap();
-        assert_eq!(back, msg);
+        for codec in [false, true] {
+            let msg = Msg::Round {
+                residue: vec![],
+                smf: None,
+                inquiry: vec![],
+                answers: vec![],
+                done: true,
+                codec,
+            };
+            let bytes = msg.to_bytes();
+            let (back, _) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(back, msg);
+        }
     }
 
     #[test]
@@ -870,6 +1192,7 @@ mod tests {
             inquiry: vec![1],
             answers: vec![true],
             done: false,
+            codec: false,
         };
         let bytes = msg.to_bytes();
         for cut in [0usize, 1, 5, bytes.len() - 1] {
@@ -887,18 +1210,21 @@ mod tests {
 
     #[test]
     fn truncation_at_every_byte_boundary_rejected() {
-        let msg = Msg::Round {
-            residue: compress_residue(&[5, -5, 7, 0, 0, 1]),
-            smf: Some(vec![3; 21]),
-            inquiry: vec![1, 2, 3],
-            answers: vec![true, false, true],
-            done: true,
-        };
-        let bytes = msg.to_bytes();
-        for cut in 0..bytes.len() {
-            assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "cut {cut} parsed");
+        for codec in [false, true] {
+            let msg = Msg::Round {
+                residue: compress_residue(&[5, -5, 7, 0, 0, 1]),
+                smf: Some(vec![3; 21]),
+                inquiry: vec![1, 2, 3],
+                answers: vec![true, false, true],
+                done: true,
+                codec,
+            };
+            let bytes = msg.to_bytes();
+            for cut in 0..bytes.len() {
+                assert!(Msg::from_bytes(&bytes[..cut]).is_none(), "codec {codec} cut {cut}");
+            }
+            assert!(Msg::from_bytes(&bytes).is_some());
         }
-        assert!(Msg::from_bytes(&bytes).is_some());
     }
 
     #[test]
@@ -955,7 +1281,14 @@ mod tests {
 
     #[test]
     fn trailing_garbage_in_body_rejected() {
-        let msg = Msg::Round { residue: vec![9], smf: None, inquiry: vec![], answers: vec![], done: false };
+        let msg = Msg::Round {
+            residue: vec![9],
+            smf: None,
+            inquiry: vec![],
+            answers: vec![],
+            done: false,
+            codec: false,
+        };
         let good = msg.to_bytes();
         // Splice two junk bytes into the body and fix up the length header.
         let mut body = good[2..].to_vec(); // (1-byte type + 1-byte varint len at this size)
@@ -1049,6 +1382,7 @@ mod tests {
             minhash: None,
             namespace: 0,
             party: None,
+            codec: false,
         };
         let (back, _) = Msg::from_bytes(&frame).unwrap();
         assert_eq!(back, expected);
@@ -1078,6 +1412,7 @@ mod tests {
             minhash: None,
             namespace: 300,
             party: None,
+            codec: false,
         };
         let hello = Msg::Hello {
             l: 64,
@@ -1119,40 +1454,6 @@ mod tests {
         assert!(Msg::from_bytes(&frame).is_none());
     }
 
-    #[test]
-    fn wire_len_matches_serialized_length() {
-        let msgs = [
-            Msg::Hello {
-                l: 0,
-                m: 127,
-                seed: u64::MAX,
-                universe_bits: 256,
-                est_initiator_unique: 128,
-                est_responder_unique: 1 << 40,
-                set_len: u64::MAX,
-                namespace: 1 << 21,
-            },
-            Msg::Busy { retry_after_ms: 99, namespace: 1 },
-            Msg::Sketch(crate::entropy::SketchMsg {
-                n: 300,
-                table: vec![1; 40],
-                payload: vec![2; 129],
-                syndromes: vec![3; 7],
-            }),
-            Msg::Round {
-                residue: compress_residue(&[1, -2, 0, 3]),
-                smf: Some(vec![9; 200]),
-                inquiry: vec![1, 2, 3],
-                answers: vec![true; 17],
-                done: true,
-            },
-            Msg::Round { residue: vec![], smf: None, inquiry: vec![], answers: vec![], done: false },
-        ];
-        for msg in &msgs {
-            assert_eq!(msg.wire_len(), msg.to_bytes().len(), "{msg:?}");
-        }
-    }
-
     /// Craft a frame of arbitrary type around a hand-built body.
     fn frame_with_body(ty: u8, body: &[u8]) -> Vec<u8> {
         let mut out = vec![ty];
@@ -1177,6 +1478,7 @@ mod tests {
                 minhash: Some(vec![5; 9]),
                 namespace,
                 party,
+                codec: false,
             };
             let bytes = msg.to_bytes();
             let (back, used) = Msg::from_bytes(&bytes).unwrap();
@@ -1200,6 +1502,7 @@ mod tests {
             minhash: None,
             namespace: 0,
             party: Some((1, 2)),
+            codec: false,
         };
         let good = base.to_bytes();
         let body = &good[2..]; // 1-byte type + 1-byte length at this size
@@ -1246,6 +1549,7 @@ mod tests {
             minhash: None,
             namespace: 6,
             party: None,
+            codec: false,
         };
         let (back, used) = Msg::from_bytes(&frame).unwrap();
         assert_eq!(back, expected);
@@ -1264,6 +1568,7 @@ mod tests {
                 digest: 0xabcdef,
                 directive: DIRECTIVE_SESSION,
                 counts: Some(vec![0, 1, -1, i32::MAX, i32::MIN, 5, -3]),
+                codec: false,
             },
             Msg::AggSketch {
                 parties: 8,
@@ -1273,6 +1578,17 @@ mod tests {
                 digest: 0,
                 directive: DIRECTIVE_IN_SYNC,
                 counts: None,
+                codec: false,
+            },
+            Msg::AggSketch {
+                parties: 3,
+                l: 9,
+                m: 5,
+                seed: 0xfeed,
+                digest: 0xabcdef,
+                directive: DIRECTIVE_SESSION,
+                counts: Some(vec![0, 0, 0, 0, 1, -1, 0, 0, 2]),
+                codec: true,
             },
         ];
         for msg in &variants {
@@ -1327,6 +1643,7 @@ mod tests {
             digest: 2,
             directive: DIRECTIVE_IN_SYNC,
             counts: Some(vec![1, -1, 0, 2]),
+            codec: false,
         };
         let bytes = good.to_bytes();
         let body = &bytes[2..];
@@ -1365,6 +1682,7 @@ mod tests {
                 payload: vec![2; 129],
                 syndromes: vec![3; 7],
             },
+            codec: false,
         };
         let bytes = msg.to_bytes();
         let (back, used) = Msg::from_bytes(&bytes).unwrap();
@@ -1399,8 +1717,22 @@ mod tests {
 
     #[test]
     fn frames_concatenate() {
-        let m1 = Msg::Round { residue: vec![1], smf: None, inquiry: vec![], answers: vec![], done: false };
-        let m2 = Msg::Round { residue: vec![2, 3], smf: None, inquiry: vec![], answers: vec![], done: true };
+        let m1 = Msg::Round {
+            residue: vec![1],
+            smf: None,
+            inquiry: vec![],
+            answers: vec![],
+            done: false,
+            codec: false,
+        };
+        let m2 = Msg::Round {
+            residue: vec![2, 3],
+            smf: None,
+            inquiry: vec![],
+            answers: vec![],
+            done: true,
+            codec: true,
+        };
         let mut stream = m1.to_bytes();
         stream.extend(m2.to_bytes());
         let (b1, used1) = Msg::from_bytes(&stream).unwrap();
@@ -1408,5 +1740,410 @@ mod tests {
         assert_eq!(b1, m1);
         assert_eq!(b2, m2);
         assert_eq!(used1 + used2, stream.len());
+    }
+
+    fn sample_sketch() -> SketchMsg {
+        SketchMsg {
+            n: 300,
+            table: vec![0, 0, 0, 4, 4, 4, 4, 9, 0, 0, 0, 0, 0, 0, 0, 0, 2, 1],
+            payload: vec![2; 129],
+            syndromes: vec![3; 7],
+        }
+    }
+
+    /// Satellite: `wire_len() == to_bytes().len()` for **every** variant across all the
+    /// versioned trailing fields (namespace / party / codec, present and absent) — the
+    /// two are maintained by hand and this is what keeps them from drifting.
+    #[test]
+    fn wire_len_matches_to_bytes_for_every_variant_and_versioned_field() {
+        let mut msgs: Vec<Msg> = Vec::new();
+        let estimator_combos: [(Option<u64>, Option<Vec<u8>>, Option<Vec<u8>>); 3] = [
+            (Some(123), None, None),
+            (None, Some(vec![7; 33]), Some(vec![9; 64])),
+            (None, None, None),
+        ];
+        for codec in [false, true] {
+            for namespace in [0u32, 511] {
+                for party in [None, Some((1u32, 4u32))] {
+                    for (explicit_d, strata, minhash) in estimator_combos.clone() {
+                        msgs.push(Msg::EstHello {
+                            config_fingerprint: 0xfeed_f00d,
+                            set_len: 1 << 33,
+                            explicit_d,
+                            strata,
+                            minhash,
+                            namespace,
+                            party,
+                            codec,
+                        });
+                    }
+                }
+                msgs.push(Msg::Hello {
+                    l: 1 << 18,
+                    m: 127,
+                    seed: u64::MAX,
+                    universe_bits: 256,
+                    est_initiator_unique: 128,
+                    est_responder_unique: 1 << 40,
+                    set_len: u64::MAX,
+                    namespace,
+                });
+                msgs.push(Msg::Busy { retry_after_ms: 99, namespace });
+            }
+            msgs.push(Msg::Sketch { sketch: sample_sketch(), codec });
+            for smf in [None, Some(vec![9; 200])] {
+                msgs.push(Msg::Round {
+                    residue: compress_residue(&[1, -2, 0, 3]),
+                    smf,
+                    inquiry: vec![3, 1 << 60, 0, 7, 7],
+                    answers: vec![true; 17],
+                    done: true,
+                    codec,
+                });
+            }
+            msgs.push(Msg::Round {
+                residue: vec![],
+                smf: None,
+                inquiry: vec![],
+                answers: vec![],
+                done: false,
+                codec,
+            });
+            for counts in [None, Some(vec![0, 0, 1, -1, 0, 0, 0, 2])] {
+                let l = counts.as_ref().map_or(4, |c: &Vec<i32>| c.len() as u32);
+                msgs.push(Msg::AggSketch {
+                    parties: 5,
+                    l,
+                    m: 8,
+                    seed: 0xfeed,
+                    digest: 42,
+                    directive: DIRECTIVE_SESSION,
+                    counts,
+                    codec,
+                });
+            }
+            msgs.push(Msg::MultiResidue {
+                party: 3,
+                attempt: 1,
+                l: 300,
+                m: 7,
+                seed: 1,
+                universe_bits: 64,
+                est_drop: 9,
+                sketch: sample_sketch(),
+                codec,
+            });
+        }
+        msgs.push(Msg::Confirm { ok: false, reason: REASON_NOT_CONVERGED, attempt: 7 });
+        for msg in &msgs {
+            let bytes = msg.to_bytes();
+            assert_eq!(msg.wire_len(), bytes.len(), "wire_len drift: {msg:?}");
+            let (back, used) = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(&back, msg);
+            assert_eq!(used, bytes.len());
+        }
+    }
+
+    /// Acceptance: codec-off frames are byte-identical to PR-7 transcripts. The payload
+    /// frame bodies are hand-built exactly as the PR-7 serializer wrote them; they must
+    /// parse to `codec: false` messages that re-serialize to the same bytes.
+    #[test]
+    fn pr7_era_codec_off_frames_byte_identical() {
+        // Sketch: the body was SketchMsg::to_bytes verbatim.
+        let sk = sample_sketch();
+        let frame = frame_with_body(TYPE_SKETCH, &sk.to_bytes());
+        let expected = Msg::Sketch { sketch: sk.clone(), codec: false };
+        let (back, used) = Msg::from_bytes(&frame).unwrap();
+        assert_eq!(back, expected);
+        assert_eq!(used, frame.len());
+        assert_eq!(expected.to_bytes(), frame, "codec-off Sketch must stay byte-identical");
+
+        // Round: raw 8-byte inquiry words, bit-packed answers.
+        let residue = compress_residue(&[1, 0, -2]);
+        let inquiry = [0xAAAA_BBBB_CCCC_DDDDu64, 42];
+        let answers = [true, false, true];
+        let mut body = Vec::new();
+        put_varint(&mut body, residue.len() as u64);
+        body.extend_from_slice(&residue);
+        body.push(1); // smf present
+        put_varint(&mut body, 5u64);
+        body.extend_from_slice(&[1, 2, 3, 4, 5]);
+        put_varint(&mut body, inquiry.len() as u64);
+        for sig in inquiry {
+            body.extend_from_slice(&sig.to_le_bytes());
+        }
+        put_varint(&mut body, answers.len() as u64);
+        body.push(0b101); // answers LSB-first
+        body.push(0); // done = false
+        let frame = frame_with_body(TYPE_ROUND, &body);
+        let expected = Msg::Round {
+            residue,
+            smf: Some(vec![1, 2, 3, 4, 5]),
+            inquiry: inquiry.to_vec(),
+            answers: answers.to_vec(),
+            done: false,
+            codec: false,
+        };
+        let (back, _) = Msg::from_bytes(&frame).unwrap();
+        assert_eq!(back, expected);
+        assert_eq!(expected.to_bytes(), frame, "codec-off Round must stay byte-identical");
+
+        // AggSketch: zigzag-varint counts.
+        let counts = [0i32, -1, 3, 0];
+        let mut body = Vec::new();
+        put_varint(&mut body, 3u64); // parties
+        put_varint(&mut body, 4u64); // l
+        put_varint(&mut body, 5u64); // m
+        body.extend_from_slice(&7u64.to_le_bytes()); // seed
+        body.extend_from_slice(&9u64.to_le_bytes()); // digest
+        body.push(DIRECTIVE_SESSION);
+        body.push(1);
+        put_varint(&mut body, counts.len() as u64);
+        for &v in &counts {
+            put_varint(&mut body, zigzag(v));
+        }
+        let frame = frame_with_body(TYPE_AGG_SKETCH, &body);
+        let expected = Msg::AggSketch {
+            parties: 3,
+            l: 4,
+            m: 5,
+            seed: 7,
+            digest: 9,
+            directive: DIRECTIVE_SESSION,
+            counts: Some(counts.to_vec()),
+            codec: false,
+        };
+        let (back, _) = Msg::from_bytes(&frame).unwrap();
+        assert_eq!(back, expected);
+        assert_eq!(expected.to_bytes(), frame, "codec-off AggSketch must stay byte-identical");
+
+        // MultiResidue: length-prefixed legacy sketch blob.
+        let mut body = Vec::new();
+        put_varint(&mut body, 2u64); // party
+        put_varint(&mut body, 0u64); // attempt
+        put_varint(&mut body, 300u64); // l
+        put_varint(&mut body, 7u64); // m
+        body.extend_from_slice(&1u64.to_le_bytes()); // seed
+        put_varint(&mut body, 64u64); // universe_bits
+        put_varint(&mut body, 11u64); // est_drop
+        let sk_bytes = sk.to_bytes();
+        put_varint(&mut body, sk_bytes.len() as u64);
+        body.extend_from_slice(&sk_bytes);
+        let frame = frame_with_body(TYPE_MULTI_RESIDUE, &body);
+        let expected = Msg::MultiResidue {
+            party: 2,
+            attempt: 0,
+            l: 300,
+            m: 7,
+            seed: 1,
+            universe_bits: 64,
+            est_drop: 11,
+            sketch: sk,
+            codec: false,
+        };
+        let (back, _) = Msg::from_bytes(&frame).unwrap();
+        assert_eq!(back, expected);
+        assert_eq!(
+            expected.to_bytes(),
+            frame,
+            "codec-off MultiResidue must stay byte-identical"
+        );
+    }
+
+    /// The codec earns its keep on structured payloads: sorted inquiry ids, sparse
+    /// answer bitmaps, zero-heavy sketch tables and aggregate counts.
+    #[test]
+    fn codec_frames_beat_legacy_on_structured_payloads() {
+        let round = |codec| Msg::Round {
+            residue: vec![5; 30],
+            smf: None,
+            inquiry: (0..200u64).map(|i| 1_000_000 + i * 13).collect(),
+            answers: vec![false; 300],
+            done: false,
+            codec,
+        };
+        assert!(round(true).wire_len() < round(false).wire_len());
+
+        let sketch = |codec| Msg::Sketch {
+            sketch: SketchMsg {
+                n: 4096,
+                table: {
+                    let mut t = vec![0u8; 600];
+                    t[3] = 200;
+                    t[400] = 9;
+                    t
+                },
+                payload: vec![0xA5; 900],
+                syndromes: vec![0x5A; 60],
+            },
+            codec,
+        };
+        assert!(sketch(true).wire_len() < sketch(false).wire_len());
+
+        let agg = |codec| Msg::AggSketch {
+            parties: 4,
+            l: 2048,
+            m: 8,
+            seed: 1,
+            digest: 2,
+            directive: DIRECTIVE_SESSION,
+            counts: Some({
+                let mut c = vec![0i32; 2048];
+                c[5] = 3;
+                c[1999] = -2;
+                c
+            }),
+            codec,
+        };
+        assert!(agg(true).wire_len() < agg(false).wire_len());
+
+        // Adversarially unstructured payloads cost at most the adaptive mode bytes.
+        let noisy = |codec| Msg::Round {
+            residue: vec![],
+            smf: None,
+            inquiry: (0..64u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)).collect(),
+            answers: (0..64).map(|i| i % 2 == 0).collect(),
+            done: false,
+            codec,
+        };
+        assert!(noisy(true).wire_len() <= noisy(false).wire_len() + 2);
+    }
+
+    /// `raw_wire_len` reports exactly what the same message costs codec-off, and
+    /// degenerates to `wire_len` for codec-off frames.
+    #[test]
+    fn raw_wire_len_matches_codec_off_equivalent() {
+        let round = |codec| Msg::Round {
+            residue: vec![1, 2, 3],
+            smf: None,
+            inquiry: (0..40u64).map(|i| i * 7).collect(),
+            answers: vec![false; 33],
+            done: false,
+            codec,
+        };
+        assert_eq!(round(true).raw_wire_len(), round(false).wire_len());
+        assert_eq!(round(false).raw_wire_len(), round(false).wire_len());
+
+        let sketch = |codec| Msg::Sketch { sketch: sample_sketch(), codec };
+        assert_eq!(sketch(true).raw_wire_len(), sketch(false).wire_len());
+        assert_eq!(sketch(false).raw_wire_len(), sketch(false).wire_len());
+
+        let agg = |codec| Msg::AggSketch {
+            parties: 4,
+            l: 6,
+            m: 8,
+            seed: 1,
+            digest: 2,
+            directive: DIRECTIVE_SESSION,
+            counts: Some(vec![0, 0, 1, -1, 0, 0]),
+            codec,
+        };
+        assert_eq!(agg(true).raw_wire_len(), agg(false).wire_len());
+
+        let mr = |codec| Msg::MultiResidue {
+            party: 1,
+            attempt: 0,
+            l: 300,
+            m: 7,
+            seed: 1,
+            universe_bits: 64,
+            est_drop: 9,
+            sketch: sample_sketch(),
+            codec,
+        };
+        assert_eq!(mr(true).raw_wire_len(), mr(false).wire_len());
+
+        // With a real SMF blob, each mode serializes its own encoding; raw accounting
+        // recovers the flat size from the codec blob's element count.
+        let bloom = crate::smf::BloomFilter::with_fpr(64, 0.01, 7);
+        let with_smf = |smf: Vec<u8>, codec| Msg::Round {
+            residue: vec![1],
+            smf: Some(smf),
+            inquiry: vec![],
+            answers: vec![],
+            done: false,
+            codec,
+        };
+        assert_eq!(
+            with_smf(bloom.to_codec_bytes(), true).raw_wire_len(),
+            with_smf(bloom.to_bytes(), false).wire_len()
+        );
+    }
+
+    /// The codec handshake bit (flags bit 5) rides the same versioned pattern as
+    /// namespace/party: absent on old frames, zero-cost when off, bit 6 stays reserved.
+    #[test]
+    fn est_hello_codec_flag_negotiation_bit() {
+        let hello = |codec| Msg::EstHello {
+            config_fingerprint: 42,
+            set_len: 500,
+            explicit_d: Some(33),
+            strata: None,
+            minhash: None,
+            namespace: 0,
+            party: None,
+            codec,
+        };
+        // The bit costs zero bytes: on and off differ only in the flags byte.
+        let on = hello(true).to_bytes();
+        let off = hello(false).to_bytes();
+        assert_eq!(on.len(), off.len());
+        assert_eq!(hello(true).wire_len(), hello(false).wire_len());
+        let diff: Vec<usize> = (0..on.len()).filter(|&i| on[i] != off[i]).collect();
+        let flags_off = 2 + 8 + varint_len(500); // frame header + fingerprint + set_len
+        assert_eq!(diff, vec![flags_off]);
+        assert_eq!(on[flags_off] ^ off[flags_off], 0b10_0000);
+        let (back, _) = Msg::from_bytes(&on).unwrap();
+        assert!(matches!(back, Msg::EstHello { codec: true, .. }));
+        let (back, _) = Msg::from_bytes(&off).unwrap();
+        assert!(matches!(back, Msg::EstHello { codec: false, .. }));
+    }
+
+    /// Codec-frame hardening: the columnar arms inherit the same adversarial posture as
+    /// the legacy ones.
+    #[test]
+    fn codec_frame_adversarial_fields_rejected() {
+        // A codec sketch whose table column carries a value outside the u8 alphabet.
+        let mut body = Vec::new();
+        put_varint(&mut body, 4u64); // n
+        RleU64Col::encode(&[1, 2, 300, 4], &mut body); // 300 does not fit a table byte
+        put_varint(&mut body, 0u64); // payload
+        put_varint(&mut body, 0u64); // syndromes
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_SKETCH_C, &body)).is_none());
+
+        // Codec aggregate counts shorter than the announced l.
+        let mut body = Vec::new();
+        put_varint(&mut body, 3u64); // parties
+        put_varint(&mut body, 7u64); // l
+        put_varint(&mut body, 5u64); // m
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&2u64.to_le_bytes());
+        body.push(DIRECTIVE_SESSION);
+        body.push(1);
+        RleU64Col::encode(&[0, 0, 0, 0, 0, 0], &mut body); // 6 counts, l says 7
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_AGG_SKETCH_C, &body)).is_none());
+
+        // A codec round whose inquiry column claims more elements than MAX_ROUND_ITEMS.
+        let mut body = Vec::new();
+        put_varint(&mut body, 0u64); // empty residue
+        body.push(0); // no smf
+        put_varint(&mut body, (MAX_ROUND_ITEMS as u64) + 1); // inquiry column count
+        body.push(1); // delta mode
+        body.extend_from_slice(&[0u8; 64]);
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_ROUND_C, &body)).is_none());
+
+        // Trailing garbage after a valid codec body.
+        let good = Msg::Round {
+            residue: vec![1],
+            smf: None,
+            inquiry: vec![1, 2, 3],
+            answers: vec![true, false],
+            done: false,
+            codec: true,
+        }
+        .to_bytes();
+        let mut body = good[2..].to_vec();
+        body.push(0xEE);
+        assert!(Msg::from_bytes(&frame_with_body(TYPE_ROUND_C, &body)).is_none());
     }
 }

@@ -583,6 +583,7 @@ impl ServerHandle {
                 s.phase_bytes[2].load(Ordering::Relaxed),
                 s.phase_bytes[3].load(Ordering::Relaxed),
             ],
+            raw_bytes: s.raw_bytes.load(Ordering::Relaxed),
             pool,
             sketch_store: store,
             inflight: s.inflight.load(Ordering::SeqCst),

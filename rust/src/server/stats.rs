@@ -23,14 +23,18 @@ use super::sketch_store::SketchStoreStats;
 use crate::metrics::{CommLog, Phase};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-/// Charge one finished session's transcript to a per-phase byte array
-/// (shared by the global and per-tenant scopes).
-pub(crate) fn charge(phase_bytes: &[AtomicU64; 4], comm: &CommLog) {
+/// Charge one finished session's transcript to a per-phase byte array plus the
+/// codec-off-equivalent (raw) total (shared by the global and per-tenant scopes).
+pub(crate) fn charge(phase_bytes: &[AtomicU64; 4], raw_bytes: &AtomicU64, comm: &CommLog) {
     for (i, &phase) in Phase::ALL.iter().enumerate() {
         let b = comm.bytes_by_phase(phase) as u64;
         if b > 0 {
             phase_bytes[i].fetch_add(b, Ordering::Relaxed);
         }
+    }
+    let raw = comm.total_raw_bytes() as u64;
+    if raw > 0 {
+        raw_bytes.fetch_add(raw, Ordering::Relaxed);
     }
 }
 
@@ -43,6 +47,9 @@ pub(crate) struct TenantCounters {
     pub(crate) failed: AtomicU64,
     pub(crate) rejected: AtomicU64,
     pub(crate) phase_bytes: [AtomicU64; 4],
+    /// Codec-off-equivalent bytes of the same transcripts (what the sessions would
+    /// have cost without the columnar wire codec).
+    pub(crate) raw_bytes: AtomicU64,
     /// Routed, unfinished sessions of this tenant — the quota gauge.
     pub(crate) inflight: AtomicUsize,
 }
@@ -63,6 +70,8 @@ pub(crate) struct StatsInner {
     /// Conversation bytes by protocol phase, indexed in [`Phase::ALL`] order
     /// (successful sessions only — a torn-down conversation has no agreed transcript).
     pub(crate) phase_bytes: [AtomicU64; 4],
+    /// Codec-off-equivalent bytes of the same transcripts (successful sessions only).
+    pub(crate) raw_bytes: AtomicU64,
     /// Live connections (admitted at accept, not yet closed) — the global
     /// admission-control gauge.
     pub(crate) inflight: AtomicUsize,
@@ -77,7 +86,7 @@ pub(crate) struct StatsInner {
 impl StatsInner {
     /// Charge one finished session's transcript to the global per-phase byte counters.
     pub(crate) fn charge_comm(&self, comm: &CommLog) {
-        charge(&self.phase_bytes, comm);
+        charge(&self.phase_bytes, &self.raw_bytes, comm);
     }
 
     /// A connection's `EstHello` was routed to a tenant: count the session as accepted
@@ -92,8 +101,8 @@ impl StatsInner {
     pub(crate) fn serve(&self, t: &TenantCounters, comm: &CommLog) {
         self.sessions_served.fetch_add(1, Ordering::Relaxed);
         t.served.fetch_add(1, Ordering::Relaxed);
-        charge(&self.phase_bytes, comm);
-        charge(&t.phase_bytes, comm);
+        charge(&self.phase_bytes, &self.raw_bytes, comm);
+        charge(&t.phase_bytes, &t.raw_bytes, comm);
     }
 
     /// A session ended in a typed error. `None` = the connection never routed to a
@@ -139,6 +148,8 @@ pub struct TenantStats {
     pub sessions_rejected: u64,
     /// Conversation bytes by phase (successful sessions), in [`Phase::ALL`] order.
     pub phase_bytes: [u64; 4],
+    /// Codec-off-equivalent bytes of the same transcripts.
+    pub raw_bytes: u64,
     /// Routed, unfinished sessions of this tenant.
     pub inflight: usize,
     /// Per-tenant concurrency quota.
@@ -147,6 +158,23 @@ pub struct TenantStats {
     pub pool: PoolStats,
     /// This tenant's host-sketch-store shard (zeros when disabled).
     pub sketch_store: SketchStoreStats,
+}
+
+impl TenantStats {
+    /// Total conversation bytes across phases for this tenant.
+    pub fn total_bytes(&self) -> u64 {
+        self.phase_bytes.iter().sum()
+    }
+
+    /// Encoded ÷ raw bytes for this tenant's successful sessions (1.0 when nothing
+    /// was charged, or the codec saved nothing).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.raw_bytes == 0 {
+            1.0
+        } else {
+            self.total_bytes() as f64 / self.raw_bytes as f64
+        }
+    }
 }
 
 impl TenantCounters {
@@ -169,6 +197,7 @@ impl TenantCounters {
                 self.phase_bytes[2].load(Ordering::Relaxed),
                 self.phase_bytes[3].load(Ordering::Relaxed),
             ],
+            raw_bytes: self.raw_bytes.load(Ordering::Relaxed),
             inflight: self.inflight.load(Ordering::Relaxed),
             quota,
             pool,
@@ -202,6 +231,10 @@ pub struct ServerStats {
     /// Conversation bytes by phase (successful sessions), in [`Phase::ALL`] order:
     /// handshake, sketch, residue, confirm.
     pub phase_bytes: [u64; 4],
+    /// Codec-off-equivalent bytes of the same transcripts — together with
+    /// [`ServerStats::total_bytes`] this is the server-wide view of what the columnar
+    /// wire codec saved.
+    pub raw_bytes: u64,
     /// Decoder-pool counters summed across tenant shards (all zeros when disabled).
     pub pool: PoolStats,
     /// Host-sketch-store counters summed across tenant shards (all zeros when
@@ -228,6 +261,16 @@ impl ServerStats {
         self.phase_bytes.iter().sum()
     }
 
+    /// Encoded ÷ raw bytes across every successful session (1.0 when nothing was
+    /// charged, or every session negotiated the codec off).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.raw_bytes == 0 {
+            1.0
+        } else {
+            self.total_bytes() as f64 / self.raw_bytes as f64
+        }
+    }
+
     /// Decoder-pool hit rate (0.0 when the pool was never consulted or is disabled).
     pub fn pool_hit_rate(&self) -> f64 {
         self.pool.hit_rate()
@@ -252,7 +295,8 @@ impl ServerStats {
             "{{\"sessions_accepted\":{},\"sessions_served\":{},\"sessions_failed\":{},\
              \"sessions_rejected\":{},\"unrouted_failed\":{},\"unrouted_rejected\":{},\
              \"tenant_count\":{},\"bytes_handshake\":{},\"bytes_sketch\":{},\
-             \"bytes_residue\":{},\"bytes_confirm\":{},\"pool_hits\":{},\"pool_misses\":{},\
+             \"bytes_residue\":{},\"bytes_confirm\":{},\"raw_bytes\":{},\
+             \"compression_ratio\":{:.4},\"pool_hits\":{},\"pool_misses\":{},\
              \"pool_evictions\":{},\"pool_parked\":{},\"pool_capacity\":{},\
              \"pool_hit_rate\":{:.4},\"store_hits\":{},\"store_misses\":{},\
              \"store_stale_bypasses\":{},\"store_encodes\":{},\
@@ -271,6 +315,8 @@ impl ServerStats {
             self.phase_bytes[1],
             self.phase_bytes[2],
             self.phase_bytes[3],
+            self.raw_bytes,
+            self.compression_ratio(),
             self.pool.hits,
             self.pool.misses,
             self.pool.evictions,
@@ -308,10 +354,14 @@ mod tests {
         comm.record(true, Phase::Residue, 40);
         comm.record(false, Phase::Residue, 5);
         comm.record(true, Phase::Confirm, 3);
+        // One codec-on frame: encoded 40, would-have-been 55 raw.
+        comm.record_framed(false, Phase::Residue, 40, 55);
         inner.charge_comm(&comm);
         let got: Vec<u64> =
             inner.phase_bytes.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        assert_eq!(got, vec![10, 100, 45, 3]);
+        assert_eq!(got, vec![10, 100, 85, 3]);
+        // Raw total: plain records charge raw == bytes; the framed record adds 55.
+        assert_eq!(inner.raw_bytes.load(Ordering::Relaxed), 10 + 100 + 45 + 3 + 55);
     }
 
     #[test]
@@ -324,6 +374,7 @@ mod tests {
             unrouted_failed: 0,
             unrouted_rejected: 1,
             phase_bytes: [1, 2, 3, 4],
+            raw_bytes: 20,
             pool: PoolStats { hits: 30, misses: 2, evictions: 0, parked: 2, capacity: 8 },
             sketch_store: SketchStoreStats {
                 hits: 28,
@@ -356,6 +407,8 @@ mod tests {
             "bytes_sketch",
             "bytes_residue",
             "bytes_confirm",
+            "raw_bytes",
+            "compression_ratio",
             "pool_hits",
             "pool_misses",
             "pool_hit_rate",
@@ -372,6 +425,9 @@ mod tests {
             assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
         }
         assert_eq!(stats.total_bytes(), 10);
+        assert!((stats.compression_ratio() - 0.5).abs() < 1e-12);
+        assert!(json.contains("\"raw_bytes\":20"));
+        assert!(json.contains("\"compression_ratio\":0.5000"));
         assert!((stats.pool_hit_rate() - 30.0 / 32.0).abs() < 1e-12);
         assert!((stats.sketch_store_hit_rate() - 28.0 / 32.0).abs() < 1e-12);
         assert!(json.contains("\"tenant_count\":1"));
@@ -454,5 +510,11 @@ mod tests {
                 "phase bucket {i} != shard sum"
             );
         }
+        let shard_raw: u64 = shards.iter().map(|t| t.raw_bytes.load(Ordering::Relaxed)).sum();
+        assert_eq!(
+            inner.raw_bytes.load(Ordering::Relaxed),
+            shard_raw,
+            "raw bytes != shard sum"
+        );
     }
 }

@@ -30,6 +30,7 @@ use std::sync::Arc;
 use super::{DecodeFailure, DiffSize, Mode, ProtocolKind, SetxConfig, SetxError, SetxReport};
 use crate::decoder::DecoderCache;
 use crate::metrics::CommLog;
+use crate::protocol::bidi::BidiOptions;
 use crate::protocol::estimate::{MinHashEstimator, StrataEstimator};
 use crate::protocol::session::{frame_phase, label, Session, SessionError, SessionEvent};
 use crate::protocol::uni;
@@ -78,6 +79,10 @@ pub(crate) struct Negotiated {
     /// Whether attempt 0 runs the unidirectional protocol (Mode::Uni, or Auto with a
     /// zero-unique initiator — the directional Strata subset signal).
     pub uni_first: bool,
+    /// Whether the columnar wire codec is on for this connection: both endpoints must
+    /// have advertised the `EstHello` codec flags bit. Off, every subsequent frame is
+    /// byte-identical to the pre-codec wire format.
+    pub codec: bool,
 }
 
 /// What the pump should do after feeding one frame in.
@@ -153,6 +158,7 @@ pub(crate) fn build_est_hello(
                 minhash: None,
                 namespace: cfg.namespace(),
                 party: None,
+                codec: cfg.engine.codec,
             },
             None,
         ),
@@ -161,14 +167,24 @@ pub(crate) fn build_est_hello(
                 StrataEstimator::with_shape(STRATA_LEVELS, STRATA_CELLS, est_seed(cfg.seed));
             strata.insert_all(set);
             let minhash = MinHashEstimator::build(set, MINHASH_K, mh_seed(cfg.seed));
+            // The strata payload rides in the same frame as the codec bit, so its
+            // layout follows *our* advertisement (the receiver dispatches on the bit);
+            // a codec-off peer still negotiates the connection down for everything
+            // after the hello. MinHash bytes are identical in both modes.
+            let strata_bytes = if cfg.engine.codec {
+                strata.to_columnar_bytes()
+            } else {
+                strata.to_bytes()
+            };
             let msg = Msg::EstHello {
                 config_fingerprint: cfg.fingerprint(),
                 set_len: set.len() as u64,
                 explicit_d: None,
-                strata: Some(strata.to_bytes()),
+                strata: Some(strata_bytes),
                 minhash: Some(minhash.to_bytes()),
                 namespace: cfg.namespace(),
                 party: None,
+                codec: cfg.engine.codec,
             };
             (msg, Some((strata, minhash)))
         }
@@ -188,6 +204,7 @@ pub(crate) fn negotiate(
     peer_explicit_d: Option<u64>,
     peer_strata: Option<&[u8]>,
     peer_minhash: Option<&[u8]>,
+    peer_codec: bool,
 ) -> Result<Negotiated, SetxError> {
     let (client_len, server_len) = if client { (my_len, peer_len) } else { (peer_len, my_len) };
     let len_gap = my_len.abs_diff(peer_len);
@@ -205,8 +222,14 @@ pub(crate) fn negotiate(
                 my_ests.ok_or(SetxError::MalformedFrame("local estimators missing"))?;
             let sb = peer_strata.ok_or(SetxError::MalformedFrame("missing strata estimator"))?;
             let mb = peer_minhash.ok_or(SetxError::MalformedFrame("missing minhash estimator"))?;
-            let peer_st = StrataEstimator::from_bytes(sb, est_seed(cfg.seed))
-                .ok_or(SetxError::MalformedFrame("strata estimator"))?;
+            // The peer's strata layout follows its own codec advertisement (the bit
+            // travels in the same frame as the payload).
+            let peer_st = if peer_codec {
+                StrataEstimator::from_columnar_bytes(sb, est_seed(cfg.seed))
+            } else {
+                StrataEstimator::from_bytes(sb, est_seed(cfg.seed))
+            }
+            .ok_or(SetxError::MalformedFrame("strata estimator"))?;
             let peer_mh = MinHashEstimator::from_bytes(mb)
                 .ok_or(SetxError::MalformedFrame("minhash estimator"))?;
             if !my_st.shape_matches(&peer_st) {
@@ -264,6 +287,9 @@ pub(crate) fn negotiate(
         est_peer,
         initiator: client == initiator_is_client,
         uni_first,
+        // Both ends must advertise the codec bit; either side off turns it off for the
+        // whole connection (the negotiate-down path for mixed deployments).
+        codec: cfg.engine.codec && peer_codec,
     })
 }
 
@@ -475,6 +501,7 @@ impl<'a> Endpoint<'a> {
                     minhash,
                     namespace,
                     party,
+                    codec,
                 },
             ) => {
                 self.record_recv(msg);
@@ -515,6 +542,7 @@ impl<'a> Endpoint<'a> {
                     *explicit_d,
                     strata.as_deref(),
                     minhash.as_deref(),
+                    *codec,
                 ) {
                     Ok(n) => n,
                     Err(e) => return Step::Fatal(Vec::new(), e),
@@ -547,7 +575,7 @@ impl<'a> Endpoint<'a> {
                 )
             }
             (EpPhase::AwaitOpen, m @ Msg::Hello { .. }) => self.on_open_hello(m),
-            (EpPhase::UniWaitSketch(params), m @ Msg::Sketch(_)) => self.uni_decode(&params, m),
+            (EpPhase::UniWaitSketch(params), m @ Msg::Sketch { .. }) => self.uni_decode(&params, m),
             (EpPhase::UniWaitConfirm, Msg::Confirm { ok, reason, attempt }) => {
                 self.record_recv(msg);
                 if *attempt != self.attempt {
@@ -566,9 +594,9 @@ impl<'a> Endpoint<'a> {
             }
             (
                 EpPhase::Bidi(mut session),
-                m @ (Msg::Hello { .. } | Msg::Sketch(_) | Msg::Round { .. }),
+                m @ (Msg::Hello { .. } | Msg::Sketch { .. } | Msg::Round { .. }),
             ) => {
-                if matches!(m, Msg::Sketch(_)) {
+                if matches!(m, Msg::Sketch { .. }) {
                     // The initiator followed through with its sketch: now (and only
                     // now) check our own-set sketch out of the shared store for the
                     // geometry its Hello announced, so the session skips the O(m·n)
@@ -669,12 +697,9 @@ impl<'a> Endpoint<'a> {
         match kind {
             ProtocolKind::Bidi => {
                 let cache = self.take_cache();
-                let mut session = Session::responder_cached(
-                    self.set.as_slice(),
-                    self.cfg.engine,
-                    self.client,
-                    cache,
-                );
+                let engine = BidiOptions { codec: nego.codec, ..self.cfg.engine };
+                let mut session =
+                    Session::responder_cached(self.set.as_slice(), engine, self.client, cache);
                 session.set_encode_config(self.enc);
                 // Note the attempt geometry (the `Hello` carries it) but *defer* the
                 // store checkout to the initiator's `Sketch` frame — the self-encode is
@@ -803,8 +828,13 @@ impl<'a> Endpoint<'a> {
                     namespace: self.cfg.namespace(),
                 };
                 let host = self.own_sketch(&params);
-                let (sketch, _) =
-                    uni::alice_encode_with(self.set.as_slice(), &params, self.enc, host.as_deref());
+                let (sketch, _) = uni::alice_encode_with(
+                    self.set.as_slice(),
+                    &params,
+                    self.enc,
+                    host.as_deref(),
+                    nego.codec,
+                );
                 self.record_sent(&hello);
                 self.record_sent(&sketch);
                 self.phase = EpPhase::UniWaitConfirm;
@@ -816,10 +846,11 @@ impl<'a> Endpoint<'a> {
                 // checks out here and refills there.
                 let cache = self.take_cache();
                 let host = self.own_sketch(&params);
+                let engine = BidiOptions { codec: nego.codec, ..self.cfg.engine };
                 let (session, opening) = Session::initiator_with(
                     &params,
                     self.set.as_slice(),
-                    self.cfg.engine,
+                    engine,
                     self.client,
                     cache,
                     self.enc,
@@ -959,11 +990,13 @@ impl<'a> Endpoint<'a> {
     }
 
     fn record_sent(&mut self, msg: &Msg) {
-        self.comm.record(self.client, frame_phase(msg), msg.wire_len());
+        let (enc, raw) = (msg.wire_len(), msg.raw_wire_len());
+        self.comm.record_framed(self.client, frame_phase(msg), enc, raw);
     }
 
     fn record_recv(&mut self, msg: &Msg) {
-        self.comm.record(!self.client, frame_phase(msg), msg.wire_len());
+        let (enc, raw) = (msg.wire_len(), msg.raw_wire_len());
+        self.comm.record_framed(!self.client, frame_phase(msg), enc, raw);
     }
 }
 

@@ -321,6 +321,16 @@ impl SetxBuilder {
         self
     }
 
+    /// Advertise the columnar wire codec (default on). The codec only engages when
+    /// *both* endpoints advertise it in their `EstHello`; a mixed deployment negotiates
+    /// down to the pre-codec frame format, byte-for-byte. Framing knob — deliberately
+    /// not part of the config fingerprint, so codec-on and codec-off peers still
+    /// handshake (and then talk codec-off).
+    pub fn codec(mut self, on: bool) -> Self {
+        self.cfg.engine.codec = on;
+        self
+    }
+
     /// Validate the config into a runnable endpoint.
     pub fn build(self) -> Result<Setx, SetxError> {
         let cfg = &self.cfg;
@@ -541,6 +551,18 @@ impl SetxReport {
         self.comm.total_bytes()
     }
 
+    /// What the conversation *would* have cost without the columnar wire codec, both
+    /// directions. Equals [`SetxReport::total_bytes`] for codec-off sessions.
+    pub fn total_raw_bytes(&self) -> usize {
+        self.comm.total_raw_bytes()
+    }
+
+    /// Encoded ÷ raw bytes over the whole conversation (1.0 = the codec was off or
+    /// saved nothing; < 1.0 = net shrink).
+    pub fn compression_ratio(&self) -> f64 {
+        self.comm.compression_ratio()
+    }
+
     pub fn bytes_sent(&self) -> usize {
         self.direction_bytes(true)
     }
@@ -634,6 +656,11 @@ mod tests {
         let tenant9 = Setx::builder(&set).namespace(9).build().unwrap();
         assert_eq!(base, tenant9.cfg.fingerprint());
         assert_eq!(tenant9.cfg.namespace(), 9);
+        // The wire codec is framing, not protocol: a codec-off client must still
+        // fingerprint-match a codec-on server (they negotiate down in the handshake).
+        let plain = Setx::builder(&set).codec(false).build().unwrap();
+        assert_eq!(base, plain.cfg.fingerprint());
+        assert!(!plain.cfg.engine.codec);
     }
 
     #[test]

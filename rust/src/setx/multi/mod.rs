@@ -159,6 +159,12 @@ impl PartyOutcome {
     pub fn total_bytes(&self) -> usize {
         self.comm.total_bytes()
     }
+
+    /// Codec-off-equivalent bytes for this spoke (equal to
+    /// [`PartyOutcome::total_bytes`] when the spoke negotiated the codec off).
+    pub fn total_raw_bytes(&self) -> usize {
+        self.comm.total_raw_bytes()
+    }
 }
 
 /// Outcome of a multi-party round at the coordinator.
@@ -178,6 +184,16 @@ impl MultiReport {
     /// Total conversation bytes across every spoke, both directions.
     pub fn total_bytes(&self) -> usize {
         self.comm.total_bytes()
+    }
+
+    /// What the round *would* have cost without the columnar wire codec.
+    pub fn total_raw_bytes(&self) -> usize {
+        self.comm.total_raw_bytes()
+    }
+
+    /// Encoded ÷ raw bytes across every spoke (1.0 = codec off or no savings).
+    pub fn compression_ratio(&self) -> f64 {
+        self.comm.compression_ratio()
     }
 
     /// How many spokes completed the round (coordinator excluded).
@@ -309,6 +325,7 @@ impl MultiCoordinator {
             minhash,
             namespace,
             party: Some((id, count)),
+            codec,
         } = msg
         else {
             return Err(MultiError::Party {
@@ -346,6 +363,7 @@ impl MultiCoordinator {
             *explicit_d,
             strata.as_deref(),
             minhash.as_deref(),
+            *codec,
         )
         .map_err(reject)?;
         let mut spoke = Spoke {
@@ -361,8 +379,8 @@ impl MultiCoordinator {
             attempts: 0,
             error: None,
         };
-        spoke.comm.record(true, frame_phase(msg), msg.wire_len());
-        spoke.comm.record(false, frame_phase(&self.hello), self.hello.wire_len());
+        log_frame(&mut spoke.comm, true, msg);
+        log_frame(&mut spoke.comm, false, &self.hello);
         self.spokes.insert(id, spoke);
         let mut out = vec![(id, self.hello.clone())];
         out.extend(self.advance());
@@ -435,8 +453,8 @@ impl MultiCoordinator {
         }
         let mut out: Vec<(u32, Msg)> = Vec::new();
         match (std::mem::replace(&mut spoke.state, SpokeState::Done), msg) {
-            (SpokeState::AwaitSketch, Msg::Sketch(sk_msg)) => {
-                spoke.comm.record(true, frame_phase(msg), msg.wire_len());
+            (SpokeState::AwaitSketch, Msg::Sketch { sketch: sk_msg, .. }) => {
+                log_frame(&mut spoke.comm, true, msg);
                 let params = spoke.params.as_ref().expect("collect params set with hello");
                 let counts = &self.sketch_c.as_ref().expect("sk(C) encoded at collect").counts;
                 let recovered = (sk_msg.n == counts.len())
@@ -477,7 +495,7 @@ impl MultiCoordinator {
                 }
             },
             (SpokeState::AwaitVerdict { attempt }, Msg::Confirm { ok, reason, attempt: a }) => {
-                spoke.comm.record(true, frame_phase(msg), msg.wire_len());
+                log_frame(&mut spoke.comm, true, msg);
                 if *a != attempt {
                     spoke.error = Some(MultiError::Party {
                         party,
@@ -495,8 +513,9 @@ impl MultiCoordinator {
                         next,
                         spoke.kept_len,
                         &spoke.drop,
+                        spoke.nego.codec,
                     );
-                    spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                    log_frame(&mut spoke.comm, false, &frame);
                     spoke.attempts = next + 1;
                     spoke.state = SpokeState::AwaitVerdict { attempt: next };
                     out.push((party, frame));
@@ -504,7 +523,7 @@ impl MultiCoordinator {
                     // Ladder exhausted: echo the verdict as a teardown so the spoke sees
                     // a terminal Confirm (not a silent close), then fail the party.
                     let frame = Msg::Confirm { ok: false, reason: *reason, attempt };
-                    spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                    log_frame(&mut spoke.comm, false, &frame);
                     out.push((party, frame));
                     spoke.error = Some(MultiError::Party {
                         party,
@@ -516,7 +535,7 @@ impl MultiCoordinator {
                 }
             }
             (_, _) => {
-                spoke.comm.record(true, frame_phase(msg), msg.wire_len());
+                log_frame(&mut spoke.comm, true, msg);
                 spoke.error = Some(MultiError::Party {
                     party,
                     error: SetxError::MalformedFrame("frame out of phase for this spoke"),
@@ -576,7 +595,7 @@ impl MultiCoordinator {
                         set_len: self.set.len() as u64,
                         namespace: self.cfg.namespace(),
                     };
-                    spoke.comm.record(false, frame_phase(&hello), hello.wire_len());
+                    log_frame(&mut spoke.comm, false, &hello);
                     spoke.params = Some(params);
                     spoke.state = SpokeState::AwaitSketch;
                     out.push((id, hello));
@@ -607,13 +626,14 @@ impl MultiCoordinator {
                     digest,
                     directive: if session { DIRECTIVE_SESSION } else { DIRECTIVE_IN_SYNC },
                     counts: counts32.clone(),
+                    codec: spoke.nego.codec,
                 };
                 if frame.wire_len() > AGG_COUNTS_BUDGET {
                     if let Msg::AggSketch { counts, .. } = &mut frame {
                         *counts = None;
                     }
                 }
-                spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                log_frame(&mut spoke.comm, false, &frame);
                 out.push((id, frame));
                 if session {
                     let mut ep = Endpoint::new_owned_negotiated(
@@ -667,12 +687,13 @@ impl MultiCoordinator {
                         0,
                         spoke.kept_len,
                         &spoke.drop,
+                        spoke.nego.codec,
                     )
                 };
                 if !spoke.drop.is_empty() {
                     spoke.attempts = 1;
                 }
-                spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                log_frame(&mut spoke.comm, false, &frame);
                 spoke.state = SpokeState::AwaitVerdict { attempt: 0 };
                 out.push((id, frame));
             }
@@ -688,7 +709,7 @@ impl MultiCoordinator {
                 let spoke = self.spokes.get_mut(&id).expect("live id");
                 if matches!(spoke.state, SpokeState::Settled) {
                     let frame = Msg::Confirm { ok: true, reason: REASON_OK, attempt: 0 };
-                    spoke.comm.record(false, frame_phase(&frame), frame.wire_len());
+                    log_frame(&mut spoke.comm, false, &frame);
                     spoke.state = SpokeState::Done;
                     out.push((id, frame));
                 }
@@ -729,6 +750,11 @@ impl MultiCoordinator {
     }
 }
 
+/// Charge one frame to a transcript at both its encoded and codec-off-equivalent sizes.
+fn log_frame(comm: &mut CommLog, inbound: bool, msg: &Msg) {
+    comm.record_framed(inbound, frame_phase(msg), msg.wire_len(), msg.raw_wire_len());
+}
+
 /// Build one membership frame: a compressed sketch of the intersection, sized for this
 /// spoke's exact drop count with the rung's escalated safety factor.
 fn membership_frame(
@@ -739,6 +765,7 @@ fn membership_frame(
     attempt: u32,
     kept_len: usize,
     drop: &[u64],
+    wire_codec: bool,
 ) -> Msg {
     let mut params = CsParams::tuned_uni_with_safety(
         kept_len.max(1),
@@ -758,6 +785,7 @@ fn membership_frame(
         universe_bits: params.universe_bits,
         est_drop: drop.len() as u64,
         sketch: compress_sketch(&sketch.counts, &codec),
+        codec: wire_codec,
     }
 }
 
@@ -886,6 +914,7 @@ impl Party {
                     minhash,
                     namespace,
                     party,
+                    codec,
                 },
             ) => {
                 self.record_recv(msg);
@@ -921,6 +950,7 @@ impl Party {
                     *explicit_d,
                     strata.as_deref(),
                     minhash.as_deref(),
+                    *codec,
                 ) {
                     Ok(nego) => {
                         self.nego = Some(nego);
@@ -973,14 +1003,16 @@ impl Party {
                     est_a_unique: est_a,
                     est_b_unique: est_b,
                 };
-                let (sketch, _) = uni::alice_encode_with(&self.set, &params, self.enc, None);
+                let wire_codec = self.nego.is_some_and(|n| n.codec);
+                let (sketch, _) =
+                    uni::alice_encode_with(&self.set, &params, self.enc, None, wire_codec);
                 self.record_sent(&sketch);
                 self.phase = PartyPhase::AwaitDirective { params };
                 Step::Send(vec![sketch])
             }
             (
                 PartyPhase::AwaitDirective { params },
-                Msg::AggSketch { parties: _, l, m, seed, digest, directive, counts },
+                Msg::AggSketch { parties: _, l, m, seed, digest, directive, counts, codec: _ },
             ) => {
                 self.record_recv(msg);
                 if (*l, *m, *seed) != (params.l, params.m, params.seed) {
@@ -1058,7 +1090,17 @@ impl Party {
             }
             (
                 PartyPhase::AwaitMembership,
-                Msg::MultiResidue { party, attempt, l, m, seed, universe_bits, est_drop, sketch },
+                Msg::MultiResidue {
+                    party,
+                    attempt,
+                    l,
+                    m,
+                    seed,
+                    universe_bits,
+                    est_drop,
+                    sketch,
+                    codec: _,
+                },
             ) => {
                 self.record_recv(msg);
                 if *party != self.id {
@@ -1086,7 +1128,7 @@ impl Party {
                 };
                 self.attempts = self.attempts.max(attempt + 1);
                 match uni::bob_decode_with(
-                    &Msg::Sketch(sketch.clone()),
+                    &Msg::Sketch { sketch: sketch.clone(), codec: false },
                     &self.kept,
                     &params,
                     &mut self.cache,
@@ -1197,11 +1239,11 @@ impl Party {
     }
 
     fn record_sent(&mut self, msg: &Msg) {
-        self.comm.record(true, frame_phase(msg), msg.wire_len());
+        log_frame(&mut self.comm, true, msg);
     }
 
     fn record_recv(&mut self, msg: &Msg) {
-        self.comm.record(false, frame_phase(msg), msg.wire_len());
+        log_frame(&mut self.comm, false, msg);
     }
 }
 

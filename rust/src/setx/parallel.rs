@@ -73,8 +73,14 @@ pub fn run_partitioned(
     // ---- Global negotiation: one EstHello exchange, charged to both transcripts. ----
     let (msg_c, ests_c) = build_est_hello(cfg, &client.set);
     let (msg_s, ests_s) = build_est_hello(cfg, &server.set);
-    let Msg::EstHello { set_len: s_len, explicit_d: s_d, strata: s_st, minhash: s_mh, .. } =
-        &msg_s
+    let Msg::EstHello {
+        set_len: s_len,
+        explicit_d: s_d,
+        strata: s_st,
+        minhash: s_mh,
+        codec: s_codec,
+        ..
+    } = &msg_s
     else {
         unreachable!("build_est_hello always builds an EstHello");
     };
@@ -87,11 +93,12 @@ pub fn run_partitioned(
         *s_d,
         s_st.as_deref(),
         s_mh.as_deref(),
+        *s_codec,
     )?;
     drop(ests_s);
     let mut comm = CommLog::new();
-    comm.record(true, frame_phase(&msg_c), msg_c.wire_len());
-    comm.record(false, frame_phase(&msg_s), msg_s.wire_len());
+    comm.record_framed(true, frame_phase(&msg_c), msg_c.wire_len(), msg_c.raw_wire_len());
+    comm.record_framed(false, frame_phase(&msg_s), msg_s.wire_len(), msg_s.raw_wire_len());
 
     // ---- Partitioning + per-partition provisioning (Poisson-padded, as PBS). ----
     let part_seed = cfg.seed ^ 0x9a27_11;

@@ -192,7 +192,10 @@ impl Transport for TcpTransport {
     }
 }
 
-/// Read exactly one frame from a stream: type byte + varint length + body. Returns
+/// Read exactly one frame from a stream: type byte + varint length + body. The framer
+/// is deliberately type-byte-agnostic — codec-on frame types flow through it unchanged
+/// (only [`Msg::from_bytes`] interprets the type), so the transport needed no changes
+/// for the columnar codec. Returns
 /// `(Ok(None), 0)`-style on a clean end-of-stream at a frame boundary (the peer tore down
 /// after finishing); anything else — EOF mid-frame, a malformed frame, an adversarial
 /// length field — is an error. The advertised body length is validated against
@@ -289,6 +292,7 @@ mod tests {
             inquiry: vec![9],
             answers: vec![true],
             done: false,
+            codec: false,
         };
         a.send(&msg).unwrap();
         let got = b.recv().unwrap().unwrap();

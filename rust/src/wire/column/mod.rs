@@ -1,0 +1,720 @@
+//! Columnar codecs: the one compression layer under every protocol frame.
+//!
+//! The paper's headline result is communication cost, yet frames naively ship id lists
+//! as raw 8-byte words, count vectors with long zero runs, and Bloom bitmaps as flat
+//! bytes. This module is the rowblock-style answer (after automerge's `columnar`
+//! encoders): a small set of self-describing column encodings, each a
+//! [`Column`] encoder/decoder pair with checked offsets and length-capped parsing, that
+//! the frame encoders in [`crate::protocol::wire`] (and the estimator/SMF serializers)
+//! compose instead of hand-rolling byte loops.
+//!
+//! # The encoders
+//!
+//! Every column starts with a LEB128 varint element count `n`. When `n > 0` the
+//! adaptive columns follow with a one-byte **mode** tag and the payload; the encoder
+//! always picks the cheaper mode, so no column ever exceeds its fixed-width framing by
+//! more than that single byte:
+//!
+//! * [`Fixed64Col`] — `n` raw 8-byte LE words, no mode byte. Byte-identical to the
+//!   legacy (pre-codec) id-list framing; the codec-off paths route through it so the
+//!   byte-identity guarantee below is enforced by construction, not by parallel code.
+//! * [`DeltaU64Col`] — mode 0: raw 8-byte words; mode 1: zigzag varints of
+//!   *wrapping* deltas between consecutive values. **Order-preserving** (never
+//!   sort-then-delta): `Msg::Round` inquiry signatures must stay aligned with the
+//!   peer's answer bits by index. Sorted id sequences get short positive deltas; a
+//!   random signature list falls back to mode 0.
+//! * [`RleU64Col`] — mode 0: raw 8-byte words; mode 1: run-length framing for sparse
+//!   integer columns (sketch count vectors are mostly zeros at low d). Each run header
+//!   is a varint `h`: low bit 0 ⇒ a repeat run of `h >> 1` copies of one varint value,
+//!   low bit 1 ⇒ a literal run of `h >> 1` varint values. Runs are non-empty and must
+//!   sum exactly to `n`.
+//! * [`BoolRleCol`] — mode 0: LSB-first bitpacked (byte-identical to the legacy answer
+//!   bitmap); mode 1: a start-bit byte plus alternating varint run lengths (boolean-RLE
+//!   for bitmaps — a half-full Bloom filter stays bitpacked, a sparse one collapses).
+//!
+//! # Negotiation and the byte-identity guarantee
+//!
+//! Whether a conversation uses the columnar frame bodies at all is negotiated by a
+//! dedicated `EstHello` handshake flags bit (bit 5, the same versioned-trailing-field
+//! pattern as the `namespace`/`party` fields): the codec runs only when **both** ends
+//! advertise it, and a codec-off conversation emits frames **byte-identical** to the
+//! PR 7 wire format — old transcripts parse unchanged, and a codec-off peer negotiates
+//! any codec-capable peer down. Codec-on frames use dedicated frame type bytes, so
+//! `Msg::from_bytes` stays context-free. (`Msg::Confirm` carries no id list — only a
+//! verdict triple — so the "Confirm id lists" of the columnar blueprint have nothing to
+//! encode; the frame is untouched in both modes.)
+//!
+//! # Parsing posture
+//!
+//! Decoders mirror the frame-hardening rules of `protocol::wire`: every read is
+//! checked, claimed counts are validated against the caller's `cap` (and the global
+//! [`MAX_COLUMN_ELEMS`] backstop) *before* any allocation is sized by them, varints
+//! longer than 10 bytes are rejected, and run lengths may never overflow the declared
+//! element count. A run-length column legitimately decodes more elements than it has
+//! payload bytes — that is the point of compression — so `cap` is the allocation bound
+//! and callers pass the tightest value their frame context knows.
+
+/// Hard ceiling on the element count any single column will decode (2^24 ≈ 16.7M;
+/// 128 MiB of u64s), a backstop under the per-call `cap` so a handful of adversarial
+/// bytes can never demand an unbounded allocation.
+pub const MAX_COLUMN_ELEMS: usize = 1 << 24;
+
+/// Encoded size of one LEB128 varint.
+#[inline]
+pub fn varint_len(v: u64) -> usize {
+    ((64 - v.leading_zeros()).max(1) as usize).div_ceil(7)
+}
+
+/// Append one LEB128 varint.
+pub fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read one LEB128 varint from `data[*off..]`, advancing the cursor. Rejects
+/// truncation and over-long encodings (anything whose continuation runs past the
+/// 10 bytes a `u64` can need — an 11-byte varint is always malformed).
+pub fn take_uvarint(data: &[u8], off: &mut usize) -> Option<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = *data.get(*off)?;
+        *off = off.checked_add(1)?;
+        if shift >= 64 || (shift == 63 && byte > 1) {
+            return None;
+        }
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+    }
+}
+
+#[inline]
+fn zigzag64(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag64(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+#[inline]
+fn take<'a>(data: &'a [u8], off: &mut usize, len: usize) -> Option<&'a [u8]> {
+    let end = off.checked_add(len)?;
+    let slice = data.get(*off..end)?;
+    *off = end;
+    Some(slice)
+}
+
+/// Read the leading element count of any column without decoding it (all columns open
+/// with a varint `n`) — used by the raw-bytes accounting to size a column's fixed-width
+/// equivalent without a full decode.
+pub fn peek_count(data: &[u8], off: &mut usize) -> Option<usize> {
+    usize::try_from(take_uvarint(data, off)?).ok()
+}
+
+/// Shared element-count preamble of every decoder: parse `n` and validate it against
+/// the caller's cap and the global backstop before anything is allocated.
+fn take_count(data: &[u8], off: &mut usize, cap: usize) -> Option<usize> {
+    let n = peek_count(data, off)?;
+    if n > cap.min(MAX_COLUMN_ELEMS) {
+        return None;
+    }
+    Some(n)
+}
+
+const MODE_FIXED: u8 = 0;
+const MODE_PACKED: u8 = 1;
+
+/// One column encoding: a value type plus a byte-level codec. All methods are
+/// associated functions — columns are stateless; the trait exists so every encoding
+/// exposes the same three-operation surface (`encoded_len` must equal exactly what
+/// `encode` appends, and `decode` must consume exactly that many bytes).
+pub trait Column {
+    type Item;
+
+    /// Exact number of bytes [`Column::encode`] will append for `items`.
+    fn encoded_len(items: &[Self::Item]) -> usize;
+
+    /// Append the column encoding of `items` to `out`.
+    fn encode(items: &[Self::Item], out: &mut Vec<u8>);
+
+    /// Parse one column from `data[*off..]`, advancing the cursor past exactly the
+    /// bytes [`Column::encode`] wrote. `cap` bounds the decoded element count (and
+    /// thus the allocation); malformed, truncated, or oversized input yields `None`
+    /// with no partial allocation of the claimed size.
+    fn decode(data: &[u8], off: &mut usize, cap: usize) -> Option<Vec<Self::Item>>;
+}
+
+/// Raw fixed-width column: varint `n` + `n` little-endian 8-byte words. Byte-identical
+/// to the legacy id-list framing (this is the *only* place the wire stack serializes
+/// an id list as raw words — see the CI lint).
+pub struct Fixed64Col;
+
+impl Column for Fixed64Col {
+    type Item = u64;
+
+    fn encoded_len(items: &[u64]) -> usize {
+        varint_len(items.len() as u64) + 8 * items.len()
+    }
+
+    fn encode(items: &[u64], out: &mut Vec<u8>) {
+        put_uvarint(out, items.len() as u64);
+        for v in items {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn decode(data: &[u8], off: &mut usize, cap: usize) -> Option<Vec<u64>> {
+        let n = take_count(data, off, cap)?;
+        if n > data.len().saturating_sub(*off) / 8 {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(u64::from_le_bytes(take(data, off, 8)?.try_into().ok()?));
+        }
+        Some(out)
+    }
+}
+
+fn fixed_words(data: &[u8], off: &mut usize, n: usize) -> Option<Vec<u64>> {
+    if n > data.len().saturating_sub(*off) / 8 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(u64::from_le_bytes(take(data, off, 8)?.try_into().ok()?));
+    }
+    Some(out)
+}
+
+/// Order-preserving delta column: varint `n`, then (for `n > 0`) a mode byte — raw
+/// words, or zigzag varints of wrapping deltas between consecutive values. The encoder
+/// picks whichever is smaller, so a random signature list costs legacy + 1 byte while
+/// a sorted id sequence collapses to a couple of bytes per id.
+pub struct DeltaU64Col;
+
+impl DeltaU64Col {
+    fn delta_payload_len(items: &[u64]) -> usize {
+        let mut prev = 0u64;
+        let mut len = 0usize;
+        for &v in items {
+            len += varint_len(zigzag64(v.wrapping_sub(prev) as i64));
+            prev = v;
+        }
+        len
+    }
+}
+
+impl Column for DeltaU64Col {
+    type Item = u64;
+
+    fn encoded_len(items: &[u64]) -> usize {
+        if items.is_empty() {
+            return varint_len(0);
+        }
+        let delta = Self::delta_payload_len(items);
+        varint_len(items.len() as u64) + 1 + delta.min(8 * items.len())
+    }
+
+    fn encode(items: &[u64], out: &mut Vec<u8>) {
+        put_uvarint(out, items.len() as u64);
+        if items.is_empty() {
+            return;
+        }
+        if Self::delta_payload_len(items) < 8 * items.len() {
+            out.push(MODE_PACKED);
+            let mut prev = 0u64;
+            for &v in items {
+                put_uvarint(out, zigzag64(v.wrapping_sub(prev) as i64));
+                prev = v;
+            }
+        } else {
+            out.push(MODE_FIXED);
+            for v in items {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+
+    fn decode(data: &[u8], off: &mut usize, cap: usize) -> Option<Vec<u64>> {
+        let n = take_count(data, off, cap)?;
+        if n == 0 {
+            return Some(Vec::new());
+        }
+        match *take(data, off, 1)?.first()? {
+            MODE_FIXED => fixed_words(data, off, n),
+            MODE_PACKED => {
+                // Every delta varint is ≥ 1 byte, so the count is byte-bounded too.
+                if n > data.len().saturating_sub(*off) {
+                    return None;
+                }
+                let mut out = Vec::with_capacity(n);
+                let mut prev = 0u64;
+                for _ in 0..n {
+                    let d = unzigzag64(take_uvarint(data, off)?);
+                    prev = prev.wrapping_add(d as u64);
+                    out.push(prev);
+                }
+                Some(out)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Run-length column for sparse integer sequences: varint `n`, then (for `n > 0`) a
+/// mode byte — raw words, or the run framing described in the module docs. Values are
+/// varint-coded inside runs, so small magnitudes (zigzagged counts, fingerprints) cost
+/// 1–2 bytes and zero runs collapse to ~3 bytes regardless of length; columns of
+/// large random words (occupied IBLT key slots) fall back to raw.
+pub struct RleU64Col;
+
+enum Run<'a> {
+    Repeat { len: usize, value: u64 },
+    Literal(&'a [u64]),
+}
+
+/// Walk `items` as maximal runs: stretches of ≥ 2 identical values become repeat runs,
+/// everything between them pools into literal runs. Encoder and `encoded_len` share
+/// this walk so they cannot disagree.
+fn for_each_run(items: &[u64], mut f: impl FnMut(Run<'_>)) {
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    while i < items.len() {
+        let mut j = i + 1;
+        while j < items.len() && items[j] == items[i] {
+            j += 1;
+        }
+        if j - i >= 2 {
+            if lit_start < i {
+                f(Run::Literal(&items[lit_start..i]));
+            }
+            f(Run::Repeat { len: j - i, value: items[i] });
+            lit_start = j;
+        }
+        i = j;
+    }
+    if lit_start < items.len() {
+        f(Run::Literal(&items[lit_start..]));
+    }
+}
+
+impl RleU64Col {
+    fn rle_payload_len(items: &[u64]) -> usize {
+        let mut len = 0usize;
+        for_each_run(items, |run| match run {
+            Run::Repeat { len: rl, value } => {
+                len += varint_len((rl as u64) << 1) + varint_len(value);
+            }
+            Run::Literal(vals) => {
+                len += varint_len(((vals.len() as u64) << 1) | 1);
+                for &v in vals {
+                    len += varint_len(v);
+                }
+            }
+        });
+        len
+    }
+}
+
+impl Column for RleU64Col {
+    type Item = u64;
+
+    fn encoded_len(items: &[u64]) -> usize {
+        if items.is_empty() {
+            return varint_len(0);
+        }
+        let rle = Self::rle_payload_len(items);
+        varint_len(items.len() as u64) + 1 + rle.min(8 * items.len())
+    }
+
+    fn encode(items: &[u64], out: &mut Vec<u8>) {
+        put_uvarint(out, items.len() as u64);
+        if items.is_empty() {
+            return;
+        }
+        if Self::rle_payload_len(items) < 8 * items.len() {
+            out.push(MODE_PACKED);
+            for_each_run(items, |run| match run {
+                Run::Repeat { len, value } => {
+                    put_uvarint(out, (len as u64) << 1);
+                    put_uvarint(out, value);
+                }
+                Run::Literal(vals) => {
+                    put_uvarint(out, ((vals.len() as u64) << 1) | 1);
+                    for &v in vals {
+                        put_uvarint(out, v);
+                    }
+                }
+            });
+        } else {
+            out.push(MODE_FIXED);
+            for v in items {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+
+    fn decode(data: &[u8], off: &mut usize, cap: usize) -> Option<Vec<u64>> {
+        let n = take_count(data, off, cap)?;
+        if n == 0 {
+            return Some(Vec::new());
+        }
+        match *take(data, off, 1)?.first()? {
+            MODE_FIXED => fixed_words(data, off, n),
+            MODE_PACKED => {
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    let header = take_uvarint(data, off)?;
+                    let len = usize::try_from(header >> 1).ok()?;
+                    // Empty runs are malformed, and no run may overflow the declared
+                    // element count.
+                    if len == 0 || len > n - out.len() {
+                        return None;
+                    }
+                    if header & 1 == 0 {
+                        let value = take_uvarint(data, off)?;
+                        out.resize(out.len() + len, value);
+                    } else {
+                        for _ in 0..len {
+                            out.push(take_uvarint(data, off)?);
+                        }
+                    }
+                }
+                Some(out)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Boolean column: varint `n`, then (for `n > 0`) a mode byte — LSB-first bitpacked
+/// (byte-identical to the legacy answer bitmap), or boolean-RLE: one start-bit byte
+/// plus alternating varint run lengths. An optimally-loaded Bloom filter (fill ≈ 0.5)
+/// stays bitpacked; sparse or skewed bitmaps collapse.
+pub struct BoolRleCol;
+
+impl BoolRleCol {
+    fn rle_payload_len(items: &[bool]) -> usize {
+        let mut len = 1usize; // start-bit byte
+        let mut run = 0u64;
+        let mut current = items[0];
+        for &b in items {
+            if b == current {
+                run += 1;
+            } else {
+                len += varint_len(run);
+                current = b;
+                run = 1;
+            }
+        }
+        len + varint_len(run)
+    }
+}
+
+impl Column for BoolRleCol {
+    type Item = bool;
+
+    fn encoded_len(items: &[bool]) -> usize {
+        if items.is_empty() {
+            return varint_len(0);
+        }
+        let rle = Self::rle_payload_len(items);
+        varint_len(items.len() as u64) + 1 + rle.min(items.len().div_ceil(8))
+    }
+
+    fn encode(items: &[bool], out: &mut Vec<u8>) {
+        put_uvarint(out, items.len() as u64);
+        if items.is_empty() {
+            return;
+        }
+        if Self::rle_payload_len(items) < items.len().div_ceil(8) {
+            out.push(MODE_PACKED);
+            out.push(items[0] as u8);
+            let mut run = 0u64;
+            let mut current = items[0];
+            for &b in items {
+                if b == current {
+                    run += 1;
+                } else {
+                    put_uvarint(out, run);
+                    current = b;
+                    run = 1;
+                }
+            }
+            put_uvarint(out, run);
+        } else {
+            out.push(MODE_FIXED);
+            let mut packed = vec![0u8; items.len().div_ceil(8)];
+            for (i, &b) in items.iter().enumerate() {
+                if b {
+                    packed[i / 8] |= 1 << (i % 8);
+                }
+            }
+            out.extend_from_slice(&packed);
+        }
+    }
+
+    fn decode(data: &[u8], off: &mut usize, cap: usize) -> Option<Vec<bool>> {
+        let n = take_count(data, off, cap)?;
+        if n == 0 {
+            return Some(Vec::new());
+        }
+        match *take(data, off, 1)?.first()? {
+            MODE_FIXED => {
+                let packed = take(data, off, n.div_ceil(8))?;
+                Some((0..n).map(|i| packed[i / 8] >> (i % 8) & 1 == 1).collect())
+            }
+            MODE_PACKED => {
+                let start = *take(data, off, 1)?.first()?;
+                if start > 1 {
+                    return None;
+                }
+                let mut bit = start == 1;
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    let run = usize::try_from(take_uvarint(data, off)?).ok()?;
+                    if run == 0 || run > n - out.len() {
+                        return None;
+                    }
+                    out.resize(out.len() + run, bit);
+                    bit = !bit;
+                }
+                Some(out)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_u64<C: Column<Item = u64>>(items: &[u64]) {
+        let mut buf = Vec::new();
+        C::encode(items, &mut buf);
+        assert_eq!(buf.len(), C::encoded_len(items), "encoded_len must match encode");
+        let mut off = 0;
+        let back = C::decode(&buf, &mut off, MAX_COLUMN_ELEMS).expect("decode");
+        assert_eq!(off, buf.len(), "decode must consume exactly the column");
+        assert_eq!(back, items);
+    }
+
+    fn u64_cases() -> Vec<Vec<u64>> {
+        vec![
+            vec![],
+            vec![0],
+            vec![u64::MAX],
+            vec![7; 500],
+            (0..200u64).map(|i| i * 3 + 1).collect(),
+            (0..100u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)).collect(),
+            vec![0, 0, 0, 5, 5, 1, 0, 0, 9, 9, 9, 9, 2],
+            vec![3, 1, 4, 1, 5, 9, 2, 6],
+        ]
+    }
+
+    #[test]
+    fn all_u64_columns_roundtrip() {
+        for case in u64_cases() {
+            roundtrip_u64::<Fixed64Col>(&case);
+            roundtrip_u64::<DeltaU64Col>(&case);
+            roundtrip_u64::<RleU64Col>(&case);
+        }
+    }
+
+    #[test]
+    fn bool_column_roundtrips() {
+        let cases: Vec<Vec<bool>> = vec![
+            vec![],
+            vec![true],
+            vec![false; 1000],
+            vec![true; 77],
+            (0..256).map(|i| i % 2 == 0).collect(),
+            (0..300).map(|i| i % 97 < 3).collect(),
+        ];
+        for case in cases {
+            let mut buf = Vec::new();
+            BoolRleCol::encode(&case, &mut buf);
+            assert_eq!(buf.len(), BoolRleCol::encoded_len(&case));
+            let mut off = 0;
+            let back = BoolRleCol::decode(&buf, &mut off, MAX_COLUMN_ELEMS).expect("decode");
+            assert_eq!(off, buf.len());
+            assert_eq!(back, case);
+        }
+    }
+
+    #[test]
+    fn fixed64_is_byte_identical_to_legacy_id_list_framing() {
+        let ids = [0x1122_3344_5566_7788u64, 42, u64::MAX];
+        let mut col = Vec::new();
+        Fixed64Col::encode(&ids, &mut col);
+        let mut legacy = Vec::new();
+        put_uvarint(&mut legacy, ids.len() as u64);
+        for id in ids {
+            legacy.extend_from_slice(&id.to_le_bytes());
+        }
+        assert_eq!(col, legacy);
+    }
+
+    #[test]
+    fn adaptive_columns_pick_the_smaller_mode() {
+        // Sorted ids: delta mode must beat raw words by a wide margin.
+        let sorted: Vec<u64> = (0..1000u64).map(|i| 1_000_000 + i * 17).collect();
+        assert!(DeltaU64Col::encoded_len(&sorted) < 8 * sorted.len() / 2);
+        // Random signatures: cost is capped at legacy + 1 mode byte.
+        let random: Vec<u64> =
+            (0..1000u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ (i << 40)).collect();
+        assert_eq!(DeltaU64Col::encoded_len(&random), Fixed64Col::encoded_len(&random) + 1);
+        // Mostly-zero counts: RLE collapses.
+        let mut sparse = vec![0u64; 4096];
+        sparse[17] = 3;
+        sparse[900] = 1;
+        assert!(RleU64Col::encoded_len(&sparse) < 64);
+        // Half-full bitmap: bitpacked + 1 mode byte, never 1-byte-per-bit RLE.
+        let noisy: Vec<bool> = (0..4096).map(|i| (i * 2_654_435_761u64 as usize) & 8 != 0).collect();
+        assert!(BoolRleCol::encoded_len(&noisy) <= varint_len(4096) + 1 + 4096 / 8);
+    }
+
+    #[test]
+    fn varint_rejects_overlong_and_truncated() {
+        // 11-byte varint: ten continuation bytes then a terminator.
+        let overlong = [0x80u8, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x01];
+        let mut off = 0;
+        assert!(take_uvarint(&overlong, &mut off).is_none());
+        // A 10-byte varint whose last byte overflows bit 63 is also malformed.
+        let overflow = [0xffu8, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x02];
+        let mut off = 0;
+        assert!(take_uvarint(&overflow, &mut off).is_none());
+        // ... while u64::MAX itself roundtrips.
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, u64::MAX);
+        let mut off = 0;
+        assert_eq!(take_uvarint(&buf, &mut off), Some(u64::MAX));
+        assert_eq!(off, buf.len());
+        // Truncated continuation.
+        let mut off = 0;
+        assert!(take_uvarint(&[0x80], &mut off).is_none());
+        let mut off = 0;
+        assert!(take_uvarint(&[], &mut off).is_none());
+    }
+
+    #[test]
+    fn decoded_length_cap_rejects_before_allocation() {
+        // A 4-byte column claiming 2^30 elements must die on the cap check, for every
+        // column type — including a run-length column whose payload could legally be
+        // tiny.
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 1u64 << 30);
+        buf.push(MODE_PACKED);
+        put_uvarint(&mut buf, (1u64 << 30) << 1); // one giant zero run
+        put_uvarint(&mut buf, 0);
+        let mut off = 0;
+        assert!(RleU64Col::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+        let mut off = 0;
+        assert!(Fixed64Col::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+        let mut off = 0;
+        assert!(DeltaU64Col::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+        let mut off = 0;
+        assert!(BoolRleCol::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+        // The caller's cap binds even under the global backstop.
+        let small = [5u64, 6, 7, 8];
+        let mut col = Vec::new();
+        RleU64Col::encode(&small, &mut col);
+        let mut off = 0;
+        assert!(RleU64Col::decode(&col, &mut off, 3).is_none());
+        let mut off = 0;
+        assert_eq!(RleU64Col::decode(&col, &mut off, 4).as_deref(), Some(&small[..]));
+    }
+
+    #[test]
+    fn run_length_overflow_and_truncation_rejected() {
+        // Declared n = 4 but a run claims 5 elements.
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 4);
+        buf.push(MODE_PACKED);
+        put_uvarint(&mut buf, 5 << 1);
+        put_uvarint(&mut buf, 0);
+        let mut off = 0;
+        assert!(RleU64Col::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+        // Zero-length runs are malformed, not an infinite loop.
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 4);
+        buf.push(MODE_PACKED);
+        put_uvarint(&mut buf, 0);
+        put_uvarint(&mut buf, 9);
+        let mut off = 0;
+        assert!(RleU64Col::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+        // Truncated run header / payload at every byte boundary.
+        let items = [0u64, 0, 0, 0, 7, 7, 7, 1, 2, 3];
+        let mut col = Vec::new();
+        RleU64Col::encode(&items, &mut col);
+        for cut in 0..col.len() {
+            let mut off = 0;
+            assert!(
+                RleU64Col::decode(&col[..cut], &mut off, MAX_COLUMN_ELEMS).is_none(),
+                "cut {cut}"
+            );
+        }
+        // Same for the boolean runs: overflow, truncation, and a bad start byte.
+        let bits = [true, true, true, false, false, true, false, false, false, false];
+        let mut col = Vec::new();
+        BoolRleCol::encode(&bits, &mut col);
+        for cut in 0..col.len() {
+            let mut off = 0;
+            assert!(
+                BoolRleCol::decode(&col[..cut], &mut off, MAX_COLUMN_ELEMS).is_none(),
+                "cut {cut}"
+            );
+        }
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 3);
+        buf.push(MODE_PACKED);
+        buf.push(2); // start bit must be 0 or 1
+        put_uvarint(&mut buf, 3);
+        let mut off = 0;
+        assert!(BoolRleCol::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+    }
+
+    #[test]
+    fn unknown_mode_bytes_rejected() {
+        for mode in [2u8, 0x7f, 0xff] {
+            let mut buf = Vec::new();
+            put_uvarint(&mut buf, 2);
+            buf.push(mode);
+            buf.extend_from_slice(&[0u8; 16]);
+            let mut off = 0;
+            assert!(DeltaU64Col::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+            let mut off = 0;
+            assert!(RleU64Col::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+            let mut off = 0;
+            assert!(BoolRleCol::decode(&buf, &mut off, MAX_COLUMN_ELEMS).is_none());
+        }
+    }
+
+    #[test]
+    fn columns_concatenate_and_leave_trailing_bytes_alone() {
+        let ids: Vec<u64> = (0..50u64).map(|i| i * 11).collect();
+        let bits: Vec<bool> = (0..50).map(|i| i % 7 == 0).collect();
+        let mut buf = Vec::new();
+        DeltaU64Col::encode(&ids, &mut buf);
+        BoolRleCol::encode(&bits, &mut buf);
+        buf.push(0xEE); // caller's trailing byte, not ours
+        let mut off = 0;
+        assert_eq!(DeltaU64Col::decode(&buf, &mut off, 64).as_deref(), Some(&ids[..]));
+        assert_eq!(BoolRleCol::decode(&buf, &mut off, 64).as_deref(), Some(&bits[..]));
+        assert_eq!(off, buf.len() - 1);
+    }
+}

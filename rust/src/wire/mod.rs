@@ -1,0 +1,8 @@
+//! Shared wire-level building blocks, independent of any one protocol frame.
+//!
+//! Today this hosts [`column`], the columnar codec layer every frame encoder in
+//! [`crate::protocol::wire`] routes through. Frame *layout* (type bytes, body length
+//! prefixes, field order) stays with the protocol; this layer owns only the byte-level
+//! encodings of repeated values — id sequences, count vectors, bitmaps.
+
+pub mod column;

@@ -109,20 +109,33 @@ fn prop_wire_fuzz_no_panic() {
         inquiry: vec![42, 43],
         answers: vec![true, false, true],
         done: false,
+        codec: false,
     }
     .to_bytes();
-    for _ in 0..2_000 {
-        let mut frame = real.clone();
-        let cut = rng.gen_range(frame.len() as u64 + 1) as usize;
-        frame.truncate(cut);
-        for _ in 0..rng.gen_range(8) {
-            if frame.is_empty() {
-                break;
+    // Codec-on sibling frame (columnar round type byte) — fuzz both corpora.
+    let real_c = Msg::Round {
+        residue: compress_residue(&[1, -2, 0, 3]),
+        smf: Some(vec![9; 33]),
+        inquiry: vec![42, 43],
+        answers: vec![true, false, true],
+        done: false,
+        codec: true,
+    }
+    .to_bytes();
+    for corpus in [&real, &real_c] {
+        for _ in 0..2_000 {
+            let mut frame = corpus.clone();
+            let cut = rng.gen_range(frame.len() as u64 + 1) as usize;
+            frame.truncate(cut);
+            for _ in 0..rng.gen_range(8) {
+                if frame.is_empty() {
+                    break;
+                }
+                let pos = rng.gen_range(frame.len() as u64) as usize;
+                frame[pos] ^= rng.next_u64() as u8;
             }
-            let pos = rng.gen_range(frame.len() as u64) as usize;
-            frame[pos] ^= rng.next_u64() as u8;
+            let _ = Msg::from_bytes(&frame); // must not panic
         }
-        let _ = Msg::from_bytes(&frame); // must not panic
     }
     // Pure garbage too.
     for _ in 0..2_000 {

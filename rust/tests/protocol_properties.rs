@@ -147,9 +147,18 @@ fn prop_session_frame_order_is_enforced() {
     use commonsense::protocol::wire::Msg;
 
     let set: Vec<u64> = (0..100).collect();
-    let round =
-        Msg::Round { residue: vec![], smf: None, inquiry: vec![], answers: vec![], done: false };
-    let sketch = Msg::Sketch(SketchMsg { n: 4, table: vec![], payload: vec![], syndromes: vec![] });
+    let round = Msg::Round {
+        residue: vec![],
+        smf: None,
+        inquiry: vec![],
+        answers: vec![],
+        done: false,
+        codec: false,
+    };
+    let sketch = Msg::Sketch {
+        sketch: SketchMsg { n: 4, table: vec![], payload: vec![], syndromes: vec![] },
+        codec: false,
+    };
     let hello = Msg::Hello {
         l: 256,
         m: 5,
@@ -158,6 +167,7 @@ fn prop_session_frame_order_is_enforced() {
         est_initiator_unique: 4,
         est_responder_unique: 4,
         set_len: 100,
+        namespace: 0,
     };
 
     // Round or Sketch before Hello: rejected.

@@ -68,6 +68,49 @@ fn one_builder_config_drives_all_three_transports() {
     assert!(mem_a.phase_sent(Phase::Handshake) > 0);
 }
 
+/// **Acceptance (codec negotiate-down)**: a codec-off endpoint completes against a
+/// codec-on peer — the handshake turns the columnar codec off for the connection, every
+/// frame is byte-identical to the pre-codec format (raw == sent on both transcripts),
+/// and the answers match a codec-on/codec-on run of the same sets.
+#[test]
+fn mixed_codec_endpoints_negotiate_down_and_complete() {
+    let (a, b) = synth::overlap_pair(6_000, 60, 80, 0x0dec);
+    let on = |set: &[u64]| Setx::builder(set).seed(0xFACADE).build().unwrap();
+    let off = |set: &[u64]| Setx::builder(set).seed(0xFACADE).codec(false).build().unwrap();
+
+    // codec-on ↔ codec-on: the reference answers, with real savings.
+    let (ra, rb) = on(&a).run_pair(&on(&b)).unwrap();
+    assert_eq!(ra.local_unique, synth::difference(&a, &b));
+    assert!(ra.total_bytes() < ra.total_raw_bytes(), "codec-on session must save bytes");
+    assert!(ra.compression_ratio() < 1.0);
+
+    // Both-off: the pre-codec reference wire (raw == sent on every frame).
+    let (fa, _) = off(&a).run_pair(&off(&b)).unwrap();
+    assert_eq!(fa.total_raw_bytes(), fa.total_bytes());
+    assert_eq!(fa.intersection, ra.intersection);
+    // The codec-on/codec-on raw accounting reproduces the codec-off wire exactly.
+    assert_eq!(ra.total_raw_bytes(), fa.total_bytes());
+
+    // Mixed, both orientations: negotiate down, identical answers. Every post-handshake
+    // frame is byte-identical to the codec-off format; only the codec-on side's one
+    // EstHello still carries its (smaller) columnar strata blob, so the raw accounting
+    // reproduces the both-off wire exactly while the measured bytes come in under it.
+    for (alice, bob) in [(on(&a), off(&b)), (off(&a), on(&b))] {
+        let (ma, mb) = alice.run_pair(&bob).unwrap();
+        assert_eq!(ma.intersection, ra.intersection);
+        assert_eq!(ma.local_unique, ra.local_unique);
+        assert_eq!(mb.local_unique, rb.local_unique);
+        assert_eq!(ma.total_bytes(), mb.total_bytes(), "both ends log one conversation");
+        assert_eq!(ma.total_raw_bytes(), fa.total_bytes(), "mixed raw == both-off wire");
+        assert!(
+            ma.total_bytes() < fa.total_bytes(),
+            "the codec-on hello's columnar strata still shrink a mixed handshake"
+        );
+        // But the body of the conversation negotiated down: far less saved than on/on.
+        assert!(fa.total_bytes() - ma.total_bytes() < ra.total_raw_bytes() - ra.total_bytes());
+    }
+}
+
 /// **Satellite (wire-accounting truth)**: bytes observed on the socket — counted by the
 /// transport, below the protocol — equal the endpoint's own `CommLog` totals, on both
 /// peers, across workload shapes.
