@@ -45,7 +45,14 @@ fn main() {
              bytes_per_party={bytes_per_party} codec=on raw={raw} enc={enc} ratio={ratio:.4}"
         );
         println!("bench {name:<84} {:>10.1?} / round", total / iters);
-        results.push(BenchResult { name, mean: total / iters, min, iters: iters as u64 });
+        results.push(BenchResult {
+            name,
+            mean: total / iters,
+            min,
+            p50: total / iters,
+            p99: total / iters,
+            iters: iters as u64,
+        });
 
         // Codec-off ablation: same sets, columnar framing disabled on every endpoint.
         // Its wire total must equal the codec-on run's raw-bytes column exactly.
@@ -65,7 +72,7 @@ fn main() {
             off.total_bytes() / (parties - 1)
         );
         println!("bench {name:<84} {:>10.1?} / round", dt);
-        results.push(BenchResult { name, mean: dt, min: dt, iters: 1 });
+        results.push(BenchResult { name, mean: dt, min: dt, p50: dt, p99: dt, iters: 1 });
     }
     if profile.json {
         metrics::append_bench_json(

@@ -20,11 +20,19 @@
 //! intersection is verified in all rows — a throughput number from wrong answers would
 //! be worthless.
 //!
+//! The `session_latency` rows are the observability column: client-observed per-session
+//! wall-time tails (p50/p99 off the loadgen's [`LogHistogram`]) at clients = {64, 256},
+//! plus a `tracing=off` ablation at the same shape — every endpoint built with the span
+//! timeline disabled — so the on/off pair bounds the instrumentation overhead (<2%).
+//!
 //! `cargo bench --bench server_throughput -- [--json] [--smoke]` — `--json` appends one
 //! record per configuration to the repo-root `BENCH_server.json` trajectory
 //! ([`commonsense::metrics::BENCH_SERVER_JSON`]): `mean_ns`/`min_ns` are wall-clock per
-//! session (the inverse of sessions/sec; concurrency included), `iters` the sessions
-//! completed.
+//! session (the inverse of sessions/sec; concurrency included), `p50_ns`/`p99_ns` the
+//! client-observed per-session latency tails (concurrency NOT divided out), `iters` the
+//! sessions completed.
+//!
+//! [`LogHistogram`]: commonsense::obs::hist::LogHistogram
 
 use commonsense::metrics::{append_bench_json, BenchProfile, BenchResult, BENCH_SERVER_JSON};
 use commonsense::server::loadgen::{self, LoadgenConfig};
@@ -132,7 +140,14 @@ fn run_config(
         stats.sketch_store_hit_rate(),
         stats.peak_workers
     );
-    BenchResult { name, mean: per_session, min: per_session, iters: sessions as u64 }
+    BenchResult {
+        name,
+        mean: per_session,
+        min: per_session,
+        p50: Duration::from_nanos(report.p50_ns()),
+        p99: Duration::from_nanos(report.p99_ns()),
+        iters: sessions as u64,
+    }
 }
 
 /// The churn row: the fleet syncs while a control thread hot-swaps tenant 0's host set
@@ -186,7 +201,67 @@ fn run_churn(common: usize, clients: usize, workers: usize) -> BenchResult {
         stats.sketch_store.incremental_updates,
         stats.sketch_store.full_rebuilds
     );
-    BenchResult { name, mean: per_session, min: per_session, iters: sessions as u64 }
+    BenchResult {
+        name,
+        mean: per_session,
+        min: per_session,
+        p50: Duration::from_nanos(report.p50_ns()),
+        p99: Duration::from_nanos(report.p99_ns()),
+        iters: sessions as u64,
+    }
+}
+
+/// The observability rows: per-session latency tails over a three-tenant fleet, with
+/// the span timeline on (default) or off on every endpoint. Headline numbers are the
+/// histogram tails, not sessions/sec — mean/min still record wall-clock per session so
+/// the trajectory schema stays uniform.
+fn run_latency(common: usize, clients: usize, workers: usize, tracing: bool) -> BenchResult {
+    let cfg = LoadgenConfig {
+        clients,
+        rounds: 1,
+        common,
+        tenants: 3,
+        tracing,
+        ..LoadgenConfig::default()
+    };
+    let (hosts, _, _) = cfg.tenant_workload();
+    let endpoint = cfg.endpoint(&hosts[0]).expect("loadgen config is always valid");
+    let server = SetxServer::builder(endpoint)
+        .workers(workers)
+        .max_inflight_sessions(2 * clients + 8)
+        .bind("127.0.0.1:0")
+        .expect("bind ephemeral loopback listener");
+    for (ns, host) in hosts.iter().enumerate().skip(1) {
+        assert!(server.add_tenant(ns as u32, host.clone()), "duplicate tenant {ns}");
+    }
+    let t0 = Instant::now();
+    let report = loadgen::run(server.local_addr(), &cfg);
+    let elapsed = t0.elapsed();
+    server.shutdown();
+    assert!(
+        report.verified(),
+        "latency of wrong answers is meaningless: {:?}",
+        report.failures.iter().take(5).collect::<Vec<_>>()
+    );
+    let sessions = report.sessions_ok.max(1);
+    let name = format!(
+        "session_latency clients={clients} workers={workers} tracing={}",
+        if tracing { "on" } else { "off" }
+    );
+    println!(
+        "bench {name:<84} p50={:?} p95={:?} p99={:?} over {sessions} sessions",
+        Duration::from_nanos(report.p50_ns()),
+        Duration::from_nanos(report.p95_ns()),
+        Duration::from_nanos(report.p99_ns())
+    );
+    BenchResult {
+        name,
+        mean: elapsed / sessions as u32,
+        min: elapsed / sessions as u32,
+        p50: Duration::from_nanos(report.p50_ns()),
+        p99: Duration::from_nanos(report.p99_ns()),
+        iters: sessions as u64,
+    }
 }
 
 fn main() {
@@ -234,6 +309,13 @@ fn main() {
             ));
         }
     }
+    // Observability column: session-latency tails at clients = {64, 256}, then the
+    // tracing-off ablation at clients = 64 — the on/off pair bounds the span-timeline
+    // overhead (budgeted < 2%, well inside fleet noise at this shape).
+    for clients in [64usize, 256] {
+        results.push(run_latency(scale_common, clients.min(client_cap), WORKERS, true));
+    }
+    results.push(run_latency(scale_common, 64.min(client_cap), WORKERS, false));
     // Churn-under-load: replace_set every ~2ms while the fleet runs.
     results.push(run_churn(if profile.smoke { 2_000 } else { 20_000 }, 8, WORKERS));
     if profile.json {

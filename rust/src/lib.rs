@@ -207,6 +207,59 @@
 //!   `sketch_encode[_par] n=100000` serial/threads={1,4} (serial baselines vs parallel),
 //!   plus `sketch_store_hit` vs `sketch_store_miss`. See [`metrics::append_bench_json`].
 //!
+//! ## Observability
+//!
+//! The byte ledger above answers *how much*; the [`obs`] layer answers *where the time
+//! went* — zero dependencies, zero wire impact, injectable clocks so the sans-io layers
+//! stay deterministic under test (CI lints `rust/src/protocol` + `rust/src/setx` for
+//! raw `Instant::now()`):
+//!
+//! * **Session traces** — every session records a timestamped [`obs::SessionTrace`]
+//!   timeline, returned on [`setx::SetxReport::trace`] and folded into per-phase wall
+//!   times by [`setx::SetxReport::phase_durations`]:
+//!
+//!   ```text
+//!   Handshake  ├────────────┤                         (EstHello ⇄, negotiate)
+//!   Estimate     ├───┤                                (strata/minhash build + d̂)
+//!   Attempt(0)              ├──────────────┤          (one span per ladder rung)
+//!     SketchEncode            ├──┤
+//!     DecoderBuild                 ├──┤
+//!     Round                    ·  ·   ·  ·            (one marker per payload frame)
+//!     Confirm                              ··         (verdict frames)
+//!   ```
+//!
+//!   `Attempt` spans equal `report.attempts` and `Round` markers equal `report.rounds`
+//!   by construction (property-tested in `rust/tests/trace_properties.rs`);
+//!   `Setx::builder(…).tracing(false)` turns recording off entirely (the bench
+//!   ablation; the knob is local, not fingerprinted, so mixed peers interop).
+//! * **Latency histograms** — [`obs::LogHistogram`] (64 power-of-two buckets,
+//!   mergeable, `quantile(q)`) backs `loadgen`'s p50/p95/p99, `BenchResult` tails, and
+//!   the server's per-tenant latency shards, which merge exactly to the global
+//!   histogram (the same shard-sum invariant as the byte counters).
+//! * **Live exposition** — [`server::ServerBuilder::metrics_addr`] serves
+//!   [`server::ServerStats::to_prometheus`] over a minimal HTTP/1.0 responder on its
+//!   own named thread (`curl http://…/metrics`). Metric naming:
+//!
+//!   | metric | type | labels |
+//!   |---|---|---|
+//!   | `setx_sessions_{accepted,served,failed,rejected}` | counter | global |
+//!   | `setx_tenant_sessions_{accepted,served,failed,rejected}` | counter | `tenant` |
+//!   | `setx_bytes_total{phase=…}` / `setx_raw_bytes_total` | counter | global |
+//!   | `setx_inflight_sessions` | gauge | global |
+//!   | `setx_session_latency_ns` | histogram | global |
+//!   | `setx_tenant_session_latency_ns` | histogram | `tenant` |
+//!
+//!   Sessions slower than [`server::ServerBuilder::slow_session_threshold`] dump their
+//!   full trace to stderr, e.g.:
+//!
+//!   ```text
+//!   [slow-session] sid=17 tenant=2 elapsed=312ms
+//!     +        0us open  Handshake
+//!     +      411us close Handshake
+//!     +      430us open  Attempt(0)
+//!     …
+//!   ```
+//!
 //! ## Wire format & compression
 //!
 //! Every frame is `type:u8 | body_len:varint | body`, parsed with checked offsets and a
@@ -246,6 +299,7 @@ pub mod experiments;
 pub mod hash;
 pub mod matrix;
 pub mod metrics;
+pub mod obs;
 pub mod protocol;
 pub mod runtime;
 pub mod server;

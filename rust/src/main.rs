@@ -28,10 +28,14 @@ USAGE:
                     [--no-pool] [--store-capacity C] [--no-store] [--sessions K]
                     [--tenants T] [--common N] [--client-unique X]
                     [--server-unique Y] [--seed S] [--estimate-d]
+                    [--metrics-addr ADDR] [--slow-ms MS]
                                              (multi-tenant daemon: keeps T host sets
                                               (namespaces 0..T) online until killed, or
                                               until K sessions when --sessions is given;
-                                              final stats as one JSON line)
+                                              final stats as one JSON line. --metrics-addr
+                                              serves live Prometheus text on a side
+                                              socket; --slow-ms dumps the session trace
+                                              of anything slower to stderr)
   commonsense loadgen [--addr ADDR] [--clients N] [--rounds R] [--tenants T] [--common N]
                       [--client-unique X] [--server-unique Y] [--seed S]
                       [--busy-retries K] [--estimate-d]
@@ -185,6 +189,7 @@ fn fleet_config(args: &Args) -> LoadgenConfig {
         busy_retries: args.get("busy-retries", 3),
         estimate_diff: args.has("estimate-d"),
         tenants: args.get("tenants", 1).max(1),
+        tracing: true,
     }
 }
 
@@ -302,6 +307,13 @@ fn main() -> anyhow::Result<()> {
                 .max_inflight_sessions(args.get("max-inflight", 64))
                 .pool_capacity(pool_capacity)
                 .sketch_store_capacity(store_capacity);
+            if args.has("metrics-addr") {
+                builder = builder.metrics_addr(args.str("metrics-addr", "127.0.0.1:0"));
+            }
+            if args.has("slow-ms") {
+                let slow = std::time::Duration::from_millis(args.get("slow-ms", 1_000) as u64);
+                builder = builder.slow_session_threshold(slow);
+            }
             // Tenant 0 is the builder endpoint's set; the rest ride along by namespace.
             for (ns, host) in hosts.iter().enumerate().skip(1) {
                 builder = builder.tenant(ns as u32, host.clone());
@@ -321,6 +333,9 @@ fn main() -> anyhow::Result<()> {
                     format!("until {sessions} sessions")
                 }
             );
+            if let Some(maddr) = server.metrics_addr() {
+                println!("metrics: http://{maddr}/metrics (Prometheus text)");
+            }
             let mut last_done = 0u64;
             loop {
                 std::thread::sleep(std::time::Duration::from_millis(200));
@@ -363,6 +378,14 @@ fn main() -> anyhow::Result<()> {
                 report.total_bytes,
                 report.sessions_per_sec(),
                 report.verified()
+            );
+            println!(
+                "loadgen: session latency p50 = {:.3} ms, p95 = {:.3} ms, p99 = {:.3} ms \
+                 over {} timed sessions",
+                report.p50_ns() as f64 / 1e6,
+                report.p95_ns() as f64 / 1e6,
+                report.p99_ns() as f64 / 1e6,
+                report.latency.count()
             );
             for failure in &report.failures {
                 eprintln!("loadgen failure: {failure}");

@@ -170,6 +170,12 @@ impl Stats {
         }
     }
 
+    /// **Population** standard deviation: √(E[v²] − E[v]²) with divisor `n`, not the
+    /// sample estimator's `n − 1`. Experiment tables report the spread of the runs that
+    /// actually happened rather than inferring a wider population, so repeated pushes of
+    /// the same value always give 0. Returns `0.0` (never NaN) for fewer than two
+    /// samples, and the inner `max(0.0)` absorbs the tiny negative residue the two-pass
+    /// formula can leave behind under floating-point cancellation.
     pub fn stddev(&self) -> f64 {
         if self.n < 2 {
             return 0.0;
@@ -203,7 +209,8 @@ impl Bench {
         self
     }
 
-    /// Run `f` repeatedly; returns (mean, min, iters) and prints a criterion-like line.
+    /// Run `f` repeatedly; returns mean/min/p50/p99 over the timed iterations and
+    /// prints a criterion-like line.
     pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
         // Warmup.
         let start = Instant::now();
@@ -225,11 +232,20 @@ impl Bench {
         }
         let total: Duration = times.iter().sum();
         let mean = total / times.len() as u32;
-        let min = *times.iter().min().unwrap();
-        let result = BenchResult { name: self.name.clone(), mean, min, iters: times.len() as u64 };
+        times.sort_unstable();
+        // Nearest-rank quantile over the sorted per-iteration times.
+        let quantile = |q: f64| times[((times.len() - 1) as f64 * q).round() as usize];
+        let result = BenchResult {
+            name: self.name.clone(),
+            mean,
+            min: times[0],
+            p50: quantile(0.5),
+            p99: quantile(0.99),
+            iters: times.len() as u64,
+        };
         println!(
-            "bench {:<48} mean {:>12?} min {:>12?} iters {} (warmup {})",
-            result.name, result.mean, result.min, result.iters, warm_iters
+            "bench {:<48} mean {:>12?} min {:>12?} p50 {:>12?} p99 {:>12?} iters {} (warmup {})",
+            result.name, result.mean, result.min, result.p50, result.p99, result.iters, warm_iters
         );
         result
     }
@@ -240,19 +256,26 @@ pub struct BenchResult {
     pub name: String,
     pub mean: Duration,
     pub min: Duration,
+    /// Median measured iteration time (nearest rank on the sorted samples).
+    pub p50: Duration,
+    /// 99th-percentile measured iteration time (nearest rank on the sorted samples).
+    pub p99: Duration,
     pub iters: u64,
 }
 
 impl BenchResult {
-    /// One flat JSON record: `name`, `mean_ns`, `min_ns`, `iters`, the run's config
-    /// fingerprint, and a unix timestamp — the schema of the `BENCH_*.json` trajectory.
+    /// One flat JSON record: `name`, `mean_ns`, `min_ns`, `p50_ns`, `p99_ns`, `iters`,
+    /// the run's config fingerprint, and a unix timestamp — the schema of the
+    /// `BENCH_*.json` trajectory.
     pub fn to_json(&self, config_fingerprint: u64, unix_time_s: u64) -> String {
         format!(
-            "{{\"name\":\"{}\",\"mean_ns\":{},\"min_ns\":{},\"iters\":{},\
-             \"config_fingerprint\":\"{:#018x}\",\"unix_time_s\":{}}}",
+            "{{\"name\":\"{}\",\"mean_ns\":{},\"min_ns\":{},\"p50_ns\":{},\"p99_ns\":{},\
+             \"iters\":{},\"config_fingerprint\":\"{:#018x}\",\"unix_time_s\":{}}}",
             json_escape(&self.name),
             self.mean.as_nanos(),
             self.min.as_nanos(),
+            self.p50.as_nanos(),
+            self.p99.as_nanos(),
             self.iters,
             config_fingerprint,
             unix_time_s
@@ -437,10 +460,36 @@ mod tests {
     }
 
     #[test]
+    fn stddev_is_population_not_sample_and_never_nan() {
+        // For [1, 2, 3, 4]: population variance = 1.25 (divisor n = 4); the sample
+        // estimator would give 5/3 (divisor n − 1 = 3). Pin the population formula.
+        let mut s = Stats::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.push(v);
+        }
+        assert!((s.stddev() - 1.25f64.sqrt()).abs() < 1e-12);
+        assert!((s.stddev() - (5.0f64 / 3.0).sqrt()).abs() > 0.1, "sample formula crept in");
+        // Degenerate inputs: n = 0 and n = 1 are defined as 0.0, never NaN.
+        assert_eq!(Stats::new().stddev(), 0.0);
+        let mut one = Stats::new();
+        one.push(42.0);
+        assert_eq!(one.stddev(), 0.0);
+        // Repeated identical values: exactly zero spread, no NaN from cancellation.
+        let mut same = Stats::new();
+        for _ in 0..1000 {
+            same.push(0.1);
+        }
+        assert!(same.stddev().is_finite());
+        assert!(same.stddev() < 1e-6);
+    }
+
+    #[test]
     fn bench_runs_quickly_in_tests() {
         let b = Bench::new("noop").with_times(1, 5);
         let r = b.run(|| 1 + 1);
         assert!(r.iters >= 5);
+        // Quantiles come off the sorted samples, so ordering is structural.
+        assert!(r.min <= r.p50 && r.p50 <= r.p99);
     }
 
     #[test]
@@ -449,6 +498,8 @@ mod tests {
             name: "mp_build n=100000 d=1000 threads=4".to_string(),
             mean: Duration::from_nanos(1234),
             min: Duration::from_nanos(1200),
+            p50: Duration::from_nanos(1230),
+            p99: Duration::from_nanos(1500),
             iters: 42,
         };
         let json = r.to_json(0xabcd, 1700000000);
@@ -456,6 +507,8 @@ mod tests {
         assert!(json.contains("\"name\":\"mp_build n=100000 d=1000 threads=4\""));
         assert!(json.contains("\"mean_ns\":1234"));
         assert!(json.contains("\"min_ns\":1200"));
+        assert!(json.contains("\"p50_ns\":1230"));
+        assert!(json.contains("\"p99_ns\":1500"));
         assert!(json.contains("\"iters\":42"));
         assert!(json.contains("\"config_fingerprint\":\"0x000000000000abcd\""));
         // Escaping keeps hostile names inside the string literal.
@@ -463,6 +516,8 @@ mod tests {
             name: "a\"b\\c\nd".to_string(),
             mean: Duration::ZERO,
             min: Duration::ZERO,
+            p50: Duration::ZERO,
+            p99: Duration::ZERO,
             iters: 1,
         };
         assert!(hostile.to_json(1, 1).contains("a\\\"b\\\\c\\u000ad"));
@@ -480,6 +535,8 @@ mod tests {
             name: name.to_string(),
             mean: Duration::from_nanos(10),
             min: Duration::from_nanos(9),
+            p50: Duration::from_nanos(10),
+            p99: Duration::from_nanos(12),
             iters: 5,
         };
         append_bench_json(&path, &[mk("one"), mk("two")], 7).unwrap();

@@ -1,0 +1,248 @@
+//! [`LogHistogram`]: a fixed-size, mergeable, power-of-two-bucket latency histogram.
+//!
+//! Sixty-four buckets cover the whole `u64` range — bucket `i` holds values in
+//! `[2^i, 2^(i+1) - 1]` (with 0 folded into bucket 0) — so recording is one
+//! `leading_zeros` plus an increment, and two histograms merge by adding bucket
+//! counts. That makes the type safe to keep per shard (per tenant, per thread) and sum
+//! at snapshot time, exactly like the server's byte counters: the shard-sum invariant
+//! extends to histograms because merge is associative and commutative, and
+//! `merge(a, b)` equals recording the concatenation of both push streams (property
+//! test below).
+//!
+//! Quantiles are read from the bucket boundaries: `quantile(q)` returns the *upper*
+//! bound of the bucket holding the q-th ranked sample, i.e. a conservative estimate
+//! that is never more than 2× the true value. For latency reporting (p50/p95/p99 of
+//! session wall time in nanoseconds) that resolution matches the noise floor of any
+//! real deployment.
+//!
+//! [`AtomicHistogram`] is the lock-free shard the server's poller threads update
+//! concurrently; `snapshot()` materializes it as a plain [`LogHistogram`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets (covers the full `u64` range).
+pub const BUCKETS: usize = 64;
+
+/// Fixed-size power-of-two-bucket histogram. `Copy` on purpose: at 528 bytes it rides
+/// inside snapshot structs ([`crate::server::TenantStats`]) without heap traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    /// Saturating sum of every recorded value (the Prometheus `_sum` series).
+    sum: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: [0; BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+/// Bucket index for a value: `floor(log2(max(v, 1)))`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    63 - (v | 1).leading_zeros() as usize
+}
+
+/// Inclusive upper bound of bucket `idx` (`2^(idx+1) - 1`, saturating at `u64::MAX`).
+#[inline]
+pub fn bucket_upper(idx: usize) -> u64 {
+    if idx >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (2u64 << idx) - 1
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Fold another histogram into this one. Equivalent to having recorded both push
+    /// streams into a single histogram (in any order).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Saturating sum of every recorded value.
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Upper bound of the bucket holding the q-th ranked sample (`q` clamped to
+    /// `[0, 1]`). Returns 0 for an empty histogram — never NaN, never a panic.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_upper(idx);
+            }
+        }
+        u64::MAX
+    }
+
+    /// `(inclusive upper bound, count)` per non-empty bucket, ascending — the
+    /// Prometheus `_bucket` series before cumulation.
+    pub fn buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(idx, &c)| (bucket_upper(idx), c))
+    }
+}
+
+/// Lock-free histogram shard: the concurrent sibling of [`LogHistogram`], updated by
+/// the server's poller threads with relaxed atomics and snapshotted for exposition.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicHistogram {
+    /// Record one sample (relaxed ordering — counters, not synchronization).
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Materialize the current counts as a plain histogram.
+    pub fn snapshot(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for (i, c) in self.counts.iter().enumerate() {
+            h.counts[i] = c.load(Ordering::Relaxed);
+        }
+        h.count = self.count.load(Ordering::Relaxed);
+        h.sum = self.sum.load(Ordering::Relaxed);
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Xoshiro256;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(u64::MAX), 63);
+        assert_eq!(bucket_upper(0), 1);
+        assert_eq!(bucket_upper(1), 3);
+        assert_eq!(bucket_upper(62), (2u64 << 62) - 1);
+        assert_eq!(bucket_upper(63), u64::MAX);
+        // Every value lands in a bucket whose bounds contain it.
+        for v in [0u64, 1, 2, 5, 1023, 1024, 1 << 40, u64::MAX] {
+            let idx = bucket_index(v);
+            assert!(v <= bucket_upper(idx));
+            if idx > 0 {
+                assert!(v > bucket_upper(idx - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_are_conservative_and_never_nan() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram quantile is the 0 sentinel");
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum(), 500_500);
+        // The true p50 is 500; the bucket upper bound 511 is within 2×.
+        let p50 = h.quantile(0.5);
+        assert!((500..=1023).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((990..=1023).contains(&p99), "p99={p99}");
+        // Degenerate q values clamp instead of panicking.
+        assert_eq!(h.quantile(-1.0), 1);
+        assert_eq!(h.quantile(2.0), h.quantile(1.0));
+    }
+
+    /// The property the shard-sum invariant rests on: merging two histograms is
+    /// indistinguishable from recording the concatenation of both push streams.
+    #[test]
+    fn merge_equals_concatenated_pushes() {
+        let mut rng = Xoshiro256::seed_from_u64(0x0b5_4157);
+        for round in 0..50 {
+            let mut a = LogHistogram::new();
+            let mut b = LogHistogram::new();
+            let mut concat = LogHistogram::new();
+            let n = (rng.next_u64() % 200) as usize;
+            for _ in 0..n {
+                // Spread samples across the whole range via a random bit width.
+                let v = rng.next_u64() >> (rng.next_u64() % 64);
+                if rng.next_u64() % 2 == 0 {
+                    a.record(v);
+                } else {
+                    b.record(v);
+                }
+                concat.record(v);
+            }
+            let mut merged = a;
+            merged.merge(&b);
+            assert_eq!(merged, concat, "round {round}");
+            // Merge is commutative.
+            let mut flipped = b;
+            flipped.merge(&a);
+            assert_eq!(flipped, concat, "round {round} (flipped)");
+        }
+    }
+
+    #[test]
+    fn atomic_shard_snapshots_match_plain_recording() {
+        let shard = AtomicHistogram::default();
+        let mut plain = LogHistogram::new();
+        for v in [0u64, 1, 7, 4096, 1 << 33] {
+            shard.record(v);
+            plain.record(v);
+        }
+        assert_eq!(shard.snapshot(), plain);
+    }
+}

@@ -1,0 +1,521 @@
+//! Observability: session tracing and latency histograms for the whole SetX stack.
+//!
+//! The crate accounts for every *byte* through [`crate::metrics::CommLog`]; this module
+//! adds the *time* axis with zero dependencies and zero wire impact:
+//!
+//! * [`Clock`] — a monotonic nanosecond clock behind a trait, so the sans-io layers
+//!   ([`crate::protocol::session::Session`], the setx endpoint, the multi-party
+//!   coordinator) never call `Instant::now()` directly (CI lints for it) and tests can
+//!   inject a [`ManualClock`] for fully deterministic timelines.
+//! * [`SessionTrace`] — a timestamped timeline of [`SpanEvent`]s recording every phase
+//!   transition of a session: handshake → estimate → sketch encode → decoder build →
+//!   one [`SpanKind::Attempt`] span per ladder rung → one [`SpanKind::Round`] marker per
+//!   payload frame → confirm. The trace rides on [`crate::setx::SetxReport::trace`] and
+//!   feeds the server's slow-session log.
+//! * [`Tracer`] — the recording half: monotone-clamped `open`/`close` edges, a
+//!   `disabled` mode that compiles to a branch (the histogram-off ablation), and
+//!   `absorb` for merging an inner session's timeline into its endpoint's.
+//! * [`hist::LogHistogram`] — the mergeable power-of-two-bucket histogram behind every
+//!   latency figure (`loadgen` p50/p95/p99, the server's per-tenant shards, the
+//!   Prometheus exposition).
+//!
+//! ## Trace timeline (one successful two-attempt session)
+//!
+//! ```text
+//! Handshake  ├────────────┤
+//! Estimate     ├───┤
+//! Attempt(0)              ├──────────────┤
+//!   SketchEncode            ├──┤
+//!   DecoderBuild                 ├──┤
+//!   Round                    ·  ·   ·  ·      (one marker per payload frame)
+//!   Confirm                              ·
+//! Attempt(1)                              ├─────────┤
+//!   …
+//! ```
+//!
+//! Well-formedness (checked by [`SessionTrace::is_well_formed`] and property-tested in
+//! `rust/tests/trace_properties.rs`): timestamps are non-decreasing, and for every
+//! [`SpanKind`] the open/close edges balance like parentheses. The span *counts* tie to
+//! the report by construction — `Attempt` spans equal `report.attempts` and `Round`
+//! markers equal `report.rounds` — because they are emitted at the same choke points
+//! that advance the ladder and charge the [`crate::metrics::CommLog`].
+
+pub mod hist;
+
+pub use hist::{AtomicHistogram, LogHistogram};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// A monotonic nanosecond clock. Implementations must be cheap (called per frame) and
+/// non-decreasing per instance; the absolute origin is arbitrary.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since this clock's (arbitrary) origin.
+    fn now_ns(&self) -> u64;
+}
+
+/// The real wall clock: monotonic nanoseconds since the clock was created.
+#[derive(Debug)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// A hand-advanced clock for deterministic tests: `now_ns` returns exactly what the
+/// test last set, so traces and histograms come out bit-identical across runs.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    ns: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new(start_ns: u64) -> Self {
+        ManualClock { ns: AtomicU64::new(start_ns) }
+    }
+
+    /// Move the clock forward by `delta_ns`.
+    pub fn advance(&self, delta_ns: u64) {
+        self.ns.fetch_add(delta_ns, Ordering::Relaxed);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-wide default clock (one shared origin, so timestamps from different
+/// tracers in the same process are directly comparable and merge cleanly).
+pub fn default_clock() -> Arc<dyn Clock> {
+    static CLOCK: OnceLock<Arc<dyn Clock>> = OnceLock::new();
+    CLOCK.get_or_init(|| Arc::new(MonotonicClock::new())).clone()
+}
+
+/// What a span measures. `Attempt` carries the 0-based ladder-rung index so each rung
+/// is its own span; `Round` is a per-payload-frame marker (sketch and residue frames —
+/// exactly what [`crate::metrics::CommLog::payload_frames`] counts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// `EstHello` exchange up to the negotiated verdict.
+    Handshake,
+    /// Estimator construction / difference estimation inside the handshake.
+    Estimate,
+    /// One own-set sketch encode (the initiator's dominant local cost).
+    SketchEncode,
+    /// One decoder (CSR) construction or cache checkout.
+    DecoderBuild,
+    /// One ladder rung, open from its first frame to its verdict.
+    Attempt(u32),
+    /// One payload frame (sketch or residue) charged to the comm log.
+    Round,
+    /// One `Confirm` frame exchanged.
+    Confirm,
+    /// Multi-party: the coordinator's join barrier.
+    MultiJoin,
+    /// Multi-party: the collect barrier (shared geometry out → all sketches in).
+    MultiCollect,
+    /// Multi-party: the constraint barrier (intersection commit).
+    MultiConstraint,
+    /// Multi-party: the final confirm barrier.
+    MultiFinal,
+}
+
+/// Whether the event opens or closes its span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanEdge {
+    Open,
+    Close,
+}
+
+/// One timestamped edge in a session timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub edge: SpanEdge,
+    /// Nanoseconds on the recording tracer's clock (shared origin under
+    /// [`default_clock`]).
+    pub at_ns: u64,
+}
+
+/// Per-phase wall-time breakdown extracted from a [`SessionTrace`] (closed spans only;
+/// `Attempt` rungs sum into `attempts`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseDurations {
+    pub handshake: Duration,
+    pub estimate: Duration,
+    pub sketch_encode: Duration,
+    pub decoder_build: Duration,
+    /// Summed over every ladder rung.
+    pub attempts: Duration,
+    pub confirm: Duration,
+    /// First event to last event.
+    pub total: Duration,
+}
+
+/// A timestamped timeline of span edges — the full "where did the time go" record of
+/// one session, cheap enough to keep on every [`crate::setx::SetxReport`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SessionTrace {
+    pub events: Vec<SpanEvent>,
+}
+
+impl SessionTrace {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Merge another timeline into this one, keeping timestamps sorted (stable, so
+    /// same-timestamp edges keep their per-source order and balance is preserved).
+    pub fn merge(&mut self, other: &SessionTrace) {
+        if other.events.is_empty() {
+            return;
+        }
+        self.events.extend_from_slice(&other.events);
+        self.events.sort_by_key(|e| e.at_ns);
+    }
+
+    /// Number of spans (open edges) whose kind matches `pred`.
+    pub fn count_spans(&self, pred: impl Fn(SpanKind) -> bool) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.edge == SpanEdge::Open && pred(e.kind))
+            .count()
+    }
+
+    /// Timeline sanity: timestamps non-decreasing, and per kind the open/close edges
+    /// balance like parentheses (never more closes than opens, none left open).
+    pub fn is_well_formed(&self) -> bool {
+        let mut last = 0u64;
+        let mut depth: Vec<(SpanKind, i64)> = Vec::new();
+        for e in &self.events {
+            if e.at_ns < last {
+                return false;
+            }
+            last = e.at_ns;
+            let slot = match depth.iter_mut().find(|(k, _)| *k == e.kind) {
+                Some(s) => s,
+                None => {
+                    depth.push((e.kind, 0));
+                    depth.last_mut().expect("just pushed")
+                }
+            };
+            match e.edge {
+                SpanEdge::Open => slot.1 += 1,
+                SpanEdge::Close => {
+                    slot.1 -= 1;
+                    if slot.1 < 0 {
+                        return false;
+                    }
+                }
+            }
+        }
+        depth.iter().all(|(_, d)| *d == 0)
+    }
+
+    /// Fold closed spans into a per-phase wall-time breakdown.
+    pub fn phase_durations(&self) -> PhaseDurations {
+        let mut out = PhaseDurations::default();
+        // Open-edge timestamp stacks, one per kind seen (kinds are few; linear scan).
+        let mut open: Vec<(SpanKind, Vec<u64>)> = Vec::new();
+        for e in &self.events {
+            let slot = match open.iter_mut().find(|(k, _)| *k == e.kind) {
+                Some(s) => s,
+                None => {
+                    open.push((e.kind, Vec::new()));
+                    open.last_mut().expect("just pushed")
+                }
+            };
+            match e.edge {
+                SpanEdge::Open => slot.1.push(e.at_ns),
+                SpanEdge::Close => {
+                    let Some(start) = slot.1.pop() else { continue };
+                    let d = Duration::from_nanos(e.at_ns.saturating_sub(start));
+                    match e.kind {
+                        SpanKind::Handshake => out.handshake += d,
+                        SpanKind::Estimate => out.estimate += d,
+                        SpanKind::SketchEncode => out.sketch_encode += d,
+                        SpanKind::DecoderBuild => out.decoder_build += d,
+                        SpanKind::Attempt(_) => out.attempts += d,
+                        SpanKind::Confirm => out.confirm += d,
+                        _ => {}
+                    }
+                }
+            }
+        }
+        if let (Some(first), Some(last)) = (self.events.first(), self.events.last()) {
+            out.total = Duration::from_nanos(last.at_ns.saturating_sub(first.at_ns));
+        }
+        out
+    }
+
+    /// Human-readable dump (one line per edge, microsecond offsets from the first
+    /// event) — what the server's slow-session log prints.
+    pub fn render(&self) -> String {
+        let origin = self.events.first().map(|e| e.at_ns).unwrap_or(0);
+        let mut out = String::with_capacity(self.events.len() * 32);
+        for e in &self.events {
+            let edge = match e.edge {
+                SpanEdge::Open => "open ",
+                SpanEdge::Close => "close",
+            };
+            let us = (e.at_ns - origin) / 1_000;
+            out.push_str(&format!("  +{us:>9}us {edge} {:?}\n", e.kind));
+        }
+        out
+    }
+}
+
+/// The recording half of a trace: a clock plus a monotone-clamped event sink.
+///
+/// Disabled tracers ([`Tracer::disabled`], the `SetxBuilder::tracing(false)` ablation)
+/// skip the clock read entirely, so the overhead of tracing-off is one branch per
+/// call site.
+#[derive(Clone)]
+pub struct Tracer {
+    clock: Arc<dyn Clock>,
+    enabled: bool,
+    last_ns: u64,
+    trace: SessionTrace,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("enabled", &self.enabled)
+            .field("events", &self.trace.events.len())
+            .finish()
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    /// An enabled tracer on the process-wide [`default_clock`].
+    pub fn new() -> Tracer {
+        Tracer::with_clock(default_clock())
+    }
+
+    /// An enabled tracer on an injected clock (deterministic tests use
+    /// [`ManualClock`]).
+    pub fn with_clock(clock: Arc<dyn Clock>) -> Tracer {
+        Tracer { clock, enabled: true, last_ns: 0, trace: SessionTrace::default() }
+    }
+
+    /// A tracer that records nothing (the tracing-off ablation).
+    pub fn disabled() -> Tracer {
+        Tracer { clock: default_clock(), enabled: false, last_ns: 0, trace: SessionTrace::default() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// A fresh tracer sharing this one's clock and enablement — for an inner session
+    /// whose timeline is later [`Tracer::absorb`]ed back.
+    pub fn child(&self) -> Tracer {
+        Tracer {
+            clock: self.clock.clone(),
+            enabled: self.enabled,
+            last_ns: 0,
+            trace: SessionTrace::default(),
+        }
+    }
+
+    /// Monotone-clamped timestamp: never before the previous event of this tracer
+    /// (guards against clocks that are monotonic per call site but merged timelines).
+    fn stamp(&mut self) -> u64 {
+        let t = self.clock.now_ns().max(self.last_ns);
+        self.last_ns = t;
+        t
+    }
+
+    pub fn open(&mut self, kind: SpanKind) {
+        if !self.enabled {
+            return;
+        }
+        let at_ns = self.stamp();
+        self.trace.events.push(SpanEvent { kind, edge: SpanEdge::Open, at_ns });
+    }
+
+    pub fn close(&mut self, kind: SpanKind) {
+        if !self.enabled {
+            return;
+        }
+        let at_ns = self.stamp();
+        self.trace.events.push(SpanEvent { kind, edge: SpanEdge::Close, at_ns });
+    }
+
+    /// A zero-duration marker span (open + close at one timestamp) — per-frame events
+    /// like [`SpanKind::Round`] and [`SpanKind::Confirm`].
+    pub fn instant(&mut self, kind: SpanKind) {
+        if !self.enabled {
+            return;
+        }
+        let at_ns = self.stamp();
+        self.trace.events.push(SpanEvent { kind, edge: SpanEdge::Open, at_ns });
+        self.trace.events.push(SpanEvent { kind, edge: SpanEdge::Close, at_ns });
+    }
+
+    /// Merge an inner timeline (an absorbed session's) into this tracer's.
+    pub fn absorb(&mut self, other: &SessionTrace) {
+        if !self.enabled {
+            return;
+        }
+        self.trace.merge(other);
+        if let Some(last) = self.trace.events.last() {
+            self.last_ns = self.last_ns.max(last.at_ns);
+        }
+    }
+
+    pub fn trace(&self) -> &SessionTrace {
+        &self.trace
+    }
+
+    /// Take the recorded timeline out (the tracer keeps recording from empty).
+    pub fn take(&mut self) -> SessionTrace {
+        std::mem::take(&mut self.trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_gives_deterministic_timelines() {
+        let clock = Arc::new(ManualClock::new(100));
+        let mut t = Tracer::with_clock(clock.clone());
+        t.open(SpanKind::Handshake);
+        clock.advance(50);
+        t.instant(SpanKind::Round);
+        clock.advance(25);
+        t.close(SpanKind::Handshake);
+        let trace = t.take();
+        assert!(trace.is_well_formed());
+        assert_eq!(
+            trace.events,
+            vec![
+                SpanEvent { kind: SpanKind::Handshake, edge: SpanEdge::Open, at_ns: 100 },
+                SpanEvent { kind: SpanKind::Round, edge: SpanEdge::Open, at_ns: 150 },
+                SpanEvent { kind: SpanKind::Round, edge: SpanEdge::Close, at_ns: 150 },
+                SpanEvent { kind: SpanKind::Handshake, edge: SpanEdge::Close, at_ns: 175 },
+            ]
+        );
+        let pd = trace.phase_durations();
+        assert_eq!(pd.handshake, Duration::from_nanos(75));
+        assert_eq!(pd.total, Duration::from_nanos(75));
+    }
+
+    #[test]
+    fn stamps_clamp_monotone_even_if_the_clock_regresses() {
+        // A ManualClock that is *set backwards* between events models clock skew; the
+        // tracer's clamp keeps the timeline sorted anyway.
+        let clock = Arc::new(ManualClock::new(1_000));
+        let mut t = Tracer::with_clock(clock.clone());
+        t.open(SpanKind::Attempt(0));
+        let fresh = ManualClock::new(10); // earlier origin
+        t.clock = Arc::new(fresh);
+        t.close(SpanKind::Attempt(0));
+        assert!(t.trace().is_well_formed());
+        assert_eq!(t.trace().events[1].at_ns, 1_000);
+    }
+
+    #[test]
+    fn well_formedness_rejects_imbalance_and_disorder() {
+        let mut trace = SessionTrace::default();
+        trace.events.push(SpanEvent { kind: SpanKind::Round, edge: SpanEdge::Close, at_ns: 5 });
+        assert!(!trace.is_well_formed(), "close without open");
+
+        let mut trace = SessionTrace::default();
+        trace.events.push(SpanEvent { kind: SpanKind::Round, edge: SpanEdge::Open, at_ns: 9 });
+        trace.events.push(SpanEvent { kind: SpanKind::Round, edge: SpanEdge::Close, at_ns: 3 });
+        assert!(!trace.is_well_formed(), "timestamps regress");
+
+        let mut trace = SessionTrace::default();
+        trace.events.push(SpanEvent { kind: SpanKind::Round, edge: SpanEdge::Open, at_ns: 1 });
+        assert!(!trace.is_well_formed(), "span left open");
+    }
+
+    #[test]
+    fn merge_interleaves_by_timestamp_and_stays_well_formed() {
+        let clock = Arc::new(ManualClock::new(0));
+        let mut outer = Tracer::with_clock(clock.clone());
+        let mut inner = outer.child();
+        outer.open(SpanKind::Attempt(0));
+        clock.advance(10);
+        inner.open(SpanKind::DecoderBuild);
+        clock.advance(10);
+        inner.close(SpanKind::DecoderBuild);
+        clock.advance(10);
+        let inner_trace = inner.take();
+        outer.absorb(&inner_trace);
+        outer.close(SpanKind::Attempt(0));
+        let trace = outer.take();
+        assert!(trace.is_well_formed());
+        // The inner span sits inside the attempt in timestamp order.
+        let kinds: Vec<(SpanKind, SpanEdge)> =
+            trace.events.iter().map(|e| (e.kind, e.edge)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (SpanKind::Attempt(0), SpanEdge::Open),
+                (SpanKind::DecoderBuild, SpanEdge::Open),
+                (SpanKind::DecoderBuild, SpanEdge::Close),
+                (SpanKind::Attempt(0), SpanEdge::Close),
+            ]
+        );
+        let pd = trace.phase_durations();
+        assert_eq!(pd.decoder_build, Duration::from_nanos(10));
+        assert_eq!(pd.attempts, Duration::from_nanos(30));
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::disabled();
+        t.open(SpanKind::Handshake);
+        t.instant(SpanKind::Round);
+        t.close(SpanKind::Handshake);
+        assert!(t.trace().is_empty());
+        assert!(!t.is_enabled());
+    }
+
+    #[test]
+    fn render_is_one_line_per_edge() {
+        let clock = Arc::new(ManualClock::new(5_000));
+        let mut t = Tracer::with_clock(clock.clone());
+        t.open(SpanKind::Handshake);
+        clock.advance(2_000);
+        t.close(SpanKind::Handshake);
+        let text = t.trace().render();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("open  Handshake"));
+        assert!(text.contains("+        2us close Handshake"));
+    }
+}

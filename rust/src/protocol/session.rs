@@ -28,6 +28,7 @@ use crate::entropy::{
 };
 use crate::hash::hash_u64;
 use crate::metrics::{CommLog, Phase as CommPhase};
+use crate::obs::{SessionTrace, SpanKind, Tracer};
 use crate::protocol::bidi::BidiOptions;
 use crate::protocol::{wire::Msg, CsParams};
 use crate::sketch::{EncodeConfig, Sketch};
@@ -155,6 +156,11 @@ pub struct Session {
     /// before use and ignored on mismatch, so a wrong hint degrades to a re-encode, never
     /// to a wrong residue.
     host_sketch: Option<Arc<Sketch>>,
+    /// Timeline recorder (see [`crate::obs`]): `SketchEncode`/`DecoderBuild` spans around
+    /// the two expensive local steps, plus one instant `Round`/`Confirm` marker per
+    /// payload/verdict frame — emitted at the [`CommLog`] recording points, so marker
+    /// counts equal frame counts by construction.
+    tracer: Tracer,
 }
 
 impl Session {
@@ -192,9 +198,27 @@ impl Session {
         set: &[u64],
         opts: BidiOptions,
         is_alice: bool,
+        cache: DecoderCache,
+        enc: EncodeConfig,
+        host_sketch: Option<&Sketch>,
+    ) -> (Session, Vec<Msg>) {
+        Self::initiator_traced(params, set, opts, is_alice, cache, enc, host_sketch, Tracer::new())
+    }
+
+    /// [`Session::initiator_with`] recording into a caller-provided [`Tracer`] (e.g. a
+    /// [`Tracer::child`] of an endpoint's timeline, or a [`Tracer::disabled`] one for the
+    /// obs-off ablation). The constructor itself does the sketch encode and decoder
+    /// build, so the tracer must arrive before construction to time them.
+    #[allow(clippy::too_many_arguments)]
+    pub fn initiator_traced(
+        params: &CsParams,
+        set: &[u64],
+        opts: BidiOptions,
+        is_alice: bool,
         mut cache: DecoderCache,
         enc: EncodeConfig,
         host_sketch: Option<&Sketch>,
+        mut tracer: Tracer,
     ) -> (Session, Vec<Msg>) {
         let (est_i, est_r) = if is_alice {
             (params.est_a_unique, params.est_b_unique)
@@ -211,11 +235,15 @@ impl Session {
             set_len: set.len() as u64,
             namespace: opts.namespace,
         };
+        tracer.open(SpanKind::SketchEncode);
         let sketch = match host_sketch.filter(|sk| sk.matrix == params.matrix()) {
             Some(sk) => sketch_msg(params, &sk.counts, is_alice, opts.codec),
             None => initiator_sketch_with(params, set, is_alice, enc, opts.codec),
         };
+        tracer.close(SpanKind::SketchEncode);
+        tracer.open(SpanKind::DecoderBuild);
         let peer = Peer::with_cache(params, set, Side::Negative, opts, &mut cache);
+        tracer.close(SpanKind::DecoderBuild);
         let mut session = Session {
             role: Role::Initiator,
             opts,
@@ -226,6 +254,7 @@ impl Session {
             cache,
             enc,
             host_sketch: None,
+            tracer,
         };
         session.record_sent(&hello);
         session.record_sent(&sketch);
@@ -257,6 +286,7 @@ impl Session {
             cache,
             enc: EncodeConfig::default(),
             host_sketch: None,
+            tracer: Tracer::new(),
         }
     }
 
@@ -273,11 +303,20 @@ impl Session {
         self.host_sketch = Some(sketch);
     }
 
+    /// Replace this session's timeline recorder (e.g. with a [`Tracer::child`] of the
+    /// driving endpoint's tracer, so the absorbed trace shares one clock). Responder
+    /// sessions do their expensive work after construction, so a tracer set here still
+    /// times everything; for the initiator use [`Session::initiator_traced`].
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
     /// Decompose a finished (or abandoned) session into its transcript, outcome
-    /// snapshot, and decoder cache — with the session's constructed decoder parked in the
-    /// cache so the next same-matrix session reuses it instead of rebuilding.
-    pub fn into_parts(self) -> (CommLog, SessionOutcome, DecoderCache) {
-        let Session { phase, comm, mut cache, .. } = self;
+    /// snapshot, decoder cache, and recorded timeline — with the session's constructed
+    /// decoder parked in the cache so the next same-matrix session reuses it instead of
+    /// rebuilding.
+    pub fn into_parts(self) -> (CommLog, SessionOutcome, DecoderCache, SessionTrace) {
+        let Session { phase, comm, mut cache, mut tracer, .. } = self;
         let outcome = match phase {
             Phase::PingPong(peer) => {
                 let outcome = SessionOutcome { unique: peer.result(), converged: peer.settled };
@@ -286,7 +325,7 @@ impl Session {
             }
             _ => SessionOutcome { unique: Vec::new(), converged: false },
         };
-        (comm, outcome, cache)
+        (comm, outcome, cache, tracer.take())
     }
 
     /// Absorb one incoming frame and report what the transport should do next.
@@ -328,12 +367,18 @@ impl Session {
                 // The decoder copies the candidate ids; release our buffer with it.
                 let set = std::mem::take(&mut self.set);
                 let host = self.host_sketch.take();
+                self.tracer.open(SpanKind::SketchEncode);
                 let residue0 =
-                    responder_residue_with(&params, &set, sm, true, host.as_deref(), self.enc)
-                        .ok_or(SessionError::SketchRecovery)?;
+                    responder_residue_with(&params, &set, sm, true, host.as_deref(), self.enc);
+                // Close before the `?` so a failed recovery still leaves the trace
+                // balanced.
+                self.tracer.close(SpanKind::SketchEncode);
+                let residue0 = residue0.ok_or(SessionError::SketchRecovery)?;
                 let opts = self.opts;
+                self.tracer.open(SpanKind::DecoderBuild);
                 let mut peer =
                     Peer::with_cache(&params, &set, Side::Positive, opts, &mut self.cache);
+                self.tracer.close(SpanKind::DecoderBuild);
                 // The initial canonical residue enters the engine as a synthetic round:
                 // it is not a transmitted frame, so it is not charged to the comm log.
                 let reply = peer.step(&seed_round(&residue0))?;
@@ -370,12 +415,27 @@ impl Session {
 
     fn record_sent(&mut self, msg: &Msg) {
         let (enc, raw) = (msg.wire_len(), msg.raw_wire_len());
-        self.comm.record_framed(self.is_alice, frame_phase(msg), enc, raw);
+        let phase = frame_phase(msg);
+        self.comm.record_framed(self.is_alice, phase, enc, raw);
+        self.mark_frame(phase);
     }
 
     fn record_received(&mut self, msg: &Msg) {
         let (enc, raw) = (msg.wire_len(), msg.raw_wire_len());
-        self.comm.record_framed(!self.is_alice, frame_phase(msg), enc, raw);
+        let phase = frame_phase(msg);
+        self.comm.record_framed(!self.is_alice, phase, enc, raw);
+        self.mark_frame(phase);
+    }
+
+    /// One instant trace marker per accounted frame, emitted at the single point every
+    /// frame passes through — so `Round` markers equal `CommLog::payload_frames` (and
+    /// hence `SetxReport::rounds`) by construction, not by convention.
+    fn mark_frame(&mut self, phase: CommPhase) {
+        if phase.is_payload() {
+            self.tracer.instant(SpanKind::Round);
+        } else if phase == CommPhase::Confirm {
+            self.tracer.instant(SpanKind::Confirm);
+        }
     }
 
     /// Messages seen so far that count against the round budget (everything but the
@@ -732,6 +792,24 @@ mod tests {
         assert_eq!(res.bytes_sent(), ini.bytes_received());
         assert_eq!(ini.comm().total_bytes(), res.comm().total_bytes());
         assert!(ini.msgs_sent() >= 2, "hello + sketch at minimum");
+    }
+
+    #[test]
+    fn session_traces_are_well_formed_with_one_marker_per_payload_frame() {
+        let (a, b) = synth::overlap_pair(5_000, 60, 90, 12);
+        let params = CsParams::tuned_bidi(5_150, 60, 90);
+        let (mut ini, opening) = Session::initiator(&params, &a, BidiOptions::default(), true);
+        let mut res = Session::responder(&b, BidiOptions::default(), false);
+        drive(&mut ini, &mut res, opening).unwrap();
+        for s in [ini, res] {
+            let (comm, _, _, trace) = s.into_parts();
+            assert!(trace.is_well_formed());
+            // The marker/frame identity: emitted at the CommLog recording points, so the
+            // counts cannot drift apart.
+            assert_eq!(trace.count_spans(|k| k == SpanKind::Round), comm.payload_frames());
+            assert_eq!(trace.count_spans(|k| k == SpanKind::SketchEncode), 1);
+            assert_eq!(trace.count_spans(|k| k == SpanKind::DecoderBuild), 1);
+        }
     }
 
     #[test]

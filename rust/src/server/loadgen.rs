@@ -21,6 +21,7 @@
 
 use crate::data::synth;
 use crate::hash::{split_mix64, Xoshiro256};
+use crate::obs::hist::LogHistogram;
 use crate::setx::transport::TcpTransport;
 use crate::setx::{DiffSize, Setx, SetxError};
 use std::net::ToSocketAddrs;
@@ -53,6 +54,10 @@ pub struct LoadgenConfig {
     /// Tenant namespaces to spread the fleet across (clamped ≥ 1). Tenant ids are
     /// `0..tenants`; client *i* syncs against tenant *i mod tenants*.
     pub tenants: usize,
+    /// Build every endpoint with the span timeline on (the default). Deliberately
+    /// outside the config fingerprint, so a tracing-off fleet still speaks to a
+    /// tracing-on server — the bench ablation flips only this.
+    pub tracing: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -67,6 +72,7 @@ impl Default for LoadgenConfig {
             busy_retries: 3,
             estimate_diff: false,
             tenants: 1,
+            tracing: true,
         }
     }
 }
@@ -134,7 +140,12 @@ impl LoadgenConfig {
         } else {
             DiffSize::Explicit(self.true_d())
         };
-        Setx::builder(set).seed(self.seed).diff_size(diff).namespace(namespace).build()
+        Setx::builder(set)
+            .seed(self.seed)
+            .diff_size(diff)
+            .namespace(namespace)
+            .tracing(self.tracing)
+            .build()
     }
 
     /// [`endpoint_for_tenant`](Self::endpoint_for_tenant) for tenant 0 (the
@@ -164,6 +175,9 @@ pub struct LoadgenReport {
     pub total_bytes: usize,
     /// Wall-clock for the whole fleet.
     pub elapsed: Duration,
+    /// Per-session wall time of every *successful* sync (connect through verified
+    /// report, retries included), in nanoseconds — merged across the client threads.
+    pub latency: LogHistogram,
 }
 
 impl LoadgenReport {
@@ -180,6 +194,21 @@ impl LoadgenReport {
         } else {
             0.0
         }
+    }
+
+    /// Median per-session wall time, nanoseconds (0 when no session succeeded).
+    pub fn p50_ns(&self) -> u64 {
+        self.latency.quantile(0.5)
+    }
+
+    /// 95th-percentile per-session wall time, nanoseconds.
+    pub fn p95_ns(&self) -> u64 {
+        self.latency.quantile(0.95)
+    }
+
+    /// 99th-percentile per-session wall time, nanoseconds.
+    pub fn p99_ns(&self) -> u64 {
+        self.latency.quantile(0.99)
     }
 }
 
@@ -229,6 +258,7 @@ pub fn run(addr: impl ToSocketAddrs, cfg: &LoadgenConfig) -> LoadgenReport {
         report.retries += outcome.retries;
         report.total_bytes += outcome.bytes;
         report.failures.extend(outcome.failures);
+        report.latency.merge(&outcome.latency);
     }
     report
 }
@@ -241,6 +271,7 @@ struct ClientOutcome {
     retries: usize,
     bytes: usize,
     failures: Vec<String>,
+    latency: LogHistogram,
 }
 
 fn run_client(
@@ -261,8 +292,11 @@ fn run_client(
         }
     };
     for round in 0..cfg.rounds {
+        let session_started = Instant::now();
         match sync_once(addr, cfg, &endpoint, index, &mut out) {
             Ok(report) => {
+                let elapsed = session_started.elapsed();
+                out.latency.record(u64::try_from(elapsed.as_nanos()).unwrap_or(u64::MAX));
                 out.bytes += report.total_bytes();
                 if report.intersection == expected {
                     out.ok += 1;

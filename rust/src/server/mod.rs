@@ -132,6 +132,8 @@ pub struct ServerBuilder {
     tenant_quota: Option<usize>,
     extra_tenants: Vec<(u32, Vec<u64>)>,
     multi_tenants: Vec<(u32, Vec<u64>, u32)>,
+    metrics_addr: Option<String>,
+    slow_session_threshold: Option<Duration>,
 }
 
 impl ServerBuilder {
@@ -207,6 +209,29 @@ impl ServerBuilder {
     /// tenant, including ones added at runtime.
     pub fn tenant_quota(mut self, quota: usize) -> Self {
         self.tenant_quota = Some(quota.max(1));
+        self
+    }
+
+    /// Expose a live metrics endpoint: a minimal HTTP/1.0 responder on its own named
+    /// thread (`setx-metrics`) answering every `GET` with the current [`ServerStats`]
+    /// rendered by [`ServerStats::to_prometheus`] — counters, gauges, and the
+    /// session-latency histograms, global and per tenant. Scrape it with Prometheus or
+    /// plain `curl`; the thread costs nothing between requests (each response is one
+    /// stats snapshot, taken under the same locks [`ServerHandle::stats`] uses).
+    /// Disabled by default; `"127.0.0.1:0"` picks an ephemeral port, reported by
+    /// [`ServerHandle::metrics_addr`].
+    pub fn metrics_addr(mut self, addr: impl Into<String>) -> Self {
+        self.metrics_addr = Some(addr.into());
+        self
+    }
+
+    /// Dump the full [`crate::obs::SessionTrace`] of any served session whose wall
+    /// time meets `threshold` to stderr, prefixed
+    /// `[slow-session] sid=<id> tenant=<ns> elapsed=<ms>ms` — the triage breadcrumb
+    /// for tail latency: the timeline shows *which phase* (decode rung, residue
+    /// round, sketch encode) ate the budget. Disabled by default.
+    pub fn slow_session_threshold(mut self, threshold: Duration) -> Self {
+        self.slow_session_threshold = Some(threshold);
         self
     }
 
@@ -302,6 +327,7 @@ impl ServerBuilder {
             last_failure: Mutex::new(None),
             next_session_id: AtomicU64::new(1),
             session_timeout: self.read_timeout.or(self.write_timeout),
+            slow_session_threshold: self.slow_session_threshold,
             build_threads: self.build_threads,
             max_inflight: self.max_inflight,
             workers: self.workers,
@@ -324,7 +350,21 @@ impl ServerBuilder {
                     .expect("spawn server poller"),
             );
         }
-        Ok(ServerHandle { shared, addr, pollers })
+        let metrics = match self.metrics_addr {
+            Some(maddr) => {
+                let ml = TcpListener::bind(maddr.as_str())?;
+                ml.set_nonblocking(true)?;
+                let bound = ml.local_addr()?;
+                let shared = Arc::clone(&shared);
+                let handle = std::thread::Builder::new()
+                    .name("setx-metrics".into())
+                    .spawn(move || metrics_loop(&shared, &ml))
+                    .expect("spawn metrics responder");
+                Some((bound, handle))
+            }
+            None => None,
+        };
+        Ok(ServerHandle { shared, addr, pollers, metrics })
     }
 }
 
@@ -464,6 +504,9 @@ struct Shared {
     next_session_id: AtomicU64,
     /// Per-connection inactivity deadline (refreshed on progress); `None` = no limit.
     session_timeout: Option<Duration>,
+    /// Served sessions at least this slow get their trace dumped to stderr; `None`
+    /// disables the dump (latency is still recorded in the histograms).
+    slow_session_threshold: Option<Duration>,
     build_threads: usize,
     max_inflight: usize,
     workers: usize,
@@ -517,6 +560,8 @@ impl SetxServer {
             tenant_quota: None,
             extra_tenants: Vec::new(),
             multi_tenants: Vec::new(),
+            metrics_addr: None,
+            slow_session_threshold: None,
         }
     }
 }
@@ -527,6 +572,8 @@ pub struct ServerHandle {
     shared: Arc<Shared>,
     addr: SocketAddr,
     pollers: Vec<JoinHandle<()>>,
+    /// The metrics responder, when [`ServerBuilder::metrics_addr`] was set.
+    metrics: Option<(SocketAddr, JoinHandle<()>)>,
 }
 
 impl ServerHandle {
@@ -535,64 +582,16 @@ impl ServerHandle {
         self.addr
     }
 
+    /// The bound metrics-endpoint address, when one was configured via
+    /// [`ServerBuilder::metrics_addr`] (resolves `:0` to the actual port).
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics.as_ref().map(|(addr, _)| *addr)
+    }
+
     /// Point-in-time stats snapshot: globals plus one shard per resident tenant
     /// (sorted by namespace); the `pool`/`sketch_store` blocks are sums across shards.
     pub fn stats(&self) -> ServerStats {
-        let s = &self.shared.stats;
-        let mut tenants: Vec<TenantStats> = {
-            let map = self.shared.tenants.read().expect("tenant map poisoned");
-            map.values()
-                .map(|t| {
-                    t.counters.snapshot(
-                        t.namespace,
-                        t.quota,
-                        t.pool.as_ref().map(|p| p.stats()).unwrap_or_default(),
-                        t.store.as_ref().map(|st| st.stats()).unwrap_or_default(),
-                    )
-                })
-                .collect()
-        };
-        tenants.sort_by_key(|t| t.namespace);
-        let mut pool = PoolStats::default();
-        let mut store = SketchStoreStats::default();
-        for t in &tenants {
-            pool.hits += t.pool.hits;
-            pool.misses += t.pool.misses;
-            pool.evictions += t.pool.evictions;
-            pool.parked += t.pool.parked;
-            pool.capacity += t.pool.capacity;
-            store.hits += t.sketch_store.hits;
-            store.misses += t.sketch_store.misses;
-            store.stale_bypasses += t.sketch_store.stale_bypasses;
-            store.encodes += t.sketch_store.encodes;
-            store.incremental_updates += t.sketch_store.incremental_updates;
-            store.full_rebuilds += t.sketch_store.full_rebuilds;
-            store.resident += t.sketch_store.resident;
-            store.capacity += t.sketch_store.capacity;
-        }
-        ServerStats {
-            sessions_accepted: s.sessions_accepted.load(Ordering::Relaxed),
-            sessions_served: s.sessions_served.load(Ordering::Relaxed),
-            sessions_failed: s.sessions_failed.load(Ordering::Relaxed),
-            sessions_rejected: s.sessions_rejected.load(Ordering::Relaxed),
-            unrouted_failed: s.unrouted_failed.load(Ordering::Relaxed),
-            unrouted_rejected: s.unrouted_rejected.load(Ordering::Relaxed),
-            phase_bytes: [
-                s.phase_bytes[0].load(Ordering::Relaxed),
-                s.phase_bytes[1].load(Ordering::Relaxed),
-                s.phase_bytes[2].load(Ordering::Relaxed),
-                s.phase_bytes[3].load(Ordering::Relaxed),
-            ],
-            raw_bytes: s.raw_bytes.load(Ordering::Relaxed),
-            pool,
-            sketch_store: store,
-            inflight: s.inflight.load(Ordering::SeqCst),
-            peak_inflight: s.peak_inflight.load(Ordering::Relaxed),
-            peak_workers: s.peak_workers.load(Ordering::Relaxed),
-            workers: self.shared.workers,
-            max_inflight_sessions: self.shared.max_inflight,
-            tenants,
-        }
+        snapshot_stats(&self.shared)
     }
 
     /// The most recent failed session, as `(session_id, error message)`.
@@ -616,6 +615,7 @@ impl ServerHandle {
                 self.shared.pool_capacity,
                 self.shared.store_capacity,
                 self.shared.tenant_quota,
+                None,
             ),
         );
         true
@@ -684,6 +684,107 @@ impl ServerHandle {
         for handle in self.pollers.drain(..) {
             let _ = handle.join();
         }
+        // The metrics responder watches the same shutdown flag; it notices within one
+        // accept-poll tick once the pollers are gone.
+        if let Some((_, handle)) = self.metrics.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Snapshot the shared counters as a [`ServerStats`] — used by [`ServerHandle::stats`]
+/// and by the metrics responder thread, which has no handle.
+fn snapshot_stats(shared: &Shared) -> ServerStats {
+    let s = &shared.stats;
+    let mut tenants: Vec<TenantStats> = {
+        let map = shared.tenants.read().expect("tenant map poisoned");
+        map.values()
+            .map(|t| {
+                t.counters.snapshot(
+                    t.namespace,
+                    t.quota,
+                    t.pool.as_ref().map(|p| p.stats()).unwrap_or_default(),
+                    t.store.as_ref().map(|st| st.stats()).unwrap_or_default(),
+                )
+            })
+            .collect()
+    };
+    tenants.sort_by_key(|t| t.namespace);
+    let mut pool = PoolStats::default();
+    let mut store = SketchStoreStats::default();
+    for t in &tenants {
+        pool.hits += t.pool.hits;
+        pool.misses += t.pool.misses;
+        pool.evictions += t.pool.evictions;
+        pool.parked += t.pool.parked;
+        pool.capacity += t.pool.capacity;
+        store.hits += t.sketch_store.hits;
+        store.misses += t.sketch_store.misses;
+        store.stale_bypasses += t.sketch_store.stale_bypasses;
+        store.encodes += t.sketch_store.encodes;
+        store.incremental_updates += t.sketch_store.incremental_updates;
+        store.full_rebuilds += t.sketch_store.full_rebuilds;
+        store.resident += t.sketch_store.resident;
+        store.capacity += t.sketch_store.capacity;
+    }
+    ServerStats {
+        sessions_accepted: s.sessions_accepted.load(Ordering::Relaxed),
+        sessions_served: s.sessions_served.load(Ordering::Relaxed),
+        sessions_failed: s.sessions_failed.load(Ordering::Relaxed),
+        sessions_rejected: s.sessions_rejected.load(Ordering::Relaxed),
+        unrouted_failed: s.unrouted_failed.load(Ordering::Relaxed),
+        unrouted_rejected: s.unrouted_rejected.load(Ordering::Relaxed),
+        phase_bytes: [
+            s.phase_bytes[0].load(Ordering::Relaxed),
+            s.phase_bytes[1].load(Ordering::Relaxed),
+            s.phase_bytes[2].load(Ordering::Relaxed),
+            s.phase_bytes[3].load(Ordering::Relaxed),
+        ],
+        raw_bytes: s.raw_bytes.load(Ordering::Relaxed),
+        pool,
+        sketch_store: store,
+        inflight: s.inflight.load(Ordering::SeqCst),
+        peak_inflight: s.peak_inflight.load(Ordering::Relaxed),
+        peak_workers: s.peak_workers.load(Ordering::Relaxed),
+        workers: shared.workers,
+        max_inflight_sessions: shared.max_inflight,
+        latency: s.latency.snapshot(),
+        tenants,
+    }
+}
+
+/// The metrics responder: a deliberately minimal HTTP/1.0 server on its own thread.
+/// Every `GET` answers with one [`ServerStats::to_prometheus`] snapshot; anything else
+/// gets a 400. One request per connection (`Connection: close`), bounded read/write
+/// timeouts so a stuck scraper cannot wedge the thread, and the listener is
+/// non-blocking so the shared shutdown flag is honored within one poll tick.
+fn metrics_loop(shared: &Arc<Shared>, listener: &TcpListener) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        let (mut stream, _) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(_) => {
+                // WouldBlock or a transient accept error: sleep one tick, re-check the
+                // shutdown flag.
+                std::thread::sleep(Duration::from_millis(25));
+                continue;
+            }
+        };
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+        let mut req = [0u8; 1024];
+        let n = stream.read(&mut req).unwrap_or(0);
+        let (status, body) = if req[..n].starts_with(b"GET ") {
+            ("200 OK", snapshot_stats(shared).to_prometheus())
+        } else {
+            ("400 Bad Request", String::new())
+        };
+        let resp = format!(
+            "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        let _ = stream.write_all(resp.as_bytes());
+        let _ = stream.shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -731,6 +832,9 @@ struct Conn {
     /// Bytes of `write_buf` already written to the socket.
     wpos: usize,
     deadline: Option<Instant>,
+    /// Admission time — the start of the session's wall-time measurement
+    /// ([`StatsInner::record_latency`] at finalize).
+    started: Instant,
     saw_eof: bool,
     done: Option<Result<Box<SetxReport>, SetxError>>,
 }
@@ -746,6 +850,7 @@ impl Conn {
             write_buf: Vec::new(),
             wpos: 0,
             deadline: timeout.map(|t| Instant::now() + t),
+            started: Instant::now(),
             saw_eof: false,
             done: None,
         }
@@ -763,6 +868,7 @@ impl Conn {
             write_buf: Vec::new(),
             wpos: 0,
             deadline: Some(Instant::now() + Duration::from_millis(500)),
+            started: Instant::now(),
             saw_eof: false,
             done: None,
         };
@@ -1323,7 +1429,25 @@ fn finalize(shared: &Shared, conn: Conn) {
         ConnState::Live { tenant, .. } => {
             tenant.counters.inflight.fetch_sub(1, Ordering::SeqCst);
             match conn.done {
-                Some(Ok(report)) => shared.stats.serve(&tenant.counters, &report.comm),
+                Some(Ok(report)) => {
+                    shared.stats.serve(&tenant.counters, &report.comm);
+                    // Wall time accept→finalize: only served sessions are timed, so
+                    // the tenant histograms merge exactly to the global one.
+                    let elapsed = conn.started.elapsed();
+                    shared.stats.record_latency(
+                        &tenant.counters,
+                        u64::try_from(elapsed.as_nanos()).unwrap_or(u64::MAX),
+                    );
+                    if shared.slow_session_threshold.is_some_and(|thr| elapsed >= thr) {
+                        eprintln!(
+                            "[slow-session] sid={} tenant={} elapsed={}ms\n{}",
+                            conn.sid,
+                            tenant.namespace,
+                            elapsed.as_millis(),
+                            report.trace.render()
+                        );
+                    }
+                }
                 Some(Err(err)) => {
                     shared.stats.fail(Some(&tenant.counters));
                     shared.record_failure(conn.sid, &err);

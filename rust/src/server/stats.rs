@@ -21,6 +21,7 @@
 use super::pool::PoolStats;
 use super::sketch_store::SketchStoreStats;
 use crate::metrics::{CommLog, Phase};
+use crate::obs::hist::{AtomicHistogram, LogHistogram};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Charge one finished session's transcript to a per-phase byte array plus the
@@ -52,6 +53,8 @@ pub(crate) struct TenantCounters {
     pub(crate) raw_bytes: AtomicU64,
     /// Routed, unfinished sessions of this tenant — the quota gauge.
     pub(crate) inflight: AtomicUsize,
+    /// Wall time of this tenant's *served* sessions, in nanoseconds.
+    pub(crate) latency: AtomicHistogram,
 }
 
 /// The atomics every poller thread updates (shared behind one `Arc`).
@@ -81,6 +84,10 @@ pub(crate) struct StatsInner {
     /// keeps).
     pub(crate) busy_workers: AtomicUsize,
     pub(crate) peak_workers: AtomicUsize,
+    /// Wall time of every *served* session, in nanoseconds. Only routed sessions are
+    /// timed, so at quiescence this histogram is exactly the merge of the tenant
+    /// shards (the histogram face of the shard-sum invariant above).
+    pub(crate) latency: AtomicHistogram,
 }
 
 impl StatsInner {
@@ -103,6 +110,14 @@ impl StatsInner {
         t.served.fetch_add(1, Ordering::Relaxed);
         charge(&self.phase_bytes, &self.raw_bytes, comm);
         charge(&t.phase_bytes, &t.raw_bytes, comm);
+    }
+
+    /// Record one served session's wall time in both scopes' latency histograms.
+    /// Always paired with [`StatsInner::serve`], so the tenant shards merge exactly
+    /// to the global histogram.
+    pub(crate) fn record_latency(&self, t: &TenantCounters, ns: u64) {
+        self.latency.record(ns);
+        t.latency.record(ns);
     }
 
     /// A session ended in a typed error. `None` = the connection never routed to a
@@ -158,6 +173,8 @@ pub struct TenantStats {
     pub pool: PoolStats,
     /// This tenant's host-sketch-store shard (zeros when disabled).
     pub sketch_store: SketchStoreStats,
+    /// Wall-time histogram of this tenant's served sessions (nanoseconds).
+    pub latency: LogHistogram,
 }
 
 impl TenantStats {
@@ -202,6 +219,7 @@ impl TenantCounters {
             quota,
             pool,
             sketch_store,
+            latency: self.latency.snapshot(),
         }
     }
 }
@@ -251,6 +269,9 @@ pub struct ServerStats {
     pub workers: usize,
     /// Configured global admission cap.
     pub max_inflight_sessions: usize,
+    /// Wall-time histogram of every served session (nanoseconds). At quiescence it is
+    /// exactly the merge of the per-tenant histograms in [`ServerStats::tenants`].
+    pub latency: LogHistogram,
     /// Per-tenant shard snapshots, sorted by namespace.
     pub tenants: Vec<TenantStats>,
 }
@@ -290,6 +311,10 @@ impl ServerStats {
     /// field numeric, keys stable, no nesting — ready to append to a log or paste into
     /// the bench tooling. Per-tenant shards are summarized by `tenant_count` plus the
     /// `unrouted_*` remainders; the full breakdown lives in [`ServerStats::tenants`].
+    ///
+    /// Every ratio field is a finite number by construction (zero denominators take
+    /// documented sentinels — 1.0 for compression, 0.0 for hit rates and quantiles of
+    /// an empty histogram), so the record always parses as strict JSON.
     pub fn to_json(&self) -> String {
         format!(
             "{{\"sessions_accepted\":{},\"sessions_served\":{},\"sessions_failed\":{},\
@@ -303,7 +328,8 @@ impl ServerStats {
              \"store_incremental_updates\":{},\"store_full_rebuilds\":{},\
              \"store_resident\":{},\"store_capacity\":{},\"store_hit_rate\":{:.4},\
              \"inflight\":{},\"peak_inflight\":{},\
-             \"peak_workers\":{},\"workers\":{},\"max_inflight_sessions\":{}}}",
+             \"peak_workers\":{},\"workers\":{},\"max_inflight_sessions\":{},\
+             \"latency_count\":{},\"latency_p50_ns\":{},\"latency_p99_ns\":{}}}",
             self.sessions_accepted,
             self.sessions_served,
             self.sessions_failed,
@@ -337,8 +363,120 @@ impl ServerStats {
             self.peak_workers,
             self.workers,
             self.max_inflight_sessions,
+            self.latency.count(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.99),
         )
     }
+
+    /// Render the snapshot in the Prometheus text exposition format (version 0.0.4):
+    /// `# HELP`/`# TYPE` headers, counters and gauges as bare samples, and the
+    /// session-latency histograms with *cumulative* `_bucket{le="…"}` series plus
+    /// `_sum`/`_count`, globally and per tenant (`tenant="<namespace>"` label). The
+    /// per-tenant latency series merge exactly to the global family — the same
+    /// shard-sum invariant the counters keep, so a scraper can cross-check either
+    /// scope against the other.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter(
+            &mut out,
+            "setx_sessions_accepted",
+            "Connections routed into a SetX session.",
+            self.sessions_accepted,
+        );
+        counter(
+            &mut out,
+            "setx_sessions_served",
+            "Sessions that completed with a verified report.",
+            self.sessions_served,
+        );
+        counter(
+            &mut out,
+            "setx_sessions_failed",
+            "Sessions that ended in a typed error.",
+            self.sessions_failed,
+        );
+        counter(
+            &mut out,
+            "setx_sessions_rejected",
+            "Connections turned away with a Busy frame.",
+            self.sessions_rejected,
+        );
+        let tenant_counters: [(&str, &str, fn(&TenantStats) -> u64); 4] = [
+            ("setx_tenant_sessions_accepted", "Routed per tenant.", |t| t.sessions_accepted),
+            ("setx_tenant_sessions_served", "Served sessions per tenant.", |t| t.sessions_served),
+            ("setx_tenant_sessions_failed", "Failed sessions per tenant.", |t| t.sessions_failed),
+            ("setx_tenant_sessions_rejected", "Rejections per tenant.", |t| t.sessions_rejected),
+        ];
+        for (name, help, get) in tenant_counters {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for t in &self.tenants {
+                let _ = writeln!(out, "{name}{{tenant=\"{}\"}} {}", t.namespace, get(t));
+            }
+        }
+        let _ = writeln!(
+            out,
+            "# HELP setx_bytes_total Conversation bytes of served sessions, by phase."
+        );
+        let _ = writeln!(out, "# TYPE setx_bytes_total counter");
+        for (i, phase) in ["handshake", "sketch", "residue", "confirm"].iter().enumerate() {
+            let _ = writeln!(out, "setx_bytes_total{{phase=\"{phase}\"}} {}", self.phase_bytes[i]);
+        }
+        counter(
+            &mut out,
+            "setx_raw_bytes_total",
+            "Codec-off-equivalent bytes of the same transcripts.",
+            self.raw_bytes,
+        );
+        let _ = writeln!(
+            out,
+            "# HELP setx_inflight_sessions Currently admitted, unclosed connections."
+        );
+        let _ = writeln!(out, "# TYPE setx_inflight_sessions gauge");
+        let _ = writeln!(out, "setx_inflight_sessions {}", self.inflight);
+        let _ = writeln!(
+            out,
+            "# HELP setx_session_latency_ns Wall time of served sessions in nanoseconds."
+        );
+        let _ = writeln!(out, "# TYPE setx_session_latency_ns histogram");
+        prom_histogram(&mut out, "setx_session_latency_ns", "", &self.latency);
+        let _ = writeln!(
+            out,
+            "# HELP setx_tenant_session_latency_ns Per-tenant wall time of served \
+             sessions in nanoseconds."
+        );
+        let _ = writeln!(out, "# TYPE setx_tenant_session_latency_ns histogram");
+        for t in &self.tenants {
+            let labels = format!("tenant=\"{}\",", t.namespace);
+            prom_histogram(&mut out, "setx_tenant_session_latency_ns", &labels, &t.latency);
+        }
+        out
+    }
+}
+
+/// Append one Prometheus histogram family: cumulative `_bucket{…le="…"}` samples (the
+/// exposition format's `le` is cumulative, unlike [`LogHistogram::buckets`]), the
+/// mandatory `le="+Inf"` bucket, then `_sum` and `_count`. `extra` is either empty or
+/// a `key="value",` prefix spliced before the `le` label.
+fn prom_histogram(out: &mut String, name: &str, extra: &str, h: &LogHistogram) {
+    use std::fmt::Write;
+    let mut cum = 0u64;
+    for (upper, count) in h.buckets() {
+        cum += count;
+        let _ = writeln!(out, "{name}_bucket{{{extra}le=\"{upper}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{{extra}le=\"+Inf\"}} {}", h.count());
+    let bare = extra.trim_end_matches(',');
+    let labels = if bare.is_empty() { String::new() } else { format!("{{{bare}}}") };
+    let _ = writeln!(out, "{name}_sum{labels} {}", h.sum());
+    let _ = writeln!(out, "{name}_count{labels} {}", h.count());
 }
 
 #[cfg(test)]
@@ -391,6 +529,7 @@ mod tests {
             peak_workers: 4,
             workers: 4,
             max_inflight_sessions: 64,
+            latency: LogHistogram::new(),
             tenants: vec![TenantStats { namespace: 0, quota: 64, ..TenantStats::default() }],
         };
         let json = stats.to_json();
@@ -461,6 +600,7 @@ mod tests {
                     if let Some(t) = shard {
                         inner.route_accepted(t);
                         inner.serve(t, &comm);
+                        inner.record_latency(t, 1 + rng.next_u64() % 1_000_000_000);
                     }
                 }
                 1 => {
@@ -516,5 +656,110 @@ mod tests {
             shard_raw,
             "raw bytes != shard sum"
         );
+        // The histogram face of the same invariant: merging the tenant shards
+        // reproduces the global latency histogram bucket-for-bucket, because
+        // `record_latency` writes both scopes from the same sample.
+        let mut merged = LogHistogram::new();
+        for t in &shards {
+            merged.merge(&t.latency.snapshot());
+        }
+        let global = inner.latency.snapshot();
+        assert_eq!(merged, global, "tenant latency shards must merge to the global");
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(merged.quantile(q), global.quantile(q));
+        }
+    }
+
+    /// Every ratio accessor takes a documented sentinel on a zero denominator —
+    /// finite, never NaN — and the JSON record built from an idle server stays
+    /// parseable (no `NaN`/`inf` tokens can appear in the numeric fields).
+    #[test]
+    fn zero_denominator_ratios_are_finite_sentinels() {
+        let idle = ServerStats {
+            sessions_accepted: 0,
+            sessions_served: 0,
+            sessions_failed: 0,
+            sessions_rejected: 0,
+            unrouted_failed: 0,
+            unrouted_rejected: 0,
+            phase_bytes: [0; 4],
+            raw_bytes: 0,
+            pool: PoolStats::default(),
+            sketch_store: SketchStoreStats::default(),
+            inflight: 0,
+            peak_inflight: 0,
+            peak_workers: 0,
+            workers: 0,
+            max_inflight_sessions: 0,
+            latency: LogHistogram::new(),
+            tenants: vec![TenantStats::default()],
+        };
+        assert_eq!(idle.compression_ratio(), 1.0);
+        assert_eq!(idle.pool_hit_rate(), 0.0);
+        assert_eq!(idle.sketch_store_hit_rate(), 0.0);
+        assert_eq!(TenantStats::default().compression_ratio(), 1.0);
+        assert_eq!(CommLog::new().compression_ratio(), 1.0);
+        assert_eq!(idle.latency.quantile(0.99), 0);
+        for v in [idle.compression_ratio(), idle.pool_hit_rate(), idle.sketch_store_hit_rate()] {
+            assert!(v.is_finite());
+        }
+        let json = idle.to_json();
+        assert!(!json.contains("NaN") && !json.contains("inf"), "unparseable: {json}");
+        assert!(json.contains("\"compression_ratio\":1.0000"));
+        assert!(json.contains("\"latency_count\":0"));
+        assert!(json.contains("\"latency_p50_ns\":0"));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_cumulative_buckets_and_tenant_series() {
+        let inner = StatsInner::default();
+        let tenant = TenantCounters::default();
+        for ns in [100u64, 100, 900, 70_000] {
+            inner.record_latency(&tenant, ns);
+        }
+        let shard = tenant.snapshot(7, 16, PoolStats::default(), SketchStoreStats::default());
+        let stats = ServerStats {
+            sessions_accepted: 4,
+            sessions_served: 4,
+            sessions_failed: 0,
+            sessions_rejected: 0,
+            unrouted_failed: 0,
+            unrouted_rejected: 0,
+            phase_bytes: [10, 200, 40, 8],
+            raw_bytes: 300,
+            pool: PoolStats::default(),
+            sketch_store: SketchStoreStats::default(),
+            inflight: 2,
+            peak_inflight: 3,
+            peak_workers: 2,
+            workers: 4,
+            max_inflight_sessions: 64,
+            latency: inner.latency.snapshot(),
+            tenants: vec![shard],
+        };
+        let text = stats.to_prometheus();
+        assert!(text.contains("# TYPE setx_sessions_served counter"));
+        assert!(text.contains("setx_sessions_served 4"));
+        assert!(text.contains("setx_tenant_sessions_served{tenant=\"7\"} 0"));
+        assert!(text.contains("setx_bytes_total{phase=\"sketch\"} 200"));
+        assert!(text.contains("# TYPE setx_inflight_sessions gauge"));
+        assert!(text.contains("setx_inflight_sessions 2"));
+        assert!(text.contains("# TYPE setx_session_latency_ns histogram"));
+        assert!(text.contains("setx_session_latency_ns_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("setx_session_latency_ns_count 4"));
+        assert!(text.contains("setx_session_latency_ns_sum 71100"));
+        assert!(text.contains("latency_ns_bucket{tenant=\"7\",le=\"+Inf\"} 4"));
+        assert!(text.contains("setx_tenant_session_latency_ns_count{tenant=\"7\"} 4"));
+        // `le` series must be cumulative: extract the global bucket counts in order
+        // and check monotonicity, ending at the +Inf total.
+        let mut last = 0u64;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("setx_session_latency_ns_bucket{le=") {
+                let v: u64 = rest.split_whitespace().last().unwrap().parse().unwrap();
+                assert!(v >= last, "non-cumulative bucket in {line}");
+                last = v;
+            }
+        }
+        assert_eq!(last, 4);
     }
 }

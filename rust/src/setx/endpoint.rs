@@ -30,6 +30,7 @@ use std::sync::Arc;
 use super::{DecodeFailure, DiffSize, Mode, ProtocolKind, SetxConfig, SetxError, SetxReport};
 use crate::decoder::DecoderCache;
 use crate::metrics::CommLog;
+use crate::obs::{SpanKind, Tracer};
 use crate::protocol::bidi::BidiOptions;
 use crate::protocol::estimate::{MinHashEstimator, StrataEstimator};
 use crate::protocol::session::{frame_phase, label, Session, SessionError, SessionEvent};
@@ -365,6 +366,12 @@ pub(crate) struct Endpoint<'a> {
     /// O(m·n) encodes and store insertions for attempt geometries it never follows
     /// through on.
     pending_host_matrix: Option<crate::matrix::CsMatrix>,
+    /// Timeline recorder (see [`crate::obs`]): `Handshake`/`Estimate` spans around the
+    /// `EstHello` exchange, one `Attempt(i)` span per ladder rung, and the per-frame
+    /// `Round`/`Confirm` markers — with each inner [`Session`]'s trace (recorded through
+    /// a [`Tracer::child`] on the same clock) merged in by [`Endpoint::absorb_session`].
+    /// Disabled (zero recording) when [`SetxConfig`]'s `tracing` knob is off.
+    tracer: Tracer,
 }
 
 impl<'a> Endpoint<'a> {
@@ -385,6 +392,7 @@ impl<'a> Endpoint<'a> {
     }
 
     fn with_set_ref(cfg: SetxConfig, set: SetRef<'a>, client: bool) -> Endpoint<'a> {
+        let tracer = if cfg.tracing { Tracer::new() } else { Tracer::disabled() };
         Endpoint {
             cfg,
             set,
@@ -401,6 +409,7 @@ impl<'a> Endpoint<'a> {
             enc: EncodeConfig { threads: cfg.encode_threads },
             sketch_source: None,
             pending_host_matrix: None,
+            tracer,
         }
     }
 
@@ -477,7 +486,13 @@ impl<'a> Endpoint<'a> {
             self.phase = EpPhase::AwaitOpen;
             return Vec::new();
         }
+        // Handshake spans the whole EstHello exchange (closed once `negotiate`
+        // succeeds); the nested Estimate spans isolate the estimator build here and the
+        // d̂ derivation in `on_msg`.
+        self.tracer.open(SpanKind::Handshake);
+        self.tracer.open(SpanKind::Estimate);
         let (msg, ests) = build_est_hello(&self.cfg, self.set.as_slice());
+        self.tracer.close(SpanKind::Estimate);
         self.ests = ests;
         self.record_sent(&msg);
         self.phase = EpPhase::AwaitEstHello;
@@ -533,7 +548,8 @@ impl<'a> Endpoint<'a> {
                     return Step::Fatal(Vec::new(), SetxError::MalformedFrame("set_len"));
                 };
                 let my_ests = self.ests.take();
-                let nego = match negotiate(
+                self.tracer.open(SpanKind::Estimate);
+                let nego_res = negotiate(
                     &self.cfg,
                     self.client,
                     self.set.as_slice().len(),
@@ -543,10 +559,13 @@ impl<'a> Endpoint<'a> {
                     strata.as_deref(),
                     minhash.as_deref(),
                     *codec,
-                ) {
+                );
+                self.tracer.close(SpanKind::Estimate);
+                let nego = match nego_res {
                     Ok(n) => n,
                     Err(e) => return Step::Fatal(Vec::new(), e),
                 };
+                self.tracer.close(SpanKind::Handshake);
                 self.nego = Some(nego);
                 if nego.initiator {
                     Step::Send(self.open_attempt())
@@ -694,6 +713,9 @@ impl<'a> Endpoint<'a> {
         let nego = self.nego.expect("negotiated before AwaitOpen");
         let kind = attempt_kind(&self.cfg, &nego, self.attempt);
         self.kind = kind;
+        // One span per ladder rung on this side too: opened when the peer's Hello
+        // arrives, closed by `next_attempt`/`finish`.
+        self.tracer.open(SpanKind::Attempt(self.attempt));
         match kind {
             ProtocolKind::Bidi => {
                 let cache = self.take_cache();
@@ -701,6 +723,7 @@ impl<'a> Endpoint<'a> {
                 let mut session =
                     Session::responder_cached(self.set.as_slice(), engine, self.client, cache);
                 session.set_encode_config(self.enc);
+                session.set_tracer(self.tracer.child());
                 // Note the attempt geometry (the `Hello` carries it) but *defer* the
                 // store checkout to the initiator's `Sketch` frame — the self-encode is
                 // only needed then, and resolving on a bare `Hello` would hand a peer
@@ -814,6 +837,7 @@ impl<'a> Endpoint<'a> {
         let nego = self.nego.expect("negotiated before open_attempt");
         let kind = attempt_kind(&self.cfg, &nego, self.attempt);
         self.kind = kind;
+        self.tracer.open(SpanKind::Attempt(self.attempt));
         let params = self.attempt_params(&nego, kind);
         match kind {
             ProtocolKind::Uni => {
@@ -827,6 +851,7 @@ impl<'a> Endpoint<'a> {
                     set_len: self.set.as_slice().len() as u64,
                     namespace: self.cfg.namespace(),
                 };
+                self.tracer.open(SpanKind::SketchEncode);
                 let host = self.own_sketch(&params);
                 let (sketch, _) = uni::alice_encode_with(
                     self.set.as_slice(),
@@ -835,6 +860,7 @@ impl<'a> Endpoint<'a> {
                     host.as_deref(),
                     nego.codec,
                 );
+                self.tracer.close(SpanKind::SketchEncode);
                 self.record_sent(&hello);
                 self.record_sent(&sketch);
                 self.phase = EpPhase::UniWaitConfirm;
@@ -847,7 +873,7 @@ impl<'a> Endpoint<'a> {
                 let cache = self.take_cache();
                 let host = self.own_sketch(&params);
                 let engine = BidiOptions { codec: nego.codec, ..self.cfg.engine };
-                let (session, opening) = Session::initiator_with(
+                let (session, opening) = Session::initiator_traced(
                     &params,
                     self.set.as_slice(),
                     engine,
@@ -855,6 +881,7 @@ impl<'a> Endpoint<'a> {
                     cache,
                     self.enc,
                     host.as_deref(),
+                    self.tracer.child(),
                 );
                 self.phase = EpPhase::Bidi(session);
                 opening
@@ -934,6 +961,7 @@ impl<'a> Endpoint<'a> {
     /// Advance the ladder: either re-open (initiator), re-arm for the peer's `Hello`
     /// (responder), or — when the ladder is exhausted — fail with the typed error.
     fn next_attempt(&mut self, mut out: Vec<Msg>, failure: DecodeFailure) -> Step {
+        self.tracer.close(SpanKind::Attempt(self.attempt));
         self.attempt += 1;
         self.unique.clear();
         self.settled = false;
@@ -955,6 +983,7 @@ impl<'a> Endpoint<'a> {
     }
 
     fn finish(&mut self, out: Vec<Msg>) -> Step {
+        self.tracer.close(SpanKind::Attempt(self.attempt));
         self.phase = EpPhase::Finished;
         Step::Finish(out, Box::new(self.report()))
     }
@@ -962,8 +991,9 @@ impl<'a> Endpoint<'a> {
     /// Merge a finished (or abandoned) session's transcript and result into the
     /// endpoint, reclaiming the decoder-reuse cache (now holding the session's decoder).
     fn absorb_session(&mut self, session: Session) {
-        let (comm, outcome, cache) = session.into_parts();
+        let (comm, outcome, cache, trace) = session.into_parts();
         self.comm.extend(&comm);
+        self.tracer.absorb(&trace);
         self.unique = outcome.unique;
         self.settled = outcome.converged;
         self.cache = cache;
@@ -986,17 +1016,33 @@ impl<'a> Endpoint<'a> {
             rounds,
             comm: self.comm.clone(),
             local_is_alice: self.client,
+            trace: self.tracer.trace().clone(),
         }
     }
 
     fn record_sent(&mut self, msg: &Msg) {
         let (enc, raw) = (msg.wire_len(), msg.raw_wire_len());
-        self.comm.record_framed(self.client, frame_phase(msg), enc, raw);
+        let phase = frame_phase(msg);
+        self.comm.record_framed(self.client, phase, enc, raw);
+        self.mark_frame(phase);
     }
 
     fn record_recv(&mut self, msg: &Msg) {
         let (enc, raw) = (msg.wire_len(), msg.raw_wire_len());
-        self.comm.record_framed(!self.client, frame_phase(msg), enc, raw);
+        let phase = frame_phase(msg);
+        self.comm.record_framed(!self.client, phase, enc, raw);
+        self.mark_frame(phase);
+    }
+
+    /// Same marker/frame identity as the session's: an instant `Round`/`Confirm` marker
+    /// per frame the endpoint itself accounts (uni sketches, confirms, drained rounds),
+    /// emitted at the only points that write this [`CommLog`].
+    fn mark_frame(&mut self, phase: crate::metrics::Phase) {
+        if phase.is_payload() {
+            self.tracer.instant(SpanKind::Round);
+        } else if phase == crate::metrics::Phase::Confirm {
+            self.tracer.instant(SpanKind::Confirm);
+        }
     }
 }
 

@@ -42,6 +42,7 @@ pub mod transport;
 use crate::decoder::DecoderCache;
 use crate::hash::hash_u64;
 use crate::metrics::{CommLog, Phase};
+use crate::obs::{PhaseDurations, SessionTrace};
 use crate::protocol::bidi::BidiOptions;
 use crate::protocol::session::SessionError;
 use endpoint::{Endpoint, Step};
@@ -196,6 +197,11 @@ pub struct SetxConfig {
     /// Engine tunables (round budget, SMF fpr, …) — advanced; defaults match the paper.
     /// `engine.namespace` carries the tenant namespace (see [`SetxConfig::namespace`]).
     pub engine: BidiOptions,
+    /// Record a [`SessionTrace`] timeline (default on; see [`crate::obs`]). Off, the
+    /// tracer is fully disabled — no timestamps taken, nothing allocated — which is the
+    /// bench-ablation path. **Deliberately not fingerprinted**: tracing is pure local
+    /// observation with zero wire impact, so traced and untraced peers interoperate.
+    pub tracing: bool,
 }
 
 impl SetxConfig {
@@ -321,6 +327,14 @@ impl SetxBuilder {
         self
     }
 
+    /// Record a [`SessionTrace`] timeline for the run (default on; see
+    /// [`SetxConfig::tracing`]). Turn off for the zero-overhead ablation — the report's
+    /// [`SetxReport::trace`] comes back empty.
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.cfg.tracing = on;
+        self
+    }
+
     /// Advertise the columnar wire codec (default on). The codec only engages when
     /// *both* endpoints advertise it in their `EstHello`; a mixed deployment negotiates
     /// down to the pre-codec frame format, byte-for-byte. Framing knob — deliberately
@@ -420,6 +434,7 @@ impl Setx {
                 max_attempts: 3,
                 encode_threads: 0,
                 engine: BidiOptions::default(),
+                tracing: true,
             },
         }
     }
@@ -543,6 +558,11 @@ pub struct SetxReport {
     pub comm: CommLog,
     /// Whether this endpoint is "Alice" (the client end) in the log's direction labels.
     pub(crate) local_is_alice: bool,
+    /// Timestamped timeline of the run (handshake, estimate, one span per ladder
+    /// attempt, one marker per payload frame, …) — empty when the endpoint ran with
+    /// `tracing(false)`, or for partitioned aggregates (partitions run concurrently, so
+    /// a single merged timeline would be misleading). See [`crate::obs`].
+    pub trace: SessionTrace,
 }
 
 impl SetxReport {
@@ -593,6 +613,13 @@ impl SetxReport {
     /// Both directions of one phase.
     pub fn phase_total(&self, phase: Phase) -> usize {
         self.comm.bytes_by_phase(phase)
+    }
+
+    /// Per-phase wall time folded from [`SetxReport::trace`] (all zeros when tracing was
+    /// off): where the run's time went, the duration counterpart of
+    /// [`SetxReport::breakdown`].
+    pub fn phase_durations(&self) -> PhaseDurations {
+        self.trace.phase_durations()
     }
 
     /// One-line per-phase breakdown, e.g. for CLI output.
@@ -661,6 +688,11 @@ mod tests {
         let plain = Setx::builder(&set).codec(false).build().unwrap();
         assert_eq!(base, plain.cfg.fingerprint());
         assert!(!plain.cfg.engine.codec);
+        // Tracing is local observation with zero wire impact: a traced endpoint must
+        // still fingerprint-match an untraced (ablation) peer.
+        let untraced = Setx::builder(&set).tracing(false).build().unwrap();
+        assert_eq!(base, untraced.cfg.fingerprint());
+        assert!(!untraced.cfg.tracing);
     }
 
     #[test]

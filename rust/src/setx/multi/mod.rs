@@ -53,6 +53,7 @@ use crate::decoder::DecoderCache;
 use crate::entropy::{compress_sketch, recover_sketch};
 use crate::hash::hash_u64;
 use crate::metrics::CommLog;
+use crate::obs::{SessionTrace, SpanKind, Tracer};
 use crate::protocol::session::{codec_params, frame_phase};
 use crate::protocol::wire::{Msg, DIRECTIVE_IN_SYNC, DIRECTIVE_SESSION, REASON_OK};
 use crate::protocol::{uni, wire_geometry_ok, CsParams};
@@ -178,6 +179,10 @@ pub struct MultiReport {
     /// Concatenation of every spoke's transcript — per-party bytes sum to this total by
     /// construction.
     pub comm: CommLog,
+    /// Coordinator timeline: one `MultiJoin`/`MultiCollect`/`MultiConstraint`/
+    /// `MultiFinal` span per round phase (barrier to barrier). Empty when the config ran
+    /// with `tracing` off. See [`crate::obs`].
+    pub trace: SessionTrace,
 }
 
 impl MultiReport {
@@ -276,6 +281,9 @@ pub struct MultiCoordinator {
     agg: Vec<i64>,
     parties_in_agg: u32,
     intersection: Option<Vec<u64>>,
+    /// Round-phase timeline: each barrier in [`MultiCoordinator::advance`] closes the
+    /// current phase span and opens the next.
+    tracer: Tracer,
 }
 
 impl MultiCoordinator {
@@ -292,6 +300,8 @@ impl MultiCoordinator {
         }
         let mut sorted = (*set).clone();
         sorted.sort_unstable();
+        let mut tracer = if cfg.tracing { Tracer::new() } else { Tracer::disabled() };
+        tracer.open(SpanKind::MultiJoin);
         Ok(MultiCoordinator {
             cfg: *cfg,
             set,
@@ -309,6 +319,7 @@ impl MultiCoordinator {
             agg: Vec::new(),
             parties_in_agg: 1,
             intersection: None,
+            tracer,
         })
     }
 
@@ -555,6 +566,8 @@ impl MultiCoordinator {
         {
             self.joins_closed = true;
             self.collect_sent = true;
+            self.tracer.close(SpanKind::MultiJoin);
+            self.tracer.open(SpanKind::MultiCollect);
             let live: Vec<u32> = self.live_ids();
             if !live.is_empty() {
                 // One matrix for every spoke, sized for the worst estimated difference.
@@ -608,6 +621,8 @@ impl MultiCoordinator {
             && self.live_states_none(|s| matches!(s, SpokeState::AwaitSketch | SpokeState::Joined))
         {
             self.directives_sent = true;
+            self.tracer.close(SpanKind::MultiCollect);
+            self.tracer.open(SpanKind::MultiConstraint);
             let digest = agg_digest(&self.agg, collect_seed(self.cfg.seed));
             let counts32: Option<Vec<i32>> = self
                 .agg
@@ -662,6 +677,8 @@ impl MultiCoordinator {
                 )
             })
         {
+            self.tracer.close(SpanKind::MultiConstraint);
+            self.tracer.open(SpanKind::MultiFinal);
             let mut gone: HashSet<u64> = HashSet::new();
             for spoke in self.spokes.values().filter(|s| s.live()) {
                 gone.extend(spoke.unique.iter().copied());
@@ -705,6 +722,7 @@ impl MultiCoordinator {
             && self.live_states_none(|s| matches!(s, SpokeState::AwaitVerdict { .. }))
         {
             self.finals_sent = true;
+            self.tracer.close(SpanKind::MultiFinal);
             for id in self.live_ids() {
                 let spoke = self.spokes.get_mut(&id).expect("live id");
                 if matches!(spoke.state, SpokeState::Settled) {
@@ -729,7 +747,8 @@ impl MultiCoordinator {
 
     /// Consume the coordinator into its report. Call once [`MultiCoordinator::is_done`];
     /// earlier calls report the round as it stands (unfinished spokes show errors).
-    pub fn into_report(self) -> MultiReport {
+    pub fn into_report(mut self) -> MultiReport {
+        let trace = self.tracer.take();
         let intersection = self.intersection.unwrap_or_else(|| self.sorted.clone());
         let mut comm = CommLog::new();
         let parties: Vec<PartyOutcome> = self
@@ -746,7 +765,7 @@ impl MultiCoordinator {
                 }
             })
             .collect();
-        MultiReport { intersection, parties, comm }
+        MultiReport { intersection, parties, comm, trace }
     }
 }
 
@@ -846,6 +865,7 @@ pub struct Party {
     intersection: Vec<u64>,
     kind: ProtocolKind,
     attempts: u32,
+    tracer: Tracer,
 }
 
 impl Party {
@@ -882,6 +902,7 @@ impl Party {
             intersection: Vec::new(),
             kind: ProtocolKind::Uni,
             attempts: 0,
+            tracer: if cfg.tracing { Tracer::new() } else { Tracer::disabled() },
         })
     }
 
@@ -891,7 +912,10 @@ impl Party {
 
     /// Opening frames (the party hello).
     pub fn start(&mut self) -> Vec<Msg> {
+        self.tracer.open(SpanKind::Handshake);
+        self.tracer.open(SpanKind::Estimate);
         let (mut hello, ests) = build_est_hello(&self.cfg, &self.set);
+        self.tracer.close(SpanKind::Estimate);
         if let Msg::EstHello { party, .. } = &mut hello {
             *party = Some((self.id, self.count));
         }
@@ -941,7 +965,8 @@ impl Party {
                     return Step::Fatal(Vec::new(), SetxError::MalformedFrame("set_len"));
                 };
                 let ests = self.ests.take();
-                match negotiate(
+                self.tracer.open(SpanKind::Estimate);
+                let nego = negotiate(
                     &self.cfg,
                     true,
                     self.set.len(),
@@ -951,8 +976,11 @@ impl Party {
                     strata.as_deref(),
                     minhash.as_deref(),
                     *codec,
-                ) {
+                );
+                self.tracer.close(SpanKind::Estimate);
+                match nego {
                     Ok(nego) => {
+                        self.tracer.close(SpanKind::Handshake);
                         self.nego = Some(nego);
                         self.phase = PartyPhase::AwaitCollectHello;
                         Step::Continue
@@ -1004,8 +1032,10 @@ impl Party {
                     est_b_unique: est_b,
                 };
                 let wire_codec = self.nego.is_some_and(|n| n.codec);
+                self.tracer.open(SpanKind::SketchEncode);
                 let (sketch, _) =
                     uni::alice_encode_with(&self.set, &params, self.enc, None, wire_codec);
+                self.tracer.close(SpanKind::SketchEncode);
                 self.record_sent(&sketch);
                 self.phase = PartyPhase::AwaitDirective { params };
                 Step::Send(vec![sketch])
@@ -1059,6 +1089,7 @@ impl Party {
                 Step::Finish(msgs, report) => {
                     self.cache = ep.take_cache();
                     self.comm.extend(&report.comm);
+                    self.tracer.absorb(&report.trace);
                     self.kind = report.kind;
                     self.attempts = report.attempts;
                     self.unique = report.local_unique;
@@ -1189,6 +1220,7 @@ impl Party {
                     rounds: self.comm.payload_frames(),
                     comm: std::mem::take(&mut self.comm),
                     local_is_alice: true,
+                    trace: self.tracer.take(),
                 };
                 Step::Finish(Vec::new(), Box::new(report))
             }
@@ -1240,10 +1272,24 @@ impl Party {
 
     fn record_sent(&mut self, msg: &Msg) {
         log_frame(&mut self.comm, true, msg);
+        self.mark_frame(msg);
     }
 
     fn record_recv(&mut self, msg: &Msg) {
         log_frame(&mut self.comm, false, msg);
+        self.mark_frame(msg);
+    }
+
+    /// One [`SpanKind::Round`] marker per payload frame this spoke logs directly, so
+    /// the timeline's marker count matches [`CommLog::payload_frames`] (frames logged
+    /// by the inner pairwise endpoint carry their own markers, absorbed at Finish).
+    fn mark_frame(&mut self, msg: &Msg) {
+        let phase = frame_phase(msg);
+        if phase.is_payload() {
+            self.tracer.instant(SpanKind::Round);
+        } else if phase == crate::metrics::Phase::Confirm {
+            self.tracer.instant(SpanKind::Confirm);
+        }
     }
 }
 

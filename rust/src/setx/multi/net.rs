@@ -16,11 +16,12 @@ use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::super::transport::{frame_extent, TcpTransport};
 use super::super::{SetxConfig, SetxError, SetxReport};
 use super::{MultiCoordinator, MultiError, MultiReport, Party};
+use crate::obs::{default_clock, Clock};
 use crate::protocol::wire::Msg;
 
 /// How often a blocked reader wakes to notice a shut-down socket or closed event loop.
@@ -40,7 +41,9 @@ enum Event {
 struct Conn {
     write: TcpStream,
     party: Option<u32>,
-    last: Instant,
+    /// Last-activity stamp from [`default_clock`], in nanoseconds (not `Instant`, so
+    /// deadline arithmetic shares the one observability clock and tests can audit it).
+    last_ns: u64,
     open: bool,
 }
 
@@ -68,11 +71,13 @@ pub fn host_round(
     let io = |e: std::io::Error| MultiError::Party { party: 0, error: SetxError::Io(e) };
     listener.set_nonblocking(true).map_err(io)?;
     let coord = MultiCoordinator::new(cfg, std::sync::Arc::new(set), count)?;
+    let clock = default_clock();
+    let deadline_ns = u64::try_from(deadline.as_nanos()).unwrap_or(u64::MAX);
     std::thread::scope(|scope| {
         let mut coord = coord;
         let (tx, rx) = mpsc::channel::<(usize, Event)>();
         let mut conns: Vec<Conn> = Vec::new();
-        let started = Instant::now();
+        let started_ns = clock.now_ns();
         loop {
             // Accept new spokes while the roster is open; after that, late dialers are
             // turned away at the socket (the daemon mode answers `Busy` instead).
@@ -89,7 +94,7 @@ pub fn host_round(
                             conns.push(Conn {
                                 write: stream,
                                 party: None,
-                                last: Instant::now(),
+                                last_ns: clock.now_ns(),
                                 open: true,
                             });
                         }
@@ -97,7 +102,9 @@ pub fn host_round(
                     Err(e) if e.kind() == ErrorKind::WouldBlock => {}
                     Err(_) => {}
                 }
-                if started.elapsed() >= deadline && coord.roster_open() {
+                if clock.now_ns().saturating_sub(started_ns) >= deadline_ns
+                    && coord.roster_open()
+                {
                     let frames = coord.deadline_join();
                     deliver(&mut coord, &mut conns, frames);
                 }
@@ -110,11 +117,11 @@ pub fn host_round(
             };
             events.extend(rx.try_iter());
             for (idx, ev) in events {
-                handle_event(&mut coord, &mut conns, idx, ev);
+                handle_event(&mut coord, &mut conns, idx, ev, clock.now_ns());
             }
             // Per-party deadline scan: only spokes the round is awaiting can time out;
             // barrier-parked (or unjoined) connections get their clock refreshed.
-            let now = Instant::now();
+            let now_ns = clock.now_ns();
             for idx in 0..conns.len() {
                 if !conns[idx].open {
                     continue;
@@ -126,8 +133,8 @@ pub fn host_round(
                     continue;
                 };
                 if !coord.awaiting(party) {
-                    conns[idx].last = now;
-                } else if now.duration_since(conns[idx].last) >= deadline {
+                    conns[idx].last_ns = now_ns;
+                } else if now_ns.saturating_sub(conns[idx].last_ns) >= deadline_ns {
                     conns[idx].close();
                     let frames = coord.drop_party(party, MultiError::PartyTimeout { party });
                     deliver(&mut coord, &mut conns, frames);
@@ -160,10 +167,16 @@ pub fn join_round(
     party.run(&mut transport).map_err(wrap)
 }
 
-fn handle_event(coord: &mut MultiCoordinator, conns: &mut [Conn], idx: usize, ev: Event) {
+fn handle_event(
+    coord: &mut MultiCoordinator,
+    conns: &mut [Conn],
+    idx: usize,
+    ev: Event,
+    now_ns: u64,
+) {
     match ev {
         Event::Frame(msg) => {
-            conns[idx].last = Instant::now();
+            conns[idx].last_ns = now_ns;
             match conns[idx].party {
                 None => match coord.route_hello(&msg) {
                     Ok((party, frames)) => {

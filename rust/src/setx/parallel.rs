@@ -114,6 +114,9 @@ pub fn run_partitioned(
         .map(|p| {
             let mut c = *cfg;
             c.seed ^= hash_u64(p as u64, 0x9a27_12);
+            // The aggregate report carries no timeline (see `empty_report`), so don't
+            // pay for per-partition recording nobody will read.
+            c.tracing = false;
             c
         })
         .collect();
@@ -197,6 +200,9 @@ fn empty_report(comm: CommLog, local_is_alice: bool) -> SetxReport {
         rounds: 0,
         comm,
         local_is_alice,
+        // Partitions run concurrently on the pool: a merged timeline would interleave
+        // unrelated conversations, so the aggregate deliberately carries none.
+        trace: crate::obs::SessionTrace::default(),
     }
 }
 
@@ -278,6 +284,7 @@ mod tests {
             rounds,
             comm: CommLog::new(),
             local_is_alice: true,
+            trace: crate::obs::SessionTrace::default(),
         };
         let mut agg = empty_report(CommLog::new(), true);
         merge_into(&mut agg, mk(ProtocolKind::Uni, 1, 1));

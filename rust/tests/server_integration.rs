@@ -14,7 +14,7 @@ use commonsense::setx::multi::net::join_round;
 use commonsense::setx::multi::{MultiError, Party};
 use commonsense::setx::transport::TcpTransport;
 use commonsense::setx::{Setx, SetxError};
-use std::io::Write;
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -597,6 +597,114 @@ fn mixed_tenant_fleet_matches_references_and_shards_sum_to_globals() {
     for t in &stats.tenants {
         assert!(t.sessions_served >= 1, "tenant {} starved: {stats:?}", t.namespace);
     }
+}
+
+/// One raw HTTP/1.0 request against the metrics side socket; returns the full response.
+fn http_get(addr: std::net::SocketAddr, request: &[u8]) -> String {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(request).unwrap();
+    let mut response = String::new();
+    conn.read_to_string(&mut response).unwrap();
+    response
+}
+
+/// The live metrics endpoint: `metrics_addr("127.0.0.1:0")` starts an HTTP responder on
+/// its own thread; a plain GET returns Prometheus text whose tenant series sum exactly
+/// to the globals and whose histogram buckets are cumulative. Latency is recorded only
+/// for *served* sessions, on both the tenant shard and the global histogram, so the
+/// per-tenant counts shard the global count exactly.
+#[test]
+fn metrics_endpoint_serves_prometheus_text_with_exact_shards() {
+    let cfg = LoadgenConfig {
+        clients: 4,
+        rounds: 2,
+        common: 1_000,
+        client_unique: 20,
+        server_unique: 30,
+        seed: 23,
+        tenants: 2,
+        ..LoadgenConfig::default()
+    };
+    let (hosts, _, _) = cfg.tenant_workload();
+    let server = SetxServer::builder(cfg.endpoint(&hosts[0]).unwrap())
+        .workers(2)
+        .metrics_addr("127.0.0.1:0")
+        .slow_session_threshold(Duration::from_secs(3_600))
+        .bind("127.0.0.1:0")
+        .unwrap();
+    assert!(server.add_tenant(1, hosts[1].clone()));
+    let maddr = server.metrics_addr().expect("metrics responder must be up");
+
+    let report = loadgen::run(server.local_addr(), &cfg);
+    assert!(report.verified(), "failures: {:?}", report.failures);
+    wait_until("all sessions to be counted and drained", || {
+        let s = server.stats();
+        s.sessions_served >= 8 && s.inflight == 0
+    });
+
+    let response = http_get(maddr, b"GET /metrics HTTP/1.0\r\n\r\n");
+    assert!(response.starts_with("HTTP/1.0 200 OK"), "bad status line: {response}");
+    let body = response.split("\r\n\r\n").nth(1).expect("header/body split");
+
+    // Every non-comment line is `name{labels} value` with a numeric value.
+    for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let mut parts = line.split_whitespace();
+        let name = parts.next().expect("metric name");
+        let value = parts.next().unwrap_or_else(|| panic!("no value on: {line}"));
+        assert!(name.starts_with("setx_"), "foreign metric name: {line}");
+        assert!(value.parse::<f64>().is_ok(), "unparseable value on: {line}");
+        assert_eq!(parts.next(), None, "trailing tokens on: {line}");
+    }
+    let metric = |name: &str| -> u64 {
+        body.lines()
+            .find(|l| l.split_whitespace().next() == Some(name))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("metric {name} missing"))
+    };
+    let label_sum = |prefix: &str| -> u64 {
+        body.lines()
+            .filter(|l| l.starts_with(prefix))
+            .filter_map(|l| l.split_whitespace().nth(1))
+            .filter_map(|v| v.parse::<u64>().ok())
+            .sum()
+    };
+    assert_eq!(metric("setx_sessions_served"), 8);
+    assert_eq!(metric("setx_inflight_sessions"), 0);
+    assert_eq!(
+        label_sum("setx_tenant_sessions_served{"),
+        8,
+        "tenant served series must sum to the global"
+    );
+    // Histogram exposition: buckets cumulative, `+Inf` equal to `_count`, and only
+    // served sessions timed.
+    let mut last = 0u64;
+    let mut bucket_lines = 0usize;
+    for line in body.lines().filter(|l| l.starts_with("setx_session_latency_ns_bucket{")) {
+        let v: u64 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!(v >= last, "buckets must be cumulative: {line}");
+        last = v;
+        bucket_lines += 1;
+    }
+    assert!(bucket_lines >= 2, "histogram must expose buckets plus +Inf");
+    assert_eq!(metric("setx_session_latency_ns_count"), 8, "only served sessions are timed");
+    assert_eq!(last, 8, "+Inf bucket must equal _count");
+    assert_eq!(
+        label_sum("setx_tenant_session_latency_ns_count{"),
+        8,
+        "tenant latency histograms must shard the global count exactly"
+    );
+
+    // A non-GET request gets a 400 and the responder survives to serve the next probe.
+    let bad = http_get(maddr, b"BOGUS\r\n\r\n");
+    assert!(bad.starts_with("HTTP/1.0 400"), "non-GET must 400: {bad}");
+    let again = http_get(maddr, b"GET / HTTP/1.0\r\n\r\n");
+    assert!(again.contains("setx_sessions_served"), "endpoint died after the 400");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_failed, 0, "{stats:?}");
+    assert_eq!(stats.latency.count(), 8);
+    assert!(stats.latency.quantile(0.99) >= stats.latency.quantile(0.5));
 }
 
 /// Coordinator mode end to end: a 3-party round through the daemon — two spokes join a

@@ -1,0 +1,144 @@
+//! Trace completeness properties for the observability layer ([`commonsense::obs`]).
+//!
+//! Every session's [`SessionTrace`] must be *well-formed* (non-decreasing timestamps,
+//! open/close edges balanced per span kind) and *complete*: exactly one
+//! [`SpanKind::Attempt`] span per ladder rung the report counts, and exactly one
+//! [`SpanKind::Round`] marker per payload frame (`report.rounds`). Both invariants are
+//! structural — the spans are emitted at the same choke points that advance the ladder
+//! and charge the comm log — and these tests pin them across workload shapes
+//! (subset / overlap / disjoint) × both codec settings, through a forced
+//! ladder-escalation run, and through the multi-party coordinator's barrier timeline.
+//!
+//! [`SessionTrace`]: commonsense::obs::SessionTrace
+//! [`SpanKind::Attempt`]: commonsense::obs::SpanKind::Attempt
+//! [`SpanKind::Round`]: commonsense::obs::SpanKind::Round
+
+use commonsense::data::synth;
+use commonsense::obs::{PhaseDurations, SpanEdge, SpanKind};
+use commonsense::setx::{Mode, Setx, SetxReport};
+use std::time::Duration;
+
+/// The completeness contract every traced report must satisfy.
+fn assert_trace_complete(report: &SetxReport, label: &str) {
+    let trace = &report.trace;
+    assert!(!trace.is_empty(), "{label}: traced session produced an empty timeline");
+    assert!(trace.is_well_formed(), "{label}: unbalanced or out-of-order trace");
+    let attempt_spans = trace.count_spans(|k| matches!(k, SpanKind::Attempt(_)));
+    assert_eq!(
+        attempt_spans,
+        report.attempts as usize,
+        "{label}: one span per ladder attempt (report says {})",
+        report.attempts
+    );
+    let round_markers = trace.count_spans(|k| k == SpanKind::Round);
+    assert_eq!(
+        round_markers,
+        report.rounds,
+        "{label}: one marker per payload frame (report says {})",
+        report.rounds
+    );
+    assert_eq!(
+        trace.count_spans(|k| k == SpanKind::Handshake),
+        1,
+        "{label}: exactly one handshake span"
+    );
+    // The derived breakdown is consistent: phases are sub-intervals of the whole.
+    let pd = report.phase_durations();
+    assert!(pd.total >= pd.handshake, "{label}: handshake exceeds total");
+    assert!(pd.total >= pd.attempts, "{label}: attempts exceed total");
+}
+
+/// Well-formedness and span-count exactness hold across workload shapes × codecs, on
+/// both endpoints of the session.
+#[test]
+fn traces_are_complete_across_shapes_and_codecs() {
+    let shapes: [(&str, (Vec<u64>, Vec<u64>)); 3] = [
+        ("subset", synth::subset_pair(4_000, 120, 0xA1)),
+        ("overlap", synth::overlap_pair(3_000, 80, 120, 0xB2)),
+        ("disjoint", synth::overlap_pair(0, 150, 200, 0xC3)),
+    ];
+    for (shape, (a, b)) in shapes {
+        for codec in [true, false] {
+            let build = |set: &[u64]| Setx::builder(set).codec(codec).seed(9).build().unwrap();
+            let (ra, rb) = build(&a).run_pair(&build(&b)).unwrap();
+            assert_eq!(ra.intersection, synth::intersect(&a, &b), "{shape} codec={codec}");
+            assert_trace_complete(&ra, &format!("{shape} codec={codec} alice"));
+            assert_trace_complete(&rb, &format!("{shape} codec={codec} bob"));
+        }
+    }
+}
+
+/// A deliberately under-provisioned first attempt (safety 0.45) forces the escalation
+/// ladder; the trace then carries one span per rung — `Attempt(0)`, `Attempt(1)`, … —
+/// each exactly once, and the rung spans carry real (timed) durations.
+#[test]
+fn forced_escalation_traces_one_span_per_rung() {
+    let (a, b) = synth::overlap_pair(6_000, 150, 150, 0x1ad);
+    let build = |set: &[u64]| {
+        Setx::builder(set).mode(Mode::Bidi).safety(0.45).max_attempts(4).seed(3).build().unwrap()
+    };
+    let (ra, rb) = build(&a).run_pair(&build(&b)).unwrap();
+    assert!(ra.attempts >= 2, "safety 0.45 must fail attempt 0 (attempts = {})", ra.attempts);
+    for (label, r) in [("alice", &ra), ("bob", &rb)] {
+        assert_trace_complete(r, label);
+        for rung in 0..r.attempts {
+            assert_eq!(
+                r.trace.count_spans(|k| k == SpanKind::Attempt(rung)),
+                1,
+                "{label}: rung {rung} must appear exactly once"
+            );
+        }
+        let pd = r.phase_durations();
+        assert!(pd.total > Duration::ZERO, "{label}: a multi-attempt session takes real time");
+    }
+}
+
+/// `tracing(false)` is a pure observation ablation: no timeline is recorded, the
+/// breakdown degenerates to zero, and neither the answer nor the wire bytes change.
+/// Tracing is deliberately outside the config fingerprint, so a mixed pair (one side
+/// on, one side off) still negotiates and each side keeps its own setting.
+#[test]
+fn tracing_off_records_nothing_and_changes_no_answers() {
+    let (a, b) = synth::overlap_pair(2_000, 60, 80, 0x5e);
+    let build = |set: &[u64], tracing: bool| {
+        Setx::builder(set).tracing(tracing).seed(5).build().unwrap()
+    };
+    let (ra_on, _) = build(&a, true).run_pair(&build(&b, true)).unwrap();
+    let (ra_off, rb_off) = build(&a, false).run_pair(&build(&b, false)).unwrap();
+    assert!(ra_off.trace.is_empty() && rb_off.trace.is_empty());
+    assert_eq!(ra_off.phase_durations(), PhaseDurations::default());
+    assert_eq!(ra_on.intersection, ra_off.intersection);
+    assert_eq!(ra_on.total_bytes(), ra_off.total_bytes(), "tracing must not touch the wire");
+    let (ra_mixed, rb_mixed) = build(&a, true).run_pair(&build(&b, false)).unwrap();
+    assert!(!ra_mixed.trace.is_empty(), "traced side still records against an untraced peer");
+    assert!(rb_mixed.trace.is_empty(), "untraced side stays silent");
+    assert_eq!(ra_mixed.intersection, ra_on.intersection);
+}
+
+/// The multi-party coordinator's timeline covers all four barriers, once each, in
+/// order, and stays well-formed after absorbing the per-spoke repair sessions.
+#[test]
+fn multi_party_coordinator_trace_covers_every_barrier() {
+    let sets = synth::overlap_n(3, 1_500, 40, 0x77);
+    let report = Setx::multi(&sets).unwrap();
+    assert_eq!(report.completed(), 2, "both spokes must finish");
+    let trace = &report.trace;
+    assert!(trace.is_well_formed(), "coordinator trace unbalanced");
+    let barriers = [
+        SpanKind::MultiJoin,
+        SpanKind::MultiCollect,
+        SpanKind::MultiConstraint,
+        SpanKind::MultiFinal,
+    ];
+    for kind in barriers {
+        assert_eq!(trace.count_spans(|k| k == kind), 1, "{kind:?}: exactly one barrier span");
+    }
+    // Barriers open in protocol order (join → collect → constraint → final).
+    let opens: Vec<SpanKind> = trace
+        .events
+        .iter()
+        .filter(|e| e.edge == SpanEdge::Open && barriers.contains(&e.kind))
+        .map(|e| e.kind)
+        .collect();
+    assert_eq!(opens, barriers, "barrier spans out of order");
+}
