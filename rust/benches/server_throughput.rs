@@ -211,6 +211,72 @@ fn run_churn(common: usize, clients: usize, workers: usize) -> BenchResult {
     }
 }
 
+/// The fault-rate ablation: the same fleet with a seeded per-attempt disconnect rate
+/// injected at the client transport — every drop absorbed by the shared retry layer.
+/// Goodput (sessions/s of *verified* answers) and the retry count land in the row, so
+/// the trajectory shows what 5% connection churn costs against the 0% baseline. Seed 7
+/// is chosen so the coin fires at both the smoke and full shapes without ever
+/// exhausting the default budget (worst streak 1 vs budget 3).
+fn run_faults(
+    common: usize,
+    rounds: usize,
+    clients: usize,
+    workers: usize,
+    rate: f64,
+) -> BenchResult {
+    let cfg = LoadgenConfig {
+        clients,
+        rounds,
+        common,
+        seed: 7,
+        disconnect_rate: rate,
+        ..LoadgenConfig::default()
+    };
+    let (host, _, _) = cfg.workload();
+    let endpoint = cfg.endpoint(&host).expect("loadgen config is always valid");
+    let server = SetxServer::builder(endpoint)
+        .workers(workers)
+        .max_inflight_sessions(2 * clients + 8)
+        .bind("127.0.0.1:0")
+        .expect("bind ephemeral loopback listener");
+    let t0 = Instant::now();
+    let report = loadgen::run(server.local_addr(), &cfg);
+    let elapsed = t0.elapsed();
+    server.shutdown();
+    assert!(
+        report.verified(),
+        "the retry layer must absorb every injected drop: {:?}",
+        report.failures.iter().take(5).collect::<Vec<_>>()
+    );
+    assert_eq!(report.gave_up, 0, "no session may exhaust the budget at {rate}");
+    if rate > 0.0 {
+        assert!(report.retries > 0, "seed 7 must inject at least one drop");
+    }
+    let sessions = report.sessions_ok.max(1);
+    let per_session = elapsed / sessions as u32;
+    let name = format!(
+        "server_throughput faults disconnect={}% clients={clients} rounds={rounds} \
+         workers={workers} retries={}",
+        (rate * 100.0).round() as u32,
+        report.retries
+    );
+    println!(
+        "bench {name:<84} {:>8.1} sessions/s ({} retries, {} gave up, {} B total)",
+        report.sessions_per_sec(),
+        report.retries,
+        report.gave_up,
+        report.total_bytes
+    );
+    BenchResult {
+        name,
+        mean: per_session,
+        min: per_session,
+        p50: Duration::from_nanos(report.p50_ns()),
+        p99: Duration::from_nanos(report.p99_ns()),
+        iters: sessions as u64,
+    }
+}
+
 /// The observability rows: per-session latency tails over a three-tenant fleet, with
 /// the span timeline on (default) or off on every endpoint. Headline numbers are the
 /// histogram tails, not sessions/sec — mean/min still record wall-clock per session so
@@ -316,6 +382,11 @@ fn main() {
         results.push(run_latency(scale_common, clients.min(client_cap), WORKERS, true));
     }
     results.push(run_latency(scale_common, 64.min(client_cap), WORKERS, false));
+    // Fault-rate ablation: 0% baseline vs 5% injected disconnects at the fleet shape —
+    // goodput with the retry cost in the row name.
+    for rate in [0.0, 0.05] {
+        results.push(run_faults(common, rounds, 8, WORKERS, rate));
+    }
     // Churn-under-load: replace_set every ~2ms while the fleet runs.
     results.push(run_churn(if profile.smoke { 2_000 } else { 20_000 }, 8, WORKERS));
     if profile.json {

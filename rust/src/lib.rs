@@ -46,8 +46,10 @@
 //!   CommonSense as explicit-parameter state machines with exact wire-format accounting,
 //!   plus the §7.1 difference-size estimators ([`protocol::estimate`]).
 //! * **Front door** — [`setx`]: the builder API, the [`setx::transport::Transport`]
-//!   trait with in-memory and TCP implementations, the partitioned-parallel driver, and
-//!   the escalation ladder. **Start here**; drop to [`protocol`] only for manual tuning.
+//!   trait with in-memory and TCP implementations (plus the deterministic
+//!   [`setx::transport::fault`] injection decorator), the client retry layer
+//!   ([`setx::retry`]), the partitioned-parallel driver, and the escalation ladder.
+//!   **Start here**; drop to [`protocol`] only for manual tuning.
 //! * **Baselines** — [`baselines`]: IBLT/Difference Digest, Graphene, CBF approximate SetX,
 //!   PinSketch, and the information-theoretic [`bounds`].
 //! * **Systems layer** — [`server`] (the multi-client reconciliation daemon below),
@@ -167,6 +169,40 @@
 //! round that spokes join with `join_round`, with completed [`setx::multi::MultiReport`]s
 //! collected off [`server::ServerHandle::take_multi_reports`]. The `multi_round` bench
 //! tracks wall-clock and bytes-per-party at N = {3, 5, 8} in `BENCH_protocol.json`.
+//!
+//! ## Failure model & retries
+//!
+//! Every failure surfaces as one typed [`setx::SetxError`], and the error's *class*
+//! decides what happens next — [`setx::SetxError::is_transient`] draws the line:
+//!
+//! * **Transient** (`Io`, `ServerBusy`, `PeerClosed`): the connection is gone but the
+//!   protocol was not contradicted — reconnecting and replaying is safe and likely to
+//!   succeed. [`setx::Setx::run_with_retry`] does exactly that: on a transient error
+//!   it drops the dead transport (folding its byte counters into
+//!   [`setx::SetxReport::retry_bytes`]), waits out a capped exponential backoff with
+//!   deterministic per-client jitter ([`setx::RetryPolicy::backoff_ms`], honoring the
+//!   server's `retry_after_ms` pushback hint), and asks the caller's `connect` factory
+//!   for a fresh transport — up to `max_retries` times. The final
+//!   [`setx::SetxReport`] carries `retries` and `retry_bytes`, so the cost of
+//!   convergence is visible, not silent.
+//! * **Fatal** (`MalformedFrame`, `Protocol`, `Config*`, `Decode`): either the wire
+//!   carried garbage this endpoint *parsed*, or the two ends genuinely disagree —
+//!   replaying would fail identically (or worse, mask corruption), so these surface
+//!   immediately without burning the retry budget. [`setx::multi::MultiError`] mirrors
+//!   the same contract for N-party rounds.
+//!
+//! The classification is *proven* rather than assumed: [`setx::transport::fault`]
+//! wraps any transport in a declarative, seeded [`setx::transport::FaultPlan`]
+//! (connection drops, truncated/corrupted frames, simulated delays, duplicated
+//! frames — targetable per protocol phase, per direction, per n-th frame), and the
+//! `chaos` test suite sweeps every fault kind × phase × workload shape × codec
+//! setting asserting that each run terminates with the exact intersection or a typed
+//! error — never a panic, never a wrong answer — and that `run_with_retry` converges
+//! whenever a plan leaves one fault-free attempt. Server-side, wire damage lands in
+//! the `protocol_faults` counters ([`server::ServerStats`], per tenant shard +
+//! unrouted remainder), half-open connections are reaped by an unconditional
+//! pre-routing deadline, and `loadgen`'s `disconnect_rate` drives whole fleets
+//! through seeded fault schedules to keep the 100%-success-under-chaos bar honest.
 //!
 //! ## Performance
 //!

@@ -38,12 +38,14 @@ USAGE:
                                               of anything slower to stderr)
   commonsense loadgen [--addr ADDR] [--clients N] [--rounds R] [--tenants T] [--common N]
                       [--client-unique X] [--server-unique Y] [--seed S]
-                      [--busy-retries K] [--estimate-d]
+                      [--busy-retries K] [--disconnect-pct P] [--estimate-d]
                                              (N concurrent verified clients spread over T
                                               tenants against a `commonsense serve` with
                                               the same workload flags — including --seed
                                               and --tenants; exits non-zero on any
-                                              mismatch)
+                                              mismatch. --disconnect-pct injects seeded
+                                              connection drops into P% of attempts to
+                                              exercise the retry layer)
   commonsense connect --addr ADDR            (one client, one sync, same workload flags)
   commonsense multi [--parties N] [--common C] [--unique U] [--seed S]
                     [--host --listen ADDR [--deadline-ms D] | --join --addr ADDR --party I]
@@ -61,7 +63,8 @@ Defaults: --transport mem, --common 50000 (serve/loadgen/connect: 20000), --a-un
           --b-unique 300, --parts 16, --threads 4, --scale 50000, --instances 5,
           --eth-accounts 300000, --n 100000, --d 1000, --workers 4, --max-inflight 64,
           --clients 8, --rounds 2, --tenants 1, --client-unique 100, --server-unique 200,
-          --seed 42, --busy-retries 3, --store-capacity 8, --parties 3, --unique 100,
+          --seed 42, --busy-retries 3, --disconnect-pct 0, --store-capacity 8,
+          --parties 3, --unique 100,
           --deadline-ms 10000. serve/loadgen/connect must share the workload flags
           (including --seed and --tenants) and declare the exactly-known d (one shared
           matrix geometry, the decoder-pool sweet spot) unless --estimate-d is given."
@@ -187,6 +190,7 @@ fn fleet_config(args: &Args) -> LoadgenConfig {
         server_unique: args.get("server-unique", 200),
         seed: args.get("seed", 42) as u64,
         busy_retries: args.get("busy-retries", 3),
+        disconnect_rate: args.get("disconnect-pct", 0) as f64 / 100.0,
         estimate_diff: args.has("estimate-d"),
         tenants: args.get("tenants", 1).max(1),
         tracing: true,
@@ -369,10 +373,11 @@ fn main() -> anyhow::Result<()> {
             );
             let report = loadgen::run(&addr, &cfg);
             println!(
-                "loadgen: {} ok / {} failed / {} busy-rejections ({} retried), {} B total, \
-                 {:.1} sessions/s, verified = {}",
+                "loadgen: {} ok / {} failed ({} gave up) / {} busy-rejections, \
+                 {} retries, {} B total, {:.1} sessions/s, verified = {}",
                 report.sessions_ok,
                 report.sessions_failed,
+                report.gave_up,
                 report.busy_rejections,
                 report.retries,
                 report.total_bytes,

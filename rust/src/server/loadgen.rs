@@ -11,8 +11,16 @@
 //! exists for. With `tenants > 1` the id space is partitioned into per-tenant blocks
 //! (client *i* belongs to tenant *i mod tenants*), so a mixed fleet exercises the
 //! namespace-sharded server. Each client runs `rounds` back-to-back syncs (the
-//! steady-state delta-sync pattern), and a [`SetxError::ServerBusy`] answer is retried
-//! under capped exponential back-off with deterministic, seeded per-client jitter.
+//! steady-state delta-sync pattern) through [`Setx::run_with_retry_observed`] under the
+//! shared [`RetryPolicy`]: any [transient](SetxError::is_transient) failure — a
+//! [`SetxError::ServerBusy`] rejection, a dropped connection — is retried under capped
+//! exponential back-off with deterministic, seeded per-client jitter (byte-identical to
+//! the schedule this module historically owned).
+//!
+//! `disconnect_rate` turns the fleet into a chaos harness: each attempt flips a seeded
+//! coin and, when faulty, runs over a [`FaultPlan`] that drops the connection on an
+//! early frame — so retry convergence (and its byte cost) shows up in the report
+//! instead of requiring a flaky network.
 //!
 //! Every returned intersection is compared against the exactly-known answer (the
 //! tenant's common core): the generator is a correctness harness first and a throughput
@@ -22,8 +30,8 @@
 use crate::data::synth;
 use crate::hash::{split_mix64, Xoshiro256};
 use crate::obs::hist::LogHistogram;
-use crate::setx::transport::TcpTransport;
-use crate::setx::{DiffSize, Setx, SetxError};
+use crate::setx::transport::{FaultInjector, FaultKind, FaultPlan, TcpTransport};
+use crate::setx::{DiffSize, RetryPolicy, Setx, SetxError};
 use std::net::ToSocketAddrs;
 use std::time::{Duration, Instant};
 
@@ -44,8 +52,14 @@ pub struct LoadgenConfig {
     /// Workload id seed (set contents) — also used as the protocol seed and the
     /// retry-jitter seed.
     pub seed: u64,
-    /// Retries after a `Busy` rejection before counting the session as failed.
+    /// Retries after a transient failure (`Busy` rejection, dropped connection) before
+    /// counting the session as failed.
     pub busy_retries: usize,
+    /// Probability (0.0–1.0) that any individual attempt's connection is dropped on an
+    /// early frame by an injected [`FaultPlan`]. The coin is seeded per
+    /// `(client, round, attempt)`, so a given fleet's fault schedule reproduces
+    /// exactly. 0.0 (the default) injects nothing.
+    pub disconnect_rate: f64,
     /// Estimate `d` in the handshake instead of declaring it. The default (`false`)
     /// declares the exactly-known `d = client_unique + server_unique`, which keeps every
     /// session on one shared matrix geometry — the decoder-pool sweet spot. Estimation
@@ -70,6 +84,7 @@ impl Default for LoadgenConfig {
             server_unique: 200,
             seed: 42,
             busy_retries: 3,
+            disconnect_rate: 0.0,
             estimate_diff: false,
             tenants: 1,
             tracing: true,
@@ -153,6 +168,19 @@ impl LoadgenConfig {
     pub fn endpoint(&self, set: &[u64]) -> Result<Setx, SetxError> {
         self.endpoint_for_tenant(set, 0)
     }
+
+    /// The fleet's shared retry policy. With `client_key = client index`, its
+    /// [`RetryPolicy::backoff_ms`] schedule is byte-identical to the capped
+    /// exponential back-off this module computed inline before the policy existed —
+    /// seeded workloads reproduce their exact wait sequence across versions.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy {
+            max_retries: u32::try_from(self.busy_retries).unwrap_or(u32::MAX),
+            base_ms: 10,
+            cap_ms: 2_000,
+            jitter_seed: self.seed,
+        }
+    }
 }
 
 /// What the fleet did. `verified` is the headline: every session's intersection equaled
@@ -166,9 +194,12 @@ pub struct LoadgenReport {
     pub sessions_failed: usize,
     /// `Busy` rejections observed (including ones later resolved by a retry).
     pub busy_rejections: usize,
-    /// Back-off retries actually performed (a rejection past the retry budget is
-    /// counted in `busy_rejections` but not here).
+    /// Back-off retries actually performed, busy-pushback and fault retries alike (a
+    /// failure past the retry budget is counted in `gave_up` but not here).
     pub retries: usize,
+    /// Sessions that exhausted the retry budget on a transient error — the retryable
+    /// slice of `sessions_failed` (fatal errors and wrong answers are the rest).
+    pub gave_up: usize,
     /// Human-readable description of every failure, `client=<i> round=<r>: <why>`.
     pub failures: Vec<String>,
     /// Client-observed conversation bytes, all sessions.
@@ -256,6 +287,7 @@ pub fn run(addr: impl ToSocketAddrs, cfg: &LoadgenConfig) -> LoadgenReport {
         report.sessions_failed += outcome.failed;
         report.busy_rejections += outcome.busy;
         report.retries += outcome.retries;
+        report.gave_up += outcome.gave_up;
         report.total_bytes += outcome.bytes;
         report.failures.extend(outcome.failures);
         report.latency.merge(&outcome.latency);
@@ -269,6 +301,7 @@ struct ClientOutcome {
     failed: usize,
     busy: usize,
     retries: usize,
+    gave_up: usize,
     bytes: usize,
     failures: Vec<String>,
     latency: LogHistogram,
@@ -293,7 +326,7 @@ fn run_client(
     };
     for round in 0..cfg.rounds {
         let session_started = Instant::now();
-        match sync_once(addr, cfg, &endpoint, index, &mut out) {
+        match sync_once(addr, cfg, &endpoint, index, round, &mut out) {
             Ok(report) => {
                 let elapsed = session_started.elapsed();
                 out.latency.record(u64::try_from(elapsed.as_nanos()).unwrap_or(u64::MAX));
@@ -318,40 +351,81 @@ fn run_client(
     out
 }
 
-/// One sync, retrying admission rejections under capped exponential back-off: the k-th
-/// retry waits `hint·2^(k−1)` milliseconds (hint floored at 10 ms, wait capped at 2 s)
-/// plus a deterministic per-client jitter hashed from `(client, attempt, seed)` — so a
-/// rejected burst neither re-arrives as a burst nor synchronizes across runs, and a
-/// given fleet's retry schedule is exactly reproducible from its seed.
+/// One sync through [`Setx::run_with_retry_observed`] under
+/// [`LoadgenConfig::retry_policy`]: the k-th retry waits `hint·2^(k−1)` milliseconds
+/// (hint floored at 10 ms, wait capped at 2 s) plus a deterministic per-client jitter
+/// hashed from `(client, attempt, seed)` — so a rejected burst neither re-arrives as a
+/// burst nor synchronizes across runs, and a given fleet's retry schedule is exactly
+/// reproducible from its seed. Each attempt's transport goes through
+/// [`fault_injector`], which is a no-op plan unless the `disconnect_rate` coin fires.
 fn sync_once(
     addr: std::net::SocketAddr,
     cfg: &LoadgenConfig,
     endpoint: &Setx,
     index: usize,
+    round: usize,
     out: &mut ClientOutcome,
 ) -> Result<crate::setx::SetxReport, SetxError> {
-    let mut attempt = 0usize;
-    loop {
-        let mut transport = TcpTransport::connect(addr)?;
-        match endpoint.run(&mut transport) {
-            Err(SetxError::ServerBusy { retry_after_ms, namespace }) => {
-                out.busy += 1;
-                attempt += 1;
-                if attempt > cfg.busy_retries {
-                    return Err(SetxError::ServerBusy { retry_after_ms, namespace });
-                }
-                out.retries += 1;
-                let base = u64::from(retry_after_ms).max(10);
-                let backoff =
-                    base.saturating_mul(1u64 << (attempt - 1).min(6)).min(2_000);
-                let jitter =
-                    split_mix64((index as u64) ^ ((attempt as u64) << 32) ^ cfg.seed)
-                        % (base / 2 + 1);
-                std::thread::sleep(Duration::from_millis(backoff + jitter));
+    let policy = cfg.retry_policy();
+    let mut busy = 0usize;
+    let mut retries = 0usize;
+    let result = endpoint.run_with_retry_observed(
+        &policy,
+        index as u64,
+        |attempt| {
+            let transport = TcpTransport::connect(addr)?;
+            Ok(fault_injector(cfg, index, round, attempt).wrap(transport))
+        },
+        |err, _backoff_ms| {
+            retries += 1;
+            if matches!(err, SetxError::ServerBusy { .. }) {
+                busy += 1;
             }
-            other => return other,
+        },
+    );
+    out.retries += retries;
+    out.busy += busy;
+    if let Err(err) = &result {
+        // The final, budget-exhausting rejection is still a rejection the fleet saw.
+        if matches!(err, SetxError::ServerBusy { .. }) {
+            out.busy += 1;
+        }
+        if err.is_transient() {
+            out.gave_up += 1;
         }
     }
+    result
+}
+
+/// The per-attempt fault coin: hashes `(fleet seed, client, round, attempt)` and, with
+/// probability `disconnect_rate`, returns an injector that drops the connection on one
+/// of the first three frames (covering both send- and recv-side drops). A clean
+/// attempt gets an empty plan — every attempt is wrapped so the connect closure has a
+/// single transport type either way.
+fn fault_injector(
+    cfg: &LoadgenConfig,
+    index: usize,
+    round: usize,
+    attempt: u32,
+) -> FaultInjector {
+    let mut plan = FaultPlan::new(cfg.seed ^ (index as u64) ^ (round as u64));
+    if let Some(nth) = fault_coin(cfg, index, round, attempt) {
+        plan = plan.fail_nth(FaultKind::DropConnection, None, nth);
+    }
+    plan.injector()
+}
+
+/// The coin itself: `Some(nth frame to drop on)` with probability `disconnect_rate`,
+/// `None` for a clean attempt. Pure in its arguments.
+fn fault_coin(cfg: &LoadgenConfig, index: usize, round: usize, attempt: u32) -> Option<u32> {
+    let h = split_mix64(
+        split_mix64(cfg.seed ^ 0xD15C_0881)
+            ^ (index as u64)
+            ^ ((round as u64) << 20)
+            ^ (u64::from(attempt) << 40),
+    );
+    let coin = (h >> 11) as f64 / (1u64 << 53) as f64;
+    (coin < cfg.disconnect_rate).then(|| 1 + (h % 3) as u32)
 }
 
 #[cfg(test)]
@@ -415,6 +489,44 @@ mod tests {
         assert_eq!(host, th[0]);
         assert_eq!(lc, tc);
         assert_eq!(exp, te[0]);
+    }
+
+    #[test]
+    fn retry_policy_matches_the_historical_inline_schedule() {
+        let cfg = LoadgenConfig { busy_retries: 6, seed: 99, ..LoadgenConfig::default() };
+        let p = cfg.retry_policy();
+        assert_eq!(p.max_retries, 6);
+        assert_eq!(p.jitter_seed, 99);
+        // The formula this module used to compute inline, byte for byte.
+        let (index, attempt, hint) = (4u64, 3u32, 25u32);
+        let base = u64::from(hint).max(10);
+        let backoff = base.saturating_mul(1u64 << (attempt - 1).min(6)).min(2_000);
+        let jitter = split_mix64(index ^ (u64::from(attempt) << 32) ^ 99) % (base / 2 + 1);
+        assert_eq!(p.backoff_ms(index, attempt, hint), backoff + jitter);
+    }
+
+    #[test]
+    fn fault_coin_is_deterministic_and_respects_the_rate() {
+        let off = LoadgenConfig::default();
+        let always = LoadgenConfig { disconnect_rate: 1.0, ..LoadgenConfig::default() };
+        for index in 0..8 {
+            for round in 0..4 {
+                for attempt in 0..3 {
+                    assert_eq!(fault_coin(&off, index, round, attempt), None);
+                    let nth = fault_coin(&always, index, round, attempt);
+                    assert!(matches!(nth, Some(1..=3)), "nth = {nth:?}");
+                    // Seeded: the same (fleet, client, round, attempt) re-flips the
+                    // same coin.
+                    assert_eq!(nth, fault_coin(&always, index, round, attempt));
+                }
+            }
+        }
+        // A mid-range rate lands strictly between the extremes.
+        let mixed = LoadgenConfig { disconnect_rate: 0.3, ..LoadgenConfig::default() };
+        let fired = (0..200)
+            .filter(|&i| fault_coin(&mixed, i, 0, 0).is_some())
+            .count();
+        assert!(fired > 20 && fired < 140, "fired = {fired}");
     }
 
     #[test]

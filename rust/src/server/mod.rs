@@ -170,8 +170,11 @@ impl ServerBuilder {
     /// Per-connection inactivity deadline, taken as `read.or(write)` (default 30 s).
     /// The deadline is refreshed whenever a connection makes read or write progress;
     /// a connection that stalls past it is torn down with a timeout error. `None`
-    /// disables the deadline, which re-opens the parked-forever failure mode and is
-    /// only sensible for debugging. (The two-parameter shape is kept for builder
+    /// disables the deadline for *routed* sessions, which re-opens the parked-forever
+    /// failure mode and is only sensible for debugging — unrouted connections (no
+    /// `EstHello` yet) always carry a 30 s routing deadline regardless, so a half-open
+    /// peer that sends a partial frame header and goes silent can never park an
+    /// admission slot indefinitely. (The two-parameter shape is kept for builder
     /// compatibility with the blocking-transport era, which mapped them onto OS socket
     /// timeouts.)
     pub fn timeouts(mut self, read: Option<Duration>, write: Option<Duration>) -> Self {
@@ -734,6 +737,8 @@ fn snapshot_stats(shared: &Shared) -> ServerStats {
         sessions_rejected: s.sessions_rejected.load(Ordering::Relaxed),
         unrouted_failed: s.unrouted_failed.load(Ordering::Relaxed),
         unrouted_rejected: s.unrouted_rejected.load(Ordering::Relaxed),
+        protocol_faults: s.protocol_faults.load(Ordering::Relaxed),
+        unrouted_protocol_faults: s.unrouted_protocol_faults.load(Ordering::Relaxed),
         phase_bytes: [
             s.phase_bytes[0].load(Ordering::Relaxed),
             s.phase_bytes[1].load(Ordering::Relaxed),
@@ -1003,6 +1008,12 @@ fn drain_wake(wake: &UnixStream) {
     while matches!(end.read(&mut buf), Ok(n) if n > 0) {}
 }
 
+/// Deadline for an admitted connection to deliver a routable `EstHello`. Applied even
+/// when the builder disabled session timeouts: a half-open peer (partial frame header,
+/// then silence — no FIN, so no EOF ever arrives) must not park an admission slot
+/// forever. Routed sessions fall back to the configured `session_timeout`.
+const ROUTING_DEADLINE: Duration = Duration::from_secs(30);
+
 /// Accept everything the listener has ready. Global admission happens here, before any
 /// protocol work: an over-cap connection gets a `Busy` frame and (at most) a brief stay
 /// in the poll set to flush it.
@@ -1038,7 +1049,11 @@ fn accept_ready(shared: &Shared, listener: &TcpListener, conns: &mut Vec<Conn>) 
             Ok(prev) => {
                 shared.stats.peak_inflight.fetch_max(prev + 1, Ordering::SeqCst);
                 let sid = shared.next_session_id.fetch_add(1, Ordering::Relaxed);
-                conns.push(Conn::admitted(stream, sid, shared.session_timeout));
+                conns.push(Conn::admitted(
+                    stream,
+                    sid,
+                    shared.session_timeout.or(Some(ROUTING_DEADLINE)),
+                ));
             }
         }
     }
@@ -1171,6 +1186,9 @@ fn route(shared: &Shared, conn: &mut Conn, msg: &Msg) {
         conn.queue(&m);
     }
     conn.state = ConnState::Live { endpoint, tenant };
+    // Routed: swap the unconditional routing deadline for the configured session
+    // deadline (clearing it when the builder disabled timeouts).
+    conn.deadline = shared.session_timeout.map(|t| Instant::now() + t);
     feed_live(conn, msg);
 }
 
@@ -1232,6 +1250,8 @@ fn route_multi(shared: &Shared, conn: &mut Conn, msg: &Msg, tenant: Arc<TenantSt
             shared.stats.route_accepted(&tenant.counters);
             conn.write_buf.extend_from_slice(&mine);
             conn.state = ConnState::MultiParty { tenant, party };
+            // Same deadline swap as the two-party route: routing is done.
+            conn.deadline = shared.session_timeout.map(|t| Instant::now() + t);
             if fan_out {
                 shared.wake_all();
             }
@@ -1408,6 +1428,15 @@ fn should_close(conn: &Conn) -> bool {
     }
 }
 
+/// Whether a session-ending error was a *protocol fault* — a malformed or
+/// out-of-phase frame (corrupting link, hostile peer) — as opposed to a
+/// timeout/disconnect. The typed subset [`StatsInner::protocol_fault`] counts;
+/// the chaos suite asserts a faulted `Conn` frees its slot and lands here
+/// without poisoning its tenant's shards.
+fn is_protocol_fault(err: &SetxError) -> bool {
+    matches!(err, SetxError::MalformedFrame(_) | SetxError::Protocol(_))
+}
+
 /// Account for a closed connection: release its admission slots and charge its outcome
 /// to the right scope (tenant shard for routed sessions, the unrouted counters for
 /// connections that never reached one; `Closing` connections were already counted when
@@ -1424,6 +1453,9 @@ fn finalize(shared: &Shared, conn: Conn) {
                 Some(Err(err)) => err,
                 _ => SetxError::PeerClosed { during: "routing" },
             };
+            if is_protocol_fault(&err) {
+                shared.stats.protocol_fault(None);
+            }
             shared.record_failure(conn.sid, &err);
         }
         ConnState::Live { tenant, .. } => {
@@ -1450,6 +1482,9 @@ fn finalize(shared: &Shared, conn: Conn) {
                 }
                 Some(Err(err)) => {
                     shared.stats.fail(Some(&tenant.counters));
+                    if is_protocol_fault(&err) {
+                        shared.stats.protocol_fault(Some(&tenant.counters));
+                    }
                     shared.record_failure(conn.sid, &err);
                 }
                 None => {
@@ -1484,6 +1519,9 @@ fn finalize(shared: &Shared, conn: Conn) {
             }
             if dropped {
                 if let Some(Err(err)) = &conn.done {
+                    if is_protocol_fault(err) {
+                        shared.stats.protocol_fault(Some(&tenant.counters));
+                    }
                     shared.record_failure(conn.sid, err);
                 }
             }

@@ -47,6 +47,11 @@ pub(crate) struct TenantCounters {
     pub(crate) served: AtomicU64,
     pub(crate) failed: AtomicU64,
     pub(crate) rejected: AtomicU64,
+    /// Subset of `failed` whose error was a *protocol fault* (malformed or
+    /// out-of-phase frame — a corrupting link or a hostile peer), as opposed to
+    /// timeouts/disconnects. The chaos suite asserts these are counted, the
+    /// slot freed, and the tenant's pool/store left unpoisoned.
+    pub(crate) protocol_faults: AtomicU64,
     pub(crate) phase_bytes: [AtomicU64; 4],
     /// Codec-off-equivalent bytes of the same transcripts (what the sessions would
     /// have cost without the columnar wire codec).
@@ -70,6 +75,13 @@ pub(crate) struct StatsInner {
     pub(crate) unrouted_failed: AtomicU64,
     /// Rejections issued before routing (admission cap, unknown namespace).
     pub(crate) unrouted_rejected: AtomicU64,
+    /// Subset of `sessions_failed` that died to a malformed or out-of-phase frame
+    /// (globally; the per-tenant split lives in the shards plus
+    /// `unrouted_protocol_faults`).
+    pub(crate) protocol_faults: AtomicU64,
+    /// Protocol faults of connections that never routed (e.g. garbage instead of an
+    /// `EstHello`).
+    pub(crate) unrouted_protocol_faults: AtomicU64,
     /// Conversation bytes by protocol phase, indexed in [`Phase::ALL`] order
     /// (successful sessions only — a torn-down conversation has no agreed transcript).
     pub(crate) phase_bytes: [AtomicU64; 4],
@@ -134,6 +146,22 @@ impl StatsInner {
         }
     }
 
+    /// The failure being recorded was a protocol fault (malformed/out-of-phase
+    /// frame). Always *in addition to* [`StatsInner::fail`] — `protocol_faults`
+    /// classifies a failure, it does not replace the failure count. `None` = the
+    /// fault arrived before routing (charged to `unrouted_protocol_faults`).
+    pub(crate) fn protocol_fault(&self, t: Option<&TenantCounters>) {
+        self.protocol_faults.fetch_add(1, Ordering::Relaxed);
+        match t {
+            Some(t) => {
+                t.protocol_faults.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                self.unrouted_protocol_faults.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     /// A connection was turned away with a `Busy` frame. `None` = rejected before
     /// routing (admission cap, unknown namespace — charged to `unrouted_rejected`);
     /// `Some` = a known tenant was over its quota.
@@ -161,6 +189,8 @@ pub struct TenantStats {
     pub sessions_served: u64,
     pub sessions_failed: u64,
     pub sessions_rejected: u64,
+    /// Subset of `sessions_failed` that died to a malformed/out-of-phase frame.
+    pub protocol_faults: u64,
     /// Conversation bytes by phase (successful sessions), in [`Phase::ALL`] order.
     pub phase_bytes: [u64; 4],
     /// Codec-off-equivalent bytes of the same transcripts.
@@ -208,6 +238,7 @@ impl TenantCounters {
             sessions_served: self.served.load(Ordering::Relaxed),
             sessions_failed: self.failed.load(Ordering::Relaxed),
             sessions_rejected: self.rejected.load(Ordering::Relaxed),
+            protocol_faults: self.protocol_faults.load(Ordering::Relaxed),
             phase_bytes: [
                 self.phase_bytes[0].load(Ordering::Relaxed),
                 self.phase_bytes[1].load(Ordering::Relaxed),
@@ -246,6 +277,14 @@ pub struct ServerStats {
     pub unrouted_failed: u64,
     /// Rejections issued before routing (admission cap, unknown namespace).
     pub unrouted_rejected: u64,
+    /// Subset of [`ServerStats::sessions_failed`] that died to a malformed or
+    /// out-of-phase frame (a corrupting link or hostile peer) rather than a
+    /// timeout/disconnect. Shard-summed like every counter: tenant
+    /// `protocol_faults` plus [`ServerStats::unrouted_protocol_faults`] equal
+    /// this at quiescence.
+    pub protocol_faults: u64,
+    /// Protocol faults of connections that never routed to a tenant.
+    pub unrouted_protocol_faults: u64,
     /// Conversation bytes by phase (successful sessions), in [`Phase::ALL`] order:
     /// handshake, sketch, residue, confirm.
     pub phase_bytes: [u64; 4],
@@ -319,6 +358,7 @@ impl ServerStats {
         format!(
             "{{\"sessions_accepted\":{},\"sessions_served\":{},\"sessions_failed\":{},\
              \"sessions_rejected\":{},\"unrouted_failed\":{},\"unrouted_rejected\":{},\
+             \"protocol_faults\":{},\"unrouted_protocol_faults\":{},\
              \"tenant_count\":{},\"bytes_handshake\":{},\"bytes_sketch\":{},\
              \"bytes_residue\":{},\"bytes_confirm\":{},\"raw_bytes\":{},\
              \"compression_ratio\":{:.4},\"pool_hits\":{},\"pool_misses\":{},\
@@ -336,6 +376,8 @@ impl ServerStats {
             self.sessions_rejected,
             self.unrouted_failed,
             self.unrouted_rejected,
+            self.protocol_faults,
+            self.unrouted_protocol_faults,
             self.tenants.len(),
             self.phase_bytes[0],
             self.phase_bytes[1],
@@ -408,11 +450,18 @@ impl ServerStats {
             "Connections turned away with a Busy frame.",
             self.sessions_rejected,
         );
-        let tenant_counters: [(&str, &str, fn(&TenantStats) -> u64); 4] = [
+        counter(
+            &mut out,
+            "setx_protocol_faults",
+            "Failed sessions that died to a malformed or out-of-phase frame.",
+            self.protocol_faults,
+        );
+        let tenant_counters: [(&str, &str, fn(&TenantStats) -> u64); 5] = [
             ("setx_tenant_sessions_accepted", "Routed per tenant.", |t| t.sessions_accepted),
             ("setx_tenant_sessions_served", "Served sessions per tenant.", |t| t.sessions_served),
             ("setx_tenant_sessions_failed", "Failed sessions per tenant.", |t| t.sessions_failed),
             ("setx_tenant_sessions_rejected", "Rejections per tenant.", |t| t.sessions_rejected),
+            ("setx_tenant_protocol_faults", "Protocol faults per tenant.", |t| t.protocol_faults),
         ];
         for (name, help, get) in tenant_counters {
             let _ = writeln!(out, "# HELP {name} {help}");
@@ -511,6 +560,8 @@ mod tests {
             sessions_rejected: 1,
             unrouted_failed: 0,
             unrouted_rejected: 1,
+            protocol_faults: 1,
+            unrouted_protocol_faults: 0,
             phase_bytes: [1, 2, 3, 4],
             raw_bytes: 20,
             pool: PoolStats { hits: 30, misses: 2, evictions: 0, parked: 2, capacity: 8 },
@@ -541,6 +592,8 @@ mod tests {
             "sessions_rejected",
             "unrouted_failed",
             "unrouted_rejected",
+            "protocol_faults",
+            "unrouted_protocol_faults",
             "tenant_count",
             "bytes_handshake",
             "bytes_sketch",
@@ -608,6 +661,11 @@ mod tests {
                         inner.route_accepted(t);
                     }
                     inner.fail(shard);
+                    // Half the failures are protocol faults (the typed subset the
+                    // chaos suite watches); the classification must shard-sum too.
+                    if rng.next_u64() % 2 == 0 {
+                        inner.protocol_fault(shard);
+                    }
                 }
                 2 => inner.reject(shard),
                 _ => {
@@ -640,6 +698,17 @@ mod tests {
             inner.sessions_rejected.load(Ordering::Relaxed),
             sum(|t| &t.rejected) + inner.unrouted_rejected.load(Ordering::Relaxed),
             "rejected != shard sum + unrouted"
+        );
+        assert_eq!(
+            inner.protocol_faults.load(Ordering::Relaxed),
+            sum(|t| &t.protocol_faults)
+                + inner.unrouted_protocol_faults.load(Ordering::Relaxed),
+            "protocol faults != shard sum + unrouted"
+        );
+        assert!(
+            inner.protocol_faults.load(Ordering::Relaxed)
+                <= inner.sessions_failed.load(Ordering::Relaxed),
+            "protocol faults classify failures, they cannot exceed them"
         );
         for i in 0..4 {
             let shard_bytes: u64 =
@@ -682,6 +751,8 @@ mod tests {
             sessions_rejected: 0,
             unrouted_failed: 0,
             unrouted_rejected: 0,
+            protocol_faults: 0,
+            unrouted_protocol_faults: 0,
             phase_bytes: [0; 4],
             raw_bytes: 0,
             pool: PoolStats::default(),
@@ -725,6 +796,8 @@ mod tests {
             sessions_rejected: 0,
             unrouted_failed: 0,
             unrouted_rejected: 0,
+            protocol_faults: 1,
+            unrouted_protocol_faults: 1,
             phase_bytes: [10, 200, 40, 8],
             raw_bytes: 300,
             pool: PoolStats::default(),
@@ -741,6 +814,9 @@ mod tests {
         assert!(text.contains("# TYPE setx_sessions_served counter"));
         assert!(text.contains("setx_sessions_served 4"));
         assert!(text.contains("setx_tenant_sessions_served{tenant=\"7\"} 0"));
+        assert!(text.contains("# TYPE setx_protocol_faults counter"));
+        assert!(text.contains("setx_protocol_faults 1"));
+        assert!(text.contains("setx_tenant_protocol_faults{tenant=\"7\"} 0"));
         assert!(text.contains("setx_bytes_total{phase=\"sketch\"} 200"));
         assert!(text.contains("# TYPE setx_inflight_sessions gauge"));
         assert!(text.contains("setx_inflight_sessions 2"));

@@ -1014,6 +1014,8 @@ impl<'a> Endpoint<'a> {
             converged: true,
             attempts: self.attempt + 1,
             rounds,
+            retries: 0,
+            retry_bytes: 0,
             comm: self.comm.clone(),
             local_is_alice: self.client,
             trace: self.tracer.trace().clone(),

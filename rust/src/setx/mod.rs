@@ -37,7 +37,10 @@
 pub(crate) mod endpoint;
 pub mod multi;
 pub mod parallel;
+pub mod retry;
 pub mod transport;
+
+pub use retry::RetryPolicy;
 
 use crate::decoder::DecoderCache;
 use crate::hash::hash_u64;
@@ -141,6 +144,22 @@ impl std::fmt::Display for SetxError {
     }
 }
 
+impl SetxError {
+    /// Whether a retry on a **fresh connection** can plausibly succeed — the
+    /// classification contract [`Setx::run_with_retry`] and the server loadgen
+    /// act on. Transport I/O failures, admission pushback
+    /// ([`SetxError::ServerBusy`]), and peer closes are transient (the link or
+    /// the moment was bad, not the configuration); everything else — config
+    /// mismatches, malformed frames, protocol violations, decode exhaustion —
+    /// reproduces on a clean link, so retrying it only burns the budget.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            SetxError::Io(_) | SetxError::ServerBusy { .. } | SetxError::PeerClosed { .. }
+        )
+    }
+}
+
 impl std::error::Error for SetxError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
@@ -202,6 +221,11 @@ pub struct SetxConfig {
     /// bench-ablation path. **Deliberately not fingerprinted**: tracing is pure local
     /// observation with zero wire impact, so traced and untraced peers interoperate.
     pub tracing: bool,
+    /// Reconnect policy for [`Setx::run_with_retry`] (see [`RetryPolicy`]).
+    /// **Deliberately not fingerprinted**: when (and whether) a client
+    /// reconnects is a local decision with no wire impact, so peers with
+    /// different policies interoperate.
+    pub retry: RetryPolicy,
 }
 
 impl SetxConfig {
@@ -335,6 +359,15 @@ impl SetxBuilder {
         self
     }
 
+    /// Reconnect policy for [`Setx::run_with_retry`] (default
+    /// [`RetryPolicy::default`]: 3 retries, 10 ms base, 2 s cap). Local
+    /// recovery knob — not part of the config fingerprint, so the peer need
+    /// not match it.
+    pub fn retry_policy(mut self, policy: RetryPolicy) -> Self {
+        self.cfg.retry = policy;
+        self
+    }
+
     /// Advertise the columnar wire codec (default on). The codec only engages when
     /// *both* endpoints advertise it in their `EstHello`; a mixed deployment negotiates
     /// down to the pre-codec frame format, byte-for-byte. Framing knob — deliberately
@@ -435,6 +468,7 @@ impl Setx {
                 encode_threads: 0,
                 engine: BidiOptions::default(),
                 tracing: true,
+                retry: RetryPolicy::default(),
             },
         }
     }
@@ -553,6 +587,17 @@ pub struct SetxReport {
     /// directions). For a partitioned aggregate this is the **slowest partition's**
     /// count — partitions run concurrently, so summing would inflate with `parts`.
     pub rounds: usize,
+    /// Reconnects [`Setx::run_with_retry`] performed before this successful
+    /// conversation (0 = the first connection succeeded; plain [`Setx::run`]
+    /// always reports 0). Distinct from [`SetxReport::attempts`], which counts
+    /// decode-ladder rungs *within* one conversation.
+    pub retries: u32,
+    /// Transport bytes burned by the failed attempts behind
+    /// [`SetxReport::retries`] (both directions, from the transports' own
+    /// counters). **Not** included in [`SetxReport::total_bytes`]/`comm`, which
+    /// describe only the successful conversation — this field is the price of
+    /// recovery, kept visible and separate.
+    pub retry_bytes: usize,
     /// Full conversation transcript at exact wire sizes — both endpoints of a session
     /// record identical totals.
     pub comm: CommLog,
@@ -566,6 +611,12 @@ pub struct SetxReport {
 }
 
 impl SetxReport {
+    /// Connection attempts consumed end to end: `retries + 1` (the successful
+    /// conversation plus every reconnect before it).
+    pub fn attempts_used(&self) -> u32 {
+        self.retries + 1
+    }
+
     /// Total conversation bytes, both directions — the paper's communication cost.
     pub fn total_bytes(&self) -> usize {
         self.comm.total_bytes()
@@ -701,5 +752,66 @@ mod tests {
         let alice = Setx::builder(&a).seed(1).build().unwrap();
         let bob = Setx::builder(&b).seed(2).build().unwrap();
         assert!(matches!(alice.run_pair(&bob), Err(SetxError::ConfigMismatch { .. })));
+    }
+
+    /// One instance of every `SetxError` variant — the exhaustive fixture the
+    /// classification and Display tests below share. Adding a variant without
+    /// extending this list is a compile-visible gap (the tests enumerate it).
+    fn every_variant() -> Vec<SetxError> {
+        vec![
+            SetxError::Config("safety 0 outside [0.2, 8.0]".to_string()),
+            SetxError::ConfigMismatch { ours: 0xA, theirs: 0xB },
+            SetxError::Io(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "fault: connection dropped",
+            )),
+            SetxError::PeerClosed { during: "handshake" },
+            SetxError::MalformedFrame("fault: flipped frame bytes"),
+            SetxError::Protocol(SessionError::UnexpectedMessage {
+                phase: "sketch",
+                got: "confirm",
+            }),
+            SetxError::Decode { failure: DecodeFailure::ResidueDecode, attempts: 3 },
+            SetxError::ServerBusy { retry_after_ms: 50, namespace: 2 },
+        ]
+    }
+
+    #[test]
+    fn transient_classification_covers_every_variant() {
+        // The retry layer's contract: exactly Io / ServerBusy / PeerClosed are
+        // worth a fresh connection; everything else reproduces on a clean link.
+        for err in every_variant() {
+            let expect = matches!(
+                err,
+                SetxError::Io(_) | SetxError::ServerBusy { .. } | SetxError::PeerClosed { .. }
+            );
+            assert_eq!(err.is_transient(), expect, "classification drifted for {err:?}");
+        }
+        let transient = every_variant().iter().filter(|e| e.is_transient()).count();
+        assert_eq!(transient, 3);
+    }
+
+    #[test]
+    fn display_is_stable_on_every_variant() {
+        let expected = [
+            "invalid config: safety 0 outside [0.2, 8.0]",
+            "peer config mismatch (ours 0xa, theirs 0xb)",
+            "transport i/o: fault: connection dropped",
+            "peer closed during handshake",
+            "malformed frame: fault: flipped frame bytes",
+            "protocol violation: unexpected confirm frame in sketch phase",
+            "residue undecodable after 3 attempt(s)",
+            "server at admission capacity for tenant 2 (retry after ~50 ms)",
+        ];
+        let variants = every_variant();
+        assert_eq!(variants.len(), expected.len());
+        for (err, want) in variants.iter().zip(expected) {
+            assert_eq!(err.to_string(), want, "Display drifted for {err:?}");
+        }
+        // Io and Protocol expose their cause through `source()`; the rest are leaves.
+        for err in &variants {
+            let has_source = matches!(err, SetxError::Io(_) | SetxError::Protocol(_));
+            assert_eq!(std::error::Error::source(err).is_some(), has_source);
+        }
     }
 }

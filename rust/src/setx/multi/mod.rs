@@ -127,6 +127,22 @@ impl std::fmt::Display for MultiError {
     }
 }
 
+impl MultiError {
+    /// Whether rejoining a fresh round can plausibly succeed — the N-party face
+    /// of [`SetxError::is_transient`]. A stalled/dropped spoke
+    /// ([`MultiError::PartyTimeout`]) and a round that was merely full or past
+    /// its join window ([`MultiError::RoundInProgress`]) are worth a retry; a
+    /// spoke error delegates to its inner classification; config and
+    /// duplicate-id faults reproduce as-is.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            MultiError::PartyTimeout { .. } | MultiError::RoundInProgress => true,
+            MultiError::Party { error, .. } => error.is_transient(),
+            MultiError::Config(_) | MultiError::DuplicateParty { .. } => false,
+        }
+    }
+}
+
 impl std::error::Error for MultiError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
@@ -1218,6 +1234,8 @@ impl Party {
                     converged: true,
                     attempts: self.attempts.max(1),
                     rounds: self.comm.payload_frames(),
+                    retries: 0,
+                    retry_bytes: 0,
                     comm: std::mem::take(&mut self.comm),
                     local_is_alice: true,
                     trace: self.tracer.take(),
@@ -1570,5 +1588,22 @@ mod tests {
         );
         assert!(coord.awaiting(1));
         assert!(!coord.joined(2));
+    }
+
+    #[test]
+    fn transient_classification_mirrors_the_two_party_contract() {
+        // Dropped/stalled spokes and full rounds retry; identity and config
+        // faults do not; Party delegates to the inner SetxError verdict.
+        assert!(MultiError::PartyTimeout { party: 2 }.is_transient());
+        assert!(MultiError::RoundInProgress.is_transient());
+        assert!(!MultiError::Config("bad".to_string()).is_transient());
+        assert!(!MultiError::DuplicateParty { party: 1 }.is_transient());
+        let io = SetxError::Io(std::io::Error::new(
+            std::io::ErrorKind::ConnectionReset,
+            "fault: connection dropped",
+        ));
+        assert!(MultiError::Party { party: 3, error: io }.is_transient());
+        let fatal = SetxError::MalformedFrame("fault: flipped frame bytes");
+        assert!(!MultiError::Party { party: 3, error: fatal }.is_transient());
     }
 }

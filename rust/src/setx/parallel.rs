@@ -198,6 +198,8 @@ fn empty_report(comm: CommLog, local_is_alice: bool) -> SetxReport {
         converged: true,
         attempts: 1,
         rounds: 0,
+        retries: 0,
+        retry_bytes: 0,
         comm,
         local_is_alice,
         // Partitions run concurrently on the pool: a merged timeline would interleave
@@ -228,6 +230,10 @@ fn merge_into(agg: &mut SetxReport, part: SetxReport) {
     // Partitions run concurrently, so the paper-sense round count of the aggregate is
     // the slowest partition's, not the sum (which would inflate linearly with `parts`).
     agg.rounds = agg.rounds.max(part.rounds);
+    // Recovery cost is additive across partitions (unlike rounds, every failed
+    // attempt's bytes were really spent).
+    agg.retries += part.retries;
+    agg.retry_bytes += part.retry_bytes;
     agg.comm.extend(&part.comm);
 }
 
@@ -282,6 +288,8 @@ mod tests {
             converged: true,
             attempts,
             rounds,
+            retries: 0,
+            retry_bytes: 0,
             comm: CommLog::new(),
             local_is_alice: true,
             trace: crate::obs::SessionTrace::default(),

@@ -1,0 +1,329 @@
+//! Client-side recovery: a seeded [`RetryPolicy`] and [`Setx::run_with_retry`].
+//!
+//! The protocol is multi-round and stateful on the wire (sketch → residue →
+//! SMF → confirm), so a dropped or truncated frame mid-ladder kills the whole
+//! conversation — and, as with any reconciliation protocol whose residual
+//! failure answer is retransmission, the cheap fix is to reconnect and re-run.
+//! This module is that loop, shared by every caller that retries:
+//!
+//! * [`SetxError::is_transient`] is the classification contract: transport
+//!   I/O, an admission [`SetxError::ServerBusy`], and a peer close are worth a
+//!   fresh connection; config mismatches and protocol faults are not
+//!   (retrying against a corrupting or incompatible peer reproduces the
+//!   failure).
+//! * [`RetryPolicy`] is capped exponential backoff with deterministic,
+//!   seeded per-client jitter — the exact schedule the server loadgen has
+//!   always used, now one shared implementation
+//!   ([`crate::server::loadgen`] is a caller of this policy, not a sibling).
+//! * [`Setx::run_with_retry`] reconnects through a caller-supplied transport
+//!   factory, honors the server's `retry_after_ms` hint carried by
+//!   [`SetxError::ServerBusy`], and accounts the bytes burned by failed
+//!   attempts in [`SetxReport::retry_bytes`] — recovery is visible, not free.
+//!
+//! ```
+//! use commonsense::data::synth;
+//! use commonsense::setx::transport::{mem_pair, FaultKind, FaultPlan};
+//! use commonsense::setx::{RetryPolicy, Setx};
+//! use std::sync::Arc;
+//!
+//! let (a, b) = synth::overlap_pair(400, 8, 8, 3);
+//! let policy = RetryPolicy { base_ms: 0, cap_ms: 0, ..RetryPolicy::default() };
+//! let alice = Setx::builder(&a).retry_policy(policy).build().unwrap();
+//! let bob = Arc::new(Setx::builder(&b).build().unwrap());
+//! // Kill the first conversation at its 2nd frame; later attempts run clean
+//! // (the injector's counters persist across reconnects).
+//! let chaos = FaultPlan::new(1).fail_nth(FaultKind::DropConnection, None, 2).injector();
+//! let mut peers = Vec::new();
+//! let report = alice
+//!     .run_with_retry(7, |_attempt| {
+//!         let (client_end, server_end) = mem_pair();
+//!         let bob = Arc::clone(&bob);
+//!         peers.push(std::thread::spawn(move || {
+//!             let mut t = server_end;
+//!             let _ = bob.run(&mut t);
+//!         }));
+//!         Ok(chaos.wrap(client_end))
+//!     })
+//!     .unwrap();
+//! for p in peers {
+//!     p.join().unwrap();
+//! }
+//! assert_eq!(report.retries, 1);
+//! assert_eq!(report.attempts_used(), 2);
+//! assert!(report.retry_bytes > 0); // the failed attempt's bytes, accounted
+//! assert_eq!(report.intersection, synth::intersect(&a, &b));
+//! ```
+
+use super::transport::Transport;
+use super::{Setx, SetxError, SetxReport};
+use crate::hash::split_mix64;
+
+/// Capped exponential backoff with deterministic, seeded jitter. `Copy` and
+/// deliberately **not** part of the config fingerprint ([`super::SetxConfig`]
+/// carries one): when to reconnect is a local client decision, not protocol
+/// state, so peers with different policies interoperate.
+///
+/// The schedule of the k-th retry (k = 1, 2, …):
+///
+/// ```text
+/// base    = max(server retry_after_ms hint, base_ms)
+/// backoff = min(base · 2^min(k−1, 6), cap_ms)
+/// jitter  = split_mix64(client_key ⊕ (k << 32) ⊕ jitter_seed) mod (base/2 + 1)
+/// wait    = backoff + jitter milliseconds
+/// ```
+///
+/// so a rejected burst neither re-arrives as a burst nor synchronizes across
+/// runs, and a given fleet's retry schedule is exactly reproducible from its
+/// seed. With `base_ms = 0` (and no server hint) the wait is exactly zero —
+/// the chaos tests' no-sleep configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Reconnect attempts after the first failure (0 = never retry; the
+    /// default 3 matches the loadgen's historical budget).
+    pub max_retries: u32,
+    /// Floor of the backoff base in milliseconds; a larger server
+    /// `retry_after_ms` hint overrides it per retry.
+    pub base_ms: u64,
+    /// Ceiling on the exponential part of the wait, milliseconds (jitter may
+    /// still ride on top, bounded by `base/2`).
+    pub cap_ms: u64,
+    /// Seed of the deterministic jitter hash (mixed with the caller's
+    /// `client_key` and the attempt number).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, base_ms: 10, cap_ms: 2_000, jitter_seed: 0xC0FFEE }
+    }
+}
+
+impl RetryPolicy {
+    /// The policy that never retries — [`Setx::run_with_retry`] under it is
+    /// exactly one [`Setx::run`] plus report bookkeeping.
+    pub fn none() -> Self {
+        RetryPolicy { max_retries: 0, ..RetryPolicy::default() }
+    }
+
+    /// Milliseconds to wait before retry number `attempt` (1-based), given the
+    /// server's `retry_after_ms` hint from the rejection (0 = no hint).
+    /// Deterministic in `(client_key, attempt, jitter_seed)`.
+    pub fn backoff_ms(&self, client_key: u64, attempt: u32, hint_ms: u32) -> u64 {
+        let attempt = attempt.max(1);
+        let base = u64::from(hint_ms).max(self.base_ms);
+        let backoff = base.saturating_mul(1u64 << (attempt - 1).min(6)).min(self.cap_ms);
+        let jitter = split_mix64(client_key ^ (u64::from(attempt) << 32) ^ self.jitter_seed)
+            % (base / 2 + 1);
+        backoff.saturating_add(jitter)
+    }
+}
+
+impl Setx {
+    /// [`Setx::run`], resurrected across transient failures: on an
+    /// [`is_transient`](SetxError::is_transient) error the transport is
+    /// dropped (its byte counters folded into [`SetxReport::retry_bytes`]),
+    /// the policy's backoff elapses, and `connect` is called for a fresh
+    /// transport — up to the configured
+    /// ([`SetxBuilder::retry_policy`](super::SetxBuilder::retry_policy))
+    /// `max_retries` reconnects. Fatal errors (and retry exhaustion) surface
+    /// immediately as `Err`.
+    ///
+    /// `client_key` decorrelates the jitter across a fleet (loadgen passes the
+    /// client index); `connect` receives the 0-based attempt number. A
+    /// [`SetxError::ServerBusy`] rejection feeds its `retry_after_ms` hint
+    /// into the backoff base, so clients respect server pushback.
+    pub fn run_with_retry<T, F>(
+        &self,
+        client_key: u64,
+        connect: F,
+    ) -> Result<SetxReport, SetxError>
+    where
+        T: Transport,
+        F: FnMut(u32) -> Result<T, SetxError>,
+    {
+        let policy = self.cfg.retry;
+        self.run_with_retry_observed(&policy, client_key, connect, |_, _| {})
+    }
+
+    /// [`Setx::run_with_retry`] with an explicit policy and an observer called
+    /// once per performed retry with `(error being retried, backoff_ms about
+    /// to elapse)` — how the loadgen tells busy-pushback retries from fault
+    /// retries without owning the loop.
+    pub fn run_with_retry_observed<T, F, O>(
+        &self,
+        policy: &RetryPolicy,
+        client_key: u64,
+        mut connect: F,
+        mut on_retry: O,
+    ) -> Result<SetxReport, SetxError>
+    where
+        T: Transport,
+        F: FnMut(u32) -> Result<T, SetxError>,
+        O: FnMut(&SetxError, u64),
+    {
+        let mut retries = 0u32;
+        let mut retry_bytes = 0usize;
+        loop {
+            let (result, moved) = match connect(retries) {
+                Ok(mut transport) => {
+                    let result = self.run(&mut transport);
+                    (result, transport.bytes_moved())
+                }
+                Err(e) => (Err(e), None),
+            };
+            match result {
+                Ok(mut report) => {
+                    report.retries = retries;
+                    report.retry_bytes = retry_bytes;
+                    return Ok(report);
+                }
+                Err(err) => {
+                    if !err.is_transient() || retries >= policy.max_retries {
+                        return Err(err);
+                    }
+                    if let Some((sent, received)) = moved {
+                        retry_bytes += sent + received;
+                    }
+                    retries += 1;
+                    let hint = match &err {
+                        SetxError::ServerBusy { retry_after_ms, .. } => *retry_after_ms,
+                        _ => 0,
+                    };
+                    let backoff = policy.backoff_ms(client_key, retries, hint);
+                    on_retry(&err, backoff);
+                    if backoff > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(backoff));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::transport::{mem_pair, FaultKind, FaultPlan};
+    use super::super::Setx;
+    use super::*;
+    use crate::data::synth;
+    use std::sync::Arc;
+
+    /// Zero-wait policy for fault-path tests: base 0 and no hint make every
+    /// computed backoff exactly 0 ms, so nothing sleeps.
+    fn instant_policy(max_retries: u32) -> RetryPolicy {
+        RetryPolicy { max_retries, base_ms: 0, cap_ms: 0, jitter_seed: 1 }
+    }
+
+    #[test]
+    fn backoff_matches_the_documented_schedule() {
+        let p = RetryPolicy::default();
+        // Deterministic in (key, attempt, seed).
+        assert_eq!(p.backoff_ms(7, 1, 0), p.backoff_ms(7, 1, 0));
+        // The exact loadgen formula, spelled out.
+        for (key, attempt, hint) in [(0u64, 1u32, 0u32), (3, 2, 0), (9, 4, 120), (1, 9, 0)] {
+            let base = u64::from(hint).max(p.base_ms);
+            let backoff = base.saturating_mul(1u64 << (attempt - 1).min(6)).min(p.cap_ms);
+            let jitter = split_mix64(key ^ (u64::from(attempt) << 32) ^ p.jitter_seed)
+                % (base / 2 + 1);
+            assert_eq!(p.backoff_ms(key, attempt, hint), backoff + jitter);
+        }
+        // The server hint raises the base: never wait less than the hint says.
+        assert!(p.backoff_ms(0, 1, 500) >= 500);
+        // The exponential part is capped (jitter ≤ base/2 on top).
+        let base = 500u64;
+        assert!(p.backoff_ms(0, 12, base as u32) <= p.cap_ms + base / 2);
+        // Attempt 0 is treated as 1 (callers count retries 1-based).
+        assert_eq!(p.backoff_ms(4, 0, 0), p.backoff_ms(4, 1, 0));
+        // Zero-wait config used by the chaos tests really waits zero.
+        assert_eq!(instant_policy(3).backoff_ms(123, 5, 0), 0);
+    }
+
+    /// Run `alice` with retries against fresh in-memory peers, one spawned per
+    /// connect, each wrapped by `injector`. Returns (outcome, connects made).
+    fn retry_over_mem(
+        alice: &Setx,
+        bob: &Arc<Setx>,
+        injector: &crate::setx::transport::FaultInjector,
+        policy: &RetryPolicy,
+        retried: &mut Vec<bool>,
+    ) -> (Result<crate::setx::SetxReport, crate::setx::SetxError>, u32) {
+        let mut connects = 0u32;
+        let mut peers = Vec::new();
+        let result = alice.run_with_retry_observed(
+            policy,
+            0,
+            |_attempt| {
+                connects += 1;
+                let (client_end, server_end) = mem_pair();
+                let bob = Arc::clone(bob);
+                peers.push(std::thread::spawn(move || {
+                    let mut t = server_end;
+                    let _ = bob.run(&mut t);
+                }));
+                Ok(injector.wrap(client_end))
+            },
+            |err, _backoff| retried.push(err.is_transient()),
+        );
+        for p in peers {
+            p.join().unwrap();
+        }
+        (result, connects)
+    }
+
+    #[test]
+    fn run_with_retry_converges_after_a_transient_fault() {
+        let (a, b) = synth::overlap_pair(600, 12, 15, 5);
+        let alice = Setx::builder(&a).build().unwrap();
+        let bob = Arc::new(Setx::builder(&b).build().unwrap());
+        // The 2nd frame the injector sees (the client's first recv) dies; the
+        // shared counters make every later connection clean.
+        let injector =
+            FaultPlan::new(7).fail_nth(FaultKind::DropConnection, None, 2).injector();
+        let mut retried = Vec::new();
+        let (result, connects) =
+            retry_over_mem(&alice, &bob, &injector, &instant_policy(2), &mut retried);
+        let report = result.unwrap();
+        assert_eq!(connects, 2);
+        assert_eq!(retried, vec![true]);
+        assert_eq!(report.retries, 1);
+        assert_eq!(report.attempts_used(), 2);
+        assert!(report.retry_bytes > 0, "failed attempt's bytes must be accounted");
+        assert_eq!(report.intersection, synth::intersect(&a, &b));
+        // The successful conversation's own accounting is untouched by the
+        // failed attempt: comm holds this conversation only.
+        assert!(report.total_bytes() > 0);
+        assert_eq!(injector.fired(), 1);
+    }
+
+    #[test]
+    fn fatal_errors_do_not_retry() {
+        let (a, b) = synth::overlap_pair(400, 8, 8, 2);
+        let alice = Setx::builder(&a).build().unwrap();
+        let bob = Arc::new(Setx::builder(&b).build().unwrap());
+        // Corrupt the client's first received frame: MalformedFrame is fatal.
+        let injector = FaultPlan::new(11).fail_nth(FaultKind::FlipBytes, None, 2).injector();
+        let mut retried = Vec::new();
+        let (result, connects) =
+            retry_over_mem(&alice, &bob, &injector, &instant_policy(3), &mut retried);
+        assert!(matches!(result, Err(crate::setx::SetxError::MalformedFrame(_))));
+        assert_eq!(connects, 1, "a fatal error must not burn the retry budget");
+        assert!(retried.is_empty());
+    }
+
+    #[test]
+    fn retry_budget_exhausts_to_the_last_error() {
+        let (a, b) = synth::overlap_pair(400, 8, 8, 9);
+        let alice = Setx::builder(&a).build().unwrap();
+        let bob = Arc::new(Setx::builder(&b).build().unwrap());
+        // Every frame dies: no attempt can ever succeed.
+        let injector = FaultPlan::new(13)
+            .fail_with_probability(FaultKind::DropConnection, None, 1.0)
+            .injector();
+        let mut retried = Vec::new();
+        let (result, connects) =
+            retry_over_mem(&alice, &bob, &injector, &instant_policy(2), &mut retried);
+        assert!(matches!(result, Err(crate::setx::SetxError::Io(_))));
+        assert_eq!(connects, 3, "first attempt + max_retries reconnects");
+        assert_eq!(retried, vec![true, true]);
+    }
+}

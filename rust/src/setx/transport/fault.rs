@@ -1,0 +1,643 @@
+//! Deterministic fault injection for any [`Transport`]: the chaos harness's hands.
+//!
+//! A [`FaultPlan`] is a declarative list of rules — *which* fault
+//! ([`FaultKind`]), *where* (a [`Phase`] filter plus send/recv direction), and
+//! *when* (either the n-th matching frame, or per-frame with a seeded
+//! probability). [`FaultPlan::injector`] freezes the plan into a shared
+//! [`FaultInjector`], and [`FaultInjector::wrap`] puts a [`FaultTransport`]
+//! around a real transport. Everything downstream of the seed is deterministic:
+//! the same plan over the same conversation fires the same faults at the same
+//! frames, every run — which is what lets `rust/tests/chaos.rs` assert *exact*
+//! outcomes instead of "something probably broke".
+//!
+//! # What each fault looks like to the protocol
+//!
+//! Faults are modeled at the frame layer as the *receiver-visible effect* the
+//! real-world failure would have after the framing layer
+//! ([`super::frame_extent`] / [`super::read_frame`]) has done its validation:
+//!
+//! * [`FaultKind::DropConnection`] — the conversation dies at this frame. The
+//!   faulted operation (and every later one) returns [`SetxError::Io`] with kind
+//!   `ConnectionReset`/`BrokenPipe` — **transient**, exactly what a retry layer
+//!   must survive.
+//! * [`FaultKind::TruncateFrame`] — the peer closed mid-frame. On the recv side
+//!   this surfaces as [`SetxError::Io`] (kind `UnexpectedEof`), matching what
+//!   [`super::read_frame`] reports for a short body — **transient**. On the send
+//!   side the damaged frame is silently swallowed and the stream marked dead
+//!   (the local writer can't see its own truncation; it sees the *next* I/O
+//!   fail).
+//! * [`FaultKind::FlipBytes`] — frame corruption that desynchronizes the
+//!   framing layer: the receiver observes [`SetxError::MalformedFrame`] —
+//!   a **fatal** protocol fault (retrying a corrupting link re-corrupts). On
+//!   the send side it behaves like a truncation for the local end.
+//! * [`FaultKind::Delay`] — the frame is delivered intact, late. Time is
+//!   *simulated*: when the plan carries a [`ManualClock`]
+//!   ([`FaultPlan::manual_clock`]) the clock is advanced by `delay_ns`; there is
+//!   never a real sleep, so chaos tests stay fast and deterministic.
+//! * [`FaultKind::DuplicateFrame`] — the frame arrives (or is sent) twice;
+//!   duplicates surface out of phase and the sans-io state machines must reject
+//!   them with a typed error, never mis-merge them.
+//!
+//! Every fired fault is recorded in the [`FaultLog`] — kind, phase, direction,
+//! global frame index, and the clock reading — so tests assert exactly which
+//! faults fired, not just that *something* did.
+//!
+//! ```
+//! use commonsense::metrics::Phase;
+//! use commonsense::setx::transport::{mem_pair, FaultKind, FaultPlan};
+//!
+//! let injector = FaultPlan::new(7)
+//!     .fail_nth(FaultKind::DropConnection, Some(Phase::Residue), 2)
+//!     .injector();
+//! let (client, _server) = mem_pair();
+//! let mut faulty = injector.wrap(client);
+//! // ... drive a session over `faulty`: the 2nd Residue-phase frame kills the
+//! // connection, and `injector.log()` proves it afterwards ...
+//! # let _ = &mut faulty;
+//! ```
+
+use super::{SetxError, Transport};
+use crate::hash::split_mix64;
+use crate::metrics::Phase;
+use crate::obs::{default_clock, Clock, ManualClock};
+use crate::protocol::wire::Msg;
+use std::sync::{Arc, Mutex};
+
+/// The injectable failure modes. See the module docs for the receiver-visible
+/// semantics of each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The connection dies at this frame; every later operation fails with
+    /// [`SetxError::Io`].
+    DropConnection,
+    /// The frame is cut mid-body and the stream ends: [`SetxError::Io`]
+    /// (`UnexpectedEof`) on the receiving side.
+    TruncateFrame,
+    /// The frame is corrupted in flight: [`SetxError::MalformedFrame`] on the
+    /// receiving side.
+    FlipBytes,
+    /// The frame is delivered intact after `delay_ns` of *simulated* time.
+    Delay,
+    /// The frame is delivered twice.
+    DuplicateFrame,
+}
+
+impl FaultKind {
+    /// Stable lowercase name, for logs and bench-row labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::DropConnection => "drop_connection",
+            FaultKind::TruncateFrame => "truncate_frame",
+            FaultKind::FlipBytes => "flip_bytes",
+            FaultKind::Delay => "delay",
+            FaultKind::DuplicateFrame => "duplicate_frame",
+        }
+    }
+}
+
+/// Which side of the wrapped transport a rule watches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultDirection {
+    /// Frames this endpoint sends.
+    Send,
+    /// Frames this endpoint receives.
+    Recv,
+    /// Either direction.
+    Any,
+}
+
+impl FaultDirection {
+    fn matches(self, sending: bool) -> bool {
+        match self {
+            FaultDirection::Send => sending,
+            FaultDirection::Recv => !sending,
+            FaultDirection::Any => true,
+        }
+    }
+}
+
+/// One declarative fault rule: *kind* × *where* (phase + direction) × *when*
+/// (n-th matching frame, or a per-frame probability).
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    /// Restrict to frames of this protocol phase; `None` matches every phase.
+    /// Frames map to phases by message type: `EstHello`/`Hello`/`Busy` →
+    /// Handshake, `Sketch`/`AggSketch` → Sketch, `Round`/`MultiResidue` →
+    /// Residue, `Confirm` → Confirm.
+    pub phase: Option<Phase>,
+    pub direction: FaultDirection,
+    /// Fire on exactly the n-th (1-based) matching frame, once. `None` means
+    /// probabilistic: every matching frame fires independently with
+    /// `probability`.
+    pub nth: Option<u32>,
+    /// Per-frame firing probability in `[0, 1]`, used only when `nth` is `None`.
+    /// The coin is `split_mix64(seed, rule, frame)` — seeded, so reruns agree.
+    pub probability: f64,
+    /// Simulated latency for [`FaultKind::Delay`]; ignored by other kinds.
+    pub delay_ns: u64,
+}
+
+/// One fired fault, as recorded in the [`FaultLog`].
+#[derive(Clone, Debug)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    /// Phase of the frame the fault hit.
+    pub phase: Phase,
+    /// `true` if the fault hit a frame this endpoint was sending.
+    pub sending: bool,
+    /// Index of the frame among *all* frames that crossed this injector's
+    /// transports (0-based, both directions, counted across reconnects).
+    pub frame_index: u64,
+    /// Clock reading when the fault fired (the plan's [`ManualClock`] when one
+    /// is attached, the process monotonic clock otherwise).
+    pub at_ns: u64,
+}
+
+/// The record of every fault that actually fired, in firing order.
+#[derive(Clone, Debug, Default)]
+pub struct FaultLog {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultLog {
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// How many fired events were of `kind`.
+    pub fn count(&self, kind: FaultKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+}
+
+/// A seeded, declarative schedule of faults. Build one with the chainable
+/// constructors, then freeze it into a [`FaultInjector`] (rules are immutable
+/// from then on; only counters and the log evolve).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<FaultRule>,
+    manual: Option<Arc<ManualClock>>,
+}
+
+impl FaultPlan {
+    /// An empty plan (a transparent wrapper) with the given probability seed.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: Vec::new(), manual: None }
+    }
+
+    /// Append a fully spelled-out rule.
+    pub fn rule(mut self, rule: FaultRule) -> FaultPlan {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Fire `kind` on exactly the n-th (1-based) frame of `phase` (any phase if
+    /// `None`), in either direction — e.g. `fail_nth(DropConnection,
+    /// Some(Phase::Residue), 2)` kills the 2nd Residue frame.
+    pub fn fail_nth(self, kind: FaultKind, phase: Option<Phase>, nth: u32) -> FaultPlan {
+        self.rule(FaultRule {
+            kind,
+            phase,
+            direction: FaultDirection::Any,
+            nth: Some(nth.max(1)),
+            probability: 0.0,
+            delay_ns: 0,
+        })
+    }
+
+    /// Fire `kind` on every matching frame independently with probability `p`.
+    pub fn fail_with_probability(
+        self,
+        kind: FaultKind,
+        phase: Option<Phase>,
+        p: f64,
+    ) -> FaultPlan {
+        self.rule(FaultRule {
+            kind,
+            phase,
+            direction: FaultDirection::Any,
+            nth: None,
+            probability: p.clamp(0.0, 1.0),
+            delay_ns: 0,
+        })
+    }
+
+    /// Delay the n-th matching frame by `delay_ns` of simulated time (the
+    /// attached [`ManualClock`] is advanced; nothing sleeps).
+    pub fn delay_nth(self, phase: Option<Phase>, nth: u32, delay_ns: u64) -> FaultPlan {
+        self.rule(FaultRule {
+            kind: FaultKind::Delay,
+            phase,
+            direction: FaultDirection::Any,
+            nth: Some(nth.max(1)),
+            probability: 0.0,
+            delay_ns,
+        })
+    }
+
+    /// Attach a [`ManualClock`]: [`FaultKind::Delay`] advances it, and every
+    /// [`FaultEvent::at_ns`] is stamped from it. Without one, events are stamped
+    /// from the process monotonic clock and delays only log.
+    pub fn manual_clock(mut self, clock: Arc<ManualClock>) -> FaultPlan {
+        self.manual = Some(clock);
+        self
+    }
+
+    /// Freeze the plan into a shareable injector. One injector can wrap many
+    /// transports in turn (e.g. each reconnect of a retry loop): rule counters
+    /// and the log persist across wraps, so an `nth`-style rule that already
+    /// fired leaves later connections clean — the shape retry-convergence tests
+    /// rely on.
+    pub fn injector(self) -> FaultInjector {
+        let clock: Arc<dyn Clock> = match &self.manual {
+            Some(m) => Arc::clone(m) as Arc<dyn Clock>,
+            None => default_clock(),
+        };
+        let hits = vec![0u64; self.rules.len()];
+        let fired = vec![0u64; self.rules.len()];
+        FaultInjector {
+            shared: Arc::new(Mutex::new(InjectorState {
+                plan: self,
+                clock,
+                rule_hits: hits,
+                rule_fired: fired,
+                frames: 0,
+                log: FaultLog::default(),
+            })),
+        }
+    }
+}
+
+struct InjectorState {
+    plan: FaultPlan,
+    clock: Arc<dyn Clock>,
+    /// Per rule: how many frames have matched its (phase, direction) filter.
+    rule_hits: Vec<u64>,
+    /// Per rule: how many times it has fired (an `nth` rule fires at most once).
+    rule_fired: Vec<u64>,
+    /// Frames observed across all wrapped transports, both directions.
+    frames: u64,
+    log: FaultLog,
+}
+
+impl InjectorState {
+    /// Classify a frame, advance every matching rule's counter, and return the
+    /// first rule that fires (with its delay), recording it in the log.
+    fn decide(&mut self, sending: bool, msg: &Msg) -> Option<(FaultKind, u64)> {
+        let phase = phase_of(msg);
+        let frame_index = self.frames;
+        self.frames += 1;
+        let mut fired: Option<(FaultKind, u64)> = None;
+        for (i, rule) in self.plan.rules.iter().enumerate() {
+            let phase_ok = rule.phase.map_or(true, |p| p == phase);
+            if !phase_ok || !rule.direction.matches(sending) {
+                continue;
+            }
+            self.rule_hits[i] += 1;
+            if fired.is_some() {
+                continue;
+            }
+            let fire = match rule.nth {
+                Some(n) => self.rule_fired[i] == 0 && self.rule_hits[i] == u64::from(n),
+                None => coin(self.plan.seed, i as u64, self.rule_hits[i]) < rule.probability,
+            };
+            if fire {
+                self.rule_fired[i] += 1;
+                fired = Some((rule.kind, rule.delay_ns));
+            }
+        }
+        if let Some((kind, delay_ns)) = fired {
+            if kind == FaultKind::Delay {
+                if let Some(m) = &self.plan.manual {
+                    m.advance(delay_ns);
+                }
+            }
+            let at_ns = self.clock.now_ns();
+            self.log.events.push(FaultEvent { kind, phase, sending, frame_index, at_ns });
+        }
+        fired
+    }
+}
+
+/// Deterministic per-(seed, rule, frame) coin in `[0, 1)`.
+fn coin(seed: u64, rule: u64, hit: u64) -> f64 {
+    let r = split_mix64(seed ^ rule.rotate_left(48) ^ hit.rotate_left(17));
+    (r >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Protocol phase of a frame, by message type — delegated to the accounting
+/// layer's classifier so fault targeting and byte accounting can never drift
+/// apart.
+fn phase_of(msg: &Msg) -> Phase {
+    crate::protocol::session::frame_phase(msg)
+}
+
+/// The frozen, shareable form of a [`FaultPlan`]: wrap transports with it, then
+/// read back [`FaultInjector::log`] to assert exactly what fired.
+#[derive(Clone)]
+pub struct FaultInjector {
+    shared: Arc<Mutex<InjectorState>>,
+}
+
+impl FaultInjector {
+    /// Wrap a transport. Counters and the log are shared with every other
+    /// transport wrapped by this injector (past or future).
+    pub fn wrap<T: Transport>(&self, inner: T) -> FaultTransport<T> {
+        FaultTransport {
+            inner,
+            shared: Arc::clone(&self.shared),
+            dead: None,
+            pending: None,
+        }
+    }
+
+    /// Snapshot of the log of fired faults.
+    pub fn log(&self) -> FaultLog {
+        self.shared.lock().expect("fault injector poisoned").log.clone()
+    }
+
+    /// Total faults fired so far.
+    pub fn fired(&self) -> usize {
+        self.shared.lock().expect("fault injector poisoned").log.len()
+    }
+
+    /// Total frames observed (both directions, all wrapped transports).
+    pub fn frames_seen(&self) -> u64 {
+        self.shared.lock().expect("fault injector poisoned").frames
+    }
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.shared.lock().expect("fault injector poisoned");
+        f.debug_struct("FaultInjector")
+            .field("rules", &st.plan.rules.len())
+            .field("frames", &st.frames)
+            .field("fired", &st.log.len())
+            .finish()
+    }
+}
+
+/// A [`Transport`] decorator that applies a [`FaultPlan`] to the frames passing
+/// through it. Obtain via [`FaultInjector::wrap`].
+pub struct FaultTransport<T: Transport> {
+    inner: T,
+    shared: Arc<Mutex<InjectorState>>,
+    /// `Some(reason)` once a connection-killing fault fired: every later
+    /// operation fails with a transient I/O error, like a real dead socket.
+    dead: Option<&'static str>,
+    /// A duplicate frame awaiting redelivery on the next `recv`.
+    pending: Option<Msg>,
+}
+
+impl<T: Transport> FaultTransport<T> {
+    /// The wrapped transport (e.g. to read its byte counters).
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    fn decide(&self, sending: bool, msg: &Msg) -> Option<(FaultKind, u64)> {
+        self.shared.lock().expect("fault injector poisoned").decide(sending, msg)
+    }
+
+    fn dead_err(reason: &'static str, kind: std::io::ErrorKind) -> SetxError {
+        SetxError::Io(std::io::Error::new(kind, reason))
+    }
+}
+
+impl<T: Transport> Transport for FaultTransport<T> {
+    fn send(&mut self, msg: &Msg) -> Result<(), SetxError> {
+        if let Some(reason) = self.dead {
+            return Err(Self::dead_err(reason, std::io::ErrorKind::BrokenPipe));
+        }
+        match self.decide(true, msg) {
+            None => self.inner.send(msg),
+            Some((FaultKind::DropConnection, _)) => {
+                self.dead = Some("fault: connection dropped");
+                Err(Self::dead_err(
+                    "fault: connection dropped",
+                    std::io::ErrorKind::ConnectionReset,
+                ))
+            }
+            // A frame damaged on the way out: the local writer observes success
+            // (the bytes left its buffer) and the stream is dead from here — the
+            // peer never sees a complete frame, this end fails on its next I/O.
+            Some((FaultKind::TruncateFrame, _)) => {
+                self.dead = Some("fault: truncated frame in flight");
+                Ok(())
+            }
+            Some((FaultKind::FlipBytes, _)) => {
+                self.dead = Some("fault: corrupted frame in flight");
+                Ok(())
+            }
+            Some((FaultKind::Delay, _)) => self.inner.send(msg),
+            Some((FaultKind::DuplicateFrame, _)) => {
+                self.inner.send(msg)?;
+                self.inner.send(msg)
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<Option<Msg>, SetxError> {
+        if let Some(reason) = self.dead {
+            return Err(Self::dead_err(reason, std::io::ErrorKind::BrokenPipe));
+        }
+        if let Some(dup) = self.pending.take() {
+            return Ok(Some(dup));
+        }
+        let Some(msg) = self.inner.recv()? else {
+            return Ok(None);
+        };
+        match self.decide(false, &msg) {
+            None | Some((FaultKind::Delay, _)) => Ok(Some(msg)),
+            Some((FaultKind::DropConnection, _)) => {
+                self.dead = Some("fault: connection dropped");
+                Err(Self::dead_err(
+                    "fault: connection dropped",
+                    std::io::ErrorKind::ConnectionReset,
+                ))
+            }
+            Some((FaultKind::TruncateFrame, _)) => {
+                self.dead = Some("fault: truncated frame");
+                Err(Self::dead_err(
+                    "fault: truncated frame",
+                    std::io::ErrorKind::UnexpectedEof,
+                ))
+            }
+            Some((FaultKind::FlipBytes, _)) => {
+                self.dead = Some("fault: flipped frame bytes");
+                Err(SetxError::MalformedFrame("fault: flipped frame bytes"))
+            }
+            Some((FaultKind::DuplicateFrame, _)) => {
+                self.pending = Some(msg.clone());
+                Ok(Some(msg))
+            }
+        }
+    }
+
+    fn is_client(&self) -> bool {
+        self.inner.is_client()
+    }
+
+    fn bytes_moved(&self) -> Option<(usize, usize)> {
+        self.inner.bytes_moved()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mem_pair;
+    use super::*;
+    use crate::protocol::wire;
+
+    fn round_msg() -> Msg {
+        Msg::Round {
+            residue: vec![1, 2],
+            smf: None,
+            inquiry: vec![],
+            answers: vec![],
+            done: false,
+            codec: false,
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_transparent() {
+        let injector = FaultPlan::new(1).injector();
+        let (a, b) = mem_pair();
+        let mut fa = injector.wrap(a);
+        let mut fb = injector.wrap(b);
+        let msg = Msg::Confirm { ok: true, reason: wire::REASON_OK, attempt: 1 };
+        fa.send(&msg).unwrap();
+        assert_eq!(fb.recv().unwrap().unwrap(), msg);
+        assert!(injector.log().is_empty());
+        assert_eq!(injector.frames_seen(), 2); // counted on both ends
+        assert_eq!(fa.bytes_moved(), Some((msg.wire_len(), 0)));
+    }
+
+    #[test]
+    fn nth_rule_kills_exactly_the_second_residue_frame() {
+        let injector = FaultPlan::new(9)
+            .fail_nth(FaultKind::DropConnection, Some(Phase::Residue), 2)
+            .injector();
+        let (a, b) = mem_pair();
+        let mut fa = injector.wrap(a);
+        // Handshake-phase frames never match the rule.
+        fa.send(&Msg::Confirm { ok: true, reason: wire::REASON_OK, attempt: 1 })
+            .unwrap();
+        fa.send(&round_msg()).unwrap(); // 1st residue frame: clean
+        let err = fa.send(&round_msg()).unwrap_err(); // 2nd: the kill
+        assert!(matches!(err, SetxError::Io(_)));
+        assert!(err.is_transient());
+        // Dead from here on, for sends and recvs alike.
+        assert!(matches!(fa.send(&round_msg()), Err(SetxError::Io(_))));
+        assert!(matches!(fa.recv(), Err(SetxError::Io(_))));
+        let log = injector.log();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.events()[0].kind, FaultKind::DropConnection);
+        assert_eq!(log.events()[0].phase, Phase::Residue);
+        assert!(log.events()[0].sending);
+        assert_eq!(log.events()[0].frame_index, 2);
+        drop(fa);
+        // The peer sees a clean channel close (the in-memory analogue of RST).
+        let mut fb = injector.wrap(b);
+        while let Ok(Some(_)) = fb.recv() {}
+    }
+
+    #[test]
+    fn recv_side_faults_surface_with_their_typed_errors() {
+        // Truncation → transient Io(UnexpectedEof).
+        let injector = FaultPlan::new(3)
+            .fail_nth(FaultKind::TruncateFrame, None, 1)
+            .injector();
+        let (a, b) = mem_pair();
+        let mut fb = injector.wrap(b);
+        let mut raw = a;
+        raw.send(&round_msg()).unwrap();
+        match fb.recv() {
+            Err(SetxError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof)
+            }
+            other => panic!("expected truncation Io error, got {other:?}"),
+        }
+        // Flip → fatal MalformedFrame.
+        let injector =
+            FaultPlan::new(3).fail_nth(FaultKind::FlipBytes, None, 1).injector();
+        let (a, b) = mem_pair();
+        let mut fb = injector.wrap(b);
+        let mut raw = a;
+        raw.send(&round_msg()).unwrap();
+        let err = fb.recv().unwrap_err();
+        assert!(matches!(err, SetxError::MalformedFrame(_)));
+        assert!(!err.is_transient());
+    }
+
+    #[test]
+    fn duplicate_delivers_the_frame_twice() {
+        let injector = FaultPlan::new(5)
+            .fail_nth(FaultKind::DuplicateFrame, None, 1)
+            .injector();
+        let (a, b) = mem_pair();
+        let mut fa = injector.wrap(a);
+        let mut fb = injector.wrap(b);
+        fa.send(&round_msg()).unwrap();
+        // Sent once (rule fired on the recv side? no — first matching frame is the
+        // send): the send-side duplicate puts two frames on the wire.
+        assert_eq!(fb.recv().unwrap().unwrap(), round_msg());
+        assert_eq!(fb.recv().unwrap().unwrap(), round_msg());
+        assert_eq!(injector.log().count(FaultKind::DuplicateFrame), 1);
+    }
+
+    #[test]
+    fn delay_advances_the_manual_clock_and_never_sleeps() {
+        let clock = Arc::new(ManualClock::new(1_000));
+        let injector = FaultPlan::new(2)
+            .delay_nth(None, 1, 5_000_000)
+            .manual_clock(Arc::clone(&clock))
+            .injector();
+        let (a, b) = mem_pair();
+        let mut fa = injector.wrap(a);
+        let mut fb = injector.wrap(b);
+        let t0 = std::time::Instant::now();
+        fa.send(&round_msg()).unwrap();
+        assert_eq!(fb.recv().unwrap().unwrap(), round_msg());
+        assert!(t0.elapsed() < std::time::Duration::from_millis(500));
+        assert_eq!(clock.now_ns(), 1_000 + 5_000_000);
+        let log = injector.log();
+        assert_eq!(log.count(FaultKind::Delay), 1);
+        assert_eq!(log.events()[0].at_ns, 1_000 + 5_000_000);
+    }
+
+    #[test]
+    fn probabilistic_rules_are_seed_deterministic() {
+        let fires = |seed: u64| -> Vec<u64> {
+            let injector = FaultPlan::new(seed)
+                .fail_with_probability(FaultKind::DuplicateFrame, None, 0.3)
+                .injector();
+            let (a, _b) = mem_pair();
+            let mut fa = injector.wrap(a);
+            for _ in 0..64 {
+                let _ = fa.send(&round_msg());
+            }
+            injector.log().events().iter().map(|e| e.frame_index).collect()
+        };
+        let first = fires(0xDEAD);
+        assert_eq!(first, fires(0xDEAD), "same seed, same schedule");
+        assert!(!first.is_empty(), "p=0.3 over 64 frames must fire");
+        assert_ne!(first, fires(0xBEEF), "different seed, different schedule");
+    }
+}

@@ -30,6 +30,10 @@
 //! enforces per-connection deadlines itself, so a stalled peer costs a table slot, not
 //! a thread.
 
+pub mod fault;
+
+pub use fault::{FaultInjector, FaultKind, FaultLog, FaultPlan, FaultTransport};
+
 use super::SetxError;
 use crate::protocol::wire::{self, Msg};
 use std::io::{Read, Write};
@@ -44,6 +48,13 @@ pub trait Transport {
     fn recv(&mut self) -> Result<Option<Msg>, SetxError>;
     /// Which end of the rendezvous this is (deterministic tie-breaks only).
     fn is_client(&self) -> bool;
+    /// `(sent, received)` byte counters, when this transport keeps them. The retry
+    /// layer uses this to charge a failed attempt's traffic to
+    /// [`super::SetxReport::retry_bytes`]; transports without counters return `None`
+    /// and the cost of their failed attempts is simply not accounted.
+    fn bytes_moved(&self) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 /// In-process channel transport. Frames cross through their real wire encoding, so byte
@@ -108,6 +119,10 @@ impl Transport for MemTransport {
 
     fn is_client(&self) -> bool {
         self.client
+    }
+
+    fn bytes_moved(&self) -> Option<(usize, usize)> {
+        Some((self.bytes_sent, self.bytes_received))
     }
 }
 
@@ -189,6 +204,10 @@ impl Transport for TcpTransport {
 
     fn is_client(&self) -> bool {
         self.client
+    }
+
+    fn bytes_moved(&self) -> Option<(usize, usize)> {
+        Some((self.bytes_sent, self.bytes_received))
     }
 }
 

@@ -1,0 +1,390 @@
+//! Chaos suite: deterministic fault injection across the whole protocol surface.
+//!
+//! The headline is the seeded fault matrix — every [`FaultKind`] × every protocol
+//! [`Phase`] × four set shapes (subset, overlap, disjoint-heavy, fully disjoint) ×
+//! codec on/off — with one invariant: **a faulted run terminates within its deadline
+//! and either returns the exactly-correct intersection or a typed [`SetxError`] —
+//! never a panic, never a wrong answer.** On top of that, the retry layer must
+//! converge to the correct answer whenever the fault plan leaves a fault-free attempt,
+//! and the server must absorb wire garbage, duplicated frames, and faulty multi-party
+//! spokes without poisoning tenant state or leaking admission slots.
+//!
+//! Everything is seeded (`FaultPlan` coins, workloads, retry jitter), so a failure
+//! here reproduces bit-for-bit on re-run.
+
+use commonsense::data::synth;
+use commonsense::metrics::Phase;
+use commonsense::server::loadgen::{self, LoadgenConfig};
+use commonsense::server::SetxServer;
+use commonsense::setx::multi::net::join_round;
+use commonsense::setx::multi::Party;
+use commonsense::setx::transport::{mem_pair, FaultInjector, FaultKind, FaultPlan, TcpTransport};
+use commonsense::setx::{RetryPolicy, Setx, SetxError, SetxReport};
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+const ALL_KINDS: [FaultKind; 5] = [
+    FaultKind::DropConnection,
+    FaultKind::TruncateFrame,
+    FaultKind::FlipBytes,
+    FaultKind::Delay,
+    FaultKind::DuplicateFrame,
+];
+
+/// Per-cell deadline. Generous for CI — a healthy cell finishes in milliseconds; the
+/// point is that *no* fault combination can wedge a run indefinitely.
+const CELL_DEADLINE: Duration = Duration::from_secs(60);
+
+/// The four workload shapes of the matrix. "disjoint_heavy" mirrors the integration
+/// fleet's third shape (most of each set unique); "disjoint" is the degenerate
+/// zero-intersection case, where the difference *is* the union.
+fn shapes() -> Vec<(&'static str, Vec<u64>, Vec<u64>)> {
+    let (sub_a, sub_b) = synth::subset_pair(900, 60, 0xC1);
+    let (ov_a, ov_b) = synth::overlap_pair(800, 45, 55, 0xC2);
+    let (dh_a, dh_b) = synth::overlap_pair(80, 140, 160, 0xC3);
+    let (dj_a, dj_b) = synth::overlap_pair(0, 90, 110, 0xC4);
+    vec![
+        ("subset", sub_a, sub_b),
+        ("overlap", ov_a, ov_b),
+        ("disjoint_heavy", dh_a, dh_b),
+        ("disjoint", dj_a, dj_b),
+    ]
+}
+
+/// One matrix cell: Alice runs over a fault-wrapped in-memory transport against a Bob
+/// thread, under a wall-clock deadline. The peer thread must never panic; dropping the
+/// faulted client end closes the channel, so Bob always unblocks (`Ok(None)` →
+/// `PeerClosed`), which is the termination argument for the whole matrix.
+fn run_cell(
+    label: &str,
+    a: &[u64],
+    b: &[u64],
+    codec: bool,
+    injector: &FaultInjector,
+) -> Result<SetxReport, SetxError> {
+    let alice = Setx::builder(a).seed(0xC4A05).codec(codec).build().unwrap();
+    let bob = Setx::builder(b).seed(0xC4A05).codec(codec).build().unwrap();
+    let (client_end, server_end) = mem_pair();
+    let peer = std::thread::spawn(move || {
+        let mut t = server_end;
+        let _ = bob.run(&mut t);
+    });
+    let started = Instant::now();
+    let mut transport = injector.wrap(client_end);
+    let result = alice.run(&mut transport);
+    drop(transport);
+    peer.join().unwrap_or_else(|_| panic!("{label}: peer endpoint panicked"));
+    assert!(
+        started.elapsed() < CELL_DEADLINE,
+        "{label}: run exceeded the {CELL_DEADLINE:?} deadline"
+    );
+    result
+}
+
+/// The matrix itself: 5 kinds × 4 phases × 4 shapes × codec on/off, every cell
+/// targeting the first frame of its phase. A cell whose phase never occurs on that
+/// shape's wire path simply runs clean — in which case the answer must be exact.
+#[test]
+fn fault_matrix_terminates_correct_or_typed_never_wrong() {
+    for (shape, a, b) in shapes() {
+        let expected = synth::intersect(&a, &b);
+        for codec in [false, true] {
+            // Fault-free baseline first: the cell runner itself must be sound.
+            let clean = FaultPlan::new(1).injector();
+            let label = format!("{shape}/codec={codec}/baseline");
+            let report = run_cell(&label, &a, &b, codec, &clean)
+                .unwrap_or_else(|e| panic!("{label}: clean run failed: {e}"));
+            assert_eq!(report.intersection, expected, "{label}");
+            assert_eq!(clean.fired(), 0, "{label}: empty plan must fire nothing");
+
+            for kind in ALL_KINDS {
+                for phase in Phase::ALL {
+                    let label = format!("{shape}/codec={codec}/{}/{phase:?}", kind.name());
+                    let injector = match kind {
+                        FaultKind::Delay => {
+                            FaultPlan::new(0xFA57).delay_nth(Some(phase), 1, 250_000)
+                        }
+                        _ => FaultPlan::new(0xFA57).fail_nth(kind, Some(phase), 1),
+                    }
+                    .injector();
+                    match run_cell(&label, &a, &b, codec, &injector) {
+                        Ok(report) => {
+                            // A survivable fault (delay, duplicate, trailing-frame
+                            // loss) must still produce the exact answer.
+                            assert_eq!(report.intersection, expected, "{label}");
+                        }
+                        Err(err) => {
+                            // Typed and printable — and the transient classification
+                            // must hold: wire damage the client *parsed* is fatal,
+                            // everything connection-shaped is retryable.
+                            let rendered = err.to_string();
+                            assert!(!rendered.is_empty(), "{label}");
+                            if matches!(err, SetxError::MalformedFrame(_)) {
+                                assert!(!err.is_transient(), "{label}: {rendered}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Delay faults are simulated time, not real time: a cell with quarter-millisecond
+/// injected delays on every phase completes at memory speed and stays exact.
+#[test]
+fn delays_everywhere_are_simulated_not_slept() {
+    let (a, b) = synth::overlap_pair(700, 30, 35, 0xDE1);
+    let expected = synth::intersect(&a, &b);
+    let mut plan = FaultPlan::new(5);
+    for phase in Phase::ALL {
+        plan = plan.delay_nth(Some(phase), 1, 50_000_000); // 50 simulated ms each
+    }
+    let injector = plan.injector();
+    let started = Instant::now();
+    let report = run_cell("delay-everywhere", &a, &b, false, &injector).unwrap();
+    assert_eq!(report.intersection, expected);
+    assert!(injector.fired() >= 2, "at least handshake + sketch delays must fire");
+    assert!(
+        started.elapsed() < Duration::from_secs(5),
+        "simulated delay must not consume wall-clock"
+    );
+}
+
+/// Retry convergence across the matrix: for every transient fault kind and every
+/// phase, an `nth = 1` rule fires exactly once on the shared injector, so the second
+/// attempt is guaranteed clean — `run_with_retry` must land on the exact answer with
+/// at most one retry, whatever the phase of the damage.
+#[test]
+fn retry_converges_whenever_the_plan_leaves_a_clean_attempt() {
+    let (a, b) = synth::overlap_pair(800, 45, 55, 0x9E);
+    let expected = synth::intersect(&a, &b);
+    let alice = Setx::builder(&a).seed(3).build().unwrap();
+    let bob = std::sync::Arc::new(Setx::builder(&b).seed(3).build().unwrap());
+    // Zero-wait schedule: chaos tests never sleep.
+    let policy = RetryPolicy { max_retries: 2, base_ms: 0, cap_ms: 0, jitter_seed: 1 };
+    for kind in [FaultKind::DropConnection, FaultKind::TruncateFrame] {
+        for phase in Phase::ALL {
+            let label = format!("retry/{}/{phase:?}", kind.name());
+            let injector = FaultPlan::new(0xBEE).fail_nth(kind, Some(phase), 1).injector();
+            let mut peers = Vec::new();
+            let result = alice.run_with_retry_observed(
+                &policy,
+                0,
+                |_attempt| {
+                    let (client_end, server_end) = mem_pair();
+                    let bob = std::sync::Arc::clone(&bob);
+                    peers.push(std::thread::spawn(move || {
+                        let mut t = server_end;
+                        let _ = bob.run(&mut t);
+                    }));
+                    Ok(injector.wrap(client_end))
+                },
+                |err, _backoff| assert!(err.is_transient(), "{label}: retried a fatal error"),
+            );
+            for p in peers {
+                p.join().unwrap_or_else(|_| panic!("{label}: peer panicked"));
+            }
+            let report = result.unwrap_or_else(|e| panic!("{label}: did not converge: {e}"));
+            assert_eq!(report.intersection, expected, "{label}");
+            assert!(report.retries <= 1, "{label}: one nth-rule costs at most one retry");
+            if report.retries == 1 {
+                assert!(report.retry_bytes > 0 || injector.fired() == 1, "{label}");
+            }
+        }
+    }
+}
+
+/// Raw wire garbage at the server: an unterminated length varint can never become a
+/// frame, so the connection dies pre-routing with a typed `MalformedFrame` — counted
+/// as an *unrouted* protocol fault, the slot freed, and the next clean client served.
+#[test]
+fn server_counts_wire_garbage_as_an_unrouted_protocol_fault() {
+    let host: Vec<u64> = (0..1_500).collect();
+    let server = SetxServer::builder(Setx::builder(&host).build().unwrap())
+        .workers(1)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    let mut garbage = TcpStream::connect(addr).unwrap();
+    // Frame type byte, then ten continuation bytes: the length varint overflows u64.
+    garbage.write_all(&[0x01, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF]).unwrap();
+    garbage.flush().unwrap();
+    wait_until("the garbage connection to be dropped", || {
+        let s = server.stats();
+        s.protocol_faults == 1 && s.inflight == 0
+    });
+    drop(garbage);
+
+    // The slot is free and tenant state untouched: a real client is served.
+    let client: Vec<u64> = (0..1_000).collect();
+    let alice = Setx::builder(&client).build().unwrap();
+    let report = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+    assert_eq!(report.intersection, client);
+    wait_until("the clean session to be counted", || server.stats().sessions_served == 1);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.protocol_faults, 1, "{stats:?}");
+    assert_eq!(stats.unrouted_protocol_faults, 1, "pre-routing garbage has no tenant");
+    assert_eq!(stats.unrouted_failed, 1, "{stats:?}");
+    assert!(stats.protocol_faults <= stats.sessions_failed, "{stats:?}");
+    // Shard exactness holds with faults in the mix.
+    let tenant_faults: u64 = stats.tenants.iter().map(|t| t.protocol_faults).sum();
+    assert_eq!(tenant_faults + stats.unrouted_protocol_faults, stats.protocol_faults);
+}
+
+/// A duplicated handshake frame *after* routing: the server's endpoint rejects the
+/// replay with a typed protocol error on the tenant's shard — and the tenant keeps
+/// serving clean clients afterwards (no decoder-pool or sketch-store poisoning).
+#[test]
+fn server_counts_a_replayed_hello_on_the_tenant_shard() {
+    let host: Vec<u64> = (0..1_500).collect();
+    let server = SetxServer::builder(Setx::builder(&host).build().unwrap())
+        .workers(1)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    let client: Vec<u64> = (0..1_200).collect();
+    let alice = Setx::builder(&client).build().unwrap();
+    let injector = FaultPlan::new(3)
+        .fail_nth(FaultKind::DuplicateFrame, Some(Phase::Handshake), 1)
+        .injector();
+    let mut transport = injector.wrap(TcpTransport::connect(addr).unwrap());
+    let err = alice.run(&mut transport).unwrap_err();
+    drop(transport);
+    assert_eq!(injector.log().count(FaultKind::DuplicateFrame), 1);
+    // The client sees its connection die (transient), not a protocol error of its own.
+    assert!(err.is_transient(), "client-side error must be retryable, got {err}");
+
+    wait_until("the replay to be counted on the tenant shard", || {
+        server.stats().protocol_faults == 1
+    });
+
+    // Same tenant, clean client: the shard still serves.
+    let clean = Setx::builder(&client).build().unwrap();
+    let report = clean.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+    assert_eq!(report.intersection, client);
+    wait_until("the clean session to be counted", || server.stats().sessions_served == 1);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.protocol_faults, 1, "{stats:?}");
+    assert_eq!(stats.unrouted_protocol_faults, 0, "the replay happened after routing");
+    let shard = &stats.tenants[0];
+    assert_eq!(shard.protocol_faults, 1, "{stats:?}");
+    assert_eq!(shard.sessions_failed, 1, "{stats:?}");
+    assert_eq!(shard.sessions_served, 1, "{stats:?}");
+    assert!(stats.protocol_faults <= stats.sessions_failed, "{stats:?}");
+}
+
+/// A multi-party round with one fault-injected spoke: the spoke's connection drops
+/// mid-round, the coordinator isolates it, and the surviving spokes land on the exact
+/// intersection of the parties that stayed.
+#[test]
+fn multi_party_round_survives_a_faulty_spoke() {
+    let sets = synth::overlap_n(4, 500, 12, 0xFA11);
+    let host0: Vec<u64> = (0..600).collect();
+    let server = SetxServer::builder(Setx::builder(&host0).build().unwrap())
+        .workers(2)
+        .multi_tenant(6, sets[0].clone(), 4)
+        .timeouts(Some(Duration::from_millis(500)), Some(Duration::from_millis(500)))
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    // Spoke 3's transport drops on its 3rd frame — after its join hello is on the
+    // wire, before the round completes.
+    let faulty_set = sets[3].clone();
+    let faulty = std::thread::spawn(move || {
+        let cfg = *Setx::builder(&faulty_set).namespace(6).build().unwrap().config();
+        let mut party = Party::new(&cfg, faulty_set, 3, 4).unwrap();
+        let injector = FaultPlan::new(9).fail_nth(FaultKind::DropConnection, None, 3).injector();
+        let mut t = injector.wrap(TcpTransport::connect(addr).unwrap());
+        party.run(&mut t)
+    });
+    let live: Vec<_> = (1u32..3)
+        .map(|id| {
+            let set = sets[id as usize].clone();
+            std::thread::spawn(move || {
+                let cfg = *Setx::builder(&set).namespace(6).build().unwrap().config();
+                join_round(addr, &cfg, set, id, 4)
+            })
+        })
+        .collect();
+
+    let expected = {
+        let mut acc = sets[0].clone();
+        for s in &sets[1..3] {
+            acc = synth::intersect(&acc, s);
+        }
+        acc
+    };
+    for (i, h) in live.into_iter().enumerate() {
+        let r = h.join().expect("spoke thread").expect("live spoke completes");
+        assert_eq!(r.intersection, expected, "spoke {} answer", i + 1);
+    }
+    let spoke_err = faulty.join().expect("faulty spoke thread");
+    assert!(spoke_err.is_err(), "the faulted spoke must surface a typed error");
+
+    let mut reports = Vec::new();
+    wait_until("the degraded round to be drained", || {
+        reports.extend(server.take_multi_reports(6));
+        !reports.is_empty()
+    });
+    let round = &reports[0];
+    assert_eq!(round.intersection, expected, "the round excludes the dropped spoke");
+    assert_eq!(round.completed(), 2);
+    if let Some(dropped) = round.parties.iter().find(|p| p.party == 3) {
+        assert!(dropped.error.is_some(), "the dropped spoke must carry its error");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_served, 2, "{stats:?}");
+    assert_eq!(stats.sessions_failed, 1, "the dropped spoke: {stats:?}");
+}
+
+/// The acceptance criterion: a fleet under a 25% per-attempt injected-disconnect rate
+/// still reaches 100% verified success — every drop absorbed by the retry layer, the
+/// cost visible in `retries`, and nobody exhausting the budget. Seed 7's coin
+/// sequence injects 10 drops with a worst streak of 3 (budget 6), precomputed from
+/// the same `split_mix64` the generator uses.
+#[test]
+fn fleet_fully_succeeds_under_injected_disconnects() {
+    let cfg = LoadgenConfig {
+        clients: 6,
+        rounds: 3,
+        common: 2_000,
+        client_unique: 40,
+        server_unique: 60,
+        seed: 7,
+        busy_retries: 6,
+        disconnect_rate: 0.25,
+        ..LoadgenConfig::default()
+    };
+    let (host, _clients, _expected) = cfg.workload();
+    let server = SetxServer::builder(cfg.endpoint(&host).unwrap())
+        .workers(2)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let report = loadgen::run(server.local_addr(), &cfg);
+    assert!(report.verified(), "failures: {:?}", report.failures);
+    assert_eq!(report.sessions_ok, 18);
+    assert_eq!(report.gave_up, 0, "no session may exhaust the budget at this rate");
+    assert!(report.retries >= 10, "seed 7 injects 10 drops, got {}", report.retries);
+    let stats = server.shutdown();
+    // Server-side, injected client drops are failed sessions — but never protocol
+    // faults, and never wedged slots.
+    assert_eq!(stats.inflight, 0, "{stats:?}");
+    assert_eq!(stats.protocol_faults, 0, "{stats:?}");
+    assert_eq!(stats.sessions_served, 18, "{stats:?}");
+}
+
+/// Poll `cond` until it holds or a 10 s deadline passes.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}

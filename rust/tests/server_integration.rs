@@ -225,6 +225,86 @@ fn slow_client_times_out_and_frees_the_worker() {
     assert_eq!(stats.sessions_served, 1);
 }
 
+/// Satellite regression: a half-open client — a partial frame *header* (type byte plus
+/// an unterminated length-varint continuation byte), then silence with the socket held
+/// open, so no EOF ever arrives — must be reaped by the deadline, counted as an
+/// unrouted failure (never served), and must free its admission slot for a real
+/// client. Shard sums stay exact with the failure in the unrouted remainder.
+#[test]
+fn half_open_partial_header_is_reaped_and_frees_the_slot() {
+    let host: Vec<u64> = (0..1_200).collect();
+    let server = SetxServer::builder(Setx::builder(&host).build().unwrap())
+        .workers(1)
+        .max_inflight_sessions(1)
+        .timeouts(Some(Duration::from_millis(150)), None)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    let mut half_open = TcpStream::connect(addr).unwrap();
+    // Frame type 3, then 0x80: a continuation byte with no terminator — the frame
+    // scanner will report "need more bytes" forever.
+    half_open.write_all(&[3u8, 0x80]).unwrap();
+    half_open.flush().unwrap();
+    wait_until("the half-open connection to be reaped", || {
+        let s = server.stats();
+        s.unrouted_failed == 1 && s.inflight == 0
+    });
+
+    // The single admission slot is free again: a real client is served, not rejected.
+    let client: Vec<u64> = (0..1_000).collect();
+    let alice = Setx::builder(&client).build().unwrap();
+    let report = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+    assert_eq!(report.intersection, client);
+    drop(half_open);
+    wait_until("the served session to be counted", || server.stats().sessions_served == 1);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_served, 1, "{stats:?}");
+    assert_eq!(stats.sessions_failed, 1, "{stats:?}");
+    assert_eq!(stats.unrouted_failed, 1, "{stats:?}");
+    // A stalled header is a dead peer, not wire garbage: no protocol fault.
+    assert_eq!(stats.protocol_faults, 0, "{stats:?}");
+    // Shard exactness: tenant failures plus the unrouted remainder equal the global,
+    // and the served side shards exactly too.
+    let tenant_failed: u64 = stats.tenants.iter().map(|t| t.sessions_failed).sum();
+    assert_eq!(tenant_failed + stats.unrouted_failed, stats.sessions_failed);
+    let tenant_served: u64 = stats.tenants.iter().map(|t| t.sessions_served).sum();
+    assert_eq!(tenant_served, stats.sessions_served);
+}
+
+/// The orderly-close variant: a partial frame header followed by FIN. The server sees
+/// EOF mid-header and must fail the connection promptly — no deadline wait involved,
+/// so this passes even with generous timeouts.
+#[test]
+fn partial_header_then_eof_fails_without_waiting_for_the_deadline() {
+    let host: Vec<u64> = (0..1_200).collect();
+    let server = SetxServer::builder(Setx::builder(&host).build().unwrap())
+        .workers(1)
+        .timeouts(Some(Duration::from_secs(30)), None)
+        .bind("127.0.0.1:0")
+        .unwrap();
+    let addr = server.local_addr();
+
+    let mut goner = TcpStream::connect(addr).unwrap();
+    goner.write_all(&[3u8, 0x80]).unwrap();
+    goner.flush().unwrap();
+    drop(goner); // FIN: the 30 s deadline must play no part
+    wait_until("the EOF'd connection to be failed", || {
+        let s = server.stats();
+        s.unrouted_failed == 1 && s.inflight == 0
+    });
+
+    let client: Vec<u64> = (0..1_000).collect();
+    let alice = Setx::builder(&client).build().unwrap();
+    let report = alice.run(&mut TcpTransport::connect(addr).unwrap()).unwrap();
+    assert_eq!(report.intersection, client);
+    wait_until("the served session to be counted", || server.stats().sessions_served == 1);
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_failed, 1, "{stats:?}");
+    assert_eq!(stats.sessions_served, 1, "{stats:?}");
+}
+
 /// The acceptance criterion: a shared-geometry fleet (the loadgen default) reuses pooled
 /// decoders for all but the cold starts — hit rate > 0.9 — with every intersection
 /// verified.
